@@ -1,0 +1,108 @@
+//! End-to-end driver (DESIGN.md E8): the full three-layer system serving
+//! real batched inference requests.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pipeline_serving
+//! # paper-size input (slower):
+//! cargo run --release --example pipeline_serving -- --input-hw 224 --images 8
+//! ```
+//!
+//! This is the proof that the layers compose: JAX/Pallas AOT artifacts
+//! (L1+L2) are loaded through PJRT and served by the rust coordinator
+//! (L3) under a real pipeline execution plan — batched requests, worker
+//! threads per simulated FPGA node, latency/throughput reported, and the
+//! logits verified against the python-exported reference vector.
+
+use vta_cluster::coordinator::Coordinator;
+use vta_cluster::graph::resnet::{build_resnet18, segment_macs};
+use vta_cluster::graph::tensor::DType;
+use vta_cluster::runtime::{artifacts_dir, Manifest, TensorData};
+use vta_cluster::sched::{pipeline, scatter_gather};
+use vta_cluster::util::cli::Cli;
+use vta_cluster::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("pipeline_serving", "end-to-end PJRT serving demo")
+        .opt("input-hw", "32", "input size (32 tiny / 224 paper)")
+        .opt("images", "64", "batch size")
+        .opt("stages", "4", "pipeline depth")
+        .parse()?;
+    let input_hw: u64 = args.get_u64("input-hw")?;
+    let images = args.get_usize("images")?;
+    let stages = args.get_usize("stages")?;
+
+    anyhow::ensure!(
+        artifacts_dir().join("manifest.json").exists(),
+        "run `make artifacts` first (artifacts at {})",
+        artifacts_dir().display()
+    );
+
+    // MAC-balanced pipeline plan over the graph's 10 segments
+    let g = build_resnet18(input_hw)?;
+    let macs = segment_macs(&g);
+    let cost = |l: &str| macs.iter().find(|(x, _)| x == l).unwrap().1 as f64;
+    let plan = pipeline(&g, stages, cost)?;
+    println!("{}", plan.describe());
+
+    // serving-optimized artifacts (numerics identical to the pallas
+    // reference — enforced by the integration tests)
+    let coord = Coordinator::start_fast(artifacts_dir(), &plan, input_hw)?;
+
+    let hw = input_hw as usize;
+    let mut rng = Rng::new(7);
+    let batch: Vec<TensorData> = (0..images)
+        .map(|_| TensorData::i8(vec![1, hw, hw, 3], rng.i8_vec(hw * hw * 3)).unwrap())
+        .collect();
+    println!("serving {images} images of {hw}×{hw}×3 ...");
+    let t0 = std::time::Instant::now();
+    let (outs, report) = coord.run_batch(batch)?;
+    println!(
+        "pipeline×{stages}: {:.2} img/s | mean latency {:.1} ms | p99 {:.1} ms | wall {:.0} ms",
+        report.throughput_img_per_sec,
+        report.mean_latency_ms,
+        report.p99_latency_ms,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // compare against single-stage scatter-gather on 2 replicas
+    let sg_plan = scatter_gather(&g, 2)?;
+    let sg = Coordinator::start_fast(artifacts_dir(), &sg_plan, input_hw)?;
+    let mut rng = Rng::new(7);
+    let batch: Vec<TensorData> = (0..images)
+        .map(|_| TensorData::i8(vec![1, hw, hw, 3], rng.i8_vec(hw * hw * 3)).unwrap())
+        .collect();
+    let (_, sg_report) = sg.run_batch(batch)?;
+    println!(
+        "scatter-gather×2: {:.2} img/s | mean latency {:.1} ms",
+        sg_report.throughput_img_per_sec, sg_report.mean_latency_ms
+    );
+
+    // verify numerics against the python-exported vector (tiny only —
+    // the 224 reference vectors are not exported to keep artifacts small)
+    if input_hw == 32 {
+        let manifest = Manifest::load(&artifacts_dir())?;
+        let tv = manifest
+            .test_vectors
+            .iter()
+            .find(|t| t.name == "tv_tiny_full")
+            .expect("test vector");
+        let input = TensorData::from_bytes(
+            tv.in_shape.clone(),
+            DType::I8,
+            &manifest.read_blob(&tv.input_file)?,
+        )?;
+        let want = TensorData::from_bytes(
+            tv.out_shape.clone(),
+            tv.out_dtype,
+            &manifest.read_blob(&tv.output_file)?,
+        )?;
+        let (outs2, _) = coord.run_batch(vec![input])?;
+        anyhow::ensure!(outs2[0] == want, "logits diverge from python reference!");
+        println!("numerics: logits bit-exact vs python-exported reference ✓");
+    }
+
+    let l0 = outs[0].as_i32()?;
+    let argmax = l0.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+    println!("first image: argmax class {argmax} (logit {})", l0[argmax]);
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: build a cluster, pick a strategy, get the paper's metric.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the public API end to end: workload graph → calibrated cost
+//! model → execution plan → cluster simulation, printing the simulated
+//! per-image inference time for a 4-board Zynq-7000 stack under each of
+//! the paper's four scheduling strategies.
+
+use vta_cluster::config::{BoardProfile, Calibration, ClusterConfig, VtaConfig};
+use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::{build_plan, Strategy};
+use vta_cluster::sim::{simulate, CostModel, SimConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. the workload: int8 ResNet-18 at the paper's 224×224 input
+    let graph = build_resnet18(224)?;
+    println!(
+        "workload: {} ({:.2} GMACs, {} segments)",
+        graph.name,
+        graph.total_macs() as f64 / 1e9,
+        graph.segment_order().len()
+    );
+
+    // 2. the cluster: four Zynq-7020 boards, Table-I VTA bitstream,
+    //    1 Gb/s switch — §II of the paper
+    let n = 4;
+    let cluster = ClusterConfig::zynq_stack(n);
+    cluster.validate()?;
+    println!("cluster: {} ({} nodes)", cluster.name, cluster.num_nodes());
+
+    // 3. the calibrated node cost model (fitted constants are loaded from
+    //    artifacts/calibration.json if `vtacluster calibrate` has run)
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        calib,
+    );
+    let t1 = cost.graph_time_ns(&graph)? as f64 / 1e6;
+    println!("single-node compute: {t1:.2} ms/image\n");
+
+    // 4. all four strategies over the same cluster
+    let seg_costs: Vec<(String, f64)> = graph
+        .segment_order()
+        .into_iter()
+        .map(|l| {
+            let t = cost.segment_time_ns(&graph, &l, 1).unwrap() as f64;
+            (l, t)
+        })
+        .collect();
+    let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+
+    for strategy in Strategy::all() {
+        let plan = build_plan(strategy, &graph, n, lookup)?;
+        let result = simulate(&plan, &cluster, &mut cost, &graph, &SimConfig::default())?;
+        println!(
+            "{:22} {:6.2} ms/image  (latency {:6.2} ms, busiest node {:3.0}%)",
+            strategy.to_string(),
+            result.ms_per_image,
+            result.latency_ms.mean(),
+            result.node_utilization.iter().fold(0.0f64, |a, &b| a.max(b)) * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Reproduce every table and figure of the paper in one run.
+//!
+//! ```bash
+//! cargo run --release --example reproduce_tables
+//! ```
+//!
+//! Prints Fig. 3(a) (Zynq-7000, 1–12 FPGAs), Fig. 4(a) (UltraScale+,
+//! 1–5), and the §IV scaling experiments, each next to the paper's
+//! published numbers with per-cell relative error — the same output the
+//! `cargo bench` targets produce, packaged as a single runnable example.
+
+use vta_cluster::config::{BoardFamily, Calibration, VtaConfig};
+use vta_cluster::exp::runner::Bench;
+use vta_cluster::exp::{paper, table};
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::Strategy;
+
+fn main() -> anyhow::Result<()> {
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    println!("calibration: {}\n", calib.to_json().to_string_compact());
+
+    // ---- Fig. 3 -------------------------------------------------------
+    let mut zynq = Bench::zynq(calib.clone());
+    zynq.images = 64;
+    let rows3 = zynq.sweep(12)?;
+    println!(
+        "{}",
+        table::render_vs_paper(
+            "Fig. 3(a) Zynq-7000: execution time (ms)",
+            &rows3,
+            &paper::FIG3_ZYNQ7000_MS
+        )
+    );
+
+    // ---- Fig. 4 -------------------------------------------------------
+    let mut us = Bench::ultrascale(calib.clone());
+    us.images = 64;
+    let rows4 = us.sweep(5)?;
+    println!(
+        "{}",
+        table::render_vs_paper(
+            "Fig. 4(a) UltraScale+: execution time (ms)",
+            &rows4,
+            &paper::FIG4_ULTRASCALE_MS
+        )
+    );
+
+    // ---- §IV ----------------------------------------------------------
+    let single = |vta: VtaConfig| -> anyhow::Result<f64> {
+        let mut b = Bench::new(BoardFamily::UltraScalePlus, vta, calib.clone());
+        b.images = 32;
+        Ok(b.cell(Strategy::ScatterGather, 1)?.ms_per_image)
+    };
+    let base = single(VtaConfig::table1_ultrascale())?;
+    let at350 = single(VtaConfig::ultrascale_350mhz())?;
+    let big = single(VtaConfig::big_config_200mhz())?;
+    println!("§IV scaling (UltraScale+ single node):");
+    println!("  Table I @300 MHz : {base:6.2} ms   (paper 25.15)");
+    println!(
+        "  350 MHz          : {at350:6.2} ms   ({:+.1}%; paper ≈{:.1}%)",
+        (base - at350) / base * 100.0,
+        paper::CLOCK_350_SPEEDUP * 100.0
+    );
+    println!(
+        "  big config       : {big:6.2} ms   ({:+.1}%; paper ≈{:.1}%)",
+        (base - big) / base * 100.0,
+        paper::BIG_CONFIG_SPEEDUP * 100.0
+    );
+
+    // ---- summary ------------------------------------------------------
+    let e3 = table::errors(&rows3, &paper::FIG3_ZYNQ7000_MS);
+    let e4 = table::errors(&rows4, &paper::FIG4_ULTRASCALE_MS);
+    println!("\nreproduction quality (mean rel. error per strategy):");
+    println!("  Fig.3: SG {:4.0}% | AI {:4.0}% | Pipe {:4.0}% | Fused {:4.0}%", e3[0]*100.0, e3[1]*100.0, e3[2]*100.0, e3[3]*100.0);
+    println!("  Fig.4: SG {:4.0}% | AI {:4.0}% | Pipe {:4.0}% | Fused {:4.0}%", e4[0]*100.0, e4[1]*100.0, e4[2]*100.0, e4[3]*100.0);
+    Ok(())
+}

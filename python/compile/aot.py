@@ -1,0 +1,293 @@
+"""AOT exporter: lower the JAX/Pallas model to HLO text + weight blobs.
+
+This is the *only* python entry point in the build (``make artifacts``).
+It produces, under ``artifacts/``:
+
+* ``resnet18_seg_<name>.hlo.txt``  — one HLO module per model segment
+  (stem, 8 basic blocks, head) at the paper's 224×224 input.
+* ``resnet18_full.hlo.txt``        — the whole network as one module.
+* ``resnet18_tiny_*.hlo.txt``      — 32×32-input variants (fast CI paths
+  for the rust integration tests; same code, smaller spatial dims).
+* ``weights_<segment>.bin``        — flat int8 parameter blobs (the rust
+  runtime feeds them back as the second argument of each segment).
+* ``gemm16.hlo.txt`` / ``gemm128.hlo.txt`` — standalone GEMM micro-kernel
+  artifacts: the VTA Table-I 16×16 geometry and the TPU-adapted 128×128
+  MXU tile.
+* ``manifest.json``                — machine-readable index: shapes,
+  dtypes, MACs, parameter bytes, per-layer inventory. The rust side
+  cross-checks its own graph IR against these numbers.
+
+Interchange is HLO **text**: jax ≥ 0.5 serialized protos use 64-bit ids
+which xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import gemm as gemm_mod
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(shape, dtype) -> dict:
+    return {"shape": list(shape), "dtype": str(dtype)}
+
+
+def export_segments(cfg: model.ModelConfig, out_dir: str, tag: str) -> list[dict]:
+    """Lower each segment; write HLO + weights; return manifest entries."""
+    specs = model.build_segment_specs(cfg)
+    entries = []
+    for spec in specs:
+        fn = model.segment_fn(cfg, spec)
+        x_spec = _spec(spec.in_shape, jnp.int8)
+        w_spec = _spec((spec.param_bytes,), jnp.int8)
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(x_spec, w_spec)
+        text = to_hlo_text(lowered)
+        hlo_name = f"resnet18_{tag}seg_{spec.name}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_name), "w") as f:
+            f.write(text)
+
+        weights = model.init_segment_weights(cfg, spec)
+        wname = f"weights_{tag}{spec.name}.bin"
+        weights.tofile(os.path.join(out_dir, wname))
+
+        entries.append(
+            {
+                "name": f"resnet18_{tag}seg_{spec.name}",
+                "file": hlo_name,
+                "kind": "segment",
+                "segment": spec.name,
+                "segment_index": spec.index,
+                "inputs": [
+                    _io_entry(spec.in_shape, "int8"),
+                    _io_entry((spec.param_bytes,), "int8"),
+                ],
+                "outputs": [_io_entry(spec.out_shape, spec.out_dtype)],
+                "macs": spec.macs,
+                "param_bytes": spec.param_bytes,
+                "weights_file": wname,
+                "impl": cfg.impl,
+                "block": cfg.block,
+                "input_hw": cfg.input_hw,
+            }
+        )
+        print(
+            f"  exported {hlo_name:44s} macs={spec.macs/1e6:9.1f}M "
+            f"params={spec.param_bytes/1024:7.1f}KiB "
+            f"hlo={len(text)/1024:7.0f}KiB  ({time.time()-t0:.1f}s)"
+        )
+    return entries
+
+
+def export_full(cfg: model.ModelConfig, out_dir: str, tag: str) -> dict:
+    specs = model.build_segment_specs(cfg)
+    fn = model.full_fn(cfg, specs)
+    arg_specs = [_spec(specs[0].in_shape, jnp.int8)] + [
+        _spec((s.param_bytes,), jnp.int8) for s in specs
+    ]
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    hlo_name = f"resnet18_{tag}full.hlo.txt"
+    with open(os.path.join(out_dir, hlo_name), "w") as f:
+        f.write(text)
+    entry = {
+        "name": f"resnet18_{tag}full",
+        "file": hlo_name,
+        "kind": "full",
+        "inputs": [_io_entry(specs[0].in_shape, "int8")]
+        + [_io_entry((s.param_bytes,), "int8") for s in specs],
+        "outputs": [_io_entry(specs[-1].out_shape, specs[-1].out_dtype)],
+        "macs": sum(s.macs for s in specs),
+        "param_bytes": sum(s.param_bytes for s in specs),
+        "weights_files": [f"weights_{tag}{s.name}.bin" for s in specs],
+        "impl": cfg.impl,
+        "block": cfg.block,
+        "input_hw": cfg.input_hw,
+    }
+    print(
+        f"  exported {hlo_name:44s} macs={entry['macs']/1e6:9.1f}M "
+        f"hlo={len(text)/1024:7.0f}KiB  ({time.time()-t0:.1f}s)"
+    )
+    return entry
+
+
+def export_gemm_microkernels(out_dir: str) -> list[dict]:
+    """Standalone GEMM artifacts: VTA 16-geometry + TPU 128-tile."""
+    entries = []
+    for name, (m, k, n), block in [
+        ("gemm16", (64, 64, 64), 16),
+        ("gemm128", (256, 256, 256), 128),
+    ]:
+        def fn(x, w, _block=block):
+            return (gemm_mod.gemm(x, w, block_m=_block, block_n=_block, block_k=_block),)
+
+        x_spec = _spec((m, k), jnp.int8)
+        w_spec = _spec((n, k), jnp.int8)
+        lowered = jax.jit(fn).lower(x_spec, w_spec)
+        text = to_hlo_text(lowered)
+        hlo_name = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_name), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "file": hlo_name,
+                "kind": "gemm_microkernel",
+                "inputs": [_io_entry((m, k), "int8"), _io_entry((n, k), "int8")],
+                "outputs": [_io_entry((m, n), "int32")],
+                "macs": m * k * n,
+                "block": block,
+            }
+        )
+        print(f"  exported {hlo_name:44s} block={block}")
+    return entries
+
+
+def export_test_vectors(cfg: model.ModelConfig, out_dir: str, tag: str) -> list[dict]:
+    """Deterministic input/output fixtures for the rust runtime tests.
+
+    For every segment (and the full model) of the given config, write the
+    raw little-endian row-major bytes of a fixed random input and of the
+    model's output. The rust integration tests load the HLO artifact,
+    execute it via PJRT, and require bit-exact agreement — this closes the
+    python→HLO-text→rust loop that cannot be closed inside python (jaxlib
+    has no HLO-text compile API).
+    """
+    specs = model.build_segment_specs(cfg)
+    entries = []
+    rng = np.random.default_rng(4242)
+    x0 = rng.integers(-128, 128, specs[0].in_shape, dtype=np.int8)
+
+    x = jnp.asarray(x0)
+    ws = [model.init_segment_weights(cfg, s) for s in specs]
+    for spec, w in zip(specs, ws):
+        fn = model.segment_fn(cfg, spec)
+        xin = np.asarray(x, dtype=np.int8)
+        (y,) = jax.jit(fn)(x, jnp.asarray(w))
+        in_name = f"tv_{tag}{spec.name}_in.bin"
+        out_name = f"tv_{tag}{spec.name}_out.bin"
+        np.asarray(xin).tofile(os.path.join(out_dir, in_name))
+        np.asarray(y).tofile(os.path.join(out_dir, out_name))
+        entries.append(
+            {
+                "name": f"tv_{tag}{spec.name}",
+                "kind": "test_vector",
+                "artifact": f"resnet18_{tag}seg_{spec.name}",
+                "input_file": in_name,
+                "output_file": out_name,
+                "in_shape": list(spec.in_shape),
+                "out_shape": list(spec.out_shape),
+                "out_dtype": spec.out_dtype,
+            }
+        )
+        x = y
+    # x is now the full-model output for x0 — record it for the full module.
+    np.asarray(x).tofile(os.path.join(out_dir, f"tv_{tag}full_out.bin"))
+    entries.append(
+        {
+            "name": f"tv_{tag}full",
+            "kind": "test_vector",
+            "artifact": f"resnet18_{tag}full",
+            "input_file": f"tv_{tag}stem_in.bin",
+            "output_file": f"tv_{tag}full_out.bin",
+            "in_shape": list(specs[0].in_shape),
+            "out_shape": list(specs[-1].out_shape),
+            "out_dtype": specs[-1].out_dtype,
+        }
+    )
+    print(f"  exported {len(entries)} test vectors ({tag or 'full-size'})")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--impl",
+        default="pallas",
+        choices=["pallas", "ref"],
+        help="GEMM backing for the model artifacts",
+    )
+    ap.add_argument("--seed", type=int, default=2023)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    t0 = time.time()
+    artifacts: list[dict] = []
+
+    print("[aot] gemm micro-kernels")
+    artifacts += export_gemm_microkernels(args.out)
+
+    print("[aot] resnet18 @224 segments (paper workload)")
+    cfg = model.ModelConfig(input_hw=224, impl=args.impl, seed=args.seed)
+    artifacts += export_segments(cfg, args.out, tag="")
+    artifacts.append(export_full(cfg, args.out, tag=""))
+
+    print("[aot] resnet18 @32 tiny variant (fast integration tests)")
+    tiny = model.ModelConfig(input_hw=32, impl=args.impl, seed=args.seed)
+    artifacts += export_segments(tiny, args.out, tag="tiny_")
+    artifacts.append(export_full(tiny, args.out, tag="tiny_"))
+    artifacts += export_test_vectors(tiny, args.out, tag="tiny_")
+
+    # Serving-optimized variants: same numerics through the pure-jnp GEMM
+    # (pallas == ref is enforced bit-exactly by pytest), but without the
+    # interpret-mode pallas_call emulation overhead on CPU PJRT — the
+    # §Perf L2 optimization. The rust coordinator selects these via the
+    # "fast_" prefix; the pallas artifacts above stay the correctness
+    # reference. The test vectors apply to both (identical outputs).
+    print("[aot] resnet18 serving-optimized (ref-impl) variants")
+    fast224 = model.ModelConfig(input_hw=224, impl="ref", seed=args.seed)
+    artifacts += export_segments(fast224, args.out, tag="fast_")
+    artifacts.append(export_full(fast224, args.out, tag="fast_"))
+    fast32 = model.ModelConfig(input_hw=32, impl="ref", seed=args.seed)
+    artifacts += export_segments(fast32, args.out, tag="fast_tiny_")
+    artifacts.append(export_full(fast32, args.out, tag="fast_tiny_"))
+
+    specs = model.build_segment_specs(cfg)
+    manifest = {
+        "version": 1,
+        "generator": "python/compile/aot.py",
+        "model": {
+            "name": "resnet18",
+            "input_hw": cfg.input_hw,
+            "impl": cfg.impl,
+            "block": cfg.block,
+            "seed": cfg.seed,
+            "segments": model.SEGMENT_NAMES,
+            "total_macs": sum(s.macs for s in specs),
+            "total_param_bytes": sum(s.param_bytes for s in specs),
+        },
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(artifacts)} artifacts "
+          f"in {time.time()-t0:.1f}s total")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 kernels: the VTA compute engines as Pallas kernels.
+
+* :mod:`.gemm`   — the GEMM tensor core (int8×int8→int32, Table I geometry)
+* :mod:`.alu`    — the element-wise ALU / requantization engine
+* :mod:`.conv2d` — conv/dense lowered onto the GEMM core (im2col)
+* :mod:`.ref`    — pure-jnp oracles (ground truth for pytest + rust fsim)
+"""
+
+from . import alu, conv2d, gemm, ref  # noqa: F401
+from .alu import alu as alu_op  # noqa: F401
+from .alu import alu_imm, relu, requantize  # noqa: F401
+from .conv2d import conv2d as conv2d_op  # noqa: F401
+from .conv2d import dense as dense_op  # noqa: F401
+from .gemm import gemm as gemm_op  # noqa: F401

@@ -1,0 +1,161 @@
+"""VTA ALU (vector unit) as a Pallas kernel.
+
+VTA's second tensor engine is an element-wise ALU over the int32
+accumulator register file: ADD / MAX / MIN with a tensor or immediate
+second operand, and SHR (arithmetic shift right) for fixed-point
+requantization. On TPU these are VPU (8×128 vector lane) operations; the
+kernel tiles the flattened accumulator into (rows, 128)-lane blocks in
+VMEM.
+
+All ops match :mod:`.ref` bit-exactly (pytest enforces it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-native tile is 8 sublanes × 128 lanes; one grid step processes a
+# (256, 128) block = 32 VPU tiles (128 KiB of int32 — comfortably inside
+# VMEM, and few enough grid steps that interpret-mode stays fast).
+_TILE_ROWS = 256
+_TILE_LANES = 128
+
+OPS = ("add", "max", "min", "shr")
+
+
+def _alu_tt_kernel(a_ref, b_ref, o_ref, *, op: str):
+    a = a_ref[...]
+    b = b_ref[...]
+    if op == "add":
+        o_ref[...] = a + b
+    elif op == "max":
+        o_ref[...] = jnp.maximum(a, b)
+    elif op == "min":
+        o_ref[...] = jnp.minimum(a, b)
+    elif op == "shr":
+        o_ref[...] = jnp.right_shift(a, b)
+    else:  # pragma: no cover - guarded by OPS check in alu()
+        raise ValueError(op)
+
+
+def _alu_imm_kernel(a_ref, o_ref, *, op: str, imm: int):
+    a = a_ref[...]
+    b = jnp.full_like(a, imm)
+    if op == "add":
+        o_ref[...] = a + b
+    elif op == "max":
+        o_ref[...] = jnp.maximum(a, b)
+    elif op == "min":
+        o_ref[...] = jnp.minimum(a, b)
+    elif op == "shr":
+        o_ref[...] = jnp.right_shift(a, b)
+    else:  # pragma: no cover
+        raise ValueError(op)
+
+
+def _to_lanes(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    """Flatten to (rows, _TILE_LANES), zero-padding the tail."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = max(1, -(-n // _TILE_LANES))
+    rows = -(-rows // _TILE_ROWS) * _TILE_ROWS
+    padded = jnp.pad(flat, (0, rows * _TILE_LANES - n))
+    return padded.reshape(rows, _TILE_LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def alu(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    op: str,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Tensor-tensor ALU op on int32 accumulators. Shapes must match."""
+    assert op in OPS, f"unknown ALU op {op!r}"
+    assert a.shape == b.shape, f"ALU operand shapes differ: {a.shape} vs {b.shape}"
+    a32 = a.astype(jnp.int32)
+    b32 = b.astype(jnp.int32)
+    at, n = _to_lanes(a32)
+    bt, _ = _to_lanes(b32)
+    grid = (at.shape[0] // _TILE_ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_alu_tt_kernel, op=op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_TILE_ROWS, _TILE_LANES), lambda i: (i, 0)),
+            pl.BlockSpec((_TILE_ROWS, _TILE_LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((_TILE_ROWS, _TILE_LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(at.shape, jnp.int32),
+        interpret=interpret,
+    )(at, bt)
+    return out.reshape(-1)[:n].reshape(a.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "imm", "interpret"))
+def alu_imm(
+    a: jnp.ndarray,
+    *,
+    op: str,
+    imm: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Tensor-immediate ALU op (VTA's IMM-mode instructions)."""
+    assert op in OPS, f"unknown ALU op {op!r}"
+    a32 = a.astype(jnp.int32)
+    at, n = _to_lanes(a32)
+    grid = (at.shape[0] // _TILE_ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_alu_imm_kernel, op=op, imm=imm),
+        grid=grid,
+        in_specs=[pl.BlockSpec((_TILE_ROWS, _TILE_LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_TILE_ROWS, _TILE_LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(at.shape, jnp.int32),
+        interpret=interpret,
+    )(at)
+    return out.reshape(-1)[:n].reshape(a.shape)
+
+
+def relu(a: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """ReLU = ALU MAX immediate 0, as TVM lowers it for VTA."""
+    return alu_imm(a, op="max", imm=0, interpret=interpret)
+
+
+def _requant_kernel(a_ref, o_ref, *, shift: int):
+    """Fused VTA requant micro-sequence: ADD bias → SHR → clip.
+
+    VTA issues these as three ALU instructions on the resident accumulator
+    tile; fusing them into one kernel mirrors that residency (one VMEM
+    round-trip) instead of three HBM round-trips.
+    """
+    x = a_ref[...]
+    if shift > 0:
+        x = x + (1 << (shift - 1))
+        x = jnp.right_shift(x, shift)
+    x = jnp.minimum(x, 127)
+    x = jnp.maximum(x, -128)
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "interpret"))
+def requantize(
+    acc: jnp.ndarray, shift: int, *, interpret: bool = True
+) -> jnp.ndarray:
+    """int32 → int8: round-half-up shift + clip (== ref.requantize_ref)."""
+    x = acc.astype(jnp.int32)
+    at, n = _to_lanes(x)
+    grid = (at.shape[0] // _TILE_ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_requant_kernel, shift=shift),
+        grid=grid,
+        in_specs=[pl.BlockSpec((_TILE_ROWS, _TILE_LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_TILE_ROWS, _TILE_LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(at.shape, jnp.int32),
+        interpret=interpret,
+    )(at)
+    return out.reshape(-1)[:n].reshape(acc.shape).astype(jnp.int8)

@@ -1,0 +1,69 @@
+"""int8 conv2d lowered onto the VTA GEMM core (im2col + Pallas GEMM).
+
+TVM lowers 2-D convolutions for VTA by blocking them into the GEMM tensor
+intrinsic; we do the same: an im2col patch-matrix (the layout the VTA load
+module produces when it walks the input feature map) followed by the
+:mod:`.gemm` Pallas kernel.
+
+``impl`` selects the backing GEMM:
+
+* ``"pallas"`` — the real Pallas kernel (interpret=True on CPU). Used for
+  kernel-level artifacts and correctness tests.
+* ``"ref"``    — the pure-jnp oracle. Numerically identical; XLA fuses it
+  into a dense int32 matmul, which is what the full-model artifacts use so
+  the CPU-PJRT serving path stays fast. The choice is recorded per
+  artifact in its manifest (see aot.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from .gemm import gemm
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    pad: int = 0,
+    *,
+    impl: str = "pallas",
+    block: int = 16,
+) -> jnp.ndarray:
+    """int8 NHWC conv: x (N,H,W,C), w (OC,KH,KW,C) → int32 (N,OH,OW,OC)."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    assert impl in ("pallas", "ref"), impl
+    n, h, width, c = x.shape
+    oc, kh, kw, wc = w.shape
+    assert wc == c, f"channel mismatch {wc} != {c}"
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (width + 2 * pad - kw) // stride + 1
+
+    patches = ref.im2col_ref(x, kh, kw, stride, pad)  # (N·OH·OW, KH·KW·C)
+    wmat = w.reshape(oc, kh * kw * c)
+    if impl == "pallas":
+        acc = gemm(patches, wmat, block_m=block, block_n=block, block_k=block)
+    else:
+        acc = ref.gemm_ref(patches, wmat)
+    return acc.reshape(n, oh, ow, oc)
+
+
+def dense(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    *,
+    impl: str = "pallas",
+    block: int = 16,
+) -> jnp.ndarray:
+    """Dense layer on the GEMM core: (M,K)·(N,K)ᵀ + bias → int32 (M,N)."""
+    assert impl in ("pallas", "ref"), impl
+    if impl == "pallas":
+        acc = gemm(x, w, block_m=block, block_n=block, block_k=block)
+    else:
+        acc = ref.gemm_ref(x, w)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[None, :]
+    return acc

@@ -1,0 +1,123 @@
+"""VTA GEMM core as a Pallas kernel.
+
+The paper's compute hot-spot is VTA's GEMM tensor intrinsic: a
+``BATCH × BLOCK_IN × BLOCK_OUT`` int8 matrix-multiply with int32
+accumulation, fed from on-chip SRAM buffers (Table I: BLOCK = 16,
+INPUT_WIDTH = WEIGHT_WIDTH = 8 bit, ACCUMULATOR_WIDTH = 32 bit).
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): on TPU the
+intrinsic maps onto the MXU systolic array, and the input/weight/acc SRAM
+buffers map onto VMEM blocks expressed through ``BlockSpec``. The grid
+iterates output tiles (i, j) and reduction tiles (k); Pallas pipelines the
+HBM→VMEM loads against compute exactly as VTA's load/compute modules
+overlap through their RAW/WAR dependency queues.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md). The kernel is still
+written as it would lower for a real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VTA Table I geometry: BLOCK_SIZE=16 → a 16×16 GEMM core. The Pallas tile
+# defaults mirror that; the autotuned "big config" of §IV uses 32.
+DEFAULT_BLOCK = 16
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref):
+    """One grid step: accumulate an (bm, bk)·(bn, bk)ᵀ tile product.
+
+    ``o_ref`` maps to the same output tile for every reduction step ``k``
+    (its index_map ignores the k axis), mirroring VTA's resident
+    accumulator buffer: initialise at k == 0, accumulate afterwards.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # int8 × int8 → int32 contraction — the MXU-native form
+    # (preferred_element_type=int32 is what VTA's accumulator width means).
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def gemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``(M, K) int8 × (N, K) int8 → (M, N) int32`` via the Pallas kernel.
+
+    Semantics identical to :func:`ref.gemm_ref` (weight output-major, as in
+    the VTA weight buffer). Arbitrary shapes are zero-padded up to tile
+    multiples and sliced back — zero padding is exact for integer GEMM.
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[1], (
+        f"gemm shape mismatch: {x.shape} vs {w.shape}"
+    )
+    m, k = x.shape
+    n, _ = w.shape
+    mp, np_, kp = _ceil_to(m, block_m), _ceil_to(n, block_n), _ceil_to(k, block_k)
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, np_, kp)
+
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            # input buffer tile: row tile i, reduction tile k
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            # weight buffer tile: output-channel tile j, reduction tile k
+            pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
+        ],
+        # accumulator tile is resident across the reduction axis
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def gemm_vmem_bytes(block_m: int, block_n: int, block_k: int) -> dict:
+    """Static VMEM footprint of one grid step, for the §Perf analysis.
+
+    Mirrors VTA's buffer budget: input tile (int8) + weight tile (int8) +
+    accumulator tile (int32), double-buffered by the Pallas pipeline.
+    """
+    inp = block_m * block_k  # int8
+    wgt = block_n * block_k  # int8
+    acc = block_m * block_n * 4  # int32
+    return {
+        "input_bytes": inp,
+        "weight_bytes": wgt,
+        "acc_bytes": acc,
+        "total_bytes": inp + wgt + acc,
+        "double_buffered_bytes": 2 * (inp + wgt) + acc,
+    }

@@ -1,0 +1,150 @@
+"""Pure-jnp reference oracles for the VTA-style kernels.
+
+These are the *correctness ground truth* for the Pallas kernels in
+``gemm.py`` / ``alu.py`` / ``conv2d.py`` and for the rust functional
+simulator (``rust/src/vta/fsim.rs``): every implementation must match these
+semantics bit-exactly.
+
+VTA semantics (Moreau et al., IEEE Micro'19, mirrored by the paper's
+Table I):
+
+* GEMM: ``acc[i, j] += sum_k inp[i, k] * wgt[j, k]`` — inputs int8,
+  accumulator int32, weight matrix stored **output-major** (OC, IC).
+* ALU: element-wise ops on the int32 accumulator register file:
+  ADD / MAX / MIN with tensor or immediate operand, SHR (arithmetic
+  shift right, used for fixed-point requantization).
+* Requantize: arithmetic shift with round-half-up followed by clip to
+  int8 — the sequence TVM emits for VTA.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+def gemm_ref(inp: jnp.ndarray, wgt: jnp.ndarray) -> jnp.ndarray:
+    """VTA GEMM: ``(M, K) int8 × (N, K) int8 → (M, N) int32``.
+
+    Weight is output-major ``(N, K)`` exactly as in the VTA weight buffer,
+    so the contraction is ``inp @ wgt.T``.
+    """
+    assert inp.dtype == jnp.int8 and wgt.dtype == jnp.int8
+    return jnp.matmul(inp.astype(jnp.int32), wgt.astype(jnp.int32).T)
+
+
+def alu_add_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """VTA ALU ADD over int32 accumulators (wrapping, as in hardware)."""
+    return (a.astype(jnp.int32) + b.astype(jnp.int32)).astype(jnp.int32)
+
+
+def alu_max_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def alu_min_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.minimum(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def alu_shr_ref(a: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """Arithmetic shift right (the VTA SHR opcode). ``shift`` may be 0."""
+    return jnp.right_shift(a.astype(jnp.int32), shift)
+
+
+def relu_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """ReLU as VTA lowers it: ALU MAX with immediate 0."""
+    return alu_max_ref(a, jnp.zeros((), jnp.int32))
+
+
+def requantize_ref(acc: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """int32 accumulator → int8 activation.
+
+    Round-half-up via ``+ (1 << (shift-1))`` then arithmetic shift, then
+    clip to the int8 range — the sequence TVM emits for VTA.
+    """
+    acc = acc.astype(jnp.int32)
+    if shift > 0:
+        acc = acc + (1 << (shift - 1))
+        acc = jnp.right_shift(acc, shift)
+    return jnp.clip(acc, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dense_ref(
+    inp: jnp.ndarray, wgt: jnp.ndarray, bias: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Dense layer: GEMM + optional int32 bias, returns int32 accumulators."""
+    acc = gemm_ref(inp, wgt)
+    if bias is not None:
+        acc = alu_add_ref(acc, bias.astype(jnp.int32)[None, :])
+    return acc
+
+
+def im2col_ref(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int) -> jnp.ndarray:
+    """NHWC → (N·OH·OW, KH·KW·C) patch matrix (int8), zero-padded.
+
+    This is the exact layout ``conv2d.py`` feeds to the GEMM kernel and the
+    layout the rust lowering assumes when counting DRAM traffic.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            cols.append(patch.reshape(n * oh * ow, c))
+    # (N·OH·OW, KH·KW·C) with kernel position-major, channel-minor order.
+    return jnp.concatenate(cols, axis=1)
+
+
+def conv2d_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    pad: int = 0,
+) -> jnp.ndarray:
+    """int8 NHWC conv: x (N,H,W,C), w (OC,KH,KW,C) → int32 (N,OH,OW,OC).
+
+    Implemented as im2col + GEMM so it is structurally identical to the
+    Pallas path (and to how TVM lowers conv onto the VTA GEMM core).
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    n, h, width, c = x.shape
+    oc, kh, kw, wc = w.shape
+    assert wc == c, f"channel mismatch {wc} != {c}"
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (width + 2 * pad - kw) // stride + 1
+    patches = im2col_ref(x, kh, kw, stride, pad)  # (N·OH·OW, KH·KW·C)
+    wmat = w.reshape(oc, kh * kw * c)
+    acc = gemm_ref(patches, wmat)  # (N·OH·OW, OC)
+    return acc.reshape(n, oh, ow, oc)
+
+
+def maxpool_ref(x: jnp.ndarray, k: int, stride: int, pad: int = 0) -> jnp.ndarray:
+    """Max-pool on int8 NHWC (VTA runs pooling on the ALU)."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(
+        x, ((0, 0), (pad, pad), (pad, pad), (0, 0)), constant_values=INT8_MIN
+    )
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    out = jnp.full((n, oh, ow, c), INT8_MIN, jnp.int8)
+    for i in range(k):
+        for j in range(k):
+            patch = xp[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            out = jnp.maximum(out, patch)
+    return out
+
+
+def global_avgpool_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pool, integer arithmetic: int32 sum then floor-divide.
+
+    VTA lowers this as an ALU ADD reduction + SHR; the kernel implementation
+    uses the same integer sum-then-divide so results are bit-exact.
+    """
+    n, h, w, c = x.shape
+    s = jnp.sum(x.astype(jnp.int32), axis=(1, 2))
+    return (s // (h * w)).astype(jnp.int32)

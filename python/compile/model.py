@@ -1,0 +1,333 @@
+"""Layer-2: int8 ResNet-18 in JAX, built on the Layer-1 VTA kernels.
+
+This is the workload of the paper's evaluation (§III): ResNet-18 with
+(N, 224, 224, 3) inputs, int8 weights/activations and int32 accumulation —
+the dataflow TVM produces for VTA. Every conv/dense goes through
+``kernels.conv2d`` (im2col + the Pallas GEMM core) and every element-wise
+op through ``kernels.alu``, so the AOT-lowered HLO contains exactly the
+kernel pipeline the accelerator would run.
+
+The model is partitioned into **10 segments** (stem, 8 basic blocks, head)
+— the cut points the paper's pipeline / fused schedules use. The rust
+coordinator composes contiguous segments per execution plan, so any
+pipeline depth from 1 to 10 stages is expressible from the same artifacts.
+
+Weights are synthetic (deterministic RNG; the paper's timing claims are
+weight-independent) and are passed as one flat int8 argument per segment,
+shipped alongside the HLO as ``weights_<segment>.bin`` — keeping the HLO
+text small and letting the rust side own parameter storage.
+
+Quantization: per-layer power-of-two requantization shifts chosen from the
+layer's accumulation depth K so activations keep a healthy int8 dynamic
+range (VTA/TVM use the same shift-based scheme; exact scale values are
+irrelevant to the reproduction).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import alu, conv2d as conv_mod, ref
+
+
+# --------------------------------------------------------------------------
+# Architecture description
+# --------------------------------------------------------------------------
+
+# (name, in_ch, out_ch, stride) for the 8 basic blocks of ResNet-18.
+BASIC_BLOCKS = [
+    ("s1b1", 64, 64, 1),
+    ("s1b2", 64, 64, 1),
+    ("s2b1", 64, 128, 2),
+    ("s2b2", 128, 128, 1),
+    ("s3b1", 128, 256, 2),
+    ("s3b2", 256, 256, 1),
+    ("s4b1", 256, 512, 2),
+    ("s4b2", 512, 512, 1),
+]
+
+NUM_CLASSES = 1000
+SEGMENT_NAMES = ["stem"] + [b[0] for b in BASIC_BLOCKS] + ["head"]
+
+
+def shift_for_k(k: int) -> int:
+    """Requantization shift for accumulation depth K.
+
+    Products of two ~uniform int8 values have std ≈ 74²; summing K of them
+    scales std by √K. Shifting by ``6 + log2(√K)`` keeps the steady-state
+    activation std in the 18–42 range through all 8 blocks (verified by
+    ``test_activations_not_saturated``) without collapsing to zero.
+    """
+    return 6 + max(0, round(0.5 * math.log2(max(k, 1))))
+
+
+#: Requantization shift applied after the residual add. The sum of two
+#: int8 paths needs only a clip (shift 0) — shifting by 1 would halve the
+#: signal every block and collapse deep activations.
+RESIDUAL_SHIFT = 0
+
+
+@dataclass
+class ModelConfig:
+    """Knobs shared by the AOT exporter, pytest and the rust manifest."""
+
+    input_hw: int = 224
+    batch: int = 1
+    num_classes: int = NUM_CLASSES
+    impl: str = "pallas"  # "pallas" | "ref" — backing GEMM implementation
+    block: int = 128  # Pallas GEMM tile (TPU MXU-native 128; VTA core is 16)
+    seed: int = 2023
+
+    def __post_init__(self):
+        assert self.impl in ("pallas", "ref")
+        assert self.input_hw >= 32 and self.input_hw % 32 == 0
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+    offset: int  # into the segment's flat weight vector
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclass
+class SegmentSpec:
+    """Everything the exporter + rust runtime need to know about a segment."""
+
+    name: str
+    index: int
+    in_shape: tuple
+    out_shape: tuple
+    out_dtype: str
+    params: list[ParamSpec] = field(default_factory=list)
+    macs: int = 0
+
+    @property
+    def param_bytes(self) -> int:
+        return sum(p.size for p in self.params)
+
+
+def _conv_macs(oh: int, ow: int, oc: int, kh: int, kw: int, c: int, n: int = 1) -> int:
+    return n * oh * ow * oc * kh * kw * c
+
+
+def _head_hw(hw: int) -> int:
+    """Spatial size entering the head = input_hw / 32 (stem /4, stages /8)."""
+    return hw // 32
+
+
+def build_segment_specs(cfg: ModelConfig) -> list[SegmentSpec]:
+    """Static shape/param/MAC inventory for all 10 segments."""
+    specs: list[SegmentSpec] = []
+    hw = cfg.input_hw
+    n = cfg.batch
+
+    # --- stem: conv7x7/2 (pad 3) + maxpool3x3/2 (pad 1)
+    stem_out_hw = hw // 4
+    stem = SegmentSpec(
+        name="stem",
+        index=0,
+        in_shape=(n, hw, hw, 3),
+        out_shape=(n, stem_out_hw, stem_out_hw, 64),
+        out_dtype="int8",
+    )
+    stem.params.append(ParamSpec("conv1", (64, 7, 7, 3), 0))
+    stem.macs = _conv_macs(hw // 2, hw // 2, 64, 7, 7, 3, n)
+    specs.append(stem)
+
+    # --- 8 basic blocks
+    cur_hw = stem_out_hw
+    for i, (bname, cin, cout, stride) in enumerate(BASIC_BLOCKS):
+        out_hw = cur_hw // stride
+        seg = SegmentSpec(
+            name=bname,
+            index=i + 1,
+            in_shape=(n, cur_hw, cur_hw, cin),
+            out_shape=(n, out_hw, out_hw, cout),
+            out_dtype="int8",
+        )
+        off = 0
+        w1 = ParamSpec("conv1", (cout, 3, 3, cin), off)
+        off += w1.size
+        w2 = ParamSpec("conv2", (cout, 3, 3, cout), off)
+        off += w2.size
+        seg.params = [w1, w2]
+        if stride != 1 or cin != cout:
+            wd = ParamSpec("downsample", (cout, 1, 1, cin), off)
+            off += wd.size
+            seg.params.append(wd)
+        seg.macs = (
+            _conv_macs(out_hw, out_hw, cout, 3, 3, cin, n)
+            + _conv_macs(out_hw, out_hw, cout, 3, 3, cout, n)
+            + (
+                _conv_macs(out_hw, out_hw, cout, 1, 1, cin, n)
+                if len(seg.params) == 3
+                else 0
+            )
+        )
+        specs.append(seg)
+        cur_hw = out_hw
+
+    # --- head: global avgpool + dense
+    head = SegmentSpec(
+        name="head",
+        index=9,
+        in_shape=(n, cur_hw, cur_hw, 512),
+        out_shape=(n, cfg.num_classes),
+        out_dtype="int32",
+    )
+    head.params = [ParamSpec("fc", (cfg.num_classes, 512), 0)]
+    head.macs = n * 512 * cfg.num_classes
+    specs.append(head)
+    return specs
+
+
+def init_segment_weights(cfg: ModelConfig, spec: SegmentSpec) -> np.ndarray:
+    """Deterministic flat int8 weight vector for one segment."""
+    rng = np.random.default_rng(cfg.seed * 1000 + spec.index)
+    return rng.integers(-128, 128, spec.param_bytes, dtype=np.int8)
+
+
+def _unpack(wflat: jnp.ndarray, p: ParamSpec) -> jnp.ndarray:
+    return wflat[p.offset : p.offset + p.size].reshape(p.shape)
+
+
+# --------------------------------------------------------------------------
+# Forward functions (per segment)
+# --------------------------------------------------------------------------
+
+
+def _relu(acc: jnp.ndarray, impl: str) -> jnp.ndarray:
+    return alu.relu(acc) if impl == "pallas" else ref.relu_ref(acc)
+
+
+def _requant(acc: jnp.ndarray, shift: int, impl: str) -> jnp.ndarray:
+    if impl == "pallas":
+        return alu.requantize(acc, shift)
+    return ref.requantize_ref(acc, shift)
+
+
+def _conv(x, w, stride, pad, cfg: ModelConfig) -> jnp.ndarray:
+    return conv_mod.conv2d(x, w, stride=stride, pad=pad, impl=cfg.impl, block=cfg.block)
+
+
+def stem_fn(cfg: ModelConfig, spec: SegmentSpec) -> Callable:
+    (p_conv1,) = spec.params
+    k = 7 * 7 * 3
+    shift = shift_for_k(k)
+
+    def fn(x: jnp.ndarray, wflat: jnp.ndarray):
+        w = _unpack(wflat, p_conv1)
+        acc = _conv(x, w, stride=2, pad=3, cfg=cfg)
+        acc = _relu(acc, cfg.impl)
+        y = _requant(acc, shift, cfg.impl)
+        return (ref.maxpool_ref(y, k=3, stride=2, pad=1),)
+
+    return fn
+
+
+def basic_block_fn(cfg: ModelConfig, spec: SegmentSpec, stride: int) -> Callable:
+    has_down = len(spec.params) == 3
+    p1, p2 = spec.params[0], spec.params[1]
+    pd = spec.params[2] if has_down else None
+    k1 = int(np.prod(p1.shape[1:]))
+    k2 = int(np.prod(p2.shape[1:]))
+    s1, s2 = shift_for_k(k1), shift_for_k(k2)
+
+    def fn(x: jnp.ndarray, wflat: jnp.ndarray):
+        w1 = _unpack(wflat, p1)
+        w2 = _unpack(wflat, p2)
+        acc1 = _conv(x, w1, stride=stride, pad=1, cfg=cfg)
+        acc1 = _relu(acc1, cfg.impl)
+        y1 = _requant(acc1, s1, cfg.impl)
+
+        acc2 = _conv(y1, w2, stride=1, pad=1, cfg=cfg)
+        y2 = _requant(acc2, s2, cfg.impl)
+
+        if has_down:
+            wd = _unpack(wflat, pd)
+            kd = int(np.prod(pd.shape[1:]))
+            iden = _requant(_conv(x, wd, stride=stride, pad=0, cfg=cfg),
+                            shift_for_k(kd), cfg.impl)
+        else:
+            iden = x
+
+        # residual: int32 add, ReLU, clip back to int8
+        s = y2.astype(jnp.int32) + iden.astype(jnp.int32)
+        s = _relu(s, cfg.impl)
+        return (_requant(s, RESIDUAL_SHIFT, cfg.impl),)
+
+    return fn
+
+
+def head_fn(cfg: ModelConfig, spec: SegmentSpec) -> Callable:
+    (p_fc,) = spec.params
+
+    def fn(x: jnp.ndarray, wflat: jnp.ndarray):
+        wfc = _unpack(wflat, p_fc)
+        pooled = ref.global_avgpool_ref(x)  # (N, 512) int32
+        act = _requant(pooled, 0, cfg.impl)  # avg of int8 is already in range
+        logits = conv_mod.dense(act, wfc, impl=cfg.impl, block=cfg.block)
+        return (logits,)
+
+    return fn
+
+
+def segment_fn(cfg: ModelConfig, spec: SegmentSpec) -> Callable:
+    """Forward function ``(x, wflat) -> (y,)`` for one segment."""
+    if spec.name == "stem":
+        return stem_fn(cfg, spec)
+    if spec.name == "head":
+        return head_fn(cfg, spec)
+    stride = next(b[3] for b in BASIC_BLOCKS if b[0] == spec.name)
+    return basic_block_fn(cfg, spec, stride)
+
+
+def full_fn(cfg: ModelConfig, specs: list[SegmentSpec]) -> Callable:
+    """Whole-network forward: ``(x, w0, w1, ..., w9) -> (logits,)``."""
+    fns = [segment_fn(cfg, s) for s in specs]
+
+    def fn(x: jnp.ndarray, *wflats: jnp.ndarray):
+        assert len(wflats) == len(fns)
+        y = x
+        for f, w in zip(fns, wflats):
+            (y,) = f(y, w)
+        return (y,)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Reference end-to-end (oracle for tests)
+# --------------------------------------------------------------------------
+
+
+def run_reference(cfg: ModelConfig, x: np.ndarray, weights: list[np.ndarray]) -> np.ndarray:
+    """Run the whole model with impl='ref' regardless of cfg.impl."""
+    ref_cfg = ModelConfig(
+        input_hw=cfg.input_hw,
+        batch=cfg.batch,
+        num_classes=cfg.num_classes,
+        impl="ref",
+        block=cfg.block,
+        seed=cfg.seed,
+    )
+    specs = build_segment_specs(ref_cfg)
+    y = jnp.asarray(x)
+    for spec, w in zip(specs, weights):
+        (y,) = segment_fn(ref_cfg, spec)(y, jnp.asarray(w))
+    return np.asarray(y)

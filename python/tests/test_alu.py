@@ -1,0 +1,100 @@
+"""VTA ALU Pallas kernel vs oracle: add/max/min/shr, imm mode, requantize."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import alu, ref
+
+SHAPES = st.sampled_from([(1,), (5,), (128,), (129,), (7, 9), (16, 16), (3, 4, 5)])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+OPS = st.sampled_from(["add", "max", "min"])
+
+
+def _rand_i32(rng, shape, lo=-(2**24), hi=2**24):
+    return jnp.asarray(rng.integers(lo, hi, shape, dtype=np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, op=OPS, seed=SEEDS)
+def test_alu_tensor_tensor(shape, op, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_i32(rng, shape)
+    b = _rand_i32(rng, shape)
+    got = alu.alu(a, b, op=op)
+    want = {"add": ref.alu_add_ref, "max": ref.alu_max_ref, "min": ref.alu_min_ref}[
+        op
+    ](a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, shift=st.integers(min_value=0, max_value=31), seed=SEEDS)
+def test_alu_shr(shape, shift, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_i32(rng, shape, lo=-(2**30), hi=2**30)
+    got = alu.alu_imm(a, op="shr", imm=shift)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.alu_shr_ref(a, shift))
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=SHAPES,
+    op=OPS,
+    imm=st.integers(min_value=-1000, max_value=1000),
+    seed=SEEDS,
+)
+def test_alu_immediate(shape, op, imm, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_i32(rng, shape)
+    b = jnp.full(shape, imm, jnp.int32)
+    got = alu.alu_imm(a, op=op, imm=imm)
+    want = {"add": ref.alu_add_ref, "max": ref.alu_max_ref, "min": ref.alu_min_ref}[
+        op
+    ](a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, shift=st.integers(min_value=0, max_value=16), seed=SEEDS)
+def test_requantize(shape, shift, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_i32(rng, shape)
+    got = alu.requantize(a, shift)
+    want = ref.requantize_ref(a, shift)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_requantize_shift_zero_is_pure_clip():
+    a = jnp.asarray([-1000, -128, -1, 0, 1, 127, 1000], jnp.int32)
+    got = alu.requantize(a, 0)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray([-128, -128, -1, 0, 1, 127, 127], np.int8)
+    )
+
+
+def test_requantize_rounds_half_up():
+    # 3 >> 1 with +1 rounding bias: (3+1)>>1 = 2 ; plain >> gives 1.
+    a = jnp.asarray([3], jnp.int32)
+    assert int(alu.requantize(a, 1)[0]) == 2
+    # negative: (-3+1)>>1 = -1 (arithmetic shift floors)
+    a = jnp.asarray([-3], jnp.int32)
+    assert int(alu.requantize(a, 1)[0]) == -1
+
+
+def test_relu_matches_ref():
+    a = jnp.asarray([[-5, 0, 7], [2**20, -(2**20), 1]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(alu.relu(a)), np.asarray(ref.relu_ref(a))
+    )
+
+
+def test_alu_add_wraps_like_hardware():
+    """int32 overflow wraps (two's complement), same as the VTA datapath."""
+    a = jnp.asarray([2**31 - 1], jnp.int32)
+    b = jnp.asarray([1], jnp.int32)
+    got = alu.alu(a, b, op="add")
+    assert int(got[0]) == -(2**31)

@@ -1,0 +1,127 @@
+"""conv2d / dense on the GEMM core: Pallas path vs oracle, plus pooling."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, ref
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand_i8(rng, shape):
+    return jnp.asarray(rng.integers(-128, 128, shape, dtype=np.int8))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    hw=st.sampled_from([4, 7, 8, 14]),
+    c=st.sampled_from([1, 3, 8]),
+    oc=st.sampled_from([4, 16]),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.sampled_from([0, 1]),
+    seed=SEEDS,
+)
+def test_conv2d_pallas_matches_ref(hw, c, oc, k, stride, pad, seed):
+    if hw + 2 * pad < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = _rand_i8(rng, (1, hw, hw, c))
+    w = _rand_i8(rng, (oc, k, k, c))
+    got = conv2d.conv2d(x, w, stride=stride, pad=pad, impl="pallas")
+    want = ref.conv2d_ref(x, w, stride=stride, pad=pad)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv2d_ref_impl_identical_to_pallas_impl():
+    """impl='ref' and impl='pallas' must be interchangeable per-artifact."""
+    rng = np.random.default_rng(11)
+    x = _rand_i8(rng, (2, 9, 9, 5))
+    w = _rand_i8(rng, (7, 3, 3, 5))
+    a = conv2d.conv2d(x, w, stride=1, pad=1, impl="pallas")
+    b = conv2d.conv2d(x, w, stride=1, pad=1, impl="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_conv2d_batch_dim():
+    rng = np.random.default_rng(12)
+    x = _rand_i8(rng, (3, 8, 8, 4))
+    w = _rand_i8(rng, (6, 3, 3, 4))
+    got = conv2d.conv2d(x, w, stride=1, pad=1, impl="pallas")
+    assert got.shape == (3, 8, 8, 6)
+    # each batch element independent
+    one = conv2d.conv2d(x[1:2], w, stride=1, pad=1, impl="ref")
+    np.testing.assert_array_equal(np.asarray(got[1:2]), np.asarray(one))
+
+
+def test_conv2d_1x1_is_pointwise_gemm():
+    rng = np.random.default_rng(13)
+    x = _rand_i8(rng, (1, 6, 6, 8))
+    w = _rand_i8(rng, (10, 1, 1, 8))
+    got = conv2d.conv2d(x, w, impl="pallas")
+    want = ref.gemm_ref(x.reshape(36, 8), w.reshape(10, 8)).reshape(1, 6, 6, 10)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([1, 16, 30]),
+    k=st.sampled_from([8, 16, 33]),
+    n=st.sampled_from([10, 16]),
+    with_bias=st.booleans(),
+    seed=SEEDS,
+)
+def test_dense_matches_ref(m, k, n, with_bias, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_i8(rng, (m, k))
+    w = _rand_i8(rng, (n, k))
+    bias = (
+        jnp.asarray(rng.integers(-(2**15), 2**15, (n,), dtype=np.int32))
+        if with_bias
+        else None
+    )
+    got = conv2d.dense(x, w, bias, impl="pallas")
+    want = ref.dense_ref(x, w, bias)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_im2col_layout_contract():
+    """The (kernel-position-major, channel-minor) layout the rust lowering
+    assumes when counting buffer traffic: column block (i·KW + j)·C + c."""
+    x = jnp.arange(2 * 3 * 3 * 2, dtype=jnp.int8).reshape(2, 3, 3, 2) % 100
+    p = ref.im2col_ref(x, kh=2, kw=2, stride=1, pad=0)
+    assert p.shape == (2 * 2 * 2, 2 * 2 * 2)
+    # patch (n=0, oh=0, ow=0), kernel pos (1,1), channel 1 == x[0,1,1,1]
+    col = (1 * 2 + 1) * 2 + 1
+    assert int(p[0, col]) == int(x[0, 1, 1, 1])
+
+
+def test_maxpool_matches_naive():
+    rng = np.random.default_rng(14)
+    x = _rand_i8(rng, (1, 6, 6, 3))
+    got = np.asarray(ref.maxpool_ref(x, k=2, stride=2))
+    xn = np.asarray(x)
+    for i in range(3):
+        for j in range(3):
+            win = xn[0, 2 * i : 2 * i + 2, 2 * j : 2 * j + 2, :]
+            np.testing.assert_array_equal(got[0, i, j], win.max(axis=(0, 1)))
+
+
+def test_maxpool_padding_uses_int8_min():
+    x = jnp.full((1, 2, 2, 1), -100, jnp.int8)
+    out = ref.maxpool_ref(x, k=3, stride=2, pad=1)
+    # window centred on data must ignore the -128 padding
+    assert int(out.max()) == -100
+
+
+def test_global_avgpool_integer_division():
+    x = jnp.ones((1, 7, 7, 4), jnp.int8) * 3
+    out = ref.global_avgpool_ref(x)
+    assert out.shape == (1, 4)
+    assert int(out[0, 0]) == 3  # (3·49)//49
+    # floor division check: values summing to 50 over 49 elements -> 1
+    x2 = np.zeros((1, 7, 7, 1), np.int8)
+    x2[0, 0, 0, 0] = 50
+    assert int(ref.global_avgpool_ref(jnp.asarray(x2))[0, 0]) == 1

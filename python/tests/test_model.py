@@ -1,0 +1,145 @@
+"""L2 model tests: segment specs, weight packing, forward semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return model.ModelConfig(input_hw=32, impl="ref")
+
+
+@pytest.fixture(scope="module")
+def tiny_specs(tiny_cfg):
+    return model.build_segment_specs(tiny_cfg)
+
+
+def test_segment_inventory(tiny_specs):
+    assert [s.name for s in tiny_specs] == model.SEGMENT_NAMES
+    assert len(tiny_specs) == 10
+    assert [s.index for s in tiny_specs] == list(range(10))
+
+
+def test_segment_shapes_chain(tiny_specs):
+    """Each segment's output shape must equal the next segment's input."""
+    for a, b in zip(tiny_specs, tiny_specs[1:]):
+        assert a.out_shape == b.in_shape, (a.name, b.name)
+
+
+def test_resnet18_total_macs_224():
+    """ResNet-18 @224 is ~1.81 GMACs (the standard published figure)."""
+    specs = model.build_segment_specs(model.ModelConfig(input_hw=224))
+    total = sum(s.macs for s in specs)
+    assert 1.7e9 < total < 1.9e9, total
+
+
+def test_resnet18_total_params():
+    """~11.2M conv+fc weights (no biases/BN in the int8 deployment)."""
+    specs = model.build_segment_specs(model.ModelConfig(input_hw=224))
+    total = sum(s.param_bytes for s in specs)
+    assert 10.5e6 < total < 12e6, total
+
+
+def test_param_offsets_are_dense(tiny_specs):
+    """Flat weight vectors must be exactly covered by the param specs."""
+    for s in tiny_specs:
+        off = 0
+        for p in s.params:
+            assert p.offset == off, (s.name, p.name)
+            off += p.size
+        assert off == s.param_bytes
+
+
+def test_downsample_blocks_have_three_params(tiny_specs):
+    by_name = {s.name: s for s in tiny_specs}
+    for bname, cin, cout, stride in model.BASIC_BLOCKS:
+        expected = 3 if (stride != 1 or cin != cout) else 2
+        assert len(by_name[bname].params) == expected, bname
+
+
+def test_weights_deterministic(tiny_cfg, tiny_specs):
+    a = model.init_segment_weights(tiny_cfg, tiny_specs[3])
+    b = model.init_segment_weights(tiny_cfg, tiny_specs[3])
+    np.testing.assert_array_equal(a, b)
+    c = model.init_segment_weights(
+        model.ModelConfig(input_hw=32, impl="ref", seed=7), tiny_specs[3]
+    )
+    assert not np.array_equal(a, c)
+
+
+def test_shift_for_k_monotone():
+    ks = [1, 9, 64, 576, 1152, 4608]
+    shifts = [model.shift_for_k(k) for k in ks]
+    assert shifts == sorted(shifts)
+    assert shifts[0] >= 6 and shifts[-1] <= 13
+
+
+def test_segment_forward_shapes(tiny_cfg, tiny_specs):
+    rng = np.random.default_rng(0)
+    for spec in tiny_specs:
+        x = jnp.asarray(rng.integers(-128, 128, spec.in_shape, dtype=np.int8))
+        w = jnp.asarray(model.init_segment_weights(tiny_cfg, spec))
+        (y,) = model.segment_fn(tiny_cfg, spec)(x, w)
+        assert tuple(y.shape) == spec.out_shape, spec.name
+        assert str(y.dtype) == spec.out_dtype, spec.name
+
+
+def test_full_fn_equals_segment_chain(tiny_cfg, tiny_specs):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-128, 128, tiny_specs[0].in_shape, dtype=np.int8))
+    ws = [
+        jnp.asarray(model.init_segment_weights(tiny_cfg, s)) for s in tiny_specs
+    ]
+    (full,) = model.full_fn(tiny_cfg, tiny_specs)(x, *ws)
+    y = x
+    for spec, w in zip(tiny_specs, ws):
+        (y,) = model.segment_fn(tiny_cfg, spec)(y, w)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(y))
+
+
+def test_pallas_impl_matches_ref_impl_tiny():
+    """The headline L2 signal: pallas-backed model == ref-backed model."""
+    cfg_p = model.ModelConfig(input_hw=32, impl="pallas")
+    specs = model.build_segment_specs(cfg_p)
+    ws = [model.init_segment_weights(cfg_p, s) for s in specs]
+    rng = np.random.default_rng(2)
+    x = rng.integers(-128, 128, (1, 32, 32, 3), dtype=np.int8)
+
+    y = jnp.asarray(x)
+    for spec, w in zip(specs, ws):
+        (y,) = model.segment_fn(cfg_p, spec)(y, jnp.asarray(w))
+    want = model.run_reference(cfg_p, x, ws)
+    np.testing.assert_array_equal(np.asarray(y), want)
+
+
+def test_activations_not_saturated(tiny_cfg, tiny_specs):
+    """Requant shifts must keep activations in a healthy dynamic range:
+    neither all-clipped (|x|=127 everywhere) nor collapsed to zero."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-128, 128, tiny_specs[0].in_shape, dtype=np.int8))
+    y = x
+    for spec, in_spec in zip(tiny_specs[:-1], tiny_specs[:-1]):
+        w = jnp.asarray(model.init_segment_weights(tiny_cfg, spec))
+        (y,) = model.segment_fn(tiny_cfg, spec)(y, w)
+        vals = np.asarray(y)
+        frac_clipped = np.mean(np.abs(vals) == 127)
+        assert frac_clipped < 0.8, (spec.name, frac_clipped)
+        assert vals.std() > 1.0, (spec.name, vals.std())
+
+
+def test_residual_identity_path():
+    """Non-downsample block with zero conv weights == relu(x): the identity
+    path must pass through untouched (clip is a no-op on int8 values)."""
+    cfg = model.ModelConfig(input_hw=32, impl="ref")
+    specs = model.build_segment_specs(cfg)
+    s1b2 = specs[2]
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.integers(-128, 128, s1b2.in_shape, dtype=np.int8))
+    w = jnp.zeros((s1b2.param_bytes,), jnp.int8)
+    (y,) = model.segment_fn(cfg, s1b2)(x, w)
+    want = ref.requantize_ref(ref.relu_ref(x.astype(jnp.int32)), model.RESIDUAL_SHIFT)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))

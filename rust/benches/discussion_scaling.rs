@@ -1,0 +1,86 @@
+//! E4 + E5 — the §IV VTA parameter-scaling experiments on the
+//! UltraScale+ stack:
+//!
+//! * clock sweep 200–350 MHz at Table-I geometry ("we found the clock
+//!   limit to be 350 MHz exhibiting a speedup of approximately 5.7 %");
+//! * the big configuration (BLOCK=32, uop+input 64 Kb, weight 512 Kb,
+//!   accumulator 256 Kb, 200 MHz) — "a speedup of approximately 43.86 %".
+//!
+//! Run: `cargo bench --bench discussion_scaling`
+
+use vta_cluster::config::{BoardFamily, BoardProfile, Calibration, VtaConfig};
+use vta_cluster::exp::paper;
+use vta_cluster::exp::runner::Bench as Exp;
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::Strategy;
+use vta_cluster::util::bench::Bench;
+
+fn single_node_ms(vta: VtaConfig, calib: &Calibration) -> f64 {
+    let mut exp = Exp::new(BoardFamily::UltraScalePlus, vta, calib.clone());
+    exp.images = 32;
+    exp.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image
+}
+
+fn main() {
+    let mut b = Bench::new("discussion_scaling");
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let board = BoardProfile::zu_mpsoc();
+
+    let base = single_node_ms(VtaConfig::table1_ultrascale(), &calib);
+    b.row(&format!("baseline (Table I @300 MHz): {base:.2} ms  (paper {:.2})", paper::SINGLE_ULTRASCALE_MS));
+
+    // E4: clock sweep (timing-closure limit at 350 MHz per §IV)
+    for mhz in [200u64, 250, 300, 350] {
+        let cfg = VtaConfig::table1_at_clock(mhz * 1_000_000);
+        board.vta_fits(&cfg).expect("within closure limit");
+        let ms = single_node_ms(cfg, &calib);
+        let speedup = (base - ms) / base * 100.0;
+        let note = if mhz == 350 {
+            format!("  ← paper claims ≈{:.1}%", paper::CLOCK_350_SPEEDUP * 100.0)
+        } else {
+            String::new()
+        };
+        b.row(&format!("clock {mhz} MHz: {ms:.2} ms  ({speedup:+.1}% vs 300 MHz){note}"));
+    }
+    // 400 MHz must be rejected by the timing-closure model
+    let over = VtaConfig::table1_at_clock(400_000_000);
+    b.row(&format!(
+        "clock 400 MHz: {} (paper: 350 MHz was the closure limit)",
+        if board.vta_fits(&over).is_err() { "REJECTED by timing model" } else { "accepted?!" }
+    ));
+
+    // E5: the big configuration
+    let big = VtaConfig::big_config_200mhz();
+    board.vta_fits(&big).expect("big config closes at 200 MHz on US+");
+    let ms = single_node_ms(big.clone(), &calib);
+    let speedup = (base - ms) / base * 100.0;
+    b.row(&format!(
+        "big config (BLOCK=32, 2x buffers, 200 MHz): {ms:.2} ms  ({speedup:+.1}% vs baseline; paper ≈{:.1}%)",
+        paper::BIG_CONFIG_SPEEDUP * 100.0
+    ));
+    // and it must NOT fit the Zynq-7020 (220 DSP slices)
+    b.row(&format!(
+        "big config on Zynq-7020: {}",
+        if BoardProfile::zynq7020().vta_fits(&big).is_err() {
+            "REJECTED (DSP budget), as expected"
+        } else {
+            "accepted?!"
+        }
+    ));
+
+    // ablation: which §IV factor matters — block size vs buffer size
+    let mut block_only = VtaConfig::table1_at_clock(200_000_000);
+    block_only.block = 32;
+    block_only.name = "block32-smallbuf".into();
+    // (weight buffer must still hold ≥1 tile of 32×32 → 8 Kb min; Table I
+    // 256 Kb holds 32 tiles — feasible)
+    let ms_block = single_node_ms(block_only, &calib);
+    let mut buf_only = VtaConfig::big_config_200mhz();
+    buf_only.block = 16;
+    buf_only.name = "block16-bigbuf".into();
+    let ms_buf = single_node_ms(buf_only, &calib);
+    b.row(&format!(
+        "ablation @200 MHz: block32+small buffers {ms_block:.2} ms | block16+big buffers {ms_buf:.2} ms | both {ms:.2} ms"
+    ));
+    b.finish();
+}

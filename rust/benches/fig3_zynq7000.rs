@@ -1,0 +1,78 @@
+//! E1 — regenerate Fig. 3(a)/(b): Zynq-7000 stack, execution time (ms)
+//! per image for 1–12 FPGAs × the four scheduling strategies, compared
+//! cell-by-cell against the paper's table.
+//!
+//! Run: `cargo bench --bench fig3_zynq7000`
+
+use vta_cluster::config::Calibration;
+use vta_cluster::exp::runner::Bench as Exp;
+use vta_cluster::exp::{paper, table};
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig3_zynq7000");
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    b.row(&format!("calibration: {}", calib.to_json().to_string_compact()));
+
+    let mut exp = Exp::zynq(calib.clone());
+    exp.images = 64;
+    let rows = exp.sweep(12).expect("fig3 sweep");
+    println!(
+        "{}",
+        table::render_vs_paper(
+            "Fig. 3(a) Zynq-7000: execution time (ms) per scheduling method",
+            &rows,
+            &paper::FIG3_ZYNQ7000_MS
+        )
+    );
+    let e = table::errors(&rows, &paper::FIG3_ZYNQ7000_MS);
+    b.row(&format!(
+        "mean rel err: SG {:.0}% | AI {:.0}% | Pipe {:.0}% | Fused {:.0}%",
+        e[0] * 100.0,
+        e[1] * 100.0,
+        e[2] * 100.0,
+        e[3] * 100.0
+    ));
+    b.row(&format!(
+        "winner agreement vs paper: {:.0}%",
+        table::winner_agreement(&rows, &paper::FIG3_ZYNQ7000_MS) * 100.0
+    ));
+
+    // qualitative claims (DESIGN.md §5 / paper.rs)
+    let sg: Vec<f64> = rows.iter().map(|r| r.ms[0]).collect();
+    b.row(&format!(
+        "claim 3 (SG near-linear then flattens): 1→4 speedup {:.2}x (ideal 4), 8→12 {:.2}x (ideal 1.5)",
+        sg[0] / sg[3],
+        sg[7] / sg[11]
+    ));
+
+    // the blocking-MPI regime of the paper's §III discussion: fully
+    // serial PS (blocking sends, no second-core overlap) with the
+    // rendezvous/DMA costs §III describes. In this regime the N=2..3
+    // AI-core anomaly appears exactly as Fig. 3 reports it. See
+    // EXPERIMENTS.md §E1: no single overlap setting reproduces both this
+    // anomaly and the paper's N≥9 tail — the two ends of the AI-core
+    // column imply different communication regimes.
+    let mut blocking = calib;
+    blocking.ps_serial_frac = 1.0;
+    blocking.mpi_handshake_us = 550.0;
+    blocking.dma_cpu_ns_per_byte = 8.0;
+    let mut exp_b = Exp::zynq(blocking);
+    exp_b.images = 32;
+    let t1 = exp_b
+        .cell(vta_cluster::sched::Strategy::CoreAssign, 1)
+        .unwrap()
+        .ms_per_image;
+    for n in [2usize, 3] {
+        let t = exp_b
+            .cell(vta_cluster::sched::Strategy::CoreAssign, n)
+            .unwrap()
+            .ms_per_image;
+        b.row(&format!(
+            "claim 1 (blocking regime): AI-core n={n}: {t:.2} ms vs single {t1:.2} ms → {}",
+            if t > t1 { "SLOWER than single node (matches paper)" } else { "faster" }
+        ));
+    }
+    b.finish();
+}

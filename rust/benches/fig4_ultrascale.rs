@@ -1,0 +1,48 @@
+//! E2 — regenerate Fig. 4(a)/(b): UltraScale+ stack, 1–5 FPGAs × the
+//! four strategies, vs the paper's table; plus the §III cross-family
+//! claim (US+ ≈6 % faster than Zynq-7000 single-node despite 3× clock).
+//!
+//! Run: `cargo bench --bench fig4_ultrascale`
+
+use vta_cluster::config::Calibration;
+use vta_cluster::exp::runner::Bench as Exp;
+use vta_cluster::exp::{paper, table};
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::Strategy;
+use vta_cluster::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig4_ultrascale");
+    let calib = Calibration::load_or_default(&artifacts_dir());
+
+    let mut exp = Exp::ultrascale(calib.clone());
+    exp.images = 64;
+    let rows = exp.sweep(5).expect("fig4 sweep");
+    println!(
+        "{}",
+        table::render_vs_paper(
+            "Fig. 4(a) UltraScale+: execution time (ms) per scheduling method",
+            &rows,
+            &paper::FIG4_ULTRASCALE_MS
+        )
+    );
+    let e = table::errors(&rows, &paper::FIG4_ULTRASCALE_MS);
+    b.row(&format!(
+        "mean rel err: SG {:.0}% | AI {:.0}% | Pipe {:.0}% | Fused {:.0}%",
+        e[0] * 100.0,
+        e[1] * 100.0,
+        e[2] * 100.0,
+        e[3] * 100.0
+    ));
+
+    // §III: "the results ... showed an improvement of approximately 6 %"
+    let mut zynq = Exp::zynq(calib);
+    zynq.images = 32;
+    let tz = zynq.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image;
+    let tu = rows[0].ms[0];
+    b.row(&format!(
+        "claim 4: US+ single node {tu:.2} ms vs Zynq {tz:.2} ms → {:.1}% faster (paper ≈6%, clock ratio 3x)",
+        (tz - tu) / tz * 100.0
+    ));
+    b.finish();
+}

@@ -1,0 +1,114 @@
+//! Hot-path performance benches (§Perf deliverable, L3):
+//!
+//! * VTA fsim + cycle-model throughput (instructions/s, uops/s)
+//! * full cluster-cell evaluation time (plan + analytic sim)
+//! * PJRT serving: per-image latency/throughput on the real artifacts
+//!   (tiny 32×32 variant so the bench is self-contained and fast)
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use vta_cluster::compiler::{lower_gemm, GemmShape, GemmTiling};
+use vta_cluster::config::{BoardProfile, Calibration, VtaConfig};
+use vta_cluster::exp::runner::Bench as Exp;
+use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::runtime::{artifacts_dir, Engine, Manifest, TensorData};
+use vta_cluster::sched::Strategy;
+use vta_cluster::util::bench::{black_box, Bench};
+use vta_cluster::util::rng::Rng;
+use vta_cluster::vta::fsim::{self, DramImage};
+use vta_cluster::vta::timing::TimingModel;
+
+fn main() {
+    let mut b = Bench::new("hotpath");
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let cfg = VtaConfig::table1_zynq7000();
+
+    // --- L3 substrate: fsim + pricing
+    let shape = GemmShape { m: 256, k: 512, n: 128 };
+    let tiling = GemmTiling { tm: 16, tk: 4, tn: 8 };
+    let prog = lower_gemm("bench", shape, tiling, &cfg).unwrap();
+    b.row(&format!(
+        "program: {} insns, {} uops, {:.2} MMAC",
+        prog.insns.len(),
+        prog.uops.len(),
+        shape.macs() as f64 / 1e6
+    ));
+    let model = TimingModel::new(cfg.clone(), BoardProfile::zynq7020(), calib.clone());
+    b.iter("timing.price (cycle model)", || {
+        black_box(model.price(black_box(&prog)).unwrap());
+    });
+    let mut rng = Rng::new(1);
+    let mut dram = DramImage {
+        inp: rng.i8_vec(prog.dram.inp_len),
+        wgt: rng.i8_vec(prog.dram.wgt_len),
+        acc: vec![],
+        out: vec![0; prog.dram.out_len],
+    };
+    let t0 = std::time::Instant::now();
+    let stats = fsim::run(&cfg, &prog, &mut dram).unwrap();
+    let dt = t0.elapsed();
+    b.row(&format!(
+        "fsim: {:.1} Muop/s ({} gemm uops in {:.1} ms)",
+        stats.gemm_uops as f64 / dt.as_secs_f64() / 1e6,
+        stats.gemm_uops,
+        dt.as_secs_f64() * 1e3
+    ));
+
+    // --- whole cluster cell (plan + analytic sim, warm cost cache)
+    let mut exp = Exp::zynq(calib);
+    exp.images = 64;
+    exp.cell(Strategy::Fused, 8).unwrap(); // warm the autotune cache
+    let t0 = std::time::Instant::now();
+    let iters = 50;
+    for _ in 0..iters {
+        black_box(exp.cell(Strategy::Fused, 8).unwrap());
+    }
+    b.row(&format!(
+        "cluster cell (fused, n=8, warm cache): {:.2} ms/eval",
+        t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+    ));
+
+    // --- PJRT serving on the real tiny artifacts
+    if artifacts_dir().join("manifest.json").exists() {
+        let manifest = Manifest::load(&artifacts_dir()).unwrap();
+        let mut eng = Engine::new(manifest).unwrap();
+        let mut rng = Rng::new(2);
+        let img = TensorData::i8(vec![1, 32, 32, 3], rng.i8_vec(32 * 32 * 3)).unwrap();
+        // pallas (correctness) vs fast (serving) variant — the §Perf L2
+        // before/after pair
+        for (label, fast) in [("pallas artifacts", false), ("fast artifacts", true)] {
+            let names: Vec<String> = eng
+                .manifest()
+                .segments_variant(32, fast)
+                .iter()
+                .map(|s| s.name.clone())
+                .collect();
+            eng.run_chain(&names, &img).unwrap(); // compile once
+            let t0 = std::time::Instant::now();
+            let iters = if fast { 100 } else { 5 };
+            for _ in 0..iters {
+                black_box(eng.run_chain(&names, &img).unwrap());
+            }
+            b.row(&format!(
+                "PJRT tiny resnet18 via {label}: {:.2} ms/image single-thread",
+                t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+            ));
+        }
+
+        // pipelined serving across worker threads (fast variant)
+        let g = build_resnet18(32).unwrap();
+        let plan = vta_cluster::sched::pipeline(&g, 4, |_| 1.0).unwrap();
+        let coord =
+            vta_cluster::coordinator::Coordinator::start_fast(artifacts_dir(), &plan, 32)
+                .unwrap();
+        let batch: Vec<TensorData> = (0..100).map(|_| img.clone()).collect();
+        let (_, report) = coord.run_batch(batch).unwrap();
+        b.row(&format!(
+            "PJRT serving (4-stage pipeline, 100 images, fast): {:.1} img/s, mean latency {:.2} ms",
+            report.throughput_img_per_sec, report.mean_latency_ms
+        ));
+    } else {
+        b.row("artifacts missing — run `make artifacts` for the PJRT rows");
+    }
+    b.finish();
+}

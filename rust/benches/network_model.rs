@@ -1,0 +1,80 @@
+//! E7 — network-model microbenchmarks: the terms the paper blames for
+//! the scaling anomalies (1 Gb/s wire, blocking-MPI handshake, PS DMA
+//! staging, switch contention), plus raw model-evaluation throughput.
+//!
+//! Run: `cargo bench --bench network_model`
+
+use vta_cluster::config::{BoardProfile, Calibration};
+use vta_cluster::net::link::LinkModel;
+use vta_cluster::net::mpi::MpiModel;
+use vta_cluster::net::switch::{Endpoint, Flow, SwitchSim};
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("network_model");
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let link = LinkModel::gigabit();
+    let mpi = MpiModel::from_calibration(&calib, 10_000);
+    let zynq = BoardProfile::zynq7020();
+
+    // model outputs (the numbers that shape Fig. 3)
+    for (what, bytes) in [
+        ("one 224×224×3 image", 224 * 224 * 3u64),
+        ("stem activation (56×56×64)", 56 * 56 * 64),
+        ("s2 activation (28×28×128)", 28 * 28 * 128),
+        ("s4 activation (7×7×512)", 7 * 7 * 512),
+        ("logits (1000×i32)", 4000),
+    ] {
+        let wire = link.serialize_ns(bytes);
+        let e2e = mpi.transfer_ns(bytes, Some(&zynq), Some(&zynq));
+        b.row(&format!(
+            "{what:34} {bytes:>8} B: wire {:>9.3} ms, FPGA→FPGA blocking {:>9.3} ms",
+            wire as f64 / 1e6,
+            e2e as f64 / 1e6
+        ));
+    }
+    b.row(&format!(
+        "goodput at 1 Gb/s with frame overhead: {:.1} MB/s",
+        link.goodput_bytes_per_sec(10_000_000) / 1e6
+    ));
+
+    // scatter contention: master → N nodes of one image each
+    for n in [2usize, 6, 12] {
+        let mut sw = SwitchSim::new(LinkModel::gigabit(), 10_000);
+        let mut last = 0;
+        for i in 0..n {
+            let t = sw.schedule(&Flow {
+                src: Endpoint::Master,
+                dst: Endpoint::Node(i),
+                bytes: 150_528,
+                ready_ns: 0,
+            });
+            last = last.max(t.arrival_ns);
+        }
+        b.row(&format!(
+            "scatter 1 image to each of {n:>2} nodes: last arrival {:.3} ms (master-port serialization)",
+            last as f64 / 1e6
+        ));
+    }
+
+    // hot-path throughput of the model evaluations themselves
+    b.iter("link.serialize_ns", || {
+        black_box(link.serialize_ns(black_box(150_528)));
+    });
+    b.iter("mpi.transfer_ns (both boards)", || {
+        black_box(mpi.transfer_ns(black_box(200_704), Some(&zynq), Some(&zynq)));
+    });
+    let mut sw = SwitchSim::new(LinkModel::gigabit(), 10_000);
+    let mut i = 0u64;
+    b.iter("switch.schedule", || {
+        i += 1;
+        black_box(sw.schedule(&Flow {
+            src: Endpoint::Node((i % 12) as usize),
+            dst: Endpoint::Node(((i + 1) % 12) as usize),
+            bytes: 50_000,
+            ready_ns: i * 1000,
+        }));
+    });
+    b.finish();
+}

@@ -1,0 +1,82 @@
+//! E6 — the single-FPGA anchors and the AutoTVM-analog schedule search.
+//!
+//! §III: "an optimized micro-kernel generated through AutoTVM schedule
+//! exploration resulted in an inference time of 27.34 ms". This bench
+//! reports the anchor residuals and the schedule-search statistics for
+//! every distinct GEMM shape in ResNet-18 (explored schedules, picked
+//! tiling, tuned-vs-naive speedup, compute utilization).
+//!
+//! Run: `cargo bench --bench single_fpga_anchor`
+
+use vta_cluster::compiler::{autotune_gemm, lower_gemm, GemmShape, GemmTiling};
+use vta_cluster::config::{BoardProfile, Calibration, VtaConfig};
+use vta_cluster::exp::paper;
+use vta_cluster::exp::runner::Bench as Exp;
+use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::Strategy;
+use vta_cluster::util::bench::Bench;
+use vta_cluster::vta::timing::TimingModel;
+
+fn main() {
+    let mut b = Bench::new("single_fpga_anchor");
+    let calib = Calibration::load_or_default(&artifacts_dir());
+
+    // anchors
+    let mut z = Exp::zynq(calib.clone());
+    z.images = 32;
+    let tz = z.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image;
+    let mut u = Exp::ultrascale(calib.clone());
+    u.images = 32;
+    let tu = u.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image;
+    b.row(&format!(
+        "anchor zynq-7000: {tz:.2} ms (paper {:.2}, err {:.1}%)",
+        paper::SINGLE_ZYNQ_MS,
+        (tz - paper::SINGLE_ZYNQ_MS).abs() / paper::SINGLE_ZYNQ_MS * 100.0
+    ));
+    b.row(&format!(
+        "anchor ultrascale+: {tu:.2} ms (paper {:.2}, err {:.1}%)",
+        paper::SINGLE_ULTRASCALE_MS,
+        (tu - paper::SINGLE_ULTRASCALE_MS).abs() / paper::SINGLE_ULTRASCALE_MS * 100.0
+    ));
+
+    // schedule exploration per distinct conv/dense GEMM shape
+    let model = TimingModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        calib,
+    );
+    let g = build_resnet18(224).unwrap();
+    let mut shapes: Vec<GemmShape> = Vec::new();
+    for node in g.nodes() {
+        let descs = g.input_descs(node.id);
+        if let Some((m, k, n)) = node.op.gemm_shape(&descs) {
+            let s = GemmShape { m, k, n };
+            if !shapes.contains(&s) {
+                shapes.push(s);
+            }
+        }
+    }
+    b.row(&format!("{} distinct GEMM shapes in ResNet-18@224", shapes.len()));
+    println!(
+        "  {:>24} | {:>8} | {:>16} | {:>9} | {:>6} | {:>5}",
+        "shape (M,K,N)", "explored", "tiling (tm,tk,tn)", "tuned Mcyc", "naive×", "util"
+    );
+    for shape in shapes {
+        let tuned = autotune_gemm(&model, shape).unwrap();
+        let naive =
+            lower_gemm("naive", shape, GemmTiling { tm: 1, tk: 1, tn: 1 }, &model.cfg)
+                .unwrap();
+        let naive_cycles = model.price(&naive).unwrap().total_cycles;
+        println!(
+            "  {:>24} | {:>8} | {:>16} | {:>9.2} | {:>5.1}x | {:>4.0}%",
+            format!("({},{},{})", shape.m, shape.k, shape.n),
+            tuned.explored,
+            format!("({},{},{})", tuned.tiling.tm, tuned.tiling.tk, tuned.tiling.tn),
+            tuned.report.total_cycles as f64 / 1e6,
+            naive_cycles as f64 / tuned.report.total_cycles as f64,
+            tuned.report.compute_utilization() * 100.0,
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,454 @@
+//! Lowering: a blocked GEMM (or ALU pass) → a VTA [`Program`] with
+//! virtual-thread dependency tokens.
+//!
+//! Mirrors how TVM lowers conv/dense for VTA: the problem is padded to
+//! tile multiples; each `(mc, nc)` output chunk keeps its accumulators
+//! resident while the K dimension streams through double-buffered
+//! input/weight halves (two "virtual thread" contexts, even/odd). Load
+//! runs two K-steps ahead of compute (depth-2 software pipeline), store
+//! overlaps the next chunk — the module-overlap behaviour the timing
+//! model prices.
+
+use super::tiling::GemmTiling;
+use crate::config::VtaConfig;
+use crate::vta::isa::{AluOp, Insn, MemType};
+use crate::vta::program::{dep, DramLayout, Program, Uop};
+
+/// A GEMM problem in element units (im2col form for convs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+}
+
+impl GemmShape {
+    /// Problem size in VTA buffer units: `(m_rows, k_blocks, n_blocks)`.
+    ///
+    /// With BATCH=1 the GEMM intrinsic consumes one `(1 × block)` input
+    /// row per uop-cycle, so the M dimension counts **rows directly**;
+    /// only K and N are grouped into `block`-wide fragments/tiles.
+    pub fn blocks(&self, cfg: &VtaConfig) -> (u64, u64, u64) {
+        let b = cfg.block as u64;
+        (self.m, self.k.div_ceil(b), self.n.div_ceil(b))
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.m * self.k * self.n
+    }
+}
+
+/// Lower a GEMM under a tiling. The returned program's DRAM layout is
+/// padded to tile multiples (`inp`: mb_p×kb_p rows, `wgt`: nb_p×kb_p
+/// tiles, `out`: mb_p×nb_p rows).
+pub fn lower_gemm(
+    name: &str,
+    shape: GemmShape,
+    tiling: GemmTiling,
+    cfg: &VtaConfig,
+) -> anyhow::Result<Program> {
+    anyhow::ensure!(tiling.feasible(cfg), "tiling {tiling:?} infeasible for {}", cfg.name);
+    let (mb, kb, nb) = shape.blocks(cfg);
+    let (tm, tk, tn) = (tiling.tm, tiling.tk, tiling.tn);
+    let mb_p = mb.div_ceil(tm) * tm;
+    let kb_p = kb.div_ceil(tk) * tk;
+    let nb_p = nb.div_ceil(tn) * tn;
+
+    let mut p = Program::new(name);
+    p.dram = DramLayout {
+        inp_len: (mb_p * kb_p) as usize * cfg.block as usize,
+        wgt_len: (nb_p * kb_p) as usize * (cfg.block as usize).pow(2),
+        acc_len: 0,
+        out_len: (mb_p * nb_p) as usize * cfg.block as usize,
+    };
+
+    // ---- micro-op tables --------------------------------------------
+    // reset uops: one per n', swept over m' by iter_out (dst_factor = tn)
+    let reset_bgn = p.uops.len() as u16;
+    for n1 in 0..tn {
+        p.push_uop(Uop { dst: n1 as u16, src: 0, wgt: 0 });
+    }
+    let reset_end = p.uops.len() as u16;
+    // MAC uops, two parity copies for the double-buffered halves
+    let mut mac_ranges = [(0u16, 0u16); 2];
+    for parity in 0..2u64 {
+        let bgn = p.uops.len() as u16;
+        let src_base = parity * tm * tk;
+        let wgt_base = parity * tn * tk;
+        for n1 in 0..tn {
+            for k1 in 0..tk {
+                p.push_uop(Uop {
+                    dst: n1 as u16,
+                    src: (src_base + k1) as u16,
+                    wgt: (wgt_base + n1 * tk + k1) as u16,
+                });
+            }
+        }
+        mac_ranges[parity as usize] = (bgn, p.uops.len() as u16);
+    }
+
+    // ---- instruction stream -----------------------------------------
+    let m_chunks = mb_p / tm;
+    let n_chunks = nb_p / tn;
+    let k_chunks = kb_p / tk;
+    let total_chunks = m_chunks * n_chunks;
+    let mut load_step: u64 = 0; // global k-step index (for pipeline depth)
+    let mut chunk_idx: u64 = 0;
+
+    for mc in 0..m_chunks {
+        for nc in 0..n_chunks {
+            // reset accumulators; WAR on the previous chunk's store
+            p.push(Insn::Gemm {
+                dep: dep(false, chunk_idx > 0, false, false),
+                reset: true,
+                uop_bgn: reset_bgn,
+                uop_end: reset_end,
+                iter_out: tm as u16,
+                iter_in: 1,
+                dst_factor_out: tn as u16,
+                dst_factor_in: 0,
+                src_factor_out: 0,
+                src_factor_in: 0,
+                wgt_factor_out: 0,
+                wgt_factor_in: 0,
+            });
+            for kc in 0..k_chunks {
+                let parity = (load_step % 2) as usize;
+                // input rows (m', k') for this chunk
+                p.push(Insn::Load {
+                    // reuse a buffer half only after compute freed it
+                    dep: dep(false, load_step >= 2, false, false),
+                    mem: MemType::Inp,
+                    sram_base: (parity as u64 * tm * tk) as u32,
+                    dram_base: ((mc * tm) * kb_p + kc * tk) as u32,
+                    y_size: tm as u16,
+                    x_size: tk as u16,
+                    x_stride: kb_p as u16,
+                });
+                // weight tiles (n', k')
+                p.push(Insn::Load {
+                    dep: dep(false, false, false, true), // data ready → compute
+                    mem: MemType::Wgt,
+                    sram_base: (parity as u64 * tn * tk) as u32,
+                    dram_base: ((nc * tn) * kb_p + kc * tk) as u32,
+                    y_size: tn as u16,
+                    x_size: tk as u16,
+                    x_stride: kb_p as u16,
+                });
+                let (mac_bgn, mac_end) = mac_ranges[parity];
+                let last_k = kc + 1 == k_chunks;
+                p.push(Insn::Gemm {
+                    // RAW on loads; WAR-release the buffer half; signal
+                    // store after the chunk's last K-step
+                    dep: dep(true, false, true, last_k),
+                    reset: false,
+                    uop_bgn: mac_bgn,
+                    uop_end: mac_end,
+                    iter_out: tm as u16,
+                    iter_in: 1,
+                    dst_factor_out: tn as u16,
+                    dst_factor_in: 0,
+                    src_factor_out: tk as u16,
+                    src_factor_in: 0,
+                    wgt_factor_out: 0,
+                    wgt_factor_in: 0,
+                });
+                load_step += 1;
+            }
+            // store the finished chunk; free the accumulators (WAR token
+            // consumed by the next chunk's reset, or FINISH at the end)
+            p.push(Insn::Store {
+                dep: dep(true, false, true, false),
+                sram_base: 0,
+                dram_base: ((mc * tm) * nb_p + nc * tn) as u32,
+                y_size: tm as u16,
+                x_size: tn as u16,
+                x_stride: nb_p as u16,
+            });
+            chunk_idx += 1;
+        }
+    }
+    debug_assert_eq!(chunk_idx, total_chunks);
+    // drain the two outstanding WAR tokens from the pipeline tail
+    for _ in 0..load_step.min(2) {
+        p.push(Insn::Load {
+            dep: dep(false, true, false, false),
+            mem: MemType::Inp,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 0,
+            x_size: 0,
+            x_stride: 0,
+        });
+    }
+    p.push(Insn::Finish { dep: dep(false, true, false, false) });
+    p.validate(cfg)?;
+    Ok(p)
+}
+
+/// Lower an element-wise ALU pass over `elems` int32 accumulators:
+/// load → `ops` ALU instructions → store, chunked by the accumulator
+/// buffer. Used to price ReLU / requantize / residual-add / pooling.
+/// `ops` holds `(op, imm)` pairs applied in sequence to every element.
+pub fn lower_alu_pass(
+    name: &str,
+    elems: u64,
+    ops: &[(AluOp, i16)],
+    cfg: &VtaConfig,
+) -> anyhow::Result<Program> {
+    anyhow::ensure!(!ops.is_empty(), "ALU pass needs at least one op");
+    let blk = cfg.block as u64;
+    let rows = elems.div_ceil(blk).max(1);
+    let acc_cap = cfg.acc_rows_resident();
+    let chunk_rows = acc_cap.min(rows);
+    let chunks = rows.div_ceil(chunk_rows);
+
+    let mut p = Program::new(name);
+    p.dram = DramLayout {
+        inp_len: 0,
+        wgt_len: 0,
+        acc_len: (chunks * chunk_rows * blk) as usize,
+        out_len: (chunks * chunk_rows * blk) as usize,
+    };
+    let u = p.push_uop(Uop { dst: 0, src: 0, wgt: 0 });
+
+    for c in 0..chunks {
+        // acc load issues on the compute queue (VTA routing); WAR on the
+        // previous chunk's store
+        p.push(Insn::Load {
+            dep: dep(false, c > 0, false, false),
+            mem: MemType::Acc,
+            sram_base: 0,
+            dram_base: (c * chunk_rows) as u32,
+            y_size: chunk_rows as u16,
+            x_size: 1,
+            x_stride: 1,
+        });
+        for (i, (op, imm)) in ops.iter().enumerate() {
+            let last = i + 1 == ops.len();
+            p.push(Insn::Alu {
+                dep: dep(false, false, false, last),
+                op: *op,
+                use_imm: true,
+                imm: *imm,
+                uop_bgn: u,
+                uop_end: u + 1,
+                iter_out: chunk_rows as u16,
+                iter_in: 1,
+                dst_factor_out: 1,
+                dst_factor_in: 0,
+                src_factor_out: 1,
+                src_factor_in: 0,
+            });
+        }
+        p.push(Insn::Store {
+            dep: dep(true, false, true, false),
+            sram_base: 0,
+            dram_base: (c * chunk_rows) as u32,
+            y_size: chunk_rows as u16,
+            x_size: 1,
+            x_stride: 1,
+        });
+    }
+    p.push(Insn::Finish { dep: dep(false, true, false, false) });
+    p.validate(cfg)?;
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BoardProfile, Calibration};
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+    use crate::vta::fsim::{self, DramImage};
+    use crate::vta::timing::TimingModel;
+
+    fn cfg() -> VtaConfig {
+        VtaConfig::table1_zynq7000()
+    }
+
+    /// Reference GEMM on the padded DRAM layout, with the store's int8
+    /// saturation applied. Layout contract (see `GemmShape::blocks`):
+    /// `inp` rows are (m, k-block) fragments, `wgt` tiles are (n-block,
+    /// k-block), `out` rows are (m, n-block).
+    fn ref_gemm(shape: GemmShape, tiling: GemmTiling, cfg: &VtaConfig, dram: &DramImage) -> Vec<i8> {
+        let blk = cfg.block as u64;
+        let (mr, kb, nb) = shape.blocks(cfg);
+        let m_p = mr.div_ceil(tiling.tm) * tiling.tm;
+        let kb_p = kb.div_ceil(tiling.tk) * tiling.tk;
+        let nb_p = nb.div_ceil(tiling.tn) * tiling.tn;
+        let (k, n) = (kb_p * blk, nb_p * blk);
+        let mut out = vec![0i8; (m_p * nb_p * blk) as usize];
+        for i in 0..m_p {
+            for j in 0..n {
+                let mut acc: i32 = 0;
+                for kk in 0..k {
+                    // inp row = i·kb_p + kk/blk, lane kk%blk
+                    let row = i * kb_p + kk / blk;
+                    let a = dram.inp[(row * blk + (kk % blk)) as usize] as i32;
+                    // wgt tile = (j/blk)·kb_p + kk/blk, elem (j%blk, kk%blk)
+                    let tile = (j / blk) * kb_p + kk / blk;
+                    let w = dram.wgt
+                        [(tile * blk * blk + (j % blk) * blk + (kk % blk)) as usize]
+                        as i32;
+                    acc = acc.wrapping_add(a * w);
+                }
+                // out row = i·nb_p + j/blk, lane j%blk
+                let orow = i * nb_p + j / blk;
+                out[(orow * blk + (j % blk)) as usize] = acc.clamp(-128, 127) as i8;
+            }
+        }
+        out
+    }
+
+    fn run_case(shape: GemmShape, tiling: GemmTiling, seed: u64) -> Result<(), String> {
+        let cfg = cfg();
+        let prog = lower_gemm("t", shape, tiling, &cfg).map_err(|e| e.to_string())?;
+        let mut rng = Rng::new(seed);
+        // small values keep accumulators inside int8 so saturation is rare
+        let mut dram = DramImage {
+            inp: (0..prog.dram.inp_len).map(|_| rng.range_i64(-4, 5) as i8).collect(),
+            wgt: (0..prog.dram.wgt_len).map(|_| rng.range_i64(-4, 5) as i8).collect(),
+            acc: vec![],
+            out: vec![0; prog.dram.out_len],
+        };
+        let want = ref_gemm(shape, tiling, &cfg, &dram);
+        fsim::run(&cfg, &prog, &mut dram).map_err(|e| e.to_string())?;
+        if dram.out != want {
+            let idx = dram.out.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "mismatch at {idx}: got {} want {} (shape {shape:?}, tiling {tiling:?})",
+                dram.out[idx], want[idx]
+            ));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn lowered_gemm_matches_reference_exact_tiles() {
+        run_case(
+            GemmShape { m: 64, k: 64, n: 64 },
+            GemmTiling { tm: 2, tk: 2, tn: 2 },
+            1,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn lowered_gemm_matches_reference_ragged() {
+        // 33×70×25 → blocks 3×5×2, tiling 2×2×2 forces padding everywhere
+        run_case(
+            GemmShape { m: 33, k: 70, n: 25 },
+            GemmTiling { tm: 2, tk: 2, tn: 2 },
+            2,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn lowered_gemm_single_chunk() {
+        run_case(
+            GemmShape { m: 16, k: 32, n: 16 },
+            GemmTiling { tm: 1, tk: 2, tn: 1 },
+            3,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn prop_lowered_gemm_matches_reference() {
+        forall("lower_gemm vs reference", 25, |rng| {
+            let shape = GemmShape {
+                m: rng.range(1, 80) as u64,
+                k: rng.range(1, 100) as u64,
+                n: rng.range(1, 64) as u64,
+            };
+            let cands =
+                super::super::tiling::candidate_tilings(&cfg(), 6, 7, 4);
+            let tiling = *rng.choice(&cands);
+            run_case(shape, tiling, rng.next_u64())
+        });
+    }
+
+    #[test]
+    fn traffic_accounting_matches_tiling_model() {
+        let cfg = cfg();
+        let shape = GemmShape { m: 784, k: 1152, n: 128 };
+        let tiling = GemmTiling { tm: 16, tk: 4, tn: 8 };
+        let prog = lower_gemm("t", shape, tiling, &cfg).unwrap();
+        let (mb, kb, nb) = shape.blocks(&cfg);
+        let mb_p = mb.div_ceil(tiling.tm) * tiling.tm;
+        let kb_p = kb.div_ceil(tiling.tk) * tiling.tk;
+        let nb_p = nb.div_ceil(tiling.tn) * tiling.tn;
+        let want = tiling.traffic_bytes(&cfg, mb_p, kb_p, nb_p);
+        assert_eq!(prog.dram_traffic_bytes(&cfg), want);
+    }
+
+    #[test]
+    fn gemm_cycles_match_mac_count() {
+        let cfg = cfg();
+        let shape = GemmShape { m: 64, k: 64, n: 64 };
+        let tiling = GemmTiling { tm: 4, tk: 4, tn: 4 };
+        let prog = lower_gemm("t", shape, tiling, &cfg).unwrap();
+        // MAC uop-cycles = m·kb·nb (padded, all divisible here);
+        // the reset pass adds m·nb more
+        let (mr, kb, nb) = shape.blocks(&cfg);
+        assert_eq!(prog.gemm_cycles(), mr * kb * nb + mr * nb);
+        // one uop-cycle = block² MACs: total ≈ shape.macs()/block²
+        assert_eq!(mr * kb * nb, shape.macs() / (cfg.block as u64).pow(2));
+    }
+
+    #[test]
+    fn pipelining_overlaps_in_timing() {
+        let cfg = cfg();
+        let model = TimingModel::new(
+            cfg.clone(),
+            BoardProfile::zynq7020(),
+            Calibration { driver_overhead_us: 0.0, ..Default::default() },
+        );
+        let shape = GemmShape { m: 256, k: 512, n: 128 };
+        let tiling = GemmTiling { tm: 8, tk: 4, tn: 8 };
+        let prog = lower_gemm("t", shape, tiling, &cfg).unwrap();
+        let r = model.price(&prog).unwrap();
+        let serial = r.load_busy + r.compute_busy + r.store_busy;
+        assert!(
+            (r.total_cycles as f64) < 0.8 * serial as f64,
+            "overlap too weak: makespan {} vs serial {serial}",
+            r.total_cycles
+        );
+    }
+
+    #[test]
+    fn alu_pass_validates_and_prices() {
+        let cfg = cfg();
+        // requantize sequence: add bias, shr, clip min/max
+        let prog = lower_alu_pass(
+            "rq",
+            200_704,
+            &[(AluOp::Add, 1024), (AluOp::Shr, 11), (AluOp::Min, 127), (AluOp::Max, -128)],
+            &cfg,
+        )
+        .unwrap();
+        assert!(prog.alu_cycles() > 0);
+        let model = TimingModel::new(
+            cfg,
+            BoardProfile::zynq7020(),
+            Calibration { driver_overhead_us: 0.0, ..Default::default() },
+        );
+        let r = model.price(&prog).unwrap();
+        assert!(r.total_cycles > 0);
+    }
+
+    #[test]
+    fn alu_pass_rejects_empty_ops() {
+        assert!(lower_alu_pass("x", 100, &[], &cfg()).is_err());
+    }
+
+    #[test]
+    fn infeasible_tiling_rejected() {
+        let shape = GemmShape { m: 64, k: 64, n: 64 };
+        let bad = GemmTiling { tm: 1000, tk: 1, tn: 1 };
+        assert!(lower_gemm("t", shape, bad, &cfg()).is_err());
+    }
+}

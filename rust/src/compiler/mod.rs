@@ -1,0 +1,17 @@
+//! The TVM-role substrate: lowering graph operators onto the VTA ISA.
+//!
+//! * [`tiling`]   — blocked GEMM tilings under the Table-I buffer budget
+//! * [`lower`]    — tiling → instruction stream with virtual-thread
+//!                  dependency tokens (double-buffered load/compute)
+//! * [`autotune`] — AutoTVM-analog: enumerate tilings, price each with the
+//!                  cycle model, keep the best (the paper's single-FPGA
+//!                  anchor is an "optimized micro-kernel generated through
+//!                  AutoTVM schedule exploration")
+
+pub mod autotune;
+pub mod lower;
+pub mod tiling;
+
+pub use autotune::{autotune_gemm, TunedGemm};
+pub use lower::{lower_alu_pass, lower_gemm, GemmShape};
+pub use tiling::{candidate_tilings, GemmTiling};

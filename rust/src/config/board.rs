@@ -1,0 +1,226 @@
+//! FPGA SoC board profiles for the two cluster variants of §II-A.
+//!
+//! * **Zynq-7020** (PYNQ-Z1 / ZedBoard): 13,300 logic slices, 630 KB BRAM,
+//!   220 DSP slices; PS = 650 MHz dual-core Cortex-A9, DDR3.
+//! * **Zynq UltraScale+ MPSoC**: larger PL, PS = 1.5 GHz quad-core
+//!   Cortex-A53 (+ R5, Mali GPU), DDR4.
+//!
+//! The profile carries everything the timing model needs: PL resources
+//! (to check a [`VtaConfig`] fits), PS CPU speed (driver + DMA overhead
+//! scaling) and DRAM bandwidth (the memory-bound term that explains why
+//! the US+ single-node time is only ~6 % better despite a 3× clock).
+
+use super::vta::VtaConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BoardFamily {
+    Zynq7000,
+    UltraScalePlus,
+}
+
+impl BoardFamily {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BoardFamily::Zynq7000 => "zynq7000",
+            BoardFamily::UltraScalePlus => "ultrascale+",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "zynq7000" | "zynq-7000" | "zynq7020" | "zynq" => Ok(BoardFamily::Zynq7000),
+            "ultrascale+" | "ultrascale" | "zu+" | "mpsoc" => Ok(BoardFamily::UltraScalePlus),
+            other => anyhow::bail!("unknown board family '{other}'"),
+        }
+    }
+}
+
+/// Static description of one FPGA SoC board.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardProfile {
+    pub name: String,
+    pub family: BoardFamily,
+    // --- programmable logic resources
+    /// LUTs available in the PL.
+    pub luts: u64,
+    /// Flip-flops available in the PL.
+    pub ffs: u64,
+    /// Block RAM capacity in kilobits.
+    pub bram_kbits: u64,
+    /// DSP slices (each does one 8-bit MAC/cycle comfortably).
+    pub dsp_slices: u64,
+    // --- processing system
+    /// Application CPU clock in Hz.
+    pub cpu_hz: u64,
+    /// CPU core count.
+    pub cpu_cores: u32,
+    // --- memory system
+    /// Peak DRAM bandwidth in bytes/s (DDR3-1066 32-bit ≈ 4.3 GB/s for
+    /// Zynq-7020; DDR4 ≈ 19.2 GB/s for ZU+).
+    pub dram_bw_bytes_per_sec: u64,
+    // --- network
+    /// PS GEM Ethernet line rate in bits/s (1 Gb/s on both).
+    pub eth_bits_per_sec: u64,
+}
+
+impl BoardProfile {
+    /// PYNQ-Z1 / ZedBoard (Zynq-7020 APSoC). §II-A figures.
+    pub fn zynq7020() -> Self {
+        BoardProfile {
+            name: "zynq-7020".into(),
+            family: BoardFamily::Zynq7000,
+            luts: 53_200,
+            ffs: 106_400,
+            bram_kbits: 630 * 8, // 630 KB
+            dsp_slices: 220,
+            cpu_hz: 650_000_000,
+            cpu_cores: 2,
+            dram_bw_bytes_per_sec: 4_264_000_000, // DDR3-1066 × 32 bit
+            eth_bits_per_sec: 1_000_000_000,
+        }
+    }
+
+    /// Zynq UltraScale+ MPSoC (ZU3EG-class figure set).
+    pub fn zu_mpsoc() -> Self {
+        BoardProfile {
+            name: "zynq-ultrascale+".into(),
+            family: BoardFamily::UltraScalePlus,
+            luts: 154_350,
+            ffs: 308_700,
+            bram_kbits: 7_600,
+            dsp_slices: 1_728,
+            cpu_hz: 1_500_000_000,
+            cpu_cores: 4,
+            dram_bw_bytes_per_sec: 19_200_000_000, // DDR4-2400 × 64 bit
+            eth_bits_per_sec: 1_000_000_000,
+        }
+    }
+
+    pub fn for_family(family: BoardFamily) -> Self {
+        match family {
+            BoardFamily::Zynq7000 => Self::zynq7020(),
+            BoardFamily::UltraScalePlus => Self::zu_mpsoc(),
+        }
+    }
+
+    /// The Table-I clock for this board family (100 / 300 MHz).
+    pub fn default_vta(&self) -> VtaConfig {
+        match self.family {
+            BoardFamily::Zynq7000 => VtaConfig::table1_zynq7000(),
+            BoardFamily::UltraScalePlus => VtaConfig::table1_ultrascale(),
+        }
+    }
+
+    /// Rough PL resource estimate for a VTA configuration, mirroring the
+    /// published VTA resource tables: the GEMM core needs ~`block²`
+    /// MAC units (DSP-mapped at 2 int8 MACs per DSP48) plus buffers in
+    /// BRAM. Used to decide whether a bitstream would fit/close timing.
+    pub fn vta_fits(&self, cfg: &VtaConfig) -> anyhow::Result<()> {
+        let macs = cfg.macs_per_cycle();
+        let dsp_needed = macs / 2; // two int8 MACs per DSP48
+        anyhow::ensure!(
+            dsp_needed <= self.dsp_slices,
+            "VTA '{}' needs ~{dsp_needed} DSP slices, board '{}' has {}",
+            cfg.name,
+            self.name,
+            self.dsp_slices
+        );
+        let bram_needed_kbits = (cfg.input_buffer_bits
+            + cfg.weight_buffer_bits
+            + cfg.acc_buffer_bits
+            + cfg.uop_buffer_bits)
+            / 1024
+            * 2; // double-buffering
+        anyhow::ensure!(
+            bram_needed_kbits <= self.bram_kbits,
+            "VTA '{}' needs ~{bram_needed_kbits} Kb BRAM, board '{}' has {} Kb",
+            cfg.name,
+            self.name,
+            self.bram_kbits
+        );
+        // timing closure: paper found 100 MHz limit on Zynq-7000 and
+        // 350 MHz on US+ for BLOCK=16; BLOCK=32 closed at 200 MHz.
+        let fmax = self.timing_fmax_hz(cfg.block);
+        anyhow::ensure!(
+            cfg.clock_hz <= fmax,
+            "VTA '{}' at {} MHz exceeds {} timing closure limit (~{} MHz for block {})",
+            cfg.name,
+            cfg.clock_hz / 1_000_000,
+            self.name,
+            fmax / 1_000_000,
+            cfg.block
+        );
+        Ok(())
+    }
+
+    /// Empirical timing-closure limit per family and GEMM block size
+    /// (paper §III: Zynq could not close beyond 100 MHz; §IV: US+ closed
+    /// at 350 MHz with BLOCK=16 and 200 MHz with BLOCK=32).
+    pub fn timing_fmax_hz(&self, block: u32) -> u64 {
+        match (self.family, block) {
+            (BoardFamily::Zynq7000, b) if b <= 16 => 100_000_000,
+            (BoardFamily::Zynq7000, _) => 50_000_000,
+            (BoardFamily::UltraScalePlus, b) if b <= 16 => 350_000_000,
+            (BoardFamily::UltraScalePlus, _) => 200_000_000,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zynq_profile_matches_paper_text() {
+        let b = BoardProfile::zynq7020();
+        assert_eq!(b.dsp_slices, 220);
+        assert_eq!(b.cpu_hz, 650_000_000);
+        assert_eq!(b.cpu_cores, 2);
+        assert_eq!(b.eth_bits_per_sec, 1_000_000_000);
+    }
+
+    #[test]
+    fn table1_fits_both_boards() {
+        BoardProfile::zynq7020().vta_fits(&VtaConfig::table1_zynq7000()).unwrap();
+        BoardProfile::zu_mpsoc().vta_fits(&VtaConfig::table1_ultrascale()).unwrap();
+        BoardProfile::zu_mpsoc().vta_fits(&VtaConfig::ultrascale_350mhz()).unwrap();
+        BoardProfile::zu_mpsoc().vta_fits(&VtaConfig::big_config_200mhz()).unwrap();
+    }
+
+    #[test]
+    fn big_config_rejected_on_zynq() {
+        // BLOCK=32 needs 512 DSP slices — more than the 7020's 220.
+        let err = BoardProfile::zynq7020()
+            .vta_fits(&VtaConfig::big_config_200mhz())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("DSP"), "{err}");
+    }
+
+    #[test]
+    fn overclock_rejected_by_timing_model() {
+        let mut cfg = VtaConfig::table1_zynq7000();
+        cfg.clock_hz = 200_000_000; // paper: Zynq-7000 could not close beyond 100
+        assert!(BoardProfile::zynq7020().vta_fits(&cfg).is_err());
+        let mut cfg = VtaConfig::table1_ultrascale();
+        cfg.clock_hz = 400_000_000; // §IV: 350 was the limit
+        assert!(BoardProfile::zu_mpsoc().vta_fits(&cfg).is_err());
+    }
+
+    #[test]
+    fn family_parse() {
+        assert_eq!(BoardFamily::parse("zynq").unwrap(), BoardFamily::Zynq7000);
+        assert_eq!(BoardFamily::parse("ZU+").unwrap(), BoardFamily::UltraScalePlus);
+        assert!(BoardFamily::parse("virtex").is_err());
+    }
+
+    #[test]
+    fn usplus_has_more_of_everything() {
+        let z = BoardProfile::zynq7020();
+        let u = BoardProfile::zu_mpsoc();
+        assert!(u.luts > z.luts);
+        assert!(u.dsp_slices > z.dsp_slices);
+        assert!(u.cpu_hz > z.cpu_hz);
+        assert!(u.dram_bw_bytes_per_sec > z.dram_bw_bytes_per_sec);
+    }
+}

@@ -1,0 +1,139 @@
+//! Cluster topology: N FPGA boards + a store-and-forward Ethernet switch
+//! + a master host PC (§II-A/§II-C).
+//!
+//! The paper's two deployments are `zynq_stack(n)` (up to 12 Zynq-7020)
+//! and `ultrascale_stack(n)` (up to 5 ZU+). The master orchestrates; the
+//! boards are accelerator nodes. FPGA↔FPGA traffic also traverses the
+//! switch (the paper notes direct FPGA-FPGA channels were not fully
+//! implemented — all transfers are PS-Ethernet MPI messages, which is
+//! exactly what makes the N=2..6 AI-core-assignment rows slow).
+
+use super::board::{BoardFamily, BoardProfile};
+use super::vta::VtaConfig;
+
+/// Ethernet switch model parameters (standard 1 Gb/s Cisco switch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwitchConfig {
+    /// Per-port line rate, bits/s.
+    pub port_bits_per_sec: u64,
+    /// Store-and-forward latency per frame (switching + queuing floor).
+    pub forward_latency_ns: u64,
+    /// Number of ports (master + nodes must fit).
+    pub ports: u32,
+}
+
+impl Default for SwitchConfig {
+    fn default() -> Self {
+        SwitchConfig {
+            port_bits_per_sec: 1_000_000_000,
+            forward_latency_ns: 10_000, // ~10 µs store-and-forward + queue floor
+            ports: 16,
+        }
+    }
+}
+
+/// Full cluster description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub name: String,
+    /// Accelerator boards (index = node id; the master is not in here).
+    pub boards: Vec<BoardProfile>,
+    /// VTA bitstream configuration per node (same for all in the paper).
+    pub vta: VtaConfig,
+    pub switch: SwitchConfig,
+    /// Master host NIC line rate, bits/s (1 Gb/s RJ-45).
+    pub master_bits_per_sec: u64,
+}
+
+impl ClusterConfig {
+    /// Homogeneous cluster of `n` boards of one family with its Table-I VTA.
+    pub fn homogeneous(family: BoardFamily, n: usize) -> Self {
+        let board = BoardProfile::for_family(family);
+        let vta = board.default_vta();
+        ClusterConfig {
+            name: format!("{}-x{}", board.name, n),
+            boards: vec![board; n],
+            vta,
+            switch: SwitchConfig::default(),
+            master_bits_per_sec: 1_000_000_000,
+        }
+    }
+
+    /// The paper's compute-lite stack: up to 12 Zynq-7020.
+    pub fn zynq_stack(n: usize) -> Self {
+        assert!((1..=12).contains(&n), "paper evaluates 1..=12 Zynq nodes");
+        Self::homogeneous(BoardFamily::Zynq7000, n)
+    }
+
+    /// The paper's UltraScale+ stack: up to 5 boards.
+    pub fn ultrascale_stack(n: usize) -> Self {
+        assert!((1..=5).contains(&n), "paper evaluates 1..=5 US+ nodes");
+        Self::homogeneous(BoardFamily::UltraScalePlus, n)
+    }
+
+    /// Replace the VTA configuration on every node (§IV variants).
+    pub fn with_vta(mut self, vta: VtaConfig) -> Self {
+        self.vta = vta;
+        self
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.boards.len()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.boards.is_empty(), "cluster has no boards");
+        anyhow::ensure!(
+            self.boards.len() + 1 <= self.switch.ports as usize,
+            "switch has {} ports but cluster needs {} (nodes + master)",
+            self.switch.ports,
+            self.boards.len() + 1
+        );
+        self.vta.validate()?;
+        for b in &self.boards {
+            b.vta_fits(&self.vta)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_stacks_validate() {
+        for n in 1..=12 {
+            ClusterConfig::zynq_stack(n).validate().unwrap();
+        }
+        for n in 1..=5 {
+            ClusterConfig::ultrascale_stack(n).validate().unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=12")]
+    fn zynq_stack_bounds() {
+        ClusterConfig::zynq_stack(13);
+    }
+
+    #[test]
+    fn with_vta_override() {
+        let c = ClusterConfig::ultrascale_stack(5).with_vta(VtaConfig::big_config_200mhz());
+        assert_eq!(c.vta.block, 32);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn big_config_on_zynq_is_invalid() {
+        let c = ClusterConfig::zynq_stack(4).with_vta(VtaConfig::big_config_200mhz());
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn too_many_nodes_for_switch() {
+        let mut c = ClusterConfig::zynq_stack(12);
+        c.switch.ports = 8;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! All paper knobs in one place.
+//!
+//! * [`vta`]         — VTA accelerator parameters (Table I + §IV variants)
+//! * [`board`]       — FPGA SoC board profiles (Zynq-7020, ZU+ MPSoC)
+//! * [`cluster`]     — cluster topology (boards + Ethernet switch + master)
+//! * [`calibration`] — fitted cost-model constants with provenance
+
+pub mod board;
+pub mod calibration;
+pub mod cluster;
+pub mod vta;
+
+pub use board::{BoardFamily, BoardProfile};
+pub use calibration::Calibration;
+pub use cluster::ClusterConfig;
+pub use vta::VtaConfig;

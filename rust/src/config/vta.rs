@@ -1,0 +1,296 @@
+//! VTA accelerator configuration — the paper's Table I plus the §IV
+//! scaling variants.
+//!
+//! | PARAMETER                     | Table I value |
+//! |-------------------------------|---------------|
+//! | CLOCK_FREQUENCY (Zynq-7000)   | 100 MHz       |
+//! | CLOCK_FREQUENCY (UltraScale+) | 300 MHz       |
+//! | INPUT_WIDTH / WEIGHT_WIDTH    | 8 bit         |
+//! | ACCUMULATOR_WIDTH             | 32 bit        |
+//! | BATCH_SIZE                    | 1             |
+//! | BLOCK_SIZE                    | 16            |
+//! | MICRO_OP_BUFFER_SIZE          | 32 Kb         |
+//! | INPUT_BUFFER_SIZE             | 32 Kb         |
+//! | WEIGHT_BUFFER_SIZE            | 256 Kb        |
+//! | ACCUMULATOR_BUFFER_SIZE       | 128 Kb        |
+//!
+//! §IV additionally evaluates: (a) UltraScale+ at 350 MHz (timing-closure
+//! limit), ≈5.7 % faster; (b) BLOCK=32 with doubled buffers at 200 MHz,
+//! ≈43.86 % faster. Both are constructors here and rows in the
+//! `discussion_scaling` bench.
+
+use crate::util::json::{self, Json};
+
+/// Buffer sizes in Table I are written in **kilobits** (Kb).
+const KBIT: u64 = 1024;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct VtaConfig {
+    /// Human-readable variant name (appears in bench output).
+    pub name: String,
+    /// PL clock in Hz (Table I: 100 MHz Zynq / 300 MHz US+).
+    pub clock_hz: u64,
+    /// Input operand width in bits (8).
+    pub input_width: u32,
+    /// Weight operand width in bits (8).
+    pub weight_width: u32,
+    /// Accumulator width in bits (32).
+    pub acc_width: u32,
+    /// GEMM batch dimension (1).
+    pub batch: u32,
+    /// GEMM block dimension: the core computes `batch × block × block`
+    /// MACs per cycle when fully fed (16; 32 in the §IV big config).
+    pub block: u32,
+    /// Micro-op buffer capacity in bits.
+    pub uop_buffer_bits: u64,
+    /// Input SRAM buffer capacity in bits.
+    pub input_buffer_bits: u64,
+    /// Weight SRAM buffer capacity in bits.
+    pub weight_buffer_bits: u64,
+    /// Accumulator SRAM buffer capacity in bits.
+    pub acc_buffer_bits: u64,
+}
+
+impl VtaConfig {
+    /// Table I on the Zynq-7000 stack (100 MHz).
+    pub fn table1_zynq7000() -> Self {
+        VtaConfig {
+            name: "table1-zynq7000".into(),
+            clock_hz: 100_000_000,
+            input_width: 8,
+            weight_width: 8,
+            acc_width: 32,
+            batch: 1,
+            block: 16,
+            uop_buffer_bits: 32 * KBIT,
+            input_buffer_bits: 32 * KBIT,
+            weight_buffer_bits: 256 * KBIT,
+            acc_buffer_bits: 128 * KBIT,
+        }
+    }
+
+    /// Table I on the UltraScale+ stack (300 MHz).
+    pub fn table1_ultrascale() -> Self {
+        VtaConfig {
+            name: "table1-ultrascale".into(),
+            clock_hz: 300_000_000,
+            ..Self::table1_zynq7000()
+        }
+    }
+
+    /// §IV: UltraScale+ pushed to the 350 MHz timing-closure limit.
+    pub fn ultrascale_350mhz() -> Self {
+        VtaConfig {
+            name: "ultrascale-350mhz".into(),
+            clock_hz: 350_000_000,
+            ..Self::table1_zynq7000()
+        }
+    }
+
+    /// §IV big config: BLOCK=32, uop+input 64 Kb, weight 512 Kb,
+    /// accumulator 256 Kb, clock reduced to 200 MHz for hold-slack.
+    pub fn big_config_200mhz() -> Self {
+        VtaConfig {
+            name: "big-200mhz".into(),
+            clock_hz: 200_000_000,
+            block: 32,
+            uop_buffer_bits: 64 * KBIT,
+            input_buffer_bits: 64 * KBIT,
+            weight_buffer_bits: 512 * KBIT,
+            acc_buffer_bits: 256 * KBIT,
+            ..Self::table1_zynq7000()
+        }
+    }
+
+    /// Same geometry as Table I at an arbitrary clock (clock sweeps).
+    pub fn table1_at_clock(clock_hz: u64) -> Self {
+        VtaConfig {
+            name: format!("table1-{}mhz", clock_hz / 1_000_000),
+            clock_hz,
+            ..Self::table1_zynq7000()
+        }
+    }
+
+    // ----- derived quantities -------------------------------------------
+
+    /// Peak MACs per cycle = batch × block × block (GEMM core width).
+    pub fn macs_per_cycle(&self) -> u64 {
+        self.batch as u64 * self.block as u64 * self.block as u64
+    }
+
+    /// Peak GMAC/s at the configured clock.
+    pub fn peak_gmacs(&self) -> f64 {
+        self.macs_per_cycle() as f64 * self.clock_hz as f64 / 1e9
+    }
+
+    /// Input buffer capacity in **elements** (int8).
+    pub fn input_buffer_elems(&self) -> u64 {
+        self.input_buffer_bits / self.input_width as u64
+    }
+
+    /// Weight buffer capacity in elements (int8).
+    pub fn weight_buffer_elems(&self) -> u64 {
+        self.weight_buffer_bits / self.weight_width as u64
+    }
+
+    /// Accumulator buffer capacity in elements (int32).
+    pub fn acc_buffer_elems(&self) -> u64 {
+        self.acc_buffer_bits / self.acc_width as u64
+    }
+
+    /// How many (block × block) weight tiles fit in the weight buffer.
+    pub fn weight_tiles_resident(&self) -> u64 {
+        self.weight_buffer_elems() / (self.block as u64 * self.block as u64)
+    }
+
+    /// How many (batch × block) input rows fit in the input buffer.
+    pub fn input_rows_resident(&self) -> u64 {
+        self.input_buffer_elems() / self.block as u64
+    }
+
+    /// How many (batch × block) accumulator rows fit.
+    pub fn acc_rows_resident(&self) -> u64 {
+        self.acc_buffer_elems() / self.block as u64
+    }
+
+    /// Validate internal consistency (used on config load).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.clock_hz >= 10_000_000, "clock below 10 MHz is not plausible");
+        anyhow::ensure!(self.clock_hz <= 1_000_000_000, "PL clock above 1 GHz is not plausible");
+        anyhow::ensure!(self.block.is_power_of_two(), "GEMM block must be a power of two");
+        anyhow::ensure!(self.batch >= 1, "batch must be ≥ 1");
+        anyhow::ensure!(
+            self.input_width == 8 && self.weight_width == 8,
+            "only int8 operands supported (paper Table I)"
+        );
+        anyhow::ensure!(self.acc_width == 32, "only int32 accumulation supported");
+        // one weight tile must fit in the weight buffer
+        anyhow::ensure!(
+            self.weight_tiles_resident() >= 1,
+            "weight buffer smaller than one {0}×{0} tile",
+            self.block
+        );
+        anyhow::ensure!(self.input_rows_resident() >= 1, "input buffer < one row");
+        anyhow::ensure!(self.acc_rows_resident() >= 1, "acc buffer < one row");
+        Ok(())
+    }
+
+    // ----- (de)serialization --------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::str_(&self.name)),
+            ("clock_hz", json::int(self.clock_hz as i64)),
+            ("input_width", json::int(self.input_width as i64)),
+            ("weight_width", json::int(self.weight_width as i64)),
+            ("acc_width", json::int(self.acc_width as i64)),
+            ("batch", json::int(self.batch as i64)),
+            ("block", json::int(self.block as i64)),
+            ("uop_buffer_bits", json::int(self.uop_buffer_bits as i64)),
+            ("input_buffer_bits", json::int(self.input_buffer_bits as i64)),
+            ("weight_buffer_bits", json::int(self.weight_buffer_bits as i64)),
+            ("acc_buffer_bits", json::int(self.acc_buffer_bits as i64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let cfg = VtaConfig {
+            name: j.get_str("name")?.to_string(),
+            clock_hz: j.get_u64("clock_hz")?,
+            input_width: j.get_u64("input_width")? as u32,
+            weight_width: j.get_u64("weight_width")? as u32,
+            acc_width: j.get_u64("acc_width")? as u32,
+            batch: j.get_u64("batch")? as u32,
+            block: j.get_u64("block")? as u32,
+            uop_buffer_bits: j.get_u64("uop_buffer_bits")?,
+            input_buffer_bits: j.get_u64("input_buffer_bits")?,
+            weight_buffer_bits: j.get_u64("weight_buffer_bits")?,
+            acc_buffer_bits: j.get_u64("acc_buffer_bits")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values_match_paper() {
+        let c = VtaConfig::table1_zynq7000();
+        assert_eq!(c.clock_hz, 100_000_000);
+        assert_eq!(c.block, 16);
+        assert_eq!(c.input_buffer_bits, 32 * 1024);
+        assert_eq!(c.weight_buffer_bits, 256 * 1024);
+        assert_eq!(c.acc_buffer_bits, 128 * 1024);
+        c.validate().unwrap();
+        let u = VtaConfig::table1_ultrascale();
+        assert_eq!(u.clock_hz, 300_000_000);
+        assert_eq!(u.block, 16);
+        u.validate().unwrap();
+    }
+
+    #[test]
+    fn macs_per_cycle() {
+        assert_eq!(VtaConfig::table1_zynq7000().macs_per_cycle(), 256);
+        assert_eq!(VtaConfig::big_config_200mhz().macs_per_cycle(), 1024);
+    }
+
+    #[test]
+    fn peak_gmacs() {
+        // 256 MAC/cycle × 100 MHz = 25.6 GMAC/s
+        assert!((VtaConfig::table1_zynq7000().peak_gmacs() - 25.6).abs() < 1e-9);
+        // big config: 1024 × 200 MHz = 204.8 GMAC/s
+        assert!((VtaConfig::big_config_200mhz().peak_gmacs() - 204.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buffer_capacities() {
+        let c = VtaConfig::table1_zynq7000();
+        // 256 Kb weights / 8 bit = 32768 int8 elements = 128 16×16 tiles
+        assert_eq!(c.weight_buffer_elems(), 32 * 1024);
+        assert_eq!(c.weight_tiles_resident(), 128);
+        // 32 Kb input / 8 = 4096 elements = 256 rows of 16
+        assert_eq!(c.input_rows_resident(), 256);
+        // 128 Kb acc / 32 = 4096 elements = 256 rows of 16
+        assert_eq!(c.acc_rows_resident(), 256);
+    }
+
+    #[test]
+    fn big_config_buffers_doubled() {
+        let c = VtaConfig::big_config_200mhz();
+        assert_eq!(c.weight_buffer_bits, 512 * 1024);
+        assert_eq!(c.uop_buffer_bits, 64 * 1024);
+        assert_eq!(c.acc_buffer_bits, 256 * 1024);
+        assert_eq!(c.clock_hz, 200_000_000);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [
+            VtaConfig::table1_zynq7000(),
+            VtaConfig::table1_ultrascale(),
+            VtaConfig::ultrascale_350mhz(),
+            VtaConfig::big_config_200mhz(),
+        ] {
+            let j = cfg.to_json();
+            let back = VtaConfig::from_json(&j).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut c = VtaConfig::table1_zynq7000();
+        c.block = 12;
+        assert!(c.validate().is_err());
+        let mut c = VtaConfig::table1_zynq7000();
+        c.weight_buffer_bits = 8; // smaller than one tile
+        assert!(c.validate().is_err());
+        let mut c = VtaConfig::table1_zynq7000();
+        c.clock_hz = 5_000_000;
+        assert!(c.validate().is_err());
+    }
+}

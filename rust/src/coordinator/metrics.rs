@@ -1,0 +1,91 @@
+//! Serving metrics: latency distribution and throughput.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    latencies_ms: Summary,
+    completed: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        self.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        self.completed += 1;
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn latency_ms(&self) -> &Summary {
+        &self.latencies_ms
+    }
+
+    /// Wall-clock span from start() to the last completion.
+    pub fn elapsed(&self) -> Duration {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) => f.duration_since(s),
+            _ => Duration::ZERO,
+        }
+    }
+
+    /// Images per second over the measured span.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            self.completed as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        if self.completed == 0 {
+            return "no completions".to_string();
+        }
+        format!(
+            "{} images | {:.2} img/s | latency {}",
+            self.completed,
+            self.throughput(),
+            self.latencies_ms.display("ms"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::new();
+        m.start();
+        for i in 0..10 {
+            m.record(Duration::from_millis(10 + i));
+        }
+        assert_eq!(m.completed(), 10);
+        assert!(m.latency_ms().mean() > 9.0);
+        assert!(m.throughput() > 0.0);
+        assert!(m.report().contains("10 images"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.report(), "no completions");
+    }
+}

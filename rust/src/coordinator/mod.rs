@@ -1,0 +1,17 @@
+//! The serving coordinator: the master-host role of §II-C, deployable.
+//!
+//! Turns an [`crate::sched::ExecutionPlan`] into a running pipeline of
+//! worker threads, each owning a private PJRT engine with its stage's
+//! compiled segments and weights (a real FPGA node owns its bitstream
+//! the same way). Images stream through stage channels; data-parallel
+//! replicas are fed round-robin — the scatter/gather and pipeline
+//! dataflows of the paper, executing the *actual* AOT artifacts.
+//!
+//! * [`service`] — worker topology, submission, collection
+//! * [`metrics`] — latency/throughput accounting
+
+pub mod metrics;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use service::{Coordinator, ServingReport};

@@ -1,0 +1,291 @@
+//! Worker topology and request flow.
+//!
+//! ```text
+//!   submit() ──► stage-0 replicas ──► stage-1 replicas ──► … ──► collector
+//!                 (round-robin)         (round-robin)
+//! ```
+//!
+//! Every replica is a thread with a private PJRT [`Engine`] that compiles
+//! its stage's segment artifacts once at startup. Channels carry whole
+//! activations (the Ethernet role); the collector thread stamps
+//! completion times. Only `DataParallel` plans are servable on the real
+//! artifacts — `Spatial` stages split single-image work across nodes,
+//! which needs resharded weights the exporter doesn't produce (the
+//! timing simulator covers those; see DESIGN.md §5).
+
+use super::metrics::Metrics;
+use crate::runtime::{Engine, Manifest, TensorData};
+use crate::sched::{ExecutionPlan, SplitMode};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+struct Job {
+    id: u64,
+    tensor: TensorData,
+    submitted: Instant,
+}
+
+enum StageMsg {
+    Work(Job),
+    Shutdown,
+}
+
+struct Completion {
+    id: u64,
+    logits: TensorData,
+    submitted: Instant,
+}
+
+/// A running serving pipeline.
+pub struct Coordinator {
+    entry: Vec<Sender<StageMsg>>, // stage-0 replica channels
+    all_senders: Vec<Sender<StageMsg>>, // for shutdown
+    results: Receiver<Completion>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    rr: AtomicU64,
+    input_shape: Vec<usize>,
+}
+
+/// Summary of a served batch.
+#[derive(Debug)]
+pub struct ServingReport {
+    pub images: u64,
+    pub throughput_img_per_sec: f64,
+    pub mean_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    pub wall_ms: f64,
+}
+
+impl Coordinator {
+    /// Build the topology for a plan over the artifacts at `dir`.
+    /// `input_hw` selects the exported variant (224 paper / 32 tiny).
+    /// Serves the pallas-variant artifacts (correctness reference); use
+    /// [`Coordinator::start_fast`] for the serving-optimized variant.
+    pub fn start(dir: PathBuf, plan: &ExecutionPlan, input_hw: u64) -> anyhow::Result<Self> {
+        Self::start_variant(dir, plan, input_hw, false)
+    }
+
+    /// Like [`Coordinator::start`] but with the `fast_` (ref-impl) HLO
+    /// artifacts — identical numerics, no interpret-mode overhead.
+    pub fn start_fast(dir: PathBuf, plan: &ExecutionPlan, input_hw: u64) -> anyhow::Result<Self> {
+        Self::start_variant(dir, plan, input_hw, true)
+    }
+
+    fn start_variant(
+        dir: PathBuf,
+        plan: &ExecutionPlan,
+        input_hw: u64,
+        fast: bool,
+    ) -> anyhow::Result<Self> {
+        plan.validate()?;
+        anyhow::ensure!(
+            plan.stages.iter().all(|s| s.split == SplitMode::DataParallel),
+            "only DataParallel plans are servable on real artifacts (got a Spatial stage)"
+        );
+        let manifest = Manifest::load(&dir)?;
+        // fail fast if the requested variant was not exported
+        anyhow::ensure!(
+            manifest.segments_variant(input_hw, fast).len() == 10,
+            "artifacts at {} lack the {} variant @{input_hw} (re-run `make artifacts`)",
+            dir.display(),
+            if fast { "fast" } else { "pallas" }
+        );
+        let variant = if fast { "fast_" } else { "" };
+        let tag = match input_hw {
+            224 => variant.to_string(),
+            32 => format!("{variant}tiny_"),
+            other => anyhow::bail!("no artifacts exported for input_hw={other}"),
+        };
+        let input_shape = vec![1usize, input_hw as usize, input_hw as usize, 3];
+
+        // build stages back-to-front so each worker knows its successors
+        let (done_tx, done_rx) = channel::<Completion>();
+        let mut next_stage_txs: Option<Arc<Vec<Sender<StageMsg>>>> = None;
+        let mut workers = Vec::new();
+        let mut all_senders = Vec::new();
+        let mut entry = Vec::new();
+
+        for (si, stage) in plan.stages.iter().enumerate().rev() {
+            let artifact_names: Vec<String> = stage
+                .segments
+                .iter()
+                .map(|seg| format!("resnet18_{tag}seg_{seg}"))
+                .collect();
+            let mut this_stage_txs = Vec::new();
+            for replica in 0..stage.replicas.len() {
+                let (tx, rx) = channel::<StageMsg>();
+                this_stage_txs.push(tx.clone());
+                all_senders.push(tx);
+                let names = artifact_names.clone();
+                let dir2 = dir.clone();
+                let forward = next_stage_txs.clone();
+                let done = done_tx.clone();
+                let rr = Arc::new(AtomicU64::new(0));
+                let handle = std::thread::Builder::new()
+                    .name(format!("stage{si}-r{replica}"))
+                    .spawn(move || {
+                        stage_worker(dir2, names, rx, forward, done, rr);
+                    })
+                    .expect("spawn worker");
+                workers.push(handle);
+            }
+            if si == 0 {
+                entry = this_stage_txs.clone();
+            }
+            next_stage_txs = Some(Arc::new(this_stage_txs));
+        }
+        drop(done_tx);
+        Ok(Coordinator {
+            entry,
+            all_senders,
+            results: done_rx,
+            workers,
+            next_id: AtomicU64::new(0),
+            rr: AtomicU64::new(0),
+            input_shape,
+        })
+    }
+
+    /// Submit one image (NHWC int8). Returns its request id.
+    pub fn submit(&self, image: TensorData) -> anyhow::Result<u64> {
+        anyhow::ensure!(
+            image.shape == self.input_shape,
+            "image shape {:?}, expected {:?}",
+            image.shape,
+            self.input_shape
+        );
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let slot = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % self.entry.len();
+        self.entry[slot]
+            .send(StageMsg::Work(Job { id, tensor: image, submitted: Instant::now() }))
+            .map_err(|_| anyhow::anyhow!("pipeline closed"))?;
+        Ok(id)
+    }
+
+    /// Serve a whole batch and wait for every completion. Results come
+    /// back in submission order regardless of completion order.
+    pub fn run_batch(&self, images: Vec<TensorData>) -> anyhow::Result<(Vec<TensorData>, ServingReport)> {
+        let n = images.len();
+        let mut metrics = Metrics::new();
+        metrics.start();
+        let t0 = Instant::now();
+        let mut slot_of = std::collections::HashMap::with_capacity(n);
+        for (slot, img) in images.into_iter().enumerate() {
+            let id = self.submit(img)?;
+            slot_of.insert(id, slot);
+        }
+        let mut out: Vec<Option<TensorData>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let c = self
+                .results
+                .recv()
+                .map_err(|_| anyhow::anyhow!("pipeline closed mid-batch"))?;
+            metrics.record(c.submitted.elapsed());
+            let slot = *slot_of
+                .get(&c.id)
+                .ok_or_else(|| anyhow::anyhow!("completion for unknown request {}", c.id))?;
+            out[slot] = Some(c.logits);
+        }
+        let wall = t0.elapsed();
+        let report = ServingReport {
+            images: n as u64,
+            throughput_img_per_sec: n as f64 / wall.as_secs_f64(),
+            mean_latency_ms: metrics.latency_ms().mean(),
+            p99_latency_ms: metrics.latency_ms().p99(),
+            wall_ms: wall.as_secs_f64() * 1e3,
+        };
+        Ok((out.into_iter().map(|o| o.expect("missing completion")).collect(), report))
+    }
+
+    /// Graceful shutdown (also runs on drop).
+    pub fn shutdown(&mut self) {
+        for tx in &self.all_senders {
+            let _ = tx.send(StageMsg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn stage_worker(
+    dir: PathBuf,
+    artifact_names: Vec<String>,
+    rx: Receiver<StageMsg>,
+    forward: Option<Arc<Vec<Sender<StageMsg>>>>,
+    done: Sender<Completion>,
+    rr: Arc<AtomicU64>,
+) {
+    // engine is constructed inside the thread: PjRtClient is not Send
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("worker: manifest load failed: {e}");
+            return;
+        }
+    };
+    let mut engine = match Engine::new(manifest) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("worker: engine init failed: {e}");
+            return;
+        }
+    };
+    // compile this stage's segments up front (bitstream load)
+    for name in &artifact_names {
+        if let Err(e) = engine.load(name) {
+            eprintln!("worker: compiling {name} failed: {e}");
+            return;
+        }
+    }
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            StageMsg::Work(j) => j,
+            StageMsg::Shutdown => break,
+        };
+        match engine.run_chain(&artifact_names, &job.tensor) {
+            Ok(out) => match &forward {
+                Some(next) => {
+                    let slot = (rr.fetch_add(1, Ordering::Relaxed) as usize) % next.len();
+                    if next[slot]
+                        .send(StageMsg::Work(Job {
+                            id: job.id,
+                            tensor: out,
+                            submitted: job.submitted,
+                        }))
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+                None => {
+                    if done
+                        .send(Completion {
+                            id: job.id,
+                            logits: out,
+                            submitted: job.submitted,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+            },
+            Err(e) => {
+                eprintln!("worker: inference failed for job {}: {e}", job.id);
+                break;
+            }
+        }
+    }
+}

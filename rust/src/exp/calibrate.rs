@@ -1,0 +1,231 @@
+//! Calibration fit (E6): anchor the timing model to the paper's measured
+//! points, then let everything else be *prediction*.
+//!
+//! Stage A — compute split: grid-search `(gemm_efficiency,
+//!   dram_efficiency)` so the §IV percentages come out right on the US+
+//!   stack (350 MHz ⇒ ~5.7 %, big config ⇒ ~43.86 %). These two
+//!   percentages pin down how much of a node's time is clock-bound vs
+//!   memory-bound — exactly what the two §IV experiments measure.
+//!
+//! Stage B — absolute anchors: solve κ per family so the simulated
+//!   single-FPGA time equals 27.34 ms (Zynq) / 25.15 ms (US+). The
+//!   single-node total is `κ·C + O` (compute + overhead), linear in κ.
+//!
+//! Stage C — network constants: grid-search `(mpi_handshake_us,
+//!   dma_cpu_ns_per_byte)` against the Fig. 3 anomaly region (n=2..6,
+//!   all four strategies), where the paper says blocking MPI and PS DMA
+//!   dominate.
+//!
+//! The fitted constants and residuals are written to
+//! `artifacts/calibration.json` and EXPERIMENTS.md §Calibration.
+
+use super::paper;
+use super::runner::{single_node_decomposition, Bench};
+use crate::config::{BoardFamily, Calibration, VtaConfig};
+use crate::sched::Strategy;
+use crate::util::stats::rel_err;
+
+/// Result of the calibration fit.
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    pub calib: Calibration,
+    /// |measured − paper| / paper at the four anchor points.
+    pub residual_single_zynq: f64,
+    pub residual_single_us: f64,
+    pub residual_350: f64,
+    pub residual_big: f64,
+    /// Mean rel. error over the Fig. 3 n=2..6 block after stage C.
+    pub residual_network: f64,
+    pub log: String,
+}
+
+fn anchor(family: BoardFamily) -> f64 {
+    match family {
+        BoardFamily::Zynq7000 => paper::SINGLE_ZYNQ_MS,
+        BoardFamily::UltraScalePlus => paper::SINGLE_ULTRASCALE_MS,
+    }
+}
+
+fn table1(family: BoardFamily) -> VtaConfig {
+    match family {
+        BoardFamily::Zynq7000 => VtaConfig::table1_zynq7000(),
+        BoardFamily::UltraScalePlus => VtaConfig::table1_ultrascale(),
+    }
+}
+
+/// Solve κ for a family: with κ=1, total = C + O; κ* = (anchor − O)/C.
+/// Returns (κ, overhead_ms).
+fn solve_kappa(calib: &Calibration, family: BoardFamily) -> anyhow::Result<(f64, f64)> {
+    let mut unit = calib.clone();
+    unit.kappa_zynq = 1.0;
+    unit.kappa_ultrascale = 1.0;
+    let mut bench = Bench::new(family, table1(family), unit);
+    bench.images = 16;
+    let (compute, overhead) = single_node_decomposition(&mut bench)?;
+    Ok((((anchor(family) - overhead) / compute).max(0.001), overhead))
+}
+
+/// Predicted §IV speedups (κ_us and overhead supplied).
+fn section4_speedups(
+    calib: &Calibration,
+    kappa_us: f64,
+    overhead: f64,
+) -> anyhow::Result<(f64, f64)> {
+    let fam = BoardFamily::UltraScalePlus;
+    let mut unit = calib.clone();
+    unit.kappa_zynq = 1.0;
+    unit.kappa_ultrascale = 1.0;
+    let t = |vta: VtaConfig| -> anyhow::Result<f64> {
+        Bench::new(fam, vta, unit.clone()).graph_time_ms()
+    };
+    let base = t(VtaConfig::table1_ultrascale())?;
+    let at350 = t(VtaConfig::ultrascale_350mhz())?;
+    let big = t(VtaConfig::big_config_200mhz())?;
+    let total = |c: f64| kappa_us * c + overhead;
+    Ok((1.0 - total(at350) / total(base), 1.0 - total(big) / total(base)))
+}
+
+/// Run the fit. `quick` shrinks the grids (used by tests).
+pub fn fit(quick: bool) -> anyhow::Result<FitReport> {
+    let mut log = String::new();
+    let mut calib = Calibration::default();
+
+    // ---- stage A: efficiency split against the §IV percentages -------
+    let gemm_grid: Vec<f64> =
+        if quick { vec![0.55] } else { vec![0.35, 0.45, 0.55, 0.7, 0.85] };
+    let dram_grid: Vec<f64> =
+        if quick { vec![0.45] } else { vec![0.15, 0.25, 0.35, 0.5, 0.7, 0.9] };
+    let mut best = (f64::INFINITY, calib.gemm_efficiency, calib.dram_efficiency);
+    for &ge in &gemm_grid {
+        for &de in &dram_grid {
+            let mut c = calib.clone();
+            c.gemm_efficiency = ge;
+            c.dram_efficiency = de;
+            let (kappa_us, overhead) = solve_kappa(&c, BoardFamily::UltraScalePlus)?;
+            let (s350, sbig) = section4_speedups(&c, kappa_us, overhead)?;
+            let score = (s350 - paper::CLOCK_350_SPEEDUP).abs()
+                + (sbig - paper::BIG_CONFIG_SPEEDUP).abs();
+            if score < best.0 {
+                best = (score, ge, de);
+            }
+        }
+    }
+    calib.gemm_efficiency = best.1;
+    calib.dram_efficiency = best.2;
+    log.push_str(&format!(
+        "stage A: gemm_eff={:.2} dram_eff={:.2} (score {:.4})\n",
+        best.1, best.2, best.0
+    ));
+
+    // ---- stage B: κ anchors ------------------------------------------
+    calib.kappa_zynq = solve_kappa(&calib, BoardFamily::Zynq7000)?.0;
+    calib.kappa_ultrascale = solve_kappa(&calib, BoardFamily::UltraScalePlus)?.0;
+    log.push_str(&format!(
+        "stage B: kappa_zynq={:.4} kappa_ultrascale={:.4}\n",
+        calib.kappa_zynq, calib.kappa_ultrascale
+    ));
+
+    // ---- stage C: network + overlap constants against Fig. 3 ---------
+    // The anomaly region n=2..6 pins down the blocking costs; the tail
+    // n=9..12 pins down how much of a transfer overlaps compute.
+    let hs_grid: Vec<f64> =
+        if quick { vec![300.0] } else { vec![100.0, 250.0, 400.0, 600.0] };
+    let dma_grid: Vec<f64> = if quick { vec![2.0] } else { vec![0.5, 1.0, 2.0, 4.0] };
+    let beta_grid: Vec<f64> = if quick { vec![0.4] } else { vec![0.1, 0.25, 0.4, 0.6, 1.0] };
+    let drv_grid: Vec<f64> = if quick { vec![1500.0] } else { vec![300.0, 800.0, 1500.0] };
+    let rows: Vec<usize> = if quick { vec![2] } else { vec![2, 3, 4, 6, 9, 12] };
+    let mut bestc = (
+        f64::INFINITY,
+        calib.mpi_handshake_us,
+        calib.dma_cpu_ns_per_byte,
+        calib.ps_serial_frac,
+        calib.driver_overhead_us,
+    );
+    for &hs in &hs_grid {
+        for &dma in &dma_grid {
+            for &beta in &beta_grid {
+                for &drv in &drv_grid {
+                    let mut c = calib.clone();
+                    c.mpi_handshake_us = hs;
+                    c.dma_cpu_ns_per_byte = dma;
+                    c.ps_serial_frac = beta;
+                    c.driver_overhead_us = drv;
+                    // κ depends on overhead → re-anchor for fairness
+                    c.kappa_zynq = solve_kappa(&c, BoardFamily::Zynq7000)?.0;
+                    let mut b = Bench::zynq(c.clone());
+                    b.images = 32;
+                    let mut err = 0.0;
+                    let mut weight_sum = 0.0;
+                    for &n in &rows {
+                        for (i, s) in paper::STRATEGY_ORDER.iter().enumerate() {
+                            let got = b.cell(*s, n)?.ms_per_image;
+                            // the AI-core slowdown at n=2..3 is the
+                            // paper's headline anomaly — weight it so the
+                            // fit cannot trade it away for tail accuracy
+                            let w = if *s == crate::sched::Strategy::CoreAssign && n <= 3
+                            {
+                                4.0
+                            } else {
+                                1.0
+                            };
+                            err += w * rel_err(got, paper::FIG3_ZYNQ7000_MS[n - 1][i]);
+                            weight_sum += w;
+                        }
+                    }
+                    let score = err / weight_sum;
+                    if score < bestc.0 {
+                        bestc = (score, hs, dma, beta, drv);
+                    }
+                }
+            }
+        }
+    }
+    calib.mpi_handshake_us = bestc.1;
+    calib.dma_cpu_ns_per_byte = bestc.2;
+    calib.ps_serial_frac = bestc.3;
+    calib.driver_overhead_us = bestc.4;
+    calib.kappa_zynq = solve_kappa(&calib, BoardFamily::Zynq7000)?.0;
+    calib.kappa_ultrascale = solve_kappa(&calib, BoardFamily::UltraScalePlus)?.0;
+    log.push_str(&format!(
+        "stage C: handshake={:.0}µs dma={:.1}ns/B serial_frac={:.2} driver={:.0}µs (mean rel err {:.3})\n",
+        bestc.1, bestc.2, bestc.3, bestc.4, bestc.0
+    ));
+
+    // ---- residuals ----------------------------------------------------
+    let mut bz = Bench::zynq(calib.clone());
+    bz.images = 32;
+    let single_z = bz.cell(Strategy::ScatterGather, 1)?.ms_per_image;
+    let mut bu = Bench::ultrascale(calib.clone());
+    bu.images = 32;
+    let single_u = bu.cell(Strategy::ScatterGather, 1)?.ms_per_image;
+    let (kappa_us, overhead_us_fam) = solve_kappa(&calib, BoardFamily::UltraScalePlus)?;
+    let (s350, sbig) = section4_speedups(&calib, kappa_us, overhead_us_fam)?;
+    calib.validate()?;
+    Ok(FitReport {
+        residual_single_zynq: rel_err(single_z, paper::SINGLE_ZYNQ_MS),
+        residual_single_us: rel_err(single_u, paper::SINGLE_ULTRASCALE_MS),
+        residual_350: (s350 - paper::CLOCK_350_SPEEDUP).abs(),
+        residual_big: (sbig - paper::BIG_CONFIG_SPEEDUP).abs(),
+        residual_network: bestc.0,
+        calib,
+        log,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fit_hits_single_node_anchors() {
+        let r = fit(true).unwrap();
+        assert!(
+            r.residual_single_zynq < 0.05,
+            "zynq anchor residual {} (log: {})",
+            r.residual_single_zynq,
+            r.log
+        );
+        assert!(r.residual_single_us < 0.05, "us anchor residual {}", r.residual_single_us);
+        r.calib.validate().unwrap();
+    }
+}

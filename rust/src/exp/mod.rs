@@ -1,0 +1,13 @@
+//! Experiment runners: one per paper table/figure (see DESIGN.md §5).
+//!
+//! * [`paper`]     — the published numbers (Fig. 3/4 tables, §IV claims)
+//! * [`runner`]    — shared machinery: strategy sweep over cluster sizes
+//! * [`calibrate`] — fits the calibration constants to the anchors
+//! * [`table`]     — text-table rendering used by benches and examples
+
+pub mod calibrate;
+pub mod paper;
+pub mod runner;
+pub mod table;
+
+pub use runner::{run_cell, sweep, SweepRow};

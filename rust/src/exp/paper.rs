@@ -1,0 +1,99 @@
+//! The paper's published numbers, transcribed verbatim.
+//!
+//! Fig. 3(a): Zynq-7000 stack, execution time (ms) per image, 1–12 FPGAs.
+//! Fig. 4(a): UltraScale+ stack, 1–5 FPGAs.
+//! §IV: 350 MHz ⇒ ≈5.7 % faster; big config ⇒ ≈43.86 % faster.
+//!
+//! Column order everywhere: [Scatter-Gather, AI Core Assignment,
+//! Pipeline Scheduling, Fused Schedule].
+
+use crate::sched::Strategy;
+
+pub const STRATEGY_ORDER: [Strategy; 4] = [
+    Strategy::ScatterGather,
+    Strategy::CoreAssign,
+    Strategy::Pipeline,
+    Strategy::Fused,
+];
+
+/// Fig. 3(a): rows n=1..=12, columns in [`STRATEGY_ORDER`], milliseconds.
+pub const FIG3_ZYNQ7000_MS: [[f64; 4]; 12] = [
+    [27.34, 27.34, 27.34, 27.34],
+    [17.53, 36.85, 20.43, 19.32],
+    [12.33, 28.32, 15.59, 16.87],
+    [7.87, 20.31, 11.29, 9.13],
+    [6.44, 15.40, 9.03, 7.37],
+    [5.66, 9.63, 7.33, 6.62],
+    [4.78, 4.55, 5.93, 4.92],
+    [3.94, 3.98, 4.22, 4.01],
+    [3.17, 2.46, 3.88, 3.45],
+    [2.84, 2.11, 3.22, 2.94],
+    [2.71, 1.93, 2.94, 2.74],
+    [2.58, 1.84, 2.62, 2.66],
+];
+
+/// Fig. 4(a): rows n=1..=5, columns in [`STRATEGY_ORDER`], milliseconds.
+pub const FIG4_ULTRASCALE_MS: [[f64; 4]; 5] = [
+    [25.15, 25.15, 25.15, 25.15],
+    [16.73, 33.96, 19.03, 18.28],
+    [11.78, 26.24, 14.57, 16.04],
+    [7.42, 18.70, 10.88, 8.63],
+    [6.01, 14.14, 8.58, 6.93],
+];
+
+/// §III single-FPGA anchors (ms).
+pub const SINGLE_ZYNQ_MS: f64 = 27.34;
+pub const SINGLE_ULTRASCALE_MS: f64 = 25.15;
+
+/// §IV: UltraScale+ at 350 MHz — "a speedup of approximately 5.7 %".
+pub const CLOCK_350_SPEEDUP: f64 = 0.057;
+
+/// §IV: BLOCK=32 / doubled buffers / 200 MHz — "approximately 43.86 %".
+pub const BIG_CONFIG_SPEEDUP: f64 = 0.4386;
+
+/// Qualitative claims the reproduction must preserve (checked by the
+/// integration tests and reported in EXPERIMENTS.md):
+///
+/// 1. AI-core assignment is *slower than a single node* at n=2–3;
+/// 2. AI-core assignment becomes the best strategy at large n (paper: n≥9);
+/// 3. scatter-gather scales near-linearly early, flattening at high n;
+/// 4. the US+ single node is only ~6–8 % faster despite a 3× clock;
+/// 5. both §IV variants speed up, the big config far more than 350 MHz.
+pub const QUALITATIVE_CLAIMS: usize = 5;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_are_complete() {
+        assert_eq!(FIG3_ZYNQ7000_MS.len(), 12);
+        assert_eq!(FIG4_ULTRASCALE_MS.len(), 5);
+        for row in FIG3_ZYNQ7000_MS.iter().chain(FIG4_ULTRASCALE_MS.iter()) {
+            for &v in row {
+                assert!(v > 0.0 && v < 100.0);
+            }
+        }
+    }
+
+    #[test]
+    fn n1_rows_are_uniform() {
+        assert!(FIG3_ZYNQ7000_MS[0].iter().all(|&v| v == SINGLE_ZYNQ_MS));
+        assert!(FIG4_ULTRASCALE_MS[0].iter().all(|&v| v == SINGLE_ULTRASCALE_MS));
+    }
+
+    #[test]
+    fn paper_anomalies_present_in_transcription() {
+        // AI-core @2,3 worse than single node (the headline anomaly)
+        assert!(FIG3_ZYNQ7000_MS[1][1] > SINGLE_ZYNQ_MS);
+        assert!(FIG3_ZYNQ7000_MS[2][1] > SINGLE_ZYNQ_MS);
+        // AI-core best at n ≥ 9
+        for n in [9, 10, 11, 12] {
+            let row = FIG3_ZYNQ7000_MS[n - 1];
+            assert!(row[1] <= row[0] && row[1] <= row[2] && row[1] <= row[3], "n={n}");
+        }
+        // US+ ~6 % faster single-node
+        let gain = (SINGLE_ZYNQ_MS - SINGLE_ULTRASCALE_MS) / SINGLE_ZYNQ_MS;
+        assert!((0.05..0.11).contains(&gain));
+    }
+}

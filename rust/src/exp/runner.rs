@@ -1,0 +1,142 @@
+//! Shared experiment machinery: run one (strategy, n) cell or a whole
+//! strategy × cluster-size sweep of the paper's tables.
+
+use crate::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig, VtaConfig};
+use crate::graph::resnet::build_resnet18;
+use crate::graph::Graph;
+use crate::sched::{build_plan, Strategy};
+use crate::sim::{simulate, CostModel, SimConfig, SimResult};
+
+/// One table row: cluster size × the four strategies (ms/image).
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub n: usize,
+    pub ms: [f64; 4], // STRATEGY_ORDER
+}
+
+/// Everything needed to run cells of one table. Owns one [`CostModel`]
+/// shared by every cell — autotuned GEMM schedules are computed once per
+/// (config, shape) and reused across strategies and cluster sizes.
+pub struct Bench {
+    pub graph: Graph,
+    pub family: BoardFamily,
+    pub vta: VtaConfig,
+    pub calib: Calibration,
+    pub images: usize,
+    cost: CostModel,
+}
+
+impl Bench {
+    pub fn new(family: BoardFamily, vta: VtaConfig, calib: Calibration) -> Self {
+        let cost =
+            CostModel::new(vta.clone(), BoardProfile::for_family(family), calib.clone());
+        Bench { graph: build_resnet18(224).unwrap(), family, vta, calib, images: 64, cost }
+    }
+
+    pub fn zynq(calib: Calibration) -> Self {
+        Self::new(BoardFamily::Zynq7000, VtaConfig::table1_zynq7000(), calib)
+    }
+
+    pub fn ultrascale(calib: Calibration) -> Self {
+        Self::new(BoardFamily::UltraScalePlus, VtaConfig::table1_ultrascale(), calib)
+    }
+
+    /// Whole-graph single-node compute time (ms), κ applied.
+    pub fn graph_time_ms(&mut self) -> anyhow::Result<f64> {
+        Ok(self.cost.graph_time_ns(&self.graph)? as f64 / 1e6)
+    }
+
+    /// Simulated ms/image for one (strategy, n) cell.
+    pub fn cell(&mut self, strategy: Strategy, n: usize) -> anyhow::Result<SimResult> {
+        let cost = &mut self.cost;
+        // seg_cost oracle for the planners: single-split segment times
+        let seg_costs: Vec<(String, f64)> = self
+            .graph
+            .segment_order()
+            .into_iter()
+            .map(|l| {
+                let t = cost.segment_time_ns(&self.graph, &l, 1).unwrap() as f64;
+                (l, t)
+            })
+            .collect();
+        let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+        let plan = build_plan(strategy, &self.graph, n, lookup)?;
+        let cluster =
+            ClusterConfig::homogeneous(self.family, n).with_vta(self.vta.clone());
+        simulate(
+            &plan,
+            &cluster,
+            cost,
+            &self.graph,
+            &SimConfig { images: self.images, warmup_frac: 0.2 },
+        )
+    }
+
+    /// Full sweep over `1..=max_n` × all four strategies.
+    pub fn sweep(&mut self, max_n: usize) -> anyhow::Result<Vec<SweepRow>> {
+        let mut rows = Vec::with_capacity(max_n);
+        for n in 1..=max_n {
+            let mut ms = [0.0; 4];
+            for (i, s) in super::paper::STRATEGY_ORDER.iter().enumerate() {
+                ms[i] = self.cell(*s, n)?.ms_per_image;
+            }
+            rows.push(SweepRow { n, ms });
+        }
+        Ok(rows)
+    }
+}
+
+/// Convenience wrappers used by the benches.
+pub fn run_cell(
+    family: BoardFamily,
+    vta: VtaConfig,
+    calib: Calibration,
+    strategy: Strategy,
+    n: usize,
+) -> anyhow::Result<SimResult> {
+    Bench::new(family, vta, calib).cell(strategy, n)
+}
+
+pub fn sweep(
+    family: BoardFamily,
+    vta: VtaConfig,
+    calib: Calibration,
+    max_n: usize,
+) -> anyhow::Result<Vec<SweepRow>> {
+    Bench::new(family, vta, calib).sweep(max_n)
+}
+
+/// Single-node compute + overhead decomposition, used by the calibrator:
+/// returns `(compute_ms_at_current_kappa, overhead_ms)` where
+/// `total = compute + overhead` for the SG n=1 cell.
+pub fn single_node_decomposition(bench: &mut Bench) -> anyhow::Result<(f64, f64)> {
+    let compute = bench.graph_time_ms()?;
+    let total = bench.cell(Strategy::ScatterGather, 1)?.ms_per_image;
+    Ok((compute, (total - compute).max(0.0)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zynq_cell_runs() {
+        let mut b = Bench::zynq(Calibration::default());
+        let r = b.cell(Strategy::ScatterGather, 2).unwrap();
+        assert!(r.ms_per_image > 1.0 && r.ms_per_image < 200.0);
+    }
+
+    #[test]
+    fn sweep_rows_are_complete() {
+        let mut b = Bench::zynq(Calibration::default());
+        b.images = 16; // fast
+        let rows = b.sweep(3).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.ms.iter().all(|&v| v > 0.0)));
+        // n=1 uniform across strategies
+        let r1 = &rows[0];
+        for w in r1.ms.windows(2) {
+            assert!((w[0] - w[1]).abs() / w[0] < 0.02, "{:?}", r1.ms);
+        }
+    }
+}

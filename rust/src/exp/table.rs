@@ -1,0 +1,124 @@
+//! Text-table rendering for benches and examples, matching the layout of
+//! the paper's Fig. 3(a)/4(a), with optional paper-vs-ours comparison.
+
+use super::runner::SweepRow;
+use crate::util::stats::rel_err;
+
+pub const HEADERS: [&str; 4] =
+    ["Scatter-Gather", "AI Core Assign", "Pipeline", "Fused"];
+
+/// Render a sweep as the paper's table shape.
+pub fn render(title: &str, rows: &[SweepRow]) -> String {
+    let mut s = format!("{title}\n");
+    s.push_str(&format!(
+        "{:>4} | {:>15} | {:>15} | {:>15} | {:>15}\n",
+        "N", HEADERS[0], HEADERS[1], HEADERS[2], HEADERS[3]
+    ));
+    s.push_str(&format!("{}\n", "-".repeat(4 + 4 * 18 + 3)));
+    for r in rows {
+        s.push_str(&format!(
+            "{:>4} | {:>15.2} | {:>15.2} | {:>15.2} | {:>15.2}\n",
+            r.n, r.ms[0], r.ms[1], r.ms[2], r.ms[3]
+        ));
+    }
+    s
+}
+
+/// Render ours next to the paper's numbers with per-cell relative error.
+pub fn render_vs_paper(title: &str, rows: &[SweepRow], paper: &[[f64; 4]]) -> String {
+    let mut s = format!("{title} — ours (paper, rel.err)\n");
+    s.push_str(&format!(
+        "{:>4} | {:>26} | {:>26} | {:>26} | {:>26}\n",
+        "N", HEADERS[0], HEADERS[1], HEADERS[2], HEADERS[3]
+    ));
+    s.push_str(&format!("{}\n", "-".repeat(4 + 4 * 29 + 3)));
+    for r in rows {
+        let p = &paper[r.n - 1];
+        s.push_str(&format!("{:>4}", r.n));
+        for i in 0..4 {
+            s.push_str(&format!(
+                " | {:>9.2} ({:>6.2}, {:>4.0}%)",
+                r.ms[i],
+                p[i],
+                rel_err(r.ms[i], p[i]) * 100.0
+            ));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Per-strategy mean relative error vs the paper table.
+pub fn errors(rows: &[SweepRow], paper: &[[f64; 4]]) -> [f64; 4] {
+    let mut out = [0.0; 4];
+    for i in 0..4 {
+        let mut sum = 0.0;
+        for r in rows {
+            sum += rel_err(r.ms[i], paper[r.n - 1][i]);
+        }
+        out[i] = sum / rows.len() as f64;
+    }
+    out
+}
+
+/// Shape checks: does the winner-per-row ordering match the paper?
+pub fn winner_agreement(rows: &[SweepRow], paper: &[[f64; 4]]) -> f64 {
+    let argmin = |v: &[f64; 4]| {
+        v.iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    let agree = rows
+        .iter()
+        .filter(|r| argmin(&r.ms) == argmin(&paper[r.n - 1]))
+        .count();
+    agree as f64 / rows.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<SweepRow> {
+        vec![
+            SweepRow { n: 1, ms: [27.0, 27.0, 27.0, 27.0] },
+            SweepRow { n: 2, ms: [17.0, 37.0, 20.0, 19.0] },
+        ]
+    }
+
+    #[test]
+    fn render_contains_cells() {
+        let s = render("t", &rows());
+        assert!(s.contains("27.00"));
+        assert!(s.contains("37.00"));
+        assert!(s.contains("Scatter-Gather"));
+    }
+
+    #[test]
+    fn errors_zero_on_exact_match() {
+        let paper = [[27.0, 27.0, 27.0, 27.0], [17.0, 37.0, 20.0, 19.0]];
+        let e = errors(&rows(), &paper);
+        assert!(e.iter().all(|&x| x < 1e-12));
+        assert_eq!(winner_agreement(&rows(), &paper), 1.0);
+    }
+
+    #[test]
+    fn winner_agreement_detects_mismatch() {
+        let paper = [[27.0, 27.0, 27.0, 27.0], [37.0, 17.0, 20.0, 19.0]];
+        assert!(winner_agreement(&rows(), &paper) < 1.0);
+    }
+
+    #[test]
+    fn render_vs_paper_shows_err() {
+        let paper = [[27.0; 4], [17.0, 37.0, 20.0, 19.0]];
+        let s = render_vs_paper("t", &rows(), &paper);
+        assert!(s.contains('%'));
+    }
+
+    #[test]
+    fn strategy_order_matches_headers() {
+        assert_eq!(super::super::paper::STRATEGY_ORDER.len(), HEADERS.len());
+    }
+}

@@ -1,0 +1,267 @@
+//! The computation DAG: typed nodes, validation, topological order and
+//! whole-graph cost summaries.
+
+use super::ops::Op;
+use super::tensor::TensorDesc;
+use std::collections::HashMap;
+
+pub type NodeId = usize;
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    /// Data inputs (ids of producer nodes, in op-argument order).
+    pub inputs: Vec<NodeId>,
+    /// Inferred output descriptor (filled by the builder).
+    pub out: TensorDesc,
+    /// Segment label (stem / s1b1 / … / head) used by the partitioner.
+    pub segment: String,
+}
+
+/// A validated DAG in insertion order (which is topological by
+/// construction: inputs must already exist when a node is added).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    nodes: Vec<Node>,
+    by_name: HashMap<String, NodeId>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Graph { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Add a node; infers and stores its output descriptor.
+    pub fn add(
+        &mut self,
+        name: &str,
+        op: Op,
+        inputs: &[NodeId],
+        segment: &str,
+    ) -> anyhow::Result<NodeId> {
+        anyhow::ensure!(
+            !self.by_name.contains_key(name),
+            "duplicate node name '{name}'"
+        );
+        for &i in inputs {
+            anyhow::ensure!(i < self.nodes.len(), "node '{name}' references missing input {i}");
+        }
+        let in_descs: Vec<TensorDesc> =
+            inputs.iter().map(|&i| self.nodes[i].out.clone()).collect();
+        let out = op
+            .infer(&in_descs)
+            .map_err(|e| anyhow::anyhow!("node '{name}': {e}"))?;
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            op,
+            inputs: inputs.to_vec(),
+            out,
+            segment: segment.to_string(),
+        });
+        self.by_name.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Node> {
+        self.by_name.get(name).map(|&id| &self.nodes[id])
+    }
+
+    /// Input descriptors of a node.
+    pub fn input_descs(&self, id: NodeId) -> Vec<TensorDesc> {
+        self.nodes[id].inputs.iter().map(|&i| self.nodes[i].out.clone()).collect()
+    }
+
+    /// Ids of nodes that consume `id`'s output.
+    pub fn consumers(&self, id: NodeId) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.contains(&id))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// The unique sink (a validated inference graph has exactly one).
+    pub fn output(&self) -> anyhow::Result<NodeId> {
+        let sinks: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|n| self.consumers(n.id).is_empty())
+            .map(|n| n.id)
+            .collect();
+        anyhow::ensure!(sinks.len() == 1, "graph has {} sinks, expected 1", sinks.len());
+        Ok(sinks[0])
+    }
+
+    /// Total GEMM MACs.
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.op.macs(&self.input_descs(n.id))).sum()
+    }
+
+    /// Total ALU element ops.
+    pub fn total_alu_ops(&self) -> u64 {
+        self.nodes.iter().map(|n| n.op.alu_ops(&self.input_descs(n.id))).sum()
+    }
+
+    /// Total weight bytes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.op.weight_bytes(&self.input_descs(n.id))).sum()
+    }
+
+    /// Validate structural invariants (acyclic by construction; checks
+    /// single sink, single Input node first, shape chain consistency).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.nodes.is_empty(), "empty graph");
+        anyhow::ensure!(
+            matches!(self.nodes[0].op, Op::Input { .. }),
+            "first node must be the Input"
+        );
+        let extra_inputs = self
+            .nodes[1..]
+            .iter()
+            .filter(|n| matches!(n.op, Op::Input { .. }))
+            .count();
+        anyhow::ensure!(extra_inputs == 0, "multiple Input nodes");
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                anyhow::ensure!(i < n.id, "node '{}' uses later node {i}", n.name);
+            }
+            // re-infer and compare (catches descriptor corruption)
+            let descs = self.input_descs(n.id);
+            let out = n.op.infer(&descs)?;
+            anyhow::ensure!(
+                out == n.out,
+                "node '{}' stored descriptor {} != inferred {}",
+                n.name,
+                n.out,
+                out
+            );
+        }
+        self.output()?;
+        Ok(())
+    }
+
+    /// Segment labels in first-appearance order.
+    pub fn segment_order(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for n in &self.nodes {
+            if out.last().map(|s| s != &n.segment).unwrap_or(true)
+                && !out.contains(&n.segment)
+            {
+                out.push(n.segment.clone());
+            }
+        }
+        out
+    }
+
+    /// All nodes with a given segment label.
+    pub fn segment_nodes(&self, segment: &str) -> Vec<&Node> {
+        self.nodes.iter().filter(|n| n.segment == segment).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tensor::{DType, TensorDesc};
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g
+            .add("x", Op::Input { desc: TensorDesc::i8(&[1, 8, 8, 3]) }, &[], "stem")
+            .unwrap();
+        let c = g
+            .add("conv", Op::Conv2d { oc: 4, kh: 3, kw: 3, stride: 1, pad: 1 }, &[x], "stem")
+            .unwrap();
+        let r = g.add("relu", Op::Relu, &[c], "stem").unwrap();
+        g.add("rq", Op::Requantize { shift: 8 }, &[r], "stem").unwrap();
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny_graph();
+        g.validate().unwrap();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.total_macs(), 8 * 8 * 4 * 9 * 3);
+        assert_eq!(g.total_weight_bytes(), 4 * 9 * 3);
+        assert_eq!(g.output().unwrap(), 3);
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut g = tiny_graph();
+        let err = g
+            .add("conv", Op::Relu, &[1], "stem")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn type_mismatch_rejected_at_add() {
+        let mut g = tiny_graph();
+        // requantize output is int8; relu needs int32
+        assert!(g.add("bad", Op::Relu, &[3], "stem").is_err());
+    }
+
+    #[test]
+    fn consumers_and_lookup() {
+        let g = tiny_graph();
+        assert_eq!(g.consumers(1), vec![2]);
+        assert_eq!(g.by_name("relu").unwrap().id, 2);
+        assert!(g.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn residual_diamond_validates() {
+        let mut g = Graph::new("diamond");
+        let x = g
+            .add("x", Op::Input { desc: TensorDesc::i8(&[1, 8, 8, 4]) }, &[], "b")
+            .unwrap();
+        let c = g
+            .add("conv", Op::Conv2d { oc: 4, kh: 3, kw: 3, stride: 1, pad: 1 }, &[x], "b")
+            .unwrap();
+        let q = g.add("rq", Op::Requantize { shift: 8 }, &[c], "b").unwrap();
+        let a = g.add("add", Op::Add, &[q, x], "b").unwrap();
+        let r = g.add("relu", Op::Relu, &[a], "b").unwrap();
+        g.add("rq2", Op::Requantize { shift: 0 }, &[r], "b").unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.node(a).out.dtype, DType::I32);
+        // x feeds both conv and add
+        assert_eq!(g.consumers(x), vec![1, 3]);
+    }
+
+    #[test]
+    fn two_sinks_fail_validation() {
+        let mut g = tiny_graph();
+        g.add("extra", Op::Relu, &[2], "stem").unwrap(); // second consumer of relu
+        assert!(g.validate().is_err()); // rq and extra are both sinks
+    }
+
+    #[test]
+    fn segment_order() {
+        let g = tiny_graph();
+        assert_eq!(g.segment_order(), vec!["stem"]);
+    }
+}

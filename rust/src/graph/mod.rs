@@ -1,0 +1,18 @@
+//! Neural-network computation-graph IR.
+//!
+//! The workload side of the paper: a typed DAG of quantized operators
+//! with exact MAC/byte cost accounting, a ResNet-18 builder matching the
+//! python model bit-for-bit in structure (cross-checked against
+//! `artifacts/manifest.json`), and a partitioner producing the contiguous
+//! segments the scheduling strategies distribute across FPGA nodes.
+
+pub mod graph;
+pub mod ops;
+pub mod partition;
+pub mod resnet;
+pub mod tensor;
+
+pub use graph::{Graph, Node, NodeId};
+pub use ops::Op;
+pub use partition::{partition_balanced, Segment};
+pub use tensor::{DType, Shape};

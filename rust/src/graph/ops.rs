@@ -1,0 +1,266 @@
+//! Operator set of the quantized inference graphs, with exact shape
+//! inference and MAC/byte cost accounting.
+//!
+//! The op set mirrors what TVM lowers onto VTA (and what the python L2
+//! model implements): conv/dense on the GEMM core, pooling/ReLU/
+//! requantize/add on the ALU.
+
+use super::tensor::{DType, TensorDesc};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input { desc: TensorDesc },
+    /// 2-D convolution, NHWC × (OC,KH,KW,C) → NHWC, int8 → int32.
+    Conv2d { oc: u64, kh: u64, kw: u64, stride: u64, pad: u64 },
+    /// Dense (fully connected): (M,K) × (N,K) → (M,N), int8 → int32.
+    Dense { units: u64 },
+    /// Max-pool on int8.
+    MaxPool { k: u64, stride: u64, pad: u64 },
+    /// Global average pool: NHWC int8 → (N,C) int32.
+    GlobalAvgPool,
+    /// ReLU on the int32 accumulators (ALU MAX-imm-0).
+    Relu,
+    /// Requantize int32 → int8 (round-half-up shift + clip).
+    Requantize { shift: u32 },
+    /// Element-wise residual add (int8 + int8 → int32).
+    Add,
+}
+
+impl Op {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Conv2d { .. } => "conv2d",
+            Op::Dense { .. } => "dense",
+            Op::MaxPool { .. } => "maxpool",
+            Op::GlobalAvgPool => "global_avgpool",
+            Op::Relu => "relu",
+            Op::Requantize { .. } => "requantize",
+            Op::Add => "add",
+        }
+    }
+
+    /// Number of data inputs the op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Input { .. } => 0,
+            Op::Add => 2,
+            _ => 1,
+        }
+    }
+
+    /// Shape/dtype inference. `inputs` are the descriptors of the data
+    /// inputs in order; errors describe the mismatch.
+    pub fn infer(&self, inputs: &[TensorDesc]) -> anyhow::Result<TensorDesc> {
+        anyhow::ensure!(
+            inputs.len() == self.arity(),
+            "{} expects {} inputs, got {}",
+            self.kind(),
+            self.arity(),
+            inputs.len()
+        );
+        match self {
+            Op::Input { desc } => Ok(desc.clone()),
+            Op::Conv2d { oc, kh, kw, stride, pad } => {
+                let x = &inputs[0];
+                anyhow::ensure!(x.dtype == DType::I8, "conv2d input must be int8");
+                anyhow::ensure!(x.shape.rank() == 4, "conv2d input must be NHWC");
+                let (n, h, w) = (x.shape.n(), x.shape.h(), x.shape.w());
+                anyhow::ensure!(
+                    h + 2 * pad >= *kh && w + 2 * pad >= *kw,
+                    "conv2d kernel {kh}x{kw} larger than padded input {h}x{w}+{pad}"
+                );
+                let oh = (h + 2 * pad - kh) / stride + 1;
+                let ow = (w + 2 * pad - kw) / stride + 1;
+                Ok(TensorDesc::i32(&[n, oh, ow, *oc]))
+            }
+            Op::Dense { units } => {
+                let x = &inputs[0];
+                anyhow::ensure!(x.dtype == DType::I8, "dense input must be int8");
+                anyhow::ensure!(x.shape.rank() == 2, "dense input must be (M,K)");
+                Ok(TensorDesc::i32(&[x.shape.dim(0), *units]))
+            }
+            Op::MaxPool { k, stride, pad } => {
+                let x = &inputs[0];
+                anyhow::ensure!(x.dtype == DType::I8, "maxpool input must be int8");
+                let (n, h, w, c) = (x.shape.n(), x.shape.h(), x.shape.w(), x.shape.c());
+                let oh = (h + 2 * pad - k) / stride + 1;
+                let ow = (w + 2 * pad - k) / stride + 1;
+                Ok(TensorDesc::i8(&[n, oh, ow, c]))
+            }
+            Op::GlobalAvgPool => {
+                let x = &inputs[0];
+                anyhow::ensure!(x.dtype == DType::I8, "global_avgpool input must be int8");
+                Ok(TensorDesc::i32(&[x.shape.n(), x.shape.c()]))
+            }
+            Op::Relu => {
+                let x = &inputs[0];
+                anyhow::ensure!(x.dtype == DType::I32, "relu runs on int32 accumulators");
+                Ok(x.clone())
+            }
+            Op::Requantize { .. } => {
+                let x = &inputs[0];
+                anyhow::ensure!(x.dtype == DType::I32, "requantize input must be int32");
+                Ok(TensorDesc::new(x.shape.clone(), DType::I8))
+            }
+            Op::Add => {
+                let (a, b) = (&inputs[0], &inputs[1]);
+                anyhow::ensure!(a.shape == b.shape, "add shape mismatch {a} vs {b}");
+                anyhow::ensure!(
+                    a.dtype == DType::I8 && b.dtype == DType::I8,
+                    "residual add expects int8 operands"
+                );
+                Ok(TensorDesc::new(a.shape.clone(), DType::I32))
+            }
+        }
+    }
+
+    /// Multiply-accumulate count (GEMM-core work).
+    pub fn macs(&self, inputs: &[TensorDesc]) -> u64 {
+        match self {
+            Op::Conv2d { oc, kh, kw, .. } => {
+                let out = self.infer(inputs).expect("macs on un-inferable conv");
+                let c = inputs[0].shape.c();
+                out.shape.n() * out.shape.h() * out.shape.w() * oc * kh * kw * c
+            }
+            Op::Dense { units } => {
+                let x = &inputs[0];
+                x.shape.dim(0) * x.shape.dim(1) * units
+            }
+            _ => 0,
+        }
+    }
+
+    /// ALU element-operations count (element-wise work, pooling windows).
+    pub fn alu_ops(&self, inputs: &[TensorDesc]) -> u64 {
+        match self {
+            Op::Relu | Op::Requantize { .. } => inputs[0].shape.elems(),
+            Op::Add => inputs[0].shape.elems(),
+            Op::MaxPool { k, .. } => {
+                let out = self.infer(inputs).expect("alu_ops on un-inferable pool");
+                out.shape.elems() * k * k
+            }
+            Op::GlobalAvgPool => inputs[0].shape.elems(),
+            _ => 0,
+        }
+    }
+
+    /// Weight parameter bytes (int8).
+    pub fn weight_bytes(&self, inputs: &[TensorDesc]) -> u64 {
+        match self {
+            Op::Conv2d { oc, kh, kw, .. } => oc * kh * kw * inputs[0].shape.c(),
+            Op::Dense { units } => units * inputs[0].shape.dim(1),
+            _ => 0,
+        }
+    }
+
+    /// The GEMM problem (M, K, N) this op lowers to, if any.
+    pub fn gemm_shape(&self, inputs: &[TensorDesc]) -> Option<(u64, u64, u64)> {
+        match self {
+            Op::Conv2d { oc, kh, kw, .. } => {
+                let out = self.infer(inputs).ok()?;
+                let m = out.shape.n() * out.shape.h() * out.shape.w();
+                let k = kh * kw * inputs[0].shape.c();
+                Some((m, k, *oc))
+            }
+            Op::Dense { units } => {
+                let x = &inputs[0];
+                Some((x.shape.dim(0), x.shape.dim(1), *units))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tensor::Shape;
+
+    fn i8d(dims: &[u64]) -> TensorDesc {
+        TensorDesc::i8(dims)
+    }
+
+    #[test]
+    fn conv_shape_and_macs() {
+        let op = Op::Conv2d { oc: 64, kh: 7, kw: 7, stride: 2, pad: 3 };
+        let x = i8d(&[1, 224, 224, 3]);
+        let out = op.infer(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out.shape, Shape::nhwc(1, 112, 112, 64));
+        assert_eq!(out.dtype, DType::I32);
+        // 112·112·64·7·7·3 = 118,013,952 (matches python manifest stem)
+        assert_eq!(op.macs(&[x]), 118_013_952);
+    }
+
+    #[test]
+    fn conv_gemm_shape_is_im2col() {
+        let op = Op::Conv2d { oc: 128, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let x = i8d(&[1, 28, 28, 128]);
+        assert_eq!(op.gemm_shape(&[x]), Some((784, 1152, 128)));
+    }
+
+    #[test]
+    fn dense_infer() {
+        let op = Op::Dense { units: 1000 };
+        let x = i8d(&[1, 512]);
+        let out = op.infer(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out.shape, Shape::new(&[1, 1000]));
+        assert_eq!(op.macs(&[x.clone()]), 512_000);
+        assert_eq!(op.weight_bytes(&[x]), 512_000);
+    }
+
+    #[test]
+    fn pool_and_elementwise() {
+        let mp = Op::MaxPool { k: 3, stride: 2, pad: 1 };
+        let x = i8d(&[1, 112, 112, 64]);
+        let out = mp.infer(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out.shape, Shape::nhwc(1, 56, 56, 64));
+        assert_eq!(out.dtype, DType::I8);
+        assert_eq!(mp.alu_ops(&[x]), 56 * 56 * 64 * 9);
+
+        let relu = Op::Relu;
+        let acc = TensorDesc::i32(&[1, 56, 56, 64]);
+        assert_eq!(relu.infer(std::slice::from_ref(&acc)).unwrap().dtype, DType::I32);
+        assert_eq!(relu.alu_ops(&[acc.clone()]), 200_704);
+
+        let rq = Op::Requantize { shift: 11 };
+        assert_eq!(rq.infer(&[acc]).unwrap().dtype, DType::I8);
+    }
+
+    #[test]
+    fn add_requires_matching_int8() {
+        let add = Op::Add;
+        let a = i8d(&[1, 8, 8, 64]);
+        let b = i8d(&[1, 8, 8, 64]);
+        let out = add.infer(&[a.clone(), b]).unwrap();
+        assert_eq!(out.dtype, DType::I32);
+        let c = i8d(&[1, 8, 8, 32]);
+        assert!(add.infer(&[a.clone(), c]).is_err());
+        let d = TensorDesc::i32(&[1, 8, 8, 64]);
+        assert!(add.infer(&[a, d]).is_err());
+    }
+
+    #[test]
+    fn type_errors() {
+        let conv = Op::Conv2d { oc: 8, kh: 3, kw: 3, stride: 1, pad: 1 };
+        assert!(conv.infer(&[TensorDesc::i32(&[1, 8, 8, 3])]).is_err());
+        assert!(Op::Relu.infer(&[i8d(&[1, 2])]).is_err());
+        assert!(conv.infer(&[]).is_err());
+    }
+
+    #[test]
+    fn kernel_larger_than_input_rejected() {
+        let conv = Op::Conv2d { oc: 8, kh: 7, kw: 7, stride: 1, pad: 0 };
+        assert!(conv.infer(&[i8d(&[1, 4, 4, 3])]).is_err());
+    }
+
+    #[test]
+    fn global_avgpool() {
+        let op = Op::GlobalAvgPool;
+        let x = i8d(&[1, 7, 7, 512]);
+        let out = op.infer(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out.shape, Shape::new(&[1, 512]));
+        assert_eq!(out.dtype, DType::I32);
+    }
+}

@@ -1,0 +1,233 @@
+//! Graph partitioning for the scheduling strategies.
+//!
+//! The unit of distribution is the **segment** (stem, 8 blocks, head —
+//! the same cut points as the exported HLO artifacts). The pipeline and
+//! fused strategies need the 10 segments grouped into `k ≤ 10` contiguous
+//! stages with balanced cost; AI-core assignment needs the bottleneck
+//! ranking. Balanced grouping is solved exactly by DP (minimise the
+//! maximum stage cost — the pipeline's throughput bound).
+
+use super::graph::Graph;
+
+/// One distributable unit: a contiguous run of graph segments.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    /// Segment labels in order (e.g. `["s1b1", "s1b2"]`).
+    pub labels: Vec<String>,
+    /// GEMM MACs in this segment group.
+    pub macs: u64,
+    /// ALU element ops.
+    pub alu_ops: u64,
+    /// Weight bytes resident on the node running this group.
+    pub weight_bytes: u64,
+    /// Activation bytes entering the group (network transfer size).
+    pub in_bytes: u64,
+    /// Activation bytes leaving the group.
+    pub out_bytes: u64,
+}
+
+/// Cost/IO summary of each atomic segment, in order.
+pub fn atomic_segments(g: &Graph) -> Vec<Segment> {
+    let order = g.segment_order();
+    let mut out = Vec::with_capacity(order.len());
+    for label in &order {
+        let nodes = g.segment_nodes(label);
+        let macs = nodes.iter().map(|n| n.op.macs(&g.input_descs(n.id))).sum();
+        let alu_ops = nodes.iter().map(|n| n.op.alu_ops(&g.input_descs(n.id))).sum();
+        let weight_bytes =
+            nodes.iter().map(|n| n.op.weight_bytes(&g.input_descs(n.id))).sum();
+        // input bytes: the tensor crossing into this segment = output of
+        // the previous segment (or the graph input for the first).
+        let first = nodes.first().expect("segment with no nodes");
+        let in_bytes = if first.inputs.is_empty() {
+            first.out.bytes() // Input node: the image itself
+        } else {
+            g.node(first.inputs[0]).out.bytes()
+        };
+        let last = nodes.last().expect("segment with no nodes");
+        let out_bytes = last.out.bytes();
+        out.push(Segment {
+            labels: vec![label.clone()],
+            macs,
+            alu_ops,
+            weight_bytes,
+            in_bytes,
+            out_bytes,
+        });
+    }
+    out
+}
+
+fn merge(parts: &[Segment]) -> Segment {
+    assert!(!parts.is_empty());
+    Segment {
+        labels: parts.iter().flat_map(|p| p.labels.clone()).collect(),
+        macs: parts.iter().map(|p| p.macs).sum(),
+        alu_ops: parts.iter().map(|p| p.alu_ops).sum(),
+        weight_bytes: parts.iter().map(|p| p.weight_bytes).sum(),
+        in_bytes: parts.first().unwrap().in_bytes,
+        out_bytes: parts.last().unwrap().out_bytes,
+    }
+}
+
+/// Group the atomic segments into exactly `k` contiguous stages minimising
+/// the maximum stage cost (classic linear-partition DP, exact).
+///
+/// `cost` maps a segment to its stage-time proxy (usually MACs, but the
+/// schedulers pass the full node-time model).
+pub fn partition_balanced<F>(g: &Graph, k: usize, cost: F) -> anyhow::Result<Vec<Segment>>
+where
+    F: Fn(&Segment) -> f64,
+{
+    let atoms = atomic_segments(g);
+    let n = atoms.len();
+    anyhow::ensure!(k >= 1, "k must be ≥ 1");
+    anyhow::ensure!(
+        k <= n,
+        "cannot split {n} segments into {k} stages (max pipeline depth is {n})"
+    );
+    let costs: Vec<f64> = atoms.iter().map(&cost).collect();
+    // prefix[i] = sum of costs[0..i]
+    let mut prefix = vec![0.0; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + costs[i];
+    }
+    let range_cost = |a: usize, b: usize| prefix[b] - prefix[a]; // [a, b)
+
+    // dp[j][i] = min over partitions of first i atoms into j stages of the
+    // max stage cost; cut[j][i] = position of the last cut.
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; n + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for j in 1..=k {
+        for i in j..=n {
+            for c in (j - 1)..i {
+                let v = dp[j - 1][c].max(range_cost(c, i));
+                if v < dp[j][i] {
+                    dp[j][i] = v;
+                    cut[j][i] = c;
+                }
+            }
+        }
+    }
+    // reconstruct
+    let mut bounds = vec![n];
+    let mut i = n;
+    for j in (1..=k).rev() {
+        i = cut[j][i];
+        bounds.push(i);
+    }
+    bounds.reverse(); // [0, c1, c2, ..., n]
+    let mut out = Vec::with_capacity(k);
+    for w in bounds.windows(2) {
+        out.push(merge(&atoms[w[0]..w[1]]));
+    }
+    Ok(out)
+}
+
+/// Rank atomic segments by cost, descending — the "bottleneck operators"
+/// that AI-core assignment replicates first (§II-C.2).
+pub fn bottleneck_ranking<F>(g: &Graph, cost: F) -> Vec<(usize, Segment)>
+where
+    F: Fn(&Segment) -> f64,
+{
+    let atoms = atomic_segments(g);
+    let mut ranked: Vec<(usize, Segment)> = atoms.into_iter().enumerate().collect();
+    ranked.sort_by(|a, b| cost(&b.1).partial_cmp(&cost(&a.1)).unwrap());
+    ranked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::resnet::build_resnet18;
+
+    fn g224() -> Graph {
+        build_resnet18(224).unwrap()
+    }
+
+    #[test]
+    fn atomic_segments_cover_graph() {
+        let g = g224();
+        let atoms = atomic_segments(&g);
+        assert_eq!(atoms.len(), 10);
+        let macs: u64 = atoms.iter().map(|s| s.macs).sum();
+        assert_eq!(macs, g.total_macs());
+        // IO chain: out_bytes of i == in_bytes of i+1
+        for w in atoms.windows(2) {
+            assert_eq!(w[0].out_bytes, w[1].in_bytes, "{:?}", w[0].labels);
+        }
+        // stem input is the 224×224×3 image
+        assert_eq!(atoms[0].in_bytes, 224 * 224 * 3);
+        // head output is the (1,1000) int32 logits
+        assert_eq!(atoms[9].out_bytes, 4000);
+    }
+
+    #[test]
+    fn partition_k1_is_whole_graph() {
+        let g = g224();
+        let parts = partition_balanced(&g, 1, |s| s.macs as f64).unwrap();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].macs, g.total_macs());
+        assert_eq!(parts[0].labels.len(), 10);
+    }
+
+    #[test]
+    fn partition_k10_is_atomic() {
+        let g = g224();
+        let parts = partition_balanced(&g, 10, |s| s.macs as f64).unwrap();
+        assert_eq!(parts.len(), 10);
+        assert!(parts.iter().all(|p| p.labels.len() == 1));
+    }
+
+    #[test]
+    fn partition_minimises_max_stage() {
+        let g = g224();
+        let atoms = atomic_segments(&g);
+        let total: f64 = atoms.iter().map(|s| s.macs as f64).sum();
+        for k in 2..=10 {
+            let parts = partition_balanced(&g, k, |s| s.macs as f64).unwrap();
+            assert_eq!(parts.len(), k);
+            let maxc = parts.iter().map(|p| p.macs as f64).fold(0.0, f64::max);
+            // optimal max stage is ≥ total/k and ≤ total
+            assert!(maxc >= total / k as f64 - 1.0);
+            assert!(maxc <= total);
+            // contiguity: concatenated labels == original order
+            let labels: Vec<String> = parts.iter().flat_map(|p| p.labels.clone()).collect();
+            let want: Vec<String> = atoms.iter().map(|a| a.labels[0].clone()).collect();
+            assert_eq!(labels, want);
+        }
+    }
+
+    #[test]
+    fn partition_2_is_better_than_naive_split() {
+        // DP must beat or match the midpoint split.
+        let g = g224();
+        let atoms = atomic_segments(&g);
+        let parts = partition_balanced(&g, 2, |s| s.macs as f64).unwrap();
+        let dp_max = parts.iter().map(|p| p.macs).max().unwrap();
+        let naive_first: u64 = atoms[..5].iter().map(|s| s.macs).sum();
+        let naive_second: u64 = atoms[5..].iter().map(|s| s.macs).sum();
+        assert!(dp_max <= naive_first.max(naive_second));
+    }
+
+    #[test]
+    fn k_too_large_errors() {
+        let g = g224();
+        assert!(partition_balanced(&g, 11, |s| s.macs as f64).is_err());
+        assert!(partition_balanced(&g, 0, |s| s.macs as f64).is_err());
+    }
+
+    #[test]
+    fn bottleneck_ranking_descending() {
+        let g = g224();
+        let ranked = bottleneck_ranking(&g, |s| s.macs as f64);
+        assert_eq!(ranked.len(), 10);
+        for w in ranked.windows(2) {
+            assert!(w[0].1.macs >= w[1].1.macs);
+        }
+        // In ResNet-18@224 the s1 blocks are the largest MAC segments.
+        assert!(ranked[0].1.macs >= 200_000_000);
+    }
+}

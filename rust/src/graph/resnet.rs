@@ -1,0 +1,264 @@
+//! ResNet-18 builder — the paper's evaluation workload.
+//!
+//! Mirrors `python/compile/model.py` exactly: same segment names, same
+//! layer geometry, same requantization shifts. The integration tests
+//! cross-check per-segment MAC counts against `artifacts/manifest.json`
+//! so the two definitions cannot drift apart.
+
+use super::graph::{Graph, NodeId};
+use super::ops::Op;
+use super::tensor::TensorDesc;
+
+/// `(name, in_ch, out_ch, stride)` for the 8 basic blocks (== python).
+pub const BASIC_BLOCKS: [(&str, u64, u64, u64); 8] = [
+    ("s1b1", 64, 64, 1),
+    ("s1b2", 64, 64, 1),
+    ("s2b1", 64, 128, 2),
+    ("s2b2", 128, 128, 1),
+    ("s3b1", 128, 256, 2),
+    ("s3b2", 256, 256, 1),
+    ("s4b1", 256, 512, 2),
+    ("s4b2", 512, 512, 1),
+];
+
+pub const SEGMENT_NAMES: [&str; 10] =
+    ["stem", "s1b1", "s1b2", "s2b1", "s2b2", "s3b1", "s3b2", "s4b1", "s4b2", "head"];
+
+pub const NUM_CLASSES: u64 = 1000;
+
+/// Requantization shift after the residual add (== python RESIDUAL_SHIFT).
+pub const RESIDUAL_SHIFT: u32 = 0;
+
+/// Round-half-to-even, matching python's builtin `round` so the shift
+/// constants are bit-identical to the exported model.
+fn round_half_even(x: f64) -> i64 {
+    let f = x.floor();
+    let diff = x - f;
+    if diff > 0.5 {
+        f as i64 + 1
+    } else if diff < 0.5 {
+        f as i64
+    } else {
+        let fi = f as i64;
+        if fi % 2 == 0 {
+            fi
+        } else {
+            fi + 1
+        }
+    }
+}
+
+/// Requantization shift for accumulation depth K (== python shift_for_k).
+pub fn shift_for_k(k: u64) -> u32 {
+    let half_log = 0.5 * (k.max(1) as f64).log2();
+    (6 + round_half_even(half_log).max(0)) as u32
+}
+
+/// Append one basic block to the graph; returns the output node.
+fn basic_block(
+    g: &mut Graph,
+    name: &str,
+    input: NodeId,
+    cin: u64,
+    cout: u64,
+    stride: u64,
+) -> anyhow::Result<NodeId> {
+    let k1 = 3 * 3 * cin;
+    let k2 = 3 * 3 * cout;
+    let c1 = g.add(
+        &format!("{name}.conv1"),
+        Op::Conv2d { oc: cout, kh: 3, kw: 3, stride, pad: 1 },
+        &[input],
+        name,
+    )?;
+    let r1 = g.add(&format!("{name}.relu1"), Op::Relu, &[c1], name)?;
+    let q1 = g.add(
+        &format!("{name}.rq1"),
+        Op::Requantize { shift: shift_for_k(k1) },
+        &[r1],
+        name,
+    )?;
+    let c2 = g.add(
+        &format!("{name}.conv2"),
+        Op::Conv2d { oc: cout, kh: 3, kw: 3, stride: 1, pad: 1 },
+        &[q1],
+        name,
+    )?;
+    let q2 = g.add(
+        &format!("{name}.rq2"),
+        Op::Requantize { shift: shift_for_k(k2) },
+        &[c2],
+        name,
+    )?;
+
+    let identity = if stride != 1 || cin != cout {
+        let cd = g.add(
+            &format!("{name}.downsample"),
+            Op::Conv2d { oc: cout, kh: 1, kw: 1, stride, pad: 0 },
+            &[input],
+            name,
+        )?;
+        g.add(
+            &format!("{name}.rqd"),
+            Op::Requantize { shift: shift_for_k(cin) },
+            &[cd],
+            name,
+        )?
+    } else {
+        input
+    };
+
+    let sum = g.add(&format!("{name}.add"), Op::Add, &[q2, identity], name)?;
+    let relu = g.add(&format!("{name}.relu2"), Op::Relu, &[sum], name)?;
+    g.add(
+        &format!("{name}.out"),
+        Op::Requantize { shift: RESIDUAL_SHIFT },
+        &[relu],
+        name,
+    )
+}
+
+/// Build ResNet-18 for a given square input size (must be a multiple of 32).
+pub fn build_resnet18(input_hw: u64) -> anyhow::Result<Graph> {
+    anyhow::ensure!(input_hw >= 32 && input_hw % 32 == 0, "input_hw must be a multiple of 32");
+    let mut g = Graph::new(&format!("resnet18-{input_hw}"));
+
+    // --- stem
+    let x = g.add(
+        "input",
+        Op::Input { desc: TensorDesc::i8(&[1, input_hw, input_hw, 3]) },
+        &[],
+        "stem",
+    )?;
+    let c1 = g.add(
+        "stem.conv1",
+        Op::Conv2d { oc: 64, kh: 7, kw: 7, stride: 2, pad: 3 },
+        &[x],
+        "stem",
+    )?;
+    let r1 = g.add("stem.relu", Op::Relu, &[c1], "stem")?;
+    let q1 = g.add(
+        "stem.rq",
+        Op::Requantize { shift: shift_for_k(7 * 7 * 3) },
+        &[r1],
+        "stem",
+    )?;
+    let mut cur = g.add(
+        "stem.maxpool",
+        Op::MaxPool { k: 3, stride: 2, pad: 1 },
+        &[q1],
+        "stem",
+    )?;
+
+    // --- 8 basic blocks
+    for (name, cin, cout, stride) in BASIC_BLOCKS {
+        cur = basic_block(&mut g, name, cur, cin, cout, stride)?;
+    }
+
+    // --- head
+    let gap = g.add("head.gap", Op::GlobalAvgPool, &[cur], "head")?;
+    let act = g.add("head.rq", Op::Requantize { shift: 0 }, &[gap], "head")?;
+    g.add("head.fc", Op::Dense { units: NUM_CLASSES }, &[act], "head")?;
+
+    g.validate()?;
+    Ok(g)
+}
+
+/// Per-segment MAC totals in segment order (for manifest cross-checks and
+/// the partitioner's cost model).
+pub fn segment_macs(g: &Graph) -> Vec<(String, u64)> {
+    g.segment_order()
+        .into_iter()
+        .map(|seg| {
+            let macs = g
+                .segment_nodes(&seg)
+                .iter()
+                .map(|n| n.op.macs(&g.input_descs(n.id)))
+                .sum();
+            (seg, macs)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_validates_224() {
+        let g = build_resnet18(224).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.segment_order(), SEGMENT_NAMES.to_vec());
+    }
+
+    #[test]
+    fn total_macs_matches_python_manifest() {
+        // python: total_macs = 1,814,073,344 @224 (printed by aot.py)
+        let g = build_resnet18(224).unwrap();
+        assert_eq!(g.total_macs(), 1_814_073_344);
+    }
+
+    #[test]
+    fn tiny_macs_match_python() {
+        // python tiny (@32): 37.5M printed by aot.py; exact value checked
+        // against the manifest in the integration tests.
+        let g = build_resnet18(32).unwrap();
+        let total = g.total_macs();
+        assert!((37_000_000..38_000_000).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn segment_macs_sum_to_total() {
+        let g = build_resnet18(224).unwrap();
+        let per_seg = segment_macs(&g);
+        assert_eq!(per_seg.len(), 10);
+        let sum: u64 = per_seg.iter().map(|(_, m)| m).sum();
+        assert_eq!(sum, g.total_macs());
+        // stem matches the hand-computed figure from python
+        assert_eq!(per_seg[0], ("stem".to_string(), 118_013_952));
+    }
+
+    #[test]
+    fn weight_bytes_match_resnet18() {
+        let g = build_resnet18(224).unwrap();
+        let total = g.total_weight_bytes();
+        assert!((10_500_000..12_000_000).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn shifts_match_python_convention() {
+        // python: shift_for_k uses round-half-to-even via builtin round()
+        assert_eq!(shift_for_k(147), 10); // stem 7·7·3
+        assert_eq!(shift_for_k(576), 11); // 3·3·64
+        assert_eq!(shift_for_k(1152), 11);
+        assert_eq!(shift_for_k(2304), 12);
+        assert_eq!(shift_for_k(4608), 12);
+        assert_eq!(shift_for_k(64), 9);
+        assert_eq!(shift_for_k(128), 10); // 3.5 rounds to even 4
+        assert_eq!(shift_for_k(512), 10); // 4.5 rounds to even 4 (not 5!)
+        assert_eq!(shift_for_k(1), 6);
+    }
+
+    #[test]
+    fn round_half_even_matches_python() {
+        assert_eq!(round_half_even(2.5), 2);
+        assert_eq!(round_half_even(3.5), 4);
+        assert_eq!(round_half_even(4.5), 4);
+        assert_eq!(round_half_even(4.2), 4);
+        assert_eq!(round_half_even(4.8), 5);
+    }
+
+    #[test]
+    fn rejects_bad_input_size() {
+        assert!(build_resnet18(100).is_err());
+        assert!(build_resnet18(16).is_err());
+    }
+
+    #[test]
+    fn output_is_logits() {
+        let g = build_resnet18(64).unwrap();
+        let out = g.node(g.output().unwrap());
+        assert_eq!(out.name, "head.fc");
+        assert_eq!(out.out.shape.0, vec![1, 1000]);
+    }
+}

@@ -1,0 +1,164 @@
+//! Tensor shapes and dtypes for the graph IR.
+
+use std::fmt;
+
+/// Element types used on the VTA datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 8-bit activations/weights (INPUT_WIDTH / WEIGHT_WIDTH).
+    I8,
+    /// 32-bit accumulators (ACCUMULATOR_WIDTH).
+    I32,
+}
+
+impl DType {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            DType::I8 => 1,
+            DType::I32 => 4,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::I8 => "int8",
+            DType::I32 => "int32",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "int8" | "i8" => Ok(DType::I8),
+            "int32" | "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// A dense tensor shape (row-major). NHWC layout for feature maps.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<u64>);
+
+impl Shape {
+    pub fn new(dims: &[u64]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn nhwc(n: u64, h: u64, w: u64, c: u64) -> Self {
+        Shape(vec![n, h, w, c])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn elems(&self) -> u64 {
+        self.0.iter().product()
+    }
+
+    pub fn bytes(&self, dtype: DType) -> u64 {
+        self.elems() * dtype.bytes()
+    }
+
+    pub fn dim(&self, i: usize) -> u64 {
+        self.0[i]
+    }
+
+    /// NHWC accessors (panic on rank ≠ 4, which is a bug upstream).
+    pub fn n(&self) -> u64 {
+        assert_eq!(self.rank(), 4, "n() on rank-{} shape", self.rank());
+        self.0[0]
+    }
+    pub fn h(&self) -> u64 {
+        assert_eq!(self.rank(), 4);
+        self.0[1]
+    }
+    pub fn w(&self) -> u64 {
+        assert_eq!(self.rank(), 4);
+        self.0[2]
+    }
+    pub fn c(&self) -> u64 {
+        assert_eq!(self.rank(), 4);
+        self.0[3]
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// A typed tensor descriptor (shape + dtype), the edge type of the graph.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorDesc {
+    pub shape: Shape,
+    pub dtype: DType,
+}
+
+impl TensorDesc {
+    pub fn new(shape: Shape, dtype: DType) -> Self {
+        TensorDesc { shape, dtype }
+    }
+
+    pub fn i8(dims: &[u64]) -> Self {
+        TensorDesc::new(Shape::new(dims), DType::I8)
+    }
+
+    pub fn i32(dims: &[u64]) -> Self {
+        TensorDesc::new(Shape::new(dims), DType::I32)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.shape.bytes(self.dtype)
+    }
+}
+
+impl fmt::Display for TensorDesc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.dtype.as_str(), self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_basics() {
+        let s = Shape::nhwc(1, 224, 224, 3);
+        assert_eq!(s.elems(), 150_528);
+        assert_eq!(s.bytes(DType::I8), 150_528);
+        assert_eq!(s.bytes(DType::I32), 602_112);
+        assert_eq!(s.h(), 224);
+        assert_eq!(s.c(), 3);
+        assert_eq!(format!("{s}"), "(1,224,224,3)");
+    }
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        assert_eq!(DType::parse("int8").unwrap(), DType::I8);
+        assert_eq!(DType::parse(DType::I32.as_str()).unwrap(), DType::I32);
+        assert!(DType::parse("f32").is_err());
+    }
+
+    #[test]
+    fn tensor_desc() {
+        let t = TensorDesc::i32(&[1, 1000]);
+        assert_eq!(t.bytes(), 4000);
+        assert_eq!(format!("{t}"), "int32(1,1000)");
+    }
+
+    #[test]
+    #[should_panic]
+    fn nhwc_accessor_on_rank2_panics() {
+        Shape::new(&[4, 5]).h();
+    }
+}

@@ -1,0 +1,34 @@
+//! # vta-cluster
+//!
+//! A reproduction of *"Reconfigurable Distributed FPGA Cluster Design for
+//! Deep Learning Accelerators"* (Johnson, Fang, Perez-Vicente, Saniie —
+//! IIT ECASP, 2023) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the cluster: VTA instruction-level
+//!   simulator, Ethernet/MPI network model, the four scheduling
+//!   strategies of §II-C (scatter-gather, AI core assignment, pipeline,
+//!   fused), a discrete-event cluster simulator that regenerates every
+//!   table/figure of the paper, and a PJRT-backed serving coordinator.
+//! * **Layer 2 (python/compile, build-time)** — int8 ResNet-18 in JAX,
+//!   AOT-lowered to HLO text artifacts per graph segment.
+//! * **Layer 1 (python/compile/kernels, build-time)** — the VTA GEMM and
+//!   ALU engines as Pallas kernels.
+//!
+//! Python never runs at serving time: `runtime` loads the HLO artifacts
+//! through the PJRT C API (`xla` crate) and the coordinator serves
+//! requests entirely from rust.
+//!
+//! See DESIGN.md for the architecture and the experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod graph;
+pub mod net;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod vta;

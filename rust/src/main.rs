@@ -1,0 +1,206 @@
+//! `vtacluster` — CLI for the FPGA-cluster reproduction.
+//!
+//! Subcommands (first positional argument):
+//!
+//! * `info`       — model/cluster inventory and derived VTA rates
+//! * `calibrate`  — fit the timing-model constants to the paper anchors
+//!                  and write `artifacts/calibration.json`
+//! * `table`      — regenerate a paper table (`--fig 3|4`) with
+//!                  paper-vs-ours comparison
+//! * `simulate`   — one (strategy, n) cell with full detail
+//! * `serve`      — run the real PJRT serving pipeline on a batch of
+//!                  synthetic images (end-to-end driver)
+
+use vta_cluster::config::{BoardFamily, Calibration, VtaConfig};
+use vta_cluster::coordinator::Coordinator;
+use vta_cluster::exp::{calibrate, paper, runner::Bench, table};
+use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::runtime::{artifacts_dir, TensorData};
+use vta_cluster::sched::{build_plan, Strategy};
+use vta_cluster::util::cli::Cli;
+use vta_cluster::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let cli = Cli::new("vtacluster", "reconfigurable distributed FPGA cluster for DL accelerators (reproduction)")
+        .opt("fig", "3", "paper figure for `table` (3 = Zynq-7000, 4 = UltraScale+)")
+        .opt("strategy", "scatter-gather", "strategy for `simulate` (sg|ai|pipeline|fused)")
+        .opt("nodes", "4", "cluster size for `simulate`/`serve`")
+        .opt("images", "64", "images per run")
+        .opt("input-hw", "32", "input size for `serve` (32 tiny / 224 paper)")
+        .opt("board", "zynq", "board family for `simulate` (zynq|ultrascale)")
+        .flag("quick", "reduced calibration grids")
+        .positional("command", "info | calibrate | table | simulate | serve");
+    let args = cli.parse()?;
+    let command = args.positional.first().map(String::as_str).unwrap_or("info");
+
+    match command {
+        "info" => info(),
+        "calibrate" => calibrate_cmd(args.get_flag("quick")),
+        "table" => table_cmd(args.get_usize("fig")?, args.get_usize("images")?),
+        "simulate" => simulate_cmd(
+            Strategy::parse(args.get("strategy"))?,
+            args.get_usize("nodes")?,
+            BoardFamily::parse(args.get("board"))?,
+            args.get_usize("images")?,
+        ),
+        "serve" => serve_cmd(
+            Strategy::parse(args.get("strategy"))?,
+            args.get_usize("nodes")?,
+            args.get_u64("input-hw")?,
+            args.get_usize("images")?,
+        ),
+        other => anyhow::bail!("unknown command '{other}' (try --help)"),
+    }
+}
+
+fn info() -> anyhow::Result<()> {
+    let g = build_resnet18(224)?;
+    println!(
+        "workload: {} — {:.2} GMACs, {:.1} M weights",
+        g.name,
+        g.total_macs() as f64 / 1e9,
+        g.total_weight_bytes() as f64 / 1e6
+    );
+    for cfg in [
+        VtaConfig::table1_zynq7000(),
+        VtaConfig::table1_ultrascale(),
+        VtaConfig::ultrascale_350mhz(),
+        VtaConfig::big_config_200mhz(),
+    ] {
+        println!(
+            "vta {:20} {:4} MHz  block {:2}  peak {:6.1} GMAC/s  wgt buf {:3} tiles",
+            cfg.name,
+            cfg.clock_hz / 1_000_000,
+            cfg.block,
+            cfg.peak_gmacs(),
+            cfg.weight_tiles_resident(),
+        );
+    }
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    println!("calibration: {}", calib.to_json().to_string_compact());
+    Ok(())
+}
+
+fn calibrate_cmd(quick: bool) -> anyhow::Result<()> {
+    let report = calibrate::fit(quick)?;
+    print!("{}", report.log);
+    println!(
+        "residuals: single-zynq {:.1}% single-us {:.1}% 350MHz {:.1}pp big {:.1}pp net {:.1}%",
+        report.residual_single_zynq * 100.0,
+        report.residual_single_us * 100.0,
+        report.residual_350 * 100.0,
+        report.residual_big * 100.0,
+        report.residual_network * 100.0,
+    );
+    std::fs::create_dir_all(artifacts_dir())?;
+    report.calib.save(&artifacts_dir())?;
+    println!("wrote {}", artifacts_dir().join("calibration.json").display());
+    Ok(())
+}
+
+fn table_cmd(fig: usize, images: usize) -> anyhow::Result<()> {
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    match fig {
+        3 => {
+            let mut b = Bench::zynq(calib);
+            b.images = images;
+            let rows = b.sweep(12)?;
+            println!(
+                "{}",
+                table::render_vs_paper(
+                    "Fig. 3(a) Zynq-7000: execution time (ms) per scheduling method",
+                    &rows,
+                    &paper::FIG3_ZYNQ7000_MS
+                )
+            );
+            let e = table::errors(&rows, &paper::FIG3_ZYNQ7000_MS);
+            println!(
+                "mean rel err per strategy: {e:.2?}  winner agreement: {:.0}%",
+                table::winner_agreement(&rows, &paper::FIG3_ZYNQ7000_MS) * 100.0
+            );
+        }
+        4 => {
+            let mut b = Bench::ultrascale(calib);
+            b.images = images;
+            let rows = b.sweep(5)?;
+            println!(
+                "{}",
+                table::render_vs_paper(
+                    "Fig. 4(a) UltraScale+: execution time (ms) per scheduling method",
+                    &rows,
+                    &paper::FIG4_ULTRASCALE_MS
+                )
+            );
+            let e = table::errors(&rows, &paper::FIG4_ULTRASCALE_MS);
+            println!(
+                "mean rel err per strategy: {e:.2?}  winner agreement: {:.0}%",
+                table::winner_agreement(&rows, &paper::FIG4_ULTRASCALE_MS) * 100.0
+            );
+        }
+        other => anyhow::bail!("no figure {other} in the paper (use 3 or 4)"),
+    }
+    Ok(())
+}
+
+fn simulate_cmd(
+    strategy: Strategy,
+    n: usize,
+    family: BoardFamily,
+    images: usize,
+) -> anyhow::Result<()> {
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let vta = match family {
+        BoardFamily::Zynq7000 => VtaConfig::table1_zynq7000(),
+        BoardFamily::UltraScalePlus => VtaConfig::table1_ultrascale(),
+    };
+    let mut b = Bench::new(family, vta, calib);
+    b.images = images;
+    let r = b.cell(strategy, n)?;
+    println!("{strategy} on {n}× {} nodes, {images} images:", family.as_str());
+    println!("  {:.2} ms/image (steady state)", r.ms_per_image);
+    println!("  makespan {:.1} ms, network {} bytes", r.makespan_ms, r.network_bytes);
+    println!("  latency {}", r.latency_ms.display("ms"));
+    for (i, u) in r.node_utilization.iter().enumerate() {
+        println!("  node {i}: {:.0}% busy", u * 100.0);
+    }
+    Ok(())
+}
+
+fn serve_cmd(strategy: Strategy, n: usize, input_hw: u64, images: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        matches!(strategy, Strategy::ScatterGather | Strategy::Pipeline),
+        "serve supports scatter-gather and pipeline (DataParallel plans)"
+    );
+    let g = build_resnet18(input_hw)?;
+    let macs = vta_cluster::graph::resnet::segment_macs(&g);
+    let cost = |l: &str| macs.iter().find(|(x, _)| x == l).unwrap().1 as f64;
+    let plan = build_plan(strategy, &g, n, cost)?;
+    println!("{}", plan.describe());
+    let coord = Coordinator::start(artifacts_dir(), &plan, input_hw)?;
+    let mut rng = Rng::new(7);
+    let hw = input_hw as usize;
+    let batch: Vec<TensorData> = (0..images)
+        .map(|_| TensorData::i8(vec![1, hw, hw, 3], rng.i8_vec(hw * hw * 3)).unwrap())
+        .collect();
+    let (outs, report) = coord.run_batch(batch)?;
+    println!(
+        "served {} images: {:.2} img/s, mean latency {:.1} ms, p99 {:.1} ms, wall {:.0} ms",
+        report.images,
+        report.throughput_img_per_sec,
+        report.mean_latency_ms,
+        report.p99_latency_ms,
+        report.wall_ms
+    );
+    // print a checksum of the first logits so runs are comparable
+    let l0 = outs[0].as_i32()?;
+    let argmax = l0.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+    println!("first image: argmax class {argmax}, logit {}", l0[argmax]);
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Ethernet link model: serialization time of a message at line rate,
+//! accounting for frame segmentation overhead.
+//!
+//! Every 1500-byte MTU payload carries 38 bytes of overhead on the wire
+//! (14 header + 4 FCS + 8 preamble/SFD + 12 IFG), plus IP+TCP headers
+//! (40 bytes) inside the payload — the usable payload per frame is 1460
+//! bytes and the wire cost per frame is 1538 bytes.
+
+use crate::util::units::{transfer_ns, Nanos};
+
+pub const MTU_PAYLOAD: u64 = 1460; // TCP MSS
+pub const WIRE_BYTES_PER_FRAME: u64 = 1538; // incl. preamble + IFG
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkModel {
+    /// Line rate in bits/s (1 Gb/s in the paper's cluster).
+    pub bits_per_sec: u64,
+}
+
+impl LinkModel {
+    pub fn gigabit() -> Self {
+        LinkModel { bits_per_sec: 1_000_000_000 }
+    }
+
+    pub fn new(bits_per_sec: u64) -> Self {
+        LinkModel { bits_per_sec }
+    }
+
+    /// Number of Ethernet frames for a message payload.
+    pub fn frames(&self, payload_bytes: u64) -> u64 {
+        payload_bytes.div_ceil(MTU_PAYLOAD).max(1)
+    }
+
+    /// Bytes actually occupying the wire for a payload.
+    pub fn wire_bytes(&self, payload_bytes: u64) -> u64 {
+        self.frames(payload_bytes) * WIRE_BYTES_PER_FRAME
+    }
+
+    /// Serialization time of a payload at line rate.
+    pub fn serialize_ns(&self, payload_bytes: u64) -> Nanos {
+        transfer_ns(self.wire_bytes(payload_bytes), self.bits_per_sec)
+    }
+
+    /// Effective goodput in bytes/s (payload ÷ time), for reporting.
+    pub fn goodput_bytes_per_sec(&self, payload_bytes: u64) -> f64 {
+        let t = self.serialize_ns(payload_bytes) as f64 / 1e9;
+        payload_bytes as f64 / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_counts() {
+        let l = LinkModel::gigabit();
+        assert_eq!(l.frames(1), 1);
+        assert_eq!(l.frames(1460), 1);
+        assert_eq!(l.frames(1461), 2);
+        assert_eq!(l.frames(150_528), 104); // one 224×224×3 int8 image
+    }
+
+    #[test]
+    fn gigabit_serialization_times() {
+        let l = LinkModel::gigabit();
+        // one full frame = 1538 B × 8 / 1e9 ≈ 12.3 µs
+        let t = l.serialize_ns(1460);
+        assert!((12_000..13_000).contains(&t), "{t}");
+        // a 224² image ≈ 104 frames ≈ 1.28 ms
+        let img = l.serialize_ns(224 * 224 * 3);
+        assert!((1_200_000..1_350_000).contains(&img), "{img} ns");
+    }
+
+    #[test]
+    fn goodput_below_line_rate() {
+        let l = LinkModel::gigabit();
+        let g = l.goodput_bytes_per_sec(1_000_000);
+        assert!(g < 125_000_000.0, "goodput {g} ≥ line rate");
+        assert!(g > 110_000_000.0, "goodput {g} implausibly low");
+    }
+
+    #[test]
+    fn tiny_message_is_one_frame() {
+        let l = LinkModel::gigabit();
+        assert_eq!(l.wire_bytes(1), WIRE_BYTES_PER_FRAME);
+        assert_eq!(l.wire_bytes(0), WIRE_BYTES_PER_FRAME); // control msg
+    }
+}

@@ -1,0 +1,18 @@
+//! Ethernet cluster network substrate.
+//!
+//! The paper attributes every scaling anomaly to this layer (§III): 1 Gb/s
+//! links through a store-and-forward switch, blocking-MPI messages, and
+//! the FPGA PS CPU having to DMA buffers out of the PL and push them
+//! through the kernel network stack.
+//!
+//! * [`link`]   — Ethernet frame math: per-frame overhead at line rate
+//! * [`mpi`]    — blocking send/recv cost model (rendezvous + DMA + wire)
+//! * [`switch`] — store-and-forward switch with per-port contention
+
+pub mod link;
+pub mod mpi;
+pub mod switch;
+
+pub use link::LinkModel;
+pub use mpi::MpiModel;
+pub use switch::{Flow, SwitchSim};

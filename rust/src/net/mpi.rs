@@ -1,0 +1,144 @@
+//! Blocking-MPI message cost model.
+//!
+//! §III: "buffers are sent as blocking call MPI messages, which also
+//! affect the overall node message-passing handshake", and "the FPGA
+//! CPU's need to DMA data buffers from the FPGA's logic and transmit
+//! them through the network" dominates multi-node overhead.
+//!
+//! A blocking send from node A to node B costs:
+//!
+//! ```text
+//!   handshake (rendezvous RTT, calibrated)
+//! + sender CPU: DMA PL→DDR + memcpy into socket  (bytes × c_dma)
+//! + wire serialization (LinkModel, frame overhead)
+//! + switch store-and-forward latency
+//! + receiver CPU: memcpy out + DMA DDR→PL        (bytes × c_dma)
+//! ```
+//!
+//! CPU costs scale inversely with the PS clock relative to the Zynq-A9
+//! baseline (the A53 at 1.5 GHz stages the same buffer faster).
+
+use super::link::LinkModel;
+use crate::config::{BoardProfile, Calibration};
+use crate::util::units::{us_to_ns, Nanos};
+
+/// Reference PS clock for the calibrated per-byte CPU cost.
+const BASELINE_CPU_HZ: f64 = 650_000_000.0;
+
+#[derive(Debug, Clone)]
+pub struct MpiModel {
+    pub link: LinkModel,
+    /// Switch store-and-forward latency per message.
+    pub switch_latency_ns: Nanos,
+    /// Rendezvous handshake (calibrated).
+    pub handshake_ns: Nanos,
+    /// CPU staging cost per byte at the baseline 650 MHz PS clock.
+    pub dma_cpu_ns_per_byte: f64,
+}
+
+impl MpiModel {
+    pub fn from_calibration(calib: &Calibration, switch_latency_ns: Nanos) -> Self {
+        MpiModel {
+            link: LinkModel::gigabit(),
+            switch_latency_ns,
+            handshake_ns: us_to_ns(calib.mpi_handshake_us),
+            dma_cpu_ns_per_byte: calib.dma_cpu_ns_per_byte,
+        }
+    }
+
+    /// CPU staging time for one side of the transfer on a given board.
+    pub fn cpu_stage_ns(&self, bytes: u64, board: &BoardProfile) -> Nanos {
+        let scale = BASELINE_CPU_HZ / board.cpu_hz as f64;
+        (bytes as f64 * self.dma_cpu_ns_per_byte * scale).round() as Nanos
+    }
+
+    /// End-to-end blocking transfer time between two boards.
+    /// `src`/`dst` are `None` for the master host PC (fast CPU: staging
+    /// cost treated as negligible next to the embedded PS).
+    pub fn transfer_ns(
+        &self,
+        bytes: u64,
+        src: Option<&BoardProfile>,
+        dst: Option<&BoardProfile>,
+    ) -> Nanos {
+        let mut t = self.handshake_ns + self.switch_latency_ns;
+        t += self.link.serialize_ns(bytes);
+        if let Some(b) = src {
+            t += self.cpu_stage_ns(bytes, b);
+        }
+        if let Some(b) = dst {
+            t += self.cpu_stage_ns(bytes, b);
+        }
+        t
+    }
+
+    /// Sender-side occupancy: how long the sender is blocked (same as the
+    /// transfer for blocking MPI — the defining inefficiency).
+    pub fn sender_busy_ns(
+        &self,
+        bytes: u64,
+        src: Option<&BoardProfile>,
+        dst: Option<&BoardProfile>,
+    ) -> Nanos {
+        self.transfer_ns(bytes, src, dst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Calibration;
+
+    fn model() -> MpiModel {
+        MpiModel::from_calibration(
+            &Calibration {
+                mpi_handshake_us: 500.0,
+                dma_cpu_ns_per_byte: 8.0,
+                ..Default::default()
+            },
+            10_000,
+        )
+    }
+
+    #[test]
+    fn transfer_decomposition() {
+        let m = model();
+        let z = BoardProfile::zynq7020();
+        let bytes = 224 * 224 * 3u64; // one image
+        let t = m.transfer_ns(bytes, None, Some(&z));
+        // handshake 500 µs + switch 10 µs + wire ≈1.28 ms + CPU ≈1.2 ms
+        assert!(t > 2_500_000, "{t}");
+        assert!(t < 4_500_000, "{t}");
+    }
+
+    #[test]
+    fn faster_ps_stages_faster() {
+        let m = model();
+        let z = BoardProfile::zynq7020();
+        let u = BoardProfile::zu_mpsoc();
+        let bytes = 1_000_000;
+        assert!(m.cpu_stage_ns(bytes, &u) < m.cpu_stage_ns(bytes, &z));
+        // 650 MHz / 1.5 GHz ≈ 0.43×
+        let ratio = m.cpu_stage_ns(bytes, &u) as f64 / m.cpu_stage_ns(bytes, &z) as f64;
+        assert!((0.40..0.47).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn fpga_to_fpga_pays_both_sides() {
+        let m = model();
+        let z = BoardProfile::zynq7020();
+        let b = 500_000u64;
+        let one = m.transfer_ns(b, None, Some(&z));
+        let both = m.transfer_ns(b, Some(&z), Some(&z));
+        assert!(both > one);
+        assert_eq!(both - one, m.cpu_stage_ns(b, &z));
+    }
+
+    #[test]
+    fn handshake_dominates_small_messages() {
+        let m = model();
+        let t = m.transfer_ns(100, None, None);
+        // ≈ handshake + switch + 1 frame
+        assert!((500_000 + 10_000 + 12_000..540_000).contains(&t), "{t}");
+    }
+}

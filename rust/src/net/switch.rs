@@ -1,0 +1,190 @@
+//! Store-and-forward Ethernet switch with per-port contention.
+//!
+//! The cluster shares one switch: the master's single 1 Gb/s port is the
+//! serialization point for scatter/gather traffic (why scatter-gather
+//! stops scaling past ~10 nodes), and node-to-node pipeline transfers
+//! contend on their own ports. Modeled as one FIFO server per output
+//! port at line rate — a message occupies its source's ingress port and
+//! its destination's egress port for its wire time.
+
+use super::link::LinkModel;
+use crate::util::units::Nanos;
+
+/// Endpoint id: the master host or a numbered FPGA node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Endpoint {
+    Master,
+    Node(usize),
+}
+
+/// One message to schedule through the switch.
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub src: Endpoint,
+    pub dst: Endpoint,
+    pub bytes: u64,
+    /// Earliest time the payload is ready to leave the sender.
+    pub ready_ns: Nanos,
+}
+
+/// Result of scheduling a flow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowTiming {
+    /// When the last bit arrives at the destination.
+    pub arrival_ns: Nanos,
+    /// Time spent waiting for port availability (contention).
+    pub queueing_ns: Nanos,
+}
+
+/// Incremental port-contention simulator. Feed flows in any order; each
+/// `schedule` call books wire time on the source ingress and destination
+/// egress ports and returns the arrival time.
+#[derive(Debug, Clone)]
+pub struct SwitchSim {
+    link: LinkModel,
+    forward_latency_ns: Nanos,
+    /// Next-free time per endpoint port (ingress/egress modeled jointly —
+    /// full-duplex is approximated by separate in/out bookkeeping).
+    egress_free: std::collections::HashMap<Endpoint, Nanos>,
+    ingress_free: std::collections::HashMap<Endpoint, Nanos>,
+}
+
+impl SwitchSim {
+    pub fn new(link: LinkModel, forward_latency_ns: Nanos) -> Self {
+        SwitchSim {
+            link,
+            forward_latency_ns,
+            egress_free: Default::default(),
+            ingress_free: Default::default(),
+        }
+    }
+
+    /// Book a flow; returns arrival time at the destination.
+    pub fn schedule(&mut self, flow: &Flow) -> FlowTiming {
+        let wire = self.link.serialize_ns(flow.bytes);
+        let src_free = *self.egress_free.get(&flow.src).unwrap_or(&0);
+        let dst_free = *self.ingress_free.get(&flow.dst).unwrap_or(&0);
+        let start = flow.ready_ns.max(src_free).max(dst_free);
+        let queueing = start - flow.ready_ns;
+        // store-and-forward: sender occupies its port for `wire`, the
+        // switch forwards after latency, receiver port busy for `wire`.
+        let sender_done = start + wire;
+        let arrival = sender_done + self.forward_latency_ns;
+        self.egress_free.insert(flow.src, sender_done);
+        self.ingress_free.insert(flow.dst, arrival);
+        FlowTiming { arrival_ns: arrival, queueing_ns: queueing }
+    }
+
+    /// When an endpoint's egress port frees up (for blocking senders).
+    pub fn egress_free_at(&self, ep: Endpoint) -> Nanos {
+        *self.egress_free.get(&ep).unwrap_or(&0)
+    }
+
+    pub fn reset(&mut self) {
+        self.egress_free.clear();
+        self.ingress_free.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> SwitchSim {
+        SwitchSim::new(LinkModel::gigabit(), 10_000)
+    }
+
+    #[test]
+    fn single_flow_is_wire_plus_latency() {
+        let mut s = sim();
+        let f = Flow { src: Endpoint::Master, dst: Endpoint::Node(0), bytes: 1460, ready_ns: 0 };
+        let t = s.schedule(&f);
+        let wire = LinkModel::gigabit().serialize_ns(1460);
+        assert_eq!(t.arrival_ns, wire + 10_000);
+        assert_eq!(t.queueing_ns, 0);
+    }
+
+    #[test]
+    fn master_scatter_serializes_on_master_port() {
+        // master → N nodes: each flow queues behind the previous on the
+        // master's egress port (the paper's scatter bottleneck).
+        let mut s = sim();
+        let wire = LinkModel::gigabit().serialize_ns(150_528);
+        let mut last_arrival = 0;
+        for n in 0..4 {
+            let f = Flow {
+                src: Endpoint::Master,
+                dst: Endpoint::Node(n),
+                bytes: 150_528,
+                ready_ns: 0,
+            };
+            let t = s.schedule(&f);
+            assert_eq!(t.queueing_ns, n as u64 * wire);
+            assert!(t.arrival_ns > last_arrival);
+            last_arrival = t.arrival_ns;
+        }
+        // 4th image waits for 3 previous serializations
+        assert_eq!(last_arrival, 4 * wire + 10_000);
+    }
+
+    #[test]
+    fn distinct_node_pairs_do_not_contend() {
+        let mut s = sim();
+        let a = s.schedule(&Flow {
+            src: Endpoint::Node(0),
+            dst: Endpoint::Node(1),
+            bytes: 100_000,
+            ready_ns: 0,
+        });
+        let b = s.schedule(&Flow {
+            src: Endpoint::Node(2),
+            dst: Endpoint::Node(3),
+            bytes: 100_000,
+            ready_ns: 0,
+        });
+        assert_eq!(a.arrival_ns, b.arrival_ns);
+        assert_eq!(b.queueing_ns, 0);
+    }
+
+    #[test]
+    fn gather_contends_on_master_ingress() {
+        let mut s = sim();
+        let wire = LinkModel::gigabit().serialize_ns(50_000);
+        let t1 = s.schedule(&Flow {
+            src: Endpoint::Node(0),
+            dst: Endpoint::Master,
+            bytes: 50_000,
+            ready_ns: 0,
+        });
+        let t2 = s.schedule(&Flow {
+            src: Endpoint::Node(1),
+            dst: Endpoint::Master,
+            bytes: 50_000,
+            ready_ns: 0,
+        });
+        assert!(t2.arrival_ns >= t1.arrival_ns + wire);
+        assert!(t2.queueing_ns > 0);
+    }
+
+    #[test]
+    fn ready_time_respected() {
+        let mut s = sim();
+        let t = s.schedule(&Flow {
+            src: Endpoint::Node(0),
+            dst: Endpoint::Node(1),
+            bytes: 1000,
+            ready_ns: 5_000_000,
+        });
+        assert!(t.arrival_ns > 5_000_000);
+        assert_eq!(t.queueing_ns, 0);
+    }
+
+    #[test]
+    fn reset_clears_bookings() {
+        let mut s = sim();
+        s.schedule(&Flow { src: Endpoint::Master, dst: Endpoint::Node(0), bytes: 1e6 as u64, ready_ns: 0 });
+        assert!(s.egress_free_at(Endpoint::Master) > 0);
+        s.reset();
+        assert_eq!(s.egress_free_at(Endpoint::Master), 0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Per-thread PJRT engine: compile-once, execute-many.
+//!
+//! Loads HLO text (the interchange contract — see DESIGN.md §3), compiles
+//! through the PJRT CPU client, caches the executable, and converts
+//! tensors to/from literals. One `Engine` per coordinator worker thread
+//! (`PjRtClient` is not `Send`): each simulated FPGA owns its own
+//! compiled segments and weights, exactly like a real node owns its
+//! bitstream.
+
+use super::manifest::{ArtifactEntry, Manifest};
+use super::tensor::TensorData;
+use std::collections::HashMap;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    weights: HashMap<String, TensorData>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory.
+    pub fn new(manifest: Manifest) -> anyhow::Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine { client, manifest, executables: HashMap::new(), weights: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.by_name(name)?.clone();
+        let path = self.manifest.path(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path not UTF-8"),
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Number of compiled executables resident.
+    pub fn loaded(&self) -> usize {
+        self.executables.len()
+    }
+
+    /// Fetch (cached) weights for a segment artifact as a flat i8 tensor.
+    pub fn weights_for(&mut self, entry: &ArtifactEntry) -> anyhow::Result<TensorData> {
+        if let Some(w) = self.weights.get(&entry.name) {
+            return Ok(w.clone());
+        }
+        let file = entry
+            .weights_file
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("artifact '{}' has no weights", entry.name))?;
+        let blob = self.manifest.read_blob(file)?;
+        let t = TensorData::from_bytes(
+            vec![blob.len()],
+            crate::graph::tensor::DType::I8,
+            &blob,
+        )?;
+        self.weights.insert(entry.name.clone(), t.clone());
+        Ok(t)
+    }
+
+    /// Execute an artifact with explicit inputs. The module returns a
+    /// 1-tuple (lowered with `return_tuple=True`); the single element is
+    /// converted per the manifest's output spec.
+    pub fn execute(&mut self, name: &str, inputs: &[TensorData]) -> anyhow::Result<TensorData> {
+        self.load(name)?;
+        let entry = self.manifest.by_name(name)?.clone();
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "artifact '{name}' takes {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape == spec.shape && t.dtype() == spec.dtype,
+                "input {i} of '{name}': got {:?}/{:?}, want {:?}/{:?}",
+                t.shape,
+                t.dtype(),
+                spec.shape,
+                spec.dtype
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_, _>>()?;
+        let exe = self.executables.get(name).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {name}: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untupling result of {name}: {e:?}"))?;
+        let spec = &entry.outputs[0];
+        TensorData::from_literal(&out, spec.shape.clone(), spec.dtype)
+    }
+
+    /// Run a segment artifact on an activation: weights supplied from the
+    /// manifest blobs automatically.
+    pub fn run_segment(&mut self, name: &str, activation: &TensorData) -> anyhow::Result<TensorData> {
+        let entry = self.manifest.by_name(name)?.clone();
+        let weights = self.weights_for(&entry)?;
+        self.execute(name, &[activation.clone(), weights])
+    }
+
+    /// Run a chain of segment artifacts (a pipeline stage).
+    pub fn run_chain(
+        &mut self,
+        names: &[String],
+        activation: &TensorData,
+    ) -> anyhow::Result<TensorData> {
+        let mut x = activation.clone();
+        for name in names {
+            x = self.run_segment(name, &x)?;
+        }
+        Ok(x)
+    }
+}

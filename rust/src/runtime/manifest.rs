@@ -1,0 +1,259 @@
+//! `artifacts/manifest.json` — the index written by the AOT exporter.
+
+use crate::graph::tensor::DType;
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    /// HLO text file (empty for test vectors).
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub macs: u64,
+    pub param_bytes: u64,
+    pub weights_file: Option<String>,
+    pub segment: Option<String>,
+    pub segment_index: Option<usize>,
+    pub input_hw: Option<u64>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TestVector {
+    pub name: String,
+    pub artifact: String,
+    pub input_file: String,
+    pub output_file: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub out_dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model_name: String,
+    pub total_macs: u64,
+    pub total_param_bytes: u64,
+    pub segment_names: Vec<String>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub test_vectors: Vec<TestVector>,
+}
+
+fn io_spec(j: &Json) -> anyhow::Result<IoSpec> {
+    let shape = j
+        .req("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>, _>>()?;
+    let dtype = DType::parse(j.get_str("dtype")?)?;
+    Ok(IoSpec { shape, dtype })
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = json::from_file(&dir.join("manifest.json"))?;
+        let model = j.req("model")?;
+        let mut artifacts = Vec::new();
+        let mut test_vectors = Vec::new();
+        for a in j.req("artifacts")?.as_arr()? {
+            let kind = a.get_str("kind")?.to_string();
+            if kind == "test_vector" {
+                test_vectors.push(TestVector {
+                    name: a.get_str("name")?.to_string(),
+                    artifact: a.get_str("artifact")?.to_string(),
+                    input_file: a.get_str("input_file")?.to_string(),
+                    output_file: a.get_str("output_file")?.to_string(),
+                    in_shape: a
+                        .req("in_shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>, _>>()?,
+                    out_shape: a
+                        .req("out_shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>, _>>()?,
+                    out_dtype: DType::parse(a.get_str("out_dtype")?)?,
+                });
+                continue;
+            }
+            artifacts.push(ArtifactEntry {
+                name: a.get_str("name")?.to_string(),
+                kind,
+                file: a.get_str("file")?.to_string(),
+                inputs: a
+                    .req("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(io_spec)
+                    .collect::<Result<Vec<_>, _>>()?,
+                outputs: a
+                    .req("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(io_spec)
+                    .collect::<Result<Vec<_>, _>>()?,
+                macs: a.get("macs").map(|m| m.as_u64()).transpose()?.unwrap_or(0),
+                param_bytes: a
+                    .get("param_bytes")
+                    .map(|m| m.as_u64())
+                    .transpose()?
+                    .unwrap_or(0),
+                weights_file: a
+                    .get("weights_file")
+                    .map(|w| w.as_str().map(str::to_string))
+                    .transpose()?,
+                segment: a
+                    .get("segment")
+                    .map(|s| s.as_str().map(str::to_string))
+                    .transpose()?,
+                segment_index: a.get("segment_index").map(|s| s.as_usize()).transpose()?,
+                input_hw: a.get("input_hw").map(|s| s.as_u64()).transpose()?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model_name: model.get_str("name")?.to_string(),
+            total_macs: model.get_u64("total_macs")?,
+            total_param_bytes: model.get_u64("total_param_bytes")?,
+            segment_names: model
+                .req("segments")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_str().map(str::to_string))
+                .collect::<Result<Vec<_>, _>>()?,
+            artifacts,
+            test_vectors,
+        })
+    }
+
+    pub fn by_name(&self, name: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Segment artifacts for a given input size, ordered by segment
+    /// index. `fast` selects the serving-optimized (ref-impl) variant;
+    /// the default (pallas) variant is the correctness reference.
+    pub fn segments_variant(&self, input_hw: u64, fast: bool) -> Vec<&ArtifactEntry> {
+        let mut out: Vec<&ArtifactEntry> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == "segment"
+                    && a.input_hw == Some(input_hw)
+                    && a.name.contains("fast_") == fast
+            })
+            .collect();
+        out.sort_by_key(|a| a.segment_index);
+        out
+    }
+
+    /// Pallas-variant segment artifacts (the correctness reference).
+    pub fn segments(&self, input_hw: u64) -> Vec<&ArtifactEntry> {
+        self.segments_variant(input_hw, false)
+    }
+
+    /// The whole-model artifact for a given input size and variant.
+    pub fn full_variant(&self, input_hw: u64, fast: bool) -> anyhow::Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kind == "full"
+                    && a.input_hw == Some(input_hw)
+                    && a.name.contains("fast_") == fast
+            })
+            .ok_or_else(|| anyhow::anyhow!("no full artifact @{input_hw} (fast={fast})"))
+    }
+
+    /// Pallas-variant whole-model artifact.
+    pub fn full(&self, input_hw: u64) -> anyhow::Result<&ArtifactEntry> {
+        self.full_variant(input_hw, false)
+    }
+
+    /// Absolute path of an artifact-relative file.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load a `.bin` blob.
+    pub fn read_blob(&self, file: &str) -> anyhow::Result<Vec<u8>> {
+        std::fs::read(self.path(file))
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", self.path(file).display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.model_name, "resnet18");
+        assert_eq!(m.segment_names.len(), 10);
+        assert_eq!(m.total_macs, 1_814_073_344);
+        assert_eq!(m.segments(224).len(), 10);
+        assert_eq!(m.segments(32).len(), 10);
+        assert!(m.full(224).is_ok());
+        assert!(m.full(32).is_ok());
+        assert_eq!(m.test_vectors.len(), 11);
+    }
+
+    #[test]
+    fn manifest_macs_match_graph_ir() {
+        // the python L2 model and the rust graph IR must agree exactly
+        let Some(m) = manifest() else { return };
+        let g = crate::graph::resnet::build_resnet18(224).unwrap();
+        assert_eq!(m.total_macs, g.total_macs());
+        for (label, macs) in crate::graph::resnet::segment_macs(&g) {
+            let art = m
+                .segments(224)
+                .into_iter()
+                .find(|a| a.segment.as_deref() == Some(label.as_str()))
+                .unwrap();
+            assert_eq!(art.macs, macs, "segment {label}");
+        }
+    }
+
+    #[test]
+    fn segment_weights_exist_and_sized() {
+        let Some(m) = manifest() else { return };
+        for seg in m.segments(32) {
+            let wf = seg.weights_file.as_ref().unwrap();
+            let blob = m.read_blob(wf).unwrap();
+            assert_eq!(blob.len() as u64, seg.param_bytes, "{}", seg.name);
+        }
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(m) = manifest() else { return };
+        assert!(m.by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the L3↔L2 bridge. Python never runs here: the artifacts
+//! directory is self-contained (HLO text + weight blobs + manifest) and
+//! everything below speaks the `xla` crate's PJRT C API.
+//!
+//! * [`tensor`]   — host tensors (int8/int32) with shape, literal conversion
+//! * [`manifest`] — `manifest.json` index of artifacts and test vectors
+//! * [`engine`]   — per-thread PJRT client + compiled-executable cache
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so each coordinator worker
+//! thread owns a private [`engine::Engine`] — which mirrors the paper's
+//! deployment, where every FPGA node holds its own bitstream and weights.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactEntry, Manifest};
+pub use tensor::TensorData;
+
+/// Resolve the artifacts directory: `$VTA_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("VTA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

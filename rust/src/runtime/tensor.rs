@@ -1,0 +1,173 @@
+//! Host tensors for the serving path: int8 activations, int32 logits.
+
+use crate::graph::tensor::DType;
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorData {
+    pub shape: Vec<usize>,
+    pub data: Payload,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn i8(shape: Vec<usize>, data: Vec<i8>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Ok(TensorData { shape, data: Payload::I8(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Ok(TensorData { shape, data: Payload::I32(data) })
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Payload::I8(_) => DType::I8,
+            Payload::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_i8(&self) -> anyhow::Result<&[i8]> {
+        match &self.data {
+            Payload::I8(v) => Ok(v),
+            Payload::I32(_) => anyhow::bail!("tensor is int32, expected int8"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match &self.data {
+            Payload::I32(v) => Ok(v),
+            Payload::I8(_) => anyhow::bail!("tensor is int8, expected int32"),
+        }
+    }
+
+    /// Raw little-endian bytes (the `.bin` file format of the exporter).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match &self.data {
+            Payload::I8(v) => v.iter().map(|&x| x as u8).collect(),
+            Payload::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+
+    /// Parse raw bytes into a tensor of the given shape/dtype.
+    pub fn from_bytes(shape: Vec<usize>, dtype: DType, bytes: &[u8]) -> anyhow::Result<Self> {
+        let elems: usize = shape.iter().product();
+        match dtype {
+            DType::I8 => {
+                anyhow::ensure!(
+                    bytes.len() == elems,
+                    "expected {elems} bytes for int8 {shape:?}, got {}",
+                    bytes.len()
+                );
+                TensorData::i8(shape, bytes.iter().map(|&b| b as i8).collect())
+            }
+            DType::I32 => {
+                anyhow::ensure!(
+                    bytes.len() == elems * 4,
+                    "expected {} bytes for int32 {shape:?}, got {}",
+                    elems * 4,
+                    bytes.len()
+                );
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                TensorData::i32(shape, data)
+            }
+        }
+    }
+
+    /// Convert to an XLA literal for PJRT execution.
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let bytes = self.to_bytes();
+        let ty = match self.dtype() {
+            DType::I8 => xla::ElementType::S8,
+            DType::I32 => xla::ElementType::S32,
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &self.shape, &bytes)
+            .map_err(|e| anyhow::anyhow!("literal creation failed: {e:?}"))
+    }
+
+    /// Convert an XLA literal (of the expected shape/dtype) back.
+    pub fn from_literal(
+        lit: &xla::Literal,
+        shape: Vec<usize>,
+        dtype: DType,
+    ) -> anyhow::Result<Self> {
+        match dtype {
+            DType::I8 => {
+                let v = lit
+                    .to_vec::<i8>()
+                    .map_err(|e| anyhow::anyhow!("literal→i8: {e:?}"))?;
+                TensorData::i8(shape, v)
+            }
+            DType::I32 => {
+                let v = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("literal→i32: {e:?}"))?;
+                TensorData::i32(shape, v)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(TensorData::i8(vec![2, 3], vec![0; 5]).is_err());
+        assert!(TensorData::i32(vec![4], vec![0; 4]).is_ok());
+    }
+
+    #[test]
+    fn byte_roundtrip_i8() {
+        let t = TensorData::i8(vec![2, 2], vec![-128, -1, 0, 127]).unwrap();
+        let b = t.to_bytes();
+        let back = TensorData::from_bytes(vec![2, 2], DType::I8, &b).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn byte_roundtrip_i32() {
+        let t = TensorData::i32(vec![3], vec![i32::MIN, 0, i32::MAX]).unwrap();
+        let b = t.to_bytes();
+        assert_eq!(b.len(), 12);
+        let back = TensorData::from_bytes(vec![3], DType::I32, &b).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn from_bytes_length_checked() {
+        assert!(TensorData::from_bytes(vec![4], DType::I32, &[0; 15]).is_err());
+        assert!(TensorData::from_bytes(vec![4], DType::I8, &[0; 3]).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = TensorData::i8(vec![1], vec![5]).unwrap();
+        assert!(t.as_i8().is_ok());
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.dtype(), DType::I8);
+        assert_eq!(t.elems(), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's §II-C contribution: the four NN-graph scheduling
+//! strategies over the FPGA cluster.
+//!
+//! * [`plan`]       — `ExecutionPlan`: stages × replica node sets × split
+//!                    mode, with validation invariants
+//! * [`strategies`] — constructors: Scatter-Gather, AI Core Assignment,
+//!                    Pipeline Scheduling, Fused Schedule
+
+pub mod plan;
+pub mod strategies;
+
+pub use plan::{ExecutionPlan, SplitMode, StagePlan, Strategy};
+pub use strategies::{build_plan, core_assign, fused, pipeline, scatter_gather};

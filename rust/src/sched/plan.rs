@@ -1,0 +1,243 @@
+//! Execution plans: what runs where.
+//!
+//! A plan is an ordered list of **stages**; each stage owns a contiguous
+//! run of graph segments and a set of replica nodes. The split mode says
+//! how replicas share work:
+//!
+//! * `DataParallel` — whole images round-robin across replicas
+//!   (scatter-gather within a stage),
+//! * `Spatial` — each image's activations are split row-wise across all
+//!   replicas, which cooperate on every image (AI-core assignment of
+//!   extra compute to one operator).
+
+use crate::graph::resnet::SEGMENT_NAMES;
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    ScatterGather,
+    CoreAssign,
+    Pipeline,
+    Fused,
+}
+
+impl Strategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Strategy::ScatterGather => "scatter-gather",
+            Strategy::CoreAssign => "ai-core-assignment",
+            Strategy::Pipeline => "pipeline",
+            Strategy::Fused => "fused",
+        }
+    }
+
+    pub fn all() -> [Strategy; 4] {
+        [Strategy::ScatterGather, Strategy::CoreAssign, Strategy::Pipeline, Strategy::Fused]
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "scatter-gather" | "sg" | "scatter_gather" => Ok(Strategy::ScatterGather),
+            "ai-core-assignment" | "core-assign" | "ai" | "core_assign" => {
+                Ok(Strategy::CoreAssign)
+            }
+            "pipeline" | "pipe" => Ok(Strategy::Pipeline),
+            "fused" => Ok(Strategy::Fused),
+            other => anyhow::bail!("unknown strategy '{other}'"),
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitMode {
+    DataParallel,
+    Spatial,
+}
+
+/// One pipeline stage of a plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    /// Contiguous segment labels executed by this stage, in graph order.
+    pub segments: Vec<String>,
+    /// Nodes executing this stage (≥ 1). May overlap with other stages
+    /// (AI-core assignment packs multiple segments per node at small N).
+    pub replicas: Vec<usize>,
+    pub split: SplitMode,
+}
+
+/// A complete schedule of the ResNet graph over the cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    pub strategy: Strategy,
+    pub n_nodes: usize,
+    pub stages: Vec<StagePlan>,
+}
+
+impl ExecutionPlan {
+    /// Invariants every strategy must satisfy (property-tested):
+    /// 1. stages cover all 10 segments exactly once, in order;
+    /// 2. every referenced node id is `< n_nodes`;
+    /// 3. every node id is referenced by at least one stage (no idle
+    ///    hardware — the paper always uses the whole cluster);
+    /// 4. every stage has ≥ 1 replica; spatial stages have ≥ 2.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.stages.is_empty(), "plan has no stages");
+        let covered: Vec<&str> = self
+            .stages
+            .iter()
+            .flat_map(|s| s.segments.iter().map(|x| x.as_str()))
+            .collect();
+        let want: Vec<&str> = SEGMENT_NAMES.to_vec();
+        anyhow::ensure!(
+            covered == want,
+            "stages cover {covered:?}, want {want:?} (contiguous, in order)"
+        );
+        let mut seen = vec![false; self.n_nodes];
+        for (i, st) in self.stages.iter().enumerate() {
+            anyhow::ensure!(!st.replicas.is_empty(), "stage {i} has no replicas");
+            if st.split == SplitMode::Spatial {
+                anyhow::ensure!(
+                    st.replicas.len() >= 2,
+                    "stage {i} is Spatial with a single replica"
+                );
+            }
+            let mut uniq = st.replicas.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            anyhow::ensure!(
+                uniq.len() == st.replicas.len(),
+                "stage {i} lists a replica twice"
+            );
+            for &r in &st.replicas {
+                anyhow::ensure!(r < self.n_nodes, "stage {i} references node {r} ≥ {}", self.n_nodes);
+                seen[r] = true;
+            }
+        }
+        for (n, s) in seen.iter().enumerate() {
+            anyhow::ensure!(*s, "node {n} is never used by the plan");
+        }
+        Ok(())
+    }
+
+    /// Total replica slots (for reporting).
+    pub fn total_assignments(&self) -> usize {
+        self.stages.iter().map(|s| s.replicas.len()).sum()
+    }
+
+    /// Human-readable summary for logs and benches.
+    pub fn describe(&self) -> String {
+        let mut s = format!("{} over {} nodes:\n", self.strategy, self.n_nodes);
+        for (i, st) in self.stages.iter().enumerate() {
+            s.push_str(&format!(
+                "  stage {i}: [{}] on nodes {:?} ({:?})\n",
+                st.segments.join(","),
+                st.replicas,
+                st.split
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn whole_graph_stage(replicas: Vec<usize>) -> StagePlan {
+        StagePlan {
+            segments: seg(&SEGMENT_NAMES),
+            replicas,
+            split: SplitMode::DataParallel,
+        }
+    }
+
+    #[test]
+    fn valid_single_stage_plan() {
+        let p = ExecutionPlan {
+            strategy: Strategy::ScatterGather,
+            n_nodes: 4,
+            stages: vec![whole_graph_stage(vec![0, 1, 2, 3])],
+        };
+        p.validate().unwrap();
+        assert_eq!(p.total_assignments(), 4);
+    }
+
+    #[test]
+    fn rejects_gap_in_coverage() {
+        let p = ExecutionPlan {
+            strategy: Strategy::Pipeline,
+            n_nodes: 2,
+            stages: vec![
+                StagePlan {
+                    segments: seg(&["stem", "s1b1"]),
+                    replicas: vec![0],
+                    split: SplitMode::DataParallel,
+                },
+                StagePlan {
+                    // skips s1b2
+                    segments: seg(&["s2b1", "s2b2", "s3b1", "s3b2", "s4b1", "s4b2", "head"]),
+                    replicas: vec![1],
+                    split: SplitMode::DataParallel,
+                },
+            ],
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_idle_node() {
+        let p = ExecutionPlan {
+            strategy: Strategy::ScatterGather,
+            n_nodes: 3,
+            stages: vec![whole_graph_stage(vec![0, 1])],
+        };
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("never used"), "{e}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_node() {
+        let p = ExecutionPlan {
+            strategy: Strategy::ScatterGather,
+            n_nodes: 2,
+            stages: vec![whole_graph_stage(vec![0, 2])],
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_single_replica_spatial() {
+        let mut st = whole_graph_stage(vec![0]);
+        st.split = SplitMode::Spatial;
+        let p = ExecutionPlan { strategy: Strategy::CoreAssign, n_nodes: 1, stages: vec![st] };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_replica() {
+        let p = ExecutionPlan {
+            strategy: Strategy::ScatterGather,
+            n_nodes: 2,
+            stages: vec![whole_graph_stage(vec![0, 0, 1])],
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in Strategy::all() {
+            assert_eq!(Strategy::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(Strategy::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,415 @@
+//! The four scheduling strategies of §II-C.
+//!
+//! Each constructor takes the workload graph, the cluster size, and a
+//! per-segment cost oracle (`seg_cost`, typically the calibrated node
+//! time from `sim::cost`) and returns a validated [`ExecutionPlan`].
+
+use super::plan::{ExecutionPlan, SplitMode, StagePlan, Strategy};
+use crate::graph::partition::{atomic_segments, partition_balanced};
+use crate::graph::Graph;
+
+/// §II-C.1 Scatter-Gather: pure data parallelism — whole images are
+/// distributed across all nodes and results gathered in order.
+pub fn scatter_gather(g: &Graph, n: usize) -> anyhow::Result<ExecutionPlan> {
+    anyhow::ensure!(n >= 1, "need at least one node");
+    let plan = ExecutionPlan {
+        strategy: Strategy::ScatterGather,
+        n_nodes: n,
+        stages: vec![StagePlan {
+            segments: g.segment_order(),
+            replicas: (0..n).collect(),
+            split: SplitMode::DataParallel,
+        }],
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// §II-C.2 AI Core Assignment: segment-granular placement that gives the
+/// bottleneck operators the most compute.
+///
+/// * `n ≥ #segments`: every segment gets its own node; leftover nodes are
+///   water-filled onto the segments with the highest per-replica cost and
+///   cooperate spatially on each image (the "more consumer nodes for a
+///   given task" of the paper).
+/// * `n < #segments`: LPT bin-packing of segments onto nodes by cost —
+///   deliberately **non-contiguous** (bottleneck first, adjacency
+///   ignored), which is what distinguishes it from Pipeline Scheduling
+///   and produces the paper's heavy inter-node traffic at small N.
+pub fn core_assign<F>(g: &Graph, n: usize, seg_cost: F) -> anyhow::Result<ExecutionPlan>
+where
+    F: Fn(&str) -> f64,
+{
+    anyhow::ensure!(n >= 1, "need at least one node");
+    if n == 1 {
+        // degenerate: one node runs the whole graph as one launch (the
+        // paper's N=1 row is identical across strategies)
+        let mut plan = scatter_gather(g, 1)?;
+        plan.strategy = Strategy::CoreAssign;
+        return Ok(plan);
+    }
+    let atoms = atomic_segments(g);
+    let k = atoms.len();
+    let costs: Vec<f64> = atoms.iter().map(|a| seg_cost(&a.labels[0])).collect();
+
+    // Replica counts per segment: start at 1, then repeatedly give the
+    // current bottleneck segment another consumer node as long as the
+    // packed max node load improves — "assigning more compute resources
+    // to the bottleneck workload in the computational graph" (§II-C.2).
+    // Light segments share nodes (LPT), which is what frees capacity.
+    let mut k_s = vec![1usize; k];
+
+    // LPT-pack slices (segment i has k_s[i] slices of cost c_i/k_s[i],
+    // on distinct nodes) and return (max load, per-segment node lists).
+    let pack = |k_s: &[usize]| -> Option<(f64, Vec<Vec<usize>>)> {
+        let mut slices: Vec<(f64, usize)> = Vec::new(); // (cost, segment)
+        for (i, &ks) in k_s.iter().enumerate() {
+            for _ in 0..ks {
+                slices.push((costs[i] / ks as f64, i));
+            }
+        }
+        slices.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut load = vec![0.0f64; n];
+        let mut nodes: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (c, seg) in slices {
+            // least-loaded node not already hosting a slice of this segment
+            let node = (0..n)
+                .filter(|nd| !nodes[seg].contains(nd))
+                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())?;
+            load[node] += c;
+            nodes[seg].push(node);
+        }
+        let max = load.iter().copied().fold(0.0f64, f64::max);
+        Some((max, nodes))
+    };
+
+    let (mut best_load, mut best_nodes) =
+        pack(&k_s).ok_or_else(|| anyhow::anyhow!("cannot pack segments onto {n} nodes"))?;
+    loop {
+        // bottleneck segment = the one whose slice cost is largest
+        let (bot, _) = k_s
+            .iter()
+            .enumerate()
+            .map(|(i, &ks)| (i, costs[i] / ks as f64))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        if k_s[bot] >= n {
+            break; // cannot split further than the cluster
+        }
+        k_s[bot] += 1;
+        match pack(&k_s) {
+            Some((load, nodes)) if load < best_load - 1e-9 => {
+                best_load = load;
+                best_nodes = nodes;
+            }
+            _ => {
+                k_s[bot] -= 1;
+                break;
+            }
+        }
+    }
+
+    // make sure every node is used (plan invariant): give unused nodes to
+    // the bottleneck segment as extra spatial replicas
+    loop {
+        let mut used = vec![false; n];
+        for nodes in &best_nodes {
+            for &nd in nodes {
+                used[nd] = true;
+            }
+        }
+        let Some(idle) = used.iter().position(|u| !u) else { break };
+        let (bot, _) = k_s
+            .iter()
+            .enumerate()
+            .filter(|(i, &ks)| !best_nodes[*i].contains(&idle) && ks < n)
+            .map(|(i, &ks)| (i, costs[i] / ks as f64))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .ok_or_else(|| anyhow::anyhow!("cannot place node {idle}"))?;
+        k_s[bot] += 1;
+        best_nodes[bot].push(idle);
+    }
+
+    let stages: Vec<StagePlan> = atoms
+        .iter()
+        .enumerate()
+        .map(|(i, a)| StagePlan {
+            segments: a.labels.clone(),
+            replicas: best_nodes[i].clone(),
+            split: if best_nodes[i].len() > 1 {
+                SplitMode::Spatial
+            } else {
+                SplitMode::DataParallel
+            },
+        })
+        .collect();
+    let plan = ExecutionPlan { strategy: Strategy::CoreAssign, n_nodes: n, stages };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// §II-C.3 Pipeline Scheduling: contiguous stages, one node each,
+/// balanced by the cost oracle (exact DP). For `n` beyond the segment
+/// count the extra nodes replicate the heaviest stages data-parallel
+/// (each stage stays internally sequential, as in the paper).
+pub fn pipeline<F>(g: &Graph, n: usize, seg_cost: F) -> anyhow::Result<ExecutionPlan>
+where
+    F: Fn(&str) -> f64,
+{
+    anyhow::ensure!(n >= 1, "need at least one node");
+    let atoms = atomic_segments(g);
+    let depth = n.min(atoms.len());
+    let parts = partition_balanced(g, depth, |s| seg_cost(&s.labels[0]))?;
+    let mut stages: Vec<StagePlan> = parts
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| StagePlan {
+            segments: p.labels,
+            replicas: vec![i],
+            split: SplitMode::DataParallel,
+        })
+        .collect();
+    // extra nodes (n > segments): replicate bottleneck stages
+    for extra in depth..n {
+        let (idx, _) = stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                let cost: f64 = st.segments.iter().map(|s| seg_cost(s)).sum();
+                (i, cost / st.replicas.len() as f64)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        stages[idx].replicas.push(extra);
+    }
+    let plan = ExecutionPlan { strategy: Strategy::Pipeline, n_nodes: n, stages };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// §II-C.4 Fused Schedule: pipeline + core assignment. Searches every
+/// pipeline depth `j ≤ n`, assigns the `n − j` leftover nodes to the
+/// most loaded stages (spatially, as AI-core does), and keeps the depth
+/// with the best predicted throughput `max_s cost(s)/replicas(s)`.
+pub fn fused<F>(g: &Graph, n: usize, seg_cost: F) -> anyhow::Result<ExecutionPlan>
+where
+    F: Fn(&str) -> f64,
+{
+    anyhow::ensure!(n >= 1, "need at least one node");
+    let atoms = atomic_segments(g);
+    let max_depth = n.min(atoms.len());
+    let mut best: Option<(f64, ExecutionPlan)> = None;
+
+    for depth in 1..=max_depth {
+        let parts = partition_balanced(g, depth, |s| seg_cost(&s.labels[0]))?;
+        let mut stages: Vec<StagePlan> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| StagePlan {
+                segments: p.labels,
+                replicas: vec![i],
+                split: SplitMode::DataParallel,
+            })
+            .collect();
+        for extra in depth..n {
+            let (idx, _) = stages
+                .iter()
+                .enumerate()
+                .map(|(i, st)| {
+                    let cost: f64 = st.segments.iter().map(|s| seg_cost(s)).sum();
+                    (i, cost / st.replicas.len() as f64)
+                })
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            stages[idx].replicas.push(extra);
+            stages[idx].split = SplitMode::Spatial;
+        }
+        let bottleneck = stages
+            .iter()
+            .map(|st| {
+                let cost: f64 = st.segments.iter().map(|s| seg_cost(s)).sum();
+                cost / st.replicas.len() as f64
+            })
+            .fold(0.0f64, f64::max);
+        let plan = ExecutionPlan { strategy: Strategy::Fused, n_nodes: n, stages };
+        plan.validate()?;
+        if best.as_ref().map(|(b, _)| bottleneck < *b).unwrap_or(true) {
+            best = Some((bottleneck, plan));
+        }
+    }
+    Ok(best.unwrap().1)
+}
+
+/// Dispatch by strategy.
+pub fn build_plan<F>(
+    strategy: Strategy,
+    g: &Graph,
+    n: usize,
+    seg_cost: F,
+) -> anyhow::Result<ExecutionPlan>
+where
+    F: Fn(&str) -> f64,
+{
+    match strategy {
+        Strategy::ScatterGather => scatter_gather(g, n),
+        Strategy::CoreAssign => core_assign(g, n, seg_cost),
+        Strategy::Pipeline => pipeline(g, n, seg_cost),
+        Strategy::Fused => fused(g, n, seg_cost),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition::atomic_segments;
+    use crate::graph::resnet::build_resnet18;
+    use crate::util::proptest::forall;
+
+    fn g() -> Graph {
+        build_resnet18(224).unwrap()
+    }
+
+    /// MAC-proportional cost oracle for tests.
+    fn mac_cost(g: &Graph) -> impl Fn(&str) -> f64 + '_ {
+        move |label: &str| {
+            atomic_segments(g)
+                .iter()
+                .find(|a| a.labels[0] == label)
+                .map(|a| a.macs as f64)
+                .unwrap()
+        }
+    }
+
+    #[test]
+    fn all_strategies_validate_across_cluster_sizes() {
+        let g = g();
+        let cost = mac_cost(&g);
+        for n in 1..=12 {
+            for s in Strategy::all() {
+                let plan = build_plan(s, &g, n, &cost).unwrap();
+                plan.validate().unwrap();
+                assert_eq!(plan.n_nodes, n, "{s} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_gather_is_single_stage() {
+        let g = g();
+        let p = scatter_gather(&g, 8).unwrap();
+        assert_eq!(p.stages.len(), 1);
+        assert_eq!(p.stages[0].replicas.len(), 8);
+    }
+
+    #[test]
+    fn pipeline_depth_tracks_n() {
+        let g = g();
+        let cost = mac_cost(&g);
+        for n in 1..=10 {
+            let p = pipeline(&g, n, &cost).unwrap();
+            assert_eq!(p.stages.len(), n);
+            assert!(p.stages.iter().all(|s| s.replicas.len() == 1));
+        }
+        // n=12: 10 stages + 2 replicas on bottlenecks
+        let p = pipeline(&g, 12, &cost).unwrap();
+        assert_eq!(p.stages.len(), 10);
+        assert_eq!(p.total_assignments(), 12);
+    }
+
+    #[test]
+    fn core_assign_small_n_is_noncontiguous_packing() {
+        let g = g();
+        let cost = mac_cost(&g);
+        let p = core_assign(&g, 2, &cost).unwrap();
+        assert_eq!(p.stages.len(), 10);
+        // both nodes used; at least one boundary crosses nodes (the
+        // non-contiguity that drives the paper's N=2 network penalty)
+        let seq: Vec<Vec<usize>> =
+            p.stages.iter().map(|s| s.replicas.clone()).collect();
+        let crossings = seq.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(crossings >= 1, "expected inter-node boundaries, got {seq:?}");
+        // per-node compute load balanced within 30% (slices counted)
+        let mut load = [0.0f64; 2];
+        for st in &p.stages {
+            let share = cost(&st.segments[0]) / st.replicas.len() as f64;
+            for &r in &st.replicas {
+                load[r] += share;
+            }
+        }
+        let ratio = load[0].max(load[1]) / load[0].min(load[1]);
+        assert!(ratio < 1.3, "unbalanced packing: {load:?}");
+    }
+
+    #[test]
+    fn core_assign_large_n_replicates_bottlenecks() {
+        let g = g();
+        let cost = mac_cost(&g);
+        let p = core_assign(&g, 12, &cost).unwrap();
+        assert_eq!(p.stages.len(), 10);
+        assert_eq!(p.total_assignments(), 12);
+        let spatial: Vec<&StagePlan> =
+            p.stages.iter().filter(|s| s.split == SplitMode::Spatial).collect();
+        assert_eq!(spatial.len(), 2, "two extra nodes → two spatial stages");
+        // the replicated stages must be the two most expensive segments
+        let mut costs: Vec<f64> = p.stages.iter().map(|s| cost(&s.segments[0])).collect();
+        costs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for st in spatial {
+            assert!(cost(&st.segments[0]) >= costs[2]);
+        }
+    }
+
+    #[test]
+    fn fused_beats_or_matches_pipeline_bottleneck() {
+        let g = g();
+        let cost = mac_cost(&g);
+        for n in 2..=12 {
+            let f = fused(&g, n, &cost).unwrap();
+            let p = pipeline(&g, n, &cost).unwrap();
+            let bottleneck = |plan: &ExecutionPlan| {
+                plan.stages
+                    .iter()
+                    .map(|st| {
+                        st.segments.iter().map(|s| cost(s)).sum::<f64>()
+                            / st.replicas.len() as f64
+                    })
+                    .fold(0.0f64, f64::max)
+            };
+            assert!(
+                bottleneck(&f) <= bottleneck(&p) * 1.0001,
+                "n={n}: fused {} > pipeline {}",
+                bottleneck(&f),
+                bottleneck(&p)
+            );
+        }
+    }
+
+    #[test]
+    fn n1_plans_all_collapse_to_single_node() {
+        let g = g();
+        let cost = mac_cost(&g);
+        for s in Strategy::all() {
+            let p = build_plan(s, &g, 1, &cost).unwrap();
+            assert!(p.stages.iter().all(|st| st.replicas == vec![0]), "{s}");
+        }
+    }
+
+    #[test]
+    fn prop_plans_valid_for_random_costs() {
+        let g = g();
+        forall("random-cost plans validate", 40, |rng| {
+            let costs: Vec<f64> =
+                (0..10).map(|_| 1.0 + rng.f64() * 100.0).collect();
+            let labels = g.segment_order();
+            let cost = |l: &str| {
+                let i = labels.iter().position(|x| x == l).unwrap();
+                costs[i]
+            };
+            let n = rng.range(1, 13);
+            for s in Strategy::all() {
+                let plan = build_plan(s, &g, n, cost).map_err(|e| e.to_string())?;
+                plan.validate().map_err(|e| format!("{s} n={n}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,525 @@
+//! Cluster performance model: steady-state throughput + unloaded latency.
+//!
+//! The paper's metric (average inference time over 10 000 streamed
+//! images) is a **throughput** figure: in steady state a FIFO pipeline's
+//! per-image time equals the service demand of its busiest resource.
+//! We therefore compute, per image:
+//!
+//! * **node demand** — compute time of every stage hosted by the node
+//!   (divided by the replica count for data-parallel stages) plus the
+//!   `ps_serial_frac` share of every blocking transfer touching the node
+//!   (§III: the PS CPU stages DMA buffers and drives blocking MPI);
+//! * **port demand** — wire time through each endpoint's switch port
+//!   (master egress serializes the scatter, master ingress the gather);
+//!
+//! and take `ms_per_image = max(all demands)`. Unloaded end-to-end
+//! latency comes from booking a single image through the [`Booker`]
+//! (transfers + computes along the critical path). Both parts are exact,
+//! deterministic and fast — no Monte-Carlo noise on top of the paper
+//! comparison.
+
+use crate::config::ClusterConfig;
+use crate::graph::partition::atomic_segments;
+use crate::graph::Graph;
+use crate::net::link::LinkModel;
+use crate::net::mpi::MpiModel;
+use crate::net::switch::{Endpoint, Flow, SwitchSim};
+use crate::sched::{ExecutionPlan, SplitMode, StagePlan};
+use crate::sim::cost::CostModel;
+use crate::util::stats::Summary;
+use crate::util::units::{ns_to_ms, Nanos};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Images in the modeled stream (affects the makespan estimate only;
+    /// demands are per-image and exact).
+    pub images: usize,
+    /// Kept for API stability; the analytic model needs no warmup.
+    pub warmup_frac: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { images: 64, warmup_frac: 0.2 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// The paper's metric: steady-state time per image (ms).
+    pub ms_per_image: f64,
+    /// Unloaded end-to-end latency of one image (ms) and distribution
+    /// stats (deterministic model: the summary holds the one latency).
+    pub latency_ms: Summary,
+    /// Estimated makespan for the configured image count (ms).
+    pub makespan_ms: f64,
+    /// Per-node demand relative to the bottleneck resource.
+    pub node_utilization: Vec<f64>,
+    /// Bytes through the switch per image × images.
+    pub network_bytes: u64,
+}
+
+/// Books transfers/computes for the latency path.
+struct Booker<'a> {
+    node_free: Vec<Nanos>,
+    switch: SwitchSim,
+    mpi: MpiModel,
+    cluster: &'a ClusterConfig,
+    serial_frac: f64,
+    network_bytes: u64,
+}
+
+impl<'a> Booker<'a> {
+    fn transfer(&mut self, src: Endpoint, dst: Endpoint, bytes: u64, ready: Nanos) -> Nanos {
+        if src == dst {
+            return ready;
+        }
+        let mut t0 = ready;
+        if let Endpoint::Node(n) = src {
+            t0 = t0.max(self.node_free[n]);
+        }
+        if let Endpoint::Node(n) = dst {
+            t0 = t0.max(self.node_free[n]);
+        }
+        let timing = self.switch.schedule(&Flow { src, dst, bytes, ready_ns: t0 });
+        let src_board = match src {
+            Endpoint::Node(n) => Some(&self.cluster.boards[n]),
+            Endpoint::Master => None,
+        };
+        let dst_board = match dst {
+            Endpoint::Node(n) => Some(&self.cluster.boards[n]),
+            Endpoint::Master => None,
+        };
+        let overhead = self.mpi.transfer_ns(bytes, src_board, dst_board)
+            - self.mpi.link.serialize_ns(bytes);
+        let arrival = timing.arrival_ns + overhead;
+        for ep in [src, dst] {
+            if let Endpoint::Node(n) = ep {
+                let start = t0.max(self.node_free[n]);
+                let occupied =
+                    (arrival.saturating_sub(start) as f64 * self.serial_frac).round() as Nanos;
+                self.node_free[n] = self.node_free[n].max(start + occupied);
+            }
+        }
+        self.network_bytes += bytes;
+        arrival
+    }
+
+    fn compute(&mut self, node: usize, ready: Nanos, dur: Nanos) -> Nanos {
+        let start = ready.max(self.node_free[node]);
+        let done = start + dur;
+        self.node_free[node] = done;
+        done
+    }
+}
+
+/// Per-image transfer between consecutive stages: list of
+/// (src, dst, bytes, images_fraction) tuples. `images_fraction` is the
+/// fraction of the image stream that takes this route (data-parallel
+/// replicas each see 1/r of images).
+fn stage_transfers(
+    prev: Option<&StagePlan>,
+    cur: &StagePlan,
+    in_bytes: u64,
+) -> Vec<(Endpoint, Endpoint, u64, f64)> {
+    let producers: Vec<Endpoint> = match prev {
+        None => vec![Endpoint::Master],
+        Some(p) => p.replicas.iter().map(|&r| Endpoint::Node(r)).collect(),
+    };
+    let prev_dp = prev.map(|p| p.split == SplitMode::DataParallel).unwrap_or(true);
+    let cur_dp = cur.split == SplitMode::DataParallel;
+    let consumers: Vec<Endpoint> =
+        cur.replicas.iter().map(|&r| Endpoint::Node(r)).collect();
+    let mut out = Vec::new();
+    match (prev_dp, cur_dp) {
+        (true, true) => {
+            // each image: one producer replica → one consumer replica;
+            // pair (i, j) carries the images where both round-robins hit
+            let kp = producers.len();
+            let kc = consumers.len();
+            let period = lcm(kp, kc);
+            for t in 0..period {
+                out.push((
+                    producers[t % kp],
+                    consumers[t % kc],
+                    in_bytes,
+                    1.0 / period as f64,
+                ));
+            }
+        }
+        (true, false) => {
+            // scatter: the producer of each image sends a slice to every
+            // spatial consumer
+            let kp = producers.len();
+            let kc = consumers.len();
+            for (i, &p) in producers.iter().enumerate() {
+                let _ = i;
+                for &c in &consumers {
+                    out.push((p, c, in_bytes / kc as u64, 1.0 / kp as f64));
+                }
+            }
+        }
+        (false, true) => {
+            // gather: every spatial producer sends its slice to the
+            // image's consumer replica
+            let kp = producers.len();
+            let kc = consumers.len();
+            for &p in &producers {
+                for &c in &consumers {
+                    out.push((p, c, in_bytes / kp as u64, 1.0 / kc as f64));
+                }
+            }
+        }
+        (false, false) => {
+            // spatial → spatial: each consumer's row range overlaps a
+            // window of producers
+            let kp = producers.len();
+            let kc = consumers.len();
+            for ci in 0..kc {
+                let p_lo = ci * kp / kc;
+                let p_hi = ((ci + 1) * kp).div_ceil(kc).min(kp);
+                let share = (in_bytes / kc as u64) / (p_hi - p_lo) as u64;
+                for &p in &producers[p_lo..p_hi] {
+                    out.push((p, consumers[ci], share.max(1), 1.0));
+                }
+            }
+        }
+    }
+    // local hops are free
+    out.retain(|(s, d, _, _)| s != d);
+    out
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    fn gcd(a: usize, b: usize) -> usize {
+        if b == 0 {
+            a
+        } else {
+            gcd(b, a % b)
+        }
+    }
+    a / gcd(a, b) * b
+}
+
+/// Simulate a plan over the cluster; `cost` must be built from the same
+/// board/VTA config as `cluster`.
+pub fn simulate(
+    plan: &ExecutionPlan,
+    cluster: &ClusterConfig,
+    cost: &mut CostModel,
+    g: &Graph,
+    sim_cfg: &SimConfig,
+) -> anyhow::Result<SimResult> {
+    plan.validate()?;
+    anyhow::ensure!(
+        plan.n_nodes == cluster.num_nodes(),
+        "plan is for {} nodes, cluster has {}",
+        plan.n_nodes,
+        cluster.num_nodes()
+    );
+    let atoms = atomic_segments(g);
+    let seg_bytes: HashMap<&str, (u64, u64)> = atoms
+        .iter()
+        .map(|a| (a.labels[0].as_str(), (a.in_bytes, a.out_bytes)))
+        .collect();
+    let mpi =
+        MpiModel::from_calibration(&cost.model.calib, cluster.switch.forward_latency_ns);
+    let link = LinkModel::new(cluster.switch.port_bits_per_sec);
+    let serial_frac = cost.model.calib.ps_serial_frac;
+    let driver = cost.driver_overhead_ns();
+
+    // stage compute times (per replica slice for spatial stages)
+    let mut stage_time: Vec<Nanos> = Vec::with_capacity(plan.stages.len());
+    for st in &plan.stages {
+        let split = match st.split {
+            SplitMode::Spatial => st.replicas.len() as u64,
+            SplitMode::DataParallel => 1,
+        };
+        let mut t = 0;
+        for seg in &st.segments {
+            t += cost.segment_time_ns(g, seg, split)?;
+        }
+        stage_time.push(t + driver);
+    }
+    let in_bytes_of = |st: &StagePlan| seg_bytes[st.segments.first().unwrap().as_str()].0;
+    let out_bytes_of = |st: &StagePlan| seg_bytes[st.segments.last().unwrap().as_str()].1;
+
+    // ---- steady-state demands (per image) ----------------------------
+    let n = cluster.num_nodes();
+    let mut node_demand = vec![0.0f64; n]; // ns/image
+    let mut egress = HashMap::<Endpoint, f64>::new();
+    let mut ingress = HashMap::<Endpoint, f64>::new();
+    let mut net_bytes_per_image = 0f64;
+
+    for (si, st) in plan.stages.iter().enumerate() {
+        // compute demand
+        match st.split {
+            SplitMode::DataParallel => {
+                let share = 1.0 / st.replicas.len() as f64;
+                for &r in &st.replicas {
+                    node_demand[r] += stage_time[si] as f64 * share;
+                }
+            }
+            SplitMode::Spatial => {
+                for &r in &st.replicas {
+                    node_demand[r] += stage_time[si] as f64;
+                }
+            }
+        }
+        // transfer demand into this stage
+        let prev = if si == 0 { None } else { Some(&plan.stages[si - 1]) };
+        for (src, dst, bytes, frac) in stage_transfers(prev, st, in_bytes_of(st)) {
+            let wire = link.serialize_ns(bytes) as f64 * frac;
+            *egress.entry(src).or_default() += wire;
+            *ingress.entry(dst).or_default() += wire;
+            net_bytes_per_image += bytes as f64 * frac;
+            let src_board = match src {
+                Endpoint::Node(i) => Some(&cluster.boards[i]),
+                Endpoint::Master => None,
+            };
+            let dst_board = match dst {
+                Endpoint::Node(i) => Some(&cluster.boards[i]),
+                Endpoint::Master => None,
+            };
+            let blocking =
+                mpi.transfer_ns(bytes, src_board, dst_board) as f64 * serial_frac * frac;
+            if let Endpoint::Node(i) = src {
+                node_demand[i] += blocking;
+            }
+            if let Endpoint::Node(i) = dst {
+                node_demand[i] += blocking;
+            }
+        }
+    }
+    // gather logits to master
+    {
+        let last = plan.stages.last().unwrap();
+        let out_bytes = out_bytes_of(last);
+        let k = last.replicas.len() as u64;
+        let (bytes, frac) = match last.split {
+            SplitMode::Spatial => ((out_bytes / k).max(1), 1.0),
+            SplitMode::DataParallel => (out_bytes.max(1), 1.0 / k as f64),
+        };
+        for &r in &last.replicas {
+            let wire = link.serialize_ns(bytes) as f64 * frac;
+            *egress.entry(Endpoint::Node(r)).or_default() += wire;
+            *ingress.entry(Endpoint::Master).or_default() += wire;
+            net_bytes_per_image += bytes as f64 * frac;
+            let blocking = mpi.transfer_ns(bytes, Some(&cluster.boards[r]), None) as f64
+                * serial_frac
+                * frac;
+            node_demand[r] += blocking;
+        }
+    }
+
+    let port_bottleneck = egress
+        .values()
+        .chain(ingress.values())
+        .copied()
+        .fold(0.0f64, f64::max);
+    let node_bottleneck = node_demand.iter().copied().fold(0.0f64, f64::max);
+    let bottleneck_ns = node_bottleneck.max(port_bottleneck);
+
+    // ---- unloaded latency: book one image through the cluster --------
+    let mut booker = Booker {
+        node_free: vec![0; n],
+        switch: SwitchSim::new(link.clone(), cluster.switch.forward_latency_ns),
+        mpi,
+        cluster,
+        serial_frac,
+        network_bytes: 0,
+    };
+    let mut holders: Vec<(Endpoint, Nanos)> = vec![(Endpoint::Master, 0)];
+    for (si, st) in plan.stages.iter().enumerate() {
+        let consumers: Vec<usize> = match st.split {
+            SplitMode::DataParallel => vec![st.replicas[0]],
+            SplitMode::Spatial => st.replicas.clone(),
+        };
+        let kp = holders.len();
+        let kc = consumers.len();
+        let in_bytes = in_bytes_of(st);
+        let mut next = Vec::with_capacity(kc);
+        for (ci, &cnode) in consumers.iter().enumerate() {
+            let p_lo = ci * kp / kc;
+            let p_hi = ((ci + 1) * kp).div_ceil(kc).min(kp);
+            let share = ((in_bytes / kc as u64).max(1) / (p_hi - p_lo) as u64).max(1);
+            let mut arrival = 0;
+            for (src, ready) in holders[p_lo..p_hi].iter() {
+                arrival =
+                    arrival.max(booker.transfer(*src, Endpoint::Node(cnode), share, *ready));
+            }
+            let done = booker.compute(cnode, arrival, stage_time[si]);
+            next.push((Endpoint::Node(cnode), done));
+        }
+        holders = next;
+    }
+    let out_bytes = out_bytes_of(plan.stages.last().unwrap());
+    let share = (out_bytes / holders.len() as u64).max(1);
+    let mut latency_ns = 0;
+    for &(src, ready) in &holders {
+        latency_ns = latency_ns.max(booker.transfer(src, Endpoint::Master, share, ready));
+    }
+
+    let ms_per_image = ns_to_ms(bottleneck_ns.round() as Nanos).max(1e-6);
+    let mut latency = Summary::new();
+    latency.push(ns_to_ms(latency_ns));
+    let makespan_ms =
+        ns_to_ms(latency_ns) + ms_per_image * (sim_cfg.images.saturating_sub(1)) as f64;
+    let node_utilization = node_demand
+        .iter()
+        .map(|&d| if bottleneck_ns > 0.0 { d / bottleneck_ns } else { 0.0 })
+        .collect();
+    Ok(SimResult {
+        ms_per_image,
+        latency_ms: latency,
+        makespan_ms,
+        node_utilization,
+        network_bytes: (net_bytes_per_image * sim_cfg.images as f64) as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BoardProfile, Calibration, VtaConfig};
+    use crate::graph::resnet::build_resnet18;
+    use crate::sched::{build_plan, Strategy};
+
+    fn setup(n: usize) -> (Graph, ClusterConfig, CostModel) {
+        let g = build_resnet18(224).unwrap();
+        let cluster = ClusterConfig::zynq_stack(n);
+        let cost = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration::default(),
+        );
+        (g, cluster, cost)
+    }
+
+    fn run(strategy: Strategy, n: usize, images: usize) -> SimResult {
+        let (g, cluster, mut cost) = setup(n);
+        let costs: Vec<(String, f64)> = g
+            .segment_order()
+            .into_iter()
+            .map(|l| {
+                let t = cost.segment_time_ns(&g, &l, 1).unwrap() as f64;
+                (l, t)
+            })
+            .collect();
+        let lookup = |l: &str| costs.iter().find(|(x, _)| x == l).unwrap().1;
+        let plan = build_plan(strategy, &g, n, lookup).unwrap();
+        simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images, warmup_frac: 0.2 })
+            .unwrap()
+    }
+
+    #[test]
+    fn single_node_all_strategies_agree() {
+        let results: Vec<f64> = Strategy::all()
+            .iter()
+            .map(|&s| run(s, 1, 16).ms_per_image)
+            .collect();
+        for w in results.windows(2) {
+            let rel = (w[0] - w[1]).abs() / w[0];
+            assert!(rel < 0.02, "single-node strategies diverge: {results:?}");
+        }
+    }
+
+    #[test]
+    fn scatter_gather_scales_down() {
+        let t1 = run(Strategy::ScatterGather, 1, 24).ms_per_image;
+        let t4 = run(Strategy::ScatterGather, 4, 24).ms_per_image;
+        let t12 = run(Strategy::ScatterGather, 12, 48).ms_per_image;
+        assert!(t4 < t1 / 2.0, "SG @4 too slow: {t4} vs {t1}");
+        assert!(t12 < t4, "SG @12 not faster than @4: {t12} vs {t4}");
+        // but not superlinear
+        assert!(t12 > t1 / 14.0, "SG @12 implausibly fast: {t12} vs {t1}");
+    }
+
+    #[test]
+    fn core_assign_small_n_pays_network_penalty() {
+        // the paper's headline anomaly: 2 nodes worse than one — needs the
+        // fully blocking regime the paper describes
+        let (g, cluster, mut cost) = setup(2);
+        cost.model.calib.ps_serial_frac = 1.0;
+        let costs: Vec<(String, f64)> = g
+            .segment_order()
+            .into_iter()
+            .map(|l| (l.clone(), cost.segment_time_ns(&g, &l, 1).unwrap() as f64))
+            .collect();
+        let lookup = |l: &str| costs.iter().find(|(x, _)| x == l).unwrap().1;
+        let plan = build_plan(Strategy::CoreAssign, &g, 2, lookup).unwrap();
+        let t2 = simulate(&plan, &cluster, &mut cost, &g, &SimConfig::default())
+            .unwrap()
+            .ms_per_image;
+        let t1 = run(Strategy::CoreAssign, 1, 16).ms_per_image;
+        assert!(t2 > t1 * 0.9, "AI-core @2 should be ≈ or worse than single: {t2} vs {t1}");
+    }
+
+    #[test]
+    fn pipeline_scales() {
+        let t1 = run(Strategy::Pipeline, 1, 24).ms_per_image;
+        let t5 = run(Strategy::Pipeline, 5, 40).ms_per_image;
+        assert!(t5 < t1 / 1.8, "pipeline @5: {t5} vs {t1}");
+    }
+
+    #[test]
+    fn latency_at_least_single_node_compute() {
+        let r = run(Strategy::Pipeline, 4, 8);
+        // pipeline latency ≥ sum of stage computes ≥ throughput figure
+        assert!(r.latency_ms.mean() >= r.ms_per_image);
+    }
+
+    #[test]
+    fn utilization_bounded_and_bottleneck_is_one() {
+        let r = run(Strategy::Fused, 6, 24);
+        assert_eq!(r.node_utilization.len(), 6);
+        for &u in &r.node_utilization {
+            assert!((0.0..=1.0001).contains(&u), "utilization {u}");
+        }
+    }
+
+    #[test]
+    fn network_bytes_grow_with_distribution() {
+        let r1 = run(Strategy::Pipeline, 1, 16);
+        let r4 = run(Strategy::Pipeline, 4, 16);
+        assert!(r4.network_bytes > r1.network_bytes);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(Strategy::Fused, 4, 24);
+        let b = run(Strategy::Fused, 4, 24);
+        assert_eq!(a.ms_per_image, b.ms_per_image);
+        assert_eq!(a.network_bytes, b.network_bytes);
+    }
+
+    #[test]
+    fn plan_cluster_size_mismatch_rejected() {
+        let (g, cluster, mut cost) = setup(3);
+        let plan = build_plan(Strategy::ScatterGather, &g, 4, |_| 1.0).unwrap();
+        assert!(simulate(&plan, &cluster, &mut cost, &g, &SimConfig::default()).is_err());
+    }
+
+    #[test]
+    fn stage_transfer_routing_conserves_bytes() {
+        use crate::sched::StagePlan;
+        let mk = |replicas: Vec<usize>, split| StagePlan {
+            segments: vec!["s".into()],
+            replicas,
+            split,
+        };
+        // DP(2) → DP(3): per-image exactly in_bytes cross (fractions sum 1)
+        let prev = mk(vec![0, 1], SplitMode::DataParallel);
+        let cur = mk(vec![2, 3, 4], SplitMode::DataParallel);
+        let ts = stage_transfers(Some(&prev), &cur, 6000);
+        let total: f64 = ts.iter().map(|(_, _, b, f)| *b as f64 * f).sum();
+        assert!((total - 6000.0).abs() < 1.0, "{total}");
+        // spatial(2) → spatial(4)
+        let prev = mk(vec![0, 1], SplitMode::Spatial);
+        let cur = mk(vec![2, 3, 4, 5], SplitMode::Spatial);
+        let ts = stage_transfers(Some(&prev), &cur, 8000);
+        let total: f64 = ts.iter().map(|(_, _, b, f)| *b as f64 * f).sum();
+        assert!((total - 8000.0).abs() < 8.0, "{total}");
+    }
+}

@@ -1,0 +1,244 @@
+//! Calibrated node cost model.
+//!
+//! Maps graph operators to wall-clock time on one FPGA node by lowering
+//! them to real VTA programs (autotuned tilings for GEMM ops, ALU passes
+//! for element-wise ops) and pricing with the cycle model. Results are
+//! memoized — the same conv shape appears many times across strategies
+//! and cluster sizes.
+//!
+//! The per-family anchor κ (see `config::calibration`) scales modeled
+//! compute time so the single-node totals match the paper's measured
+//! 27.34 ms / 25.15 ms; scaling *shapes* across N are then predictions.
+
+use crate::compiler::{autotune_gemm, lower_alu_pass, GemmShape};
+use crate::config::{BoardFamily, BoardProfile, Calibration, VtaConfig};
+use crate::graph::ops::Op;
+use crate::graph::tensor::TensorDesc;
+use crate::graph::Graph;
+use crate::util::units::{cycles_to_ns, Nanos};
+use crate::vta::isa::AluOp;
+use crate::vta::timing::TimingModel;
+use std::collections::HashMap;
+
+pub struct CostModel {
+    pub model: TimingModel,
+    gemm_cache: HashMap<GemmShape, u64>,
+    alu_cache: HashMap<(u64, usize), u64>,
+    seg_cache: HashMap<(String, u64), Nanos>,
+}
+
+impl CostModel {
+    pub fn new(cfg: VtaConfig, board: BoardProfile, calib: Calibration) -> Self {
+        CostModel {
+            model: TimingModel::new(cfg, board, calib),
+            gemm_cache: HashMap::new(),
+            alu_cache: HashMap::new(),
+            seg_cache: HashMap::new(),
+        }
+    }
+
+    fn kappa(&self) -> f64 {
+        match self.model.board.family {
+            BoardFamily::Zynq7000 => self.model.calib.kappa_zynq,
+            BoardFamily::UltraScalePlus => self.model.calib.kappa_ultrascale,
+        }
+    }
+
+    /// Autotuned makespan cycles for a GEMM shape (memoized).
+    pub fn gemm_cycles(&mut self, shape: GemmShape) -> anyhow::Result<u64> {
+        if let Some(&c) = self.gemm_cache.get(&shape) {
+            return Ok(c);
+        }
+        let tuned = autotune_gemm(&self.model, shape)?;
+        let c = tuned.report.total_cycles;
+        self.gemm_cache.insert(shape, c);
+        Ok(c)
+    }
+
+    /// Cycles for an element-wise ALU pass of `n_ops` sequential ops over
+    /// `elems` accumulators (memoized).
+    pub fn alu_pass_cycles(&mut self, elems: u64, n_ops: usize) -> anyhow::Result<u64> {
+        if elems == 0 {
+            return Ok(0);
+        }
+        if let Some(&c) = self.alu_cache.get(&(elems, n_ops)) {
+            return Ok(c);
+        }
+        // representative op sequence — cost depends only on count
+        let ops: Vec<(AluOp, i16)> = (0..n_ops).map(|_| (AluOp::Max, 0)).collect();
+        let prog = lower_alu_pass("alu", elems, &ops, &self.model.cfg)?;
+        let c = self.model.price(&prog)?.total_cycles;
+        self.alu_cache.insert((elems, n_ops), c);
+        Ok(c)
+    }
+
+    /// Cycles for one graph op, with the work optionally spatial-split
+    /// `split` ways (AI-core / fused replicas: each replica runs the op
+    /// on ~1/split of the output rows).
+    pub fn op_cycles(
+        &mut self,
+        op: &Op,
+        inputs: &[TensorDesc],
+        split: u64,
+    ) -> anyhow::Result<u64> {
+        debug_assert!(split >= 1);
+        match op {
+            Op::Conv2d { .. } | Op::Dense { .. } => {
+                let (m, k, n) = op
+                    .gemm_shape(inputs)
+                    .expect("conv/dense always has a GEMM shape");
+                let shape = GemmShape { m: m.div_ceil(split), k, n };
+                self.gemm_cycles(shape)
+            }
+            Op::Relu | Op::Requantize { .. } => {
+                // requantize = 4-op sequence (add, shr, min, max); relu = 1
+                let n_ops = if matches!(op, Op::Relu) { 1 } else { 4 };
+                self.alu_pass_cycles(inputs[0].shape.elems().div_ceil(split), n_ops)
+            }
+            Op::Add => self.alu_pass_cycles(inputs[0].shape.elems().div_ceil(split), 1),
+            Op::MaxPool { k, .. } => {
+                let out = op.infer(inputs)?;
+                self.alu_pass_cycles(
+                    (out.shape.elems() * k * k).div_ceil(split),
+                    1,
+                )
+            }
+            Op::GlobalAvgPool => {
+                self.alu_pass_cycles(inputs[0].shape.elems().div_ceil(split), 1)
+            }
+            Op::Input { .. } => Ok(0),
+        }
+    }
+
+    /// Wall-clock compute time of one graph segment on this node, spatial
+    /// split `split` ways. Excludes the per-launch driver overhead (the
+    /// cluster simulator adds it once per stage launch) but includes the
+    /// family anchor κ.
+    pub fn segment_time_ns(
+        &mut self,
+        g: &Graph,
+        label: &str,
+        split: u64,
+    ) -> anyhow::Result<Nanos> {
+        let key = (label.to_string(), split);
+        if let Some(&t) = self.seg_cache.get(&key) {
+            return Ok(t);
+        }
+        let mut cycles = 0u64;
+        let node_ids: Vec<usize> = g.segment_nodes(label).iter().map(|n| n.id).collect();
+        for id in node_ids {
+            let descs = g.input_descs(id);
+            cycles += self.op_cycles(&g.node(id).op.clone(), &descs, split)?;
+        }
+        let t = (cycles_to_ns(cycles, self.model.cfg.clock_hz) as f64 * self.kappa())
+            .round() as Nanos;
+        self.seg_cache.insert(key, t);
+        Ok(t)
+    }
+
+    /// Whole-graph single-node compute time (no driver overhead).
+    pub fn graph_time_ns(&mut self, g: &Graph) -> anyhow::Result<Nanos> {
+        let mut total = 0;
+        for label in g.segment_order() {
+            total += self.segment_time_ns(g, &label, 1)?;
+        }
+        Ok(total)
+    }
+
+    /// Per-launch PS driver overhead (ns).
+    pub fn driver_overhead_ns(&self) -> Nanos {
+        crate::util::units::us_to_ns(self.model.calib.driver_overhead_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::resnet::build_resnet18;
+
+    fn cm(cfg: VtaConfig, board: BoardProfile) -> CostModel {
+        CostModel::new(cfg, board, Calibration::default())
+    }
+
+    #[test]
+    fn segment_times_sum_to_graph_time() {
+        let g = build_resnet18(224).unwrap();
+        let mut c = cm(VtaConfig::table1_zynq7000(), BoardProfile::zynq7020());
+        let total = c.graph_time_ns(&g).unwrap();
+        let sum: Nanos = g
+            .segment_order()
+            .iter()
+            .map(|l| c.segment_time_ns(&g, l, 1).unwrap())
+            .sum();
+        assert_eq!(total, sum);
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn split_reduces_segment_time() {
+        let g = build_resnet18(224).unwrap();
+        let mut c = cm(VtaConfig::table1_zynq7000(), BoardProfile::zynq7020());
+        let t1 = c.segment_time_ns(&g, "s1b1", 1).unwrap();
+        let t2 = c.segment_time_ns(&g, "s1b1", 2).unwrap();
+        let t4 = c.segment_time_ns(&g, "s1b1", 4).unwrap();
+        assert!(t2 < t1, "split 2 not faster: {t2} vs {t1}");
+        assert!(t4 < t2);
+        // at least 1.5× from a 2-way split (sublinear due to fixed costs)
+        assert!(t1 as f64 / t2 as f64 > 1.5, "{t1} / {t2}");
+    }
+
+    #[test]
+    fn clock_scaling_is_sublinear_on_fixed_board() {
+        // 3× clock on the same board/DRAM must give >1× and <3× speedup:
+        // the memory-bound share does not scale with clock (the §III
+        // "US+ only ≈6 % better" mechanism).
+        let g = build_resnet18(224).unwrap();
+        let mut slow = cm(VtaConfig::table1_at_clock(100_000_000), BoardProfile::zynq7020());
+        let mut fast = cm(VtaConfig::table1_at_clock(300_000_000), BoardProfile::zynq7020());
+        let ts = slow.graph_time_ns(&g).unwrap() as f64;
+        let tf = fast.graph_time_ns(&g).unwrap() as f64;
+        assert!(tf < ts, "3× clock not faster: {tf} vs {ts}");
+        assert!(tf > ts / 3.0, "3× clock scaled superlinearly: {tf} vs {ts}");
+    }
+
+    #[test]
+    fn ultrascale_board_is_faster() {
+        let g = build_resnet18(224).unwrap();
+        let mut z = cm(VtaConfig::table1_zynq7000(), BoardProfile::zynq7020());
+        let mut u = cm(VtaConfig::table1_ultrascale(), BoardProfile::zu_mpsoc());
+        let tz = z.graph_time_ns(&g).unwrap();
+        let tu = u.graph_time_ns(&g).unwrap();
+        assert!(tu < tz, "US+ not faster: {tu} vs {tz}");
+    }
+
+    #[test]
+    fn caches_are_hit() {
+        let g = build_resnet18(224).unwrap();
+        let mut c = cm(VtaConfig::table1_zynq7000(), BoardProfile::zynq7020());
+        let t0 = std::time::Instant::now();
+        c.graph_time_ns(&g).unwrap();
+        let cold = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        c.graph_time_ns(&g).unwrap();
+        let warm = t1.elapsed();
+        assert!(warm < cold / 10, "cache ineffective: {warm:?} vs {cold:?}");
+    }
+
+    #[test]
+    fn kappa_scales_times() {
+        let g = build_resnet18(32).unwrap();
+        let mut base = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration { kappa_zynq: 1.0, ..Default::default() },
+        );
+        let mut scaled = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration { kappa_zynq: 2.0, ..Default::default() },
+        );
+        let a = base.graph_time_ns(&g).unwrap() as f64;
+        let b = scaled.graph_time_ns(&g).unwrap() as f64;
+        assert!((b / a - 2.0).abs() < 0.01, "kappa not applied: {b} / {a}");
+    }
+}

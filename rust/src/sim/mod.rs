@@ -1,0 +1,14 @@
+//! Cluster simulation: turns an [`crate::sched::ExecutionPlan`] into the
+//! per-image inference times the paper reports.
+//!
+//! * [`cost`]    — calibrated node cost model: graph op → autotuned VTA
+//!                 program → cycles → wall time (memoized)
+//! * [`cluster`] — resource-booking simulator: nodes (blocking PS+PL),
+//!                 switch ports, MPI transfers; streams M images through
+//!                 a plan and reports steady-state time per image
+
+pub mod cluster;
+pub mod cost;
+
+pub use cluster::{simulate, SimConfig, SimResult};
+pub use cost::CostModel;

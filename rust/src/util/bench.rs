@@ -1,0 +1,105 @@
+//! Measurement harness for the `cargo bench` targets (criterion is not in
+//! the offline vendor set).
+//!
+//! Usage inside a `harness = false` bench:
+//! ```no_run
+//! use vta_cluster::util::bench::Bench;
+//! let mut b = Bench::new("fig3_zynq7000");
+//! b.iter("scatter_gather_n4", || { /* work */ });
+//! b.finish();
+//! ```
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! mean ± std and percentiles, honours `VTA_BENCH_FAST=1` for CI smoke
+//! runs.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    suite: String,
+    target: Duration,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        let fast = std::env::var("VTA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        let target = if fast { Duration::from_millis(200) } else { Duration::from_secs(1) };
+        println!("\n== bench suite: {suite} ==");
+        Bench { suite: suite.to_string(), target, results: Vec::new() }
+    }
+
+    /// Measure a closure: warmup, auto-scale batch size, then sample.
+    pub fn iter<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Summary {
+        // warmup + calibration: find a batch size that runs ≥ ~1 ms
+        let mut batch = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= Duration::from_millis(1) || batch >= 1 << 24 {
+                break;
+            }
+            batch *= 8;
+        }
+        // sample until target elapsed (min 5 samples, max 200)
+        let mut summary = Summary::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.target || summary.len() < 5) && summary.len() < 200 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let per_iter = t0.elapsed().as_secs_f64() / batch as f64;
+            summary.push(per_iter * 1e9); // ns
+        }
+        println!(
+            "  {name:40} {:>12.1} ns/iter ± {:>10.1}  (p50 {:>12.1}, n={}, batch={batch})",
+            summary.mean(),
+            summary.std(),
+            summary.p50(),
+            summary.len(),
+        );
+        self.results.push((name.to_string(), summary));
+        &self.results.last().unwrap().1
+    }
+
+    /// Record an externally-measured sample set (e.g. simulated latencies).
+    pub fn record(&mut self, name: &str, summary: Summary, unit: &str) {
+        println!("  {name:40} {}", summary.display(unit));
+        self.results.push((name.to_string(), summary));
+    }
+
+    /// Print a one-line table row (for paper-table benches).
+    pub fn row(&mut self, text: &str) {
+        println!("  {text}");
+    }
+
+    pub fn finish(self) {
+        println!("== {} done: {} benchmarks ==\n", self.suite, self.results.len());
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("VTA_BENCH_FAST", "1");
+        let mut b = Bench::new("self-test");
+        let s = b.iter("noop-ish", || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(s.mean() > 0.0);
+        assert!(s.len() >= 5);
+        b.finish();
+    }
+}

@@ -1,0 +1,260 @@
+//! Tiny argument parser for the `vtacluster` binary and the examples.
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments and auto-generated `--help`. Unknown flags are an error (they
+//! are usually typos of experiment parameters).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI: declare options, then parse.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    positional_name: Option<(String, String)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare that positional arguments are accepted.
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positional_name = Some((name.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [OPTIONS]", self.program, self.about, self.program);
+        if let Some((name, _)) = &self.positional_name {
+            s.push_str(&format!(" [{name}...]"));
+        }
+        s.push_str("\n\nOPTIONS:\n");
+        for spec in &self.specs {
+            let lhs = if spec.is_flag {
+                format!("--{}", spec.name)
+            } else {
+                format!("--{} <v>", spec.name)
+            };
+            let def = match &spec.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if spec.is_flag => String::new(),
+                None => " [required]".to_string(),
+            };
+            s.push_str(&format!("  {lhs:24} {}{def}\n", spec.help));
+        }
+        s.push_str("  --help                   print this help\n");
+        if let Some((name, help)) = &self.positional_name {
+            s.push_str(&format!("\nARGS:\n  {name:24} {help}\n"));
+        }
+        s
+    }
+
+    /// Parse a list of arguments (without argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> anyhow::Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        anyhow::bail!("flag --{name} takes no value");
+                    }
+                    flags.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("option --{name} needs a value"))?,
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                if self.positional_name.is_none() {
+                    anyhow::bail!("unexpected positional argument '{arg}'\n\n{}", self.usage());
+                }
+                positional.push(arg);
+            }
+        }
+        // defaults + required check
+        for spec in &self.specs {
+            if spec.is_flag {
+                flags.entry(spec.name.clone()).or_insert(false);
+            } else if !values.contains_key(&spec.name) {
+                match &spec.default {
+                    Some(d) => {
+                        values.insert(spec.name.clone(), d.clone());
+                    }
+                    None => anyhow::bail!("missing required option --{}\n\n{}", spec.name, self.usage()),
+                }
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    /// Parse the process arguments.
+    pub fn parse(&self) -> anyhow::Result<Args> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: invalid integer: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: invalid integer: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: invalid number: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("nodes", "4", "cluster size")
+            .req("strategy", "scheduling strategy")
+            .flag("verbose", "log more")
+            .positional("files", "input files")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_all_forms() {
+        let a = cli()
+            .parse_from(argv(&["--strategy=pipeline", "--nodes", "8", "--verbose", "f1", "f2"]))
+            .unwrap();
+        assert_eq!(a.get("strategy"), "pipeline");
+        assert_eq!(a.get_usize("nodes").unwrap(), 8);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional, vec!["f1", "f2"]);
+    }
+
+    #[test]
+    fn applies_defaults() {
+        let a = cli().parse_from(argv(&["--strategy", "sg"])).unwrap();
+        assert_eq!(a.get("nodes"), "4");
+        assert!(!a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        let e = cli().parse_from(argv(&[])).unwrap_err().to_string();
+        assert!(e.contains("--strategy"), "{e}");
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        let e = cli()
+            .parse_from(argv(&["--strategy", "x", "--bogus", "1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--bogus"), "{e}");
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        assert!(cli().parse_from(argv(&["--strategy=x", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let u = cli().usage();
+        assert!(u.contains("--nodes"));
+        assert!(u.contains("[default: 4]"));
+        assert!(u.contains("[required]"));
+    }
+}

@@ -1,0 +1,23 @@
+//! Support substrates that would normally come from crates.io.
+//!
+//! This image builds fully offline against a fixed vendor set (see
+//! `.cargo/config.toml`), so serde/clap/criterion/proptest/rand are not
+//! available. Each submodule is a small, tested, purpose-built replacement:
+//!
+//! * [`json`]     — JSON parse/emit (manifest + config interchange)
+//! * [`rng`]      — deterministic SplitMix64/xoshiro RNG
+//! * [`stats`]    — summary statistics for benches and metrics
+//! * [`cli`]      — argument parsing for the `vtacluster` binary
+//! * [`units`]    — simulation time (integer nanoseconds) and byte units
+//! * [`bench`]    — measurement harness used by `cargo bench` targets
+//! * [`proptest`] — property-based testing mini-framework
+//! * [`logging`]  — leveled stderr logging controlled by `VTA_LOG`
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod units;

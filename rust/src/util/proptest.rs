@@ -1,0 +1,133 @@
+//! Property-based testing mini-framework (proptest is not vendored).
+//!
+//! A property is a closure taking an [`Rng`]; [`forall`] runs it across
+//! many deterministic seeds and, on failure, reports the failing seed so
+//! the case can be replayed exactly:
+//!
+//! ```no_run
+//! use vta_cluster::util::proptest::forall;
+//! forall("gemm roundtrip", 200, |rng| {
+//!     let m = rng.range(1, 64);
+//!     // ... build inputs from rng, check invariant, return Ok(()) or Err(msg)
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Seeds derive from `VTA_PROP_SEED` (default 0) so CI failures reproduce
+//! locally by exporting the same value.
+
+use super::rng::Rng;
+
+/// Run `cases` random cases of a property; panic with the failing seed.
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("VTA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case)
+            .wrapping_add(fxhash(name));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: VTA_PROP_SEED={base}, seed={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed on replay seed {seed}: {msg}");
+    }
+}
+
+/// Tiny FNV-style hash to decorrelate property names.
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality helper with value printing.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {}\n  left: {:?}\n  right: {:?}",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("always-true", 50, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always-false", 10, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn macros_work() {
+        forall("macro-check", 20, |rng| {
+            let a = rng.range(0, 100);
+            prop_assert!(a < 100, "a={a} out of range");
+            prop_assert_eq!(a, a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_get_distinct_seeds() {
+        let mut vals = Vec::new();
+        forall("distinct", 20, |rng| {
+            vals.push(rng.next_u64());
+            Ok(())
+        });
+        vals.sort_unstable();
+        vals.dedup();
+        assert_eq!(vals.len(), 20);
+    }
+}

@@ -1,0 +1,162 @@
+//! Summary statistics for benches, metrics and the experiment harness.
+
+/// Streaming mean/variance (Welford) plus retained samples for percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    mean: f64,
+    m2: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_samples(samples: impl IntoIterator<Item = f64>) -> Self {
+        let mut s = Self::new();
+        for v in samples {
+            s.push(v);
+        }
+        s
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+        let n = self.samples.len() as f64;
+        let d = v - self.mean;
+        self.mean += d / n;
+        self.m2 += d * (v - self.mean);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation (n-1). Zero for fewer than two samples.
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.samples.len() as f64 - 1.0)).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile via linear interpolation on sorted samples, `q` in [0,100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "percentile of empty summary");
+        assert!((0.0..=100.0).contains(&q));
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.len() == 1 {
+            return s[0];
+        }
+        let rank = q / 100.0 * (s.len() as f64 - 1.0);
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        s[lo] + (s[hi] - s[lo]) * frac
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// `mean ± std (n=..)` single-line rendering with a unit suffix.
+    pub fn display(&self, unit: &str) -> String {
+        format!(
+            "{:.3} ± {:.3} {unit} (n={}, p50={:.3}, p99={:.3})",
+            self.mean(),
+            self.std(),
+            self.len(),
+            self.p50(),
+            self.p99(),
+        )
+    }
+}
+
+/// Relative error |got - want| / |want| (used to score paper reproduction).
+pub fn rel_err(got: f64, want: f64) -> f64 {
+    if want == 0.0 {
+        got.abs()
+    } else {
+        (got - want).abs() / want.abs()
+    }
+}
+
+/// Geometric mean (for aggregating per-row reproduction errors).
+pub fn geomean(vals: &[f64]) -> f64 {
+    assert!(!vals.is_empty());
+    let s: f64 = vals.iter().map(|v| v.max(1e-12).ln()).sum();
+    (s / vals.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_known_values() {
+        let s = Summary::from_samples([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = Summary::from_samples((1..=100).map(|v| v as f64));
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-12);
+        assert!(s.p99() > 98.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::from_samples([3.25]);
+        assert_eq!(s.mean(), 3.25);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.p50(), 3.25);
+    }
+
+    #[test]
+    fn min_max() {
+        let s = Summary::from_samples([3.0, -1.0, 9.0]);
+        assert_eq!(s.min(), -1.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn rel_err_basics() {
+        assert!((rel_err(11.0, 10.0) - 0.1).abs() < 1e-12);
+        assert_eq!(rel_err(2.0, 0.0), 2.0);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[10.0]) - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,115 @@
+//! Simulation time and byte-size units.
+//!
+//! The discrete-event simulator uses **integer nanoseconds** so event
+//! ordering is exact and runs are bit-reproducible (f64 time would make
+//! event order depend on accumulated rounding).
+
+/// Simulation time in nanoseconds.
+pub type Nanos = u64;
+
+pub const NS_PER_US: Nanos = 1_000;
+pub const NS_PER_MS: Nanos = 1_000_000;
+pub const NS_PER_SEC: Nanos = 1_000_000_000;
+
+/// Convert milliseconds (f64) to integer nanoseconds, rounding.
+pub fn ms_to_ns(ms: f64) -> Nanos {
+    (ms * NS_PER_MS as f64).round() as Nanos
+}
+
+/// Convert microseconds (f64) to integer nanoseconds, rounding.
+pub fn us_to_ns(us: f64) -> Nanos {
+    (us * NS_PER_US as f64).round() as Nanos
+}
+
+/// Convert integer nanoseconds to f64 milliseconds (for reporting).
+pub fn ns_to_ms(ns: Nanos) -> f64 {
+    ns as f64 / NS_PER_MS as f64
+}
+
+/// Convert integer nanoseconds to f64 seconds.
+pub fn ns_to_sec(ns: Nanos) -> f64 {
+    ns as f64 / NS_PER_SEC as f64
+}
+
+/// Time for `bytes` at `bits_per_sec`, in integer ns (ceil — a transfer
+/// can't finish early).
+pub fn transfer_ns(bytes: u64, bits_per_sec: u64) -> Nanos {
+    assert!(bits_per_sec > 0);
+    let bits = bytes as u128 * 8;
+    ((bits * NS_PER_SEC as u128).div_ceil(bits_per_sec as u128)) as Nanos
+}
+
+/// Cycles at `clock_hz` expressed in integer ns (ceil).
+pub fn cycles_to_ns(cycles: u64, clock_hz: u64) -> Nanos {
+    assert!(clock_hz > 0);
+    ((cycles as u128 * NS_PER_SEC as u128).div_ceil(clock_hz as u128)) as Nanos
+}
+
+/// Human-readable duration.
+pub fn fmt_ns(ns: Nanos) -> String {
+    if ns >= NS_PER_SEC {
+        format!("{:.3} s", ns as f64 / NS_PER_SEC as f64)
+    } else if ns >= NS_PER_MS {
+        format!("{:.3} ms", ns as f64 / NS_PER_MS as f64)
+    } else if ns >= NS_PER_US {
+        format!("{:.3} µs", ns as f64 / NS_PER_US as f64)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Human-readable byte count (binary units).
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= KIB * KIB * KIB {
+        format!("{:.2} GiB", bf / (KIB * KIB * KIB))
+    } else if bf >= KIB * KIB {
+        format!("{:.2} MiB", bf / (KIB * KIB))
+    } else if bf >= KIB {
+        format!("{:.2} KiB", bf / KIB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(ms_to_ns(27.34), 27_340_000);
+        assert!((ns_to_ms(27_340_000) - 27.34).abs() < 1e-9);
+        assert_eq!(us_to_ns(1.5), 1_500);
+    }
+
+    #[test]
+    fn transfer_time_1gbps() {
+        // 125 MB/s → 1 KB takes 8 µs
+        assert_eq!(transfer_ns(1000, 1_000_000_000), 8_000);
+        // ceil: 1 byte at 1 Gb/s is 8 ns exactly
+        assert_eq!(transfer_ns(1, 1_000_000_000), 8);
+        // ceil rounds up on non-exact division
+        assert_eq!(transfer_ns(1, 3_000_000_000), 3);
+    }
+
+    #[test]
+    fn cycles_at_clock() {
+        // 100 MHz → 10 ns per cycle
+        assert_eq!(cycles_to_ns(1, 100_000_000), 10);
+        assert_eq!(cycles_to_ns(2_734_000, 100_000_000), 27_340_000);
+        // 300 MHz rounds up
+        assert_eq!(cycles_to_ns(1, 300_000_000), 4);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(5), "5 ns");
+        assert_eq!(fmt_ns(1_500), "1.500 µs");
+        assert_eq!(fmt_ns(27_340_000), "27.340 ms");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(11_200_000), "10.68 MiB");
+    }
+}

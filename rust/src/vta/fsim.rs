@@ -1,0 +1,691 @@
+//! VTA functional simulator: bit-exact execution of a [`Program`] with
+//! real dependency-queue semantics.
+//!
+//! The three execution modules (load / compute / store) each consume
+//! their instruction queue in order; an instruction only issues when the
+//! dependency tokens it pops are available (RAW/WAR interlocks, §II-B).
+//! The simulator round-robins the modules and detects deadlock — a
+//! mis-compiled token pattern fails loudly here before it can produce a
+//! silently-wrong timing estimate.
+//!
+//! Numerics are identical to `python/compile/kernels/ref.py`: int8
+//! operands, int32 wrapping accumulation, arithmetic shifts, saturating
+//! int8 store.
+
+use super::isa::{AluOp, Insn, MemType, Module};
+use super::program::Program;
+use crate::config::VtaConfig;
+
+/// DRAM image a program executes against. Regions are element-granular:
+/// `inp` rows of `block` int8, `wgt` tiles of `block²` int8 (output-major
+/// within the tile), `acc` rows of `block` int32, `out` rows of `block`
+/// int8.
+#[derive(Debug, Clone, Default)]
+pub struct DramImage {
+    pub inp: Vec<i8>,
+    pub wgt: Vec<i8>,
+    pub acc: Vec<i32>,
+    pub out: Vec<i8>,
+}
+
+/// Execution statistics (also sanity-checked by tests).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunStats {
+    pub load_insns: u64,
+    pub compute_insns: u64,
+    pub store_insns: u64,
+    pub gemm_uops: u64,
+    pub alu_uops: u64,
+    /// Scheduling rounds where at least one module was token-stalled.
+    pub stall_rounds: u64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum FsimError {
+    #[error("fsim deadlock in '{program}': tokens l2c={l2c} c2l={c2l} c2s={c2s} s2c={s2c}, pcs=[{pc_load},{pc_compute},{pc_store}]")]
+    Deadlock {
+        program: String,
+        l2c: u32,
+        c2l: u32,
+        c2s: u32,
+        s2c: u32,
+        pc_load: usize,
+        pc_compute: usize,
+        pc_store: usize,
+    },
+    #[error("fsim dram out of range in '{0}': {1}")]
+    DramRange(String, String),
+}
+
+struct Sram {
+    inp: Vec<i8>,  // rows × block
+    wgt: Vec<i8>,  // tiles × block²
+    acc: Vec<i32>, // rows × block
+}
+
+/// Run `prog` against `dram`; the program must already `validate()`.
+pub fn run(cfg: &VtaConfig, prog: &Program, dram: &mut DramImage) -> anyhow::Result<RunStats> {
+    prog.validate(cfg)?;
+    let blk = cfg.block as usize;
+    let mut sram = Sram {
+        inp: vec![0; cfg.input_rows_resident() as usize * blk],
+        wgt: vec![0; cfg.weight_tiles_resident() as usize * blk * blk],
+        acc: vec![0; cfg.acc_rows_resident() as usize * blk],
+    };
+
+    // split instructions into per-module queues, keeping program order
+    let mut queues: [Vec<&Insn>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for insn in &prog.insns {
+        let qi = match insn.module() {
+            Module::Load => 0,
+            Module::Compute => 1,
+            Module::Store => 2,
+        };
+        queues[qi].push(insn);
+    }
+    let mut pc = [0usize; 3];
+    // dependency-token counters (queue name = producer2consumer)
+    let (mut l2c, mut c2l, mut c2s, mut s2c) = (0u32, 0u32, 0u32, 0u32);
+    let mut stats = RunStats::default();
+
+    loop {
+        let done = (0..3).all(|m| pc[m] >= queues[m].len());
+        if done {
+            break;
+        }
+        let mut progressed = false;
+        let mut stalled = false;
+        for m in 0..3 {
+            if pc[m] >= queues[m].len() {
+                continue;
+            }
+            let insn = queues[m][pc[m]];
+            let d = insn.dep();
+            // can we pop the tokens this instruction needs?
+            let ready = match insn.module() {
+                Module::Load => !d.pop_next || c2l > 0, // load's next = compute
+                Module::Compute => {
+                    (!d.pop_prev || l2c > 0) && (!d.pop_next || s2c > 0)
+                }
+                Module::Store => !d.pop_prev || c2s > 0,
+            };
+            if !ready {
+                stalled = true;
+                continue;
+            }
+            // pop
+            match insn.module() {
+                Module::Load => {
+                    if d.pop_next {
+                        c2l -= 1;
+                    }
+                }
+                Module::Compute => {
+                    if d.pop_prev {
+                        l2c -= 1;
+                    }
+                    if d.pop_next {
+                        s2c -= 1;
+                    }
+                }
+                Module::Store => {
+                    if d.pop_prev {
+                        c2s -= 1;
+                    }
+                }
+            }
+            execute(cfg, prog, insn, &mut sram, dram, &mut stats)?;
+            // push
+            match insn.module() {
+                Module::Load => {
+                    if d.push_next {
+                        l2c += 1;
+                    }
+                    // push_prev from load is unused in VTA
+                }
+                Module::Compute => {
+                    if d.push_prev {
+                        c2l += 1;
+                    }
+                    if d.push_next {
+                        c2s += 1;
+                    }
+                }
+                Module::Store => {
+                    if d.push_prev {
+                        s2c += 1;
+                    }
+                }
+            }
+            match insn.module() {
+                Module::Load => stats.load_insns += 1,
+                Module::Compute => stats.compute_insns += 1,
+                Module::Store => stats.store_insns += 1,
+            }
+            pc[m] += 1;
+            progressed = true;
+        }
+        if stalled {
+            stats.stall_rounds += 1;
+        }
+        if !progressed {
+            return Err(FsimError::Deadlock {
+                program: prog.name.clone(),
+                l2c,
+                c2l,
+                c2s,
+                s2c,
+                pc_load: pc[0],
+                pc_compute: pc[1],
+                pc_store: pc[2],
+            }
+            .into());
+        }
+    }
+    Ok(stats)
+}
+
+fn execute(
+    cfg: &VtaConfig,
+    prog: &Program,
+    insn: &Insn,
+    sram: &mut Sram,
+    dram: &mut DramImage,
+    stats: &mut RunStats,
+) -> anyhow::Result<()> {
+    let blk = cfg.block as usize;
+    match insn {
+        Insn::Load { mem, sram_base, dram_base, y_size, x_size, x_stride, .. } => {
+            let (rows, cols, stride) = (*y_size as usize, *x_size as usize, *x_stride as usize);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let s_idx = *sram_base as usize + r * cols + c;
+                    let d_idx = *dram_base as usize + r * stride + c;
+                    match mem {
+                        MemType::Inp => {
+                            let (s, d) = (s_idx * blk, d_idx * blk);
+                            bounds(&prog.name, d + blk, dram.inp.len(), "inp")?;
+                            sram.inp[s..s + blk].copy_from_slice(&dram.inp[d..d + blk]);
+                        }
+                        MemType::Wgt => {
+                            let t = blk * blk;
+                            let (s, d) = (s_idx * t, d_idx * t);
+                            bounds(&prog.name, d + t, dram.wgt.len(), "wgt")?;
+                            sram.wgt[s..s + t].copy_from_slice(&dram.wgt[d..d + t]);
+                        }
+                        MemType::Acc => {
+                            let (s, d) = (s_idx * blk, d_idx * blk);
+                            bounds(&prog.name, d + blk, dram.acc.len(), "acc")?;
+                            sram.acc[s..s + blk].copy_from_slice(&dram.acc[d..d + blk]);
+                        }
+                        MemType::Uop => { /* uops live in prog.uops */ }
+                        MemType::Out => unreachable!("validated"),
+                    }
+                }
+            }
+        }
+        Insn::Store { sram_base, dram_base, y_size, x_size, x_stride, .. } => {
+            let (rows, cols, stride) = (*y_size as usize, *x_size as usize, *x_stride as usize);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let s_idx = (*sram_base as usize + r * cols + c) * blk;
+                    let d_idx = (*dram_base as usize + r * stride + c) * blk;
+                    bounds(&prog.name, d_idx + blk, dram.out.len(), "out")?;
+                    for i in 0..blk {
+                        // saturating int8 narrow (compiler emits explicit
+                        // clips, making this a no-op in practice)
+                        dram.out[d_idx + i] = sram.acc[s_idx + i].clamp(-128, 127) as i8;
+                    }
+                }
+            }
+        }
+        Insn::Gemm {
+            reset,
+            uop_bgn,
+            uop_end,
+            iter_out,
+            iter_in,
+            dst_factor_out,
+            dst_factor_in,
+            src_factor_out,
+            src_factor_in,
+            wgt_factor_out,
+            wgt_factor_in,
+            ..
+        } => {
+            for i in 0..*iter_out as usize {
+                for j in 0..*iter_in as usize {
+                    for u in &prog.uops[*uop_bgn as usize..*uop_end as usize] {
+                        let dst = (u.dst as usize
+                            + i * *dst_factor_out as usize
+                            + j * *dst_factor_in as usize)
+                            * blk;
+                        let src = (u.src as usize
+                            + i * *src_factor_out as usize
+                            + j * *src_factor_in as usize)
+                            * blk;
+                        let wgt = (u.wgt as usize
+                            + i * *wgt_factor_out as usize
+                            + j * *wgt_factor_in as usize)
+                            * blk
+                            * blk;
+                        if *reset {
+                            sram.acc[dst..dst + blk].fill(0);
+                        } else {
+                            for x in 0..blk {
+                                let mut acc = sram.acc[dst + x];
+                                for k in 0..blk {
+                                    acc = acc.wrapping_add(
+                                        (sram.inp[src + k] as i32)
+                                            * (sram.wgt[wgt + x * blk + k] as i32),
+                                    );
+                                }
+                                sram.acc[dst + x] = acc;
+                            }
+                        }
+                        stats.gemm_uops += 1;
+                    }
+                }
+            }
+        }
+        Insn::Alu {
+            op,
+            use_imm,
+            imm,
+            uop_bgn,
+            uop_end,
+            iter_out,
+            iter_in,
+            dst_factor_out,
+            dst_factor_in,
+            src_factor_out,
+            src_factor_in,
+            ..
+        } => {
+            for i in 0..*iter_out as usize {
+                for j in 0..*iter_in as usize {
+                    for u in &prog.uops[*uop_bgn as usize..*uop_end as usize] {
+                        let dst = (u.dst as usize
+                            + i * *dst_factor_out as usize
+                            + j * *dst_factor_in as usize)
+                            * blk;
+                        let src = (u.src as usize
+                            + i * *src_factor_out as usize
+                            + j * *src_factor_in as usize)
+                            * blk;
+                        for x in 0..blk {
+                            let a = sram.acc[dst + x];
+                            let b = if *use_imm { *imm as i32 } else { sram.acc[src + x] };
+                            sram.acc[dst + x] = match op {
+                                AluOp::Add => a.wrapping_add(b),
+                                AluOp::Max => a.max(b),
+                                AluOp::Min => a.min(b),
+                                AluOp::Shr => a >> (b & 31),
+                            };
+                        }
+                        stats.alu_uops += 1;
+                    }
+                }
+            }
+        }
+        Insn::Finish { .. } => {}
+    }
+    Ok(())
+}
+
+fn bounds(prog: &str, end: usize, len: usize, what: &str) -> anyhow::Result<()> {
+    if end > len {
+        return Err(FsimError::DramRange(
+            prog.to_string(),
+            format!("{what} access up to {end} exceeds region {len}"),
+        )
+        .into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vta::isa::Insn;
+    use crate::vta::program::{dep, Program, Uop};
+
+    fn cfg() -> VtaConfig {
+        VtaConfig::table1_zynq7000()
+    }
+
+    /// Build a single-tile GEMM program: out = inp_row × wgt_tileᵀ.
+    fn gemm1_program() -> Program {
+        let mut p = Program::new("gemm1");
+        let u = p.push_uop(Uop { dst: 0, src: 0, wgt: 0 });
+        p.push(Insn::Load {
+            dep: dep(false, false, false, false),
+            mem: MemType::Inp,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Load {
+            dep: dep(false, false, false, true),
+            mem: MemType::Wgt,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        // reset then accumulate
+        p.push(Insn::Gemm {
+            dep: dep(true, false, false, false),
+            reset: true,
+            uop_bgn: u,
+            uop_end: u + 1,
+            iter_out: 1,
+            iter_in: 1,
+            dst_factor_out: 0,
+            dst_factor_in: 0,
+            src_factor_out: 0,
+            src_factor_in: 0,
+            wgt_factor_out: 0,
+            wgt_factor_in: 0,
+        });
+        p.push(Insn::Gemm {
+            dep: dep(false, false, false, true),
+            reset: false,
+            uop_bgn: u,
+            uop_end: u + 1,
+            iter_out: 1,
+            iter_in: 1,
+            dst_factor_out: 0,
+            dst_factor_in: 0,
+            src_factor_out: 0,
+            src_factor_in: 0,
+            wgt_factor_out: 0,
+            wgt_factor_in: 0,
+        });
+        p.push(Insn::Store {
+            dep: dep(true, false, true, false),
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Finish { dep: dep(false, true, false, false) });
+        p
+    }
+
+    #[test]
+    fn single_tile_gemm_matches_naive() {
+        let cfg = cfg();
+        let blk = cfg.block as usize;
+        let mut rng = crate::util::rng::Rng::new(42);
+        let mut dram = DramImage {
+            inp: rng.i8_vec(blk),
+            wgt: rng.i8_vec(blk * blk),
+            acc: vec![],
+            out: vec![0; blk],
+        };
+        let p = gemm1_program();
+        let stats = run(&cfg, &p, &mut dram).unwrap();
+        assert_eq!(stats.gemm_uops, 2); // reset + mac
+        for x in 0..blk {
+            let want: i32 = (0..blk)
+                .map(|k| dram.inp[k] as i32 * dram.wgt[x * blk + k] as i32)
+                .sum();
+            assert_eq!(dram.out[x] as i32, want.clamp(-128, 127), "lane {x}");
+        }
+    }
+
+    #[test]
+    fn alu_shr_and_clip() {
+        let cfg = cfg();
+        let blk = cfg.block as usize;
+        let mut p = Program::new("alu");
+        let u = p.push_uop(Uop { dst: 0, src: 0, wgt: 0 });
+        // acc starts at 0 after reset; ADD imm 100 → SHR 3 → 12
+        p.push(Insn::Gemm {
+            dep: dep(false, false, false, false),
+            reset: true,
+            uop_bgn: u,
+            uop_end: u + 1,
+            iter_out: 1,
+            iter_in: 1,
+            dst_factor_out: 0,
+            dst_factor_in: 0,
+            src_factor_out: 0,
+            src_factor_in: 0,
+            wgt_factor_out: 0,
+            wgt_factor_in: 0,
+        });
+        for (op, imm) in [(AluOp::Add, 100i16), (AluOp::Shr, 3)] {
+            // the SHR is the last compute op: signal the store module
+            let last = op == AluOp::Shr;
+            p.push(Insn::Alu {
+                dep: dep(false, false, false, last),
+                op,
+                use_imm: true,
+                imm,
+                uop_bgn: u,
+                uop_end: u + 1,
+                iter_out: 1,
+                iter_in: 1,
+                dst_factor_out: 0,
+                dst_factor_in: 0,
+                src_factor_out: 0,
+                src_factor_in: 0,
+            });
+        }
+        p.push(Insn::Store {
+            dep: dep(true, false, false, false),
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Finish { dep: dep(false, false, false, false) });
+        let mut dram = DramImage { out: vec![0; blk], ..Default::default() };
+        run(&cfg, &p, &mut dram).unwrap();
+        assert!(dram.out.iter().all(|&v| v == 12), "{:?}", &dram.out[..4]);
+    }
+
+    #[test]
+    fn negative_shr_is_arithmetic() {
+        let cfg = cfg();
+        let blk = cfg.block as usize;
+        let mut p = Program::new("ashr");
+        let u = p.push_uop(Uop { dst: 0, src: 0, wgt: 0 });
+        p.push(Insn::Gemm {
+            dep: dep(false, false, false, false),
+            reset: true,
+            uop_bgn: u,
+            uop_end: u + 1,
+            iter_out: 1,
+            iter_in: 1,
+            dst_factor_out: 0,
+            dst_factor_in: 0,
+            src_factor_out: 0,
+            src_factor_in: 0,
+            wgt_factor_out: 0,
+            wgt_factor_in: 0,
+        });
+        p.push(Insn::Alu {
+            dep: dep(false, false, false, false),
+            op: AluOp::Add,
+            use_imm: true,
+            imm: -100,
+            uop_bgn: u,
+            uop_end: u + 1,
+            iter_out: 1,
+            iter_in: 1,
+            dst_factor_out: 0,
+            dst_factor_in: 0,
+            src_factor_out: 0,
+            src_factor_in: 0,
+        });
+        p.push(Insn::Alu {
+            dep: dep(false, false, false, true),
+            op: AluOp::Shr,
+            use_imm: true,
+            imm: 3,
+            uop_bgn: u,
+            uop_end: u + 1,
+            iter_out: 1,
+            iter_in: 1,
+            dst_factor_out: 0,
+            dst_factor_in: 0,
+            src_factor_out: 0,
+            src_factor_in: 0,
+        });
+        p.push(Insn::Store {
+            dep: dep(true, false, false, false),
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Finish { dep: dep(false, false, false, false) });
+        let mut dram = DramImage { out: vec![0; blk], ..Default::default() };
+        run(&cfg, &p, &mut dram).unwrap();
+        // -100 >> 3 = -13 (arithmetic floor), not -12
+        assert!(dram.out.iter().all(|&v| v == -13));
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        let mut p = Program::new("deadlock");
+        p.push_uop(Uop { dst: 0, src: 0, wgt: 0 });
+        // compute pops a token load never pushes — push/pop totals balance
+        // (so static validation passes) but order guarantees a runtime
+        // deadlock: compute waits on load, load waits on compute.
+        p.push(Insn::Load {
+            dep: dep(false, true, false, true), // pop_next first: waits for compute
+            mem: MemType::Inp,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Gemm {
+            dep: dep(true, false, true, false), // waits for load
+            reset: true,
+            uop_bgn: 0,
+            uop_end: 1,
+            iter_out: 1,
+            iter_in: 1,
+            dst_factor_out: 0,
+            dst_factor_in: 0,
+            src_factor_out: 0,
+            src_factor_in: 0,
+            wgt_factor_out: 0,
+            wgt_factor_in: 0,
+        });
+        p.push(Insn::Finish { dep: dep(false, false, false, false) });
+        let mut dram = DramImage {
+            inp: vec![0; 16],
+            ..Default::default()
+        };
+        let err = run(&cfg(), &p, &mut dram).unwrap_err().to_string();
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn dram_oob_is_error() {
+        let p = gemm1_program();
+        let mut dram = DramImage {
+            inp: vec![0; 4], // too small: needs 16
+            wgt: vec![0; 256],
+            acc: vec![],
+            out: vec![0; 16],
+        };
+        let err = run(&cfg(), &p, &mut dram).unwrap_err().to_string();
+        assert!(err.contains("exceeds region"), "{err}");
+    }
+
+    #[test]
+    fn loop_nest_factors_apply() {
+        // 2 output rows from 2 input rows × same tile: iter_out=2,
+        // dst_factor_out=1, src_factor_out=1.
+        let cfg = cfg();
+        let blk = cfg.block as usize;
+        let mut p = Program::new("nest");
+        let u = p.push_uop(Uop { dst: 0, src: 0, wgt: 0 });
+        p.push(Insn::Load {
+            dep: dep(false, false, false, false),
+            mem: MemType::Inp,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 2,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Load {
+            dep: dep(false, false, false, true),
+            mem: MemType::Wgt,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Gemm {
+            dep: dep(true, false, false, false),
+            reset: true,
+            uop_bgn: u,
+            uop_end: u + 1,
+            iter_out: 2,
+            iter_in: 1,
+            dst_factor_out: 1,
+            dst_factor_in: 0,
+            src_factor_out: 1,
+            src_factor_in: 0,
+            wgt_factor_out: 0,
+            wgt_factor_in: 0,
+        });
+        p.push(Insn::Gemm {
+            dep: dep(false, false, false, true),
+            reset: false,
+            uop_bgn: u,
+            uop_end: u + 1,
+            iter_out: 2,
+            iter_in: 1,
+            dst_factor_out: 1,
+            dst_factor_in: 0,
+            src_factor_out: 1,
+            src_factor_in: 0,
+            wgt_factor_out: 0,
+            wgt_factor_in: 0,
+        });
+        p.push(Insn::Store {
+            dep: dep(true, false, true, false),
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 2,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Finish { dep: dep(false, true, false, false) });
+
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut dram = DramImage {
+            inp: rng.i8_vec(2 * blk),
+            wgt: rng.i8_vec(blk * blk),
+            acc: vec![],
+            out: vec![0; 2 * blk],
+        };
+        run(&cfg, &p, &mut dram).unwrap();
+        for r in 0..2 {
+            for x in 0..blk {
+                let want: i32 = (0..blk)
+                    .map(|k| dram.inp[r * blk + k] as i32 * dram.wgt[x * blk + k] as i32)
+                    .sum();
+                assert_eq!(dram.out[r * blk + x] as i32, want.clamp(-128, 127));
+            }
+        }
+    }
+}

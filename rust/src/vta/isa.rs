@@ -1,0 +1,512 @@
+//! VTA instruction set: 128-bit instructions over four hardware modules
+//! (fetch → load / compute / store) synchronised by dependency-token
+//! queues (§II-B of the paper; Moreau et al. fig. 5).
+//!
+//! Encoding layout is our own documented packing (the Chisel RTL layout
+//! is parameter-dependent); what matters for fidelity is the field set
+//! and the queue semantics, both preserved exactly. Encode/decode is
+//! round-trip tested by property tests.
+
+/// Which on-chip memory a LOAD/STORE touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemType {
+    /// Micro-op buffer (MICRO_OP_BUFFER_SIZE).
+    Uop,
+    /// Weight buffer (WEIGHT_BUFFER_SIZE), int8 block×block tiles.
+    Wgt,
+    /// Input buffer (INPUT_BUFFER_SIZE), int8 batch×block rows.
+    Inp,
+    /// Accumulator buffer (ACCUMULATOR_BUFFER_SIZE), int32 rows.
+    Acc,
+    /// Output path: STORE reads int8-narrowed accumulators to DRAM.
+    Out,
+}
+
+impl MemType {
+    pub fn code(self) -> u8 {
+        match self {
+            MemType::Uop => 0,
+            MemType::Wgt => 1,
+            MemType::Inp => 2,
+            MemType::Acc => 3,
+            MemType::Out => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        Some(match c {
+            0 => MemType::Uop,
+            1 => MemType::Wgt,
+            2 => MemType::Inp,
+            3 => MemType::Acc,
+            4 => MemType::Out,
+            _ => return None,
+        })
+    }
+}
+
+/// ALU micro-opcode (the VTA register-file vector unit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Max,
+    Min,
+    /// Arithmetic shift right (requantization).
+    Shr,
+}
+
+impl AluOp {
+    pub fn code(self) -> u8 {
+        match self {
+            AluOp::Add => 0,
+            AluOp::Max => 1,
+            AluOp::Min => 2,
+            AluOp::Shr => 3,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        Some(match c {
+            0 => AluOp::Add,
+            1 => AluOp::Max,
+            2 => AluOp::Min,
+            3 => AluOp::Shr,
+            _ => return None,
+        })
+    }
+}
+
+/// Dependency-queue flags: every instruction may pop a token from (wait
+/// on) and/or push a token to (signal) its producer/consumer neighbour —
+/// the RAW/WAR interlocks of §II-B.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DepFlags {
+    pub pop_prev: bool,
+    pub pop_next: bool,
+    pub push_prev: bool,
+    pub push_next: bool,
+}
+
+impl DepFlags {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    fn bits(self) -> u128 {
+        (self.pop_prev as u128)
+            | (self.pop_next as u128) << 1
+            | (self.push_prev as u128) << 2
+            | (self.push_next as u128) << 3
+    }
+
+    fn from_bits(b: u128) -> Self {
+        DepFlags {
+            pop_prev: b & 1 != 0,
+            pop_next: b & 2 != 0,
+            push_prev: b & 4 != 0,
+            push_next: b & 8 != 0,
+        }
+    }
+}
+
+/// A decoded VTA instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Insn {
+    /// 2-D strided DMA: DRAM → SRAM (or SRAM → DRAM for `Out`).
+    Load {
+        dep: DepFlags,
+        mem: MemType,
+        /// Destination base in SRAM, in *elements* of the target buffer's
+        /// granularity (uops / rows / tiles).
+        sram_base: u32,
+        /// Source base in DRAM, element-granular.
+        dram_base: u32,
+        /// Rows to transfer.
+        y_size: u16,
+        /// Elements per row.
+        x_size: u16,
+        /// DRAM stride between rows (elements).
+        x_stride: u16,
+    },
+    Store {
+        dep: DepFlags,
+        sram_base: u32,
+        dram_base: u32,
+        y_size: u16,
+        x_size: u16,
+        x_stride: u16,
+    },
+    /// GEMM macro-instruction: run uops `[uop_bgn, uop_end)` inside a
+    /// 2-level loop nest; affine index update per loop level.
+    Gemm {
+        dep: DepFlags,
+        /// Zero the touched accumulators instead of accumulating.
+        reset: bool,
+        uop_bgn: u16,
+        uop_end: u16,
+        iter_out: u16,
+        iter_in: u16,
+        dst_factor_out: u16,
+        dst_factor_in: u16,
+        src_factor_out: u16,
+        src_factor_in: u16,
+        wgt_factor_out: u16,
+        wgt_factor_in: u16,
+    },
+    /// ALU macro-instruction over accumulator rows.
+    Alu {
+        dep: DepFlags,
+        op: AluOp,
+        /// Use the immediate instead of a second accumulator operand.
+        use_imm: bool,
+        imm: i16,
+        uop_bgn: u16,
+        uop_end: u16,
+        iter_out: u16,
+        iter_in: u16,
+        dst_factor_out: u16,
+        dst_factor_in: u16,
+        src_factor_out: u16,
+        src_factor_in: u16,
+    },
+    /// End of program: compute module signals completion.
+    Finish { dep: DepFlags },
+}
+
+const OP_LOAD: u128 = 0;
+const OP_STORE: u128 = 1;
+const OP_GEMM: u128 = 2;
+const OP_FINISH: u128 = 3;
+const OP_ALU: u128 = 4;
+
+impl Insn {
+    pub fn dep(&self) -> DepFlags {
+        match self {
+            Insn::Load { dep, .. }
+            | Insn::Store { dep, .. }
+            | Insn::Gemm { dep, .. }
+            | Insn::Alu { dep, .. }
+            | Insn::Finish { dep } => *dep,
+        }
+    }
+
+    pub fn dep_mut(&mut self) -> &mut DepFlags {
+        match self {
+            Insn::Load { dep, .. }
+            | Insn::Store { dep, .. }
+            | Insn::Gemm { dep, .. }
+            | Insn::Alu { dep, .. }
+            | Insn::Finish { dep } => dep,
+        }
+    }
+
+    /// Which module executes this instruction.
+    pub fn module(&self) -> Module {
+        match self {
+            Insn::Load { mem, .. } => match mem {
+                // uop/acc loads are issued to the compute module in VTA
+                MemType::Uop | MemType::Acc => Module::Compute,
+                _ => Module::Load,
+            },
+            Insn::Store { .. } => Module::Store,
+            Insn::Gemm { .. } | Insn::Alu { .. } | Insn::Finish { .. } => Module::Compute,
+        }
+    }
+
+    /// Pack to 128 bits. Layout: [0:3]=opcode, [3:7]=dep flags, then
+    /// variant-specific fields (documented inline).
+    pub fn encode(&self) -> u128 {
+        match *self {
+            Insn::Load { dep, mem, sram_base, dram_base, y_size, x_size, x_stride } => {
+                OP_LOAD
+                    | dep.bits() << 3
+                    | (mem.code() as u128) << 7
+                    | (sram_base as u128) << 10
+                    | (dram_base as u128) << 42
+                    | (y_size as u128) << 74
+                    | (x_size as u128) << 90
+                    | (x_stride as u128) << 106
+            }
+            Insn::Store { dep, sram_base, dram_base, y_size, x_size, x_stride } => {
+                OP_STORE
+                    | dep.bits() << 3
+                    | (MemType::Out.code() as u128) << 7
+                    | (sram_base as u128) << 10
+                    | (dram_base as u128) << 42
+                    | (y_size as u128) << 74
+                    | (x_size as u128) << 90
+                    | (x_stride as u128) << 106
+            }
+            Insn::Gemm {
+                dep,
+                reset,
+                uop_bgn,
+                uop_end,
+                iter_out,
+                iter_in,
+                dst_factor_out,
+                dst_factor_in,
+                src_factor_out,
+                src_factor_in,
+                wgt_factor_out,
+                wgt_factor_in,
+            } => {
+                OP_GEMM
+                    | dep.bits() << 3
+                    | (reset as u128) << 7
+                    | (uop_bgn as u128) << 8
+                    | (uop_end as u128) << 24
+                    | (iter_out as u128) << 40
+                    | (iter_in as u128) << 56
+                    | (dst_factor_out as u128) << 72
+                    | (dst_factor_in as u128) << 83
+                    | (src_factor_out as u128) << 94
+                    | (src_factor_in as u128) << 105
+                    | (wgt_factor_out as u128) << 116
+                    // wgt_factor_in gets the remaining bits [127 - ...]
+                    | (wgt_factor_in as u128 & 0x1) << 127
+            }
+            Insn::Alu {
+                dep,
+                op,
+                use_imm,
+                imm,
+                uop_bgn,
+                uop_end,
+                iter_out,
+                iter_in,
+                dst_factor_out,
+                dst_factor_in,
+                src_factor_out,
+                src_factor_in,
+            } => {
+                OP_ALU
+                    | dep.bits() << 3
+                    | (op.code() as u128) << 7
+                    | (use_imm as u128) << 9
+                    | ((imm as u16) as u128) << 10
+                    | (uop_bgn as u128) << 26
+                    | (uop_end as u128) << 42
+                    | (iter_out as u128) << 58
+                    | (iter_in as u128) << 74
+                    | (dst_factor_out as u128) << 90
+                    | (dst_factor_in as u128) << 100
+                    | (src_factor_out as u128) << 110
+                    | ((src_factor_in as u128) & 0xFF) << 120
+            }
+            Insn::Finish { dep } => OP_FINISH | dep.bits() << 3,
+        }
+    }
+
+    /// Decode from 128 bits; `None` on invalid opcode/fields.
+    pub fn decode(bits: u128) -> Option<Insn> {
+        let op = bits & 0x7;
+        let dep = DepFlags::from_bits((bits >> 3) & 0xF);
+        match op {
+            OP_LOAD | OP_STORE => {
+                let mem = MemType::from_code(((bits >> 7) & 0x7) as u8)?;
+                let sram_base = ((bits >> 10) & 0xFFFF_FFFF) as u32;
+                let dram_base = ((bits >> 42) & 0xFFFF_FFFF) as u32;
+                let y_size = ((bits >> 74) & 0xFFFF) as u16;
+                let x_size = ((bits >> 90) & 0xFFFF) as u16;
+                let x_stride = ((bits >> 106) & 0xFFFF) as u16;
+                if op == OP_LOAD {
+                    Some(Insn::Load { dep, mem, sram_base, dram_base, y_size, x_size, x_stride })
+                } else {
+                    Some(Insn::Store { dep, sram_base, dram_base, y_size, x_size, x_stride })
+                }
+            }
+            OP_GEMM => Some(Insn::Gemm {
+                dep,
+                reset: (bits >> 7) & 1 != 0,
+                uop_bgn: ((bits >> 8) & 0xFFFF) as u16,
+                uop_end: ((bits >> 24) & 0xFFFF) as u16,
+                iter_out: ((bits >> 40) & 0xFFFF) as u16,
+                iter_in: ((bits >> 56) & 0xFFFF) as u16,
+                dst_factor_out: ((bits >> 72) & 0x7FF) as u16,
+                dst_factor_in: ((bits >> 83) & 0x7FF) as u16,
+                src_factor_out: ((bits >> 94) & 0x7FF) as u16,
+                src_factor_in: ((bits >> 105) & 0x7FF) as u16,
+                wgt_factor_out: ((bits >> 116) & 0x7FF) as u16,
+                wgt_factor_in: ((bits >> 127) & 0x1) as u16,
+            }),
+            OP_ALU => Some(Insn::Alu {
+                dep,
+                op: AluOp::from_code(((bits >> 7) & 0x3) as u8)?,
+                use_imm: (bits >> 9) & 1 != 0,
+                imm: (((bits >> 10) & 0xFFFF) as u16) as i16,
+                uop_bgn: ((bits >> 26) & 0xFFFF) as u16,
+                uop_end: ((bits >> 42) & 0xFFFF) as u16,
+                iter_out: ((bits >> 58) & 0xFFFF) as u16,
+                iter_in: ((bits >> 74) & 0xFFFF) as u16,
+                dst_factor_out: ((bits >> 90) & 0x3FF) as u16,
+                dst_factor_in: ((bits >> 100) & 0x3FF) as u16,
+                src_factor_out: ((bits >> 110) & 0x3FF) as u16,
+                src_factor_in: ((bits >> 120) & 0xFF) as u16,
+            }),
+            OP_FINISH => Some(Insn::Finish { dep }),
+            _ => None,
+        }
+    }
+}
+
+/// The four VTA hardware modules (fetch dispatches, so three execution
+/// queues).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Module {
+    Load,
+    Compute,
+    Store,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn roundtrip_simple() {
+        let insns = vec![
+            Insn::Load {
+                dep: DepFlags { pop_next: true, ..Default::default() },
+                mem: MemType::Inp,
+                sram_base: 128,
+                dram_base: 4096,
+                y_size: 16,
+                x_size: 16,
+                x_stride: 224,
+            },
+            Insn::Gemm {
+                dep: DepFlags { pop_prev: true, push_prev: true, ..Default::default() },
+                reset: true,
+                uop_bgn: 0,
+                uop_end: 16,
+                iter_out: 4,
+                iter_in: 8,
+                dst_factor_out: 16,
+                dst_factor_in: 1,
+                src_factor_out: 16,
+                src_factor_in: 1,
+                wgt_factor_out: 0,
+                wgt_factor_in: 0,
+            },
+            Insn::Alu {
+                dep: DepFlags::none(),
+                op: AluOp::Shr,
+                use_imm: true,
+                imm: -11,
+                uop_bgn: 2,
+                uop_end: 5,
+                iter_out: 10,
+                iter_in: 1,
+                dst_factor_out: 1,
+                dst_factor_in: 0,
+                src_factor_out: 1,
+                src_factor_in: 0,
+            },
+            Insn::Store {
+                dep: DepFlags { push_prev: true, ..Default::default() },
+                sram_base: 0,
+                dram_base: 1 << 20,
+                y_size: 56,
+                x_size: 64,
+                x_stride: 64,
+            },
+            Insn::Finish { dep: DepFlags { pop_prev: true, ..Default::default() } },
+        ];
+        for insn in insns {
+            let bits = insn.encode();
+            assert_eq!(Insn::decode(bits), Some(insn));
+        }
+    }
+
+    #[test]
+    fn module_routing() {
+        let l = Insn::Load {
+            dep: DepFlags::none(),
+            mem: MemType::Wgt,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        };
+        assert_eq!(l.module(), Module::Load);
+        // acc/uop loads go to the compute queue (as in VTA)
+        let a = Insn::Load {
+            dep: DepFlags::none(),
+            mem: MemType::Acc,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        };
+        assert_eq!(a.module(), Module::Compute);
+        assert_eq!(Insn::Finish { dep: DepFlags::none() }.module(), Module::Compute);
+    }
+
+    #[test]
+    fn invalid_opcode_decodes_none() {
+        assert_eq!(Insn::decode(0x7), None);
+        assert_eq!(Insn::decode(0x5), None);
+    }
+
+    #[test]
+    fn prop_roundtrip_load_store() {
+        forall("isa load/store roundtrip", 300, |rng| {
+            let dep = DepFlags::from_bits(rng.below(16) as u128);
+            let mem = MemType::from_code(rng.below(5) as u8).unwrap();
+            let insn = Insn::Load {
+                dep,
+                mem,
+                sram_base: rng.below(1 << 32) as u32,
+                dram_base: rng.below(1 << 32) as u32,
+                y_size: rng.below(1 << 16) as u16,
+                x_size: rng.below(1 << 16) as u16,
+                x_stride: rng.below(1 << 16) as u16,
+            };
+            let back = Insn::decode(insn.encode());
+            crate::prop_assert_eq!(back, Some(insn));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_gemm_alu() {
+        forall("isa gemm/alu roundtrip", 300, |rng| {
+            let dep = DepFlags::from_bits(rng.below(16) as u128);
+            let g = Insn::Gemm {
+                dep,
+                reset: rng.below(2) == 1,
+                uop_bgn: rng.below(1 << 16) as u16,
+                uop_end: rng.below(1 << 16) as u16,
+                iter_out: rng.below(1 << 16) as u16,
+                iter_in: rng.below(1 << 16) as u16,
+                dst_factor_out: rng.below(1 << 11) as u16,
+                dst_factor_in: rng.below(1 << 11) as u16,
+                src_factor_out: rng.below(1 << 11) as u16,
+                src_factor_in: rng.below(1 << 11) as u16,
+                wgt_factor_out: rng.below(1 << 11) as u16,
+                wgt_factor_in: rng.below(2) as u16,
+            };
+            crate::prop_assert_eq!(Insn::decode(g.encode()), Some(g));
+            let a = Insn::Alu {
+                dep,
+                op: AluOp::from_code(rng.below(4) as u8).unwrap(),
+                use_imm: rng.below(2) == 1,
+                imm: rng.range_i64(i16::MIN as i64, i16::MAX as i64 + 1) as i16,
+                uop_bgn: rng.below(1 << 16) as u16,
+                uop_end: rng.below(1 << 16) as u16,
+                iter_out: rng.below(1 << 16) as u16,
+                iter_in: rng.below(1 << 16) as u16,
+                dst_factor_out: rng.below(1 << 10) as u16,
+                dst_factor_in: rng.below(1 << 10) as u16,
+                src_factor_out: rng.below(1 << 10) as u16,
+                src_factor_in: rng.below(1 << 8) as u16,
+            };
+            crate::prop_assert_eq!(Insn::decode(a.encode()), Some(a));
+            Ok(())
+        });
+    }
+}

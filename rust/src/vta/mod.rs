@@ -1,0 +1,26 @@
+//! VTA (Versatile Tensor Accelerator) substrate.
+//!
+//! The paper deploys VTA (Moreau et al.) bitstreams on every node; we
+//! rebuild it as an instruction-level model:
+//!
+//! * [`isa`]     — the 128-bit instruction set (LOAD/GEMM/ALU/STORE/FINISH)
+//!                 with dependency-queue flags, encode/decode round-trip
+//! * [`program`] — instruction stream + micro-op buffer + DRAM image
+//! * [`fsim`]    — functional simulator: bit-exact int8/int32 execution
+//!                 with RAW/WAR token semantics (validated against the
+//!                 python oracle through the PJRT artifacts)
+//! * [`timing`]  — cycle model: per-module service times + token-driven
+//!                 overlap of load/compute/store (the virtual-thread
+//!                 pipelining TVM generates), DRAM bandwidth limits
+//!
+//! The compiler (`crate::compiler`) lowers graph ops into [`program`]s;
+//! the cluster simulator calls [`timing`] for node service times.
+
+pub mod fsim;
+pub mod isa;
+pub mod program;
+pub mod timing;
+
+pub use isa::{AluOp, Insn, MemType};
+pub use program::{Program, Uop};
+pub use timing::{CycleReport, TimingModel};

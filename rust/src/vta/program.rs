@@ -1,0 +1,425 @@
+//! A complete VTA program: instruction stream, micro-op table, and the
+//! DRAM image layout it executes against.
+//!
+//! The compiler (`crate::compiler::lower`) produces these; `fsim` executes
+//! them; `timing` prices them.
+
+use super::isa::{DepFlags, Insn, MemType};
+use crate::config::VtaConfig;
+
+/// A GEMM/ALU micro-op: per-cycle SRAM indices (row/tile granular).
+/// `dst` indexes the accumulator buffer, `src` the input buffer, `wgt`
+/// the weight buffer. For ALU tensor-tensor ops `wgt` holds the second
+/// accumulator operand index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Uop {
+    pub dst: u16,
+    pub src: u16,
+    pub wgt: u16,
+}
+
+/// DRAM regions of a program image (element-granular offsets).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DramLayout {
+    /// int8 input elements (row-major (M, K) for GEMM programs).
+    pub inp_len: usize,
+    /// int8 weight elements ((N, K) output-major).
+    pub wgt_len: usize,
+    /// int32 accumulator init region (optional bias).
+    pub acc_len: usize,
+    /// int8 output region length.
+    pub out_len: usize,
+}
+
+/// A self-contained VTA program.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub name: String,
+    pub insns: Vec<Insn>,
+    pub uops: Vec<Uop>,
+    pub dram: DramLayout,
+}
+
+impl Program {
+    pub fn new(name: &str) -> Self {
+        Program { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, insn: Insn) {
+        self.insns.push(insn);
+    }
+
+    /// Add a uop, returning its index.
+    pub fn push_uop(&mut self, u: Uop) -> u16 {
+        self.uops.push(u);
+        (self.uops.len() - 1) as u16
+    }
+
+    /// Static validation against a VTA configuration: every SRAM access
+    /// must stay inside the configured buffer capacities and the uop
+    /// ranges must exist. This is the "bitstream contract" check.
+    pub fn validate(&self, cfg: &VtaConfig) -> anyhow::Result<()> {
+        let inp_cap = cfg.input_rows_resident() as u64;
+        let wgt_cap = cfg.weight_tiles_resident() as u64;
+        let acc_cap = cfg.acc_rows_resident() as u64;
+        let uop_cap = cfg.uop_buffer_bits / 32; // one uop = 32 bits in VTA
+        anyhow::ensure!(
+            (self.uops.len() as u64) <= uop_cap,
+            "{}: {} uops exceed uop buffer ({} max)",
+            self.name,
+            self.uops.len(),
+            uop_cap
+        );
+        for (i, insn) in self.insns.iter().enumerate() {
+            match insn {
+                Insn::Load { mem, sram_base, y_size, x_size, .. } => {
+                    let end = *sram_base as u64 + (*y_size as u64) * (*x_size as u64);
+                    let cap = match mem {
+                        MemType::Inp => inp_cap,
+                        MemType::Wgt => wgt_cap,
+                        MemType::Acc => acc_cap,
+                        MemType::Uop => uop_cap,
+                        MemType::Out => anyhow::bail!("{}: LOAD to Out at insn {i}", self.name),
+                    };
+                    anyhow::ensure!(
+                        end <= cap,
+                        "{}: insn {i} LOAD {:?} range {end} exceeds capacity {cap}",
+                        self.name,
+                        mem
+                    );
+                }
+                Insn::Store { sram_base, y_size, x_size, .. } => {
+                    let end = *sram_base as u64 + (*y_size as u64) * (*x_size as u64);
+                    anyhow::ensure!(
+                        end <= acc_cap,
+                        "{}: insn {i} STORE range {end} exceeds acc capacity {acc_cap}",
+                        self.name
+                    );
+                }
+                Insn::Gemm { uop_bgn, uop_end, iter_out, iter_in,
+                             dst_factor_out, dst_factor_in,
+                             src_factor_out, src_factor_in,
+                             wgt_factor_out, wgt_factor_in, .. } => {
+                    anyhow::ensure!(
+                        uop_bgn < uop_end && (*uop_end as usize) <= self.uops.len(),
+                        "{}: insn {i} GEMM uop range [{uop_bgn},{uop_end}) invalid",
+                        self.name
+                    );
+                    anyhow::ensure!(
+                        *iter_out >= 1 && *iter_in >= 1,
+                        "{}: insn {i} GEMM zero iteration",
+                        self.name
+                    );
+                    // max index reached over the loop nest must fit
+                    let max_out = (*iter_out as u64 - 1) * *dst_factor_out as u64
+                        + (*iter_in as u64 - 1) * *dst_factor_in as u64;
+                    let max_src = (*iter_out as u64 - 1) * *src_factor_out as u64
+                        + (*iter_in as u64 - 1) * *src_factor_in as u64;
+                    let max_wgt = (*iter_out as u64 - 1) * *wgt_factor_out as u64
+                        + (*iter_in as u64 - 1) * *wgt_factor_in as u64;
+                    for u in &self.uops[*uop_bgn as usize..*uop_end as usize] {
+                        anyhow::ensure!(
+                            u.dst as u64 + max_out < acc_cap,
+                            "{}: insn {i} GEMM dst overflow",
+                            self.name
+                        );
+                        anyhow::ensure!(
+                            u.src as u64 + max_src < inp_cap,
+                            "{}: insn {i} GEMM src overflow",
+                            self.name
+                        );
+                        anyhow::ensure!(
+                            u.wgt as u64 + max_wgt < wgt_cap,
+                            "{}: insn {i} GEMM wgt overflow",
+                            self.name
+                        );
+                    }
+                }
+                Insn::Alu { uop_bgn, uop_end, iter_out, iter_in, .. } => {
+                    anyhow::ensure!(
+                        uop_bgn < uop_end && (*uop_end as usize) <= self.uops.len(),
+                        "{}: insn {i} ALU uop range invalid",
+                        self.name
+                    );
+                    anyhow::ensure!(*iter_out >= 1 && *iter_in >= 1,
+                        "{}: insn {i} ALU zero iteration", self.name);
+                }
+                Insn::Finish { .. } => {}
+            }
+        }
+        anyhow::ensure!(
+            matches!(self.insns.last(), Some(Insn::Finish { .. })),
+            "{}: program must end with FINISH",
+            self.name
+        );
+        self.check_token_balance()?;
+        Ok(())
+    }
+
+    /// Dependency tokens pushed and popped across each queue must balance,
+    /// otherwise fsim/hardware deadlocks or leaks tokens.
+    fn check_token_balance(&self) -> anyhow::Result<()> {
+        // queues: (load→compute), (compute→load), (compute→store), (store→compute)
+        let mut l2c: i64 = 0;
+        let mut c2l: i64 = 0;
+        let mut c2s: i64 = 0;
+        let mut s2c: i64 = 0;
+        use super::isa::Module;
+        for insn in &self.insns {
+            let d = insn.dep();
+            match insn.module() {
+                Module::Load => {
+                    // load's "next" is compute
+                    if d.push_next {
+                        l2c += 1;
+                    }
+                    if d.pop_next {
+                        c2l -= 1;
+                    }
+                }
+                Module::Compute => {
+                    // compute's prev is load, next is store
+                    if d.pop_prev {
+                        l2c -= 1;
+                    }
+                    if d.push_prev {
+                        c2l += 1;
+                    }
+                    if d.push_next {
+                        c2s += 1;
+                    }
+                    if d.pop_next {
+                        s2c -= 1;
+                    }
+                }
+                Module::Store => {
+                    // store's prev is compute
+                    if d.pop_prev {
+                        c2s -= 1;
+                    }
+                    if d.push_prev {
+                        s2c += 1;
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(
+            l2c == 0 && c2l == 0 && c2s == 0 && s2c == 0,
+            "{}: unbalanced dependency tokens (l2c={l2c}, c2l={c2l}, c2s={c2s}, s2c={s2c})",
+            self.name
+        );
+        Ok(())
+    }
+
+    /// Total DRAM traffic in bytes (input+weight loads, acc loads ×4,
+    /// output stores) — the memory-bound term of the timing model.
+    pub fn dram_traffic_bytes(&self, cfg: &VtaConfig) -> u64 {
+        let blk = cfg.block as u64;
+        let mut bytes = 0u64;
+        for insn in &self.insns {
+            match insn {
+                Insn::Load { mem, y_size, x_size, .. } => {
+                    let elems = *y_size as u64 * *x_size as u64;
+                    bytes += match mem {
+                        MemType::Inp => elems * blk,       // rows of block int8
+                        MemType::Wgt => elems * blk * blk, // block×block tiles
+                        MemType::Acc => elems * blk * 4,   // int32 rows
+                        MemType::Uop => elems * 4,         // 32-bit uops
+                        MemType::Out => 0,
+                    };
+                }
+                Insn::Store { y_size, x_size, .. } => {
+                    bytes += *y_size as u64 * *x_size as u64 * blk; // int8 rows
+                }
+                _ => {}
+            }
+        }
+        bytes
+    }
+
+    /// Total GEMM uop-cycles (one block-row × block×block tile MAC per
+    /// cycle) — the compute-bound term.
+    pub fn gemm_cycles(&self) -> u64 {
+        self.insns
+            .iter()
+            .map(|i| match i {
+                Insn::Gemm { uop_bgn, uop_end, iter_out, iter_in, .. } => {
+                    (*uop_end as u64 - *uop_bgn as u64)
+                        * *iter_out as u64
+                        * *iter_in as u64
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total ALU uop-cycles.
+    pub fn alu_cycles(&self) -> u64 {
+        self.insns
+            .iter()
+            .map(|i| match i {
+                Insn::Alu { uop_bgn, uop_end, iter_out, iter_in, .. } => {
+                    (*uop_end as u64 - *uop_bgn as u64)
+                        * *iter_out as u64
+                        * *iter_in as u64
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Convenience for building dep flags.
+pub fn dep(pop_prev: bool, pop_next: bool, push_prev: bool, push_next: bool) -> DepFlags {
+    DepFlags { pop_prev, pop_next, push_prev, push_next }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::VtaConfig;
+    use crate::vta::isa::{AluOp, Insn};
+
+    fn cfg() -> VtaConfig {
+        VtaConfig::table1_zynq7000()
+    }
+
+    /// Minimal valid program: load 1 row + 1 tile, gemm, store.
+    fn tiny_program() -> Program {
+        let mut p = Program::new("tiny");
+        let u = p.push_uop(Uop { dst: 0, src: 0, wgt: 0 });
+        p.push(Insn::Load {
+            dep: dep(false, false, false, true),
+            mem: MemType::Inp,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Load {
+            dep: dep(false, false, false, false),
+            mem: MemType::Wgt,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Gemm {
+            dep: dep(true, false, true, true),
+            reset: true,
+            uop_bgn: u,
+            uop_end: u + 1,
+            iter_out: 1,
+            iter_in: 1,
+            dst_factor_out: 0,
+            dst_factor_in: 0,
+            src_factor_out: 0,
+            src_factor_in: 0,
+            wgt_factor_out: 0,
+            wgt_factor_in: 0,
+        });
+        p.push(Insn::Store {
+            dep: dep(true, false, true, false),
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        // close the loop: load pops compute's push_prev token; compute pops store's
+        p.push(Insn::Load {
+            dep: dep(false, true, false, false),
+            mem: MemType::Inp,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 0,
+            x_size: 0,
+            x_stride: 0,
+        });
+        p.push(Insn::Finish { dep: dep(false, true, false, false) });
+        p.dram = DramLayout { inp_len: 16, wgt_len: 256, acc_len: 0, out_len: 16 };
+        p
+    }
+
+    #[test]
+    fn tiny_program_validates() {
+        tiny_program().validate(&cfg()).unwrap();
+    }
+
+    #[test]
+    fn cycle_and_traffic_accounting() {
+        let p = tiny_program();
+        assert_eq!(p.gemm_cycles(), 1);
+        assert_eq!(p.alu_cycles(), 0);
+        // 1 input row (16 int8) + 1 weight tile (256 int8) + 1 out row (16)
+        assert_eq!(p.dram_traffic_bytes(&cfg()), 16 + 256 + 16);
+    }
+
+    #[test]
+    fn missing_finish_rejected() {
+        let mut p = tiny_program();
+        p.insns.pop();
+        assert!(p.validate(&cfg()).unwrap_err().to_string().contains("FINISH"));
+    }
+
+    #[test]
+    fn buffer_overflow_rejected() {
+        let mut p = tiny_program();
+        p.insns[0] = Insn::Load {
+            dep: dep(false, false, false, true),
+            mem: MemType::Inp,
+            sram_base: 0,
+            y_size: 1000,
+            x_size: 1000,
+            dram_base: 0,
+            x_stride: 1000,
+        };
+        let e = p.validate(&cfg()).unwrap_err().to_string();
+        assert!(e.contains("exceeds capacity"), "{e}");
+    }
+
+    #[test]
+    fn unbalanced_tokens_rejected() {
+        let mut p = tiny_program();
+        // drop the final token-consuming load
+        p.insns.remove(4);
+        let e = p.validate(&cfg()).unwrap_err().to_string();
+        assert!(e.contains("unbalanced"), "{e}");
+    }
+
+    #[test]
+    fn bad_uop_range_rejected() {
+        let mut p = tiny_program();
+        if let Insn::Gemm { uop_end, .. } = &mut p.insns[2] {
+            *uop_end = 99;
+        }
+        assert!(p.validate(&cfg()).is_err());
+    }
+
+    #[test]
+    fn alu_cycles_counted() {
+        let mut p = tiny_program();
+        let u = p.push_uop(Uop { dst: 0, src: 0, wgt: 0 });
+        p.insns.insert(
+            3,
+            Insn::Alu {
+                dep: dep(false, false, false, false),
+                op: AluOp::Shr,
+                use_imm: true,
+                imm: 8,
+                uop_bgn: u,
+                uop_end: u + 1,
+                iter_out: 7,
+                iter_in: 3,
+                dst_factor_out: 0,
+                dst_factor_in: 0,
+                src_factor_out: 0,
+                src_factor_in: 0,
+            },
+        );
+        assert_eq!(p.alu_cycles(), 21);
+        p.validate(&cfg()).unwrap();
+    }
+}

@@ -1,0 +1,435 @@
+//! VTA cycle/timing model.
+//!
+//! Prices a [`Program`] by replaying the same dependency-queue schedule as
+//! `fsim`, but in the time domain: each module (load / compute / store)
+//! serves its queue in order, token pops wait for the producer's
+//! timestamp, and the makespan is the finish time of the last
+//! instruction. This reproduces VTA's defining behaviour — **load and
+//! store overlap with compute** through the RAW/WAR token pipeline, so a
+//! program is memory-bound or compute-bound depending on which module's
+//! busy time dominates (exactly the mechanism behind the §IV results:
+//! clock scaling only helps the compute-bound share; larger buffers cut
+//! DRAM traffic and help the memory-bound share).
+//!
+//! Calibrated constants (see `config::calibration`): GEMM pipeline
+//! efficiency and effective DRAM bandwidth.
+
+use super::isa::{Insn, MemType, Module};
+use super::program::Program;
+use crate::config::{BoardProfile, Calibration, VtaConfig};
+use crate::util::units::{cycles_to_ns, us_to_ns, Nanos};
+use std::collections::VecDeque;
+
+/// Fixed DMA descriptor setup per LOAD/STORE instruction (cycles).
+const DMA_SETUP_CYCLES: u64 = 64;
+/// GEMM pipeline fill per macro-instruction (systolic array depth).
+fn gemm_pipe_fill(block: u32) -> u64 {
+    block as u64
+}
+
+/// Per-program cycle accounting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CycleReport {
+    /// Makespan in cycles.
+    pub total_cycles: u64,
+    /// Busy cycles per module (≤ total, overlap is the point).
+    pub load_busy: u64,
+    pub compute_busy: u64,
+    pub store_busy: u64,
+    /// Raw GEMM/ALU uop cycles (pre-efficiency).
+    pub gemm_cycles: u64,
+    pub alu_cycles: u64,
+    /// DRAM bytes moved.
+    pub dram_bytes: u64,
+}
+
+impl CycleReport {
+    /// Utilization of the GEMM core over the makespan.
+    pub fn compute_utilization(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.gemm_cycles as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// True if the load module dominates (memory-bound program).
+    pub fn memory_bound(&self) -> bool {
+        self.load_busy > self.compute_busy
+    }
+}
+
+/// The timing model for one node (board + bitstream + calibration).
+#[derive(Debug, Clone)]
+pub struct TimingModel {
+    pub cfg: VtaConfig,
+    pub board: BoardProfile,
+    pub calib: Calibration,
+}
+
+impl TimingModel {
+    pub fn new(cfg: VtaConfig, board: BoardProfile, calib: Calibration) -> Self {
+        TimingModel { cfg, board, calib }
+    }
+
+    /// Effective DRAM bytes per PL cycle.
+    fn dram_bytes_per_cycle(&self) -> f64 {
+        self.board.dram_bw_bytes_per_sec as f64 * self.calib.dram_efficiency
+            / self.cfg.clock_hz as f64
+    }
+
+    /// Cycle cost of one instruction on its module.
+    fn insn_cycles(&self, insn: &Insn) -> u64 {
+        let blk = self.cfg.block as u64;
+        let dbpc = self.dram_bytes_per_cycle();
+        match insn {
+            Insn::Load { mem, y_size, x_size, .. } => {
+                let elems = *y_size as u64 * *x_size as u64;
+                let bytes = match mem {
+                    MemType::Inp => elems * blk,
+                    MemType::Wgt => elems * blk * blk,
+                    MemType::Acc => elems * blk * 4,
+                    MemType::Uop => elems * 4,
+                    MemType::Out => 0,
+                };
+                DMA_SETUP_CYCLES + (bytes as f64 / dbpc).ceil() as u64
+            }
+            Insn::Store { y_size, x_size, .. } => {
+                let bytes = *y_size as u64 * *x_size as u64 * blk;
+                DMA_SETUP_CYCLES + (bytes as f64 / dbpc).ceil() as u64
+            }
+            Insn::Gemm { uop_bgn, uop_end, iter_out, iter_in, .. } => {
+                let uops = (*uop_end as u64 - *uop_bgn as u64)
+                    * *iter_out as u64
+                    * *iter_in as u64;
+                gemm_pipe_fill(self.cfg.block)
+                    + (uops as f64 / self.calib.gemm_efficiency).ceil() as u64
+            }
+            Insn::Alu { uop_bgn, uop_end, iter_out, iter_in, .. } => {
+                let uops = (*uop_end as u64 - *uop_bgn as u64)
+                    * *iter_out as u64
+                    * *iter_in as u64;
+                // ALU reads+writes the int32 register file: 2 cycles/uop
+                2 * uops
+            }
+            Insn::Finish { .. } => 1,
+        }
+    }
+
+    /// Replay the token schedule in the time domain.
+    pub fn price(&self, prog: &Program) -> anyhow::Result<CycleReport> {
+        prog.validate(&self.cfg)?;
+        let mut queues: [VecDeque<&Insn>; 3] =
+            [VecDeque::new(), VecDeque::new(), VecDeque::new()];
+        for insn in &prog.insns {
+            let qi = match insn.module() {
+                Module::Load => 0,
+                Module::Compute => 1,
+                Module::Store => 2,
+            };
+            queues[qi].push_back(insn);
+        }
+        // token queues carry the producer's finish timestamp
+        let mut l2c: VecDeque<u64> = VecDeque::new();
+        let mut c2l: VecDeque<u64> = VecDeque::new();
+        let mut c2s: VecDeque<u64> = VecDeque::new();
+        let mut s2c: VecDeque<u64> = VecDeque::new();
+        let mut ready = [0u64; 3]; // module available-from time
+        let mut report = CycleReport {
+            gemm_cycles: prog.gemm_cycles(),
+            alu_cycles: prog.alu_cycles(),
+            dram_bytes: prog.dram_traffic_bytes(&self.cfg),
+            ..Default::default()
+        };
+
+        loop {
+            if queues.iter().all(|q| q.is_empty()) {
+                break;
+            }
+            let mut progressed = false;
+            for m in 0..3 {
+                let Some(&insn) = queues[m].front() else { continue };
+                let d = insn.dep();
+                // determine the earliest start given tokens
+                let mut start = ready[m];
+                let tokens_ok = match insn.module() {
+                    Module::Load => {
+                        if d.pop_next {
+                            match c2l.front() {
+                                Some(&t) => {
+                                    start = start.max(t);
+                                    true
+                                }
+                                None => false,
+                            }
+                        } else {
+                            true
+                        }
+                    }
+                    Module::Compute => {
+                        let a = if d.pop_prev {
+                            match l2c.front() {
+                                Some(&t) => {
+                                    start = start.max(t);
+                                    true
+                                }
+                                None => false,
+                            }
+                        } else {
+                            true
+                        };
+                        let b = if d.pop_next {
+                            match s2c.front() {
+                                Some(&t) => {
+                                    start = start.max(t);
+                                    true
+                                }
+                                None => false,
+                            }
+                        } else {
+                            true
+                        };
+                        a && b
+                    }
+                    Module::Store => {
+                        if d.pop_prev {
+                            match c2s.front() {
+                                Some(&t) => {
+                                    start = start.max(t);
+                                    true
+                                }
+                                None => false,
+                            }
+                        } else {
+                            true
+                        }
+                    }
+                };
+                if !tokens_ok {
+                    continue;
+                }
+                // consume tokens
+                match insn.module() {
+                    Module::Load => {
+                        if d.pop_next {
+                            c2l.pop_front();
+                        }
+                    }
+                    Module::Compute => {
+                        if d.pop_prev {
+                            l2c.pop_front();
+                        }
+                        if d.pop_next {
+                            s2c.pop_front();
+                        }
+                    }
+                    Module::Store => {
+                        if d.pop_prev {
+                            c2s.pop_front();
+                        }
+                    }
+                }
+                let cost = self.insn_cycles(insn);
+                let finish = start + cost;
+                ready[m] = finish;
+                match insn.module() {
+                    Module::Load => report.load_busy += cost,
+                    Module::Compute => report.compute_busy += cost,
+                    Module::Store => report.store_busy += cost,
+                }
+                // produce tokens
+                match insn.module() {
+                    Module::Load => {
+                        if d.push_next {
+                            l2c.push_back(finish);
+                        }
+                    }
+                    Module::Compute => {
+                        if d.push_prev {
+                            c2l.push_back(finish);
+                        }
+                        if d.push_next {
+                            c2s.push_back(finish);
+                        }
+                    }
+                    Module::Store => {
+                        if d.push_prev {
+                            s2c.push_back(finish);
+                        }
+                    }
+                }
+                queues[m].pop_front();
+                progressed = true;
+            }
+            if !progressed {
+                anyhow::bail!("timing deadlock in '{}'", prog.name);
+            }
+        }
+        report.total_cycles = ready.iter().copied().max().unwrap_or(0);
+        Ok(report)
+    }
+
+    /// Wall-clock time of one program launch on this node: PL makespan at
+    /// the configured clock plus the PS driver overhead.
+    pub fn program_time_ns(&self, prog: &Program) -> anyhow::Result<Nanos> {
+        let report = self.price(prog)?;
+        Ok(self.report_time_ns(&report))
+    }
+
+    /// Convert an existing report to wall-clock ns (no re-pricing).
+    pub fn report_time_ns(&self, report: &CycleReport) -> Nanos {
+        cycles_to_ns(report.total_cycles, self.cfg.clock_hz)
+            + us_to_ns(self.calib.driver_overhead_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vta::isa::Insn;
+    use crate::vta::program::{dep, Program, Uop};
+
+    fn model() -> TimingModel {
+        TimingModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration { driver_overhead_us: 0.0, ..Default::default() },
+        )
+    }
+
+    /// load(inp)+load(wgt) ∥ gemm chain: compute must overlap loads.
+    fn overlapped_program(tiles: u16) -> Program {
+        overlapped_program_iters(tiles, 64)
+    }
+
+    fn overlapped_program_iters(tiles: u16, iters: u16) -> Program {
+        let mut p = Program::new("overlap");
+        let u = p.push_uop(Uop { dst: 0, src: 0, wgt: 0 });
+        for t in 0..tiles {
+            p.push(Insn::Load {
+                dep: dep(false, t > 0, false, false),
+                mem: MemType::Inp,
+                sram_base: 0,
+                dram_base: 0,
+                y_size: 8,
+                x_size: 1,
+                x_stride: 1,
+            });
+            p.push(Insn::Load {
+                dep: dep(false, false, false, true),
+                mem: MemType::Wgt,
+                sram_base: 0,
+                dram_base: 0,
+                y_size: 4,
+                x_size: 1,
+                x_stride: 1,
+            });
+            p.push(Insn::Gemm {
+                dep: dep(true, false, true, t + 1 == tiles),
+                reset: t == 0,
+                uop_bgn: u,
+                uop_end: u + 1,
+                iter_out: iters,
+                iter_in: 1,
+                dst_factor_out: 0,
+                dst_factor_in: 0,
+                src_factor_out: 0,
+                src_factor_in: 0,
+                wgt_factor_out: 0,
+                wgt_factor_in: 0,
+            });
+        }
+        // compute pushed `tiles` c2l tokens; loads popped tiles-1 → pop last
+        p.push(Insn::Load {
+            dep: dep(false, true, false, false),
+            mem: MemType::Inp,
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 0,
+            x_size: 0,
+            x_stride: 0,
+        });
+        p.push(Insn::Store {
+            dep: dep(true, false, true, false),
+            sram_base: 0,
+            dram_base: 0,
+            y_size: 1,
+            x_size: 1,
+            x_stride: 1,
+        });
+        p.push(Insn::Finish { dep: dep(false, true, false, false) });
+        p
+    }
+
+    #[test]
+    fn overlap_reduces_makespan() {
+        let m = model();
+        let p = overlapped_program(8);
+        let r = m.price(&p).unwrap();
+        let serial = r.load_busy + r.compute_busy + r.store_busy;
+        assert!(
+            r.total_cycles < serial,
+            "no overlap: makespan {} vs serial {}",
+            r.total_cycles,
+            serial
+        );
+        // and the makespan is at least the slowest module
+        assert!(r.total_cycles >= r.load_busy.max(r.compute_busy).max(r.store_busy));
+    }
+
+    #[test]
+    fn memory_vs_compute_bound_flips_with_clock() {
+        // same program, huge clock → loads (clock-independent in seconds,
+        // so more cycles at higher clock) dominate
+        let p = overlapped_program_iters(8, 256); // compute-heavy
+        let slow = model();
+        let mut fast = model();
+        fast.cfg.clock_hz = 1_000_000_000;
+        fast.board.dram_bw_bytes_per_sec = 100_000_000; // starved DRAM
+        let r_slow = slow.price(&p).unwrap();
+        let r_fast = fast.price(&p).unwrap();
+        assert!(!r_slow.memory_bound());
+        assert!(r_fast.memory_bound());
+    }
+
+    #[test]
+    fn gemm_efficiency_scales_compute() {
+        let p = overlapped_program(4);
+        let m1 = model();
+        let mut m2 = model();
+        m2.calib.gemm_efficiency = m1.calib.gemm_efficiency / 2.0;
+        let r1 = m1.price(&p).unwrap();
+        let r2 = m2.price(&p).unwrap();
+        assert!(r2.compute_busy > (r1.compute_busy as f64 * 1.8) as u64);
+    }
+
+    #[test]
+    fn time_includes_driver_overhead() {
+        let mut m = model();
+        m.calib.driver_overhead_us = 1000.0; // 1 ms
+        let p = overlapped_program(2);
+        let t = m.program_time_ns(&p).unwrap();
+        assert!(t >= 1_000_000, "{t}");
+    }
+
+    #[test]
+    fn report_totals_consistent() {
+        let m = model();
+        let p = overlapped_program(4);
+        let r = m.price(&p).unwrap();
+        assert_eq!(r.gemm_cycles, 4 * 64);
+        assert!(r.dram_bytes > 0);
+        assert!(r.compute_utilization() > 0.0 && r.compute_utilization() <= 1.0);
+    }
+
+    #[test]
+    fn higher_clock_is_never_slower_in_seconds() {
+        let p = overlapped_program(8);
+        let m100 = model();
+        let mut m300 = model();
+        m300.cfg.clock_hz = 300_000_000;
+        let t100 = m100.program_time_ns(&p).unwrap();
+        let t300 = m300.program_time_ns(&p).unwrap();
+        assert!(t300 <= t100, "300 MHz {t300} > 100 MHz {t100}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Coordinator integration: the full serving path on real artifacts.
+//!
+//! Pipelines and scatter-gather plans execute the tiny (32×32) ResNet-18
+//! through worker threads with private PJRT engines. Correctness bar:
+//! logits must equal the python-exported test vector bit-for-bit on every
+//! topology, for every image, in submission order.
+
+use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::graph::tensor::DType;
+use vta_cluster::runtime::{artifacts_dir, Manifest, TensorData};
+use vta_cluster::sched::{pipeline, scatter_gather};
+use vta_cluster::coordinator::Coordinator;
+
+fn ready() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn tv_pair() -> (TensorData, TensorData) {
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let tv = m.test_vectors.iter().find(|t| t.name == "tv_tiny_full").unwrap();
+    let input = TensorData::from_bytes(
+        tv.in_shape.clone(),
+        DType::I8,
+        &m.read_blob(&tv.input_file).unwrap(),
+    )
+    .unwrap();
+    let output = TensorData::from_bytes(
+        tv.out_shape.clone(),
+        tv.out_dtype,
+        &m.read_blob(&tv.output_file).unwrap(),
+    )
+    .unwrap();
+    (input, output)
+}
+
+#[test]
+fn scatter_gather_serving_matches_python() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let g = build_resnet18(32).unwrap();
+    let plan = scatter_gather(&g, 3).unwrap();
+    let coord = Coordinator::start(artifacts_dir(), &plan, 32).unwrap();
+    let (input, want) = tv_pair();
+    let batch: Vec<TensorData> = (0..6).map(|_| input.clone()).collect();
+    let (outs, report) = coord.run_batch(batch).unwrap();
+    assert_eq!(report.images, 6);
+    for (i, out) in outs.iter().enumerate() {
+        assert_eq!(out, &want, "image {i} diverged");
+    }
+    assert!(report.throughput_img_per_sec > 0.0);
+}
+
+#[test]
+fn pipeline_serving_matches_python() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let g = build_resnet18(32).unwrap();
+    // 4-stage pipeline balanced by MACs
+    let macs: Vec<(String, u64)> = vta_cluster::graph::resnet::segment_macs(&g);
+    let cost = |l: &str| macs.iter().find(|(x, _)| x == l).unwrap().1 as f64;
+    let plan = pipeline(&g, 4, cost).unwrap();
+    let coord = Coordinator::start(artifacts_dir(), &plan, 32).unwrap();
+    let (input, want) = tv_pair();
+    let batch: Vec<TensorData> = (0..8).map(|_| input.clone()).collect();
+    let (outs, report) = coord.run_batch(batch).unwrap();
+    for out in &outs {
+        assert_eq!(out, &want);
+    }
+    assert_eq!(report.images, 8);
+}
+
+#[test]
+fn deep_pipeline_10_stages_works() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let g = build_resnet18(32).unwrap();
+    let plan = pipeline(&g, 10, |_| 1.0).unwrap();
+    let coord = Coordinator::start(artifacts_dir(), &plan, 32).unwrap();
+    let (input, want) = tv_pair();
+    let (outs, _) = coord.run_batch(vec![input]).unwrap();
+    assert_eq!(outs[0], want);
+}
+
+#[test]
+fn spatial_plans_rejected_for_serving() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let g = build_resnet18(32).unwrap();
+    let macs: Vec<(String, u64)> = vta_cluster::graph::resnet::segment_macs(&g);
+    let cost = |l: &str| macs.iter().find(|(x, _)| x == l).unwrap().1 as f64;
+    // core_assign at n=12 produces Spatial stages
+    let plan = vta_cluster::sched::core_assign(&g, 12, cost).unwrap();
+    let err = Coordinator::start(artifacts_dir(), &plan, 32);
+    assert!(err.is_err());
+}
+
+#[test]
+fn wrong_image_shape_rejected_at_submit() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let g = build_resnet18(32).unwrap();
+    let plan = scatter_gather(&g, 1).unwrap();
+    let coord = Coordinator::start(artifacts_dir(), &plan, 32).unwrap();
+    let bad = TensorData::i8(vec![1, 16, 16, 3], vec![0; 768]).unwrap();
+    assert!(coord.submit(bad).is_err());
+}

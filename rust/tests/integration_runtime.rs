@@ -1,0 +1,145 @@
+//! Runtime integration: load the real AOT artifacts, execute them on the
+//! PJRT CPU client, and require bit-exact agreement with the test vectors
+//! exported by `python/compile/aot.py`.
+//!
+//! This closes the python→HLO-text→rust loop — the contract the whole
+//! serving path rests on. Requires `make artifacts` to have run; tests
+//! no-op (with a note) when artifacts are absent so `cargo test` works in
+//! a fresh checkout.
+
+use vta_cluster::graph::tensor::DType;
+use vta_cluster::runtime::{artifacts_dir, Engine, Manifest, TensorData};
+
+fn engine() -> Option<Engine> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Engine::new(Manifest::load(&dir).unwrap()).unwrap())
+}
+
+fn load_vector(m: &Manifest, name: &str) -> (TensorData, TensorData) {
+    let tv = m.test_vectors.iter().find(|t| t.name == name).unwrap();
+    let input = TensorData::from_bytes(
+        tv.in_shape.clone(),
+        DType::I8,
+        &m.read_blob(&tv.input_file).unwrap(),
+    )
+    .unwrap();
+    let output = TensorData::from_bytes(
+        tv.out_shape.clone(),
+        tv.out_dtype,
+        &m.read_blob(&tv.output_file).unwrap(),
+    )
+    .unwrap();
+    (input, output)
+}
+
+#[test]
+fn every_tiny_segment_matches_python_bit_exactly() {
+    let Some(mut eng) = engine() else { return };
+    let manifest = eng.manifest().clone();
+    for tv in manifest.test_vectors.clone() {
+        if tv.artifact.ends_with("full") {
+            continue;
+        }
+        let (input, want) = load_vector(&manifest, &tv.name);
+        let got = eng.run_segment(&tv.artifact, &input).unwrap();
+        assert_eq!(got, want, "segment artifact {} diverged from python", tv.artifact);
+    }
+}
+
+#[test]
+fn tiny_full_model_matches_python() {
+    let Some(mut eng) = engine() else { return };
+    let manifest = eng.manifest().clone();
+    let (input, want) = load_vector(&manifest, "tv_tiny_full");
+    // full artifact takes (x, w0..w9)
+    let full = manifest.full(32).unwrap().clone();
+    let mut args = vec![input];
+    let seg_entries: Vec<_> =
+        manifest.segments(32).into_iter().cloned().collect();
+    for seg in &seg_entries {
+        let w = eng.weights_for(seg).unwrap();
+        args.push(w);
+    }
+    let got = eng.execute(&full.name, &args).unwrap();
+    assert_eq!(got, want, "full model artifact diverged from python");
+}
+
+#[test]
+fn chained_segments_equal_full_model() {
+    let Some(mut eng) = engine() else { return };
+    let manifest = eng.manifest().clone();
+    let (input, want) = load_vector(&manifest, "tv_tiny_full");
+    let names: Vec<String> =
+        manifest.segments(32).iter().map(|s| s.name.clone()).collect();
+    let got = eng.run_chain(&names, &input).unwrap();
+    assert_eq!(got, want, "segment chain diverged from the full module");
+}
+
+#[test]
+fn gemm_microkernel_artifacts_execute() {
+    let Some(mut eng) = engine() else { return };
+    // gemm16/gemm128: int8 GEMM artifacts with output-major weights —
+    // validate against a host reference.
+    let mut rng = vta_cluster::util::rng::Rng::new(99);
+    for name in ["gemm16", "gemm128"] {
+        let entry = eng.manifest().by_name(name).unwrap().clone();
+        let (m, k) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+        let n = entry.inputs[1].shape[0];
+        let x = TensorData::i8(vec![m, k], rng.i8_vec(m * k)).unwrap();
+        let w = TensorData::i8(vec![n, k], rng.i8_vec(n * k)).unwrap();
+        let got = eng.execute(name, &[x.clone(), w.clone()]).unwrap();
+        let xs = x.as_i8().unwrap();
+        let ws = w.as_i8().unwrap();
+        let got_i32 = got.as_i32().unwrap();
+        for i in (0..m).step_by(7) {
+            for j in (0..n).step_by(5) {
+                let want: i32 =
+                    (0..k).map(|kk| xs[i * k + kk] as i32 * ws[j * k + kk] as i32).sum();
+                assert_eq!(got_i32[i * n + j], want, "{name} at ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn executable_cache_reused() {
+    let Some(mut eng) = engine() else { return };
+    let manifest = eng.manifest().clone();
+    let (input, _) = load_vector(&manifest, "tv_tiny_stem");
+    let before = eng.loaded();
+    eng.run_segment("resnet18_tiny_seg_stem", &input).unwrap();
+    let after_first = eng.loaded();
+    eng.run_segment("resnet18_tiny_seg_stem", &input).unwrap();
+    assert_eq!(eng.loaded(), after_first);
+    assert_eq!(after_first, before + 1);
+}
+
+#[test]
+fn fast_variant_matches_pallas_variant() {
+    // the serving-optimized (ref-impl) artifacts must be numerically
+    // identical to the pallas correctness reference — same test vectors
+    let Some(mut eng) = engine() else { return };
+    let manifest = eng.manifest().clone();
+    let (input, want) = load_vector(&manifest, "tv_tiny_full");
+    let names: Vec<String> = manifest
+        .segments_variant(32, true)
+        .iter()
+        .map(|s| s.name.clone())
+        .collect();
+    assert_eq!(names.len(), 10, "fast tiny variant incomplete");
+    assert!(names.iter().all(|n| n.contains("fast_")));
+    let got = eng.run_chain(&names, &input).unwrap();
+    assert_eq!(got, want, "fast variant diverged from python/pallas reference");
+}
+
+#[test]
+fn wrong_input_shape_rejected() {
+    let Some(mut eng) = engine() else { return };
+    let bad = TensorData::i8(vec![1, 8, 8, 3], vec![0; 192]).unwrap();
+    let err = eng.run_segment("resnet18_tiny_seg_stem", &bad);
+    assert!(err.is_err());
+}

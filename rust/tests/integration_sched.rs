@@ -1,0 +1,121 @@
+//! Scheduler integration: plans must stay valid and consistent when the
+//! cost oracle is the *real* calibrated node model (not toy MACs), and
+//! planner decisions must be coherent with the simulator's verdicts.
+
+use vta_cluster::config::{BoardProfile, Calibration, VtaConfig};
+use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::{build_plan, SplitMode, Strategy};
+use vta_cluster::sim::CostModel;
+
+fn seg_costs() -> Vec<(String, f64)> {
+    let g = build_resnet18(224).unwrap();
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::load_or_default(&artifacts_dir()),
+    );
+    g.segment_order()
+        .into_iter()
+        .map(|l| {
+            let t = cost.segment_time_ns(&g, &l, 1).unwrap() as f64;
+            (l, t)
+        })
+        .collect()
+}
+
+#[test]
+fn all_strategies_all_sizes_with_real_costs() {
+    let g = build_resnet18(224).unwrap();
+    let costs = seg_costs();
+    let lookup = |l: &str| costs.iter().find(|(x, _)| x == l).unwrap().1;
+    for n in 1..=12 {
+        for s in Strategy::all() {
+            let plan = build_plan(s, &g, n, lookup).unwrap();
+            plan.validate().unwrap_or_else(|e| panic!("{s} n={n}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn pipeline_stages_are_contiguous_and_balanced() {
+    let g = build_resnet18(224).unwrap();
+    let costs = seg_costs();
+    let lookup = |l: &str| costs.iter().find(|(x, _)| x == l).unwrap().1;
+    let plan = build_plan(Strategy::Pipeline, &g, 5, lookup).unwrap();
+    assert_eq!(plan.stages.len(), 5);
+    // stage costs within 3× of each other (ResNet segments are lumpy,
+    // but the DP must not produce a degenerate partition)
+    let stage_cost: Vec<f64> = plan
+        .stages
+        .iter()
+        .map(|st| st.segments.iter().map(|s| lookup(s)).sum())
+        .collect();
+    let max = stage_cost.iter().copied().fold(0.0f64, f64::max);
+    let min = stage_cost.iter().copied().fold(f64::INFINITY, f64::min);
+    assert!(max / min < 3.0, "stage costs {stage_cost:?}");
+}
+
+#[test]
+fn core_assign_gives_bottleneck_the_most_nodes() {
+    let g = build_resnet18(224).unwrap();
+    let costs = seg_costs();
+    let lookup = |l: &str| costs.iter().find(|(x, _)| x == l).unwrap().1;
+    let plan = build_plan(Strategy::CoreAssign, &g, 12, lookup).unwrap();
+    // the most expensive segment must have at least as many replicas as
+    // any other segment
+    let (bot, _) = costs
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .clone();
+    let replicas_of = |label: &str| {
+        plan.stages
+            .iter()
+            .find(|st| st.segments[0] == label)
+            .unwrap()
+            .replicas
+            .len()
+    };
+    let rb = replicas_of(&bot);
+    for (label, _) in &costs {
+        assert!(
+            replicas_of(label) <= rb,
+            "segment {label} has more replicas than the bottleneck {bot}"
+        );
+    }
+}
+
+#[test]
+fn fused_uses_spatial_splits_only_with_spare_nodes() {
+    let g = build_resnet18(224).unwrap();
+    let costs = seg_costs();
+    let lookup = |l: &str| costs.iter().find(|(x, _)| x == l).unwrap().1;
+    for n in 1..=12 {
+        let plan = build_plan(Strategy::Fused, &g, n, lookup).unwrap();
+        let spatial = plan
+            .stages
+            .iter()
+            .filter(|st| st.split == SplitMode::Spatial)
+            .count();
+        if n <= 1 {
+            assert_eq!(spatial, 0);
+        }
+        // every spatial stage has ≥2 replicas (validated), and total
+        // assignments equal n exactly for fused (no sharing)
+        assert_eq!(plan.total_assignments(), n, "n={n}");
+    }
+}
+
+#[test]
+fn plan_descriptions_render() {
+    let g = build_resnet18(224).unwrap();
+    let costs = seg_costs();
+    let lookup = |l: &str| costs.iter().find(|(x, _)| x == l).unwrap().1;
+    for s in Strategy::all() {
+        let plan = build_plan(s, &g, 6, lookup).unwrap();
+        let d = plan.describe();
+        assert!(d.contains("stage 0"), "{d}");
+        assert!(d.contains(s.as_str()), "{d}");
+    }
+}

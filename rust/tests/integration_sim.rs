@@ -1,0 +1,122 @@
+//! Simulation integration: the calibrated model must preserve the
+//! paper's qualitative claims end-to-end (DESIGN.md §5 success criteria).
+//!
+//! These run the same pipeline as the benches (graph → cost model →
+//! plans → cluster sim) and assert the *shape* of the results, which is
+//! the reproduction's contract.
+
+use vta_cluster::config::Calibration;
+use vta_cluster::exp::paper;
+use vta_cluster::exp::runner::Bench;
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::Strategy;
+
+fn calib() -> Calibration {
+    Calibration::load_or_default(&artifacts_dir())
+}
+
+#[test]
+fn anchors_match_paper_single_node() {
+    let mut z = Bench::zynq(calib());
+    z.images = 16;
+    let tz = z.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image;
+    assert!(
+        (tz - paper::SINGLE_ZYNQ_MS).abs() / paper::SINGLE_ZYNQ_MS < 0.08,
+        "zynq anchor {tz} vs {}",
+        paper::SINGLE_ZYNQ_MS
+    );
+    let mut u = Bench::ultrascale(calib());
+    u.images = 16;
+    let tu = u.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image;
+    assert!(
+        (tu - paper::SINGLE_ULTRASCALE_MS).abs() / paper::SINGLE_ULTRASCALE_MS < 0.08,
+        "us+ anchor {tu} vs {}",
+        paper::SINGLE_ULTRASCALE_MS
+    );
+}
+
+#[test]
+fn claim_ultrascale_single_node_gain_is_small() {
+    // §III: despite the 3× clock, US+ is only ~6 % faster end-to-end
+    let mut z = Bench::zynq(calib());
+    z.images = 16;
+    let mut u = Bench::ultrascale(calib());
+    u.images = 16;
+    let tz = z.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image;
+    let tu = u.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image;
+    let gain = (tz - tu) / tz;
+    assert!((0.02..0.15).contains(&gain), "gain {gain} outside the paper's regime");
+}
+
+#[test]
+fn claim_scatter_gather_scales_then_flattens() {
+    let mut b = Bench::zynq(calib());
+    b.images = 48;
+    let t1 = b.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image;
+    let t4 = b.cell(Strategy::ScatterGather, 4).unwrap().ms_per_image;
+    let t12 = b.cell(Strategy::ScatterGather, 12).unwrap().ms_per_image;
+    assert!(t1 / t4 > 3.0, "early scaling too weak: {t1}/{t4}");
+    assert!(t1 / t12 < 14.0, "no flattening: {t1}/{t12}");
+    assert!(t1 / t12 > 6.0, "tail too flat: {t1}/{t12}");
+}
+
+#[test]
+fn claim_blocking_regime_ai_core_penalty_at_n2() {
+    // the paper's headline anomaly, in the blocking-MPI regime it
+    // attributes it to (fully serial PS, §III costs)
+    let mut c = calib();
+    c.ps_serial_frac = 1.0;
+    c.mpi_handshake_us = 550.0;
+    c.dma_cpu_ns_per_byte = 8.0;
+    let mut b = Bench::zynq(c);
+    b.images = 24;
+    let t1 = b.cell(Strategy::CoreAssign, 1).unwrap().ms_per_image;
+    let t2 = b.cell(Strategy::CoreAssign, 2).unwrap().ms_per_image;
+    assert!(t2 > t1, "AI-core n=2 should be slower than single: {t2} vs {t1}");
+}
+
+#[test]
+fn claim_section4_variants_speed_up() {
+    use vta_cluster::config::{BoardFamily, VtaConfig};
+    let mk = |vta: VtaConfig| {
+        let mut b = Bench::new(BoardFamily::UltraScalePlus, vta, calib());
+        b.images = 16;
+        b.cell(Strategy::ScatterGather, 1).unwrap().ms_per_image
+    };
+    let base = mk(VtaConfig::table1_ultrascale());
+    let at350 = mk(VtaConfig::ultrascale_350mhz());
+    let big = mk(VtaConfig::big_config_200mhz());
+    assert!(at350 < base, "350 MHz not faster: {at350} vs {base}");
+    assert!(big < base, "big config not faster: {big} vs {base}");
+    // the big config must win by much more than the clock bump (§IV)
+    let s350 = (base - at350) / base;
+    let sbig = (base - big) / base;
+    assert!(sbig > 2.0 * s350, "big config gain {sbig} not ≫ clock gain {s350}");
+    assert!((sbig - paper::BIG_CONFIG_SPEEDUP).abs() < 0.10, "big gain {sbig}");
+}
+
+#[test]
+fn fig3_mean_error_within_band() {
+    // regression guard: overall reproduction quality must not silently
+    // degrade (bands chosen from the current fit, see EXPERIMENTS.md)
+    let mut b = Bench::zynq(calib());
+    b.images = 64;
+    let rows = b.sweep(12).unwrap();
+    let e = vta_cluster::exp::table::errors(&rows, &paper::FIG3_ZYNQ7000_MS);
+    assert!(e[0] < 0.25, "scatter-gather err {}", e[0]);
+    assert!(e[1] < 1.00, "ai-core err {}", e[1]);
+    assert!(e[2] < 0.50, "pipeline err {}", e[2]);
+    assert!(e[3] < 0.40, "fused err {}", e[3]);
+}
+
+#[test]
+fn more_nodes_never_hurt_scatter_gather() {
+    let mut b = Bench::zynq(calib());
+    b.images = 32;
+    let mut prev = f64::INFINITY;
+    for n in 1..=12 {
+        let t = b.cell(Strategy::ScatterGather, n).unwrap().ms_per_image;
+        assert!(t <= prev * 1.02, "SG regressed at n={n}: {t} vs {prev}");
+        prev = t;
+    }
+}

@@ -1,0 +1,208 @@
+//! Cross-module property tests (the mini-proptest harness from
+//! `util::proptest`): random workloads and random cost landscapes must
+//! never violate the system's core invariants.
+
+use vta_cluster::compiler::{candidate_tilings, lower_gemm, GemmShape};
+use vta_cluster::config::{BoardProfile, Calibration, ClusterConfig, VtaConfig};
+use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::prop_assert;
+use vta_cluster::sched::{build_plan, Strategy};
+use vta_cluster::sim::{simulate, CostModel, SimConfig};
+use vta_cluster::util::json::Json;
+use vta_cluster::util::proptest::forall;
+use vta_cluster::vta::fsim::{self, DramImage};
+use vta_cluster::vta::timing::TimingModel;
+
+#[test]
+fn prop_lowered_gemm_always_validates_and_prices() {
+    // any shape × any feasible tiling → valid program, balanced tokens,
+    // deadlock-free timing, positive makespan ≥ compute floor
+    let cfg = VtaConfig::table1_zynq7000();
+    let model = TimingModel::new(
+        cfg.clone(),
+        BoardProfile::zynq7020(),
+        Calibration::default(),
+    );
+    forall("gemm lower/price total", 60, |rng| {
+        let shape = GemmShape {
+            m: rng.range(1, 300) as u64,
+            k: rng.range(1, 600) as u64,
+            n: rng.range(1, 200) as u64,
+        };
+        let (mr, kb, nb) = shape.blocks(&cfg);
+        let cands = candidate_tilings(&cfg, mr, kb, nb);
+        prop_assert!(!cands.is_empty(), "no tilings for {shape:?}");
+        let tiling = *rng.choice(&cands);
+        let prog = lower_gemm("p", shape, tiling, &cfg).map_err(|e| e.to_string())?;
+        let report = model.price(&prog).map_err(|e| e.to_string())?;
+        prop_assert!(report.total_cycles > 0, "zero makespan");
+        prop_assert!(
+            report.total_cycles >= report.gemm_cycles,
+            "makespan below compute floor: {report:?}"
+        );
+        prop_assert!(
+            report.total_cycles
+                <= report.load_busy + report.compute_busy + report.store_busy,
+            "makespan exceeds serial sum"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fsim_gemm_linearity() {
+    // fsim is linear in the weights: out(w1 + w2-as-acc) — we check a
+    // cheaper corollary: doubling happens when weights double (values
+    // kept small so the int8 store cannot clip)
+    let cfg = VtaConfig::table1_zynq7000();
+    forall("fsim linearity", 20, |rng| {
+        let shape = GemmShape {
+            m: rng.range(1, 40) as u64,
+            k: rng.range(1, 60) as u64,
+            n: rng.range(1, 40) as u64,
+        };
+        let (mr, kb, nb) = shape.blocks(&cfg);
+        let cands = candidate_tilings(&cfg, mr, kb, nb);
+        let tiling = *rng.choice(&cands);
+        let prog = lower_gemm("p", shape, tiling, &cfg).map_err(|e| e.to_string())?;
+        let mut d1 = DramImage {
+            inp: (0..prog.dram.inp_len).map(|_| rng.range_i64(-2, 3) as i8).collect(),
+            wgt: (0..prog.dram.wgt_len).map(|_| rng.range_i64(-2, 3) as i8).collect(),
+            acc: vec![],
+            out: vec![0; prog.dram.out_len],
+        };
+        let mut d2 = DramImage {
+            inp: d1.inp.clone(),
+            wgt: d1.wgt.iter().map(|&w| w * 2).collect(),
+            acc: vec![],
+            out: vec![0; prog.dram.out_len],
+        };
+        fsim::run(&cfg, &prog, &mut d1).map_err(|e| e.to_string())?;
+        fsim::run(&cfg, &prog, &mut d2).map_err(|e| e.to_string())?;
+        for (i, (&a, &b)) in d1.out.iter().zip(&d2.out).enumerate() {
+            prop_assert!(
+                b as i32 == 2 * a as i32,
+                "lane {i}: 2x weights gave {b} vs {a}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plans_simulate_for_random_calibrations() {
+    // any sane calibration: plans validate, simulation returns positive
+    // finite times, utilization ∈ [0,1]
+    let g = build_resnet18(224).unwrap();
+    forall("plans simulate", 12, |rng| {
+        let calib = Calibration {
+            gemm_efficiency: 0.2 + rng.f64() * 0.7,
+            dram_efficiency: 0.2 + rng.f64() * 0.7,
+            driver_overhead_us: rng.f64() * 3000.0,
+            mpi_handshake_us: rng.f64() * 800.0,
+            dma_cpu_ns_per_byte: rng.f64() * 8.0,
+            ps_serial_frac: rng.f64(),
+            kappa_zynq: 0.05 + rng.f64(),
+            kappa_ultrascale: 0.05 + rng.f64(),
+        };
+        calib.validate().map_err(|e| e.to_string())?;
+        let n = rng.range(1, 13);
+        let mut cost = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            calib,
+        );
+        let costs: Vec<(String, f64)> = g
+            .segment_order()
+            .into_iter()
+            .map(|l| {
+                let t = cost.segment_time_ns(&g, &l, 1).unwrap() as f64;
+                (l, t)
+            })
+            .collect();
+        let lookup = |l: &str| costs.iter().find(|(x, _)| x == l).unwrap().1;
+        let cluster = ClusterConfig::zynq_stack(n);
+        let strategy = *rng.choice(&Strategy::all());
+        let plan = build_plan(strategy, &g, n, lookup).map_err(|e| e.to_string())?;
+        let r = simulate(&plan, &cluster, &mut cost, &g, &SimConfig::default())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(r.ms_per_image.is_finite() && r.ms_per_image > 0.0, "bad ms/img");
+        prop_assert!(
+            r.latency_ms.mean() + 1e-9 >= r.ms_per_image,
+            "latency {} below throughput {} ({strategy}, n={n})",
+            r.latency_ms.mean(),
+            r.ms_per_image
+        );
+        for &u in &r.node_utilization {
+            prop_assert!((0.0..=1.0001).contains(&u), "util {u}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    fn gen(rng: &mut vta_cluster::util::rng::Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.range_i64(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => {
+                let mut s = String::new();
+                for _ in 0..rng.range(0, 12) {
+                    s.push(*rng.choice(&['a', 'é', '"', '\\', '\n', '😀', ' ', 'z']));
+                }
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.range(0, 5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.range(0, 5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json roundtrip", 300, |rng| {
+        let v = gen(rng, 3);
+        let compact = v.to_string_compact();
+        let back = Json::parse(&compact).map_err(|e| format!("{e} in {compact}"))?;
+        prop_assert!(back == v, "compact roundtrip changed value: {compact}");
+        let pretty = v.to_string_pretty();
+        let back2 = Json::parse(&pretty).map_err(|e| e.to_string())?;
+        prop_assert!(back2 == v, "pretty roundtrip changed value");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_contiguity_and_coverage() {
+    use vta_cluster::graph::partition::partition_balanced;
+    let g = build_resnet18(224).unwrap();
+    forall("partition invariants", 60, |rng| {
+        let k = rng.range(1, 11);
+        // random positive costs
+        let costs: Vec<f64> = (0..10).map(|_| 0.5 + rng.f64() * 99.5).collect();
+        let labels = g.segment_order();
+        let cost = |s: &vta_cluster::graph::partition::Segment| {
+            let i = labels.iter().position(|l| l == &s.labels[0]).unwrap();
+            costs[i]
+        };
+        let parts = partition_balanced(&g, k, cost).map_err(|e| e.to_string())?;
+        prop_assert!(parts.len() == k, "wrong stage count");
+        let flat: Vec<String> = parts.iter().flat_map(|p| p.labels.clone()).collect();
+        prop_assert!(flat == labels, "not a contiguous cover: {flat:?}");
+        // optimality lower bound: max stage ≥ total/k and ≥ max atom
+        let total: f64 = costs.iter().sum();
+        let maxc = parts
+            .iter()
+            .map(|p| p.labels.iter().map(|l| {
+                let i = labels.iter().position(|x| x == l).unwrap();
+                costs[i]
+            }).sum::<f64>())
+            .fold(0.0f64, f64::max);
+        let max_atom = costs.iter().copied().fold(0.0f64, f64::max);
+        prop_assert!(maxc + 1e-9 >= total / k as f64, "below mean bound");
+        prop_assert!(maxc + 1e-9 >= max_atom, "below max atom");
+        Ok(())
+    });
+}
