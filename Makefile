@@ -1,0 +1,23 @@
+# Build entry points referenced throughout the docs and source comments.
+#
+#   make artifacts   — run the L2 AOT exporter (JAX/Pallas → HLO text +
+#                      weight blobs + manifest) into rust/artifacts/,
+#                      where the rust runtime and tests look for them
+#                      ($VTA_ARTIFACTS overrides).
+#   make test        — tier-1 verify (rust) + python unit tests if pytest
+#                      is available.
+
+ARTIFACTS ?= ../rust/artifacts
+
+.PHONY: artifacts test rust-test python-test
+
+artifacts:
+	cd python && python3 -m compile.aot --out $(ARTIFACTS)
+
+test: rust-test python-test
+
+rust-test:
+	cd rust && cargo build --release && cargo test -q
+
+python-test:
+	-python3 -m pytest -q python/tests

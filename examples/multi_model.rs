@@ -1,0 +1,106 @@
+//! Multi-model workloads on one shared cluster (DESIGN.md §7, E9).
+//!
+//! ```bash
+//! cargo run --release --example multi_model
+//! cargo run --release --example multi_model -- --nodes 16
+//! ```
+//!
+//! The paper's cluster "can simultaneously execute diverse Neural
+//! Network models". This example walks that claim end to end with the
+//! workload registry:
+//!
+//! 1. every zoo model is scheduled by all four §II-C strategies on the
+//!    same cluster, showing the best strategy is *model-dependent*;
+//! 2. three tenants (ResNet-18, LeNet-5, the MLP) then share one node
+//!    budget — the budget is split by service demand, each tenant keeps
+//!    its own strategy, and the calibrated simulator prices every
+//!    pipeline, yielding a per-model serving report.
+
+use vta_cluster::config::{BoardFamily, Calibration, VtaConfig};
+use vta_cluster::coordinator::{simulate_tenants, TenantRequest};
+use vta_cluster::exp::runner::Bench;
+use vta_cluster::graph::zoo;
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::Strategy;
+use vta_cluster::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("multi_model", "multi-model / multi-tenant demo")
+        .opt("nodes", "12", "shared node budget")
+        .opt("images", "32", "images per tenant")
+        .parse()?;
+    let budget = args.get_usize("nodes")?;
+    let images = args.get_usize("images")?;
+    let calib = Calibration::load_or_default(&artifacts_dir());
+
+    // ---- 1. per-model strategy comparison -----------------------------
+    println!("=== every zoo model × every §II-C strategy (4 nodes, Zynq-7000) ===");
+    for spec in &zoo::MODELS {
+        let mut b = Bench::for_model(
+            BoardFamily::Zynq7000,
+            VtaConfig::table1_zynq7000(),
+            calib.clone(),
+            spec.name,
+            0,
+        )?;
+        b.images = images;
+        print!("{:16}", spec.name);
+        let mut best = (f64::INFINITY, Strategy::ScatterGather);
+        for s in Strategy::all() {
+            let ms = b.cell(s, 4)?.ms_per_image;
+            if ms < best.0 {
+                best = (ms, s);
+            }
+            print!("  {:>10.3}", ms);
+        }
+        println!("  ← best: {}", best.1);
+    }
+    println!(
+        "{:16}  {:>10}  {:>10}  {:>10}  {:>10}   (ms/image)\n",
+        "", "sg", "ai-core", "pipeline", "fused"
+    );
+
+    // ---- 2. three tenants share one budget ----------------------------
+    println!("=== {budget}-node budget shared by three tenants ===");
+    let tenants = [
+        TenantRequest {
+            model: "resnet18".into(),
+            input_hw: 224,
+            strategy: Strategy::Fused,
+            images,
+        },
+        TenantRequest {
+            model: "lenet5".into(),
+            input_hw: 0,
+            strategy: Strategy::ScatterGather,
+            images,
+        },
+        TenantRequest {
+            model: "mlp".into(),
+            input_hw: 0,
+            strategy: Strategy::Pipeline,
+            images,
+        },
+    ];
+    let out = simulate_tenants(
+        BoardFamily::Zynq7000,
+        VtaConfig::table1_zynq7000(),
+        calib,
+        budget,
+        &tenants,
+    )?;
+    for t in &out {
+        println!(
+            "{:16} {:2} nodes  {:22} {:>9.3} ms/image  {:>9.2} img/s  latency {:>8.3} ms",
+            t.model,
+            t.nodes,
+            t.plan.strategy.to_string(),
+            t.sim.ms_per_image,
+            t.report.throughput_img_per_sec,
+            t.report.mean_latency_ms,
+        );
+    }
+    let used: usize = out.iter().map(|t| t.nodes).sum();
+    println!("budget used: {used}/{budget} nodes");
+    Ok(())
+}

@@ -7,11 +7,18 @@
 //! replicas are fed round-robin — the scatter/gather and pipeline
 //! dataflows of the paper, executing the *actual* AOT artifacts.
 //!
+//! Multi-tenancy: [`multi::MultiCoordinator`] runs one such pipeline per
+//! model/tenant concurrently over a shared node budget, with per-tenant
+//! request routing and per-tenant [`ServingReport`]s (DESIGN.md §7).
+//!
 //! * [`service`] — worker topology, submission, collection
+//! * [`multi`]   — multi-tenant coordination and budget allocation
 //! * [`metrics`] — latency/throughput accounting
 
 pub mod metrics;
+pub mod multi;
 pub mod service;
 
 pub use metrics::Metrics;
+pub use multi::{allocate_nodes, simulate_tenants, MultiCoordinator, TenantRequest, TenantSim, TenantSpec};
 pub use service::{Coordinator, ServingReport};

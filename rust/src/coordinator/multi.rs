@@ -1,0 +1,342 @@
+//! Multi-tenant serving: several independent model pipelines over one
+//! shared node budget (DESIGN.md §7).
+//!
+//! The paper's cluster "can simultaneously execute diverse Neural
+//! Network models". This module is that claim made concrete, twice:
+//!
+//! * [`MultiCoordinator`] — *real* serving: one [`Coordinator`] pipeline
+//!   per tenant, each with its own [`ExecutionPlan`] and worker threads,
+//!   running concurrently in one process. `submit(tenant, image)` routes
+//!   by tenant name; [`MultiCoordinator::run_batches`] drives all
+//!   tenants' batches at once and returns a merged per-tenant
+//!   [`ServingReport`].
+//! * [`simulate_tenants`] — the analytic counterpart for models whose
+//!   AOT artifacts are not exported: the shared budget is split across
+//!   tenants (proportional to their single-node service demand), each
+//!   tenant's strategy plans its sub-cluster, and the calibrated
+//!   simulator prices every pipeline. This is what `vtacluster multi`
+//!   runs by default.
+
+use super::service::{Coordinator, ServingReport};
+use crate::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig, VtaConfig};
+use crate::graph::zoo;
+use crate::runtime::TensorData;
+use crate::sched::{build_plan, ExecutionPlan, Strategy};
+use crate::sim::{simulate, CostModel, SimConfig, SimResult};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// One tenant of a real serving deployment.
+pub struct TenantSpec {
+    /// Routing key; unique per tenant (two tenants may serve the same
+    /// model under different names and plans).
+    pub name: String,
+    /// The tenant's schedule; `plan.model` selects the AOT artifacts.
+    pub plan: ExecutionPlan,
+    /// Exported input variant (32 tiny / 224 paper).
+    pub input_hw: u64,
+}
+
+/// Several concurrently running serving pipelines sharing one process
+/// and one node budget.
+pub struct MultiCoordinator {
+    tenants: Vec<(String, Coordinator)>,
+}
+
+impl MultiCoordinator {
+    /// Start every tenant's pipeline. Fails if tenant names collide, the
+    /// summed plan sizes exceed `node_budget`, or any model's artifacts
+    /// are missing at `dir`.
+    pub fn start(
+        dir: PathBuf,
+        specs: Vec<TenantSpec>,
+        node_budget: usize,
+        fast: bool,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!specs.is_empty(), "no tenants");
+        let mut names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        anyhow::ensure!(names.len() == specs.len(), "duplicate tenant names");
+        let used: usize = specs.iter().map(|s| s.plan.n_nodes).sum();
+        anyhow::ensure!(
+            used <= node_budget,
+            "tenants need {used} nodes, budget is {node_budget}"
+        );
+        let mut tenants = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let coord = Coordinator::start_variant(dir.clone(), &spec.plan, spec.input_hw, fast)
+                .map_err(|e| anyhow::anyhow!("tenant '{}': {e}", spec.name))?;
+            tenants.push((spec.name, coord));
+        }
+        Ok(MultiCoordinator { tenants })
+    }
+
+    /// Tenant names, in start order.
+    pub fn tenants(&self) -> Vec<&str> {
+        self.tenants.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Route one image to a tenant's pipeline; returns the request id
+    /// (ids are per-tenant).
+    pub fn submit(&self, tenant: &str, image: TensorData) -> anyhow::Result<u64> {
+        self.coordinator(tenant)?.submit(image)
+    }
+
+    /// The underlying pipeline of one tenant.
+    pub fn coordinator(&self, tenant: &str) -> anyhow::Result<&Coordinator> {
+        self.tenants
+            .iter()
+            .find(|(n, _)| n == tenant)
+            .map(|(_, c)| c)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown tenant '{tenant}' (serving: {})",
+                    self.tenants().join(", ")
+                )
+            })
+    }
+
+    /// Serve every tenant's batch concurrently (one driver thread per
+    /// tenant, pipelines already run their own workers). Returns, per
+    /// tenant in start order, the ordered outputs and a
+    /// [`ServingReport`] whose `model` field is the tenant name.
+    pub fn run_batches(
+        &mut self,
+        batches: Vec<(String, Vec<TensorData>)>,
+    ) -> anyhow::Result<Vec<(String, Vec<TensorData>, ServingReport)>> {
+        let mut pending: HashMap<String, Vec<TensorData>> = HashMap::new();
+        for (name, batch) in batches {
+            anyhow::ensure!(
+                self.tenants.iter().any(|(n, _)| n == &name),
+                "unknown tenant '{name}'"
+            );
+            anyhow::ensure!(
+                pending.insert(name.clone(), batch).is_none(),
+                "two batches for tenant '{name}'"
+            );
+        }
+        let mut out = Vec::new();
+        std::thread::scope(|scope| -> anyhow::Result<()> {
+            let mut handles = Vec::new();
+            for (name, coord) in self.tenants.iter_mut() {
+                let Some(batch) = pending.remove(name.as_str()) else { continue };
+                let tenant = name.clone();
+                handles.push(scope.spawn(move || {
+                    let (outs, mut report) = coord.run_batch(batch)?;
+                    report.model = tenant.clone();
+                    Ok::<_, anyhow::Error>((tenant, outs, report))
+                }));
+            }
+            for h in handles {
+                let r = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("tenant driver thread panicked"))??;
+                out.push(r);
+            }
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// Stop every tenant pipeline (also runs on drop of the inner
+    /// coordinators).
+    pub fn shutdown(&mut self) {
+        for (_, coord) in self.tenants.iter_mut() {
+            coord.shutdown();
+        }
+    }
+}
+
+/// Split `budget` nodes across tenants proportionally to `demands`
+/// (largest-remainder), guaranteeing every tenant ≥ 1 node.
+pub fn allocate_nodes(budget: usize, demands: &[f64]) -> anyhow::Result<Vec<usize>> {
+    let k = demands.len();
+    anyhow::ensure!(k >= 1, "no tenants to allocate to");
+    anyhow::ensure!(budget >= k, "budget {budget} < {k} tenants (need ≥ 1 node each)");
+    anyhow::ensure!(
+        demands.iter().all(|d| d.is_finite() && *d >= 0.0),
+        "demands must be finite and non-negative"
+    );
+    let total: f64 = demands.iter().sum();
+    // degenerate demand → equal split
+    let share = |d: f64| if total > 0.0 { d / total } else { 1.0 / k as f64 };
+    // one guaranteed node each, remainder proportional
+    let spare = (budget - k) as f64;
+    let mut alloc: Vec<usize> = demands.iter().map(|&d| 1 + (share(d) * spare) as usize).collect();
+    let mut rem: Vec<(f64, usize)> = demands
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| (share(d) * spare - (share(d) * spare).floor(), i))
+        .collect();
+    rem.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut left = budget - alloc.iter().sum::<usize>();
+    for &(_, i) in rem.iter().cycle().take(left.min(k * budget)) {
+        if left == 0 {
+            break;
+        }
+        alloc[i] += 1;
+        left -= 1;
+    }
+    debug_assert_eq!(alloc.iter().sum::<usize>(), budget);
+    Ok(alloc)
+}
+
+/// One tenant of an analytic multi-tenant run.
+#[derive(Debug, Clone)]
+pub struct TenantRequest {
+    /// Registry name of the workload (see [`crate::graph::zoo`]).
+    pub model: String,
+    /// Input size (`0` → the model's default).
+    pub input_hw: u64,
+    /// The tenant's scheduling strategy.
+    pub strategy: Strategy,
+    /// Images in the tenant's stream.
+    pub images: usize,
+}
+
+/// Result of one tenant of [`simulate_tenants`].
+#[derive(Debug, Clone)]
+pub struct TenantSim {
+    pub model: String,
+    /// Nodes of the shared budget this tenant received.
+    pub nodes: usize,
+    pub plan: ExecutionPlan,
+    pub sim: SimResult,
+    /// The simulator's verdict in serving-report form (throughput from
+    /// the steady-state per-image time, wall from the makespan).
+    pub report: ServingReport,
+}
+
+/// Plan and price a multi-tenant deployment analytically: the node
+/// budget is split proportionally to each tenant's single-node service
+/// demand (`graph_time × images`), each tenant's strategy schedules its
+/// share, and every pipeline is priced by the calibrated simulator.
+/// Models need no AOT artifacts — any zoo entry works.
+pub fn simulate_tenants(
+    family: BoardFamily,
+    vta: VtaConfig,
+    calib: Calibration,
+    node_budget: usize,
+    requests: &[TenantRequest],
+) -> anyhow::Result<Vec<TenantSim>> {
+    anyhow::ensure!(!requests.is_empty(), "no tenants requested");
+    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(family), calib);
+    let graphs = requests
+        .iter()
+        .map(|r| zoo::build(&r.model, r.input_hw))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let mut demands = Vec::with_capacity(requests.len());
+    for (req, g) in requests.iter().zip(&graphs) {
+        demands.push(cost.graph_time_ns(g)? as f64 * req.images.max(1) as f64);
+    }
+    let alloc = allocate_nodes(node_budget, &demands)?;
+
+    let mut out = Vec::with_capacity(requests.len());
+    for ((req, g), &n) in requests.iter().zip(&graphs).zip(&alloc) {
+        let seg_costs: Vec<(String, f64)> = g
+            .segment_order()
+            .into_iter()
+            .map(|l| {
+                let t = cost.segment_time_ns(g, &l, 1)?;
+                Ok((l, t as f64))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+        let plan = build_plan(req.strategy, g, n, lookup)?;
+        let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta.clone());
+        let sim = simulate(&plan, &cluster, &mut cost, g, &SimConfig { images: req.images })?;
+        let report = ServingReport {
+            model: req.model.clone(),
+            images: req.images as u64,
+            throughput_img_per_sec: 1e3 / sim.ms_per_image,
+            mean_latency_ms: sim.latency_ms.mean(),
+            p99_latency_ms: sim.latency_ms.p99(),
+            wall_ms: sim.makespan_ms,
+        };
+        out.push(TenantSim { model: req.model.clone(), nodes: n, plan, sim, report });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_covers_budget_with_min_one() {
+        let a = allocate_nodes(12, &[3.0, 1.0, 0.0]).unwrap();
+        assert_eq!(a.iter().sum::<usize>(), 12);
+        assert!(a.iter().all(|&n| n >= 1));
+        assert!(a[0] > a[1], "heavier tenant got fewer nodes: {a:?}");
+        // degenerate: all-zero demand → near-equal split
+        let e = allocate_nodes(9, &[0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(e.iter().sum::<usize>(), 9);
+        assert!(e.iter().all(|&n| n == 3), "{e:?}");
+        // too-small budget errors
+        assert!(allocate_nodes(2, &[1.0, 1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn analytic_multi_tenant_runs_three_models() {
+        let reqs = [
+            TenantRequest {
+                model: "resnet18".into(),
+                input_hw: 224,
+                strategy: Strategy::Pipeline,
+                images: 16,
+            },
+            TenantRequest {
+                model: "lenet5".into(),
+                input_hw: 0,
+                strategy: Strategy::ScatterGather,
+                images: 16,
+            },
+            TenantRequest {
+                model: "mlp".into(),
+                input_hw: 0,
+                strategy: Strategy::Fused,
+                images: 16,
+            },
+        ];
+        let out = simulate_tenants(
+            BoardFamily::Zynq7000,
+            VtaConfig::table1_zynq7000(),
+            Calibration::default(),
+            12,
+            &reqs,
+        )
+        .unwrap();
+        assert_eq!(out.len(), 3);
+        let used: usize = out.iter().map(|t| t.nodes).sum();
+        assert_eq!(used, 12, "budget not fully used");
+        for t in &out {
+            t.plan.validate().unwrap();
+            assert_eq!(t.plan.n_nodes, t.nodes);
+            assert!(t.report.throughput_img_per_sec > 0.0, "{}", t.model);
+            assert!(t.sim.ms_per_image.is_finite());
+        }
+        // resnet dominates the demand → gets the most nodes
+        assert!(out[0].nodes > out[1].nodes, "{:?}", out.iter().map(|t| t.nodes).collect::<Vec<_>>());
+        // per-model routing: reports carry their model names
+        assert_eq!(out[1].report.model, "lenet5");
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let reqs = [TenantRequest {
+            model: "vgg".into(),
+            input_hw: 0,
+            strategy: Strategy::Pipeline,
+            images: 4,
+        }];
+        assert!(simulate_tenants(
+            BoardFamily::Zynq7000,
+            VtaConfig::table1_zynq7000(),
+            Calibration::default(),
+            4,
+            &reqs,
+        )
+        .is_err());
+    }
+}

@@ -40,8 +40,9 @@ struct Completion {
     submitted: Instant,
 }
 
-/// A running serving pipeline.
+/// A running serving pipeline for one model.
 pub struct Coordinator {
+    model: String,
     entry: Vec<Sender<StageMsg>>, // stage-0 replica channels
     all_senders: Vec<Sender<StageMsg>>, // for shutdown
     results: Receiver<Completion>,
@@ -51,9 +52,11 @@ pub struct Coordinator {
     input_shape: Vec<usize>,
 }
 
-/// Summary of a served batch.
-#[derive(Debug)]
+/// Summary of a served batch (one per model in multi-tenant runs).
+#[derive(Debug, Clone)]
 pub struct ServingReport {
+    /// Model (or tenant) this report belongs to.
+    pub model: String,
     pub images: u64,
     pub throughput_img_per_sec: f64,
     pub mean_latency_ms: f64,
@@ -76,7 +79,9 @@ impl Coordinator {
         Self::start_variant(dir, plan, input_hw, true)
     }
 
-    fn start_variant(
+    /// [`Coordinator::start`] with an explicit variant choice — the
+    /// entry point [`crate::coordinator::MultiCoordinator`] uses.
+    pub fn start_variant(
         dir: PathBuf,
         plan: &ExecutionPlan,
         input_hw: u64,
@@ -88,9 +93,19 @@ impl Coordinator {
             "only DataParallel plans are servable on real artifacts (got a Spatial stage)"
         );
         let manifest = Manifest::load(&dir)?;
+        // the artifact prefix is the plan's model — serving any zoo
+        // model only needs its artifacts exported under the same scheme
+        anyhow::ensure!(
+            manifest.model_name == plan.model,
+            "artifacts at {} are for model '{}', plan schedules '{}' \
+             (export the model's artifacts first)",
+            dir.display(),
+            manifest.model_name,
+            plan.model
+        );
         // fail fast if the requested variant was not exported
         anyhow::ensure!(
-            manifest.segments_variant(input_hw, fast).len() == 10,
+            manifest.segments_variant(input_hw, fast).len() == plan.segment_order.len(),
             "artifacts at {} lack the {} variant @{input_hw} (re-run `make artifacts`)",
             dir.display(),
             if fast { "fast" } else { "pallas" }
@@ -101,7 +116,20 @@ impl Coordinator {
             32 => format!("{variant}tiny_"),
             other => anyhow::bail!("no artifacts exported for input_hw={other}"),
         };
-        let input_shape = vec![1usize, input_hw as usize, input_hw as usize, 3];
+        // the request shape is whatever the first segment artifact takes
+        // (NHWC for the CNNs, rank-2 for dense models) — submit() and
+        // the per-artifact engine checks then enforce the same contract
+        let input_shape = manifest
+            .segments_variant(input_hw, fast)
+            .first()
+            .and_then(|a| a.inputs.first())
+            .map(|io| io.shape.clone())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "first segment artifact at {} declares no inputs (re-run `make artifacts`)",
+                    dir.display()
+                )
+            })?;
 
         // build stages back-to-front so each worker knows its successors
         let (done_tx, done_rx) = channel::<Completion>();
@@ -114,7 +142,7 @@ impl Coordinator {
             let artifact_names: Vec<String> = stage
                 .segments
                 .iter()
-                .map(|seg| format!("resnet18_{tag}seg_{seg}"))
+                .map(|seg| format!("{}_{tag}seg_{seg}", plan.model))
                 .collect();
             let mut this_stage_txs = Vec::new();
             for replica in 0..stage.replicas.len() {
@@ -141,6 +169,7 @@ impl Coordinator {
         }
         drop(done_tx);
         Ok(Coordinator {
+            model: plan.model.clone(),
             entry,
             all_senders,
             results: done_rx,
@@ -149,6 +178,17 @@ impl Coordinator {
             rr: AtomicU64::new(0),
             input_shape,
         })
+    }
+
+    /// The model this pipeline serves.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// The request tensor shape this pipeline accepts (from the model's
+    /// artifact manifest).
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
     }
 
     /// Submit one image (NHWC int8). Returns its request id.
@@ -193,6 +233,7 @@ impl Coordinator {
         }
         let wall = t0.elapsed();
         let report = ServingReport {
+            model: self.model.clone(),
             images: n as u64,
             throughput_img_per_sec: n as f64 / wall.as_secs_f64(),
             mean_latency_ms: metrics.latency_ms().mean(),

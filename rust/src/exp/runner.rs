@@ -3,7 +3,7 @@
 
 use crate::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig, VtaConfig};
 use crate::graph::resnet::build_resnet18;
-use crate::graph::Graph;
+use crate::graph::{zoo, Graph};
 use crate::sched::{build_plan, Strategy};
 use crate::sim::{simulate, CostModel, SimConfig, SimResult};
 
@@ -27,10 +27,33 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Bench over the paper's evaluation workload (ResNet-18 @224).
     pub fn new(family: BoardFamily, vta: VtaConfig, calib: Calibration) -> Self {
+        Self::with_graph(family, vta, calib, build_resnet18(224).unwrap())
+    }
+
+    /// Bench over any registered zoo model (`input_hw == 0` → the
+    /// model's default input size).
+    pub fn for_model(
+        family: BoardFamily,
+        vta: VtaConfig,
+        calib: Calibration,
+        model: &str,
+        input_hw: u64,
+    ) -> anyhow::Result<Self> {
+        Ok(Self::with_graph(family, vta, calib, zoo::build(model, input_hw)?))
+    }
+
+    /// Bench over an explicit workload graph.
+    pub fn with_graph(
+        family: BoardFamily,
+        vta: VtaConfig,
+        calib: Calibration,
+        graph: Graph,
+    ) -> Self {
         let cost =
             CostModel::new(vta.clone(), BoardProfile::for_family(family), calib.clone());
-        Bench { graph: build_resnet18(224).unwrap(), family, vta, calib, images: 64, cost }
+        Bench { graph, family, vta, calib, images: 64, cost }
     }
 
     pub fn zynq(calib: Calibration) -> Self {
@@ -63,13 +86,7 @@ impl Bench {
         let plan = build_plan(strategy, &self.graph, n, lookup)?;
         let cluster =
             ClusterConfig::homogeneous(self.family, n).with_vta(self.vta.clone());
-        simulate(
-            &plan,
-            &cluster,
-            cost,
-            &self.graph,
-            &SimConfig { images: self.images, warmup_frac: 0.2 },
-        )
+        simulate(&plan, &cluster, cost, &self.graph, &SimConfig { images: self.images })
     }
 
     /// Full sweep over `1..=max_n` × all four strategies.
@@ -124,6 +141,29 @@ mod tests {
         let mut b = Bench::zynq(Calibration::default());
         let r = b.cell(Strategy::ScatterGather, 2).unwrap();
         assert!(r.ms_per_image > 1.0 && r.ms_per_image < 200.0);
+    }
+
+    #[test]
+    fn zoo_model_cell_runs() {
+        let mut b = Bench::for_model(
+            BoardFamily::Zynq7000,
+            VtaConfig::table1_zynq7000(),
+            Calibration::default(),
+            "lenet5",
+            0,
+        )
+        .unwrap();
+        b.images = 8;
+        let r = b.cell(Strategy::Pipeline, 3).unwrap();
+        assert!(r.ms_per_image > 0.0 && r.ms_per_image.is_finite());
+        assert!(Bench::for_model(
+            BoardFamily::Zynq7000,
+            VtaConfig::table1_zynq7000(),
+            Calibration::default(),
+            "nope",
+            0
+        )
+        .is_err());
     }
 
     #[test]

@@ -24,14 +24,30 @@ pub struct Node {
 /// construction: inputs must already exist when a node is added).
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
+    /// Instance name, e.g. `resnet18-224` (model + input variant).
     pub name: String,
+    /// Registry name of the model this graph instantiates, e.g.
+    /// `resnet18` — the key under which [`crate::graph::zoo`] builders
+    /// register, and the prefix of the model's AOT artifacts.
+    pub model: String,
     nodes: Vec<Node>,
     by_name: HashMap<String, NodeId>,
 }
 
 impl Graph {
     pub fn new(name: &str) -> Self {
-        Graph { name: name.to_string(), ..Default::default() }
+        Graph { name: name.to_string(), model: name.to_string(), ..Default::default() }
+    }
+
+    /// A graph whose registry (model) name differs from its instance
+    /// name — the normal case for zoo builders, where one model has
+    /// several input-size variants.
+    pub fn new_model(model: &str, name: &str) -> Self {
+        Graph {
+            name: name.to_string(),
+            model: model.to_string(),
+            ..Default::default()
+        }
     }
 
     /// Add a node; infers and stores its output descriptor.
@@ -177,6 +193,47 @@ impl Graph {
     /// All nodes with a given segment label.
     pub fn segment_nodes(&self, segment: &str) -> Vec<&Node> {
         self.nodes.iter().filter(|n| n.segment == segment).collect()
+    }
+
+    /// Per-segment MAC totals in segment order — the default cost oracle
+    /// for the planners and the manifest cross-checks. Works for any
+    /// model in the zoo, not just ResNet.
+    pub fn segment_macs(&self) -> Vec<(String, u64)> {
+        self.segment_order()
+            .into_iter()
+            .map(|seg| {
+                let macs = self
+                    .segment_nodes(&seg)
+                    .iter()
+                    .map(|n| n.op.macs(&self.input_descs(n.id)))
+                    .sum();
+                (seg, macs)
+            })
+            .collect()
+    }
+
+    /// MAC-proportional segment cost oracle — the planners' default when
+    /// no calibrated cost model is in play (serving, examples, tests).
+    /// Unknown labels price as 0 rather than panicking; plan validation
+    /// catches any real inconsistency.
+    pub fn mac_cost_oracle(&self) -> impl Fn(&str) -> f64 {
+        let macs = self.segment_macs();
+        move |l: &str| {
+            macs.iter().find(|(x, _)| x == l).map(|(_, m)| *m as f64).unwrap_or(0.0)
+        }
+    }
+
+    /// Descriptor of the graph's Input node. Serving derives the actual
+    /// request shape from the artifact manifest
+    /// ([`crate::coordinator::Coordinator::input_shape`]); this is the
+    /// IR-side view of the same contract.
+    pub fn input_desc(&self) -> anyhow::Result<&TensorDesc> {
+        let first = self.nodes.first().ok_or_else(|| anyhow::anyhow!("empty graph"))?;
+        anyhow::ensure!(
+            matches!(first.op, Op::Input { .. }),
+            "first node is not the Input"
+        );
+        Ok(&first.out)
     }
 }
 

@@ -1,18 +1,22 @@
-//! Neural-network computation-graph IR.
+//! Neural-network computation-graph IR and the workload registry.
 //!
 //! The workload side of the paper: a typed DAG of quantized operators
-//! with exact MAC/byte cost accounting, a ResNet-18 builder matching the
-//! python model bit-for-bit in structure (cross-checked against
-//! `artifacts/manifest.json`), and a partitioner producing the contiguous
-//! segments the scheduling strategies distribute across FPGA nodes.
+//! with exact MAC/byte cost accounting, a model zoo ([`zoo`]) whose
+//! entries all satisfy the same contract (the ResNet-18 builder matches
+//! the python model bit-for-bit in structure, cross-checked against
+//! `artifacts/manifest.json`), and a partitioner producing the
+//! contiguous segments the scheduling strategies distribute across FPGA
+//! nodes.
 
 pub mod graph;
 pub mod ops;
 pub mod partition;
 pub mod resnet;
 pub mod tensor;
+pub mod zoo;
 
 pub use graph::{Graph, Node, NodeId};
 pub use ops::Op;
 pub use partition::{partition_balanced, Segment};
 pub use tensor::{DType, Shape};
+pub use zoo::ModelSpec;

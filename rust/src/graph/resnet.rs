@@ -121,7 +121,7 @@ fn basic_block(
 /// Build ResNet-18 for a given square input size (must be a multiple of 32).
 pub fn build_resnet18(input_hw: u64) -> anyhow::Result<Graph> {
     anyhow::ensure!(input_hw >= 32 && input_hw % 32 == 0, "input_hw must be a multiple of 32");
-    let mut g = Graph::new(&format!("resnet18-{input_hw}"));
+    let mut g = Graph::new_model("resnet18", &format!("resnet18-{input_hw}"));
 
     // --- stem
     let x = g.add(
@@ -165,19 +165,10 @@ pub fn build_resnet18(input_hw: u64) -> anyhow::Result<Graph> {
 }
 
 /// Per-segment MAC totals in segment order (for manifest cross-checks and
-/// the partitioner's cost model).
+/// the partitioner's cost model). Thin alias of the model-agnostic
+/// [`Graph::segment_macs`], kept for the existing call sites.
 pub fn segment_macs(g: &Graph) -> Vec<(String, u64)> {
-    g.segment_order()
-        .into_iter()
-        .map(|seg| {
-            let macs = g
-                .segment_nodes(&seg)
-                .iter()
-                .map(|n| n.op.macs(&g.input_descs(n.id)))
-                .sum();
-            (seg, macs)
-        })
-        .collect()
+    g.segment_macs()
 }
 
 #[cfg(test)]

@@ -1,0 +1,302 @@
+//! The workload registry (model zoo): name → graph builder.
+//!
+//! The paper's distinguishing claim is that the cluster "can
+//! simultaneously execute diverse Neural Network models" — so the unit
+//! of evaluation is a *zoo*, not one network. Every model registered
+//! here exposes the same contract (see DESIGN.md §2):
+//!
+//! * a typed [`Graph`] with exact per-segment MAC/byte accounting, so
+//!   [`crate::sim::cost::CostModel`] prices it without model-specific
+//!   code;
+//! * contiguous segment labels, so all four §II-C scheduling strategies
+//!   and the partitioner work on it unchanged;
+//! * a registry (`model`) name used for plan validation, coordinator
+//!   routing, and AOT-artifact naming (`<model>_<tag>seg_<segment>`).
+//!
+//! Adding a model is: write a builder, append a [`ModelSpec`] to
+//! [`MODELS`] — everything downstream (CLI `simulate`/`multi`, the
+//! experiment runners, the multi-tenant coordinator) picks it up by
+//! name. See EXPERIMENTS.md §Zoo for the walkthrough.
+
+use super::graph::Graph;
+use super::ops::Op;
+use super::resnet::{build_resnet18, shift_for_k};
+use super::tensor::TensorDesc;
+
+/// One registered workload.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    /// Registry name (`Graph::model`, artifact prefix, CLI `--model`).
+    pub name: &'static str,
+    /// One-line description for `vtacluster info`.
+    pub description: &'static str,
+    /// Input size used when the caller passes `input_hw == 0`.
+    pub default_hw: u64,
+    /// Graph builder; takes the square input size.
+    pub build: fn(u64) -> anyhow::Result<Graph>,
+}
+
+/// The registry, in presentation order.
+pub static MODELS: [ModelSpec; 4] = [
+    ModelSpec {
+        name: "resnet18",
+        description: "int8 ResNet-18 — the paper's evaluation workload (10 segments)",
+        default_hw: 224,
+        build: build_resnet18,
+    },
+    ModelSpec {
+        name: "lenet5",
+        description: "int8 LeNet-5-class small CNN (4 segments)",
+        default_hw: 32,
+        build: build_lenet5,
+    },
+    ModelSpec {
+        name: "mlp",
+        description: "int8 3-hidden-layer perceptron on flattened pixels (4 segments)",
+        default_hw: 32,
+        build: build_mlp,
+    },
+    ModelSpec {
+        name: "mobilenet-lite",
+        description: "int8 stride-2 conv stack, MobileNet-shaped compute (5 segments)",
+        default_hw: 96,
+        build: build_mobilenet_lite,
+    },
+];
+
+/// All registered model names, in registry order.
+pub fn names() -> Vec<&'static str> {
+    MODELS.iter().map(|m| m.name).collect()
+}
+
+/// Look a model up by name.
+pub fn lookup(name: &str) -> anyhow::Result<&'static ModelSpec> {
+    MODELS
+        .iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (registered: {})", names().join(", ")))
+}
+
+/// Build a registered model. `input_hw == 0` selects the model's
+/// default input size.
+pub fn build(name: &str, input_hw: u64) -> anyhow::Result<Graph> {
+    let spec = lookup(name)?;
+    let hw = if input_hw == 0 { spec.default_hw } else { input_hw };
+    (spec.build)(hw)
+}
+
+/// `conv → relu → requantize` with the python-convention shift for the
+/// conv's accumulation depth (derived from the input node's channel
+/// count) — the quantization idiom every zoo CNN shares with the
+/// exported ResNet.
+fn conv_block(
+    g: &mut Graph,
+    prefix: &str,
+    segment: &str,
+    input: super::graph::NodeId,
+    oc: u64,
+    k: u64,
+    stride: u64,
+    pad: u64,
+) -> anyhow::Result<super::graph::NodeId> {
+    let cin = g.node(input).out.shape.c();
+    let c = g.add(
+        &format!("{prefix}.conv"),
+        Op::Conv2d { oc, kh: k, kw: k, stride, pad },
+        &[input],
+        segment,
+    )?;
+    let r = g.add(&format!("{prefix}.relu"), Op::Relu, &[c], segment)?;
+    g.add(
+        &format!("{prefix}.rq"),
+        Op::Requantize { shift: shift_for_k(k * k * cin) },
+        &[r],
+        segment,
+    )
+}
+
+/// LeNet-5-class CNN: three 5×5 conv stages with 2×2 max-pooling, then a
+/// two-layer classifier head. Segments: `c1`, `c2`, `c3`, `head`.
+///
+/// `input_hw` must be ≥ 28 and a multiple of 4 so every pooled feature
+/// map stays integral and the 5×5 `c3` kernel fits.
+pub fn build_lenet5(input_hw: u64) -> anyhow::Result<Graph> {
+    anyhow::ensure!(
+        input_hw >= 28 && input_hw % 4 == 0,
+        "lenet5 input_hw must be ≥ 28 and a multiple of 4"
+    );
+    let mut g = Graph::new_model("lenet5", &format!("lenet5-{input_hw}"));
+
+    let x = g.add(
+        "input",
+        Op::Input { desc: TensorDesc::i8(&[1, input_hw, input_hw, 3]) },
+        &[],
+        "c1",
+    )?;
+    let c1 = conv_block(&mut g, "c1", "c1", x, 6, 5, 1, 2)?;
+    let p1 = g.add("c1.pool", Op::MaxPool { k: 2, stride: 2, pad: 0 }, &[c1], "c1")?;
+
+    let c2 = conv_block(&mut g, "c2", "c2", p1, 16, 5, 1, 0)?;
+    let p2 = g.add("c2.pool", Op::MaxPool { k: 2, stride: 2, pad: 0 }, &[c2], "c2")?;
+
+    let c3 = conv_block(&mut g, "c3", "c3", p2, 120, 5, 1, 0)?;
+
+    let gap = g.add("head.gap", Op::GlobalAvgPool, &[c3], "head")?;
+    let q = g.add("head.rq", Op::Requantize { shift: 0 }, &[gap], "head")?;
+    let f1 = g.add("head.fc1", Op::Dense { units: 84 }, &[q], "head")?;
+    let r = g.add("head.relu", Op::Relu, &[f1], "head")?;
+    let q2 = g.add(
+        "head.rq2",
+        Op::Requantize { shift: shift_for_k(120) },
+        &[r],
+        "head",
+    )?;
+    g.add("head.fc2", Op::Dense { units: 10 }, &[q2], "head")?;
+
+    g.validate()?;
+    Ok(g)
+}
+
+/// Three-hidden-layer perceptron over flattened int8 pixels. Segments:
+/// `fc1`, `fc2`, `fc3`, `head`. The graph input is rank-2
+/// `(1, hw·hw·3)` — the zoo is not conv-only, and the scheduling layers
+/// must not assume NHWC activations.
+pub fn build_mlp(input_hw: u64) -> anyhow::Result<Graph> {
+    anyhow::ensure!(input_hw >= 8, "mlp input_hw must be ≥ 8");
+    let features = input_hw * input_hw * 3;
+    let mut g = Graph::new_model("mlp", &format!("mlp-{input_hw}"));
+
+    let mut cur = g.add(
+        "input",
+        Op::Input { desc: TensorDesc::i8(&[1, features]) },
+        &[],
+        "fc1",
+    )?;
+    let mut k = features;
+    for (seg, units) in [("fc1", 512u64), ("fc2", 512), ("fc3", 256)] {
+        let d = g.add(&format!("{seg}.dense"), Op::Dense { units }, &[cur], seg)?;
+        let r = g.add(&format!("{seg}.relu"), Op::Relu, &[d], seg)?;
+        cur = g.add(
+            &format!("{seg}.rq"),
+            Op::Requantize { shift: shift_for_k(k) },
+            &[r],
+            seg,
+        )?;
+        k = units;
+    }
+    g.add("head.fc", Op::Dense { units: 10 }, &[cur], "head")?;
+
+    g.validate()?;
+    Ok(g)
+}
+
+/// MobileNet-shaped stride-2 conv stack: a stem and three downsampling
+/// blocks (each a 3×3 same-resolution conv followed by a 3×3 stride-2
+/// conv), then GAP + classifier. Segments: `stem`, `b1`, `b2`, `b3`,
+/// `head`. `input_hw` must be a multiple of 32.
+pub fn build_mobilenet_lite(input_hw: u64) -> anyhow::Result<Graph> {
+    anyhow::ensure!(
+        input_hw >= 32 && input_hw % 32 == 0,
+        "mobilenet-lite input_hw must be a multiple of 32"
+    );
+    let mut g = Graph::new_model("mobilenet-lite", &format!("mobilenet-lite-{input_hw}"));
+
+    let x = g.add(
+        "input",
+        Op::Input { desc: TensorDesc::i8(&[1, input_hw, input_hw, 3]) },
+        &[],
+        "stem",
+    )?;
+    let mut cur = conv_block(&mut g, "stem", "stem", x, 32, 3, 2, 1)?;
+
+    let mut cin = 32u64;
+    for (seg, cout) in [("b1", 64u64), ("b2", 128), ("b3", 256)] {
+        let a = conv_block(&mut g, &format!("{seg}.a"), seg, cur, cin, 3, 1, 1)?;
+        cur = conv_block(&mut g, &format!("{seg}.b"), seg, a, cout, 3, 2, 1)?;
+        cin = cout;
+    }
+
+    let gap = g.add("head.gap", Op::GlobalAvgPool, &[cur], "head")?;
+    let q = g.add("head.rq", Op::Requantize { shift: 0 }, &[gap], "head")?;
+    g.add("head.fc", Op::Dense { units: 1000 }, &[q], "head")?;
+
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_model_builds_and_validates_at_default_hw() {
+        for spec in &MODELS {
+            let g = build(spec.name, 0).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            g.validate().unwrap();
+            assert_eq!(g.model, spec.name);
+            assert!(g.total_macs() > 0, "{} has zero MACs", spec.name);
+            assert!(g.segment_order().len() >= 4, "{} too few segments", spec.name);
+        }
+    }
+
+    #[test]
+    fn segment_macs_cover_totals_for_all_models() {
+        for spec in &MODELS {
+            let g = build(spec.name, 0).unwrap();
+            let per_seg = g.segment_macs();
+            assert_eq!(per_seg.len(), g.segment_order().len());
+            let sum: u64 = per_seg.iter().map(|(_, m)| m).sum();
+            assert_eq!(sum, g.total_macs(), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(lookup("resnet18").unwrap().default_hw, 224);
+        let e = lookup("vgg16").unwrap_err().to_string();
+        assert!(e.contains("unknown model"), "{e}");
+        assert!(e.contains("lenet5"), "error lists the registry: {e}");
+        assert_eq!(names().len(), MODELS.len());
+    }
+
+    #[test]
+    fn lenet_shapes() {
+        let g = build_lenet5(32).unwrap();
+        assert_eq!(g.segment_order(), vec!["c1", "c2", "c3", "head"]);
+        // c3 output is 2×2×120 at hw=32 (32 → pool 16 → conv 12 → pool 6 → conv 2)
+        assert_eq!(g.by_name("c3.rq").unwrap().out.shape.0, vec![1, 2, 2, 120]);
+        let out = g.node(g.output().unwrap());
+        assert_eq!(out.out.shape.0, vec![1, 10]);
+        assert!(build_lenet5(16).is_err());
+        assert!(build_lenet5(30).is_err());
+    }
+
+    #[test]
+    fn mlp_is_rank2_end_to_end() {
+        let g = build_mlp(32).unwrap();
+        assert_eq!(g.segment_order(), vec!["fc1", "fc2", "fc3", "head"]);
+        assert_eq!(g.input_desc().unwrap().shape.0, vec![1, 32 * 32 * 3]);
+        // dense-only model: all work is GEMM, none ALU-free
+        assert_eq!(g.total_macs(), 3072 * 512 + 512 * 512 + 512 * 256 + 256 * 10);
+        assert!(build_mlp(4).is_err());
+    }
+
+    #[test]
+    fn mobilenet_lite_downsamples_to_hw_over_16() {
+        let g = build_mobilenet_lite(96).unwrap();
+        assert_eq!(g.segment_order(), vec!["stem", "b1", "b2", "b3", "head"]);
+        assert_eq!(g.by_name("b3.b.rq").unwrap().out.shape.0, vec![1, 6, 6, 256]);
+        assert!(build_mobilenet_lite(48).is_err());
+    }
+
+    #[test]
+    fn models_are_distinct_workloads() {
+        let macs: Vec<u64> =
+            MODELS.iter().map(|s| build(s.name, 0).unwrap().total_macs()).collect();
+        for i in 0..macs.len() {
+            for j in (i + 1)..macs.len() {
+                assert_ne!(macs[i], macs[j], "models {i} and {j} identical in MACs");
+            }
+        }
+    }
+}

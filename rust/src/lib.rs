@@ -5,18 +5,23 @@
 //! IIT ECASP, 2023) as a three-layer Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the cluster: VTA instruction-level
-//!   simulator, Ethernet/MPI network model, the four scheduling
-//!   strategies of §II-C (scatter-gather, AI core assignment, pipeline,
-//!   fused), a discrete-event cluster simulator that regenerates every
-//!   table/figure of the paper, and a PJRT-backed serving coordinator.
+//!   simulator, Ethernet/MPI network model, a workload registry
+//!   ([`graph::zoo`]) of int8 models sharing one IR contract, the four
+//!   scheduling strategies of §II-C (scatter-gather, AI core assignment,
+//!   pipeline, fused) applicable to any registered model, an analytic
+//!   cluster simulator that regenerates every table/figure of the paper,
+//!   and a PJRT-backed serving coordinator with a multi-tenant layer
+//!   ([`coordinator::MultiCoordinator`]) running several model pipelines
+//!   concurrently over a shared node budget.
 //! * **Layer 2 (python/compile, build-time)** — int8 ResNet-18 in JAX,
 //!   AOT-lowered to HLO text artifacts per graph segment.
 //! * **Layer 1 (python/compile/kernels, build-time)** — the VTA GEMM and
 //!   ALU engines as Pallas kernels.
 //!
 //! Python never runs at serving time: `runtime` loads the HLO artifacts
-//! through the PJRT C API (`xla` crate) and the coordinator serves
-//! requests entirely from rust.
+//! through the PJRT C API (the `xla` crate behind the `pjrt` cargo
+//! feature; a stub otherwise) and the coordinator serves requests
+//! entirely from rust.
 //!
 //! See DESIGN.md for the architecture and the experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.

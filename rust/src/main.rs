@@ -2,19 +2,27 @@
 //!
 //! Subcommands (first positional argument):
 //!
-//! * `info`       — model/cluster inventory and derived VTA rates
+//! * `info`       — model-zoo/cluster inventory and derived VTA rates
 //! * `calibrate`  — fit the timing-model constants to the paper anchors
 //!                  and write `artifacts/calibration.json`
 //! * `table`      — regenerate a paper table (`--fig 3|4`) with
 //!                  paper-vs-ours comparison
-//! * `simulate`   — one (strategy, n) cell with full detail
+//! * `simulate`   — one cluster-size cell for any zoo model
+//!                  (`--model`, `--strategy all` compares all four §II-C
+//!                  strategies)
+//! * `multi`      — multi-tenant run: several models share one node
+//!                  budget, each with its own strategy; per-model
+//!                  serving reports (add `--serve` for the real PJRT
+//!                  pipelines instead of the analytic simulator)
 //! * `serve`      — run the real PJRT serving pipeline on a batch of
 //!                  synthetic images (end-to-end driver)
 
 use vta_cluster::config::{BoardFamily, Calibration, VtaConfig};
-use vta_cluster::coordinator::Coordinator;
+use vta_cluster::coordinator::{
+    simulate_tenants, Coordinator, MultiCoordinator, TenantRequest, TenantSpec,
+};
 use vta_cluster::exp::{calibrate, paper, runner::Bench, table};
-use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::graph::zoo;
 use vta_cluster::runtime::{artifacts_dir, TensorData};
 use vta_cluster::sched::{build_plan, Strategy};
 use vta_cluster::util::cli::Cli;
@@ -30,13 +38,16 @@ fn main() {
 fn run() -> anyhow::Result<()> {
     let cli = Cli::new("vtacluster", "reconfigurable distributed FPGA cluster for DL accelerators (reproduction)")
         .opt("fig", "3", "paper figure for `table` (3 = Zynq-7000, 4 = UltraScale+)")
-        .opt("strategy", "scatter-gather", "strategy for `simulate` (sg|ai|pipeline|fused)")
-        .opt("nodes", "4", "cluster size for `simulate`/`serve`")
-        .opt("images", "64", "images per run")
-        .opt("input-hw", "32", "input size for `serve` (32 tiny / 224 paper)")
-        .opt("board", "zynq", "board family for `simulate` (zynq|ultrascale)")
+        .opt("model", "resnet18", "zoo model for `simulate`/`serve` (see `info`)")
+        .opt("models", "resnet18,lenet5,mlp", "tenants for `multi`: comma list of model[:strategy]")
+        .opt("strategy", "all", "strategy for `simulate` (sg|ai|pipeline|fused|all), `serve` (sg|pipeline)")
+        .opt("nodes", "4", "cluster size for `simulate`/`serve`, shared budget for `multi`")
+        .opt("images", "64", "images per run (per tenant for `multi`)")
+        .opt("input-hw", "32", "input size for `serve`/`multi --serve` (32 tiny / 224 paper)")
+        .opt("board", "zynq", "board family for `simulate`/`multi` (zynq|ultrascale)")
         .flag("quick", "reduced calibration grids")
-        .positional("command", "info | calibrate | table | simulate | serve");
+        .flag("serve", "`multi`: serve real artifacts instead of simulating")
+        .positional("command", "info | calibrate | table | simulate | multi | serve");
     let args = cli.parse()?;
     let command = args.positional.first().map(String::as_str).unwrap_or("info");
 
@@ -45,29 +56,55 @@ fn run() -> anyhow::Result<()> {
         "calibrate" => calibrate_cmd(args.get_flag("quick")),
         "table" => table_cmd(args.get_usize("fig")?, args.get_usize("images")?),
         "simulate" => simulate_cmd(
-            Strategy::parse(args.get("strategy"))?,
+            args.get("strategy"),
+            args.get("model"),
             args.get_usize("nodes")?,
             BoardFamily::parse(args.get("board"))?,
             args.get_usize("images")?,
         ),
-        "serve" => serve_cmd(
-            Strategy::parse(args.get("strategy"))?,
+        "multi" => multi_cmd(
+            args.get("models"),
             args.get_usize("nodes")?,
-            args.get_u64("input-hw")?,
+            BoardFamily::parse(args.get("board"))?,
             args.get_usize("images")?,
+            args.get_flag("serve"),
+            args.get_u64("input-hw")?,
         ),
+        "serve" => {
+            // `--strategy all` is the simulate default; serving drives
+            // one concrete plan, so fall back to scatter-gather
+            let s = args.get("strategy");
+            let strategy = if s.eq_ignore_ascii_case("all") {
+                Strategy::ScatterGather
+            } else {
+                Strategy::parse(s)?
+            };
+            serve_cmd(
+                strategy,
+                args.get("model"),
+                args.get_usize("nodes")?,
+                args.get_u64("input-hw")?,
+                args.get_usize("images")?,
+            )
+        }
         other => anyhow::bail!("unknown command '{other}' (try --help)"),
     }
 }
 
 fn info() -> anyhow::Result<()> {
-    let g = build_resnet18(224)?;
-    println!(
-        "workload: {} — {:.2} GMACs, {:.1} M weights",
-        g.name,
-        g.total_macs() as f64 / 1e9,
-        g.total_weight_bytes() as f64 / 1e6
-    );
+    println!("model zoo:");
+    for spec in &zoo::MODELS {
+        let g = zoo::build(spec.name, 0)?;
+        println!(
+            "  {:16} @{:<4} {:7.3} GMACs  {:6.2} M weights  {:2} segments — {}",
+            spec.name,
+            spec.default_hw,
+            g.total_macs() as f64 / 1e9,
+            g.total_weight_bytes() as f64 / 1e6,
+            g.segment_order().len(),
+            spec.description,
+        );
+    }
     for cfg in [
         VtaConfig::table1_zynq7000(),
         VtaConfig::table1_ultrascale(),
@@ -149,21 +186,45 @@ fn table_cmd(fig: usize, images: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn vta_for(family: BoardFamily) -> VtaConfig {
+    match family {
+        BoardFamily::Zynq7000 => VtaConfig::table1_zynq7000(),
+        BoardFamily::UltraScalePlus => VtaConfig::table1_ultrascale(),
+    }
+}
+
 fn simulate_cmd(
-    strategy: Strategy,
+    strategy: &str,
+    model: &str,
     n: usize,
     family: BoardFamily,
     images: usize,
 ) -> anyhow::Result<()> {
     let calib = Calibration::load_or_default(&artifacts_dir());
-    let vta = match family {
-        BoardFamily::Zynq7000 => VtaConfig::table1_zynq7000(),
-        BoardFamily::UltraScalePlus => VtaConfig::table1_ultrascale(),
-    };
-    let mut b = Bench::new(family, vta, calib);
+    let mut b = Bench::for_model(family, vta_for(family), calib, model, 0)?;
     b.images = images;
-    let r = b.cell(strategy, n)?;
-    println!("{strategy} on {n}× {} nodes, {images} images:", family.as_str());
+    println!(
+        "{model} ({:.3} GMACs) on {n}× {} nodes, {images} images:",
+        b.graph.total_macs() as f64 / 1e9,
+        family.as_str()
+    );
+    if strategy.eq_ignore_ascii_case("all") {
+        // the §II-C comparison the paper's figures make, for any model
+        for s in Strategy::all() {
+            let r = b.cell(s, n)?;
+            println!(
+                "  {:22} {:8.3} ms/image  latency {:8.3} ms  net {:9} B",
+                s.to_string(),
+                r.ms_per_image,
+                r.latency_ms.mean(),
+                r.network_bytes,
+            );
+        }
+        return Ok(());
+    }
+    let s = Strategy::parse(strategy)?;
+    let r = b.cell(s, n)?;
+    println!("{s}:");
     println!("  {:.2} ms/image (steady state)", r.ms_per_image);
     println!("  makespan {:.1} ms, network {} bytes", r.makespan_ms, r.network_bytes);
     println!("  latency {}", r.latency_ms.display("ms"));
@@ -173,26 +234,148 @@ fn simulate_cmd(
     Ok(())
 }
 
-fn serve_cmd(strategy: Strategy, n: usize, input_hw: u64, images: usize) -> anyhow::Result<()> {
+/// Parse one `model[:strategy]` tenant token. The default strategy
+/// differs by backend: fused for the analytic simulator, scatter-gather
+/// for `--serve` (which only accepts DataParallel plans).
+fn parse_tenant(token: &str, images: usize, default: Strategy) -> anyhow::Result<TenantRequest> {
+    let (model, strat) = match token.split_once(':') {
+        Some((m, s)) => (m, Strategy::parse(s)?),
+        None => (token, default),
+    };
+    zoo::lookup(model)?; // fail fast on typos
+    Ok(TenantRequest { model: model.to_string(), input_hw: 0, strategy: strat, images })
+}
+
+fn multi_cmd(
+    models: &str,
+    budget: usize,
+    family: BoardFamily,
+    images: usize,
+    serve: bool,
+    input_hw: u64,
+) -> anyhow::Result<()> {
+    let tokens: Vec<&str> = models.split(',').filter(|s| !s.is_empty()).collect();
+    anyhow::ensure!(tokens.len() >= 2, "`multi` wants ≥ 2 tenants (got '{models}')");
+    let default = if serve { Strategy::ScatterGather } else { Strategy::Fused };
+    let requests = tokens
+        .iter()
+        .map(|t| parse_tenant(t, images, default))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+    if serve {
+        return multi_serve_cmd(requests, budget, input_hw, images);
+    }
+
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let out = simulate_tenants(family, vta_for(family), calib, budget, &requests)?;
+    println!(
+        "multi-tenant simulation: {} tenants over {budget} {} nodes, {images} images each",
+        out.len(),
+        family.as_str()
+    );
+    println!(
+        "  {:16} {:>5} {:>22} {:>12} {:>12} {:>12}",
+        "model", "nodes", "strategy", "ms/image", "img/s", "latency ms"
+    );
+    for t in &out {
+        println!(
+            "  {:16} {:>5} {:>22} {:>12.3} {:>12.2} {:>12.3}",
+            t.model,
+            t.nodes,
+            t.plan.strategy.to_string(),
+            t.sim.ms_per_image,
+            t.report.throughput_img_per_sec,
+            t.report.mean_latency_ms,
+        );
+    }
+    Ok(())
+}
+
+/// `multi --serve`: real concurrent pipelines over the AOT artifacts.
+/// Every tenant's model must have artifacts exported (today: resnet18 —
+/// run e.g. `--models resnet18:sg,resnet18:pipeline` for two tenants of
+/// the same model under different plans).
+fn multi_serve_cmd(
+    requests: Vec<TenantRequest>,
+    budget: usize,
+    input_hw: u64,
+    images: usize,
+) -> anyhow::Result<()> {
+    use vta_cluster::coordinator::allocate_nodes;
+    let graphs = requests
+        .iter()
+        .map(|r| zoo::build(&r.model, input_hw))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let demands: Vec<f64> =
+        graphs.iter().map(|g| g.total_macs() as f64 * images as f64).collect();
+    let alloc = allocate_nodes(budget, &demands)?;
+
+    let mut specs = Vec::new();
+    for (i, ((req, g), &n)) in requests.iter().zip(&graphs).zip(&alloc).enumerate() {
+        anyhow::ensure!(
+            matches!(req.strategy, Strategy::ScatterGather | Strategy::Pipeline),
+            "tenant '{}': serving needs a DataParallel strategy (sg|pipeline)",
+            req.model
+        );
+        let plan = build_plan(req.strategy, g, n, g.mac_cost_oracle())?;
+        specs.push(TenantSpec {
+            name: format!("{}#{i}", req.model),
+            plan,
+            input_hw,
+        });
+    }
+    let mut coord = MultiCoordinator::start(artifacts_dir(), specs, budget, false)?;
+    let mut rng = Rng::new(7);
+    let batches: Vec<(String, Vec<TensorData>)> = coord
+        .tenants()
+        .iter()
+        .map(|t| {
+            // each tenant gets requests of its own model's input shape
+            let shape = coord.coordinator(t).unwrap().input_shape().to_vec();
+            let elems: usize = shape.iter().product();
+            let batch = (0..images)
+                .map(|_| TensorData::i8(shape.clone(), rng.i8_vec(elems)).unwrap())
+                .collect();
+            (t.to_string(), batch)
+        })
+        .collect();
+    println!("serving {} tenants concurrently ...", batches.len());
+    let results = coord.run_batches(batches)?;
+    for (tenant, _, r) in &results {
+        println!(
+            "  {:20} {:6} images  {:8.2} img/s  mean {:7.1} ms  p99 {:7.1} ms  wall {:6.0} ms",
+            tenant, r.images, r.throughput_img_per_sec, r.mean_latency_ms, r.p99_latency_ms, r.wall_ms
+        );
+    }
+    Ok(())
+}
+
+fn serve_cmd(
+    strategy: Strategy,
+    model: &str,
+    n: usize,
+    input_hw: u64,
+    images: usize,
+) -> anyhow::Result<()> {
     anyhow::ensure!(
         matches!(strategy, Strategy::ScatterGather | Strategy::Pipeline),
         "serve supports scatter-gather and pipeline (DataParallel plans)"
     );
-    let g = build_resnet18(input_hw)?;
-    let macs = vta_cluster::graph::resnet::segment_macs(&g);
-    let cost = |l: &str| macs.iter().find(|(x, _)| x == l).unwrap().1 as f64;
-    let plan = build_plan(strategy, &g, n, cost)?;
+    let g = zoo::build(model, input_hw)?;
+    let plan = build_plan(strategy, &g, n, g.mac_cost_oracle())?;
     println!("{}", plan.describe());
     let coord = Coordinator::start(artifacts_dir(), &plan, input_hw)?;
     let mut rng = Rng::new(7);
-    let hw = input_hw as usize;
+    let shape = coord.input_shape().to_vec();
+    let elems: usize = shape.iter().product();
     let batch: Vec<TensorData> = (0..images)
-        .map(|_| TensorData::i8(vec![1, hw, hw, 3], rng.i8_vec(hw * hw * 3)).unwrap())
+        .map(|_| TensorData::i8(shape.clone(), rng.i8_vec(elems)).unwrap())
         .collect();
     let (outs, report) = coord.run_batch(batch)?;
     println!(
-        "served {} images: {:.2} img/s, mean latency {:.1} ms, p99 {:.1} ms, wall {:.0} ms",
+        "served {} images of {}: {:.2} img/s, mean latency {:.1} ms, p99 {:.1} ms, wall {:.0} ms",
         report.images,
+        report.model,
         report.throughput_img_per_sec,
         report.mean_latency_ms,
         report.p99_latency_ms,

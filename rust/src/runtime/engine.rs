@@ -11,6 +11,9 @@ use super::manifest::{ArtifactEntry, Manifest};
 use super::tensor::TensorData;
 use std::collections::HashMap;
 
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,

@@ -16,6 +16,8 @@
 pub mod engine;
 pub mod manifest;
 pub mod tensor;
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_stub;
 
 pub use engine::Engine;
 pub use manifest::{ArtifactEntry, Manifest};

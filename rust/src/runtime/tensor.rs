@@ -2,6 +2,9 @@
 
 use crate::graph::tensor::DType;
 
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 /// A dense host tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorData {

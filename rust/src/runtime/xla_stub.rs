@@ -1,0 +1,109 @@
+//! Build-time stand-in for the `xla` crate's PJRT surface.
+//!
+//! Compiled when the `pjrt` cargo feature is **off** (the default). Every
+//! entry point that would touch the native XLA runtime returns an error
+//! with an actionable message, so the serving path fails fast while the
+//! rest of the crate — graph IR, planners, analytic simulator, every
+//! experiment that does not execute real HLO artifacts — builds and runs
+//! without the native toolchain. With `--features pjrt` this module is
+//! not compiled and the `xla` crate (xla-rs) resolves instead — that
+//! crate is not on crates.io, so enabling the feature requires adding it
+//! to `[dependencies]` yourself (see Cargo.toml). The API here mirrors
+//! exactly the subset `runtime::engine` and `runtime::tensor` consume;
+//! see DESIGN.md §3 for the interchange contract.
+
+/// Element types of the artifacts' tensors (int8 activations/weights,
+/// int32 accumulators/logits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    S8,
+    S32,
+}
+
+/// Error type formatted with `{:?}` at the call sites, like the real
+/// crate's.
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT backend not built — rebuild with `cargo build --features pjrt` \
+         (links the `xla` crate) to execute HLO artifacts"
+            .to_string(),
+    ))
+}
+
+/// Host literal (dense tensor handed to/from PJRT).
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _bytes: &[u8],
+    ) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (from the exporter's `.hlo.txt` files).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident result buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// The CPU PJRT client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}

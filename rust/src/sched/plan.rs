@@ -10,7 +10,7 @@
 //!   replicas, which cooperate on every image (AI-core assignment of
 //!   extra compute to one operator).
 
-use crate::graph::resnet::SEGMENT_NAMES;
+use crate::graph::Graph;
 use std::fmt;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -71,29 +71,41 @@ pub struct StagePlan {
     pub split: SplitMode,
 }
 
-/// A complete schedule of the ResNet graph over the cluster.
+/// A complete schedule of one model's graph over the cluster.
+///
+/// The plan records which model it schedules ([`ExecutionPlan::model`])
+/// and the graph's full segment order at planning time — validation is
+/// against *that* set, so any registered workload (see
+/// [`crate::graph::zoo`]) gets the same invariants ResNet-18 always had.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExecutionPlan {
     pub strategy: Strategy,
     pub n_nodes: usize,
+    /// Registry name of the scheduled model (== `Graph::model`).
+    pub model: String,
+    /// The graph's segment labels in graph order, captured when the plan
+    /// was built; the coverage invariant is checked against this.
+    pub segment_order: Vec<String>,
     pub stages: Vec<StagePlan>,
 }
 
 impl ExecutionPlan {
     /// Invariants every strategy must satisfy (property-tested):
-    /// 1. stages cover all 10 segments exactly once, in order;
+    /// 1. stages cover every segment of [`ExecutionPlan::segment_order`]
+    ///    exactly once, in order;
     /// 2. every referenced node id is `< n_nodes`;
     /// 3. every node id is referenced by at least one stage (no idle
     ///    hardware — the paper always uses the whole cluster);
     /// 4. every stage has ≥ 1 replica; spatial stages have ≥ 2.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(!self.stages.is_empty(), "plan has no stages");
+        anyhow::ensure!(!self.segment_order.is_empty(), "plan has no segment order");
         let covered: Vec<&str> = self
             .stages
             .iter()
             .flat_map(|s| s.segments.iter().map(|x| x.as_str()))
             .collect();
-        let want: Vec<&str> = SEGMENT_NAMES.to_vec();
+        let want: Vec<&str> = self.segment_order.iter().map(String::as_str).collect();
         anyhow::ensure!(
             covered == want,
             "stages cover {covered:?}, want {want:?} (contiguous, in order)"
@@ -125,6 +137,27 @@ impl ExecutionPlan {
         Ok(())
     }
 
+    /// [`ExecutionPlan::validate`] plus the cross-check that this plan
+    /// was built for `g`'s segment set — the guard the simulator and the
+    /// coordinator use so a plan can never be applied to a different
+    /// model's graph.
+    pub fn validate_for(&self, g: &Graph) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.model == g.model,
+            "plan is for model '{}', graph is '{}'",
+            self.model,
+            g.model
+        );
+        let want = g.segment_order();
+        anyhow::ensure!(
+            self.segment_order == want,
+            "plan segment order {:?} != graph's {:?}",
+            self.segment_order,
+            want
+        );
+        self.validate()
+    }
+
     /// Total replica slots (for reporting).
     pub fn total_assignments(&self) -> usize {
         self.stages.iter().map(|s| s.replicas.len()).sum()
@@ -132,7 +165,8 @@ impl ExecutionPlan {
 
     /// Human-readable summary for logs and benches.
     pub fn describe(&self) -> String {
-        let mut s = format!("{} over {} nodes:\n", self.strategy, self.n_nodes);
+        let mut s =
+            format!("{} of {} over {} nodes:\n", self.strategy, self.model, self.n_nodes);
         for (i, st) in self.stages.iter().enumerate() {
             s.push_str(&format!(
                 "  stage {i}: [{}] on nodes {:?} ({:?})\n",
@@ -149,13 +183,28 @@ impl ExecutionPlan {
 mod tests {
     use super::*;
 
+    /// Segment labels of the test model (same shape as ResNet-18's, but
+    /// the plan layer no longer knows or cares about any one model).
+    const SEGS: [&str; 10] =
+        ["stem", "s1b1", "s1b2", "s2b1", "s2b2", "s3b1", "s3b2", "s4b1", "s4b2", "head"];
+
     fn seg(names: &[&str]) -> Vec<String> {
         names.iter().map(|s| s.to_string()).collect()
     }
 
+    fn plan(n_nodes: usize, stages: Vec<StagePlan>) -> ExecutionPlan {
+        ExecutionPlan {
+            strategy: Strategy::ScatterGather,
+            n_nodes,
+            model: "testmodel".to_string(),
+            segment_order: seg(&SEGS),
+            stages,
+        }
+    }
+
     fn whole_graph_stage(replicas: Vec<usize>) -> StagePlan {
         StagePlan {
-            segments: seg(&SEGMENT_NAMES),
+            segments: seg(&SEGS),
             replicas,
             split: SplitMode::DataParallel,
         }
@@ -163,21 +212,16 @@ mod tests {
 
     #[test]
     fn valid_single_stage_plan() {
-        let p = ExecutionPlan {
-            strategy: Strategy::ScatterGather,
-            n_nodes: 4,
-            stages: vec![whole_graph_stage(vec![0, 1, 2, 3])],
-        };
+        let p = plan(4, vec![whole_graph_stage(vec![0, 1, 2, 3])]);
         p.validate().unwrap();
         assert_eq!(p.total_assignments(), 4);
     }
 
     #[test]
     fn rejects_gap_in_coverage() {
-        let p = ExecutionPlan {
-            strategy: Strategy::Pipeline,
-            n_nodes: 2,
-            stages: vec![
+        let p = plan(
+            2,
+            vec![
                 StagePlan {
                     segments: seg(&["stem", "s1b1"]),
                     replicas: vec![0],
@@ -190,28 +234,20 @@ mod tests {
                     split: SplitMode::DataParallel,
                 },
             ],
-        };
+        );
         assert!(p.validate().is_err());
     }
 
     #[test]
     fn rejects_idle_node() {
-        let p = ExecutionPlan {
-            strategy: Strategy::ScatterGather,
-            n_nodes: 3,
-            stages: vec![whole_graph_stage(vec![0, 1])],
-        };
+        let p = plan(3, vec![whole_graph_stage(vec![0, 1])]);
         let e = p.validate().unwrap_err().to_string();
         assert!(e.contains("never used"), "{e}");
     }
 
     #[test]
     fn rejects_out_of_range_node() {
-        let p = ExecutionPlan {
-            strategy: Strategy::ScatterGather,
-            n_nodes: 2,
-            stages: vec![whole_graph_stage(vec![0, 2])],
-        };
+        let p = plan(2, vec![whole_graph_stage(vec![0, 2])]);
         assert!(p.validate().is_err());
     }
 
@@ -219,18 +255,36 @@ mod tests {
     fn rejects_single_replica_spatial() {
         let mut st = whole_graph_stage(vec![0]);
         st.split = SplitMode::Spatial;
-        let p = ExecutionPlan { strategy: Strategy::CoreAssign, n_nodes: 1, stages: vec![st] };
+        let p = plan(1, vec![st]);
         assert!(p.validate().is_err());
     }
 
     #[test]
     fn rejects_duplicate_replica() {
+        let p = plan(2, vec![whole_graph_stage(vec![0, 0, 1])]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_for_rejects_other_models_graph() {
+        use crate::graph::zoo;
+        let g = zoo::build("lenet5", 0).unwrap();
+        // a plan built against the lenet graph validates for it …
         let p = ExecutionPlan {
             strategy: Strategy::ScatterGather,
-            n_nodes: 2,
-            stages: vec![whole_graph_stage(vec![0, 0, 1])],
+            n_nodes: 1,
+            model: g.model.clone(),
+            segment_order: g.segment_order(),
+            stages: vec![StagePlan {
+                segments: g.segment_order(),
+                replicas: vec![0],
+                split: SplitMode::DataParallel,
+            }],
         };
-        assert!(p.validate().is_err());
+        p.validate_for(&g).unwrap();
+        // … but not for a different model
+        let other = zoo::build("resnet18", 32).unwrap();
+        assert!(p.validate_for(&other).is_err());
     }
 
     #[test]

@@ -15,6 +15,8 @@ pub fn scatter_gather(g: &Graph, n: usize) -> anyhow::Result<ExecutionPlan> {
     let plan = ExecutionPlan {
         strategy: Strategy::ScatterGather,
         n_nodes: n,
+        model: g.model.clone(),
+        segment_order: g.segment_order(),
         stages: vec![StagePlan {
             segments: g.segment_order(),
             replicas: (0..n).collect(),
@@ -143,7 +145,13 @@ where
             },
         })
         .collect();
-    let plan = ExecutionPlan { strategy: Strategy::CoreAssign, n_nodes: n, stages };
+    let plan = ExecutionPlan {
+        strategy: Strategy::CoreAssign,
+        n_nodes: n,
+        model: g.model.clone(),
+        segment_order: g.segment_order(),
+        stages,
+    };
     plan.validate()?;
     Ok(plan)
 }
@@ -182,7 +190,13 @@ where
             .unwrap();
         stages[idx].replicas.push(extra);
     }
-    let plan = ExecutionPlan { strategy: Strategy::Pipeline, n_nodes: n, stages };
+    let plan = ExecutionPlan {
+        strategy: Strategy::Pipeline,
+        n_nodes: n,
+        model: g.model.clone(),
+        segment_order: g.segment_order(),
+        stages,
+    };
     plan.validate()?;
     Ok(plan)
 }
@@ -231,7 +245,13 @@ where
                 cost / st.replicas.len() as f64
             })
             .fold(0.0f64, f64::max);
-        let plan = ExecutionPlan { strategy: Strategy::Fused, n_nodes: n, stages };
+        let plan = ExecutionPlan {
+            strategy: Strategy::Fused,
+            n_nodes: n,
+            model: g.model.clone(),
+            segment_order: g.segment_order(),
+            stages,
+        };
         plan.validate()?;
         if best.as_ref().map(|(b, _)| bottleneck < *b).unwrap_or(true) {
             best = Some((bottleneck, plan));

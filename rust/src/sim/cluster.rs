@@ -13,8 +13,9 @@
 //!   (master egress serializes the scatter, master ingress the gather);
 //!
 //! and take `ms_per_image = max(all demands)`. Unloaded end-to-end
-//! latency comes from booking a single image through the [`Booker`]
-//! (transfers + computes along the critical path). Both parts are exact,
+//! latency comes from booking a single image through the internal
+//! `Booker` (transfers + computes along the critical path). Both parts
+//! are exact,
 //! deterministic and fast — no Monte-Carlo noise on top of the paper
 //! comparison.
 
@@ -35,13 +36,11 @@ pub struct SimConfig {
     /// Images in the modeled stream (affects the makespan estimate only;
     /// demands are per-image and exact).
     pub images: usize,
-    /// Kept for API stability; the analytic model needs no warmup.
-    pub warmup_frac: f64,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { images: 64, warmup_frac: 0.2 }
+        SimConfig { images: 64 }
     }
 }
 
@@ -203,7 +202,8 @@ fn lcm(a: usize, b: usize) -> usize {
 }
 
 /// Simulate a plan over the cluster; `cost` must be built from the same
-/// board/VTA config as `cluster`.
+/// board/VTA config as `cluster`, and `plan` must have been built for
+/// `g` (any zoo model — the simulator is model-agnostic).
 pub fn simulate(
     plan: &ExecutionPlan,
     cluster: &ClusterConfig,
@@ -211,7 +211,7 @@ pub fn simulate(
     g: &Graph,
     sim_cfg: &SimConfig,
 ) -> anyhow::Result<SimResult> {
-    plan.validate()?;
+    plan.validate_for(g)?;
     anyhow::ensure!(
         plan.n_nodes == cluster.num_nodes(),
         "plan is for {} nodes, cluster has {}",
@@ -409,8 +409,7 @@ mod tests {
             .collect();
         let lookup = |l: &str| costs.iter().find(|(x, _)| x == l).unwrap().1;
         let plan = build_plan(strategy, &g, n, lookup).unwrap();
-        simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images, warmup_frac: 0.2 })
-            .unwrap()
+        simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images }).unwrap()
     }
 
     #[test]

@@ -24,7 +24,10 @@ pub struct CostModel {
     pub model: TimingModel,
     gemm_cache: HashMap<GemmShape, u64>,
     alu_cache: HashMap<(u64, usize), u64>,
-    seg_cache: HashMap<(String, u64), Nanos>,
+    /// Keyed by (graph name, segment label, split) — segment labels like
+    /// `head` repeat across zoo models, so one CostModel can be shared by
+    /// every workload of a multi-tenant run without collisions.
+    seg_cache: HashMap<(String, String, u64), Nanos>,
 }
 
 impl CostModel {
@@ -120,7 +123,7 @@ impl CostModel {
         label: &str,
         split: u64,
     ) -> anyhow::Result<Nanos> {
-        let key = (label.to_string(), split);
+        let key = (g.name.clone(), label.to_string(), split);
         if let Some(&t) = self.seg_cache.get(&key) {
             return Ok(t);
         }

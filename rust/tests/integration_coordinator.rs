@@ -9,7 +9,7 @@ use vta_cluster::graph::resnet::build_resnet18;
 use vta_cluster::graph::tensor::DType;
 use vta_cluster::runtime::{artifacts_dir, Manifest, TensorData};
 use vta_cluster::sched::{pipeline, scatter_gather};
-use vta_cluster::coordinator::Coordinator;
+use vta_cluster::coordinator::{Coordinator, MultiCoordinator, TenantSpec};
 
 fn ready() -> bool {
     artifacts_dir().join("manifest.json").exists()
@@ -100,6 +100,61 @@ fn spatial_plans_rejected_for_serving() {
     let plan = vta_cluster::sched::core_assign(&g, 12, cost).unwrap();
     let err = Coordinator::start(artifacts_dir(), &plan, 32);
     assert!(err.is_err());
+}
+
+#[test]
+fn two_tenants_serve_concurrently_with_correct_routing() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let g = build_resnet18(32).unwrap();
+    let macs = g.segment_macs();
+    let cost = |l: &str| macs.iter().find(|(x, _)| x == l).unwrap().1 as f64;
+    // two independent pipelines of the same exported model, different
+    // plans, sharing one 3-node budget in one process
+    let specs = vec![
+        TenantSpec { name: "tenant-a".into(), plan: scatter_gather(&g, 1).unwrap(), input_hw: 32 },
+        TenantSpec { name: "tenant-b".into(), plan: pipeline(&g, 2, cost).unwrap(), input_hw: 32 },
+    ];
+    let mut multi = MultiCoordinator::start(artifacts_dir(), specs, 3, false).unwrap();
+    assert_eq!(multi.tenants(), vec!["tenant-a", "tenant-b"]);
+
+    let (input, want) = tv_pair();
+    let batches = vec![
+        ("tenant-a".to_string(), (0..4).map(|_| input.clone()).collect::<Vec<_>>()),
+        ("tenant-b".to_string(), (0..6).map(|_| input.clone()).collect::<Vec<_>>()),
+    ];
+    let results = multi.run_batches(batches).unwrap();
+    assert_eq!(results.len(), 2);
+    for (tenant, outs, report) in &results {
+        assert_eq!(report.model, *tenant, "report not routed per-tenant");
+        let n = if tenant == "tenant-a" { 4 } else { 6 };
+        assert_eq!(report.images, n, "{tenant}");
+        assert_eq!(outs.len(), n as usize);
+        for (i, out) in outs.iter().enumerate() {
+            assert_eq!(out, &want, "{tenant} image {i} diverged");
+        }
+        assert!(report.throughput_img_per_sec > 0.0);
+    }
+    // routing rejects unknown tenants
+    assert!(multi.submit("tenant-c", input.clone()).is_err());
+    multi.shutdown();
+}
+
+#[test]
+fn multi_coordinator_enforces_node_budget() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let g = build_resnet18(32).unwrap();
+    let specs = vec![
+        TenantSpec { name: "a".into(), plan: scatter_gather(&g, 2).unwrap(), input_hw: 32 },
+        TenantSpec { name: "b".into(), plan: scatter_gather(&g, 2).unwrap(), input_hw: 32 },
+    ];
+    let err = MultiCoordinator::start(artifacts_dir(), specs, 3, false);
+    assert!(err.is_err(), "4 nodes should not fit a 3-node budget");
 }
 
 #[test]

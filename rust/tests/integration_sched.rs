@@ -4,6 +4,7 @@
 
 use vta_cluster::config::{BoardProfile, Calibration, VtaConfig};
 use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::graph::zoo;
 use vta_cluster::runtime::artifacts_dir;
 use vta_cluster::sched::{build_plan, SplitMode, Strategy};
 use vta_cluster::sim::CostModel;
@@ -105,6 +106,50 @@ fn fused_uses_spatial_splits_only_with_spare_nodes() {
         // assignments equal n exactly for fused (no sharing)
         assert_eq!(plan.total_assignments(), n, "n={n}");
     }
+}
+
+#[test]
+fn all_strategies_over_every_zoo_model_with_real_costs() {
+    // the registry contract: each registered workload schedules under
+    // all four §II-C strategies with the calibrated node model, across
+    // cluster sizes, with no model-specific code anywhere in sched/
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::load_or_default(&artifacts_dir()),
+    );
+    for spec in &zoo::MODELS {
+        let g = zoo::build(spec.name, 0).unwrap();
+        let seg_costs: Vec<(String, f64)> = g
+            .segment_order()
+            .into_iter()
+            .map(|l| {
+                let t = cost.segment_time_ns(&g, &l, 1).unwrap() as f64;
+                (l, t)
+            })
+            .collect();
+        let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+        for n in 1..=8 {
+            for s in Strategy::all() {
+                let plan = build_plan(s, &g, n, lookup)
+                    .unwrap_or_else(|e| panic!("{} {s} n={n}: {e}", spec.name));
+                plan.validate_for(&g)
+                    .unwrap_or_else(|e| panic!("{} {s} n={n}: {e}", spec.name));
+                assert_eq!(plan.model, spec.name);
+                assert!(plan.total_assignments() >= n, "{} {s} n={n}", spec.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn plans_do_not_cross_models() {
+    let resnet = build_resnet18(224).unwrap();
+    let lenet = zoo::build("lenet5", 0).unwrap();
+    let plan = build_plan(Strategy::ScatterGather, &resnet, 2, |_| 1.0).unwrap();
+    plan.validate_for(&resnet).unwrap();
+    let err = plan.validate_for(&lenet).unwrap_err().to_string();
+    assert!(err.contains("model"), "{err}");
 }
 
 #[test]
