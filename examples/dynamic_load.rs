@@ -1,0 +1,117 @@
+//! Dynamic load and online reconfiguration (DESIGN.md §10, E10).
+//!
+//! ```bash
+//! cargo run --release --example dynamic_load
+//! cargo run --release --example dynamic_load -- --nodes 4 --seed 7
+//! ```
+//!
+//! The paper's cluster is *reconfigurable*: when the load changes, the
+//! boards can be reprogrammed with a different schedule. This example
+//! makes "when is it worth reconfiguring?" measurable:
+//!
+//! 1. price the four §II-C strategies analytically (capacity + unloaded
+//!    latency) — the controller's candidate set;
+//! 2. drive the paper's small-N worst case (AI core assignment) with a
+//!    bursty MMPP arrival stream through the discrete-event simulator,
+//!    once with the reconfiguration controller off and once with it on;
+//! 3. compare p99 latency: the controller switches to the
+//!    highest-capacity plan when the burst overloads the standing plan,
+//!    paying the modeled bitstream-load + warm-up downtime, and the tail
+//!    collapses — the downtime is visible in the report.
+
+use vta_cluster::config::{
+    BoardFamily, BoardProfile, Calibration, ClusterConfig, ReconfigCost, VtaConfig,
+};
+use vta_cluster::graph::zoo;
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::{plan_options, ControllerConfig, OnlineController, Strategy};
+use vta_cluster::sim::{run_des, ArrivalProcess, CostModel, DesConfig, DesResult};
+use vta_cluster::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("dynamic_load", "DES + online reconfiguration walkthrough")
+        .opt("model", "resnet18", "zoo model to serve")
+        .opt("nodes", "4", "cluster size")
+        .opt("horizon", "20000", "simulated horizon, ms")
+        .opt("seed", "7", "RNG seed (same seed → bit-identical run)")
+        .parse()?;
+    let model = args.get("model");
+    let nodes = args.get_usize("nodes")?;
+    let horizon_ms = args.get_f64("horizon")?;
+    let seed = args.get_u64("seed")?;
+
+    // 1. candidate plans, priced by the steady-state simulator
+    let family = BoardFamily::Zynq7000;
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let g = zoo::build(model, 0)?;
+    let vta = VtaConfig::table1_zynq7000();
+    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(family), calib);
+    let cluster = ClusterConfig::homogeneous(family, nodes).with_vta(vta);
+    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all())?;
+    println!("candidate plans for {model} on {nodes} nodes:");
+    for o in &options {
+        println!(
+            "  {:22} capacity {:8.1} img/s  unloaded latency {:7.3} ms",
+            o.plan.strategy.to_string(),
+            o.capacity_img_per_sec,
+            o.latency_ms
+        );
+    }
+
+    // 2. a bursty stream sized against the *initial* (mismatched) plan
+    let initial = options
+        .iter()
+        .position(|o| o.plan.strategy == Strategy::CoreAssign)
+        .unwrap();
+    let cap0 = options[initial].capacity_img_per_sec;
+    // the same stream `vtacluster load --arrival burst --rate 0` runs
+    let arrival = ArrivalProcess::parse("burst", 0.55 * cap0, 4.0)?;
+    println!("\narrival: {}  (initial plan: ai-core-assignment)", arrival.describe());
+    let cfg = DesConfig::new(arrival, horizon_ms, seed);
+
+    let run = |cost: &mut CostModel, ctrl: Option<&mut OnlineController>| {
+        run_des(&options, initial, &cluster, cost, &g, &cfg, ctrl)
+    };
+    let report = |tag: &str, r: &DesResult| {
+        println!(
+            "{tag:16} completed {:5}/{:5}  p50 {:8.2} ms  p99 {:9.2} ms  \
+             reconfigs {} (downtime {:.0} ms)",
+            r.completed,
+            r.offered,
+            r.latency_ms.p50(),
+            r.latency_ms.p99(),
+            r.reconfigs.len(),
+            r.downtime_ms,
+        );
+    };
+
+    // 3. controller off vs on — same seed, same arrivals
+    let off = run(&mut cost, None)?;
+    let mut ctrl = OnlineController::new(
+        ControllerConfig::default(),
+        ReconfigCost::for_family(family),
+    )?;
+    let on = run(&mut cost, Some(&mut ctrl))?;
+    println!();
+    report("controller off", &off);
+    report("controller on", &on);
+    for e in &on.reconfigs {
+        println!(
+            "    at {:7.0} ms: {} → {} ({:.0} ms downtime) — {}",
+            e.at_ms, e.from_strategy, e.to_strategy, e.downtime_ms, e.reason
+        );
+    }
+    if on.latency_ms.p99() < off.latency_ms.p99() {
+        println!(
+            "\nreconfiguring paid off: p99 {:.1} ms → {:.1} ms ({:.1}× better) \
+             for {:.0} ms of charged downtime",
+            off.latency_ms.p99(),
+            on.latency_ms.p99(),
+            off.latency_ms.p99() / on.latency_ms.p99(),
+            on.downtime_ms,
+        );
+    } else {
+        println!("\nthe standing plan survived this trace — no tail win to collect");
+    }
+    Ok(())
+}

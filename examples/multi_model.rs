@@ -28,9 +28,11 @@ fn main() -> anyhow::Result<()> {
     let args = Cli::new("multi_model", "multi-model / multi-tenant demo")
         .opt("nodes", "12", "shared node budget")
         .opt("images", "32", "images per tenant")
+        .opt("seed", "7", "seed for the loaded-latency DES runs")
         .parse()?;
     let budget = args.get_usize("nodes")?;
     let images = args.get_usize("images")?;
+    let seed = args.get_u64("seed")?;
     let calib = Calibration::load_or_default(&artifacts_dir());
 
     // ---- 1. per-model strategy comparison -----------------------------
@@ -88,19 +90,21 @@ fn main() -> anyhow::Result<()> {
         calib,
         budget,
         &tenants,
+        seed,
     )?;
     for t in &out {
         println!(
-            "{:16} {:2} nodes  {:22} {:>9.3} ms/image  {:>9.2} img/s  latency {:>8.3} ms",
+            "{:16} {:2} nodes  {:22} {:>9.3} ms/image  {:>9.2} img/s  latency {:>8.3} ms  p99 {:>8.3} ms",
             t.model,
             t.nodes,
             t.plan.strategy.to_string(),
             t.sim.ms_per_image,
             t.report.throughput_img_per_sec,
             t.report.mean_latency_ms,
+            t.report.p99_latency_ms,
         );
     }
     let used: usize = out.iter().map(|t| t.nodes).sum();
-    println!("budget used: {used}/{budget} nodes");
+    println!("budget used: {used}/{budget} nodes  (loaded-latency DES seed {seed})");
     Ok(())
 }

@@ -4,13 +4,17 @@
 //! * [`board`]       — FPGA SoC board profiles (Zynq-7020, ZU+ MPSoC)
 //! * [`cluster`]     — cluster topology (boards + Ethernet switch + master)
 //! * [`calibration`] — fitted cost-model constants with provenance
+//! * [`reconfig`]    — modeled FPGA reconfiguration downtime (bitstream
+//!                     load + warm-up) charged by the online controller
 
 pub mod board;
 pub mod calibration;
 pub mod cluster;
+pub mod reconfig;
 pub mod vta;
 
 pub use board::{BoardFamily, BoardProfile};
 pub use calibration::Calibration;
 pub use cluster::ClusterConfig;
+pub use reconfig::ReconfigCost;
 pub use vta::VtaConfig;

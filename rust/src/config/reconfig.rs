@@ -1,0 +1,104 @@
+//! FPGA reconfiguration cost model.
+//!
+//! The paper's defining feature is that the cluster is *reconfigurable*:
+//! pipeline structure can be re-arranged and resources re-allocated to
+//! the most computationally intensive layers. Doing that at run time is
+//! not free — switching the active [`crate::sched::ExecutionPlan`] means
+//! reprogramming the PL (bitstream load over PCAP/ICAP) and
+//! re-initialising the VTA driver on every affected node. During that
+//! window a node serves nothing, so the online controller
+//! ([`crate::sched::online`]) must amortise the downtime against the
+//! backlog it expects the new plan to drain.
+//!
+//! Constants are modeled, not fitted: a Zynq-7020 full bitstream is
+//! ~4 MiB and PCAP sustains ~128 MB/s (≈32 ms), plus driver re-init and
+//! first-launch instruction-stream setup. ZU+ bitstreams are an order of
+//! magnitude larger but the configuration port is faster. Partial
+//! reconfiguration would shrink the load phase; we charge the full-image
+//! cost as the conservative bound.
+
+use super::board::BoardFamily;
+
+/// Downtime charged when a node switches execution plans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconfigCost {
+    /// Bitstream load over the configuration port, ms.
+    pub bitstream_load_ms: f64,
+    /// Driver re-init + engine warm-up after reprogramming, ms
+    /// (interrupt re-registration, buffer re-pinning, first launch).
+    pub warmup_ms: f64,
+}
+
+impl Default for ReconfigCost {
+    fn default() -> Self {
+        Self::zynq7020()
+    }
+}
+
+impl ReconfigCost {
+    /// Zynq-7020: ~4 MiB bitstream over PCAP at ~128 MB/s.
+    pub fn zynq7020() -> Self {
+        ReconfigCost { bitstream_load_ms: 40.0, warmup_ms: 12.0 }
+    }
+
+    /// ZU+ MPSoC: ~30 MiB bitstream, faster CSU DMA configuration path.
+    pub fn zu_mpsoc() -> Self {
+        ReconfigCost { bitstream_load_ms: 90.0, warmup_ms: 15.0 }
+    }
+
+    pub fn for_family(family: BoardFamily) -> Self {
+        match family {
+            BoardFamily::Zynq7000 => Self::zynq7020(),
+            BoardFamily::UltraScalePlus => Self::zu_mpsoc(),
+        }
+    }
+
+    /// Total per-switch downtime charged to every node (ms). Nodes
+    /// reprogram in parallel, so the cluster-wide outage equals the
+    /// per-node cost, not its sum.
+    pub fn downtime_ms(&self) -> f64 {
+        self.bitstream_load_ms + self.warmup_ms
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.bitstream_load_ms >= 0.0 && self.bitstream_load_ms.is_finite(),
+            "bitstream_load_ms out of range"
+        );
+        anyhow::ensure!(
+            self.warmup_ms >= 0.0 && self.warmup_ms.is_finite(),
+            "warmup_ms out of range"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        for c in [ReconfigCost::zynq7020(), ReconfigCost::zu_mpsoc()] {
+            c.validate().unwrap();
+            assert!(c.downtime_ms() > 0.0);
+        }
+    }
+
+    #[test]
+    fn family_dispatch() {
+        assert_eq!(ReconfigCost::for_family(BoardFamily::Zynq7000), ReconfigCost::zynq7020());
+        assert_eq!(
+            ReconfigCost::for_family(BoardFamily::UltraScalePlus),
+            ReconfigCost::zu_mpsoc()
+        );
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let c = ReconfigCost { bitstream_load_ms: -1.0, warmup_ms: 0.0 };
+        assert!(c.validate().is_err());
+        let c = ReconfigCost { bitstream_load_ms: f64::NAN, warmup_ms: 0.0 };
+        assert!(c.validate().is_err());
+    }
+}

@@ -21,8 +21,12 @@ use super::service::{Coordinator, ServingReport};
 use crate::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig, VtaConfig};
 use crate::graph::zoo;
 use crate::runtime::TensorData;
+use crate::sched::online::PlanOption;
 use crate::sched::{build_plan, ExecutionPlan, Strategy};
-use crate::sim::{simulate, CostModel, SimConfig, SimResult};
+use crate::sim::{
+    run_des, simulate, ArrivalProcess, CostModel, DesConfig, DesResult, SimConfig, SimResult,
+};
+use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
@@ -203,22 +207,32 @@ pub struct TenantSim {
     pub nodes: usize,
     pub plan: ExecutionPlan,
     pub sim: SimResult,
+    /// Loaded behavior: a seeded discrete-event run of this tenant's
+    /// pipeline under Poisson arrivals at 70 % of the plan's capacity —
+    /// where the report's latency percentiles come from.
+    pub loaded: DesResult,
     /// The simulator's verdict in serving-report form (throughput from
-    /// the steady-state per-image time, wall from the makespan).
+    /// the steady-state per-image time, latencies from the loaded DES,
+    /// wall from the makespan).
     pub report: ServingReport,
 }
 
 /// Plan and price a multi-tenant deployment analytically: the node
 /// budget is split proportionally to each tenant's single-node service
 /// demand (`graph_time × images`), each tenant's strategy schedules its
-/// share, and every pipeline is priced by the calibrated simulator.
-/// Models need no AOT artifacts — any zoo entry works.
+/// share, every pipeline is priced by the calibrated simulator, and a
+/// seeded discrete-event run ([`crate::sim::des`]) measures each
+/// tenant's latency distribution under Poisson load at 70 % of its
+/// capacity. `seed` makes the stochastic path reproducible — the CLI
+/// prints it with the report. Models need no AOT artifacts — any zoo
+/// entry works.
 pub fn simulate_tenants(
     family: BoardFamily,
     vta: VtaConfig,
     calib: Calibration,
     node_budget: usize,
     requests: &[TenantRequest],
+    seed: u64,
 ) -> anyhow::Result<Vec<TenantSim>> {
     anyhow::ensure!(!requests.is_empty(), "no tenants requested");
     let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(family), calib);
@@ -232,29 +246,50 @@ pub fn simulate_tenants(
     }
     let alloc = allocate_nodes(node_budget, &demands)?;
 
+    // independent per-tenant seeds derived from the run seed
+    let mut seed_rng = Rng::new(seed);
     let mut out = Vec::with_capacity(requests.len());
     for ((req, g), &n) in requests.iter().zip(&graphs).zip(&alloc) {
-        let seg_costs: Vec<(String, f64)> = g
-            .segment_order()
-            .into_iter()
-            .map(|l| {
-                let t = cost.segment_time_ns(g, &l, 1)?;
-                Ok((l, t as f64))
-            })
-            .collect::<anyhow::Result<_>>()?;
+        let seg_costs = cost.seg_cost_table(g)?;
         let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
         let plan = build_plan(req.strategy, g, n, lookup)?;
         let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta.clone());
         let sim = simulate(&plan, &cluster, &mut cost, g, &SimConfig { images: req.images })?;
+
+        // loaded latency: drive the pipeline with a seeded Poisson
+        // stream at 70 % of its steady-state capacity
+        let capacity = 1e3 / sim.ms_per_image;
+        let option = PlanOption {
+            plan: plan.clone(),
+            capacity_img_per_sec: capacity,
+            latency_ms: sim.latency_ms.mean(),
+        };
+        let rate = 0.7 * capacity;
+        let target_images = req.images.max(32) as f64;
+        let des_cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: rate },
+            target_images / rate * 1e3,
+            seed_rng.next_u64(),
+        );
+        let loaded = run_des(&[option], 0, &cluster, &mut cost, g, &des_cfg, None)?;
+        let (mean_ms, p99_ms) = if loaded.completed > 0 {
+            (
+                loaded.latency_ms.mean(),
+                loaded.latency_ms.percentile(99.0).unwrap_or(0.0),
+            )
+        } else {
+            // degenerate horizon: fall back to the unloaded figure
+            (sim.latency_ms.mean(), sim.latency_ms.percentile(99.0).unwrap_or(0.0))
+        };
         let report = ServingReport {
             model: req.model.clone(),
             images: req.images as u64,
-            throughput_img_per_sec: 1e3 / sim.ms_per_image,
-            mean_latency_ms: sim.latency_ms.mean(),
-            p99_latency_ms: sim.latency_ms.p99(),
+            throughput_img_per_sec: capacity,
+            mean_latency_ms: mean_ms,
+            p99_latency_ms: p99_ms,
             wall_ms: sim.makespan_ms,
         };
-        out.push(TenantSim { model: req.model.clone(), nodes: n, plan, sim, report });
+        out.push(TenantSim { model: req.model.clone(), nodes: n, plan, sim, loaded, report });
     }
     Ok(out)
 }
@@ -305,6 +340,7 @@ mod tests {
             Calibration::default(),
             12,
             &reqs,
+            7,
         )
         .unwrap();
         assert_eq!(out.len(), 3);
@@ -320,6 +356,48 @@ mod tests {
         assert!(out[0].nodes > out[1].nodes, "{:?}", out.iter().map(|t| t.nodes).collect::<Vec<_>>());
         // per-model routing: reports carry their model names
         assert_eq!(out[1].report.model, "lenet5");
+        // loaded DES ran and produced the report's latency percentiles
+        for t in &out {
+            assert!(t.loaded.completed > 0, "{}: empty loaded run", t.model);
+            assert!(
+                t.report.p99_latency_ms >= t.report.mean_latency_ms * 0.99,
+                "{}: p99 {} below mean {}",
+                t.model,
+                t.report.p99_latency_ms,
+                t.report.mean_latency_ms
+            );
+        }
+    }
+
+    #[test]
+    fn simulate_tenants_is_seed_reproducible() {
+        let reqs = [TenantRequest {
+            model: "lenet5".into(),
+            input_hw: 0,
+            strategy: Strategy::ScatterGather,
+            images: 24,
+        }];
+        let run = |seed| {
+            simulate_tenants(
+                BoardFamily::Zynq7000,
+                VtaConfig::table1_zynq7000(),
+                Calibration::default(),
+                2,
+                &reqs,
+                seed,
+            )
+            .unwrap()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a[0].report.p99_latency_ms, b[0].report.p99_latency_ms);
+        assert_eq!(a[0].loaded.completed, b[0].loaded.completed);
+        let c = run(8);
+        assert!(
+            a[0].loaded.offered != c[0].loaded.offered
+                || a[0].report.p99_latency_ms != c[0].report.p99_latency_ms,
+            "seed change did not alter the loaded run"
+        );
     }
 
     #[test]
@@ -336,6 +414,7 @@ mod tests {
             Calibration::default(),
             4,
             &reqs,
+            7,
         )
         .is_err());
     }

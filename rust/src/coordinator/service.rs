@@ -237,7 +237,8 @@ impl Coordinator {
             images: n as u64,
             throughput_img_per_sec: n as f64 / wall.as_secs_f64(),
             mean_latency_ms: metrics.latency_ms().mean(),
-            p99_latency_ms: metrics.latency_ms().p99(),
+            // zero-completion runs report 0 instead of crashing
+            p99_latency_ms: metrics.latency_ms().percentile(99.0).unwrap_or(0.0),
             wall_ms: wall.as_secs_f64() * 1e3,
         };
         Ok((out.into_iter().map(|o| o.expect("missing completion")).collect(), report))

@@ -69,19 +69,18 @@ impl Bench {
         Ok(self.cost.graph_time_ns(&self.graph)? as f64 / 1e6)
     }
 
+    /// Split access to the workload graph and the shared memoized cost
+    /// model, for callers composing further analyses on top of `cell`
+    /// (e.g. the CLI's loaded-DES pass) without rebuilding the caches.
+    pub fn graph_and_cost_mut(&mut self) -> (&Graph, &mut CostModel) {
+        (&self.graph, &mut self.cost)
+    }
+
     /// Simulated ms/image for one (strategy, n) cell.
     pub fn cell(&mut self, strategy: Strategy, n: usize) -> anyhow::Result<SimResult> {
         let cost = &mut self.cost;
         // seg_cost oracle for the planners: single-split segment times
-        let seg_costs: Vec<(String, f64)> = self
-            .graph
-            .segment_order()
-            .into_iter()
-            .map(|l| {
-                let t = cost.segment_time_ns(&self.graph, &l, 1).unwrap() as f64;
-                (l, t)
-            })
-            .collect();
+        let seg_costs = cost.seg_cost_table(&self.graph)?;
         let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
         let plan = build_plan(strategy, &self.graph, n, lookup)?;
         let cluster =

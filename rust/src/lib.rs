@@ -10,9 +10,13 @@
 //!   scheduling strategies of §II-C (scatter-gather, AI core assignment,
 //!   pipeline, fused) applicable to any registered model, an analytic
 //!   cluster simulator that regenerates every table/figure of the paper,
-//!   and a PJRT-backed serving coordinator with a multi-tenant layer
-//!   ([`coordinator::MultiCoordinator`]) running several model pipelines
-//!   concurrently over a shared node budget.
+//!   a deterministic discrete-event load simulator ([`sim::des`]) with
+//!   an online reconfiguration controller ([`sched::online`]) that
+//!   switches plans under load and charges the modeled FPGA
+//!   reconfiguration downtime, and a PJRT-backed serving coordinator
+//!   with a multi-tenant layer ([`coordinator::MultiCoordinator`])
+//!   running several model pipelines concurrently over a shared node
+//!   budget.
 //! * **Layer 2 (python/compile, build-time)** — int8 ResNet-18 in JAX,
 //!   AOT-lowered to HLO text artifacts per graph segment.
 //! * **Layer 1 (python/compile/kernels, build-time)** — the VTA GEMM and

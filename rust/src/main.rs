@@ -14,17 +14,28 @@
 //!                  budget, each with its own strategy; per-model
 //!                  serving reports (add `--serve` for the real PJRT
 //!                  pipelines instead of the analytic simulator)
+//! * `load`       — dynamic-load DES: drive a plan with an open-loop
+//!                  arrival process (`--arrival poisson|burst|diurnal`),
+//!                  report p50/p95/p99 latency and queue depth, and let
+//!                  the online reconfiguration controller
+//!                  (`--controller on|off`) switch plans mid-run,
+//!                  charging the modeled FPGA reconfiguration downtime
 //! * `serve`      — run the real PJRT serving pipeline on a batch of
 //!                  synthetic images (end-to-end driver)
 
-use vta_cluster::config::{BoardFamily, Calibration, VtaConfig};
+use vta_cluster::config::{
+    BoardFamily, BoardProfile, Calibration, ClusterConfig, ReconfigCost, VtaConfig,
+};
 use vta_cluster::coordinator::{
     simulate_tenants, Coordinator, MultiCoordinator, TenantRequest, TenantSpec,
 };
 use vta_cluster::exp::{calibrate, paper, runner::Bench, table};
 use vta_cluster::graph::zoo;
 use vta_cluster::runtime::{artifacts_dir, TensorData};
-use vta_cluster::sched::{build_plan, Strategy};
+use vta_cluster::sched::{
+    build_plan, plan_options, ControllerConfig, OnlineController, PlanOption, Strategy,
+};
+use vta_cluster::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
 use vta_cluster::util::cli::Cli;
 use vta_cluster::util::rng::Rng;
 
@@ -44,12 +55,19 @@ fn run() -> anyhow::Result<()> {
         .opt("nodes", "4", "cluster size for `simulate`/`serve`, shared budget for `multi`")
         .opt("images", "64", "images per run (per tenant for `multi`)")
         .opt("input-hw", "32", "input size for `serve`/`multi --serve` (32 tiny / 224 paper)")
-        .opt("board", "zynq", "board family for `simulate`/`multi` (zynq|ultrascale)")
+        .opt("board", "zynq", "board family for `simulate`/`multi`/`load` (zynq|ultrascale)")
+        .opt("seed", "7", "RNG seed for stochastic paths (`simulate`/`multi`/`load`/`serve`)")
+        .opt("arrival", "poisson", "`load`: arrival process (poisson|burst|diurnal)")
+        .opt("rate", "0", "`load`: base arrival rate img/s (0 = auto from plan capacity)")
+        .opt("burst", "4", "`load`: burst rate multiplier for `--arrival burst`")
+        .opt("controller", "on", "`load`: online reconfiguration controller (on|off)")
+        .opt("horizon", "20000", "`load`: simulated horizon in ms")
         .flag("quick", "reduced calibration grids")
         .flag("serve", "`multi`: serve real artifacts instead of simulating")
-        .positional("command", "info | calibrate | table | simulate | multi | serve");
+        .positional("command", "info | calibrate | table | simulate | multi | load | serve");
     let args = cli.parse()?;
     let command = args.positional.first().map(String::as_str).unwrap_or("info");
+    let seed = args.get_u64("seed")?;
 
     match command {
         "info" => info(),
@@ -61,6 +79,7 @@ fn run() -> anyhow::Result<()> {
             args.get_usize("nodes")?,
             BoardFamily::parse(args.get("board"))?,
             args.get_usize("images")?,
+            seed,
         ),
         "multi" => multi_cmd(
             args.get("models"),
@@ -69,7 +88,27 @@ fn run() -> anyhow::Result<()> {
             args.get_usize("images")?,
             args.get_flag("serve"),
             args.get_u64("input-hw")?,
+            seed,
         ),
+        "load" => {
+            let controller = match args.get("controller").to_ascii_lowercase().as_str() {
+                "on" => true,
+                "off" => false,
+                other => anyhow::bail!("--controller must be on|off (got '{other}')"),
+            };
+            load_cmd(LoadArgs {
+                model: args.get("model").to_string(),
+                strategy: args.get("strategy").to_string(),
+                nodes: args.get_usize("nodes")?,
+                family: BoardFamily::parse(args.get("board"))?,
+                arrival_kind: args.get("arrival").to_string(),
+                rate: args.get_f64("rate")?,
+                burst_mult: args.get_f64("burst")?,
+                controller,
+                horizon_ms: args.get_f64("horizon")?,
+                seed,
+            })
+        }
         "serve" => {
             // `--strategy all` is the simulate default; serving drives
             // one concrete plan, so fall back to scatter-gather
@@ -85,6 +124,7 @@ fn run() -> anyhow::Result<()> {
                 args.get_usize("nodes")?,
                 args.get_u64("input-hw")?,
                 args.get_usize("images")?,
+                seed,
             )
         }
         other => anyhow::bail!("unknown command '{other}' (try --help)"),
@@ -199,6 +239,7 @@ fn simulate_cmd(
     n: usize,
     family: BoardFamily,
     images: usize,
+    seed: u64,
 ) -> anyhow::Result<()> {
     let calib = Calibration::load_or_default(&artifacts_dir());
     let mut b = Bench::for_model(family, vta_for(family), calib, model, 0)?;
@@ -222,8 +263,15 @@ fn simulate_cmd(
         }
         return Ok(());
     }
+    // one plan, built once: the analytic figures and the loaded DES
+    // below price exactly the same schedule
     let s = Strategy::parse(strategy)?;
-    let r = b.cell(s, n)?;
+    let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta_for(family));
+    let (graph, cost) = b.graph_and_cost_mut();
+    let seg_costs = cost.seg_cost_table(graph)?;
+    let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+    let plan = build_plan(s, graph, n, lookup)?;
+    let r = simulate(&plan, &cluster, cost, graph, &SimConfig { images })?;
     println!("{s}:");
     println!("  {:.2} ms/image (steady state)", r.ms_per_image);
     println!("  makespan {:.1} ms, network {} bytes", r.makespan_ms, r.network_bytes);
@@ -231,6 +279,29 @@ fn simulate_cmd(
     for (i, u) in r.node_utilization.iter().enumerate() {
         println!("  node {i}: {:.0}% busy", u * 100.0);
     }
+    // loaded behavior: seeded Poisson DES at 70 % of the plan's capacity
+    let capacity = 1e3 / r.ms_per_image;
+    let options = [PlanOption {
+        plan,
+        capacity_img_per_sec: capacity,
+        latency_ms: r.latency_ms.mean(),
+    }];
+    let rate = 0.7 * capacity;
+    let cfg = DesConfig::new(
+        ArrivalProcess::Poisson { rate_per_sec: rate },
+        (images.max(64) as f64 / rate) * 1e3,
+        seed,
+    );
+    let des = run_des(&options, 0, &cluster, cost, graph, &cfg, None)?;
+    println!(
+        "  loaded (poisson {rate:.1} img/s, seed {seed}): {} of {} images, \
+         p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms",
+        des.completed,
+        des.offered,
+        des.latency_ms.p50(),
+        des.latency_ms.p95(),
+        des.latency_ms.p99(),
+    );
     Ok(())
 }
 
@@ -253,6 +324,7 @@ fn multi_cmd(
     images: usize,
     serve: bool,
     input_hw: u64,
+    seed: u64,
 ) -> anyhow::Result<()> {
     let tokens: Vec<&str> = models.split(',').filter(|s| !s.is_empty()).collect();
     anyhow::ensure!(tokens.len() >= 2, "`multi` wants ≥ 2 tenants (got '{models}')");
@@ -263,31 +335,33 @@ fn multi_cmd(
         .collect::<anyhow::Result<Vec<_>>>()?;
 
     if serve {
-        return multi_serve_cmd(requests, budget, input_hw, images);
+        return multi_serve_cmd(requests, budget, input_hw, images, seed);
     }
 
     let calib = Calibration::load_or_default(&artifacts_dir());
-    let out = simulate_tenants(family, vta_for(family), calib, budget, &requests)?;
+    let out = simulate_tenants(family, vta_for(family), calib, budget, &requests, seed)?;
     println!(
-        "multi-tenant simulation: {} tenants over {budget} {} nodes, {images} images each",
+        "multi-tenant simulation: {} tenants over {budget} {} nodes, {images} images each, seed {seed}",
         out.len(),
         family.as_str()
     );
     println!(
-        "  {:16} {:>5} {:>22} {:>12} {:>12} {:>12}",
-        "model", "nodes", "strategy", "ms/image", "img/s", "latency ms"
+        "  {:16} {:>5} {:>22} {:>12} {:>12} {:>12} {:>12}",
+        "model", "nodes", "strategy", "ms/image", "img/s", "latency ms", "p99 ms"
     );
     for t in &out {
         println!(
-            "  {:16} {:>5} {:>22} {:>12.3} {:>12.2} {:>12.3}",
+            "  {:16} {:>5} {:>22} {:>12.3} {:>12.2} {:>12.3} {:>12.3}",
             t.model,
             t.nodes,
             t.plan.strategy.to_string(),
             t.sim.ms_per_image,
             t.report.throughput_img_per_sec,
             t.report.mean_latency_ms,
+            t.report.p99_latency_ms,
         );
     }
+    println!("  (latency columns: seeded DES at 70% of each tenant's capacity)");
     Ok(())
 }
 
@@ -300,6 +374,7 @@ fn multi_serve_cmd(
     budget: usize,
     input_hw: u64,
     images: usize,
+    seed: u64,
 ) -> anyhow::Result<()> {
     use vta_cluster::coordinator::allocate_nodes;
     let graphs = requests
@@ -325,7 +400,7 @@ fn multi_serve_cmd(
         });
     }
     let mut coord = MultiCoordinator::start(artifacts_dir(), specs, budget, false)?;
-    let mut rng = Rng::new(7);
+    let mut rng = Rng::new(seed);
     let batches: Vec<(String, Vec<TensorData>)> = coord
         .tenants()
         .iter()
@@ -339,7 +414,7 @@ fn multi_serve_cmd(
             (t.to_string(), batch)
         })
         .collect();
-    println!("serving {} tenants concurrently ...", batches.len());
+    println!("serving {} tenants concurrently (input seed {seed}) ...", batches.len());
     let results = coord.run_batches(batches)?;
     for (tenant, _, r) in &results {
         println!(
@@ -356,6 +431,7 @@ fn serve_cmd(
     n: usize,
     input_hw: u64,
     images: usize,
+    seed: u64,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(
         matches!(strategy, Strategy::ScatterGather | Strategy::Pipeline),
@@ -365,7 +441,7 @@ fn serve_cmd(
     let plan = build_plan(strategy, &g, n, g.mac_cost_oracle())?;
     println!("{}", plan.describe());
     let coord = Coordinator::start(artifacts_dir(), &plan, input_hw)?;
-    let mut rng = Rng::new(7);
+    let mut rng = Rng::new(seed);
     let shape = coord.input_shape().to_vec();
     let elems: usize = shape.iter().product();
     let batch: Vec<TensorData> = (0..images)
@@ -385,5 +461,144 @@ fn serve_cmd(
     let l0 = outs[0].as_i32()?;
     let argmax = l0.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
     println!("first image: argmax class {argmax}, logit {}", l0[argmax]);
+    Ok(())
+}
+
+struct LoadArgs {
+    model: String,
+    strategy: String,
+    nodes: usize,
+    family: BoardFamily,
+    arrival_kind: String,
+    rate: f64,
+    burst_mult: f64,
+    controller: bool,
+    horizon_ms: f64,
+    seed: u64,
+}
+
+/// `load`: dynamic-load DES + online reconfiguration (DESIGN.md §10,
+/// EXPERIMENTS.md §E10). The four §II-C strategies form the candidate
+/// set; `--strategy` picks the plan active at t=0 (`all` → ai-core
+/// assignment, the paper's small-N worst case, so the controller has a
+/// mismatch worth fixing). `--rate 0` derives the base rate from the
+/// initial plan's capacity: 70 % for poisson/diurnal, 55 % for burst
+/// (the MMPP high phase then overloads it by `--burst` ×).
+fn load_cmd(a: LoadArgs) -> anyhow::Result<()> {
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let g = zoo::build(&a.model, 0)?;
+    let vta = vta_for(a.family);
+    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(a.family), calib);
+    let cluster = ClusterConfig::homogeneous(a.family, a.nodes).with_vta(vta);
+    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all())?;
+
+    let initial_strategy = if a.strategy.eq_ignore_ascii_case("all") {
+        Strategy::CoreAssign
+    } else {
+        Strategy::parse(&a.strategy)?
+    };
+    let initial = options
+        .iter()
+        .position(|o| o.plan.strategy == initial_strategy)
+        .expect("all strategies are candidates");
+    let cap0 = options[initial].capacity_img_per_sec;
+
+    let base_rate = if a.rate > 0.0 {
+        a.rate
+    } else if a.arrival_kind.eq_ignore_ascii_case("burst") {
+        0.55 * cap0
+    } else {
+        0.7 * cap0
+    };
+    let arrival = ArrivalProcess::parse(&a.arrival_kind, base_rate, a.burst_mult)?;
+
+    println!(
+        "load: {} on {}× {} nodes — {}, horizon {:.1} s, seed {}",
+        a.model,
+        a.nodes,
+        a.family.as_str(),
+        arrival.describe(),
+        a.horizon_ms / 1e3,
+        a.seed
+    );
+    println!("plan options (analytic steady state):");
+    for (i, o) in options.iter().enumerate() {
+        let mark = if i == initial { "←  initial" } else { "" };
+        println!(
+            "  [{i}] {:22} capacity {:8.1} img/s  unloaded latency {:8.3} ms  {mark}",
+            o.plan.strategy.to_string(),
+            o.capacity_img_per_sec,
+            o.latency_ms,
+        );
+    }
+
+    let cfg = DesConfig::new(arrival, a.horizon_ms, a.seed);
+    let mut controller_state = if a.controller {
+        Some(OnlineController::new(
+            ControllerConfig::default(),
+            ReconfigCost::for_family(a.family),
+        )?)
+    } else {
+        None
+    };
+    let r = run_des(
+        &options,
+        initial,
+        &cluster,
+        &mut cost,
+        &g,
+        &cfg,
+        controller_state.as_mut(),
+    )?;
+
+    println!(
+        "controller {}: offered {} images, completed {} ({:.1}%), throughput {:.1} img/s",
+        if a.controller { "on" } else { "off" },
+        r.offered,
+        r.completed,
+        if r.offered > 0 { r.completed as f64 / r.offered as f64 * 100.0 } else { 0.0 },
+        r.throughput_img_per_sec,
+    );
+    println!(
+        "latency: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  mean {:.3} ms",
+        r.latency_ms.p50(),
+        r.latency_ms.p95(),
+        r.latency_ms.p99(),
+        r.latency_ms.mean(),
+    );
+    if r.reconfigs.is_empty() {
+        println!("reconfigurations: none (downtime charged: 0 ms)");
+    } else {
+        println!(
+            "reconfigurations: {} (downtime charged: {:.1} ms total)",
+            r.reconfigs.len(),
+            r.downtime_ms
+        );
+        for e in &r.reconfigs {
+            println!(
+                "  at {:8.0} ms: {} → {} ({:.1} ms downtime) — {}",
+                e.at_ms, e.from_strategy, e.to_strategy, e.downtime_ms, e.reason
+            );
+        }
+    }
+    let util: Vec<String> =
+        r.node_utilization.iter().map(|u| format!("{:.0}%", u * 100.0)).collect();
+    println!("node utilization: {}", util.join(" "));
+    println!(
+        "backlog: max {} images in flight, {} still queued at horizon",
+        r.max_backlog, r.backlog_at_end
+    );
+    // queue-depth timeline, coarsened to ≤ 20 rows
+    let step = r.queue_timeline.len().div_ceil(20).max(1);
+    let peak = r.queue_timeline.iter().map(|&(_, d)| d).max().unwrap_or(0).max(1);
+    println!("queue depth (images in flight over time):");
+    for (t, d) in r.queue_timeline.iter().step_by(step) {
+        let bar = "#".repeat(d * 50 / peak);
+        println!("  {t:8.0} ms {d:6} {bar}");
+    }
+    println!(
+        "final plan: {} — rerun with the same --seed for a bit-identical result",
+        options[r.final_plan].plan.strategy
+    );
     Ok(())
 }

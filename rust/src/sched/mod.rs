@@ -5,9 +5,18 @@
 //!                    mode, with validation invariants
 //! * [`strategies`] — constructors: Scatter-Gather, AI Core Assignment,
 //!                    Pipeline Scheduling, Fused Schedule
+//! * [`online`]     — online reconfiguration controller: watches load
+//!                    signals from the DES and switches plans when the
+//!                    drain-time break-even beats the reconfiguration
+//!                    downtime
 
+pub mod online;
 pub mod plan;
 pub mod strategies;
 
+pub use online::{
+    plan_options, validate_options, ControllerConfig, Decision, Observation,
+    OnlineController, PlanOption,
+};
 pub use plan::{ExecutionPlan, SplitMode, StagePlan, Strategy};
 pub use strategies::{build_plan, core_assign, fused, pipeline, scatter_gather};

@@ -1,0 +1,402 @@
+//! Online reconfiguration controller (DESIGN.md §10).
+//!
+//! The paper's cluster is *reconfigurable*: when the offered load
+//! changes, the operator can "manually allocate greater resources to
+//! the most computationally intensive layers" by reprogramming the
+//! boards with a different schedule. This module automates that call:
+//! the controller watches the load signals the discrete-event simulator
+//! ([`crate::sim::des`]) emits at every control epoch, compares the
+//! active [`ExecutionPlan`] against the other pre-planned candidates,
+//! and decides *when a switch is worth its downtime*.
+//!
+//! The decision is a drain-time break-even, not a threshold race.
+//! With smoothed arrival rate λ̂ (img/s), backlog B (images), current
+//! capacity μ_cur, best candidate capacity μ_best and reconfiguration
+//! downtime D (s, during which λ̂·D more images arrive):
+//!
+//! ```text
+//!   T_stay   = B / (μ_cur − λ̂)                    (∞ if λ̂ ≥ μ_cur)
+//!   T_switch = D + (B + λ̂·D) / (μ_best − λ̂)      (∞ if λ̂ ≥ μ_best)
+//!   switch  ⇔  T_switch < T_stay
+//! ```
+//!
+//! plus hysteresis (a minimum dwell between switches and a minimum
+//! capacity gain) so the controller cannot flap. Under sustained low
+//! load it instead picks the lowest-*latency* candidate with enough
+//! headroom — the paper's latency/throughput trade made continuous.
+
+use crate::config::{ClusterConfig, ReconfigCost};
+use crate::graph::Graph;
+use crate::sched::{build_plan, ExecutionPlan, Strategy};
+use crate::sim::cluster::simulate;
+use crate::sim::{CostModel, SimConfig};
+
+/// One pre-planned candidate the controller can activate: the plan plus
+/// its analytically priced steady-state capacity and unloaded latency
+/// (from [`crate::sim::cluster`] — the same model the DES is
+/// cross-validated against).
+#[derive(Debug, Clone)]
+pub struct PlanOption {
+    pub plan: ExecutionPlan,
+    /// Steady-state service capacity, images/s (= 1000 / ms_per_image).
+    pub capacity_img_per_sec: f64,
+    /// Unloaded single-image latency, ms.
+    pub latency_ms: f64,
+}
+
+/// Build and price one candidate per strategy for `g` over `cluster`.
+/// Every returned plan has passed [`ExecutionPlan::validate_for`].
+pub fn plan_options(
+    g: &Graph,
+    cluster: &ClusterConfig,
+    cost: &mut CostModel,
+    strategies: &[Strategy],
+) -> anyhow::Result<Vec<PlanOption>> {
+    anyhow::ensure!(!strategies.is_empty(), "no candidate strategies");
+    let n = cluster.num_nodes();
+    let seg_costs = cost.seg_cost_table(g)?;
+    let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+    let mut out = Vec::with_capacity(strategies.len());
+    for &s in strategies {
+        let plan = build_plan(s, g, n, lookup)?;
+        let sim = simulate(&plan, cluster, cost, g, &SimConfig { images: 16 })?;
+        out.push(PlanOption {
+            plan,
+            capacity_img_per_sec: 1e3 / sim.ms_per_image,
+            latency_ms: sim.latency_ms.mean(),
+        });
+    }
+    Ok(out)
+}
+
+/// Check a candidate set against the graph and cluster it will serve —
+/// the guard the DES runs before any option can ever be activated.
+pub fn validate_options(
+    options: &[PlanOption],
+    g: &Graph,
+    n_nodes: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(!options.is_empty(), "no plan options");
+    for (i, o) in options.iter().enumerate() {
+        o.plan
+            .validate_for(g)
+            .map_err(|e| anyhow::anyhow!("option {i} ({}): {e}", o.plan.strategy))?;
+        anyhow::ensure!(
+            o.plan.n_nodes == n_nodes,
+            "option {i} plans {} nodes, cluster has {n_nodes}",
+            o.plan.n_nodes
+        );
+        anyhow::ensure!(
+            o.capacity_img_per_sec.is_finite() && o.capacity_img_per_sec > 0.0,
+            "option {i} has non-positive capacity"
+        );
+    }
+    Ok(())
+}
+
+/// Controller policy knobs (hysteresis + thresholds). The consultation
+/// cadence itself is the simulator's (`DesConfig::sample_every_ms`).
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// λ̂/μ_cur above which the upgrade path is considered.
+    pub overload_util: f64,
+    /// λ̂/μ_cur below which the latency-oriented downshift is considered.
+    pub underload_util: f64,
+    /// Backlog (expressed as ms of work at current capacity) that also
+    /// triggers the upgrade path even if λ̂ looks acceptable.
+    pub backlog_high_ms: f64,
+    /// Downshift only when the backlog is at most this much work (ms).
+    pub backlog_low_ms: f64,
+    /// Required capacity gain for an upgrade (μ_best ≥ gain · μ_cur).
+    pub min_capacity_gain: f64,
+    /// Required latency gain for a downshift (L_best ≤ gain · L_cur).
+    pub max_latency_ratio: f64,
+    /// Minimum time between reconfigurations, ms (no flapping).
+    pub dwell_ms: f64,
+    /// EMA weight of the newest window's arrival rate, in (0, 1].
+    pub rate_ema_alpha: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            overload_util: 0.85,
+            underload_util: 0.45,
+            backlog_high_ms: 250.0,
+            backlog_low_ms: 50.0,
+            min_capacity_gain: 1.1,
+            max_latency_ratio: 0.9,
+            dwell_ms: 1000.0,
+            rate_ema_alpha: 0.5,
+        }
+    }
+}
+
+impl ControllerConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.underload_util < self.overload_util,
+            "underload_util must be below overload_util"
+        );
+        anyhow::ensure!(self.min_capacity_gain >= 1.0, "min_capacity_gain < 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.max_latency_ratio),
+            "max_latency_ratio out of range"
+        );
+        anyhow::ensure!(self.dwell_ms >= 0.0, "negative dwell");
+        anyhow::ensure!(
+            self.rate_ema_alpha > 0.0 && self.rate_ema_alpha <= 1.0,
+            "rate_ema_alpha out of range"
+        );
+        Ok(())
+    }
+}
+
+/// One load sample the DES hands the controller at a control epoch.
+/// Backlog + smoothed arrivals are the policy inputs; service rate is
+/// taken from the candidates' analytic capacities, not measured.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    pub now_ms: f64,
+    /// Width of the window the arrival count covers, ms.
+    pub window_ms: f64,
+    pub arrivals_in_window: u64,
+    /// Images admitted but not yet completed (cluster-wide backlog).
+    pub backlog: usize,
+    /// Index of the currently active option.
+    pub active: usize,
+}
+
+/// A reconfiguration the controller asks the simulator to execute.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// Index of the option to activate.
+    pub to: usize,
+    /// Downtime to charge every node, ms.
+    pub downtime_ms: f64,
+    /// Human-readable rationale (shows up in reports).
+    pub reason: String,
+}
+
+/// The reconfiguration controller. Stateful: smoothed arrival rate and
+/// last-switch time live across [`OnlineController::decide`] calls.
+#[derive(Debug, Clone)]
+pub struct OnlineController {
+    pub cfg: ControllerConfig,
+    pub reconfig: ReconfigCost,
+    lambda_ema: Option<f64>,
+    last_switch_ms: f64,
+}
+
+impl OnlineController {
+    pub fn new(cfg: ControllerConfig, reconfig: ReconfigCost) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        reconfig.validate()?;
+        Ok(OnlineController { cfg, reconfig, lambda_ema: None, last_switch_ms: f64::NEG_INFINITY })
+    }
+
+    /// Smoothed arrival-rate estimate (img/s), if any window was seen.
+    pub fn lambda_hat(&self) -> Option<f64> {
+        self.lambda_ema
+    }
+
+    /// Consult the policy with a fresh observation. `None` = keep the
+    /// active plan. A `Some` decision has already been charged against
+    /// the dwell clock; the caller applies the downtime and the switch.
+    pub fn decide(&mut self, options: &[PlanOption], obs: &Observation) -> Option<Decision> {
+        let window_s = obs.window_ms / 1e3;
+        let lambda_now = obs.arrivals_in_window as f64 / window_s.max(1e-9);
+        let alpha = self.cfg.rate_ema_alpha;
+        let lam = match self.lambda_ema {
+            None => lambda_now,
+            Some(prev) => (1.0 - alpha) * prev + alpha * lambda_now,
+        };
+        self.lambda_ema = Some(lam);
+
+        if obs.now_ms - self.last_switch_ms < self.cfg.dwell_ms {
+            return None;
+        }
+        let cur = &options[obs.active];
+        let mu_cur = cur.capacity_img_per_sec;
+        let backlog_ms = obs.backlog as f64 / mu_cur * 1e3;
+
+        let overloaded =
+            lam > self.cfg.overload_util * mu_cur || backlog_ms > self.cfg.backlog_high_ms;
+        if overloaded {
+            let (best, opt) = options
+                .iter()
+                .enumerate()
+                .max_by(|a, b| {
+                    a.1.capacity_img_per_sec.partial_cmp(&b.1.capacity_img_per_sec).unwrap()
+                })?;
+            let mu_best = opt.capacity_img_per_sec;
+            if best == obs.active || mu_best < self.cfg.min_capacity_gain * mu_cur {
+                return None;
+            }
+            // drain-time break-even (see module docs)
+            let d = self.reconfig.downtime_ms() / 1e3;
+            let b = obs.backlog as f64;
+            let t_stay =
+                if mu_cur > lam { b / (mu_cur - lam) } else { f64::INFINITY };
+            let t_switch = if mu_best > lam {
+                d + (b + lam * d) / (mu_best - lam)
+            } else {
+                f64::INFINITY
+            };
+            // both saturated: the faster drain still wins in the limit
+            let worth = t_switch < t_stay
+                || (t_stay.is_infinite() && t_switch.is_infinite() && mu_best > mu_cur);
+            if !worth {
+                return None;
+            }
+            self.last_switch_ms = obs.now_ms;
+            return Some(Decision {
+                to: best,
+                downtime_ms: self.reconfig.downtime_ms(),
+                reason: format!(
+                    "overload: λ̂ {lam:.1} img/s vs μ {mu_cur:.1}, backlog {} → {} (μ {mu_best:.1})",
+                    obs.backlog, opt.plan.strategy
+                ),
+            });
+        }
+
+        // latency-oriented downshift under sustained low load
+        if lam < self.cfg.underload_util * mu_cur && backlog_ms <= self.cfg.backlog_low_ms {
+            // lowest-latency candidate that still has capacity headroom
+            let headroom = lam / self.cfg.underload_util.max(1e-9);
+            let best = options
+                .iter()
+                .enumerate()
+                .filter(|(_, o)| o.capacity_img_per_sec >= headroom)
+                .min_by(|a, b| a.1.latency_ms.partial_cmp(&b.1.latency_ms).unwrap())?;
+            if best.0 != obs.active
+                && best.1.latency_ms <= self.cfg.max_latency_ratio * cur.latency_ms
+            {
+                self.last_switch_ms = obs.now_ms;
+                return Some(Decision {
+                    to: best.0,
+                    downtime_ms: self.reconfig.downtime_ms(),
+                    reason: format!(
+                        "underload: λ̂ {lam:.1} img/s vs μ {mu_cur:.1} → {} (latency {:.2} ms vs {:.2})",
+                        best.1.plan.strategy, best.1.latency_ms, cur.latency_ms
+                    ),
+                });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::strategies::scatter_gather;
+
+    /// Fabricate a candidate set with controlled capacities/latencies
+    /// (plans are real so `validate_options` also works on them).
+    fn options(specs: &[(f64, f64)]) -> (Graph, Vec<PlanOption>) {
+        let g = crate::graph::zoo::build("lenet5", 0).unwrap();
+        let opts = specs
+            .iter()
+            .map(|&(cap, lat)| PlanOption {
+                plan: scatter_gather(&g, 1).unwrap(),
+                capacity_img_per_sec: cap,
+                latency_ms: lat,
+            })
+            .collect();
+        (g, opts)
+    }
+
+    fn obs(now_ms: f64, arrivals: u64, backlog: usize, active: usize) -> Observation {
+        Observation { now_ms, window_ms: 100.0, arrivals_in_window: arrivals, backlog, active }
+    }
+
+    fn controller() -> OnlineController {
+        OnlineController::new(
+            ControllerConfig { rate_ema_alpha: 1.0, ..Default::default() },
+            ReconfigCost::zynq7020(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn overload_switches_to_highest_capacity() {
+        // active 0: 50 img/s; option 1: 200 img/s. 10 arrivals / 100 ms
+        // = 100 img/s offered → overloaded, backlog worth switching.
+        let (_, opts) = options(&[(50.0, 5.0), (200.0, 8.0)]);
+        let mut c = controller();
+        let d = c.decide(&opts, &obs(100.0, 10, 40, 0)).expect("should switch");
+        assert_eq!(d.to, 1);
+        assert!(d.downtime_ms > 0.0);
+        assert!(d.reason.contains("overload"), "{}", d.reason);
+    }
+
+    #[test]
+    fn dwell_prevents_flapping() {
+        let (_, opts) = options(&[(50.0, 5.0), (200.0, 8.0)]);
+        let mut c = controller();
+        assert!(c.decide(&opts, &obs(100.0, 10, 40, 0)).is_some());
+        // immediately after, even with the same overload signal: hold
+        assert!(c.decide(&opts, &obs(200.0, 10, 60, 1)).is_none());
+    }
+
+    #[test]
+    fn no_switch_when_active_is_best() {
+        let (_, opts) = options(&[(200.0, 8.0), (50.0, 5.0)]);
+        let mut c = controller();
+        assert!(c.decide(&opts, &obs(100.0, 30, 100, 0)).is_none());
+    }
+
+    #[test]
+    fn no_switch_when_gain_below_threshold() {
+        let (_, opts) = options(&[(100.0, 5.0), (105.0, 5.0)]);
+        let mut c = controller();
+        assert!(c.decide(&opts, &obs(100.0, 20, 100, 0)).is_none());
+    }
+
+    #[test]
+    fn underload_downshifts_to_low_latency() {
+        // active 0: fast but high latency; option 1: slower, low latency,
+        // still enough headroom for 10 img/s offered.
+        let (_, opts) = options(&[(500.0, 20.0), (100.0, 4.0)]);
+        let mut c = controller();
+        let d = c.decide(&opts, &obs(100.0, 1, 0, 0)).expect("should downshift");
+        assert_eq!(d.to, 1);
+        assert!(d.reason.contains("underload"), "{}", d.reason);
+    }
+
+    #[test]
+    fn moderate_load_holds_steady() {
+        // 60 img/s offered on a 100 img/s plan: neither over nor under.
+        let (_, opts) = options(&[(100.0, 5.0), (300.0, 9.0), (80.0, 3.0)]);
+        let mut c = controller();
+        assert!(c.decide(&opts, &obs(100.0, 6, 2, 0)).is_none());
+    }
+
+    #[test]
+    fn validate_options_rejects_foreign_plan() {
+        let (g, opts) = options(&[(100.0, 5.0)]);
+        validate_options(&opts, &g, 1).unwrap();
+        let other = crate::graph::zoo::build("mlp", 0).unwrap();
+        assert!(validate_options(&opts, &other, 1).is_err());
+        assert!(validate_options(&opts, &g, 2).is_err());
+    }
+
+    #[test]
+    fn plan_options_prices_all_strategies() {
+        use crate::config::{BoardProfile, Calibration, VtaConfig};
+        let g = crate::graph::zoo::build("lenet5", 0).unwrap();
+        let cluster = crate::config::ClusterConfig::zynq_stack(3);
+        let mut cost = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration::default(),
+        );
+        let opts = plan_options(&g, &cluster, &mut cost, &Strategy::all()).unwrap();
+        assert_eq!(opts.len(), 4);
+        validate_options(&opts, &g, 3).unwrap();
+        for o in &opts {
+            assert!(o.capacity_img_per_sec > 0.0 && o.latency_ms > 0.0);
+        }
+    }
+}

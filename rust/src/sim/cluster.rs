@@ -69,7 +69,7 @@ struct Booker<'a> {
     network_bytes: u64,
 }
 
-impl<'a> Booker<'a> {
+impl Booker<'_> {
     fn transfer(&mut self, src: Endpoint, dst: Endpoint, bytes: u64, ready: Nanos) -> Nanos {
         if src == dst {
             return ready;
@@ -201,6 +201,55 @@ fn lcm(a: usize, b: usize) -> usize {
     a / gcd(a, b) * b
 }
 
+/// Per-stage service time (ns) of `plan` on the calibrated cost model:
+/// the stage's segment computes at its split factor plus one driver
+/// launch. Shared by the steady-state model and the discrete-event
+/// simulator ([`crate::sim::des`]) so the two cost bases cannot drift.
+pub fn stage_service_times(
+    plan: &ExecutionPlan,
+    cost: &mut CostModel,
+    g: &Graph,
+) -> anyhow::Result<Vec<Nanos>> {
+    let driver = cost.driver_overhead_ns();
+    let mut out = Vec::with_capacity(plan.stages.len());
+    for st in &plan.stages {
+        let split = match st.split {
+            SplitMode::Spatial => st.replicas.len() as u64,
+            SplitMode::DataParallel => 1,
+        };
+        let mut t = 0;
+        for seg in &st.segments {
+            t += cost.segment_time_ns(g, seg, split)?;
+        }
+        out.push(t + driver);
+    }
+    Ok(out)
+}
+
+/// Activation bytes entering each stage of `plan`, plus the bytes
+/// leaving the last stage (the logits gathered back to the master).
+pub fn stage_io_bytes(plan: &ExecutionPlan, g: &Graph) -> anyhow::Result<(Vec<u64>, u64)> {
+    let atoms = atomic_segments(g);
+    let seg_bytes: HashMap<&str, (u64, u64)> = atoms
+        .iter()
+        .map(|a| (a.labels[0].as_str(), (a.in_bytes, a.out_bytes)))
+        .collect();
+    let lookup = |label: &str| {
+        seg_bytes
+            .get(label)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("segment '{label}' not in graph '{}'", g.model))
+    };
+    let mut ins = Vec::with_capacity(plan.stages.len());
+    for st in &plan.stages {
+        let first = st.segments.first().expect("validated plan stage has segments");
+        ins.push(lookup(first)?.0);
+    }
+    let last = plan.stages.last().expect("validated plan has stages");
+    let out = lookup(last.segments.last().expect("stage has segments"))?.1;
+    Ok((ins, out))
+}
+
 /// Simulate a plan over the cluster; `cost` must be built from the same
 /// board/VTA config as `cluster`, and `plan` must have been built for
 /// `g` (any zoo model — the simulator is model-agnostic).
@@ -218,32 +267,15 @@ pub fn simulate(
         plan.n_nodes,
         cluster.num_nodes()
     );
-    let atoms = atomic_segments(g);
-    let seg_bytes: HashMap<&str, (u64, u64)> = atoms
-        .iter()
-        .map(|a| (a.labels[0].as_str(), (a.in_bytes, a.out_bytes)))
-        .collect();
     let mpi =
         MpiModel::from_calibration(&cost.model.calib, cluster.switch.forward_latency_ns);
     let link = LinkModel::new(cluster.switch.port_bits_per_sec);
     let serial_frac = cost.model.calib.ps_serial_frac;
-    let driver = cost.driver_overhead_ns();
 
-    // stage compute times (per replica slice for spatial stages)
-    let mut stage_time: Vec<Nanos> = Vec::with_capacity(plan.stages.len());
-    for st in &plan.stages {
-        let split = match st.split {
-            SplitMode::Spatial => st.replicas.len() as u64,
-            SplitMode::DataParallel => 1,
-        };
-        let mut t = 0;
-        for seg in &st.segments {
-            t += cost.segment_time_ns(g, seg, split)?;
-        }
-        stage_time.push(t + driver);
-    }
-    let in_bytes_of = |st: &StagePlan| seg_bytes[st.segments.first().unwrap().as_str()].0;
-    let out_bytes_of = |st: &StagePlan| seg_bytes[st.segments.last().unwrap().as_str()].1;
+    // stage compute times (per replica slice for spatial stages) and
+    // per-stage activation sizes — shared with the DES (`sim::des`)
+    let stage_time = stage_service_times(plan, cost, g)?;
+    let (stage_in_bytes, final_out_bytes) = stage_io_bytes(plan, g)?;
 
     // ---- steady-state demands (per image) ----------------------------
     let n = cluster.num_nodes();
@@ -269,7 +301,7 @@ pub fn simulate(
         }
         // transfer demand into this stage
         let prev = if si == 0 { None } else { Some(&plan.stages[si - 1]) };
-        for (src, dst, bytes, frac) in stage_transfers(prev, st, in_bytes_of(st)) {
+        for (src, dst, bytes, frac) in stage_transfers(prev, st, stage_in_bytes[si]) {
             let wire = link.serialize_ns(bytes) as f64 * frac;
             *egress.entry(src).or_default() += wire;
             *ingress.entry(dst).or_default() += wire;
@@ -295,7 +327,7 @@ pub fn simulate(
     // gather logits to master
     {
         let last = plan.stages.last().unwrap();
-        let out_bytes = out_bytes_of(last);
+        let out_bytes = final_out_bytes;
         let k = last.replicas.len() as u64;
         let (bytes, frac) = match last.split {
             SplitMode::Spatial => ((out_bytes / k).max(1), 1.0),
@@ -338,7 +370,7 @@ pub fn simulate(
         };
         let kp = holders.len();
         let kc = consumers.len();
-        let in_bytes = in_bytes_of(st);
+        let in_bytes = stage_in_bytes[si];
         let mut next = Vec::with_capacity(kc);
         for (ci, &cnode) in consumers.iter().enumerate() {
             let p_lo = ci * kp / kc;
@@ -354,8 +386,7 @@ pub fn simulate(
         }
         holders = next;
     }
-    let out_bytes = out_bytes_of(plan.stages.last().unwrap());
-    let share = (out_bytes / holders.len() as u64).max(1);
+    let share = (final_out_bytes / holders.len() as u64).max(1);
     let mut latency_ns = 0;
     for &(src, ready) in &holders {
         latency_ns = latency_ns.max(booker.transfer(src, Endpoint::Master, share, ready));

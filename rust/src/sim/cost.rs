@@ -139,6 +139,21 @@ impl CostModel {
         Ok(t)
     }
 
+    /// Per-segment planning cost table: single-split wall time (ns, as
+    /// f64) for every segment of `g`, in graph order — the oracle the
+    /// §II-C planners consume. One shared implementation so the plans
+    /// the controller candidates are built from and the plans tenants
+    /// are scheduled with can never use divergent pricing.
+    pub fn seg_cost_table(&mut self, g: &Graph) -> anyhow::Result<Vec<(String, f64)>> {
+        g.segment_order()
+            .into_iter()
+            .map(|l| {
+                let t = self.segment_time_ns(g, &l, 1)?;
+                Ok((l, t as f64))
+            })
+            .collect()
+    }
+
     /// Whole-graph single-node compute time (no driver overhead).
     pub fn graph_time_ns(&mut self, g: &Graph) -> anyhow::Result<Nanos> {
         let mut total = 0;

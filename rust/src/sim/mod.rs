@@ -6,9 +6,15 @@
 //! * [`cluster`] — resource-booking simulator: nodes (blocking PS+PL),
 //!                 switch ports, MPI transfers; streams M images through
 //!                 a plan and reports steady-state time per image
+//! * [`des`]     — deterministic discrete-event load simulator: open-loop
+//!                 arrival processes, per-node FIFO queues, tail-latency
+//!                 and queue-depth reporting, and mid-run plan switches
+//!                 with charged reconfiguration downtime
 
 pub mod cluster;
 pub mod cost;
+pub mod des;
 
-pub use cluster::{simulate, SimConfig, SimResult};
+pub use cluster::{simulate, stage_io_bytes, stage_service_times, SimConfig, SimResult};
 pub use cost::CostModel;
+pub use des::{run_des, ArrivalProcess, DesConfig, DesResult, ReconfigEvent};

@@ -58,34 +58,45 @@ impl Summary {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Percentile via linear interpolation on sorted samples, `q` in [0,100].
-    pub fn percentile(&self, q: f64) -> f64 {
-        assert!(!self.samples.is_empty(), "percentile of empty summary");
+    /// Percentile via linear interpolation on sorted samples, `q` in
+    /// [0,100]. `None` when no samples were recorded — callers that can
+    /// legitimately see an empty summary (e.g. a zero-completion serving
+    /// run) must decide their own fallback instead of crashing.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
         assert!((0.0..=100.0).contains(&q));
+        if self.samples.is_empty() {
+            return None;
+        }
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         if s.len() == 1 {
-            return s[0];
+            return Some(s[0]);
         }
         let rank = q / 100.0 * (s.len() as f64 - 1.0);
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
         let frac = rank - lo as f64;
-        s[lo] + (s[hi] - s[lo]) * frac
+        Some(s[lo] + (s[hi] - s[lo]) * frac)
     }
 
+    /// Median; NaN on an empty summary (see [`Summary::percentile`]).
     pub fn p50(&self) -> f64 {
-        self.percentile(50.0)
+        self.percentile(50.0).unwrap_or(f64::NAN)
     }
+    /// 95th percentile; NaN on an empty summary.
     pub fn p95(&self) -> f64 {
-        self.percentile(95.0)
+        self.percentile(95.0).unwrap_or(f64::NAN)
     }
+    /// 99th percentile; NaN on an empty summary.
     pub fn p99(&self) -> f64 {
-        self.percentile(99.0)
+        self.percentile(99.0).unwrap_or(f64::NAN)
     }
 
     /// `mean ± std (n=..)` single-line rendering with a unit suffix.
     pub fn display(&self, unit: &str) -> String {
+        if self.is_empty() {
+            return format!("no samples {unit} (n=0)");
+        }
         format!(
             "{:.3} ± {:.3} {unit} (n={}, p50={:.3}, p99={:.3})",
             self.mean(),
@@ -128,9 +139,19 @@ mod tests {
     fn percentiles() {
         let s = Summary::from_samples((1..=100).map(|v| v as f64));
         assert!((s.p50() - 50.5).abs() < 1e-9);
-        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
-        assert!((s.percentile(100.0) - 100.0).abs() < 1e-12);
+        assert!((s.percentile(0.0).unwrap() - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0).unwrap() - 100.0).abs() < 1e-12);
         assert!(s.p99() > 98.0);
+    }
+
+    #[test]
+    fn empty_summary_reports_cleanly() {
+        let s = Summary::new();
+        assert_eq!(s.percentile(99.0), None);
+        assert!(s.p50().is_nan() && s.p99().is_nan());
+        assert_eq!(s.mean(), 0.0);
+        // display must not panic and must flag the empty sample set
+        assert!(s.display("ms").contains("n=0"));
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Integration tests for the dynamic-load subsystem (`sim::des` +
+//! `sched::online`): the burst scenario of EXPERIMENTS.md §E10, run
+//! determinism, and the plan-activation safety invariant.
+
+use vta_cluster::config::{
+    BoardFamily, BoardProfile, Calibration, ClusterConfig, ReconfigCost, VtaConfig,
+};
+use vta_cluster::graph::zoo;
+use vta_cluster::sched::online::{plan_options, validate_options};
+use vta_cluster::sched::{ControllerConfig, OnlineController, Strategy};
+use vta_cluster::sim::{run_des, ArrivalProcess, CostModel, DesConfig};
+
+fn setup(model: &str, n: usize) -> (vta_cluster::graph::Graph, ClusterConfig, CostModel) {
+    let g = zoo::build(model, 0).unwrap();
+    let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+    let cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::default(),
+    );
+    (g, cluster, cost)
+}
+
+fn controller() -> OnlineController {
+    OnlineController::new(ControllerConfig::default(), ReconfigCost::zynq7020()).unwrap()
+}
+
+/// The E10 burst scenario and the PR's acceptance bar: starting from the
+/// paper's small-N worst case (AI core assignment at N=4), a bursty
+/// stream with `--controller on` must beat `--controller off` on p99,
+/// with the reconfiguration downtime visibly charged.
+#[test]
+fn burst_controller_on_beats_off_on_p99() {
+    let (g, cluster, mut cost) = setup("resnet18", 4);
+    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all()).unwrap();
+    let initial = options
+        .iter()
+        .position(|o| o.plan.strategy == Strategy::CoreAssign)
+        .unwrap();
+    let cap0 = options[initial].capacity_img_per_sec;
+    // sanity: the scenario only makes sense if ai-core is not the best
+    let best_cap = options
+        .iter()
+        .map(|o| o.capacity_img_per_sec)
+        .fold(0.0f64, f64::max);
+    assert!(
+        best_cap > 1.2 * cap0,
+        "ai-core @4 should be clearly suboptimal ({best_cap} vs {cap0})"
+    );
+
+    // the exact stream `vtacluster load --arrival burst --rate 0` runs:
+    // base 0.55×cap, burst 4× base (= 2.2×cap), parse's dwell constants
+    let arrival = ArrivalProcess::parse("burst", 0.55 * cap0, 4.0).unwrap();
+    let cfg = DesConfig::new(arrival, 20_000.0, 7);
+
+    let off = run_des(&options, initial, &cluster, &mut cost, &g, &cfg, None).unwrap();
+    let mut ctrl = controller();
+    let on =
+        run_des(&options, initial, &cluster, &mut cost, &g, &cfg, Some(&mut ctrl)).unwrap();
+
+    // same seed → identical offered load on both runs
+    assert_eq!(off.offered, on.offered);
+    assert!(off.completed > 100, "off run completed only {}", off.completed);
+    assert!(on.completed > 100, "on run completed only {}", on.completed);
+
+    // the controller must have acted and its downtime must be charged
+    assert!(!on.reconfigs.is_empty(), "controller never reconfigured");
+    assert!(on.downtime_ms > 0.0);
+    assert_eq!(
+        on.downtime_ms,
+        on.reconfigs.iter().map(|e| e.downtime_ms).sum::<f64>()
+    );
+    assert!(off.reconfigs.is_empty() && off.downtime_ms == 0.0);
+
+    // …and the tail must improve
+    let p99_off = off.latency_ms.percentile(99.0).unwrap();
+    let p99_on = on.latency_ms.percentile(99.0).unwrap();
+    assert!(
+        p99_on < p99_off,
+        "controller did not improve p99: on {p99_on:.1} ms vs off {p99_off:.1} ms"
+    );
+}
+
+#[test]
+fn burst_scenario_is_deterministic_across_runs() {
+    let (g, cluster, mut cost) = setup("resnet18", 4);
+    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all()).unwrap();
+    let initial = options
+        .iter()
+        .position(|o| o.plan.strategy == Strategy::CoreAssign)
+        .unwrap();
+    let cap0 = options[initial].capacity_img_per_sec;
+    let cfg = DesConfig::new(
+        ArrivalProcess::parse("burst", 0.55 * cap0, 4.0).unwrap(),
+        12_000.0,
+        7,
+    );
+    let run = |cost: &mut CostModel| {
+        let mut ctrl = controller();
+        run_des(&options, initial, &cluster, cost, &g, &cfg, Some(&mut ctrl)).unwrap()
+    };
+    let a = run(&mut cost);
+    let b = run(&mut cost);
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.network_bytes, b.network_bytes);
+    assert_eq!(a.latency_ms.p50(), b.latency_ms.p50());
+    assert_eq!(a.latency_ms.p99(), b.latency_ms.p99());
+    assert_eq!(a.reconfigs.len(), b.reconfigs.len());
+    for (x, y) in a.reconfigs.iter().zip(&b.reconfigs) {
+        assert_eq!(x.at_ms, y.at_ms);
+        assert_eq!(x.to, y.to);
+    }
+    assert_eq!(a.final_plan, b.final_plan);
+}
+
+/// The safety invariant: a plan that fails `validate_for` can never
+/// enter the candidate set, let alone be activated mid-run.
+#[test]
+fn controller_never_activates_invalid_plan() {
+    let (g, cluster, mut cost) = setup("lenet5", 3);
+    let mut options = plan_options(&g, &cluster, &mut cost, &Strategy::all()).unwrap();
+
+    // corrupt one candidate: claim it schedules a different model
+    options[1].plan.model = "resnet18".to_string();
+    assert!(validate_options(&options, &g, 3).is_err());
+    let cfg = DesConfig::new(ArrivalProcess::Poisson { rate_per_sec: 50.0 }, 2000.0, 7);
+    let mut ctrl = controller();
+    // run_des re-validates the whole candidate set before the first
+    // event — the corrupted option is rejected up front
+    assert!(
+        run_des(&options, 0, &cluster, &mut cost, &g, &cfg, Some(&mut ctrl)).is_err(),
+        "DES accepted a candidate set with an invalid plan"
+    );
+
+    // with a clean candidate set, every executed reconfiguration must
+    // point at a plan that (still) validates for the graph
+    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all()).unwrap();
+    let initial = options
+        .iter()
+        .position(|o| o.plan.strategy == Strategy::CoreAssign)
+        .unwrap();
+    let cap0 = options[initial].capacity_img_per_sec;
+    let cfg = DesConfig::new(
+        ArrivalProcess::Burst {
+            base_per_sec: 0.5 * cap0,
+            burst_per_sec: 2.5 * cap0,
+            mean_on_ms: 600.0,
+            mean_off_ms: 900.0,
+        },
+        8_000.0,
+        11,
+    );
+    let mut ctrl = controller();
+    let r =
+        run_des(&options, initial, &cluster, &mut cost, &g, &cfg, Some(&mut ctrl)).unwrap();
+    for e in &r.reconfigs {
+        assert!(e.to < options.len());
+        options[e.to].plan.validate_for(&g).unwrap();
+    }
+    assert!(r.final_plan < options.len());
+}
+
+/// `PlanOption` sets built by hand go through the same gate.
+#[test]
+fn option_for_wrong_cluster_size_is_rejected() {
+    let (g, cluster, mut cost) = setup("mlp", 2);
+    let opts = plan_options(&g, &cluster, &mut cost, &[Strategy::ScatterGather]).unwrap();
+    // run the 2-node plan against a 3-node cluster: size mismatch
+    let bigger = ClusterConfig::homogeneous(BoardFamily::Zynq7000, 3);
+    let cfg = DesConfig::new(ArrivalProcess::Poisson { rate_per_sec: 20.0 }, 1000.0, 3);
+    assert!(run_des(&opts, 0, &bigger, &mut cost, &g, &cfg, None).is_err());
+}

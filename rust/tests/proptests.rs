@@ -3,11 +3,13 @@
 //! never violate the system's core invariants.
 
 use vta_cluster::compiler::{candidate_tilings, lower_gemm, GemmShape};
-use vta_cluster::config::{BoardProfile, Calibration, ClusterConfig, VtaConfig};
+use vta_cluster::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig, VtaConfig};
 use vta_cluster::graph::resnet::build_resnet18;
+use vta_cluster::graph::zoo;
 use vta_cluster::prop_assert;
+use vta_cluster::sched::online::plan_options;
 use vta_cluster::sched::{build_plan, Strategy};
-use vta_cluster::sim::{simulate, CostModel, SimConfig};
+use vta_cluster::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
 use vta_cluster::util::json::Json;
 use vta_cluster::util::proptest::forall;
 use vta_cluster::vta::fsim::{self, DramImage};
@@ -136,6 +138,51 @@ fn prop_plans_simulate_for_random_calibrations() {
         for &u in &r.node_utilization {
             prop_assert!((0.0..=1.0001).contains(&u), "util {u}");
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_des_steady_state_matches_analytic_capacity() {
+    // the two simulators pin each other: for a random zoo model ×
+    // strategy × cluster size, the DES driven at 3× the analytic
+    // capacity must complete images at that capacity to within 5%
+    // (DESIGN.md §10 — the accounting identity).
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::default(),
+    );
+    // one CostModel across cases: segment caches are keyed per graph
+    let graphs: Vec<_> =
+        zoo::names().iter().map(|m| zoo::build(m, 0).unwrap()).collect();
+    forall("des capacity pins analytic", 6, |rng| {
+        let g = rng.choice(&graphs);
+        let strategy = *rng.choice(&Strategy::all());
+        let n = rng.range(1, 7);
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+        let opts = plan_options(g, &cluster, &mut cost, &[strategy])
+            .map_err(|e| e.to_string())?;
+        let cap = opts[0].capacity_img_per_sec;
+        prop_assert!(cap > 0.0 && cap.is_finite(), "bad capacity {cap}");
+        // long enough that the pipeline-fill transient is < ~2% of the run
+        let horizon_ms = (500.0 / cap * 1e3).max(80.0 * opts[0].latency_ms);
+        let cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 3.0 * cap },
+            horizon_ms,
+            rng.next_u64(),
+        );
+        let r = run_des(&opts, 0, &cluster, &mut cost, g, &cfg, None)
+            .map_err(|e| e.to_string())?;
+        let rel = (r.throughput_img_per_sec - cap).abs() / cap;
+        prop_assert!(
+            rel < 0.05,
+            "{} {strategy} n={n}: DES {:.2} img/s vs analytic {:.2} (rel {rel:.3})",
+            g.model,
+            r.throughput_img_per_sec,
+            cap
+        );
+        prop_assert!(r.backlog_at_end > 0, "3x overload left no backlog");
         Ok(())
     });
 }
