@@ -1,0 +1,150 @@
+//! E11 — power/energy bench: the latency-vs-watts Pareto frontier plus
+//! the power-capped burst scenario, tracked as `BENCH_power.json`.
+//!
+//! Two sections:
+//!
+//! 1. **Pareto sweep** — (board family × node count × strategy) priced
+//!    by the metered analytic simulator; the JSON records every frontier
+//!    point and the most efficient configuration so CI can track the
+//!    img/s/W trajectory.
+//! 2. **Burst under a power cap** — the same overloaded burst trace with
+//!    the controller uncapped vs capped at the midpoint of the candidate
+//!    draws; records avg/peak watts, J/image and completions for both.
+//!
+//! `VTA_BENCH_FAST=1` shrinks the sweep ceiling and the DES horizon for
+//! CI smoke runs. Run: `cargo bench --bench power_pareto`
+
+use vta_cluster::config::{
+    BoardFamily, BoardProfile, Calibration, ClusterConfig, ReconfigCost, VtaConfig,
+};
+use vta_cluster::graph::zoo;
+use vta_cluster::power::pareto;
+use vta_cluster::runtime::artifacts_dir;
+use vta_cluster::sched::{plan_options, ControllerConfig, OnlineController, Strategy};
+use vta_cluster::sim::{run_des, ArrivalProcess, CostModel, DesConfig, DesResult};
+use vta_cluster::util::bench::Bench;
+use vta_cluster::util::json::{self, Json};
+
+fn point_json(p: &vta_cluster::power::ParetoPoint) -> Json {
+    json::obj(vec![
+        ("family", json::str_(p.family.as_str())),
+        ("strategy", json::str_(p.strategy.as_str())),
+        ("nodes", json::num(p.nodes as f64)),
+        ("ms_per_image", json::num(p.ms_per_image)),
+        ("latency_ms", json::num(p.latency_ms)),
+        ("cluster_w", json::num(p.cluster_w)),
+        ("j_per_image", json::num(p.j_per_image)),
+        ("img_per_sec_per_w", json::num(p.img_per_sec_per_w)),
+    ])
+}
+
+fn des_json(r: &DesResult, budget_w: Option<f64>) -> Json {
+    json::obj(vec![
+        ("seed", json::num(r.seed as f64)),
+        ("budget_w", budget_w.map(json::num).unwrap_or(Json::Null)),
+        ("offered", json::num(r.offered as f64)),
+        ("completed", json::num(r.completed as f64)),
+        ("avg_w", json::num(r.power.avg_cluster_w)),
+        ("peak_window_w", json::num(r.power.peak_window_w)),
+        ("total_j", json::num(r.power.total_j)),
+        ("j_per_image", json::num(r.power.j_per_image)),
+        ("p99_ms", json::num(r.latency_ms.percentile(99.0).unwrap_or(0.0))),
+        ("reconfigs", json::num(r.reconfigs.len() as f64)),
+    ])
+}
+
+fn main() {
+    let mut b = Bench::new("power_pareto");
+    let fast = std::env::var("VTA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let seed = 7u64;
+
+    // ---- 1. Pareto sweep -------------------------------------------------
+    let max_nodes = if fast { 3 } else { 0 }; // 0 = paper ceilings (12 / 5)
+    let points = pareto::pareto_sweep(
+        "resnet18",
+        &[BoardFamily::Zynq7000, BoardFamily::UltraScalePlus],
+        max_nodes,
+        &calib,
+    )
+    .unwrap();
+    let front = pareto::frontier(&points);
+    b.row(&format!(
+        "pareto sweep: {} configurations, {} on the frontier",
+        points.len(),
+        front.len()
+    ));
+    for p in &front {
+        b.row(&format!(
+            "  frontier {:8.1} W → {:8.3} ms/image  ({} × {} {})",
+            p.cluster_w, p.ms_per_image, p.nodes, p.family, p.strategy
+        ));
+    }
+    let best = pareto::most_efficient(&points).unwrap();
+    b.row(&format!(
+        "most efficient: {} × {} {} — {:.2} img/s/W",
+        best.nodes, best.family, best.strategy, best.img_per_sec_per_w
+    ));
+
+    // ---- 2. burst under a power cap -------------------------------------
+    let family = BoardFamily::Zynq7000;
+    let g = zoo::build("resnet18", 0).unwrap();
+    let vta = VtaConfig::table1_zynq7000();
+    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(family), calib);
+    let cluster = ClusterConfig::homogeneous(family, 4).with_vta(vta);
+    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all()).unwrap();
+    let min_w = options.iter().map(|o| o.avg_power_w).fold(f64::INFINITY, f64::min);
+    let max_w = options.iter().map(|o| o.avg_power_w).fold(0.0f64, f64::max);
+    let budget = (min_w + max_w) / 2.0;
+    let cap_best =
+        options.iter().map(|o| o.capacity_img_per_sec).fold(0.0f64, f64::max);
+    let initial = options
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.avg_power_w.partial_cmp(&b.1.avg_power_w).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let horizon_ms = if fast { 6000.0 } else { 20000.0 };
+    let cfg = DesConfig::new(
+        ArrivalProcess::Burst {
+            base_per_sec: 1.2 * cap_best,
+            burst_per_sec: 2.4 * cap_best,
+            mean_on_ms: 1500.0,
+            mean_off_ms: 2500.0,
+        },
+        horizon_ms,
+        seed,
+    );
+    let mut run = |budget_w: Option<f64>| {
+        let mut ctrl = OnlineController::new(
+            ControllerConfig { power_budget_w: budget_w, ..Default::default() },
+            ReconfigCost::for_family(family),
+        )
+        .unwrap();
+        run_des(&options, initial, &cluster, &mut cost, &g, &cfg, Some(&mut ctrl)).unwrap()
+    };
+    let uncapped = run(None);
+    let capped = run(Some(budget));
+    for (name, r) in [("uncapped", &uncapped), ("capped", &capped)] {
+        b.row(&format!(
+            "{name:9} seed {seed}: {:5}/{:5} images, avg {:6.1} W, peak {:6.1} W, \
+             {:7.4} J/img, p99 {:9.2} ms",
+            r.completed,
+            r.offered,
+            r.power.avg_cluster_w,
+            r.power.peak_window_w,
+            r.power.j_per_image,
+            r.latency_ms.percentile(99.0).unwrap_or(0.0),
+        ));
+    }
+
+    let out = json::obj(vec![
+        ("frontier", Json::Arr(front.iter().map(point_json).collect())),
+        ("most_efficient", point_json(best)),
+        ("burst_uncapped", des_json(&uncapped, None)),
+        ("burst_capped", des_json(&capped, Some(budget))),
+    ]);
+    std::fs::write("BENCH_power.json", out.to_string_pretty()).unwrap();
+    b.row("wrote BENCH_power.json");
+    b.finish();
+}

@@ -26,12 +26,23 @@ impl BoardFamily {
         }
     }
 
+    /// Accepts family names and the concrete board names the docs use
+    /// ("pynq-z1", "zedboard" → Zynq-7000; "zcu104" → US+ MPSoC).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s.to_ascii_lowercase().as_str() {
-            "zynq7000" | "zynq-7000" | "zynq7020" | "zynq" => Ok(BoardFamily::Zynq7000),
-            "ultrascale+" | "ultrascale" | "zu+" | "mpsoc" => Ok(BoardFamily::UltraScalePlus),
+            "zynq7000" | "zynq-7000" | "zynq7020" | "zynq-7020" | "zynq" | "pynq-z1"
+            | "pynq" | "zedboard" => Ok(BoardFamily::Zynq7000),
+            "ultrascale+" | "ultrascale" | "zu+" | "mpsoc" | "zcu104" => {
+                Ok(BoardFamily::UltraScalePlus)
+            }
             other => anyhow::bail!("unknown board family '{other}'"),
         }
+    }
+}
+
+impl std::fmt::Display for BoardFamily {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
     }
 }
 
@@ -211,7 +222,17 @@ mod tests {
     fn family_parse() {
         assert_eq!(BoardFamily::parse("zynq").unwrap(), BoardFamily::Zynq7000);
         assert_eq!(BoardFamily::parse("ZU+").unwrap(), BoardFamily::UltraScalePlus);
+        // concrete board names from the docs are aliases
+        assert_eq!(BoardFamily::parse("pynq-z1").unwrap(), BoardFamily::Zynq7000);
+        assert_eq!(BoardFamily::parse("ZedBoard").unwrap(), BoardFamily::Zynq7000);
+        assert_eq!(BoardFamily::parse("zcu104").unwrap(), BoardFamily::UltraScalePlus);
         assert!(BoardFamily::parse("virtex").is_err());
+    }
+
+    #[test]
+    fn family_display_matches_as_str() {
+        assert_eq!(BoardFamily::Zynq7000.to_string(), "zynq7000");
+        assert_eq!(BoardFamily::UltraScalePlus.to_string(), "ultrascale+");
     }
 
     #[test]

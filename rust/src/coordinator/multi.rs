@@ -250,10 +250,15 @@ pub fn simulate_tenants(
     let mut seed_rng = Rng::new(seed);
     let mut out = Vec::with_capacity(requests.len());
     for ((req, g), &n) in requests.iter().zip(&graphs).zip(&alloc) {
-        let seg_costs = cost.seg_cost_table(g)?;
-        let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
-        let plan = build_plan(req.strategy, g, n, lookup)?;
         let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta.clone());
+        let plan = if req.strategy == Strategy::Eco {
+            // power-aware tenant: minimize J/image on its sub-cluster
+            crate::power::eco_plan(g, &cluster, &mut cost, None)?.plan
+        } else {
+            let seg_costs = cost.seg_cost_table(g)?;
+            let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+            build_plan(req.strategy, g, n, lookup)?
+        };
         let sim = simulate(&plan, &cluster, &mut cost, g, &SimConfig { images: req.images })?;
 
         // loaded latency: drive the pipeline with a seeded Poisson
@@ -263,6 +268,8 @@ pub fn simulate_tenants(
             plan: plan.clone(),
             capacity_img_per_sec: capacity,
             latency_ms: sim.latency_ms.mean(),
+            avg_power_w: sim.power.cluster_avg_w,
+            j_per_image: sim.power.j_per_image,
         };
         let rate = 0.7 * capacity;
         let target_images = req.images.max(32) as f64;
@@ -351,6 +358,10 @@ mod tests {
             assert_eq!(t.plan.n_nodes, t.nodes);
             assert!(t.report.throughput_img_per_sec > 0.0, "{}", t.model);
             assert!(t.sim.ms_per_image.is_finite());
+            // §11: every tenant's report carries its watts and J/image
+            assert!(t.sim.power.cluster_avg_w > 0.0, "{}: no watts", t.model);
+            assert!(t.sim.power.j_per_image > 0.0, "{}: no J/image", t.model);
+            assert_eq!(t.sim.power.node_watts.len(), t.nodes);
         }
         // resnet dominates the demand → gets the most nodes
         assert!(out[0].nodes > out[1].nodes, "{:?}", out.iter().map(|t| t.nodes).collect::<Vec<_>>());
@@ -398,6 +409,36 @@ mod tests {
                 || a[0].report.p99_latency_ms != c[0].report.p99_latency_ms,
             "seed change did not alter the loaded run"
         );
+    }
+
+    #[test]
+    fn eco_tenant_supported() {
+        let reqs = [
+            TenantRequest {
+                model: "lenet5".into(),
+                input_hw: 0,
+                strategy: Strategy::Eco,
+                images: 8,
+            },
+            TenantRequest {
+                model: "mlp".into(),
+                input_hw: 0,
+                strategy: Strategy::Fused,
+                images: 8,
+            },
+        ];
+        let out = simulate_tenants(
+            BoardFamily::Zynq7000,
+            VtaConfig::table1_zynq7000(),
+            Calibration::default(),
+            4,
+            &reqs,
+            3,
+        )
+        .unwrap();
+        assert_eq!(out[0].plan.strategy, Strategy::Eco);
+        out[0].plan.validate().unwrap();
+        assert!(out[0].sim.power.j_per_image > 0.0);
     }
 
     #[test]

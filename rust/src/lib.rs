@@ -16,7 +16,9 @@
 //!   reconfiguration downtime, and a PJRT-backed serving coordinator
 //!   with a multi-tenant layer ([`coordinator::MultiCoordinator`])
 //!   running several model pipelines concurrently over a shared node
-//!   budget.
+//!   budget, and a power/energy subsystem ([`power`]) that meters both
+//!   simulators in joules, adds an energy-minimizing scheduling
+//!   strategy, and enumerates the latency-vs-watts Pareto frontier.
 //! * **Layer 2 (python/compile, build-time)** — int8 ResNet-18 in JAX,
 //!   AOT-lowered to HLO text artifacts per graph segment.
 //! * **Layer 1 (python/compile/kernels, build-time)** — the VTA GEMM and
@@ -36,6 +38,7 @@ pub mod coordinator;
 pub mod exp;
 pub mod graph;
 pub mod net;
+pub mod power;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

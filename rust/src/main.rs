@@ -16,10 +16,16 @@
 //!                  pipelines instead of the analytic simulator)
 //! * `load`       — dynamic-load DES: drive a plan with an open-loop
 //!                  arrival process (`--arrival poisson|burst|diurnal`),
-//!                  report p50/p95/p99 latency and queue depth, and let
-//!                  the online reconfiguration controller
-//!                  (`--controller on|off`) switch plans mid-run,
-//!                  charging the modeled FPGA reconfiguration downtime
+//!                  report p50/p95/p99 latency, queue depth, per-node
+//!                  utilization and energy, and let the online
+//!                  reconfiguration controller (`--controller on|off`,
+//!                  optional `--power-budget` watts cap) switch plans
+//!                  mid-run, charging the modeled FPGA reconfiguration
+//!                  downtime and energy
+//! * `power`      — latency-vs-watts Pareto frontier over (board family
+//!                  × node count × strategy), dominated configurations
+//!                  tagged; `--slo` additionally prints the eco
+//!                  (min-J/image) plan per family (DESIGN.md §11)
 //! * `serve`      — run the real PJRT serving pipeline on a batch of
 //!                  synthetic images (end-to-end driver)
 
@@ -31,6 +37,7 @@ use vta_cluster::coordinator::{
 };
 use vta_cluster::exp::{calibrate, paper, runner::Bench, table};
 use vta_cluster::graph::zoo;
+use vta_cluster::power::{eco_plan, pareto};
 use vta_cluster::runtime::{artifacts_dir, TensorData};
 use vta_cluster::sched::{
     build_plan, plan_options, ControllerConfig, OnlineController, PlanOption, Strategy,
@@ -55,16 +62,21 @@ fn run() -> anyhow::Result<()> {
         .opt("nodes", "4", "cluster size for `simulate`/`serve`, shared budget for `multi`")
         .opt("images", "64", "images per run (per tenant for `multi`)")
         .opt("input-hw", "32", "input size for `serve`/`multi --serve` (32 tiny / 224 paper)")
-        .opt("board", "zynq", "board family for `simulate`/`multi`/`load` (zynq|ultrascale)")
+        .opt("board", "zynq", "board family for `simulate`/`multi`/`load`/`power` (zynq|ultrascale; `power` also takes both)")
         .opt("seed", "7", "RNG seed for stochastic paths (`simulate`/`multi`/`load`/`serve`)")
         .opt("arrival", "poisson", "`load`: arrival process (poisson|burst|diurnal)")
         .opt("rate", "0", "`load`: base arrival rate img/s (0 = auto from plan capacity)")
         .opt("burst", "4", "`load`: burst rate multiplier for `--arrival burst`")
         .opt("controller", "on", "`load`: online reconfiguration controller (on|off)")
         .opt("horizon", "20000", "`load`: simulated horizon in ms")
+        .opt("power-budget", "0", "`load`: cluster watts cap for the controller (0 = uncapped)")
+        .opt("slo", "0", "`power`/`simulate --strategy eco`: latency SLO in ms (0 = none)")
         .flag("quick", "reduced calibration grids")
         .flag("serve", "`multi`: serve real artifacts instead of simulating")
-        .positional("command", "info | calibrate | table | simulate | multi | load | serve");
+        .positional(
+            "command",
+            "info | calibrate | table | simulate | multi | load | power | serve",
+        );
     let args = cli.parse()?;
     let command = args.positional.first().map(String::as_str).unwrap_or("info");
     let seed = args.get_u64("seed")?;
@@ -79,6 +91,7 @@ fn run() -> anyhow::Result<()> {
             args.get_usize("nodes")?,
             BoardFamily::parse(args.get("board"))?,
             args.get_usize("images")?,
+            args.get_f64("slo")?,
             seed,
         ),
         "multi" => multi_cmd(
@@ -96,6 +109,16 @@ fn run() -> anyhow::Result<()> {
                 "off" => false,
                 other => anyhow::bail!("--controller must be on|off (got '{other}')"),
             };
+            let power_budget_w = args.get_f64("power-budget")?;
+            anyhow::ensure!(
+                power_budget_w >= 0.0 && power_budget_w.is_finite(),
+                "--power-budget must be ≥ 0 W"
+            );
+            anyhow::ensure!(
+                controller || power_budget_w == 0.0,
+                "--power-budget needs the online controller; drop --controller off \
+                 (a static plan cannot shed watts)"
+            );
             load_cmd(LoadArgs {
                 model: args.get("model").to_string(),
                 strategy: args.get("strategy").to_string(),
@@ -106,9 +129,16 @@ fn run() -> anyhow::Result<()> {
                 burst_mult: args.get_f64("burst")?,
                 controller,
                 horizon_ms: args.get_f64("horizon")?,
+                power_budget_w: (power_budget_w > 0.0).then_some(power_budget_w),
                 seed,
             })
         }
+        "power" => power_cmd(
+            args.get("model"),
+            args.get("board"),
+            args.get_usize("nodes")?,
+            args.get_f64("slo")?,
+        ),
         "serve" => {
             // `--strategy all` is the simulate default; serving drives
             // one concrete plan, so fall back to scatter-gather
@@ -239,25 +269,27 @@ fn simulate_cmd(
     n: usize,
     family: BoardFamily,
     images: usize,
+    slo_ms: f64,
     seed: u64,
 ) -> anyhow::Result<()> {
     let calib = Calibration::load_or_default(&artifacts_dir());
     let mut b = Bench::for_model(family, vta_for(family), calib, model, 0)?;
     b.images = images;
     println!(
-        "{model} ({:.3} GMACs) on {n}× {} nodes, {images} images:",
+        "{model} ({:.3} GMACs) on {n}× {family} nodes, {images} images:",
         b.graph.total_macs() as f64 / 1e9,
-        family.as_str()
     );
     if strategy.eq_ignore_ascii_case("all") {
         // the §II-C comparison the paper's figures make, for any model
         for s in Strategy::all() {
             let r = b.cell(s, n)?;
             println!(
-                "  {:22} {:8.3} ms/image  latency {:8.3} ms  net {:9} B",
+                "  {:22} {:8.3} ms/image  latency {:8.3} ms  {:6.1} W  {:7.4} J/img  net {:9} B",
                 s.to_string(),
                 r.ms_per_image,
                 r.latency_ms.mean(),
+                r.power.cluster_avg_w,
+                r.power.j_per_image,
                 r.network_bytes,
             );
         }
@@ -268,16 +300,38 @@ fn simulate_cmd(
     let s = Strategy::parse(strategy)?;
     let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta_for(family));
     let (graph, cost) = b.graph_and_cost_mut();
-    let seg_costs = cost.seg_cost_table(graph)?;
-    let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
-    let plan = build_plan(s, graph, n, lookup)?;
+    let plan = if s == Strategy::Eco {
+        // the fifth, power-aware strategy: min J/image subject to the SLO
+        let choice =
+            eco_plan(graph, &cluster, cost, (slo_ms > 0.0).then_some(slo_ms))?;
+        println!(
+            "eco picked {} ({:.4} J/image at {:.1} W{})",
+            choice.base,
+            choice.j_per_image,
+            choice.cluster_w,
+            if choice.meets_slo { String::new() } else { "; SLO NOT met".to_string() },
+        );
+        choice.plan
+    } else {
+        let seg_costs = cost.seg_cost_table(graph)?;
+        let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+        build_plan(s, graph, n, lookup)?
+    };
     let r = simulate(&plan, &cluster, cost, graph, &SimConfig { images })?;
     println!("{s}:");
     println!("  {:.2} ms/image (steady state)", r.ms_per_image);
     println!("  makespan {:.1} ms, network {} bytes", r.makespan_ms, r.network_bytes);
     println!("  latency {}", r.latency_ms.display("ms"));
-    for (i, u) in r.node_utilization.iter().enumerate() {
-        println!("  node {i}: {:.0}% busy", u * 100.0);
+    println!(
+        "  power: {:.1} W avg / {:.1} W peak, {:.4} J/image, {:.2} img/s/W, EDP {:.4} J·s",
+        r.power.cluster_avg_w,
+        r.power.cluster_peak_w,
+        r.power.j_per_image,
+        r.power.img_per_sec_per_w,
+        r.power.edp_j_s,
+    );
+    for (i, (u, w)) in r.node_utilization.iter().zip(&r.power.node_watts).enumerate() {
+        println!("  node {i}: {:3.0}% busy  {:5.2} W", u * 100.0, w);
     }
     // loaded behavior: seeded Poisson DES at 70 % of the plan's capacity
     let capacity = 1e3 / r.ms_per_image;
@@ -285,6 +339,8 @@ fn simulate_cmd(
         plan,
         capacity_img_per_sec: capacity,
         latency_ms: r.latency_ms.mean(),
+        avg_power_w: r.power.cluster_avg_w,
+        j_per_image: r.power.j_per_image,
     }];
     let rate = 0.7 * capacity;
     let cfg = DesConfig::new(
@@ -341,17 +397,18 @@ fn multi_cmd(
     let calib = Calibration::load_or_default(&artifacts_dir());
     let out = simulate_tenants(family, vta_for(family), calib, budget, &requests, seed)?;
     println!(
-        "multi-tenant simulation: {} tenants over {budget} {} nodes, {images} images each, seed {seed}",
+        "multi-tenant simulation: {} tenants over {budget} {family} nodes, {images} images each, seed {seed}",
         out.len(),
-        family.as_str()
     );
     println!(
-        "  {:16} {:>5} {:>22} {:>12} {:>12} {:>12} {:>12}",
-        "model", "nodes", "strategy", "ms/image", "img/s", "latency ms", "p99 ms"
+        "  {:16} {:>5} {:>22} {:>12} {:>12} {:>12} {:>12} {:>8} {:>9}",
+        "model", "nodes", "strategy", "ms/image", "img/s", "latency ms", "p99 ms", "watts", "J/img"
     );
+    let mut total_w = 0.0;
     for t in &out {
+        total_w += t.sim.power.cluster_avg_w;
         println!(
-            "  {:16} {:>5} {:>22} {:>12.3} {:>12.2} {:>12.3} {:>12.3}",
+            "  {:16} {:>5} {:>22} {:>12.3} {:>12.2} {:>12.3} {:>12.3} {:>8.1} {:>9.4}",
             t.model,
             t.nodes,
             t.plan.strategy.to_string(),
@@ -359,9 +416,18 @@ fn multi_cmd(
             t.report.throughput_img_per_sec,
             t.report.mean_latency_ms,
             t.report.p99_latency_ms,
+            t.sim.power.cluster_avg_w,
+            t.sim.power.j_per_image,
         );
     }
-    println!("  (latency columns: seeded DES at 70% of each tenant's capacity)");
+    // each tenant's figure includes one switch uplink port; the shared
+    // cluster has a single uplink, so drop the double-counted ones
+    let uplink_w = vta_cluster::power::PowerModel::for_family(family).switch_port_w;
+    let cluster_w = total_w - (out.len().saturating_sub(1)) as f64 * uplink_w;
+    println!(
+        "  (latency columns: seeded DES at 70% of each tenant's capacity; \
+         cluster saturated draw {cluster_w:.1} W)"
+    );
     Ok(())
 }
 
@@ -474,6 +540,8 @@ struct LoadArgs {
     burst_mult: f64,
     controller: bool,
     horizon_ms: f64,
+    /// Cluster watts cap handed to the controller (`None` = uncapped).
+    power_budget_w: Option<f64>,
     seed: u64,
 }
 
@@ -490,17 +558,30 @@ fn load_cmd(a: LoadArgs) -> anyhow::Result<()> {
     let vta = vta_for(a.family);
     let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(a.family), calib);
     let cluster = ClusterConfig::homogeneous(a.family, a.nodes).with_vta(vta);
-    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all())?;
+    let mut options = plan_options(&g, &cluster, &mut cost, &Strategy::all())?;
 
     let initial_strategy = if a.strategy.eq_ignore_ascii_case("all") {
         Strategy::CoreAssign
     } else {
         Strategy::parse(&a.strategy)?
     };
-    let initial = options
-        .iter()
-        .position(|o| o.plan.strategy == initial_strategy)
-        .expect("all strategies are candidates");
+    let initial = if initial_strategy == Strategy::Eco {
+        // the power-aware pick joins the candidate set as a fifth option
+        let choice = eco_plan(&g, &cluster, &mut cost, None)?;
+        options.push(PlanOption {
+            capacity_img_per_sec: 1e3 / choice.ms_per_image,
+            latency_ms: choice.latency_ms,
+            avg_power_w: choice.cluster_w,
+            j_per_image: choice.j_per_image,
+            plan: choice.plan,
+        });
+        options.len() - 1
+    } else {
+        options
+            .iter()
+            .position(|o| o.plan.strategy == initial_strategy)
+            .expect("all base strategies are candidates")
+    };
     let cap0 = options[initial].capacity_img_per_sec;
 
     let base_rate = if a.rate > 0.0 {
@@ -516,26 +597,32 @@ fn load_cmd(a: LoadArgs) -> anyhow::Result<()> {
         "load: {} on {}× {} nodes — {}, horizon {:.1} s, seed {}",
         a.model,
         a.nodes,
-        a.family.as_str(),
+        a.family,
         arrival.describe(),
         a.horizon_ms / 1e3,
         a.seed
     );
+    if let Some(b) = a.power_budget_w {
+        println!("power budget: {b:.1} W (controller sheds watts above this)");
+    }
     println!("plan options (analytic steady state):");
     for (i, o) in options.iter().enumerate() {
         let mark = if i == initial { "←  initial" } else { "" };
         println!(
-            "  [{i}] {:22} capacity {:8.1} img/s  unloaded latency {:8.3} ms  {mark}",
+            "  [{i}] {:22} capacity {:8.1} img/s  unloaded latency {:8.3} ms  \
+             {:6.1} W sat  {:7.4} J/img  {mark}",
             o.plan.strategy.to_string(),
             o.capacity_img_per_sec,
             o.latency_ms,
+            o.avg_power_w,
+            o.j_per_image,
         );
     }
 
     let cfg = DesConfig::new(arrival, a.horizon_ms, a.seed);
     let mut controller_state = if a.controller {
         Some(OnlineController::new(
-            ControllerConfig::default(),
+            ControllerConfig { power_budget_w: a.power_budget_w, ..Default::default() },
             ReconfigCost::for_family(a.family),
         )?)
     } else {
@@ -553,7 +640,11 @@ fn load_cmd(a: LoadArgs) -> anyhow::Result<()> {
 
     println!(
         "controller {}: offered {} images, completed {} ({:.1}%), throughput {:.1} img/s",
-        if a.controller { "on" } else { "off" },
+        match (a.controller, a.power_budget_w) {
+            (_, Some(_)) => "on (power-capped)",
+            (true, None) => "on",
+            (false, None) => "off",
+        },
         r.offered,
         r.completed,
         if r.offered > 0 { r.completed as f64 / r.offered as f64 * 100.0 } else { 0.0 },
@@ -581,9 +672,28 @@ fn load_cmd(a: LoadArgs) -> anyhow::Result<()> {
             );
         }
     }
-    let util: Vec<String> =
-        r.node_utilization.iter().map(|u| format!("{:.0}%", u * 100.0)).collect();
-    println!("node utilization: {}", util.join(" "));
+    // per-node utilization column (the DES measures busy_ns per node;
+    // the same busy shares drive the idle-power integration below)
+    println!("per-node: {:>4} {:>6} {:>7} {:>9}", "node", "util", "avg W", "peak q");
+    for (i, (u, w)) in r.node_utilization.iter().zip(&r.power.node_avg_w).enumerate() {
+        println!(
+            "          {:>4} {:>5.0}% {:>7.2} {:>9}",
+            i,
+            u * 100.0,
+            w,
+            r.node_max_queue[i]
+        );
+    }
+    println!(
+        "energy: {:.1} J total ({:.4} J/image), avg {:.1} W, peak window {:.1} W, \
+         reconfig {:.2} J, EDP {:.4} J·s",
+        r.power.total_j,
+        r.power.j_per_image,
+        r.power.avg_cluster_w,
+        r.power.peak_window_w,
+        r.power.reconfig_j,
+        r.power.edp_j_s,
+    );
     println!(
         "backlog: max {} images in flight, {} still queued at horizon",
         r.max_backlog, r.backlog_at_end
@@ -600,5 +710,75 @@ fn load_cmd(a: LoadArgs) -> anyhow::Result<()> {
         "final plan: {} — rerun with the same --seed for a bit-identical result",
         options[r.final_plan].plan.strategy
     );
+    Ok(())
+}
+
+/// `power`: the latency-vs-watts Pareto frontier over (board family ×
+/// node count × §II-C strategy) — DESIGN.md §11, EXPERIMENTS.md §E11.
+/// `max_nodes = 0` sweeps each family to its paper ceiling (12 Zynq /
+/// 5 US+); `--slo` additionally prints the eco (min-J/image) pick per
+/// family at the sweep ceiling.
+fn power_cmd(model: &str, board: &str, max_nodes: usize, slo_ms: f64) -> anyhow::Result<()> {
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let families: Vec<BoardFamily> = match board.to_ascii_lowercase().as_str() {
+        "both" | "all" => vec![BoardFamily::Zynq7000, BoardFamily::UltraScalePlus],
+        other => vec![BoardFamily::parse(other)?],
+    };
+    let points = pareto::pareto_sweep(model, &families, max_nodes, &calib)?;
+    println!(
+        "power: {model} over {} — {} configurations (sorted by watts)",
+        families.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(" + "),
+        points.len(),
+    );
+    println!(
+        "  {:12} {:>22} {:>3} {:>10} {:>11} {:>8} {:>9} {:>10}  {}",
+        "family", "strategy", "n", "ms/image", "latency ms", "watts", "J/img", "img/s/W", "tag"
+    );
+    for p in &points {
+        println!(
+            "  {:12} {:>22} {:>3} {:>10.3} {:>11.3} {:>8.1} {:>9.4} {:>10.2}  {}",
+            p.family.to_string(),
+            p.strategy.to_string(),
+            p.nodes,
+            p.ms_per_image,
+            p.latency_ms,
+            p.cluster_w,
+            p.j_per_image,
+            p.img_per_sec_per_w,
+            if p.dominated { "dominated" } else { "FRONTIER" },
+        );
+    }
+    let front = pareto::frontier(&points);
+    println!("\nfrontier ({} points, watts ↑ / ms per image ↓):", front.len());
+    for p in &front {
+        println!(
+            "  {:8.1} W → {:8.3} ms/image  ({} × {} {})",
+            p.cluster_w, p.ms_per_image, p.nodes, p.family, p.strategy
+        );
+    }
+    if let Some(best) = pareto::most_efficient(&points) {
+        println!(
+            "most efficient: {} × {} {} — {:.2} img/s/W at {:.1} W",
+            best.nodes, best.family, best.strategy, best.img_per_sec_per_w, best.cluster_w
+        );
+    }
+    if slo_ms > 0.0 {
+        for &family in &families {
+            let nodes = if max_nodes == 0 {
+                pareto::family_max_nodes(family)
+            } else {
+                max_nodes.min(pareto::family_max_nodes(family))
+            };
+            let c = pareto::eco_for_family(model, family, nodes, Some(slo_ms), &calib)?;
+            println!(
+                "eco @ {nodes}× {family} (SLO {slo_ms:.1} ms): {} — {:.4} J/image, \
+                 latency {:.3} ms{}",
+                c.base,
+                c.j_per_image,
+                c.latency_ms,
+                if c.meets_slo { "" } else { "  ⚠ no candidate meets the SLO" },
+            );
+        }
+    }
     Ok(())
 }

@@ -1,0 +1,147 @@
+//! The fifth scheduling strategy: minimize J/image subject to a latency
+//! SLO (DESIGN.md §11).
+//!
+//! The four §II-C strategies answer "how fast can this cluster go?";
+//! [`eco_plan`] answers the question the paper's power-efficiency goal
+//! actually poses: *of the schedules that are fast enough, which burns
+//! the fewest joules per inference?* It prices every base strategy with
+//! the metered analytic simulator, keeps the candidates whose unloaded
+//! latency meets the SLO, and returns the one with the lowest J/image —
+//! re-tagged [`Strategy::Eco`] so reports show what selected it. With no
+//! SLO every candidate qualifies and the pick is the pure energy
+//! optimum; if *no* candidate meets the SLO the lowest-latency plan is
+//! returned with [`EcoChoice::meets_slo`] = false so callers can warn
+//! instead of silently violating their deadline.
+
+use crate::config::ClusterConfig;
+use crate::graph::Graph;
+use crate::sched::{build_plan, ExecutionPlan, Strategy};
+use crate::sim::{simulate, CostModel, SimConfig};
+
+/// What [`eco_plan`] picked and why.
+#[derive(Debug, Clone)]
+pub struct EcoChoice {
+    /// The winning plan, `strategy` re-tagged to [`Strategy::Eco`].
+    pub plan: ExecutionPlan,
+    /// The base §II-C strategy the winning schedule came from.
+    pub base: Strategy,
+    pub j_per_image: f64,
+    pub ms_per_image: f64,
+    /// Unloaded latency the SLO was checked against, ms.
+    pub latency_ms: f64,
+    /// Steady-state cluster draw at saturation, W.
+    pub cluster_w: f64,
+    /// False when no candidate met the SLO and the lowest-latency plan
+    /// was returned as the least-bad fallback.
+    pub meets_slo: bool,
+}
+
+/// Build the energy-optimal plan for `g` over `cluster` under an
+/// optional unloaded-latency SLO (ms).
+pub fn eco_plan(
+    g: &Graph,
+    cluster: &ClusterConfig,
+    cost: &mut CostModel,
+    slo_ms: Option<f64>,
+) -> anyhow::Result<EcoChoice> {
+    if let Some(slo) = slo_ms {
+        anyhow::ensure!(slo.is_finite() && slo > 0.0, "latency SLO must be > 0");
+    }
+    let n = cluster.num_nodes();
+    let seg_costs = cost.seg_cost_table(g)?;
+    let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+    let mut candidates = Vec::with_capacity(4);
+    for s in Strategy::all() {
+        let plan = build_plan(s, g, n, lookup)?;
+        let sim = simulate(&plan, cluster, cost, g, &SimConfig { images: 16 })?;
+        candidates.push(EcoChoice {
+            plan,
+            base: s,
+            j_per_image: sim.power.j_per_image,
+            ms_per_image: sim.ms_per_image,
+            latency_ms: sim.latency_ms.mean(),
+            cluster_w: sim.power.cluster_avg_w,
+            meets_slo: slo_ms.map(|slo| sim.latency_ms.mean() <= slo).unwrap_or(true),
+        });
+    }
+    // min J/image over the SLO-feasible set; if the SLO filtered out
+    // everything, fall back to the lowest-latency plan (flagged)
+    let any_ok = candidates.iter().any(|x| x.meets_slo);
+    let mut best = candidates
+        .into_iter()
+        .filter(|x| !any_ok || x.meets_slo)
+        .min_by(|a, b| {
+            if any_ok {
+                a.j_per_image.partial_cmp(&b.j_per_image).unwrap()
+            } else {
+                a.latency_ms.partial_cmp(&b.latency_ms).unwrap()
+            }
+        })
+        .expect("four candidates always exist");
+    best.plan.strategy = Strategy::Eco;
+    best.plan.validate_for(g)?;
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BoardFamily, BoardProfile, Calibration, VtaConfig};
+    use crate::graph::zoo;
+
+    fn setup(n: usize) -> (Graph, ClusterConfig, CostModel) {
+        let g = zoo::build("resnet18", 0).unwrap();
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+        let cost = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration::default(),
+        );
+        (g, cluster, cost)
+    }
+
+    #[test]
+    fn eco_is_energy_minimal_among_slo_feasible() {
+        let (g, cluster, mut cost) = setup(4);
+        let choice = eco_plan(&g, &cluster, &mut cost, None).unwrap();
+        assert_eq!(choice.plan.strategy, Strategy::Eco);
+        assert!(choice.meets_slo);
+        // with no SLO the pick must not lose on J/image to any base plan
+        let seg_costs = cost.seg_cost_table(&g).unwrap();
+        let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+        for s in Strategy::all() {
+            let plan = build_plan(s, &g, 4, lookup).unwrap();
+            let sim =
+                simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images: 16 }).unwrap();
+            assert!(
+                choice.j_per_image <= sim.power.j_per_image * 1.0001,
+                "{s}: {} J beats eco's {} J",
+                sim.power.j_per_image,
+                choice.j_per_image
+            );
+        }
+    }
+
+    #[test]
+    fn tight_slo_changes_or_flags_the_pick() {
+        let (g, cluster, mut cost) = setup(4);
+        let free = eco_plan(&g, &cluster, &mut cost, None).unwrap();
+        // an SLO nobody can meet → lowest-latency fallback, flagged
+        let strict = eco_plan(&g, &cluster, &mut cost, Some(1e-3)).unwrap();
+        assert!(!strict.meets_slo);
+        // the fallback optimizes latency, so it cannot be slower than
+        // the unconstrained energy pick
+        assert!(strict.latency_ms <= free.latency_ms * 1.0001);
+        // a generous SLO reproduces the unconstrained pick
+        let loose = eco_plan(&g, &cluster, &mut cost, Some(1e6)).unwrap();
+        assert_eq!(loose.base, free.base);
+        assert!(loose.meets_slo);
+    }
+
+    #[test]
+    fn rejects_bad_slo() {
+        let (g, cluster, mut cost) = setup(2);
+        assert!(eco_plan(&g, &cluster, &mut cost, Some(0.0)).is_err());
+        assert!(eco_plan(&g, &cluster, &mut cost, Some(f64::NAN)).is_err());
+    }
+}

@@ -1,0 +1,285 @@
+//! Energy metering shared by both simulators (DESIGN.md §11).
+//!
+//! Both simulators already agree on *time* through one demand accounting
+//! (the 5 % throughput pin in `tests/proptests.rs`); this module makes
+//! them agree on *energy* by construction, the same way:
+//!
+//! * the **analytic** meter ([`analytic_power`]) prices one steady-state
+//!   image period: every node draws the idle floor for the whole period
+//!   plus PL dynamic power for its busy share (`utilization × period` =
+//!   the node's per-image demand), the switch powers `n + 1` ports, and
+//!   DRAM/Ethernet pay per byte the steady-state model already counts;
+//! * the **DES** meter ([`integrate_energy`]) integrates the identical
+//!   terms over the run: idle floor × horizon, dynamic × the per-node
+//!   `busy_ns` the event loop records, per-byte energy on the bytes
+//!   actually delivered inside the horizon, plus the reconfiguration
+//!   overdraw for every plan switch the controller executed.
+//!
+//! At saturation `horizon / completed` converges to the analytic image
+//! period and `busy_ns / completed` to the per-image demand, so
+//! DES-integrated J/image pins analytic J/image — property-tested to
+//! < 5 % alongside the throughput pin.
+
+use super::model::PowerModel;
+use crate::config::vta::VtaConfig;
+
+/// Steady-state power figures of one [`crate::sched::ExecutionPlan`]
+/// (attached to every [`crate::sim::SimResult`]).
+#[derive(Debug, Clone)]
+pub struct PowerReport {
+    /// Average electrical draw per node (idle floor + dynamic × busy
+    /// share; per-byte DRAM/Ethernet energy is reported cluster-wide), W.
+    pub node_watts: Vec<f64>,
+    /// Average cluster draw at steady state, switch ports included, W.
+    pub cluster_avg_w: f64,
+    /// Worst-case draw: every node computing at once, all ports lit, W.
+    pub cluster_peak_w: f64,
+    /// Energy per inference, J.
+    pub j_per_image: f64,
+    /// Throughput per watt = `(1000 / ms_per_image) / cluster_avg_w`
+    /// (equivalently `1 / j_per_image`), images/s/W.
+    pub img_per_sec_per_w: f64,
+    /// Energy-delay product: `j_per_image × unloaded latency (s)`, J·s.
+    pub edp_j_s: f64,
+}
+
+/// Energy a DES run actually consumed (attached to every
+/// [`crate::sim::DesResult`]).
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    /// Total cluster energy over the horizon, J.
+    pub total_j: f64,
+    /// `total_j / completed`; 0 when nothing completed.
+    pub j_per_image: f64,
+    /// `total_j / horizon`, W.
+    pub avg_cluster_w: f64,
+    /// Highest control-window draw observed, W (≥ `avg_cluster_w`).
+    pub peak_window_w: f64,
+    /// Energy charged to reconfigurations (idle floor + config-port
+    /// overdraw over the modeled downtime, every node), J.
+    pub reconfig_j: f64,
+    /// Energy-delay product: `j_per_image × mean latency (s)`, J·s.
+    pub edp_j_s: f64,
+    /// Average draw per node (idle floor + its integrated dynamic), W.
+    pub node_avg_w: Vec<f64>,
+}
+
+/// DRAM bytes one inference moves: the weights streamed through the
+/// accelerator once per image plus both DMA sides (into DRAM at the
+/// receiver, out of DRAM at the sender) of every wire byte. Activation
+/// reuse inside the PL SRAM buffers is deliberately not charged — it is
+/// what the buffers are for.
+pub fn dram_bytes_per_image(weight_bytes: u64, wire_bytes: f64) -> f64 {
+    weight_bytes as f64 + 2.0 * wire_bytes
+}
+
+/// Price one steady-state image period of a plan. `utilization` is the
+/// per-node demand share of the bottleneck (from `sim::cluster`),
+/// `ms_per_image` the bottleneck period, `net_bytes_per_image` the wire
+/// bytes the demand accounting counted, `weight_bytes` the model's
+/// parameter footprint and `latency_ms` the unloaded latency (for EDP).
+pub fn analytic_power(
+    pm: &PowerModel,
+    cfg: &VtaConfig,
+    utilization: &[f64],
+    ms_per_image: f64,
+    net_bytes_per_image: f64,
+    weight_bytes: u64,
+    latency_ms: f64,
+) -> PowerReport {
+    let n = utilization.len();
+    let dyn_w = pm.pl_dynamic_w(cfg);
+    let period_s = ms_per_image / 1e3;
+    let switch_w = (n as f64 + 1.0) * pm.switch_port_w;
+
+    let node_watts: Vec<f64> =
+        utilization.iter().map(|&u| pm.idle_w() + dyn_w * u).collect();
+    let compute_j: f64 = node_watts.iter().map(|w| w * period_s).sum();
+    let io_j = pm.dram_j(dram_bytes_per_image(weight_bytes, net_bytes_per_image))
+        + pm.eth_j(net_bytes_per_image);
+    let j_per_image = compute_j + switch_w * period_s + io_j;
+
+    let cluster_avg_w = j_per_image / period_s;
+    let cluster_peak_w = n as f64 * (pm.idle_w() + dyn_w) + switch_w;
+    PowerReport {
+        node_watts,
+        cluster_avg_w,
+        cluster_peak_w,
+        j_per_image,
+        img_per_sec_per_w: 1.0 / j_per_image,
+        edp_j_s: j_per_image * latency_ms / 1e3,
+    }
+}
+
+/// Inputs the DES hands the integrator at the end of a run.
+pub struct DesEnergyInputs<'a> {
+    /// Simulated horizon, ns.
+    pub horizon_ns: u64,
+    /// Per-node busy time (compute + blocking-MPI share), ns, already
+    /// clipped at the horizon by the event loop.
+    pub busy_ns: &'a [u64],
+    /// Images whose logits reached the master inside the horizon.
+    pub completed: u64,
+    /// Wire bytes of transfers *delivered* inside the horizon (booked
+    /// bytes whose arrival fell beyond it carry no energy yet).
+    pub delivered_bytes: u64,
+    /// Model parameter footprint (weights streamed once per image), B.
+    pub weight_bytes: u64,
+    /// Total reconfiguration downtime charged by the controller, ms.
+    pub reconfig_downtime_ms: f64,
+    /// Config-port overdraw above the idle floor, W (the idle share of a
+    /// switch is already inside the static integral).
+    pub reconfig_overdraw_w: f64,
+    /// Per-control-window cluster draw samples, W (for the peak).
+    pub window_w: &'a [f64],
+    /// Mean end-to-end latency, ms (for EDP).
+    pub mean_latency_ms: f64,
+}
+
+/// Integrate cluster energy over a DES run — same per-component terms
+/// as [`analytic_power`], integrated instead of amortized.
+pub fn integrate_energy(pm: &PowerModel, cfg: &VtaConfig, inp: &DesEnergyInputs) -> EnergyReport {
+    let n = inp.busy_ns.len();
+    let dyn_w = pm.pl_dynamic_w(cfg);
+    let horizon_s = inp.horizon_ns as f64 / 1e9;
+    let switch_w = (n as f64 + 1.0) * pm.switch_port_w;
+
+    let node_avg_w: Vec<f64> = inp
+        .busy_ns
+        .iter()
+        .map(|&b| pm.idle_w() + dyn_w * (b as f64 / 1e9) / horizon_s.max(1e-12))
+        .collect();
+    let compute_j: f64 = node_avg_w.iter().map(|w| w * horizon_s).sum();
+    let io_j = pm
+        .dram_j(dram_bytes_per_image(0, inp.delivered_bytes as f64))
+        + pm.eth_j(inp.delivered_bytes as f64)
+        + pm.dram_j(inp.weight_bytes as f64 * inp.completed as f64);
+    // downtime idle draw is inside the static integral; charge only the
+    // configuration-port overdraw, on every node per switch
+    let reconfig_j =
+        inp.reconfig_downtime_ms / 1e3 * inp.reconfig_overdraw_w * n as f64;
+    let total_j = compute_j + switch_w * horizon_s + io_j + reconfig_j;
+
+    let avg_cluster_w = total_j / horizon_s.max(1e-12);
+    let j_per_image =
+        if inp.completed > 0 { total_j / inp.completed as f64 } else { 0.0 };
+    let peak_window_w = inp
+        .window_w
+        .iter()
+        .copied()
+        .fold(avg_cluster_w, f64::max);
+    EnergyReport {
+        total_j,
+        j_per_image,
+        avg_cluster_w,
+        peak_window_w,
+        reconfig_j,
+        edp_j_s: j_per_image * inp.mean_latency_ms / 1e3,
+        node_avg_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pm() -> PowerModel {
+        PowerModel::zynq7020()
+    }
+
+    fn cfg() -> VtaConfig {
+        VtaConfig::table1_zynq7000()
+    }
+
+    #[test]
+    fn analytic_bounds_and_identities() {
+        let util = [1.0, 0.5, 0.25];
+        let r = analytic_power(&pm(), &cfg(), &util, 10.0, 200_000.0, 1_000_000, 30.0);
+        // every node between idle floor and active ceiling
+        for (&u, &w) in util.iter().zip(&r.node_watts) {
+            assert!(w >= pm().idle_w() - 1e-9, "node {w} below idle");
+            assert!(w <= pm().active_w(&cfg()) + 1e-9, "node {w} above active");
+            assert!(w > pm().idle_w() || u == 0.0);
+        }
+        assert!(r.cluster_peak_w >= r.cluster_avg_w);
+        // img/s/W is exactly the reciprocal of J/image
+        assert!((r.img_per_sec_per_w * r.j_per_image - 1.0).abs() < 1e-9);
+        // EDP = J/img × latency
+        assert!((r.edp_j_s - r.j_per_image * 0.030).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_cluster_draws_the_floor() {
+        let r = analytic_power(&pm(), &cfg(), &[0.0, 0.0], 5.0, 0.0, 0, 5.0);
+        let floor = 2.0 * pm().idle_w() + 3.0 * pm().switch_port_w;
+        assert!((r.cluster_avg_w - floor).abs() < 1e-9, "{}", r.cluster_avg_w);
+    }
+
+    #[test]
+    fn des_integral_matches_analytic_by_construction() {
+        // a synthetic perfectly-steady run: 100 images over 1 s, each
+        // keeping node 0 busy 10 ms and node 1 busy 4 ms, 2 kB wire each
+        let busy = [100u64 * 10_000_000, 100 * 4_000_000];
+        let inp = DesEnergyInputs {
+            horizon_ns: 1_000_000_000,
+            busy_ns: &busy,
+            completed: 100,
+            delivered_bytes: 100 * 2_000,
+            weight_bytes: 50_000,
+            reconfig_downtime_ms: 0.0,
+            reconfig_overdraw_w: 0.0,
+            window_w: &[],
+            mean_latency_ms: 12.0,
+        };
+        let des = integrate_energy(&pm(), &cfg(), &inp);
+        let analytic =
+            analytic_power(&pm(), &cfg(), &[1.0, 0.4], 10.0, 2_000.0, 50_000, 12.0);
+        let rel = (des.j_per_image - analytic.j_per_image).abs() / analytic.j_per_image;
+        assert!(rel < 1e-9, "meters drifted: {rel}");
+    }
+
+    #[test]
+    fn reconfig_energy_charged_per_node() {
+        let busy = [0u64, 0];
+        let base = DesEnergyInputs {
+            horizon_ns: 1_000_000_000,
+            busy_ns: &busy,
+            completed: 1,
+            delivered_bytes: 0,
+            weight_bytes: 0,
+            reconfig_downtime_ms: 0.0,
+            reconfig_overdraw_w: 0.8,
+            window_w: &[],
+            mean_latency_ms: 1.0,
+        };
+        let without = integrate_energy(&pm(), &cfg(), &base);
+        let with = integrate_energy(
+            &pm(),
+            &cfg(),
+            &DesEnergyInputs { reconfig_downtime_ms: 100.0, ..base },
+        );
+        let expect = 0.1 * 0.8 * 2.0;
+        assert!((with.total_j - without.total_j - expect).abs() < 1e-9);
+        assert!(with.reconfig_j > 0.0 && without.reconfig_j == 0.0);
+    }
+
+    #[test]
+    fn peak_window_at_least_average() {
+        let busy = [500_000_000u64];
+        let inp = DesEnergyInputs {
+            horizon_ns: 1_000_000_000,
+            busy_ns: &busy,
+            completed: 10,
+            delivered_bytes: 0,
+            weight_bytes: 0,
+            reconfig_downtime_ms: 0.0,
+            reconfig_overdraw_w: 0.0,
+            window_w: &[3.0, 9.5, 4.0],
+            mean_latency_ms: 1.0,
+        };
+        let r = integrate_energy(&pm(), &cfg(), &inp);
+        assert!(r.peak_window_w >= r.avg_cluster_w);
+        assert!(r.peak_window_w >= 9.5);
+        assert_eq!(r.node_avg_w.len(), 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! Power and energy subsystem (DESIGN.md §11).
+//!
+//! The paper targets "the best performance regarding latency **and
+//! power efficiency**"; this module supplies the second axis:
+//!
+//! * [`model`]  — per-board electrical model: PS/PL static floor, PL
+//!               dynamic draw scaled by the active VTA config's
+//!               DSP/BRAM/LUT footprint and clock, DRAM/Ethernet pJ per
+//!               byte, switch-port and reconfiguration power
+//! * [`meter`]  — the shared energy accounting: the analytic simulator's
+//!               per-image [`PowerReport`] and the DES's time-integrated
+//!               [`EnergyReport`], built from the same terms so the two
+//!               pin each other (property-tested to < 5 %)
+//! * [`eco`]    — the fifth scheduling strategy: minimize J/image
+//!               subject to a latency SLO
+//! * [`pareto`] — the latency-vs-watts frontier over (board family ×
+//!               node count × strategy), behind the CLI `power`
+//!               subcommand
+
+pub mod eco;
+pub mod meter;
+pub mod model;
+pub mod pareto;
+
+pub use eco::{eco_plan, EcoChoice};
+pub use meter::{analytic_power, integrate_energy, EnergyReport, PowerReport};
+pub use model::{PlUsage, PowerModel};
+pub use pareto::{frontier, most_efficient, pareto_sweep, ParetoPoint};

@@ -1,0 +1,249 @@
+//! Latency-vs-watts Pareto frontier over deployment configurations
+//! (DESIGN.md §11, EXPERIMENTS.md §E11).
+//!
+//! "Which cluster should I build?" has two axes once power is modeled:
+//! a 12-board Zynq stack and a 3-board US+ stack may hit the same
+//! ms/image at very different wall draw. [`pareto_sweep`] enumerates
+//! (board family × node count × §II-C strategy), prices every cell with
+//! the metered analytic simulator, and marks each configuration as
+//! frontier or dominated: a cell is **dominated** when some other cell
+//! is at least as fast *and* draws at most as many watts, with one of
+//! the two strictly better. The surviving frontier is monotone by
+//! construction — sorted by watts, ms/image strictly decreases — which
+//! the CLI `power` subcommand prints and the unit tests pin.
+
+use super::eco::eco_plan;
+use crate::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig};
+use crate::graph::zoo;
+use crate::sched::{build_plan, Strategy};
+use crate::sim::{simulate, CostModel, SimConfig};
+
+/// One priced deployment configuration.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub family: BoardFamily,
+    pub strategy: Strategy,
+    pub nodes: usize,
+    pub ms_per_image: f64,
+    /// Unloaded end-to-end latency, ms.
+    pub latency_ms: f64,
+    /// Steady-state cluster draw at saturation, W.
+    pub cluster_w: f64,
+    pub j_per_image: f64,
+    pub img_per_sec_per_w: f64,
+    /// True when another configuration is ≤ on both axes and < on one.
+    pub dominated: bool,
+}
+
+/// The paper's per-family cluster-size ceilings (12 Zynq / 5 US+).
+pub fn family_max_nodes(family: BoardFamily) -> usize {
+    match family {
+        BoardFamily::Zynq7000 => 12,
+        BoardFamily::UltraScalePlus => 5,
+    }
+}
+
+/// Enumerate and price every (family × n × strategy) cell for `model`.
+/// `max_nodes = 0` uses each family's paper ceiling; smaller values
+/// clamp the sweep (the bench's fast mode). Points come back sorted by
+/// watts with `dominated` filled in.
+pub fn pareto_sweep(
+    model: &str,
+    families: &[BoardFamily],
+    max_nodes: usize,
+    calib: &Calibration,
+) -> anyhow::Result<Vec<ParetoPoint>> {
+    anyhow::ensure!(!families.is_empty(), "no board families to sweep");
+    let g = zoo::build(model, 0)?;
+    let mut points = Vec::new();
+    for &family in families {
+        let board = BoardProfile::for_family(family);
+        let vta = board.default_vta();
+        let mut cost = CostModel::new(vta.clone(), board, calib.clone());
+        let ceiling = family_max_nodes(family);
+        let top = if max_nodes == 0 { ceiling } else { max_nodes.min(ceiling) };
+        for n in 1..=top {
+            let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta.clone());
+            let seg_costs = cost.seg_cost_table(&g)?;
+            let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
+            for s in Strategy::all() {
+                let plan = build_plan(s, &g, n, lookup)?;
+                let sim = simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images: 16 })?;
+                points.push(ParetoPoint {
+                    family,
+                    strategy: s,
+                    nodes: n,
+                    ms_per_image: sim.ms_per_image,
+                    latency_ms: sim.latency_ms.mean(),
+                    cluster_w: sim.power.cluster_avg_w,
+                    j_per_image: sim.power.j_per_image,
+                    img_per_sec_per_w: sim.power.img_per_sec_per_w,
+                    dominated: false,
+                });
+            }
+        }
+    }
+    mark_dominated(&mut points);
+    points.sort_by(|a, b| {
+        a.cluster_w
+            .partial_cmp(&b.cluster_w)
+            .unwrap()
+            .then(a.ms_per_image.partial_cmp(&b.ms_per_image).unwrap())
+    });
+    Ok(points)
+}
+
+/// Fill [`ParetoPoint::dominated`]: (watts, ms/image) weak dominance
+/// with at least one strict axis.
+pub fn mark_dominated(points: &mut [ParetoPoint]) {
+    let snapshot: Vec<(f64, f64)> =
+        points.iter().map(|p| (p.cluster_w, p.ms_per_image)).collect();
+    for (i, p) in points.iter_mut().enumerate() {
+        p.dominated = snapshot.iter().enumerate().any(|(j, &(w, ms))| {
+            j != i
+                && w <= p.cluster_w
+                && ms <= p.ms_per_image
+                && (w < p.cluster_w || ms < p.ms_per_image)
+        });
+    }
+}
+
+/// The non-dominated subset, sorted by watts. Monotone: ms/image
+/// strictly decreases as watts increase (ties collapse to one point —
+/// dominance removed them already, bar exact duplicates).
+pub fn frontier(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut f: Vec<ParetoPoint> =
+        points.iter().filter(|p| !p.dominated).cloned().collect();
+    f.sort_by(|a, b| a.cluster_w.partial_cmp(&b.cluster_w).unwrap());
+    // exact duplicates on both axes dominate nothing and survive
+    // `mark_dominated`; keep the first of each
+    f.dedup_by(|a, b| a.cluster_w == b.cluster_w && a.ms_per_image == b.ms_per_image);
+    f
+}
+
+/// The frontier point with the best images/s/W, if any.
+pub fn most_efficient(points: &[ParetoPoint]) -> Option<&ParetoPoint> {
+    points
+        .iter()
+        .filter(|p| !p.dominated)
+        .max_by(|a, b| a.img_per_sec_per_w.partial_cmp(&b.img_per_sec_per_w).unwrap())
+}
+
+/// Energy-optimal plan for one family at a fixed cluster size under an
+/// optional latency SLO — the `power --slo` path of the CLI.
+pub fn eco_for_family(
+    model: &str,
+    family: BoardFamily,
+    nodes: usize,
+    slo_ms: Option<f64>,
+    calib: &Calibration,
+) -> anyhow::Result<super::eco::EcoChoice> {
+    let g = zoo::build(model, 0)?;
+    let board = BoardProfile::for_family(family);
+    let vta = board.default_vta();
+    let mut cost = CostModel::new(vta.clone(), board, calib.clone());
+    let cluster = ClusterConfig::homogeneous(family, nodes).with_vta(vta);
+    eco_plan(&g, &cluster, &mut cost, slo_ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep_small() -> Vec<ParetoPoint> {
+        pareto_sweep(
+            "lenet5",
+            &[BoardFamily::Zynq7000, BoardFamily::UltraScalePlus],
+            3,
+            &Calibration::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn frontier_is_monotone_and_undominated() {
+        let points = sweep_small();
+        assert_eq!(points.len(), 2 * 3 * 4, "2 families × 3 sizes × 4 strategies");
+        let f = frontier(&points);
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[1].cluster_w > w[0].cluster_w, "frontier not watt-sorted");
+            assert!(
+                w[1].ms_per_image < w[0].ms_per_image,
+                "frontier not monotone: {:.2} W/{:.3} ms then {:.2} W/{:.3} ms",
+                w[0].cluster_w,
+                w[0].ms_per_image,
+                w[1].cluster_w,
+                w[1].ms_per_image
+            );
+        }
+        // no frontier point may be dominated by any sweep point
+        for p in &f {
+            for q in &points {
+                assert!(
+                    !(q.cluster_w <= p.cluster_w
+                        && q.ms_per_image <= p.ms_per_image
+                        && (q.cluster_w < p.cluster_w || q.ms_per_image < p.ms_per_image)),
+                    "frontier point dominated by {:?} n={}",
+                    q.strategy,
+                    q.nodes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_clusters_draw_more_watts() {
+        let points = sweep_small();
+        let w = |n: usize| {
+            points
+                .iter()
+                .filter(|p| {
+                    p.nodes == n
+                        && p.family == BoardFamily::Zynq7000
+                        && p.strategy == Strategy::ScatterGather
+                })
+                .map(|p| p.cluster_w)
+                .next()
+                .unwrap()
+        };
+        assert!(w(3) > w(2) && w(2) > w(1));
+    }
+
+    #[test]
+    fn most_efficient_is_on_the_frontier() {
+        let points = sweep_small();
+        let best = most_efficient(&points).unwrap();
+        assert!(!best.dominated);
+        for p in &points {
+            assert!(best.img_per_sec_per_w >= p.img_per_sec_per_w || p.dominated);
+        }
+    }
+
+    #[test]
+    fn mark_dominated_basic_geometry() {
+        let mk = |w: f64, ms: f64| ParetoPoint {
+            family: BoardFamily::Zynq7000,
+            strategy: Strategy::ScatterGather,
+            nodes: 1,
+            ms_per_image: ms,
+            latency_ms: ms,
+            cluster_w: w,
+            j_per_image: w * ms / 1e3,
+            img_per_sec_per_w: 1e3 / (w * ms),
+            dominated: false,
+        };
+        let mut pts = vec![mk(10.0, 5.0), mk(12.0, 6.0), mk(20.0, 2.0)];
+        mark_dominated(&mut pts);
+        assert!(!pts[0].dominated);
+        assert!(pts[1].dominated, "strictly worse on both axes");
+        assert!(!pts[2].dominated, "faster, pricier point stays");
+    }
+
+    #[test]
+    fn unknown_model_and_empty_families_rejected() {
+        assert!(pareto_sweep("nope", &[BoardFamily::Zynq7000], 2, &Calibration::default())
+            .is_err());
+        assert!(pareto_sweep("lenet5", &[], 2, &Calibration::default()).is_err());
+    }
+}

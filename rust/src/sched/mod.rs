@@ -8,7 +8,12 @@
 //! * [`online`]     — online reconfiguration controller: watches load
 //!                    signals from the DES and switches plans when the
 //!                    drain-time break-even beats the reconfiguration
-//!                    downtime
+//!                    downtime; with a power budget it also sheds watts
+//!                    (DESIGN.md §11)
+//!
+//! A fifth, power-aware strategy ([`Strategy::Eco`]: minimize J/image
+//! under a latency SLO) lives in [`crate::power::eco`] because it needs
+//! the metered simulator, not just a segment-time oracle.
 
 pub mod online;
 pub mod plan;

@@ -24,6 +24,13 @@
 //! capacity gain) so the controller cannot flap. Under sustained low
 //! load it instead picks the lowest-*latency* candidate with enough
 //! headroom — the paper's latency/throughput trade made continuous.
+//!
+//! With a power budget set ([`ControllerConfig::power_budget_w`],
+//! DESIGN.md §11) the controller also watches the DES-measured cluster
+//! draw: when its EMA exceeds the budget it downshifts to the candidate
+//! with the lowest saturated draw, and the throughput branches never
+//! activate a plan whose saturated draw exceeds the budget — watts are
+//! a hard constraint, latency only a preference.
 
 use crate::config::{ClusterConfig, ReconfigCost};
 use crate::graph::Graph;
@@ -42,6 +49,12 @@ pub struct PlanOption {
     pub capacity_img_per_sec: f64,
     /// Unloaded single-image latency, ms.
     pub latency_ms: f64,
+    /// Steady-state cluster draw at saturation, W (from the metered
+    /// analytic simulator) — what the `--power-budget` cap compares
+    /// candidates by.
+    pub avg_power_w: f64,
+    /// Energy per inference at saturation, J.
+    pub j_per_image: f64,
 }
 
 /// Build and price one candidate per strategy for `g` over `cluster`.
@@ -64,6 +77,8 @@ pub fn plan_options(
             plan,
             capacity_img_per_sec: 1e3 / sim.ms_per_image,
             latency_ms: sim.latency_ms.mean(),
+            avg_power_w: sim.power.cluster_avg_w,
+            j_per_image: sim.power.j_per_image,
         });
     }
     Ok(out)
@@ -90,6 +105,10 @@ pub fn validate_options(
             o.capacity_img_per_sec.is_finite() && o.capacity_img_per_sec > 0.0,
             "option {i} has non-positive capacity"
         );
+        anyhow::ensure!(
+            o.avg_power_w.is_finite() && o.avg_power_w > 0.0,
+            "option {i} has non-positive power"
+        );
     }
     Ok(())
 }
@@ -115,6 +134,14 @@ pub struct ControllerConfig {
     pub dwell_ms: f64,
     /// EMA weight of the newest window's arrival rate, in (0, 1].
     pub rate_ema_alpha: f64,
+    /// Cluster power budget, W. `Some(b)`: when the smoothed measured
+    /// draw exceeds `b`, downshift to the candidate with the lowest
+    /// saturated draw, and never upgrade to a plan whose saturated draw
+    /// exceeds `b`. `None`: power is unconstrained (the pre-§11
+    /// behavior).
+    pub power_budget_w: Option<f64>,
+    /// EMA weight of the newest window's measured draw, in (0, 1].
+    pub power_ema_alpha: f64,
 }
 
 impl Default for ControllerConfig {
@@ -128,6 +155,8 @@ impl Default for ControllerConfig {
             max_latency_ratio: 0.9,
             dwell_ms: 1000.0,
             rate_ema_alpha: 0.5,
+            power_budget_w: None,
+            power_ema_alpha: 0.5,
         }
     }
 }
@@ -148,6 +177,13 @@ impl ControllerConfig {
             self.rate_ema_alpha > 0.0 && self.rate_ema_alpha <= 1.0,
             "rate_ema_alpha out of range"
         );
+        if let Some(b) = self.power_budget_w {
+            anyhow::ensure!(b.is_finite() && b > 0.0, "power budget must be > 0 W");
+        }
+        anyhow::ensure!(
+            self.power_ema_alpha > 0.0 && self.power_ema_alpha <= 1.0,
+            "power_ema_alpha out of range"
+        );
         Ok(())
     }
 }
@@ -165,6 +201,9 @@ pub struct Observation {
     pub backlog: usize,
     /// Index of the currently active option.
     pub active: usize,
+    /// Measured cluster draw over the window (static floor + dynamic
+    /// compute share; the DES computes it from its busy timeline), W.
+    pub avg_power_w_in_window: f64,
 }
 
 /// A reconfiguration the controller asks the simulator to execute.
@@ -185,6 +224,7 @@ pub struct OnlineController {
     pub cfg: ControllerConfig,
     pub reconfig: ReconfigCost,
     lambda_ema: Option<f64>,
+    power_ema: Option<f64>,
     last_switch_ms: f64,
 }
 
@@ -192,12 +232,23 @@ impl OnlineController {
     pub fn new(cfg: ControllerConfig, reconfig: ReconfigCost) -> anyhow::Result<Self> {
         cfg.validate()?;
         reconfig.validate()?;
-        Ok(OnlineController { cfg, reconfig, lambda_ema: None, last_switch_ms: f64::NEG_INFINITY })
+        Ok(OnlineController {
+            cfg,
+            reconfig,
+            lambda_ema: None,
+            power_ema: None,
+            last_switch_ms: f64::NEG_INFINITY,
+        })
     }
 
     /// Smoothed arrival-rate estimate (img/s), if any window was seen.
     pub fn lambda_hat(&self) -> Option<f64> {
         self.lambda_ema
+    }
+
+    /// Smoothed measured cluster draw (W), if any window was seen.
+    pub fn power_hat(&self) -> Option<f64> {
+        self.power_ema
     }
 
     /// Consult the policy with a fresh observation. `None` = keep the
@@ -212,6 +263,12 @@ impl OnlineController {
             Some(prev) => (1.0 - alpha) * prev + alpha * lambda_now,
         };
         self.lambda_ema = Some(lam);
+        let p_alpha = self.cfg.power_ema_alpha;
+        let p_ema = match self.power_ema {
+            None => obs.avg_power_w_in_window,
+            Some(prev) => (1.0 - p_alpha) * prev + p_alpha * obs.avg_power_w_in_window,
+        };
+        self.power_ema = Some(p_ema);
 
         if obs.now_ms - self.last_switch_ms < self.cfg.dwell_ms {
             return None;
@@ -220,12 +277,50 @@ impl OnlineController {
         let mu_cur = cur.capacity_img_per_sec;
         let backlog_ms = obs.backlog as f64 / mu_cur * 1e3;
 
+        // hard power cap: smoothed draw above budget → shed watts first.
+        // Downshift to the lowest-saturated-draw candidate (ties broken
+        // toward capacity); if the cluster is already on it, hold — the
+        // throughput branches below must not upgrade past the budget.
+        if let Some(budget) = self.cfg.power_budget_w {
+            if p_ema > budget {
+                let (best, opt) = options.iter().enumerate().min_by(|a, b| {
+                    a.1.avg_power_w
+                        .partial_cmp(&b.1.avg_power_w)
+                        .unwrap()
+                        .then(
+                            b.1.capacity_img_per_sec
+                                .partial_cmp(&a.1.capacity_img_per_sec)
+                                .unwrap(),
+                        )
+                })?;
+                if best != obs.active && opt.avg_power_w < cur.avg_power_w {
+                    self.last_switch_ms = obs.now_ms;
+                    return Some(Decision {
+                        to: best,
+                        downtime_ms: self.reconfig.downtime_ms(),
+                        reason: format!(
+                            "power cap: drawing {p_ema:.1} W vs budget {budget:.1} W → {} \
+                             ({:.1} W saturated)",
+                            opt.plan.strategy, opt.avg_power_w
+                        ),
+                    });
+                }
+                return None;
+            }
+        }
+        // a budgeted controller never activates a plan whose saturated
+        // draw exceeds the budget, whatever the load says
+        let in_budget = |o: &PlanOption| {
+            self.cfg.power_budget_w.map(|b| o.avg_power_w <= b).unwrap_or(true)
+        };
+
         let overloaded =
             lam > self.cfg.overload_util * mu_cur || backlog_ms > self.cfg.backlog_high_ms;
         if overloaded {
             let (best, opt) = options
                 .iter()
                 .enumerate()
+                .filter(|(_, o)| in_budget(o))
                 .max_by(|a, b| {
                     a.1.capacity_img_per_sec.partial_cmp(&b.1.capacity_img_per_sec).unwrap()
                 })?;
@@ -267,7 +362,7 @@ impl OnlineController {
             let best = options
                 .iter()
                 .enumerate()
-                .filter(|(_, o)| o.capacity_img_per_sec >= headroom)
+                .filter(|(_, o)| o.capacity_img_per_sec >= headroom && in_budget(o))
                 .min_by(|a, b| a.1.latency_ms.partial_cmp(&b.1.latency_ms).unwrap())?;
             if best.0 != obs.active
                 && best.1.latency_ms <= self.cfg.max_latency_ratio * cur.latency_ms
@@ -292,23 +387,49 @@ mod tests {
     use super::*;
     use crate::sched::strategies::scatter_gather;
 
-    /// Fabricate a candidate set with controlled capacities/latencies
+    /// Fabricate a candidate set with controlled capacity/latency/watts
     /// (plans are real so `validate_options` also works on them).
-    fn options(specs: &[(f64, f64)]) -> (Graph, Vec<PlanOption>) {
+    fn options3(specs: &[(f64, f64, f64)]) -> (Graph, Vec<PlanOption>) {
         let g = crate::graph::zoo::build("lenet5", 0).unwrap();
         let opts = specs
             .iter()
-            .map(|&(cap, lat)| PlanOption {
+            .map(|&(cap, lat, watts)| PlanOption {
                 plan: scatter_gather(&g, 1).unwrap(),
                 capacity_img_per_sec: cap,
                 latency_ms: lat,
+                avg_power_w: watts,
+                j_per_image: watts / cap,
             })
             .collect();
         (g, opts)
     }
 
+    /// Capacity/latency specs with a common nominal draw.
+    fn options(specs: &[(f64, f64)]) -> (Graph, Vec<PlanOption>) {
+        let full: Vec<(f64, f64, f64)> =
+            specs.iter().map(|&(cap, lat)| (cap, lat, 12.0)).collect();
+        options3(&full)
+    }
+
     fn obs(now_ms: f64, arrivals: u64, backlog: usize, active: usize) -> Observation {
-        Observation { now_ms, window_ms: 100.0, arrivals_in_window: arrivals, backlog, active }
+        obs_w(now_ms, arrivals, backlog, active, 12.0)
+    }
+
+    fn obs_w(
+        now_ms: f64,
+        arrivals: u64,
+        backlog: usize,
+        active: usize,
+        watts: f64,
+    ) -> Observation {
+        Observation {
+            now_ms,
+            window_ms: 100.0,
+            arrivals_in_window: arrivals,
+            backlog,
+            active,
+            avg_power_w_in_window: watts,
+        }
     }
 
     fn controller() -> OnlineController {
@@ -373,6 +494,70 @@ mod tests {
         assert!(c.decide(&opts, &obs(100.0, 6, 2, 0)).is_none());
     }
 
+    fn capped(budget: f64) -> OnlineController {
+        OnlineController::new(
+            ControllerConfig {
+                rate_ema_alpha: 1.0,
+                power_ema_alpha: 1.0,
+                power_budget_w: Some(budget),
+                ..Default::default()
+            },
+            ReconfigCost::zynq7020(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn over_budget_downshifts_to_cheapest_plan() {
+        // active 0 draws 18 W saturated; option 1 is the frugal one
+        let (_, opts) = options3(&[(200.0, 5.0, 18.0), (80.0, 7.0, 11.0)]);
+        let mut c = capped(14.0);
+        let d = c.decide(&opts, &obs_w(100.0, 5, 0, 0, 17.5)).expect("should shed watts");
+        assert_eq!(d.to, 1);
+        assert!(d.reason.contains("power cap"), "{}", d.reason);
+        assert!((c.power_hat().unwrap() - 17.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn over_budget_on_cheapest_plan_holds() {
+        let (_, opts) = options3(&[(80.0, 7.0, 11.0), (200.0, 5.0, 18.0)]);
+        let mut c = capped(10.0);
+        // over budget but nothing cheaper exists → hold, and crucially
+        // do NOT let the overload branch grab the 18 W plan
+        assert!(c.decide(&opts, &obs_w(100.0, 20, 50, 0, 11.0)).is_none());
+    }
+
+    #[test]
+    fn budget_blocks_hungry_upgrade_under_overload() {
+        // overloaded on 0; the highest-capacity plan (1) busts the
+        // budget, so the upgrade must pick the in-budget option 2
+        let (_, opts) =
+            options3(&[(50.0, 5.0, 12.0), (300.0, 8.0, 20.0), (150.0, 6.0, 13.0)]);
+        let mut c = capped(14.0);
+        let d = c.decide(&opts, &obs_w(100.0, 10, 40, 0, 12.0)).expect("should upgrade");
+        assert_eq!(d.to, 2, "picked an over-budget plan: {}", d.reason);
+        // without the budget the same observation picks the 20 W plan
+        let mut free = controller();
+        let d = free.decide(&opts, &obs(100.0, 10, 40, 0)).unwrap();
+        assert_eq!(d.to, 1);
+    }
+
+    #[test]
+    fn under_budget_draw_does_not_trigger_power_branch() {
+        let (_, opts) = options3(&[(200.0, 5.0, 18.0), (80.0, 7.0, 11.0)]);
+        let mut c = capped(14.0);
+        // drawing 12 W < 14 W budget, moderate load: hold
+        assert!(c.decide(&opts, &obs_w(100.0, 10, 0, 0, 12.0)).is_none());
+    }
+
+    #[test]
+    fn budget_validation() {
+        let bad = ControllerConfig { power_budget_w: Some(0.0), ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ControllerConfig { power_ema_alpha: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
     #[test]
     fn validate_options_rejects_foreign_plan() {
         let (g, opts) = options(&[(100.0, 5.0)]);
@@ -397,6 +582,9 @@ mod tests {
         validate_options(&opts, &g, 3).unwrap();
         for o in &opts {
             assert!(o.capacity_img_per_sec > 0.0 && o.latency_ms > 0.0);
+            // priced power: at least the 3-node idle floor, and finite
+            assert!(o.avg_power_w > 3.0 * 2.0, "implausible draw {}", o.avg_power_w);
+            assert!(o.j_per_image > 0.0 && o.j_per_image.is_finite());
         }
     }
 }

@@ -19,6 +19,12 @@ pub enum Strategy {
     CoreAssign,
     Pipeline,
     Fused,
+    /// The fifth, power-aware strategy (DESIGN.md §11): pick the
+    /// schedule minimizing J/image subject to a latency SLO. Built by
+    /// [`crate::power::eco_plan`] (it needs the power model and the
+    /// metered simulator, not just a time oracle), so it is not part of
+    /// [`Strategy::all`] — that array stays the paper's §II-C four.
+    Eco,
 }
 
 impl Strategy {
@@ -28,9 +34,12 @@ impl Strategy {
             Strategy::CoreAssign => "ai-core-assignment",
             Strategy::Pipeline => "pipeline",
             Strategy::Fused => "fused",
+            Strategy::Eco => "eco",
         }
     }
 
+    /// The paper's four §II-C strategies (the planner candidate set;
+    /// [`Strategy::Eco`] selects *among* these, so it is excluded).
     pub fn all() -> [Strategy; 4] {
         [Strategy::ScatterGather, Strategy::CoreAssign, Strategy::Pipeline, Strategy::Fused]
     }
@@ -43,6 +52,7 @@ impl Strategy {
             }
             "pipeline" | "pipe" => Ok(Strategy::Pipeline),
             "fused" => Ok(Strategy::Fused),
+            "eco" | "eco-slo" | "power" => Ok(Strategy::Eco),
             other => anyhow::bail!("unknown strategy '{other}'"),
         }
     }
@@ -292,6 +302,10 @@ mod tests {
         for s in Strategy::all() {
             assert_eq!(Strategy::parse(s.as_str()).unwrap(), s);
         }
+        // the fifth, power-aware strategy parses but stays out of all()
+        assert_eq!(Strategy::parse("eco").unwrap(), Strategy::Eco);
+        assert_eq!(Strategy::parse(Strategy::Eco.as_str()).unwrap(), Strategy::Eco);
+        assert!(!Strategy::all().contains(&Strategy::Eco));
         assert!(Strategy::parse("bogus").is_err());
     }
 }

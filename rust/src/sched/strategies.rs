@@ -275,6 +275,12 @@ where
         Strategy::CoreAssign => core_assign(g, n, seg_cost),
         Strategy::Pipeline => pipeline(g, n, seg_cost),
         Strategy::Fused => fused(g, n, seg_cost),
+        // energy-aware selection needs the power model and the metered
+        // simulator, not just a time oracle — route through power::eco
+        Strategy::Eco => anyhow::bail!(
+            "the eco strategy is built by power::eco_plan (it needs a \
+             cluster, a cost model and an optional latency SLO)"
+        ),
     }
 }
 
@@ -401,6 +407,13 @@ mod tests {
                 bottleneck(&p)
             );
         }
+    }
+
+    #[test]
+    fn eco_needs_the_power_path() {
+        let g = g();
+        let e = build_plan(Strategy::Eco, &g, 2, |_| 1.0).unwrap_err().to_string();
+        assert!(e.contains("eco_plan"), "{e}");
     }
 
     #[test]

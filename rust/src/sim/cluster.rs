@@ -25,6 +25,7 @@ use crate::graph::Graph;
 use crate::net::link::LinkModel;
 use crate::net::mpi::MpiModel;
 use crate::net::switch::{Endpoint, Flow, SwitchSim};
+use crate::power::{analytic_power, PowerModel, PowerReport};
 use crate::sched::{ExecutionPlan, SplitMode, StagePlan};
 use crate::sim::cost::CostModel;
 use crate::util::stats::Summary;
@@ -57,6 +58,9 @@ pub struct SimResult {
     pub node_utilization: Vec<f64>,
     /// Bytes through the switch per image × images.
     pub network_bytes: u64,
+    /// Steady-state power figures (J/image, per-node watts, images/s/W)
+    /// from the board-family [`PowerModel`] — DESIGN.md §11.
+    pub power: PowerReport,
 }
 
 /// Books transfers/computes for the latency path.
@@ -397,16 +401,26 @@ pub fn simulate(
     latency.push(ns_to_ms(latency_ns));
     let makespan_ms =
         ns_to_ms(latency_ns) + ms_per_image * (sim_cfg.images.saturating_sub(1)) as f64;
-    let node_utilization = node_demand
+    let node_utilization: Vec<f64> = node_demand
         .iter()
         .map(|&d| if bottleneck_ns > 0.0 { d / bottleneck_ns } else { 0.0 })
         .collect();
+    let power = analytic_power(
+        &PowerModel::for_family(cluster.boards[0].family),
+        &cluster.vta,
+        &node_utilization,
+        ms_per_image,
+        net_bytes_per_image,
+        g.total_weight_bytes(),
+        ns_to_ms(latency_ns),
+    );
     Ok(SimResult {
         ms_per_image,
         latency_ms: latency,
         makespan_ms,
         node_utilization,
         network_bytes: (net_bytes_per_image * sim_cfg.images as f64) as u64,
+        power,
     })
 }
 
@@ -522,6 +536,38 @@ mod tests {
         let b = run(Strategy::Fused, 4, 24);
         assert_eq!(a.ms_per_image, b.ms_per_image);
         assert_eq!(a.network_bytes, b.network_bytes);
+    }
+
+    #[test]
+    fn power_report_is_bounded_and_consistent() {
+        use crate::power::PowerModel;
+        let pm = PowerModel::zynq7020();
+        let r = run(Strategy::ScatterGather, 4, 16);
+        assert_eq!(r.power.node_watts.len(), 4);
+        for (&u, &w) in r.node_utilization.iter().zip(&r.power.node_watts) {
+            assert!(w >= pm.idle_w() - 1e-9, "node below idle floor: {w}");
+            assert!(u <= 1.0001);
+        }
+        assert!(r.power.cluster_peak_w >= r.power.cluster_avg_w);
+        // the reciprocal identity the CLI prints
+        assert!((r.power.img_per_sec_per_w * r.power.j_per_image - 1.0).abs() < 1e-9);
+        // avg draw × period = J/image
+        let period_s = r.ms_per_image / 1e3;
+        assert!((r.power.cluster_avg_w * period_s - r.power.j_per_image).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scatter_gather_is_more_efficient_than_core_assign() {
+        // ai-core at small N pays driver launches + blocking transfers
+        // for every one of its 10 stages; that busy time is joules
+        let sg = run(Strategy::ScatterGather, 4, 16);
+        let ai = run(Strategy::CoreAssign, 4, 16);
+        assert!(
+            sg.power.j_per_image < ai.power.j_per_image,
+            "sg {} J vs ai-core {} J",
+            sg.power.j_per_image,
+            ai.power.j_per_image
+        );
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! [`crate::sched::ExecutionPlan`] with an open-loop arrival process
 //! through the same calibrated transfer ([`MpiModel`]/[`SwitchSim`])
 //! and compute ([`CostModel`]) costs, and reports p50/p95/p99 latency,
-//! queue-depth timelines and per-node utilization.
+//! queue-depth timelines, per-node utilization and — via the board
+//! [`PowerModel`] — the energy the run consumed (average/peak cluster
+//! watts, total joules, J/image, energy-delay product).
 //!
 //! **Accounting identity.** Per image, the DES charges every resource
 //! exactly what the steady-state model counts as that resource's
@@ -30,6 +32,8 @@ use crate::graph::Graph;
 use crate::net::link::LinkModel;
 use crate::net::mpi::MpiModel;
 use crate::net::switch::{Endpoint, Flow, SwitchSim};
+use crate::power::meter::DesEnergyInputs;
+use crate::power::{integrate_energy, EnergyReport, PowerModel};
 use crate::sched::online::{validate_options, Observation, OnlineController, PlanOption};
 use crate::sched::{SplitMode, Strategy};
 use crate::sim::cluster::{stage_io_bytes, stage_service_times};
@@ -258,6 +262,10 @@ pub struct DesResult {
     /// Index of the plan active when the horizon closed.
     pub final_plan: usize,
     pub network_bytes: u64,
+    /// Time-integrated energy over the run: busy/idle draw per node,
+    /// delivered-byte DRAM/Ethernet energy, switch ports, and the
+    /// reconfiguration overdraw of every executed switch (DESIGN.md §11).
+    pub power: EnergyReport,
 }
 
 /// A plan pre-priced for event-driven execution.
@@ -322,6 +330,10 @@ struct Resources<'a> {
     serial_frac: f64,
     horizon: Nanos,
     network_bytes: u64,
+    /// Wire bytes of transfers whose arrival fell inside the horizon —
+    /// the energy meter charges these; bookings that only land after the
+    /// horizon have not moved yet and carry no joules.
+    delivered_bytes: u64,
 }
 
 impl Resources<'_> {
@@ -375,6 +387,9 @@ impl Resources<'_> {
             }
         }
         self.network_bytes += bytes;
+        if arrival <= self.horizon {
+            self.delivered_bytes += bytes;
+        }
         arrival
     }
 
@@ -444,7 +459,16 @@ pub fn run_des(
         serial_frac: cost.model.calib.ps_serial_frac,
         horizon,
         network_bytes: 0,
+        delivered_bytes: 0,
     };
+
+    // power metering: idle floor + switch ports draw for the whole run;
+    // per-window dynamic draw feeds the controller's power signal
+    let pm = PowerModel::for_family(cluster.boards[0].family);
+    let dyn_w = pm.pl_dynamic_w(&cluster.vta);
+    let static_w = n as f64 * pm.idle_w() + (n as f64 + 1.0) * pm.switch_port_w;
+    let mut prev_busy: Vec<u64> = vec![0; n];
+    let mut window_w: Vec<f64> = Vec::new();
 
     let mut gen = ArrivalGen::new(cfg.arrival.clone(), cfg.seed);
     let mut heap: BinaryHeap<QEntry> = BinaryHeap::new();
@@ -545,6 +569,17 @@ pub fn run_des(
             }
             Ev::Control => {
                 timeline.push((ns_to_ms(now), in_flight));
+                // cluster draw over the closing window: static floor plus
+                // dynamic power weighted by each node's busy share (the
+                // FIFO books work ahead of `now`, so clamp each delta to
+                // the window — a node cannot be busier than 100 %)
+                let mut w = static_w;
+                for (i, pb) in prev_busy.iter_mut().enumerate() {
+                    let delta = res.busy_ns[i].saturating_sub(*pb) as f64;
+                    w += dyn_w * (delta / sample_ns as f64).min(1.0);
+                    *pb = res.busy_ns[i];
+                }
+                window_w.push(w);
                 if let Some(ctrl) = controller.as_deref_mut() {
                     let obs = Observation {
                         now_ms: ns_to_ms(now),
@@ -552,6 +587,7 @@ pub fn run_des(
                         arrivals_in_window: win_arrivals,
                         backlog: in_flight,
                         active,
+                        avg_power_w_in_window: w,
                     };
                     if let Some(d) = ctrl.decide(options, &obs) {
                         // the invariant the integration tests pin: no
@@ -584,6 +620,21 @@ pub fn run_des(
     }
 
     let horizon_sec = cfg.horizon_ms / 1e3;
+    let power = integrate_energy(
+        &pm,
+        &cluster.vta,
+        &DesEnergyInputs {
+            horizon_ns: horizon,
+            busy_ns: &res.busy_ns,
+            completed,
+            delivered_bytes: res.delivered_bytes,
+            weight_bytes: g.total_weight_bytes(),
+            reconfig_downtime_ms: downtime_ms,
+            reconfig_overdraw_w: pm.reconfig_w,
+            window_w: &window_w,
+            mean_latency_ms: latency.mean(),
+        },
+    );
     Ok(DesResult {
         seed: cfg.seed,
         offered,
@@ -603,6 +654,7 @@ pub fn run_des(
         downtime_ms,
         final_plan: active,
         network_bytes: res.network_bytes,
+        power,
     })
 }
 
@@ -752,6 +804,61 @@ mod tests {
             a.offered != c.offered || a.latency_ms.p50() != c.latency_ms.p50(),
             "seed change did not alter the run"
         );
+    }
+
+    #[test]
+    fn underload_power_sits_near_the_idle_floor() {
+        let (g, cluster, mut cost) = setup("lenet5", 2);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::Pipeline])
+                .unwrap();
+        let cap = opts[0].capacity_img_per_sec;
+        let cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 0.05 * cap },
+            4000.0,
+            21,
+        );
+        let r = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        let pm = crate::power::PowerModel::zynq7020();
+        let floor = 2.0 * pm.idle_w() + 3.0 * pm.switch_port_w;
+        let ceil = 2.0 * pm.active_w(&cluster.vta) + 3.0 * pm.switch_port_w;
+        assert!(r.power.avg_cluster_w >= floor - 1e-9, "{}", r.power.avg_cluster_w);
+        // at 5 % load the cluster must sit much closer to idle than peak
+        assert!(
+            r.power.avg_cluster_w < floor + 0.3 * (ceil - floor),
+            "avg {} W vs floor {floor} W",
+            r.power.avg_cluster_w
+        );
+        assert!(r.power.peak_window_w >= r.power.avg_cluster_w);
+        assert!(r.power.total_j > 0.0 && r.power.j_per_image > 0.0);
+    }
+
+    #[test]
+    fn saturation_draws_more_than_underload() {
+        let (g, cluster, mut cost) = setup("lenet5", 3);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::ScatterGather])
+                .unwrap();
+        let cap = opts[0].capacity_img_per_sec;
+        let run = |cost: &mut CostModel, rate: f64| {
+            let cfg = DesConfig::new(
+                ArrivalProcess::Poisson { rate_per_sec: rate },
+                (400.0 / cap) * 1e3,
+                13,
+            );
+            run_des(&opts, 0, &cluster, cost, &g, &cfg, None).unwrap()
+        };
+        let light = run(&mut cost, 0.1 * cap);
+        let heavy = run(&mut cost, 3.0 * cap);
+        assert!(
+            heavy.power.avg_cluster_w > light.power.avg_cluster_w,
+            "saturated {} W vs light {} W",
+            heavy.power.avg_cluster_w,
+            light.power.avg_cluster_w
+        );
+        // energy is part of the deterministic contract
+        let heavy2 = run(&mut cost, 3.0 * cap);
+        assert_eq!(heavy.power.total_j, heavy2.power.total_j);
     }
 
     #[test]

@@ -10,6 +10,11 @@
 //!                 arrival processes, per-node FIFO queues, tail-latency
 //!                 and queue-depth reporting, and mid-run plan switches
 //!                 with charged reconfiguration downtime
+//!
+//! Both simulators are energy-metered by [`crate::power`]: the analytic
+//! path reports steady-state J/image and per-node watts, the DES
+//! integrates joules over its busy/idle timeline — and the two figures
+//! pin each other at saturation (property-tested to < 5 %).
 
 pub mod cluster;
 pub mod cost;

@@ -188,6 +188,57 @@ fn prop_des_steady_state_matches_analytic_capacity() {
 }
 
 #[test]
+fn prop_des_energy_pins_analytic_j_per_image() {
+    // the §11 energy invariant: at steady state the DES's time-integrated
+    // J/image must match the analytic meter's figure — same per-component
+    // terms (idle floor, dynamic × busy, switch ports, per-byte DRAM/Eth),
+    // integrated vs amortized. Cross-validated like the throughput pin.
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::default(),
+    );
+    let graphs: Vec<_> =
+        zoo::names().iter().map(|m| zoo::build(m, 0).unwrap()).collect();
+    forall("des energy pins analytic", 6, |rng| {
+        let g = rng.choice(&graphs);
+        let strategy = *rng.choice(&Strategy::all());
+        let n = rng.range(1, 7);
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+        let opts = plan_options(g, &cluster, &mut cost, &[strategy])
+            .map_err(|e| e.to_string())?;
+        let cap = opts[0].capacity_img_per_sec;
+        let analytic_j = opts[0].j_per_image;
+        prop_assert!(analytic_j > 0.0 && analytic_j.is_finite(), "bad J {analytic_j}");
+        let horizon_ms = (500.0 / cap * 1e3).max(80.0 * opts[0].latency_ms);
+        let cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 3.0 * cap },
+            horizon_ms,
+            rng.next_u64(),
+        );
+        let r = run_des(&opts, 0, &cluster, &mut cost, g, &cfg, None)
+            .map_err(|e| e.to_string())?;
+        let rel = (r.power.j_per_image - analytic_j).abs() / analytic_j;
+        prop_assert!(
+            rel < 0.05,
+            "{} {strategy} n={n}: DES {:.4} J/img vs analytic {:.4} (rel {rel:.3})",
+            g.model,
+            r.power.j_per_image,
+            analytic_j
+        );
+        // and the average draw stays inside the physical envelope
+        let pm = vta_cluster::power::PowerModel::zynq7020();
+        let floor = n as f64 * pm.idle_w() + (n as f64 + 1.0) * pm.switch_port_w;
+        prop_assert!(
+            r.power.avg_cluster_w >= floor - 1e-6,
+            "draw {} below the static floor {floor}",
+            r.power.avg_cluster_w
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_json_roundtrip_arbitrary_values() {
     fn gen(rng: &mut vta_cluster::util::rng::Rng, depth: usize) -> Json {
         match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
