@@ -12,7 +12,8 @@
 use vta_cluster::config::{BoardProfile, Calibration, ClusterConfig, VtaConfig};
 use vta_cluster::graph::resnet::build_resnet18;
 use vta_cluster::runtime::artifacts_dir;
-use vta_cluster::sched::{build_plan, Strategy};
+use vta_cluster::scenario::{ScenarioSpec, Session};
+use vta_cluster::sched::{build_plan_priced, Strategy};
 use vta_cluster::sim::{simulate, CostModel, SimConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -43,19 +44,11 @@ fn main() -> anyhow::Result<()> {
     let t1 = cost.graph_time_ns(&graph)? as f64 / 1e6;
     println!("single-node compute: {t1:.2} ms/image\n");
 
-    // 4. all four strategies over the same cluster
-    let seg_costs: Vec<(String, f64)> = graph
-        .segment_order()
-        .into_iter()
-        .map(|l| {
-            let t = cost.segment_time_ns(&graph, &l, 1).unwrap() as f64;
-            (l, t)
-        })
-        .collect();
-    let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
-
+    // 4. all four strategies over the same cluster, priced through the
+    //    shared segment-cost table (a missing label is a reported error)
+    let seg_costs = cost.seg_cost_table(&graph)?;
     for strategy in Strategy::all() {
-        let plan = build_plan(strategy, &graph, n, lookup)?;
+        let plan = build_plan_priced(strategy, &graph, n, &seg_costs)?;
         let result = simulate(&plan, &cluster, &mut cost, &graph, &SimConfig::default())?;
         println!(
             "{:22} {:6.2} ms/image  (latency {:6.2} ms, busiest node {:3.0}%)",
@@ -65,5 +58,18 @@ fn main() -> anyhow::Result<()> {
             result.node_utilization.iter().fold(0.0f64, |a, &b| a.max(b)) * 100.0
         );
     }
+
+    // 5. the same cell as a declarative scenario (DESIGN.md §12): one
+    //    JSON-round-trippable spec → Session → unified Report
+    let spec = ScenarioSpec::parse(
+        r#"{"model": "resnet18", "strategy": "pipeline", "family": "zynq", "nodes": 4}"#,
+    )?;
+    let report = Session::new(spec)?.run()?;
+    let row = &report.rows[0];
+    println!(
+        "\nscenario '{}': {} → {:.2} ms/image, p99 {:.2} ms, {:.1} W, {:.4} J/image",
+        report.scenario, row.strategy, row.ms_per_image, row.p99_ms, row.cluster_avg_w,
+        row.j_per_image
+    );
     Ok(())
 }

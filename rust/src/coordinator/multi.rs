@@ -22,7 +22,7 @@ use crate::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig, VtaCo
 use crate::graph::zoo;
 use crate::runtime::TensorData;
 use crate::sched::online::PlanOption;
-use crate::sched::{build_plan, ExecutionPlan, Strategy};
+use crate::sched::{build_plan_priced, ExecutionPlan, Strategy};
 use crate::sim::{
     run_des, simulate, ArrivalProcess, CostModel, DesConfig, DesResult, SimConfig, SimResult,
 };
@@ -256,8 +256,7 @@ pub fn simulate_tenants(
             crate::power::eco_plan(g, &cluster, &mut cost, None)?.plan
         } else {
             let seg_costs = cost.seg_cost_table(g)?;
-            let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
-            build_plan(req.strategy, g, n, lookup)?
+            build_plan_priced(req.strategy, g, n, &seg_costs)?
         };
         let sim = simulate(&plan, &cluster, &mut cost, g, &SimConfig { images: req.images })?;
 

@@ -4,7 +4,7 @@
 use crate::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig, VtaConfig};
 use crate::graph::resnet::build_resnet18;
 use crate::graph::{zoo, Graph};
-use crate::sched::{build_plan, Strategy};
+use crate::sched::{build_plan_priced, Strategy};
 use crate::sim::{simulate, CostModel, SimConfig, SimResult};
 
 /// One table row: cluster size × the four strategies (ms/image).
@@ -81,8 +81,7 @@ impl Bench {
         let cost = &mut self.cost;
         // seg_cost oracle for the planners: single-split segment times
         let seg_costs = cost.seg_cost_table(&self.graph)?;
-        let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
-        let plan = build_plan(strategy, &self.graph, n, lookup)?;
+        let plan = build_plan_priced(strategy, &self.graph, n, &seg_costs)?;
         let cluster =
             ClusterConfig::homogeneous(self.family, n).with_vta(self.vta.clone());
         simulate(&plan, &cluster, cost, &self.graph, &SimConfig { images: self.images })

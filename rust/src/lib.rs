@@ -16,9 +16,14 @@
 //!   reconfiguration downtime, and a PJRT-backed serving coordinator
 //!   with a multi-tenant layer ([`coordinator::MultiCoordinator`])
 //!   running several model pipelines concurrently over a shared node
-//!   budget, and a power/energy subsystem ([`power`]) that meters both
+//!   budget, a power/energy subsystem ([`power`]) that meters both
 //!   simulators in joules, adds an energy-minimizing scheduling
-//!   strategy, and enumerates the latency-vs-watts Pareto frontier.
+//!   strategy, and enumerates the latency-vs-watts Pareto frontier, and
+//!   a declarative scenario layer ([`scenario`]) — JSON
+//!   [`scenario::ScenarioSpec`]s resolved by [`scenario::Session`] into
+//!   unified [`scenario::Report`]s, with [`scenario::Sweep`] grids over
+//!   any spec axis — that the CLI's experiment subcommands are thin
+//!   adapters over.
 //! * **Layer 2 (python/compile, build-time)** — int8 ResNet-18 in JAX,
 //!   AOT-lowered to HLO text artifacts per graph segment.
 //! * **Layer 1 (python/compile/kernels, build-time)** — the VTA GEMM and
@@ -40,6 +45,7 @@ pub mod graph;
 pub mod net;
 pub mod power;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod util;

@@ -7,9 +7,14 @@
 //!                  and write `artifacts/calibration.json`
 //! * `table`      — regenerate a paper table (`--fig 3|4`) with
 //!                  paper-vs-ours comparison
+//! * `run`        — execute a declarative scenario file
+//!                  (`examples/scenarios/*.json`, DESIGN.md §12):
+//!                  `run <scenario.json> [--set key=value ...]
+//!                  [--report out.json] [--emit-spec]`. Files with a
+//!                  `"sweep"` object expand into a tagged grid report.
 //! * `simulate`   — one cluster-size cell for any zoo model
 //!                  (`--model`, `--strategy all` compares all four §II-C
-//!                  strategies)
+//!                  strategies) — a thin adapter over `run`'s engine
 //! * `multi`      — multi-tenant run: several models share one node
 //!                  budget, each with its own strategy; per-model
 //!                  serving reports (add `--serve` for the real PJRT
@@ -28,22 +33,24 @@
 //!                  (min-J/image) plan per family (DESIGN.md §11)
 //! * `serve`      — run the real PJRT serving pipeline on a batch of
 //!                  synthetic images (end-to-end driver)
+//!
+//! `simulate`, `multi`, `load` and `power` all build a
+//! [`ScenarioSpec`] and execute it through [`Session::run`] /
+//! [`Sweep::run`] — the scenario layer is the single experiment
+//! engine; the subcommands only choose defaults and print.
 
-use vta_cluster::config::{
-    BoardFamily, BoardProfile, Calibration, ClusterConfig, ReconfigCost, VtaConfig,
-};
-use vta_cluster::coordinator::{
-    simulate_tenants, Coordinator, MultiCoordinator, TenantRequest, TenantSpec,
-};
+use vta_cluster::config::{BoardFamily, Calibration, VtaConfig};
+use vta_cluster::coordinator::{Coordinator, MultiCoordinator, TenantRequest, TenantSpec};
 use vta_cluster::exp::{calibrate, paper, runner::Bench, table};
 use vta_cluster::graph::zoo;
-use vta_cluster::power::{eco_plan, pareto};
+use vta_cluster::power::PowerModel;
 use vta_cluster::runtime::{artifacts_dir, TensorData};
-use vta_cluster::sched::{
-    build_plan, plan_options, ControllerConfig, OnlineController, PlanOption, Strategy,
+use vta_cluster::scenario::{
+    apply_overrides, pareto_ceiling, Engine, Report, ScenarioSpec, Session, Sweep,
 };
-use vta_cluster::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
+use vta_cluster::sched::{build_plan, Strategy};
 use vta_cluster::util::cli::Cli;
+use vta_cluster::util::json;
 use vta_cluster::util::rng::Rng;
 
 fn main() {
@@ -58,12 +65,12 @@ fn run() -> anyhow::Result<()> {
         .opt("fig", "3", "paper figure for `table` (3 = Zynq-7000, 4 = UltraScale+)")
         .opt("model", "resnet18", "zoo model for `simulate`/`serve` (see `info`)")
         .opt("models", "resnet18,lenet5,mlp", "tenants for `multi`: comma list of model[:strategy]")
-        .opt("strategy", "all", "strategy for `simulate` (sg|ai|pipeline|fused|all), `serve` (sg|pipeline)")
+        .opt("strategy", "all", "strategy for `simulate` (sg|ai|pipeline|fused|eco|all), `serve` (sg|pipeline)")
         .opt("nodes", "4", "cluster size for `simulate`/`serve`, shared budget for `multi`")
         .opt("images", "64", "images per run (per tenant for `multi`)")
         .opt("input-hw", "32", "input size for `serve`/`multi --serve` (32 tiny / 224 paper)")
         .opt("board", "zynq", "board family for `simulate`/`multi`/`load`/`power` (zynq|ultrascale; `power` also takes both)")
-        .opt("seed", "7", "RNG seed for stochastic paths (`simulate`/`multi`/`load`/`serve`)")
+        .opt("seed", "7", "RNG seed for stochastic paths (`simulate`/`multi`/`load`/`serve`; for `run` use --set seed=N)")
         .opt("arrival", "poisson", "`load`: arrival process (poisson|burst|diurnal)")
         .opt("rate", "0", "`load`: base arrival rate img/s (0 = auto from plan capacity)")
         .opt("burst", "4", "`load`: burst rate multiplier for `--arrival burst`")
@@ -71,11 +78,14 @@ fn run() -> anyhow::Result<()> {
         .opt("horizon", "20000", "`load`: simulated horizon in ms")
         .opt("power-budget", "0", "`load`: cluster watts cap for the controller (0 = uncapped)")
         .opt("slo", "0", "`power`/`simulate --strategy eco`: latency SLO in ms (0 = none)")
+        .opt("report", "", "`run`: write the Report JSON to this path")
+        .multi("set", "`run`: spec override `key=value` (dotted paths, repeatable)")
+        .flag("emit-spec", "`run`: print the resolved spec JSON and exit without running")
         .flag("quick", "reduced calibration grids")
         .flag("serve", "`multi`: serve real artifacts instead of simulating")
         .positional(
             "command",
-            "info | calibrate | table | simulate | multi | load | power | serve",
+            "info | calibrate | table | run | simulate | multi | load | power | serve",
         );
     let args = cli.parse()?;
     let command = args.positional.first().map(String::as_str).unwrap_or("info");
@@ -85,6 +95,17 @@ fn run() -> anyhow::Result<()> {
         "info" => info(),
         "calibrate" => calibrate_cmd(args.get_flag("quick")),
         "table" => table_cmd(args.get_usize("fig")?, args.get_usize("images")?),
+        "run" => {
+            let path = args.positional.get(1).ok_or_else(|| {
+                anyhow::anyhow!("run wants a scenario file: vtacluster run <scenario.json>")
+            })?;
+            run_scenario_cmd(
+                path,
+                args.get_all("set"),
+                args.get("report"),
+                args.get_flag("emit-spec"),
+            )
+        }
         "simulate" => simulate_cmd(
             args.get("strategy"),
             args.get("model"),
@@ -110,15 +131,6 @@ fn run() -> anyhow::Result<()> {
                 other => anyhow::bail!("--controller must be on|off (got '{other}')"),
             };
             let power_budget_w = args.get_f64("power-budget")?;
-            anyhow::ensure!(
-                power_budget_w >= 0.0 && power_budget_w.is_finite(),
-                "--power-budget must be ≥ 0 W"
-            );
-            anyhow::ensure!(
-                controller || power_budget_w == 0.0,
-                "--power-budget needs the online controller; drop --controller off \
-                 (a static plan cannot shed watts)"
-            );
             load_cmd(LoadArgs {
                 model: args.get("model").to_string(),
                 strategy: args.get("strategy").to_string(),
@@ -129,7 +141,7 @@ fn run() -> anyhow::Result<()> {
                 burst_mult: args.get_f64("burst")?,
                 controller,
                 horizon_ms: args.get_f64("horizon")?,
-                power_budget_w: (power_budget_w > 0.0).then_some(power_budget_w),
+                power_budget_w,
                 seed,
             })
         }
@@ -138,6 +150,7 @@ fn run() -> anyhow::Result<()> {
             args.get("board"),
             args.get_usize("nodes")?,
             args.get_f64("slo")?,
+            seed,
         ),
         "serve" => {
             // `--strategy all` is the simulate default; serving drives
@@ -256,10 +269,104 @@ fn table_cmd(fig: usize, images: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn vta_for(family: BoardFamily) -> VtaConfig {
-    match family {
-        BoardFamily::Zynq7000 => VtaConfig::table1_zynq7000(),
-        BoardFamily::UltraScalePlus => VtaConfig::table1_ultrascale(),
+// ---- the scenario-layer adapters ---------------------------------------
+
+/// `run <scenario.json>`: the direct door into the scenario layer.
+fn run_scenario_cmd(
+    path: &str,
+    sets: &[String],
+    report_path: &str,
+    emit_spec: bool,
+) -> anyhow::Result<()> {
+    let file = std::path::Path::new(path);
+    let mut doc = json::from_file(file)?;
+    apply_overrides(&mut doc, sets)?;
+    // default the scenario name to the file stem
+    if doc.get("name").is_none() {
+        if let Some(stem) = file.file_stem().and_then(|s| s.to_str()) {
+            vta_cluster::scenario::set_path(&mut doc, "name", json::str_(stem))?;
+        }
+    }
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let report = if let Some(sweep) = Sweep::from_doc(&doc)? {
+        if emit_spec {
+            print!("{}", json::pretty(&doc));
+            return Ok(());
+        }
+        sweep.run(&calib)?
+    } else {
+        let spec = ScenarioSpec::from_json(&doc)?;
+        if emit_spec {
+            print!("{}", json::pretty(&spec.to_json()));
+            return Ok(());
+        }
+        Session::new(spec)?.with_calibration(calib).run()?
+    };
+    print_report(&report);
+    if !report_path.is_empty() {
+        std::fs::write(report_path, json::pretty(&report.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {report_path}: {e}"))?;
+        println!("wrote {report_path}");
+    }
+    Ok(())
+}
+
+/// Generic report rendering shared by `run` and the thin adapters.
+fn print_report(r: &Report) {
+    println!(
+        "scenario '{}' — engine {}, seed {}, {} row(s)",
+        r.scenario,
+        r.engine,
+        r.seed,
+        r.rows.len()
+    );
+    println!(
+        "  {:34} {:16} {:12} {:>2} {:>22} {:>9} {:>8} {:>8} {:>8} {:>7} {:>8} {:>4}  {}",
+        "label", "model", "family", "n", "strategy", "ms/image", "img/s", "p50 ms",
+        "p99 ms", "watts", "J/img", "rc", "tag"
+    );
+    for row in &r.rows {
+        println!(
+            "  {:34} {:16} {:12} {:>2} {:>22} {:>9.3} {:>8.2} {:>8.3} {:>8.3} {:>7.1} {:>8.4} {:>4}  {}{}",
+            row.label,
+            row.model,
+            row.family,
+            row.nodes,
+            row.strategy,
+            row.ms_per_image,
+            row.img_per_sec,
+            row.p50_ms,
+            row.p99_ms,
+            row.cluster_avg_w,
+            row.j_per_image,
+            row.reconfigs,
+            if row.dominated { "dominated" } else { "FRONTIER" },
+            if row.meets_slo { "" } else { "  ⚠ SLO missed" },
+        );
+    }
+    if !r.events.is_empty() {
+        println!("reconfigurations ({}):", r.events.len());
+        for e in &r.events {
+            println!(
+                "  [{}] at {:8.0} ms: {} → {} ({:.1} ms downtime) — {}",
+                e.label, e.at_ms, e.from_strategy, e.to_strategy, e.downtime_ms, e.reason
+            );
+        }
+    }
+    print_timeline(&r.timeline);
+}
+
+/// Queue-depth timeline, coarsened to ≤ 20 rows (no-op when empty).
+fn print_timeline(timeline: &[(f64, usize)]) {
+    if timeline.is_empty() {
+        return;
+    }
+    let step = timeline.len().div_ceil(20).max(1);
+    let peak = timeline.iter().map(|&(_, d)| d).max().unwrap_or(0).max(1);
+    println!("queue depth (images in flight over time):");
+    for (t, d) in timeline.iter().step_by(step) {
+        let bar = "#".repeat(d * 50 / peak);
+        println!("  {t:8.0} ms {d:6} {bar}");
     }
 }
 
@@ -272,91 +379,65 @@ fn simulate_cmd(
     slo_ms: f64,
     seed: u64,
 ) -> anyhow::Result<()> {
-    let calib = Calibration::load_or_default(&artifacts_dir());
-    let mut b = Bench::for_model(family, vta_for(family), calib, model, 0)?;
-    b.images = images;
+    let mut spec = ScenarioSpec::single(model, Strategy::Fused, family, n);
+    spec.name = format!("simulate-{model}");
+    spec.seed = seed;
+    spec.slo_ms = slo_ms;
+    spec.tenants[0].images = images;
+    let g = zoo::build(model, 0)?;
     println!(
         "{model} ({:.3} GMACs) on {n}× {family} nodes, {images} images:",
-        b.graph.total_macs() as f64 / 1e9,
+        g.total_macs() as f64 / 1e9,
     );
+
     if strategy.eq_ignore_ascii_case("all") {
-        // the §II-C comparison the paper's figures make, for any model
-        for s in Strategy::all() {
-            let r = b.cell(s, n)?;
+        // the §II-C comparison the paper's figures make, for any model:
+        // one spec, a strategy axis, one merged report
+        let axes = vec![(
+            "tenants.0.strategy".to_string(),
+            Strategy::all().iter().map(|s| json::str_(s.as_str())).collect(),
+        )];
+        let calib = Calibration::load_or_default(&artifacts_dir());
+        let report = Sweep::new(spec.to_json(), axes)?.run(&calib)?;
+        for r in &report.rows {
             println!(
                 "  {:22} {:8.3} ms/image  latency {:8.3} ms  {:6.1} W  {:7.4} J/img  net {:9} B",
-                s.to_string(),
-                r.ms_per_image,
-                r.latency_ms.mean(),
-                r.power.cluster_avg_w,
-                r.power.j_per_image,
-                r.network_bytes,
+                r.strategy, r.ms_per_image, r.latency_mean_ms, r.cluster_avg_w,
+                r.j_per_image, r.network_bytes,
             );
         }
         return Ok(());
     }
-    // one plan, built once: the analytic figures and the loaded DES
-    // below price exactly the same schedule
-    let s = Strategy::parse(strategy)?;
-    let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta_for(family));
-    let (graph, cost) = b.graph_and_cost_mut();
-    let plan = if s == Strategy::Eco {
-        // the fifth, power-aware strategy: min J/image subject to the SLO
-        let choice =
-            eco_plan(graph, &cluster, cost, (slo_ms > 0.0).then_some(slo_ms))?;
+
+    spec.tenants[0].strategy = Strategy::parse(strategy)?;
+    let report = Session::new(spec)?.run()?;
+    let r = &report.rows[0];
+    if r.strategy == "eco" {
         println!(
             "eco picked {} ({:.4} J/image at {:.1} W{})",
-            choice.base,
-            choice.j_per_image,
-            choice.cluster_w,
-            if choice.meets_slo { String::new() } else { "; SLO NOT met".to_string() },
+            r.label,
+            r.j_per_image,
+            r.cluster_avg_w,
+            if r.meets_slo { "" } else { "; SLO NOT met" },
         );
-        choice.plan
-    } else {
-        let seg_costs = cost.seg_cost_table(graph)?;
-        let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
-        build_plan(s, graph, n, lookup)?
-    };
-    let r = simulate(&plan, &cluster, cost, graph, &SimConfig { images })?;
-    println!("{s}:");
+    }
+    println!("{}:", r.strategy);
     println!("  {:.2} ms/image (steady state)", r.ms_per_image);
-    println!("  makespan {:.1} ms, network {} bytes", r.makespan_ms, r.network_bytes);
-    println!("  latency {}", r.latency_ms.display("ms"));
+    println!("  unloaded latency {:.3} ms, network {} bytes", r.latency_mean_ms, r.network_bytes);
     println!(
-        "  power: {:.1} W avg / {:.1} W peak, {:.4} J/image, {:.2} img/s/W, EDP {:.4} J·s",
-        r.power.cluster_avg_w,
-        r.power.cluster_peak_w,
-        r.power.j_per_image,
-        r.power.img_per_sec_per_w,
-        r.power.edp_j_s,
+        "  power: {:.1} W avg, {:.4} J/image, {:.2} img/s/W, EDP {:.4} J·s",
+        r.cluster_avg_w,
+        r.j_per_image,
+        1.0 / r.j_per_image,
+        r.edp_j_s,
     );
-    for (i, (u, w)) in r.node_utilization.iter().zip(&r.power.node_watts).enumerate() {
+    for (i, (u, w)) in r.node_util.iter().zip(&r.node_watts).enumerate() {
         println!("  node {i}: {:3.0}% busy  {:5.2} W", u * 100.0, w);
     }
-    // loaded behavior: seeded Poisson DES at 70 % of the plan's capacity
-    let capacity = 1e3 / r.ms_per_image;
-    let options = [PlanOption {
-        plan,
-        capacity_img_per_sec: capacity,
-        latency_ms: r.latency_ms.mean(),
-        avg_power_w: r.power.cluster_avg_w,
-        j_per_image: r.power.j_per_image,
-    }];
-    let rate = 0.7 * capacity;
-    let cfg = DesConfig::new(
-        ArrivalProcess::Poisson { rate_per_sec: rate },
-        (images.max(64) as f64 / rate) * 1e3,
-        seed,
-    );
-    let des = run_des(&options, 0, &cluster, cost, graph, &cfg, None)?;
     println!(
-        "  loaded (poisson {rate:.1} img/s, seed {seed}): {} of {} images, \
+        "  loaded (poisson at 70% capacity, seed {seed}): {} of {} images, \
          p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms",
-        des.completed,
-        des.offered,
-        des.latency_ms.p50(),
-        des.latency_ms.p95(),
-        des.latency_ms.p99(),
+        r.completed, r.offered, r.p50_ms, r.p95_ms, r.p99_ms,
     );
     Ok(())
 }
@@ -394,36 +475,48 @@ fn multi_cmd(
         return multi_serve_cmd(requests, budget, input_hw, images, seed);
     }
 
-    let calib = Calibration::load_or_default(&artifacts_dir());
-    let out = simulate_tenants(family, vta_for(family), calib, budget, &requests, seed)?;
+    let mut spec = ScenarioSpec::single("resnet18", Strategy::Fused, family, budget);
+    spec.name = format!("multi-{}", tokens.join("+"));
+    spec.seed = seed;
+    spec.tenants = requests
+        .iter()
+        .map(|r| vta_cluster::scenario::TenantEntry {
+            model: r.model.clone(),
+            input_hw: r.input_hw,
+            strategy: r.strategy,
+            images: r.images,
+            plan: None,
+        })
+        .collect();
+    let report = Session::new(spec)?.run()?;
     println!(
         "multi-tenant simulation: {} tenants over {budget} {family} nodes, {images} images each, seed {seed}",
-        out.len(),
+        report.rows.len(),
     );
     println!(
         "  {:16} {:>5} {:>22} {:>12} {:>12} {:>12} {:>12} {:>8} {:>9}",
-        "model", "nodes", "strategy", "ms/image", "img/s", "latency ms", "p99 ms", "watts", "J/img"
+        "model", "nodes", "strategy", "ms/image", "img/s", "p50 ms", "p99 ms", "watts", "J/img"
     );
     let mut total_w = 0.0;
-    for t in &out {
-        total_w += t.sim.power.cluster_avg_w;
+    for r in &report.rows {
+        total_w += r.cluster_avg_w;
         println!(
             "  {:16} {:>5} {:>22} {:>12.3} {:>12.2} {:>12.3} {:>12.3} {:>8.1} {:>9.4}",
-            t.model,
-            t.nodes,
-            t.plan.strategy.to_string(),
-            t.sim.ms_per_image,
-            t.report.throughput_img_per_sec,
-            t.report.mean_latency_ms,
-            t.report.p99_latency_ms,
-            t.sim.power.cluster_avg_w,
-            t.sim.power.j_per_image,
+            r.model,
+            r.nodes,
+            r.strategy,
+            r.ms_per_image,
+            r.img_per_sec,
+            r.p50_ms,
+            r.p99_ms,
+            r.cluster_avg_w,
+            r.j_per_image,
         );
     }
     // each tenant's figure includes one switch uplink port; the shared
     // cluster has a single uplink, so drop the double-counted ones
-    let uplink_w = vta_cluster::power::PowerModel::for_family(family).switch_port_w;
-    let cluster_w = total_w - (out.len().saturating_sub(1)) as f64 * uplink_w;
+    let uplink_w = PowerModel::for_family(family).switch_port_w;
+    let cluster_w = total_w - (report.rows.len().saturating_sub(1)) as f64 * uplink_w;
     println!(
         "  (latency columns: seeded DES at 70% of each tenant's capacity; \
          cluster saturated draw {cluster_w:.1} W)"
@@ -540,243 +633,215 @@ struct LoadArgs {
     burst_mult: f64,
     controller: bool,
     horizon_ms: f64,
-    /// Cluster watts cap handed to the controller (`None` = uncapped).
-    power_budget_w: Option<f64>,
+    /// Cluster watts cap handed to the controller (0 = uncapped).
+    power_budget_w: f64,
     seed: u64,
 }
 
 /// `load`: dynamic-load DES + online reconfiguration (DESIGN.md §10,
-/// EXPERIMENTS.md §E10). The four §II-C strategies form the candidate
-/// set; `--strategy` picks the plan active at t=0 (`all` → ai-core
-/// assignment, the paper's small-N worst case, so the controller has a
-/// mismatch worth fixing). `--rate 0` derives the base rate from the
-/// initial plan's capacity: 70 % for poisson/diurnal, 55 % for burst
-/// (the MMPP high phase then overloads it by `--burst` ×).
+/// EXPERIMENTS.md §E10) as a scenario. The four §II-C strategies form
+/// the candidate set; `--strategy` picks the plan active at t=0 (`all`
+/// → ai-core assignment, the paper's small-N worst case, so the
+/// controller has a mismatch worth fixing).
 fn load_cmd(a: LoadArgs) -> anyhow::Result<()> {
-    let calib = Calibration::load_or_default(&artifacts_dir());
-    let g = zoo::build(&a.model, 0)?;
-    let vta = vta_for(a.family);
-    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(a.family), calib);
-    let cluster = ClusterConfig::homogeneous(a.family, a.nodes).with_vta(vta);
-    let mut options = plan_options(&g, &cluster, &mut cost, &Strategy::all())?;
-
-    let initial_strategy = if a.strategy.eq_ignore_ascii_case("all") {
+    let initial = if a.strategy.eq_ignore_ascii_case("all") {
         Strategy::CoreAssign
     } else {
         Strategy::parse(&a.strategy)?
     };
-    let initial = if initial_strategy == Strategy::Eco {
-        // the power-aware pick joins the candidate set as a fifth option
-        let choice = eco_plan(&g, &cluster, &mut cost, None)?;
-        options.push(PlanOption {
-            capacity_img_per_sec: 1e3 / choice.ms_per_image,
-            latency_ms: choice.latency_ms,
-            avg_power_w: choice.cluster_w,
-            j_per_image: choice.j_per_image,
-            plan: choice.plan,
-        });
-        options.len() - 1
-    } else {
-        options
-            .iter()
-            .position(|o| o.plan.strategy == initial_strategy)
-            .expect("all base strategies are candidates")
+    let mut spec = ScenarioSpec::single(&a.model, initial, a.family, a.nodes);
+    spec.name = format!("load-{}", a.model);
+    spec.engine = Engine::Des;
+    spec.seed = a.seed;
+    spec.horizon_ms = a.horizon_ms;
+    spec.arrival = vta_cluster::scenario::ArrivalSpec {
+        kind: a.arrival_kind.clone(),
+        rate: a.rate,
+        burst_mult: a.burst_mult,
     };
-    let cap0 = options[initial].capacity_img_per_sec;
-
-    let base_rate = if a.rate > 0.0 {
-        a.rate
-    } else if a.arrival_kind.eq_ignore_ascii_case("burst") {
-        0.55 * cap0
-    } else {
-        0.7 * cap0
+    spec.controller = vta_cluster::scenario::ControllerSpec {
+        enabled: a.controller,
+        power_budget_w: a.power_budget_w,
     };
-    let arrival = ArrivalProcess::parse(&a.arrival_kind, base_rate, a.burst_mult)?;
-
     println!(
-        "load: {} on {}× {} nodes — {}, horizon {:.1} s, seed {}",
+        "load: {} on {}× {} nodes — {} arrivals{}, horizon {:.1} s, seed {}",
         a.model,
         a.nodes,
         a.family,
-        arrival.describe(),
+        a.arrival_kind,
+        if a.rate > 0.0 { format!(" at {:.1} img/s", a.rate) } else { " (auto rate)".into() },
         a.horizon_ms / 1e3,
         a.seed
     );
-    if let Some(b) = a.power_budget_w {
-        println!("power budget: {b:.1} W (controller sheds watts above this)");
-    }
-    println!("plan options (analytic steady state):");
-    for (i, o) in options.iter().enumerate() {
-        let mark = if i == initial { "←  initial" } else { "" };
-        println!(
-            "  [{i}] {:22} capacity {:8.1} img/s  unloaded latency {:8.3} ms  \
-             {:6.1} W sat  {:7.4} J/img  {mark}",
-            o.plan.strategy.to_string(),
-            o.capacity_img_per_sec,
-            o.latency_ms,
-            o.avg_power_w,
-            o.j_per_image,
-        );
+    if a.power_budget_w > 0.0 {
+        println!("power budget: {:.1} W (controller sheds watts above this)", a.power_budget_w);
     }
 
-    let cfg = DesConfig::new(arrival, a.horizon_ms, a.seed);
-    let mut controller_state = if a.controller {
-        Some(OnlineController::new(
-            ControllerConfig { power_budget_w: a.power_budget_w, ..Default::default() },
-            ReconfigCost::for_family(a.family),
-        )?)
-    } else {
-        None
-    };
-    let r = run_des(
-        &options,
-        initial,
-        &cluster,
-        &mut cost,
-        &g,
-        &cfg,
-        controller_state.as_mut(),
-    )?;
-
+    let report = Session::new(spec)?.run()?;
+    let r = &report.rows[0];
     println!(
         "controller {}: offered {} images, completed {} ({:.1}%), throughput {:.1} img/s",
-        match (a.controller, a.power_budget_w) {
-            (_, Some(_)) => "on (power-capped)",
-            (true, None) => "on",
-            (false, None) => "off",
+        match (a.controller, a.power_budget_w > 0.0) {
+            (_, true) => "on (power-capped)",
+            (true, false) => "on",
+            (false, false) => "off",
         },
         r.offered,
         r.completed,
         if r.offered > 0 { r.completed as f64 / r.offered as f64 * 100.0 } else { 0.0 },
-        r.throughput_img_per_sec,
+        r.img_per_sec,
     );
     println!(
         "latency: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  mean {:.3} ms",
-        r.latency_ms.p50(),
-        r.latency_ms.p95(),
-        r.latency_ms.p99(),
-        r.latency_ms.mean(),
+        r.p50_ms, r.p95_ms, r.p99_ms, r.latency_mean_ms,
     );
-    if r.reconfigs.is_empty() {
+    if report.events.is_empty() {
         println!("reconfigurations: none (downtime charged: 0 ms)");
     } else {
         println!(
             "reconfigurations: {} (downtime charged: {:.1} ms total)",
-            r.reconfigs.len(),
+            report.events.len(),
             r.downtime_ms
         );
-        for e in &r.reconfigs {
+        for e in &report.events {
             println!(
                 "  at {:8.0} ms: {} → {} ({:.1} ms downtime) — {}",
                 e.at_ms, e.from_strategy, e.to_strategy, e.downtime_ms, e.reason
             );
         }
     }
-    // per-node utilization column (the DES measures busy_ns per node;
-    // the same busy shares drive the idle-power integration below)
-    println!("per-node: {:>4} {:>6} {:>7} {:>9}", "node", "util", "avg W", "peak q");
-    for (i, (u, w)) in r.node_utilization.iter().zip(&r.power.node_avg_w).enumerate() {
-        println!(
-            "          {:>4} {:>5.0}% {:>7.2} {:>9}",
-            i,
-            u * 100.0,
-            w,
-            r.node_max_queue[i]
-        );
+    println!("per-node: {:>4} {:>6} {:>7}", "node", "util", "avg W");
+    for (i, (u, w)) in r.node_util.iter().zip(&r.node_watts).enumerate() {
+        println!("          {:>4} {:>5.0}% {:>7.2}", i, u * 100.0, w);
     }
     println!(
-        "energy: {:.1} J total ({:.4} J/image), avg {:.1} W, peak window {:.1} W, \
-         reconfig {:.2} J, EDP {:.4} J·s",
-        r.power.total_j,
-        r.power.j_per_image,
-        r.power.avg_cluster_w,
-        r.power.peak_window_w,
-        r.power.reconfig_j,
-        r.power.edp_j_s,
+        "energy: {:.4} J/image, avg {:.1} W, EDP {:.4} J·s",
+        r.j_per_image, r.cluster_avg_w, r.edp_j_s,
     );
     println!(
-        "backlog: max {} images in flight, {} still queued at horizon",
-        r.max_backlog, r.backlog_at_end
+        "backlog: {} images still in flight at horizon",
+        (r.offered - r.completed.min(r.offered)) as usize
     );
-    // queue-depth timeline, coarsened to ≤ 20 rows
-    let step = r.queue_timeline.len().div_ceil(20).max(1);
-    let peak = r.queue_timeline.iter().map(|&(_, d)| d).max().unwrap_or(0).max(1);
-    println!("queue depth (images in flight over time):");
-    for (t, d) in r.queue_timeline.iter().step_by(step) {
-        let bar = "#".repeat(d * 50 / peak);
-        println!("  {t:8.0} ms {d:6} {bar}");
-    }
+    print_timeline(&report.timeline);
+    let final_strategy = report
+        .events
+        .last()
+        .map(|e| e.to_strategy.clone())
+        .unwrap_or_else(|| r.strategy.clone());
     println!(
-        "final plan: {} — rerun with the same --seed for a bit-identical result",
-        options[r.final_plan].plan.strategy
+        "final plan: {final_strategy} — rerun with the same --seed for a bit-identical result"
     );
     Ok(())
 }
 
 /// `power`: the latency-vs-watts Pareto frontier over (board family ×
-/// node count × §II-C strategy) — DESIGN.md §11, EXPERIMENTS.md §E11.
-/// `max_nodes = 0` sweeps each family to its paper ceiling (12 Zynq /
-/// 5 US+); `--slo` additionally prints the eco (min-J/image) pick per
-/// family at the sweep ceiling.
-fn power_cmd(model: &str, board: &str, max_nodes: usize, slo_ms: f64) -> anyhow::Result<()> {
-    let calib = Calibration::load_or_default(&artifacts_dir());
+/// node count × §II-C strategy) — DESIGN.md §11, EXPERIMENTS.md §E11 —
+/// as a scenario sweep; the report's cross-row dominance tags *are* the
+/// frontier. `max_nodes = 0` sweeps each family to its paper ceiling
+/// (12 Zynq / 5 US+); `--slo` additionally runs the eco (min-J/image)
+/// scenario per family at the sweep ceiling.
+fn power_cmd(
+    model: &str,
+    board: &str,
+    max_nodes: usize,
+    slo_ms: f64,
+    seed: u64,
+) -> anyhow::Result<()> {
     let families: Vec<BoardFamily> = match board.to_ascii_lowercase().as_str() {
         "both" | "all" => vec![BoardFamily::Zynq7000, BoardFamily::UltraScalePlus],
         other => vec![BoardFamily::parse(other)?],
     };
-    let points = pareto::pareto_sweep(model, &families, max_nodes, &calib)?;
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let mut report = Report::new(&format!("power-{model}"), Engine::Analytic.as_str(), seed);
+    for &family in &families {
+        let top = pareto_ceiling(family, max_nodes);
+        let mut spec = ScenarioSpec::single(model, Strategy::Fused, family, 1);
+        spec.name = format!("power-{model}");
+        spec.seed = seed;
+        spec.tenants[0].images = 16;
+        let axes = vec![
+            (
+                "boards.0.n".to_string(),
+                (1..=top).map(|n| json::int(n as i64)).collect(),
+            ),
+            (
+                "tenants.0.strategy".to_string(),
+                Strategy::all().iter().map(|s| json::str_(s.as_str())).collect(),
+            ),
+        ];
+        let fam_report = Sweep::new(spec.to_json(), axes)?.run(&calib)?;
+        report.absorb("", fam_report);
+    }
+    report.finalize();
+
+    let mut rows: Vec<&vta_cluster::scenario::ReportRow> = report.rows.iter().collect();
+    rows.sort_by(|a, b| {
+        a.cluster_avg_w
+            .partial_cmp(&b.cluster_avg_w)
+            .unwrap()
+            .then(a.ms_per_image.partial_cmp(&b.ms_per_image).unwrap())
+    });
     println!(
         "power: {model} over {} — {} configurations (sorted by watts)",
         families.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(" + "),
-        points.len(),
+        rows.len(),
     );
     println!(
         "  {:12} {:>22} {:>3} {:>10} {:>11} {:>8} {:>9} {:>10}  {}",
         "family", "strategy", "n", "ms/image", "latency ms", "watts", "J/img", "img/s/W", "tag"
     );
-    for p in &points {
+    for p in &rows {
         println!(
             "  {:12} {:>22} {:>3} {:>10.3} {:>11.3} {:>8.1} {:>9.4} {:>10.2}  {}",
-            p.family.to_string(),
-            p.strategy.to_string(),
+            p.family,
+            p.strategy,
             p.nodes,
             p.ms_per_image,
-            p.latency_ms,
-            p.cluster_w,
+            p.latency_mean_ms,
+            p.cluster_avg_w,
             p.j_per_image,
-            p.img_per_sec_per_w,
+            1.0 / p.j_per_image,
             if p.dominated { "dominated" } else { "FRONTIER" },
         );
     }
-    let front = pareto::frontier(&points);
+    let front = report.frontier();
     println!("\nfrontier ({} points, watts ↑ / ms per image ↓):", front.len());
     for p in &front {
         println!(
             "  {:8.1} W → {:8.3} ms/image  ({} × {} {})",
-            p.cluster_w, p.ms_per_image, p.nodes, p.family, p.strategy
+            p.cluster_avg_w, p.ms_per_image, p.nodes, p.family, p.strategy
         );
     }
-    if let Some(best) = pareto::most_efficient(&points) {
+    if let Some(best) = front
+        .iter()
+        .min_by(|a, b| a.j_per_image.partial_cmp(&b.j_per_image).unwrap())
+    {
         println!(
             "most efficient: {} × {} {} — {:.2} img/s/W at {:.1} W",
-            best.nodes, best.family, best.strategy, best.img_per_sec_per_w, best.cluster_w
+            best.nodes,
+            best.family,
+            best.strategy,
+            1.0 / best.j_per_image,
+            best.cluster_avg_w
         );
     }
     if slo_ms > 0.0 {
         for &family in &families {
-            let nodes = if max_nodes == 0 {
-                pareto::family_max_nodes(family)
-            } else {
-                max_nodes.min(pareto::family_max_nodes(family))
-            };
-            let c = pareto::eco_for_family(model, family, nodes, Some(slo_ms), &calib)?;
+            let nodes = pareto_ceiling(family, max_nodes);
+            let mut spec = ScenarioSpec::single(model, Strategy::Eco, family, nodes);
+            spec.name = format!("eco-{model}");
+            spec.seed = seed;
+            spec.slo_ms = slo_ms;
+            spec.tenants[0].images = 16;
+            let rep = Session::new(spec)?.with_calibration(calib.clone()).run()?;
+            let r = &rep.rows[0];
             println!(
                 "eco @ {nodes}× {family} (SLO {slo_ms:.1} ms): {} — {:.4} J/image, \
                  latency {:.3} ms{}",
-                c.base,
-                c.j_per_image,
-                c.latency_ms,
-                if c.meets_slo { "" } else { "  ⚠ no candidate meets the SLO" },
+                r.label,
+                r.j_per_image,
+                r.latency_mean_ms,
+                if r.meets_slo { "" } else { "  ⚠ no candidate meets the SLO" },
             );
         }
     }

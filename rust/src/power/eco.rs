@@ -15,7 +15,7 @@
 
 use crate::config::ClusterConfig;
 use crate::graph::Graph;
-use crate::sched::{build_plan, ExecutionPlan, Strategy};
+use crate::sched::{build_plan_priced, ExecutionPlan, Strategy};
 use crate::sim::{simulate, CostModel, SimConfig};
 
 /// What [`eco_plan`] picked and why.
@@ -49,10 +49,9 @@ pub fn eco_plan(
     }
     let n = cluster.num_nodes();
     let seg_costs = cost.seg_cost_table(g)?;
-    let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
     let mut candidates = Vec::with_capacity(4);
     for s in Strategy::all() {
-        let plan = build_plan(s, g, n, lookup)?;
+        let plan = build_plan_priced(s, g, n, &seg_costs)?;
         let sim = simulate(&plan, cluster, cost, g, &SimConfig { images: 16 })?;
         candidates.push(EcoChoice {
             plan,
@@ -108,9 +107,8 @@ mod tests {
         assert!(choice.meets_slo);
         // with no SLO the pick must not lose on J/image to any base plan
         let seg_costs = cost.seg_cost_table(&g).unwrap();
-        let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
         for s in Strategy::all() {
-            let plan = build_plan(s, &g, 4, lookup).unwrap();
+            let plan = build_plan_priced(s, &g, 4, &seg_costs).unwrap();
             let sim =
                 simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images: 16 }).unwrap();
             assert!(

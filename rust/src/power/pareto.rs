@@ -15,7 +15,7 @@
 use super::eco::eco_plan;
 use crate::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig};
 use crate::graph::zoo;
-use crate::sched::{build_plan, Strategy};
+use crate::sched::{build_plan_priced, Strategy};
 use crate::sim::{simulate, CostModel, SimConfig};
 
 /// One priced deployment configuration.
@@ -65,9 +65,8 @@ pub fn pareto_sweep(
         for n in 1..=top {
             let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta.clone());
             let seg_costs = cost.seg_cost_table(&g)?;
-            let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
             for s in Strategy::all() {
-                let plan = build_plan(s, &g, n, lookup)?;
+                let plan = build_plan_priced(s, &g, n, &seg_costs)?;
                 let sim = simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images: 16 })?;
                 points.push(ParetoPoint {
                     family,

@@ -1,0 +1,45 @@
+//! The declarative scenario layer (DESIGN.md §12): one API from "an
+//! experiment I can describe" to "a report I can diff".
+//!
+//! * [`spec`]    — [`ScenarioSpec`]: a JSON-round-trippable description
+//!                 of a full experiment (tenants, board inventory per
+//!                 family, strategy or explicit plan, arrival process,
+//!                 controller + power budget, SLO, seed, horizon,
+//!                 engine)
+//! * [`session`] — [`Session`]: resolves a spec into validated graphs,
+//!                 plans, clusters and cost/power models, runs the
+//!                 chosen engine (`analytic` | `des`)
+//! * [`report`]  — [`Report`]: the unified result schema that subsumes
+//!                 steady-state cells, DES runs, per-tenant serving rows
+//!                 and Pareto frontier points (one JSON emitter, shared
+//!                 keys across engines, snapshot-checked in CI)
+//! * [`sweep`]   — [`Sweep`]: cartesian grids over any spec axis, merged
+//!                 into one tagged, dominance-marked report
+//!
+//! The `vtacluster` subcommands `simulate`, `multi`, `load` and `power`
+//! are thin adapters over this layer, and `vtacluster run <file.json>`
+//! (with `--set key=value` overrides) executes any spec directly — see
+//! `examples/scenarios/` for ready-made files.
+
+pub mod report;
+pub mod session;
+pub mod spec;
+pub mod sweep;
+
+pub use report::{EventRow, Report, ReportRow};
+pub use session::{CostCache, Session};
+pub use spec::{
+    ArrivalSpec, BoardGroup, ControllerSpec, Engine, ScenarioSpec, StageSpec, TenantEntry,
+};
+pub use sweep::{apply_overrides, parse_override, set_path, Sweep};
+
+/// Node ceiling for frontier sweeps over one family: the paper's cluster
+/// limits (12 Zynq / 5 US+), clamped by a user maximum (`0` = ceiling).
+pub fn pareto_ceiling(family: crate::config::BoardFamily, max_nodes: usize) -> usize {
+    let ceiling = crate::power::pareto::family_max_nodes(family);
+    if max_nodes == 0 {
+        ceiling
+    } else {
+        max_nodes.min(ceiling)
+    }
+}

@@ -1,0 +1,410 @@
+//! The unified [`Report`] every scenario run returns (DESIGN.md §12).
+//!
+//! One schema subsumes what used to be four ad-hoc result shapes:
+//! [`crate::sim::SimResult`] (steady state), [`crate::sim::DesResult`]
+//! (dynamic load), the per-tenant serving rows of `multi`, and the
+//! Pareto frontier rows of `power`. A report is a list of [`ReportRow`]s
+//! — one per (tenant × board group × sweep cell) — plus the
+//! reconfiguration [`EventRow`]s and the queue-depth timeline of
+//! single-run DES scenarios. **Every row always carries every key**, so
+//! the emitted JSON schema is identical across engines (the CI scenario
+//! suite snapshot-checks it); fields an engine cannot measure are filled
+//! with their documented analytic/DES counterpart, never dropped.
+//!
+//! Dominance is computed over the rows of the *finished* report
+//! ((cluster watts, ms/image) weak dominance, same geometry as
+//! [`crate::power::pareto`]), which is what makes a sweep report double
+//! as a Pareto frontier.
+
+use crate::util::json::{self, Json};
+use crate::util::stats::Summary;
+
+/// One run result. See the field docs for the analytic/DES meaning of
+/// each metric; [`ReportRow::ROW_KEYS`] is the schema contract.
+#[derive(Debug, Clone)]
+pub struct ReportRow {
+    /// Row tag: the tenant name, the board group, or the sweep-cell tag.
+    pub label: String,
+    /// Engine that produced this row (`analytic` | `des`).
+    pub engine: String,
+    pub model: String,
+    pub family: String,
+    pub nodes: usize,
+    /// Strategy of the (initial) plan; `eco` rows keep the tag and name
+    /// the selected base strategy in `label`.
+    pub strategy: String,
+    /// Steady-state time per image of the plan, ms (analytic in both
+    /// engines — the DES measures throughput instead).
+    pub ms_per_image: f64,
+    /// Analytic: plan capacity (1000 / ms_per_image). DES: measured
+    /// completed / horizon.
+    pub img_per_sec: f64,
+    /// Analytic: unloaded single-image latency. DES: mean measured
+    /// end-to-end latency.
+    pub latency_mean_ms: f64,
+    /// Loaded-latency percentiles (both engines run a seeded DES; the
+    /// analytic engine's runs at the configured arrival against the
+    /// plan's capacity). Non-finite when nothing completed.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Average cluster draw, W (steady-state for analytic, integrated
+    /// over the horizon for DES).
+    pub cluster_avg_w: f64,
+    /// Energy per inference, J (same split as `cluster_avg_w`).
+    pub j_per_image: f64,
+    /// Energy-delay product, J·s.
+    pub edp_j_s: f64,
+    /// Images offered / completed by the loaded run (analytic: its
+    /// percentile pass; DES: the measured run).
+    pub offered: u64,
+    pub completed: u64,
+    pub network_bytes: u64,
+    /// Plan switches executed (always 0 for analytic rows).
+    pub reconfigs: usize,
+    pub downtime_ms: f64,
+    /// Busy fraction per node, in node order.
+    pub node_util: Vec<f64>,
+    /// Average draw per node, W.
+    pub node_watts: Vec<f64>,
+    /// Another row of this report is ≤ on (watts, ms/image) and < on
+    /// one — filled by [`Report::finalize`].
+    pub dominated: bool,
+    /// With `slo_ms > 0`: unloaded latency (analytic) / p99 (DES) under
+    /// the SLO. Always true when no SLO is set.
+    pub meets_slo: bool,
+}
+
+impl ReportRow {
+    /// The row schema, in emit order — the contract the scenario CI
+    /// suite snapshot-checks.
+    pub const ROW_KEYS: [&'static str; 24] = [
+        "label",
+        "engine",
+        "model",
+        "family",
+        "nodes",
+        "strategy",
+        "ms_per_image",
+        "img_per_sec",
+        "latency_mean_ms",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "cluster_avg_w",
+        "j_per_image",
+        "edp_j_s",
+        "offered",
+        "completed",
+        "network_bytes",
+        "reconfigs",
+        "downtime_ms",
+        "node_util",
+        "node_watts",
+        "dominated",
+        "meets_slo",
+    ];
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("label", json::str_(&self.label)),
+            ("engine", json::str_(&self.engine)),
+            ("model", json::str_(&self.model)),
+            ("family", json::str_(&self.family)),
+            ("nodes", json::int(self.nodes as i64)),
+            ("strategy", json::str_(&self.strategy)),
+            ("ms_per_image", fnum(self.ms_per_image)),
+            ("img_per_sec", fnum(self.img_per_sec)),
+            ("latency_mean_ms", fnum(self.latency_mean_ms)),
+            ("p50_ms", fnum(self.p50_ms)),
+            ("p95_ms", fnum(self.p95_ms)),
+            ("p99_ms", fnum(self.p99_ms)),
+            ("cluster_avg_w", fnum(self.cluster_avg_w)),
+            ("j_per_image", fnum(self.j_per_image)),
+            ("edp_j_s", fnum(self.edp_j_s)),
+            ("offered", json::int(self.offered as i64)),
+            ("completed", json::int(self.completed as i64)),
+            ("network_bytes", json::int(self.network_bytes as i64)),
+            ("reconfigs", json::int(self.reconfigs as i64)),
+            ("downtime_ms", fnum(self.downtime_ms)),
+            (
+                "node_util",
+                Json::Arr(self.node_util.iter().map(|&u| fnum(u)).collect()),
+            ),
+            (
+                "node_watts",
+                Json::Arr(self.node_watts.iter().map(|&w| fnum(w)).collect()),
+            ),
+            ("dominated", Json::Bool(self.dominated)),
+            ("meets_slo", Json::Bool(self.meets_slo)),
+        ])
+    }
+
+    /// Fill the loaded-percentile fields from a latency summary.
+    pub fn set_percentiles(&mut self, s: &Summary) {
+        self.p50_ms = s.p50();
+        self.p95_ms = s.p95();
+        self.p99_ms = s.p99();
+    }
+}
+
+/// One executed reconfiguration, tagged with the row it happened in.
+#[derive(Debug, Clone)]
+pub struct EventRow {
+    /// Label of the row whose run switched plans.
+    pub label: String,
+    pub at_ms: f64,
+    pub from_strategy: String,
+    pub to_strategy: String,
+    pub downtime_ms: f64,
+    pub reason: String,
+}
+
+impl EventRow {
+    pub const EVENT_KEYS: [&'static str; 6] =
+        ["label", "at_ms", "from", "to", "downtime_ms", "reason"];
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("label", json::str_(&self.label)),
+            ("at_ms", fnum(self.at_ms)),
+            ("from", json::str_(&self.from_strategy)),
+            ("to", json::str_(&self.to_strategy)),
+            ("downtime_ms", fnum(self.downtime_ms)),
+            ("reason", json::str_(&self.reason)),
+        ])
+    }
+}
+
+/// The unified result of [`crate::scenario::Session::run`] /
+/// [`crate::scenario::Sweep::run`].
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub scenario: String,
+    /// `analytic` | `des` | `mixed` (a sweep whose axis flips the engine).
+    pub engine: String,
+    pub seed: u64,
+    pub rows: Vec<ReportRow>,
+    pub events: Vec<EventRow>,
+    /// (t_ms, images in flight) — populated only by single-row DES runs
+    /// (always present in the JSON, possibly empty).
+    pub timeline: Vec<(f64, usize)>,
+}
+
+impl Report {
+    /// The top-level schema, in emit order.
+    pub const TOP_KEYS: [&'static str; 6] =
+        ["scenario", "engine", "seed", "rows", "events", "timeline"];
+
+    pub fn new(scenario: &str, engine: &str, seed: u64) -> Self {
+        Report {
+            scenario: scenario.to_string(),
+            engine: engine.to_string(),
+            seed,
+            rows: Vec::new(),
+            events: Vec::new(),
+            timeline: Vec::new(),
+        }
+    }
+
+    /// Fold another report's rows/events into this one (sweep merging),
+    /// prefixing row labels with the cell tag when non-empty.
+    pub fn absorb(&mut self, tag: &str, mut other: Report) {
+        if self.engine != other.engine {
+            self.engine = "mixed".to_string();
+        }
+        for row in &mut other.rows {
+            if !tag.is_empty() {
+                row.label = if row.label.is_empty() {
+                    tag.to_string()
+                } else {
+                    format!("{tag}/{}", row.label)
+                };
+            }
+        }
+        for ev in &mut other.events {
+            if !tag.is_empty() {
+                ev.label = if ev.label.is_empty() {
+                    tag.to_string()
+                } else {
+                    format!("{tag}/{}", ev.label)
+                };
+            }
+        }
+        self.rows.append(&mut other.rows);
+        self.events.append(&mut other.events);
+        // a merged report is multi-run: the per-run timeline is dropped
+        self.timeline.clear();
+    }
+
+    /// Compute the cross-row `dominated` tags: (watts, ms/image) weak
+    /// dominance with one strict axis — the same geometry as
+    /// [`crate::power::pareto::mark_dominated`].
+    pub fn finalize(&mut self) {
+        let snapshot: Vec<(f64, f64)> = self
+            .rows
+            .iter()
+            .map(|r| (r.cluster_avg_w, r.ms_per_image))
+            .collect();
+        for (i, r) in self.rows.iter_mut().enumerate() {
+            r.dominated = snapshot.iter().enumerate().any(|(j, &(w, ms))| {
+                j != i
+                    && w <= r.cluster_avg_w
+                    && ms <= r.ms_per_image
+                    && (w < r.cluster_avg_w || ms < r.ms_per_image)
+            });
+        }
+    }
+
+    /// The non-dominated rows, watts-sorted with exact duplicates
+    /// collapsed — the latency-vs-watts frontier of this report.
+    pub fn frontier(&self) -> Vec<&ReportRow> {
+        let mut f: Vec<&ReportRow> = self.rows.iter().filter(|r| !r.dominated).collect();
+        f.sort_by(|a, b| a.cluster_avg_w.partial_cmp(&b.cluster_avg_w).unwrap());
+        f.dedup_by(|a, b| {
+            a.cluster_avg_w == b.cluster_avg_w && a.ms_per_image == b.ms_per_image
+        });
+        f
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("scenario", json::str_(&self.scenario)),
+            ("engine", json::str_(&self.engine)),
+            ("seed", json::int(self.seed as i64)),
+            ("rows", Json::Arr(self.rows.iter().map(|r| r.to_json()).collect())),
+            ("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect())),
+            (
+                "timeline",
+                Json::Arr(
+                    self.timeline
+                        .iter()
+                        .map(|&(t, d)| Json::Arr(vec![fnum(t), json::int(d as i64)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Finite-guarded number emit: a NaN percentile (empty latency summary)
+/// or infinite ratio becomes JSON `null` instead of invalid output.
+fn fnum(v: f64) -> Json {
+    if v.is_finite() {
+        json::num(v)
+    } else {
+        Json::Null
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(label: &str, w: f64, ms: f64) -> ReportRow {
+        ReportRow {
+            label: label.into(),
+            engine: "analytic".into(),
+            model: "mlp".into(),
+            family: "zynq7000".into(),
+            nodes: 2,
+            strategy: "pipeline".into(),
+            ms_per_image: ms,
+            img_per_sec: 1e3 / ms,
+            latency_mean_ms: ms * 1.5,
+            p50_ms: ms * 1.4,
+            p95_ms: ms * 1.9,
+            p99_ms: ms * 2.0,
+            cluster_avg_w: w,
+            j_per_image: w * ms / 1e3,
+            edp_j_s: w * ms * ms / 1e6,
+            offered: 100,
+            completed: 100,
+            network_bytes: 4096,
+            reconfigs: 0,
+            downtime_ms: 0.0,
+            node_util: vec![0.8, 0.7],
+            node_watts: vec![3.1, 3.0],
+            dominated: false,
+            meets_slo: true,
+        }
+    }
+
+    #[test]
+    fn json_keys_match_the_schema_contract_for_both_engines() {
+        let mut rep = Report::new("t", "analytic", 7);
+        rep.rows.push(row("a", 10.0, 5.0));
+        let mut des_row = row("b", 12.0, 4.0);
+        des_row.engine = "des".into();
+        des_row.reconfigs = 2;
+        rep.rows.push(des_row);
+        rep.events.push(EventRow {
+            label: "b".into(),
+            at_ms: 100.0,
+            from_strategy: "pipeline".into(),
+            to_strategy: "fused".into(),
+            downtime_ms: 52.0,
+            reason: "overload".into(),
+        });
+        rep.timeline.push((100.0, 3));
+        let j = rep.to_json();
+        let top: Vec<&str> =
+            j.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(top, Report::TOP_KEYS);
+        for r in j.get("rows").unwrap().as_arr().unwrap() {
+            let keys: Vec<&str> =
+                r.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+            assert_eq!(keys, ReportRow::ROW_KEYS, "row schema drifted");
+        }
+        for e in j.get("events").unwrap().as_arr().unwrap() {
+            let keys: Vec<&str> =
+                e.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+            assert_eq!(keys, EventRow::EVENT_KEYS);
+        }
+        // the emitted text is valid JSON and round-trips
+        let text = crate::util::json::pretty(&j);
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn nan_percentiles_emit_null_not_invalid_json() {
+        let mut rep = Report::new("t", "des", 1);
+        let mut r = row("empty", 10.0, 5.0);
+        r.p50_ms = f64::NAN;
+        r.p99_ms = f64::INFINITY;
+        rep.rows.push(r);
+        let text = crate::util::json::pretty(&rep.to_json());
+        let back = Json::parse(&text).unwrap();
+        let row0 = &back.get("rows").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row0.get("p50_ms"), Some(&Json::Null));
+        assert_eq!(row0.get("p99_ms"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn finalize_marks_dominated_and_frontier_is_monotone() {
+        let mut rep = Report::new("sweep", "analytic", 7);
+        rep.rows.push(row("cheap-slow", 10.0, 8.0));
+        rep.rows.push(row("bad", 12.0, 9.0)); // worse on both axes
+        rep.rows.push(row("fast-hot", 20.0, 2.0));
+        rep.finalize();
+        assert!(!rep.rows[0].dominated);
+        assert!(rep.rows[1].dominated);
+        assert!(!rep.rows[2].dominated);
+        let f = rep.frontier();
+        assert_eq!(f.len(), 2);
+        assert!(f[0].cluster_avg_w < f[1].cluster_avg_w);
+        assert!(f[0].ms_per_image > f[1].ms_per_image);
+    }
+
+    #[test]
+    fn absorb_tags_rows_and_mixes_engines() {
+        let mut base = Report::new("sweep", "analytic", 7);
+        let mut cell = Report::new("cell", "des", 7);
+        cell.rows.push(row("", 10.0, 5.0));
+        cell.timeline.push((1.0, 1));
+        base.absorb("n=4", cell);
+        assert_eq!(base.engine, "mixed");
+        assert_eq!(base.rows[0].label, "n=4");
+        assert!(base.timeline.is_empty(), "merged reports drop the timeline");
+    }
+}

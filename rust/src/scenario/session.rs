@@ -1,0 +1,778 @@
+//! [`Session`] — resolve a [`ScenarioSpec`] and run it (DESIGN.md §12).
+//!
+//! The session is the one place a spec turns into live objects: zoo
+//! graphs, validated [`crate::sched::ExecutionPlan`]s (strategy
+//! constructors, the eco selector, or the spec's explicit stages),
+//! homogeneous sub-clusters per board group, calibrated cost models and
+//! the chosen engine. Supported shapes:
+//!
+//! | tenants | board groups | engine   | behavior                                  |
+//! |---------|--------------|----------|-------------------------------------------|
+//! | 1       | 1            | analytic | steady state + seeded loaded-DES percentiles (the legacy `simulate` cell) |
+//! | 1       | 1            | des      | full DES + optional controller (the legacy `load` run) |
+//! | n       | 1            | analytic | demand-proportional node split, per-tenant rows (the legacy `multi` grid) |
+//! | n       | 1            | des      | node split, then one DES per tenant sub-cluster (e.g. multi-tenant eco under diurnal load) |
+//! | 1       | m            | either   | one row per family group; an explicit arrival rate and a power budget are each split across groups by plan-capacity share (e.g. burst + power budget over a mixed zynq/US+ inventory) |
+//!
+//! `VTA_BENCH_FAST=1` (or [`Session::fast`]) clamps horizons to 2.5 s
+//! and streams to 16 images so CI can smoke-run every example scenario.
+
+use super::report::{EventRow, Report, ReportRow};
+use super::spec::{ArrivalSpec, BoardGroup, Engine, ScenarioSpec, TenantEntry};
+use crate::config::{
+    BoardFamily, BoardProfile, Calibration, ClusterConfig, ReconfigCost,
+};
+use crate::coordinator::{allocate_nodes, simulate_tenants, TenantRequest};
+use crate::graph::{zoo, Graph};
+use crate::power::eco_plan;
+use crate::runtime::artifacts_dir;
+use crate::sched::{
+    build_plan_priced, plan_options, ControllerConfig, ExecutionPlan, OnlineController,
+    PlanOption, Strategy,
+};
+use crate::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Memoized per-family cost models, shared across the cells of a sweep
+/// (autotuned GEMM schedules are expensive to rebuild and identical for
+/// every cell of one family).
+pub struct CostCache {
+    calib: Calibration,
+    map: HashMap<&'static str, CostModel>,
+}
+
+impl CostCache {
+    pub fn new(calib: Calibration) -> Self {
+        CostCache { calib, map: HashMap::new() }
+    }
+
+    /// The calibration every cached model was built with.
+    pub fn calib(&self) -> &Calibration {
+        &self.calib
+    }
+
+    /// The cost model for a family's Table-I board + VTA config.
+    pub fn get(&mut self, family: BoardFamily) -> &mut CostModel {
+        let calib = &self.calib;
+        self.map.entry(family.as_str()).or_insert_with(|| {
+            let board = BoardProfile::for_family(family);
+            let vta = board.default_vta();
+            CostModel::new(vta, board, calib.clone())
+        })
+    }
+}
+
+/// Builder façade: `Session::new(spec)?.run()?` is a whole experiment.
+pub struct Session {
+    spec: ScenarioSpec,
+    /// `None` until [`Session::with_calibration`]; [`Session::run`] then
+    /// loads the fitted file lazily (no disk read when a calibration is
+    /// supplied, as every sweep cell does).
+    calib: Option<Calibration>,
+    fast: bool,
+}
+
+impl Session {
+    /// Validate the spec. The calibration is resolved at [`Session::run`]
+    /// time: whatever [`Session::with_calibration`] supplied, else
+    /// `artifacts/calibration.json`, else defaults.
+    pub fn new(spec: ScenarioSpec) -> anyhow::Result<Self> {
+        spec.validate()?;
+        let fast = std::env::var("VTA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        Ok(Session { spec, calib: None, fast })
+    }
+
+    pub fn with_calibration(mut self, calib: Calibration) -> Self {
+        self.calib = Some(calib);
+        self
+    }
+
+    /// Override fast mode (defaults to the `VTA_BENCH_FAST` env var).
+    pub fn fast(mut self, fast: bool) -> Self {
+        self.fast = fast;
+        self
+    }
+
+    pub fn spec(&self) -> &ScenarioSpec {
+        &self.spec
+    }
+
+    /// Run the scenario and return the unified [`Report`].
+    pub fn run(&self) -> anyhow::Result<Report> {
+        let calib = self
+            .calib
+            .clone()
+            .unwrap_or_else(|| Calibration::load_or_default(&artifacts_dir()));
+        let mut cache = CostCache::new(calib);
+        self.run_cached(&mut cache)
+    }
+
+    /// [`Session::run`] against a shared [`CostCache`] (what
+    /// [`crate::scenario::Sweep`] threads through its cells).
+    pub fn run_cached(&self, cache: &mut CostCache) -> anyhow::Result<Report> {
+        let spec = self.effective_spec();
+        let mut report = Report::new(&spec.name, spec.engine.as_str(), spec.seed);
+        match (spec.boards.len(), spec.tenants.len()) {
+            (1, 1) => {
+                let label = spec.tenants[0].model.clone();
+                self.run_one(
+                    &spec,
+                    spec.boards[0],
+                    &spec.tenants[0],
+                    spec.seed,
+                    None,
+                    &label,
+                    true,
+                    &mut report,
+                    cache,
+                )?
+            }
+            (_, 1) => self.run_hetero(&spec, &mut report, cache)?,
+            (1, _) => match spec.engine {
+                Engine::Analytic => self.run_multi_analytic(&spec, &mut report, cache)?,
+                Engine::Des => self.run_multi_des(&spec, &mut report, cache)?,
+            },
+            _ => unreachable!("rejected by ScenarioSpec::validate"),
+        }
+        report.finalize();
+        Ok(report)
+    }
+
+    /// The spec with fast-mode clamps applied (identity when not fast).
+    fn effective_spec(&self) -> ScenarioSpec {
+        let mut s = self.spec.clone();
+        if self.fast {
+            s.horizon_ms = s.horizon_ms.min(2500.0);
+            for t in &mut s.tenants {
+                t.images = t.images.min(16);
+            }
+        }
+        s
+    }
+
+    // ---- shapes --------------------------------------------------------
+
+    /// One (tenant × board group) run on the spec's engine.
+    #[allow(clippy::too_many_arguments)]
+    fn run_one(
+        &self,
+        spec: &ScenarioSpec,
+        group: BoardGroup,
+        tenant: &TenantEntry,
+        seed: u64,
+        rate_override: Option<f64>,
+        label: &str,
+        keep_timeline: bool,
+        report: &mut Report,
+        cache: &mut CostCache,
+    ) -> anyhow::Result<()> {
+        match spec.engine {
+            Engine::Analytic => {
+                let row =
+                    self.analytic_cell(spec, group, tenant, seed, rate_override, label, cache)?;
+                report.rows.push(row);
+            }
+            Engine::Des => {
+                let (row, events, timeline) =
+                    self.des_cell(spec, group, tenant, seed, rate_override, label, cache)?;
+                report.rows.push(row);
+                report.events.extend(events);
+                if keep_timeline {
+                    report.timeline = timeline;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One tenant over several family groups: a row per group. An
+    /// explicit arrival rate *and* a power budget both describe the
+    /// whole inventory, so each is split across groups proportionally to
+    /// the group's plan capacity (a 25 W cap over zynq×6 + US+×2 caps
+    /// the combined draw at 25 W, not 25 W per group).
+    fn run_hetero(
+        &self,
+        spec: &ScenarioSpec,
+        report: &mut Report,
+        cache: &mut CostCache,
+    ) -> anyhow::Result<()> {
+        let tenant = &spec.tenants[0];
+        let mut seed_rng = Rng::new(spec.seed);
+        let seeds: Vec<u64> = spec.boards.iter().map(|_| seed_rng.next_u64()).collect();
+        // capacity shares, needed to split an explicit rate or a budget
+        let split_budget = spec.engine == Engine::Des
+            && spec.controller.enabled
+            && spec.controller.power_budget_w > 0.0;
+        let shares: Option<Vec<f64>> = if spec.arrival.rate > 0.0 || split_budget {
+            let caps = spec
+                .boards
+                .iter()
+                .map(|&b| self.group_capacity(spec, b, tenant, cache))
+                .collect::<anyhow::Result<Vec<f64>>>()?;
+            let total: f64 = caps.iter().sum();
+            Some(caps.iter().map(|c| c / total).collect())
+        } else {
+            None
+        };
+        for (i, &group) in spec.boards.iter().enumerate() {
+            let label = format!("{}x{}", group.n, group.family);
+            let rate = (spec.arrival.rate > 0.0)
+                .then(|| spec.arrival.rate * shares.as_ref().expect("shares computed")[i]);
+            let mut group_spec = spec.clone();
+            if split_budget {
+                group_spec.controller.power_budget_w *=
+                    shares.as_ref().expect("shares computed")[i];
+            }
+            self.run_one(
+                &group_spec, group, tenant, seeds[i], rate, &label, false, report, cache,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// The legacy `multi` shape: demand-proportional allocation, then
+    /// the analytic simulator + a seeded 70 %-load DES per tenant —
+    /// delegated to [`simulate_tenants`] so the two paths cannot drift.
+    fn run_multi_analytic(
+        &self,
+        spec: &ScenarioSpec,
+        report: &mut Report,
+        cache: &mut CostCache,
+    ) -> anyhow::Result<()> {
+        let group = spec.boards[0];
+        let vta = BoardProfile::for_family(group.family).default_vta();
+        let requests: Vec<TenantRequest> = spec
+            .tenants
+            .iter()
+            .map(|t| TenantRequest {
+                model: t.model.clone(),
+                input_hw: t.input_hw,
+                strategy: t.strategy,
+                images: t.images,
+            })
+            .collect();
+        let out = simulate_tenants(
+            group.family,
+            vta,
+            cache.calib().clone(),
+            group.n,
+            &requests,
+            spec.seed,
+        )?;
+        for (i, t) in out.iter().enumerate() {
+            let mut row = ReportRow {
+                label: tenant_label(&spec.tenants, i),
+                engine: Engine::Analytic.as_str().to_string(),
+                model: t.model.clone(),
+                family: group.family.to_string(),
+                nodes: t.nodes,
+                strategy: t.plan.strategy.to_string(),
+                ms_per_image: t.sim.ms_per_image,
+                img_per_sec: t.report.throughput_img_per_sec,
+                latency_mean_ms: t.sim.latency_ms.mean(),
+                p50_ms: 0.0,
+                p95_ms: 0.0,
+                p99_ms: 0.0,
+                cluster_avg_w: t.sim.power.cluster_avg_w,
+                j_per_image: t.sim.power.j_per_image,
+                edp_j_s: t.sim.power.edp_j_s,
+                offered: t.loaded.offered,
+                completed: t.loaded.completed,
+                network_bytes: t.sim.network_bytes,
+                reconfigs: 0,
+                downtime_ms: 0.0,
+                node_util: t.sim.node_utilization.clone(),
+                node_watts: t.sim.power.node_watts.clone(),
+                dominated: false,
+                meets_slo: spec.slo_ms == 0.0
+                    || t.sim.latency_ms.mean() <= spec.slo_ms,
+            };
+            row.set_percentiles(&t.loaded.latency_ms);
+            report.rows.push(row);
+        }
+        Ok(())
+    }
+
+    /// Multi-tenant dynamic load: the same demand-proportional node
+    /// split as the analytic path, then one full DES (arrival process,
+    /// controller, energy meter) per tenant sub-cluster. Like the
+    /// heterogeneous path, a power budget describes the *whole* cluster
+    /// and is split across the tenant sub-clusters by capacity share.
+    fn run_multi_des(
+        &self,
+        spec: &ScenarioSpec,
+        report: &mut Report,
+        cache: &mut CostCache,
+    ) -> anyhow::Result<()> {
+        let group = spec.boards[0];
+        let graphs = spec
+            .tenants
+            .iter()
+            .map(|t| zoo::build(&t.model, t.input_hw))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let cost = cache.get(group.family);
+        let mut demands = Vec::with_capacity(spec.tenants.len());
+        for (t, g) in spec.tenants.iter().zip(&graphs) {
+            demands.push(cost.graph_time_ns(g)? as f64 * t.images.max(1) as f64);
+        }
+        let alloc = allocate_nodes(group.n, &demands)?;
+        let split_budget =
+            spec.controller.enabled && spec.controller.power_budget_w > 0.0;
+        let shares: Option<Vec<f64>> = if split_budget {
+            let caps = spec
+                .tenants
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    let sub = BoardGroup { family: group.family, n: alloc[i] };
+                    self.group_capacity(spec, sub, t, cache)
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()?;
+            let total: f64 = caps.iter().sum();
+            Some(caps.iter().map(|c| c / total).collect())
+        } else {
+            None
+        };
+        let mut seed_rng = Rng::new(spec.seed);
+        for (i, tenant) in spec.tenants.iter().enumerate() {
+            let sub = BoardGroup { family: group.family, n: alloc[i] };
+            let label = tenant_label(&spec.tenants, i);
+            let seed = seed_rng.next_u64();
+            let mut tenant_spec = spec.clone();
+            if let Some(sh) = &shares {
+                tenant_spec.controller.power_budget_w *= sh[i];
+            }
+            self.run_one(
+                &tenant_spec, sub, tenant, seed, None, &label, false, report, cache,
+            )?;
+        }
+        Ok(())
+    }
+
+    // ---- cells ---------------------------------------------------------
+
+    /// Steady-state capacity of the tenant's plan on one group (used to
+    /// split an explicit arrival rate across heterogeneous groups; the
+    /// memoized cost cache makes the repeat pricing in the real run
+    /// cheap).
+    fn group_capacity(
+        &self,
+        spec: &ScenarioSpec,
+        group: BoardGroup,
+        tenant: &TenantEntry,
+        cache: &mut CostCache,
+    ) -> anyhow::Result<f64> {
+        let g = zoo::build(&tenant.model, tenant.input_hw)?;
+        let cluster = cluster_for(group)?;
+        let cost = cache.get(group.family);
+        let (plan, _) = resolve_plan(spec, tenant, &g, &cluster, cost)?;
+        let sim = simulate(&plan, &cluster, cost, &g, &SimConfig { images: 16 })?;
+        Ok(1e3 / sim.ms_per_image)
+    }
+
+    /// Analytic engine, one cell: steady-state + unloaded latency from
+    /// [`simulate`], loaded percentiles from a seeded DES at the
+    /// configured arrival (auto rate: 70 % of capacity, 55 % for burst)
+    /// — byte-for-byte the numbers the pre-scenario `simulate`
+    /// subcommand printed for the same seed.
+    #[allow(clippy::too_many_arguments)]
+    fn analytic_cell(
+        &self,
+        spec: &ScenarioSpec,
+        group: BoardGroup,
+        tenant: &TenantEntry,
+        seed: u64,
+        rate_override: Option<f64>,
+        label: &str,
+        cache: &mut CostCache,
+    ) -> anyhow::Result<ReportRow> {
+        let g = zoo::build(&tenant.model, tenant.input_hw)?;
+        let cluster = cluster_for(group)?;
+        let cost = cache.get(group.family);
+        let (plan, eco) = resolve_plan(spec, tenant, &g, &cluster, cost)?;
+        let strategy = plan.strategy.to_string();
+        let sim = simulate(&plan, &cluster, cost, &g, &SimConfig { images: tenant.images })?;
+
+        let capacity = 1e3 / sim.ms_per_image;
+        let option = PlanOption {
+            plan,
+            capacity_img_per_sec: capacity,
+            latency_ms: sim.latency_ms.mean(),
+            avg_power_w: sim.power.cluster_avg_w,
+            j_per_image: sim.power.j_per_image,
+        };
+        let rate = rate_override
+            .unwrap_or_else(|| effective_rate(&spec.arrival, capacity));
+        let arrival = ArrivalProcess::parse(&spec.arrival.kind, rate, spec.arrival.burst_mult)?;
+        let cfg = DesConfig::new(arrival, (tenant.images.max(64) as f64 / rate) * 1e3, seed);
+        let des = run_des(&[option], 0, &cluster, cost, &g, &cfg, None)?;
+
+        let meets_slo = match &eco {
+            Some((_, meets)) => *meets,
+            None => spec.slo_ms == 0.0 || sim.latency_ms.mean() <= spec.slo_ms,
+        };
+        let mut row = ReportRow {
+            label: eco_label(label, &eco),
+            engine: Engine::Analytic.as_str().to_string(),
+            model: tenant.model.clone(),
+            family: group.family.to_string(),
+            nodes: group.n,
+            strategy,
+            ms_per_image: sim.ms_per_image,
+            img_per_sec: capacity,
+            latency_mean_ms: sim.latency_ms.mean(),
+            p50_ms: 0.0,
+            p95_ms: 0.0,
+            p99_ms: 0.0,
+            cluster_avg_w: sim.power.cluster_avg_w,
+            j_per_image: sim.power.j_per_image,
+            edp_j_s: sim.power.edp_j_s,
+            offered: des.offered,
+            completed: des.completed,
+            network_bytes: sim.network_bytes,
+            reconfigs: 0,
+            downtime_ms: 0.0,
+            node_util: sim.node_utilization.clone(),
+            node_watts: sim.power.node_watts.clone(),
+            dominated: false,
+            meets_slo,
+        };
+        row.set_percentiles(&des.latency_ms);
+        Ok(row)
+    }
+
+    /// DES engine, one cell: the four §II-C candidates (plus the eco
+    /// pick or the spec's explicit plan as a fifth option when that is
+    /// the initial strategy), optional online controller with the spec's
+    /// power budget, full energy metering.
+    #[allow(clippy::too_many_arguments)]
+    fn des_cell(
+        &self,
+        spec: &ScenarioSpec,
+        group: BoardGroup,
+        tenant: &TenantEntry,
+        seed: u64,
+        rate_override: Option<f64>,
+        label: &str,
+        cache: &mut CostCache,
+    ) -> anyhow::Result<(ReportRow, Vec<EventRow>, Vec<(f64, usize)>)> {
+        let g = zoo::build(&tenant.model, tenant.input_hw)?;
+        let cluster = cluster_for(group)?;
+        let cost = cache.get(group.family);
+        let mut options = plan_options(&g, &cluster, cost, &Strategy::all())?;
+
+        let mut eco = None;
+        let initial = if tenant.plan.is_some() || tenant.strategy == Strategy::Eco {
+            // the fifth candidate: the explicit plan or the eco pick,
+            // priced like every other option
+            let (plan, eco_info) = resolve_plan(spec, tenant, &g, &cluster, cost)?;
+            eco = eco_info;
+            let sim = simulate(&plan, &cluster, cost, &g, &SimConfig { images: 16 })?;
+            options.push(PlanOption {
+                capacity_img_per_sec: 1e3 / sim.ms_per_image,
+                latency_ms: sim.latency_ms.mean(),
+                avg_power_w: sim.power.cluster_avg_w,
+                j_per_image: sim.power.j_per_image,
+                plan,
+            });
+            options.len() - 1
+        } else {
+            options
+                .iter()
+                .position(|o| o.plan.strategy == tenant.strategy)
+                .expect("all base strategies are candidates")
+        };
+        let strategy = options[initial].plan.strategy.to_string();
+        let cap0 = options[initial].capacity_img_per_sec;
+
+        let rate = rate_override.unwrap_or_else(|| effective_rate(&spec.arrival, cap0));
+        let arrival = ArrivalProcess::parse(&spec.arrival.kind, rate, spec.arrival.burst_mult)?;
+        let cfg = DesConfig::new(arrival, spec.horizon_ms, seed);
+        let mut controller = if spec.controller.enabled {
+            let budget = spec.controller.power_budget_w;
+            Some(OnlineController::new(
+                ControllerConfig {
+                    power_budget_w: (budget > 0.0).then_some(budget),
+                    ..Default::default()
+                },
+                ReconfigCost::for_family(group.family),
+            )?)
+        } else {
+            None
+        };
+        let r = run_des(&options, initial, &cluster, cost, &g, &cfg, controller.as_mut())?;
+
+        let p99 = r.latency_ms.p99();
+        let mut row = ReportRow {
+            label: eco_label(label, &eco),
+            engine: Engine::Des.as_str().to_string(),
+            model: tenant.model.clone(),
+            family: group.family.to_string(),
+            nodes: group.n,
+            strategy,
+            ms_per_image: 1e3 / cap0,
+            img_per_sec: r.throughput_img_per_sec,
+            latency_mean_ms: r.latency_ms.mean(),
+            p50_ms: 0.0,
+            p95_ms: 0.0,
+            p99_ms: 0.0,
+            cluster_avg_w: r.power.avg_cluster_w,
+            j_per_image: r.power.j_per_image,
+            edp_j_s: r.power.edp_j_s,
+            offered: r.offered,
+            completed: r.completed,
+            network_bytes: r.network_bytes,
+            reconfigs: r.reconfigs.len(),
+            downtime_ms: r.downtime_ms,
+            node_util: r.node_utilization.clone(),
+            node_watts: r.power.node_avg_w.clone(),
+            dominated: false,
+            meets_slo: spec.slo_ms == 0.0 || (p99.is_finite() && p99 <= spec.slo_ms),
+        };
+        row.set_percentiles(&r.latency_ms);
+        let events: Vec<EventRow> = r
+            .reconfigs
+            .iter()
+            .map(|e| EventRow {
+                label: row.label.clone(),
+                at_ms: e.at_ms,
+                from_strategy: e.from_strategy.to_string(),
+                to_strategy: e.to_strategy.to_string(),
+                downtime_ms: e.downtime_ms,
+                reason: e.reason.clone(),
+            })
+            .collect();
+        Ok((row, events, r.queue_timeline))
+    }
+}
+
+/// Build and sanity-check one group's homogeneous sub-cluster.
+fn cluster_for(group: BoardGroup) -> anyhow::Result<ClusterConfig> {
+    let vta = BoardProfile::for_family(group.family).default_vta();
+    let cluster = ClusterConfig::homogeneous(group.family, group.n).with_vta(vta);
+    cluster.validate()?;
+    Ok(cluster)
+}
+
+/// Auto arrival rate from plan capacity: 70 % load, or 55 % for burst so
+/// the MMPP high phase overloads the plan (the legacy `load` defaults).
+fn effective_rate(arrival: &ArrivalSpec, capacity: f64) -> f64 {
+    if arrival.rate > 0.0 {
+        arrival.rate
+    } else if arrival.kind.eq_ignore_ascii_case("burst")
+        || arrival.kind.eq_ignore_ascii_case("mmpp")
+    {
+        0.55 * capacity
+    } else {
+        0.7 * capacity
+    }
+}
+
+/// Resolve a tenant's plan: explicit stages win, then the eco selector
+/// (returning its base strategy + SLO verdict), then the §II-C
+/// constructor priced by the shared segment-cost table.
+fn resolve_plan(
+    spec: &ScenarioSpec,
+    tenant: &TenantEntry,
+    g: &Graph,
+    cluster: &ClusterConfig,
+    cost: &mut CostModel,
+) -> anyhow::Result<(ExecutionPlan, Option<(Strategy, bool)>)> {
+    if let Some(plan) = ScenarioSpec::explicit_plan(tenant, g, cluster.num_nodes())? {
+        return Ok((plan, None));
+    }
+    if tenant.strategy == Strategy::Eco {
+        let slo = (spec.slo_ms > 0.0).then_some(spec.slo_ms);
+        let choice = eco_plan(g, cluster, cost, slo)?;
+        return Ok((choice.plan, Some((choice.base, choice.meets_slo))));
+    }
+    let table = cost.seg_cost_table(g)?;
+    let plan = build_plan_priced(tenant.strategy, g, cluster.num_nodes(), &table)?;
+    Ok((plan, None))
+}
+
+/// Tag eco rows with the base strategy the selector picked.
+fn eco_label(label: &str, eco: &Option<(Strategy, bool)>) -> String {
+    match eco {
+        Some((base, _)) => format!("{label} (eco→{base})"),
+        None => label.to_string(),
+    }
+}
+
+/// Row label for tenant `i`: the model name, `#i`-suffixed only when the
+/// same model appears more than once.
+fn tenant_label(tenants: &[TenantEntry], i: usize) -> String {
+    let model = &tenants[i].model;
+    if tenants.iter().filter(|t| &t.model == model).count() > 1 {
+        format!("{model}#{i}")
+    } else {
+        model.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::ControllerSpec;
+
+    fn session(text: &str) -> Session {
+        Session::new(ScenarioSpec::parse(text).unwrap())
+            .unwrap()
+            .with_calibration(Calibration::default())
+            .fast(false)
+    }
+
+    #[test]
+    fn analytic_single_matches_direct_simulation() {
+        let s = session(
+            r#"{"model": "lenet5", "strategy": "pipeline", "nodes": 2, "images": 24, "seed": 9}"#,
+        );
+        let rep = s.run().unwrap();
+        assert_eq!(rep.rows.len(), 1);
+        let row = &rep.rows[0];
+        assert_eq!(row.engine, "analytic");
+        assert_eq!(row.strategy, "pipeline");
+        // reference: the same pipeline cell priced directly
+        let g = zoo::build("lenet5", 0).unwrap();
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, 2);
+        let mut cost = CostModel::new(
+            cluster.vta.clone(),
+            BoardProfile::zynq7020(),
+            Calibration::default(),
+        );
+        let table = cost.seg_cost_table(&g).unwrap();
+        let plan = build_plan_priced(Strategy::Pipeline, &g, 2, &table).unwrap();
+        let sim = simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images: 24 }).unwrap();
+        assert_eq!(row.ms_per_image, sim.ms_per_image);
+        assert_eq!(row.j_per_image, sim.power.j_per_image);
+        assert_eq!(row.network_bytes, sim.network_bytes);
+    }
+
+    #[test]
+    fn des_single_runs_controller_and_is_deterministic() {
+        let text = r#"{
+          "model": "lenet5", "strategy": "ai", "nodes": 3, "engine": "des",
+          "arrival": {"kind": "burst", "burst_mult": 4}, "horizon_ms": 4000, "seed": 7
+        }"#;
+        let a = session(text).run().unwrap();
+        let b = session(text).run().unwrap();
+        assert_eq!(a.rows.len(), 1);
+        assert_eq!(a.rows[0].engine, "des");
+        assert_eq!(a.rows[0].offered, b.rows[0].offered);
+        assert_eq!(a.rows[0].p99_ms, b.rows[0].p99_ms);
+        assert_eq!(a.events.len(), b.events.len());
+        assert!(!a.timeline.is_empty(), "single DES run keeps its timeline");
+        assert!(a.rows[0].completed > 0);
+    }
+
+    #[test]
+    fn multi_tenant_analytic_rows_cover_the_budget() {
+        let s = session(
+            r#"{
+              "tenants": [
+                {"model": "resnet18", "strategy": "pipeline", "images": 16},
+                {"model": "lenet5", "strategy": "sg", "images": 16},
+                {"model": "mlp", "strategy": "fused", "images": 16}
+              ],
+              "nodes": 12, "seed": 7
+            }"#,
+        );
+        let rep = s.run().unwrap();
+        assert_eq!(rep.rows.len(), 3);
+        assert_eq!(rep.rows.iter().map(|r| r.nodes).sum::<usize>(), 12);
+        assert_eq!(rep.rows[1].label, "lenet5");
+        for r in &rep.rows {
+            assert!(r.img_per_sec > 0.0);
+            assert!(r.p99_ms >= r.p50_ms);
+            assert!(r.cluster_avg_w > 0.0 && r.j_per_image > 0.0);
+        }
+    }
+
+    #[test]
+    fn hetero_groups_produce_one_row_per_family() {
+        let s = session(
+            r#"{
+              "model": "lenet5", "strategy": "sg", "engine": "des",
+              "boards": [{"family": "zynq", "n": 2}, {"family": "zu+", "n": 2}],
+              "horizon_ms": 3000, "seed": 5
+            }"#,
+        );
+        let rep = s.run().unwrap();
+        assert_eq!(rep.rows.len(), 2);
+        assert_eq!(rep.rows[0].family, "zynq7000");
+        assert_eq!(rep.rows[1].family, "ultrascale+");
+        assert!(rep.rows[0].label.starts_with("2xzynq7000"));
+        assert!(rep.timeline.is_empty(), "multi-row runs drop the timeline");
+        for r in &rep.rows {
+            assert!(r.completed > 0, "{}: nothing completed", r.label);
+        }
+    }
+
+    #[test]
+    fn eco_rows_name_their_base_strategy() {
+        let s = session(
+            r#"{"model": "lenet5", "strategy": "eco", "nodes": 2, "images": 16}"#,
+        );
+        let rep = s.run().unwrap();
+        assert_eq!(rep.rows[0].strategy, "eco");
+        assert!(rep.rows[0].label.contains("eco→"), "{}", rep.rows[0].label);
+        assert!(rep.rows[0].meets_slo);
+    }
+
+    #[test]
+    fn explicit_plan_becomes_the_initial_des_option() {
+        let s = session(
+            r#"{
+              "model": "lenet5", "strategy": "pipeline", "nodes": 2, "engine": "des",
+              "horizon_ms": 2000,
+              "plan": [
+                {"segments": ["c1", "c2"], "replicas": [0], "split": "dp"},
+                {"segments": ["c3", "head"], "replicas": [1], "split": "dp"}
+              ],
+              "controller": {"enabled": false}
+            }"#,
+        );
+        let rep = s.run().unwrap();
+        assert_eq!(rep.rows[0].strategy, "pipeline");
+        assert!(rep.rows[0].completed > 0);
+        assert!(rep.events.is_empty(), "controller disabled");
+    }
+
+    #[test]
+    fn fast_mode_clamps_horizon_and_images() {
+        let spec = ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des", "horizon_ms": 60000}"#,
+        )
+        .unwrap();
+        let s = Session::new(spec)
+            .unwrap()
+            .with_calibration(Calibration::default())
+            .fast(true);
+        let eff = s.effective_spec();
+        assert_eq!(eff.horizon_ms, 2500.0);
+        assert_eq!(eff.tenants[0].images, 16);
+    }
+
+    #[test]
+    fn power_budget_flows_into_the_controller() {
+        // structural check: a capped DES spec runs and keeps schema
+        let spec = ScenarioSpec {
+            controller: ControllerSpec { enabled: true, power_budget_w: 9.0 },
+            ..ScenarioSpec::parse(
+                r#"{"model": "mlp", "engine": "des", "nodes": 2,
+                    "arrival": {"kind": "burst", "burst_mult": 4},
+                    "horizon_ms": 3000}"#,
+            )
+            .unwrap()
+        };
+        let rep = Session::new(spec)
+            .unwrap()
+            .with_calibration(Calibration::default())
+            .fast(false)
+            .run()
+            .unwrap();
+        assert_eq!(rep.rows.len(), 1);
+        assert!(rep.rows[0].completed > 0);
+    }
+}

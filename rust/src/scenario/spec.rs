@@ -1,0 +1,724 @@
+//! [`ScenarioSpec`] — the declarative, JSON-round-trippable description
+//! of one experiment (DESIGN.md §12).
+//!
+//! A spec names everything a run needs: the tenant workloads (model,
+//! strategy or an explicit stage-level plan, stream length), the board
+//! inventory per family, the arrival process, the reconfiguration
+//! controller and its power budget, the latency SLO, the RNG seed, the
+//! DES horizon, and which engine prices it (`analytic` or `des`).
+//! [`crate::scenario::Session`] resolves a spec into validated graphs,
+//! plans and cost/power models and runs it; `vtacluster run` feeds it
+//! from a file.
+//!
+//! The JSON form accepts a single-tenant / single-family **shorthand**
+//! (top-level `model`/`strategy`/`images`/`input_hw`/`plan` instead of a
+//! `tenants` array, `family`/`nodes` instead of `boards`) so specs stay
+//! copy-pasteable; [`ScenarioSpec::to_json`] always emits the canonical
+//! long form, and `parse(pretty(to_json())) == to_json()` exactly.
+
+use crate::config::BoardFamily;
+use crate::graph::{zoo, Graph};
+use crate::sched::{ExecutionPlan, SplitMode, StagePlan, Strategy};
+use crate::util::json::{self, Json};
+
+/// Which simulator prices the scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Steady-state demands + unloaded latency ([`crate::sim::cluster`]),
+    /// percentiles from a seeded loaded DES at the configured arrival.
+    Analytic,
+    /// Full discrete-event run ([`crate::sim::des`]) with open-loop
+    /// arrivals and (optionally) the online reconfiguration controller.
+    Des,
+}
+
+impl Engine {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Engine::Analytic => "analytic",
+            Engine::Des => "des",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "analytic" | "steady" | "sim" => Ok(Engine::Analytic),
+            "des" | "load" | "dynamic" => Ok(Engine::Des),
+            other => anyhow::bail!("unknown engine '{other}' (analytic|des)"),
+        }
+    }
+}
+
+/// One stage of an explicit, hand-written plan (the escape hatch past
+/// the strategy constructors).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    pub segments: Vec<String>,
+    pub replicas: Vec<usize>,
+    /// `"dp"` (data-parallel) or `"spatial"`.
+    pub split: SplitMode,
+}
+
+/// One workload of the scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantEntry {
+    /// Registry name (see [`crate::graph::zoo`]).
+    pub model: String,
+    /// Input size; `0` → the model's default.
+    pub input_hw: u64,
+    /// Scheduling strategy (the four §II-C strategies plus `eco`).
+    /// Ignored as a constructor when [`TenantEntry::plan`] is given, but
+    /// still used as the plan's strategy tag.
+    pub strategy: Strategy,
+    /// Images in the tenant's stream (analytic engine) / reporting unit.
+    pub images: usize,
+    /// Explicit stage-level plan instead of a strategy constructor.
+    pub plan: Option<Vec<StageSpec>>,
+}
+
+/// A homogeneous group of boards; several groups = a heterogeneous
+/// inventory (each group becomes its own sub-cluster).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoardGroup {
+    pub family: BoardFamily,
+    pub n: usize,
+}
+
+/// Open-loop arrival knobs (the DES drive; the analytic engine uses it
+/// for its loaded-percentile pass).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalSpec {
+    /// `poisson` | `burst` | `diurnal`.
+    pub kind: String,
+    /// Base rate, img/s; `0` = auto from plan capacity (70 %, or 55 %
+    /// for `burst` so the MMPP high phase overloads it).
+    pub rate: f64,
+    /// Burst-phase multiplier (only read when `kind == "burst"`).
+    pub burst_mult: f64,
+}
+
+impl Default for ArrivalSpec {
+    fn default() -> Self {
+        ArrivalSpec { kind: "poisson".into(), rate: 0.0, burst_mult: 4.0 }
+    }
+}
+
+/// Online-reconfiguration controller knobs (DES engine only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControllerSpec {
+    pub enabled: bool,
+    /// Cluster watts cap; `0` = uncapped.
+    pub power_budget_w: f64,
+}
+
+impl Default for ControllerSpec {
+    fn default() -> Self {
+        ControllerSpec { enabled: true, power_budget_w: 0.0 }
+    }
+}
+
+/// The full experiment description. See the module docs for the JSON
+/// grammar and DESIGN.md §12 for semantics per (tenants × boards ×
+/// engine) shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub engine: Engine,
+    pub seed: u64,
+    pub tenants: Vec<TenantEntry>,
+    pub boards: Vec<BoardGroup>,
+    pub arrival: ArrivalSpec,
+    pub controller: ControllerSpec,
+    /// Latency SLO, ms; `0` = none. Checked against unloaded latency
+    /// (analytic) or p99 (DES); also the eco strategy's constraint.
+    pub slo_ms: f64,
+    /// DES horizon, ms.
+    pub horizon_ms: f64,
+}
+
+impl ScenarioSpec {
+    /// A minimal single-tenant spec (the programmatic starting point the
+    /// CLI adapters build on).
+    pub fn single(model: &str, strategy: Strategy, family: BoardFamily, n: usize) -> Self {
+        ScenarioSpec {
+            name: format!("{model}-{strategy}-{n}x{family}"),
+            engine: Engine::Analytic,
+            seed: 7,
+            tenants: vec![TenantEntry {
+                model: model.to_string(),
+                input_hw: 0,
+                strategy,
+                images: 64,
+                plan: None,
+            }],
+            boards: vec![BoardGroup { family, n }],
+            arrival: ArrivalSpec::default(),
+            controller: ControllerSpec::default(),
+            slo_ms: 0.0,
+            horizon_ms: 20_000.0,
+        }
+    }
+
+    /// Semantic validation (everything that does not need a graph):
+    /// known models, sane rates/horizons, and the supported shapes —
+    /// multi-tenant *or* heterogeneous inventory, not both.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "scenario has no name");
+        anyhow::ensure!(!self.tenants.is_empty(), "scenario has no tenants");
+        anyhow::ensure!(!self.boards.is_empty(), "scenario has no boards");
+        for (i, t) in self.tenants.iter().enumerate() {
+            zoo::lookup(&t.model)
+                .map_err(|e| anyhow::anyhow!("tenant {i}: {e}"))?;
+            anyhow::ensure!(t.images >= 1, "tenant {i} ('{}'): images must be ≥ 1", t.model);
+        }
+        for (i, b) in self.boards.iter().enumerate() {
+            anyhow::ensure!(b.n >= 1, "board group {i} ({}): n must be ≥ 1", b.family);
+        }
+        anyhow::ensure!(
+            self.tenants.len() == 1 || self.boards.len() == 1,
+            "multi-tenant over a heterogeneous inventory is not supported: \
+             give each tenant its own scenario or use one board family"
+        );
+        anyhow::ensure!(
+            self.tenants.len() == 1 || self.tenants.iter().all(|t| t.plan.is_none()),
+            "explicit plans are only supported for single-tenant scenarios \
+             (multi-tenant node allocation would invalidate the hand-written replicas)"
+        );
+        // the multi-tenant analytic shape delegates to simulate_tenants,
+        // whose percentile pass pins a 70 %-capacity Poisson stream — a
+        // custom arrival would be silently ignored there, so reject it
+        if self.tenants.len() > 1 && self.engine == Engine::Analytic {
+            anyhow::ensure!(
+                self.arrival.kind.eq_ignore_ascii_case("poisson") && self.arrival.rate == 0.0,
+                "multi-tenant analytic runs pin a 70%-capacity Poisson percentile \
+                 pass; use engine \"des\" to drive tenants with a custom arrival"
+            );
+        }
+        match self.arrival.kind.to_ascii_lowercase().as_str() {
+            "poisson" | "diurnal" => {}
+            "burst" | "mmpp" => anyhow::ensure!(
+                self.arrival.burst_mult > 1.0,
+                "arrival.burst_mult must be > 1 for burst arrivals"
+            ),
+            other => anyhow::bail!("unknown arrival.kind '{other}' (poisson|burst|diurnal)"),
+        }
+        anyhow::ensure!(
+            self.arrival.rate >= 0.0 && self.arrival.rate.is_finite(),
+            "arrival.rate must be ≥ 0 (0 = auto from plan capacity)"
+        );
+        anyhow::ensure!(
+            self.horizon_ms > 0.0 && self.horizon_ms.is_finite(),
+            "horizon_ms must be > 0"
+        );
+        anyhow::ensure!(
+            self.slo_ms >= 0.0 && self.slo_ms.is_finite(),
+            "slo_ms must be ≥ 0 (0 = none)"
+        );
+        anyhow::ensure!(
+            self.controller.power_budget_w >= 0.0 && self.controller.power_budget_w.is_finite(),
+            "controller.power_budget_w must be ≥ 0 (0 = uncapped)"
+        );
+        if self.engine == Engine::Des {
+            anyhow::ensure!(
+                self.controller.power_budget_w == 0.0 || self.controller.enabled,
+                "a power budget needs the controller enabled \
+                 (a static plan cannot shed watts)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Resolve a tenant's explicit [`StageSpec`] list (if any) into a
+    /// validated [`ExecutionPlan`] for `g` over `n` nodes. A typo'd
+    /// segment label or replica id comes back as a reported error.
+    pub fn explicit_plan(
+        tenant: &TenantEntry,
+        g: &Graph,
+        n: usize,
+    ) -> anyhow::Result<Option<ExecutionPlan>> {
+        let Some(stages) = &tenant.plan else { return Ok(None) };
+        let plan = ExecutionPlan {
+            strategy: tenant.strategy,
+            n_nodes: n,
+            model: g.model.clone(),
+            segment_order: g.segment_order(),
+            stages: stages
+                .iter()
+                .map(|s| StagePlan {
+                    segments: s.segments.clone(),
+                    replicas: s.replicas.clone(),
+                    split: s.split,
+                })
+                .collect(),
+        };
+        plan.validate_for(g)
+            .map_err(|e| anyhow::anyhow!("explicit plan for '{}': {e}", tenant.model))?;
+        Ok(Some(plan))
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    /// Parse a spec from its JSON document (shorthand accepted — see the
+    /// module docs). Unknown keys are errors: they are usually typo'd
+    /// experiment parameters.
+    pub fn from_json(doc: &Json) -> anyhow::Result<Self> {
+        check_keys(
+            doc,
+            "scenario",
+            &[
+                "name", "engine", "seed", "tenants", "boards", "arrival", "controller",
+                "slo_ms", "horizon_ms", "sweep", "model", "strategy", "images",
+                "input_hw", "plan", "family", "nodes",
+            ],
+        )?;
+        // a sweep is a *grid over* specs, not a spec field: parsing one
+        // cell out of it here would silently drop the other cells
+        anyhow::ensure!(
+            doc.get("sweep").is_none(),
+            "this scenario declares a `sweep` grid — expand it with \
+             `Sweep::from_doc` (the CLI `run` does this automatically)"
+        );
+        let name = match doc.get("name") {
+            Some(v) => v.as_str()?.to_string(),
+            None => "scenario".to_string(),
+        };
+        let engine = match doc.get("engine") {
+            Some(v) => Engine::parse(v.as_str()?)?,
+            None => Engine::Analytic,
+        };
+        let seed = match doc.get("seed") {
+            Some(v) => v.as_u64()?,
+            None => 7,
+        };
+
+        let tenants = match doc.get("tenants") {
+            Some(list) => {
+                // with a tenants array, every per-tenant shorthand key
+                // must move inside it — a top-level one would be
+                // silently ignored otherwise
+                for key in ["model", "strategy", "images", "input_hw", "plan"] {
+                    anyhow::ensure!(
+                        doc.get(key).is_none(),
+                        "top-level `{key}` conflicts with the `tenants` array — \
+                         set it per tenant instead"
+                    );
+                }
+                list.as_arr()?
+                    .iter()
+                    .map(|t| {
+                        check_keys(
+                            t,
+                            "tenant",
+                            &["model", "strategy", "images", "input_hw", "plan"],
+                        )?;
+                        Self::tenant_from_json(t)
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?
+            }
+            None => vec![Self::tenant_from_json(doc)?],
+        };
+
+        let boards = match doc.get("boards") {
+            Some(list) => {
+                anyhow::ensure!(
+                    doc.get("family").is_none() && doc.get("nodes").is_none(),
+                    "give either a `boards` array or the top-level \
+                     `family`/`nodes` shorthand, not both"
+                );
+                list.as_arr()?
+                    .iter()
+                    .map(|b| {
+                        check_keys(b, "board group", &["family", "n"])?;
+                        Ok(BoardGroup {
+                            family: BoardFamily::parse(b.get_str("family")?)?,
+                            n: b.req("n")?.as_usize()?,
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?
+            }
+            None => vec![BoardGroup {
+                family: match doc.get("family") {
+                    Some(v) => BoardFamily::parse(v.as_str()?)?,
+                    None => BoardFamily::Zynq7000,
+                },
+                n: match doc.get("nodes") {
+                    Some(v) => v.as_usize()?,
+                    None => 4,
+                },
+            }],
+        };
+
+        let arrival = match doc.get("arrival") {
+            Some(a) => {
+                check_keys(a, "arrival", &["kind", "rate", "burst_mult"])?;
+                ArrivalSpec {
+                    kind: match a.get("kind") {
+                        Some(v) => v.as_str()?.to_string(),
+                        None => "poisson".to_string(),
+                    },
+                    rate: match a.get("rate") {
+                        Some(v) => v.as_f64()?,
+                        None => 0.0,
+                    },
+                    burst_mult: match a.get("burst_mult") {
+                        Some(v) => v.as_f64()?,
+                        None => 4.0,
+                    },
+                }
+            }
+            None => ArrivalSpec::default(),
+        };
+        let controller = match doc.get("controller") {
+            Some(c) => {
+                check_keys(c, "controller", &["enabled", "power_budget_w"])?;
+                ControllerSpec {
+                    enabled: match c.get("enabled") {
+                        Some(v) => v.as_bool()?,
+                        None => true,
+                    },
+                    power_budget_w: match c.get("power_budget_w") {
+                        Some(v) => v.as_f64()?,
+                        None => 0.0,
+                    },
+                }
+            }
+            None => ControllerSpec::default(),
+        };
+        let slo_ms = match doc.get("slo_ms") {
+            Some(v) => v.as_f64()?,
+            None => 0.0,
+        };
+        let horizon_ms = match doc.get("horizon_ms") {
+            Some(v) => v.as_f64()?,
+            None => 20_000.0,
+        };
+
+        let spec = ScenarioSpec {
+            name,
+            engine,
+            seed,
+            tenants,
+            boards,
+            arrival,
+            controller,
+            slo_ms,
+            horizon_ms,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn tenant_from_json(t: &Json) -> anyhow::Result<TenantEntry> {
+        let model = t
+            .get("model")
+            .ok_or_else(|| anyhow::anyhow!("tenant is missing `model`"))?
+            .as_str()?
+            .to_string();
+        let strategy = match t.get("strategy") {
+            Some(v) => Strategy::parse(v.as_str()?)?,
+            None => Strategy::Fused,
+        };
+        let images = match t.get("images") {
+            Some(v) => v.as_usize()?,
+            None => 64,
+        };
+        let input_hw = match t.get("input_hw") {
+            Some(v) => v.as_u64()?,
+            None => 0,
+        };
+        let plan = match t.get("plan") {
+            Some(stages) => Some(
+                stages
+                    .as_arr()?
+                    .iter()
+                    .map(|s| {
+                        check_keys(s, "plan stage", &["segments", "replicas", "split"])?;
+                        let segments = s
+                            .req("segments")?
+                            .as_arr()?
+                            .iter()
+                            .map(|x| Ok(x.as_str()?.to_string()))
+                            .collect::<anyhow::Result<Vec<_>>>()?;
+                        let replicas = s
+                            .req("replicas")?
+                            .as_arr()?
+                            .iter()
+                            .map(|x| Ok(x.as_usize()?))
+                            .collect::<anyhow::Result<Vec<_>>>()?;
+                        let split = match s.get_str("split")? {
+                            "dp" | "data-parallel" => SplitMode::DataParallel,
+                            "spatial" => SplitMode::Spatial,
+                            other => anyhow::bail!(
+                                "unknown split '{other}' (dp|spatial)"
+                            ),
+                        };
+                        Ok(StageSpec { segments, replicas, split })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ),
+            None => None,
+        };
+        Ok(TenantEntry { model, input_hw, strategy, images, plan })
+    }
+
+    /// Canonical (long-form) JSON emit. Lossless:
+    /// `ScenarioSpec::from_json(&spec.to_json()) == spec`.
+    pub fn to_json(&self) -> Json {
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let mut fields = vec![
+                    ("model", json::str_(&t.model)),
+                    ("input_hw", json::int(t.input_hw as i64)),
+                    ("strategy", json::str_(t.strategy.as_str())),
+                    ("images", json::int(t.images as i64)),
+                ];
+                if let Some(stages) = &t.plan {
+                    fields.push((
+                        "plan",
+                        Json::Arr(
+                            stages
+                                .iter()
+                                .map(|s| {
+                                    json::obj(vec![
+                                        (
+                                            "segments",
+                                            Json::Arr(
+                                                s.segments
+                                                    .iter()
+                                                    .map(|x| json::str_(x))
+                                                    .collect(),
+                                            ),
+                                        ),
+                                        (
+                                            "replicas",
+                                            Json::Arr(
+                                                s.replicas
+                                                    .iter()
+                                                    .map(|&r| json::int(r as i64))
+                                                    .collect(),
+                                            ),
+                                        ),
+                                        (
+                                            "split",
+                                            json::str_(match s.split {
+                                                SplitMode::DataParallel => "dp",
+                                                SplitMode::Spatial => "spatial",
+                                            }),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+                json::obj(fields)
+            })
+            .collect();
+        let boards: Vec<Json> = self
+            .boards
+            .iter()
+            .map(|b| {
+                json::obj(vec![
+                    ("family", json::str_(b.family.as_str())),
+                    ("n", json::int(b.n as i64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("name", json::str_(&self.name)),
+            ("engine", json::str_(self.engine.as_str())),
+            ("seed", json::int(self.seed as i64)),
+            ("tenants", Json::Arr(tenants)),
+            ("boards", Json::Arr(boards)),
+            (
+                "arrival",
+                json::obj(vec![
+                    ("kind", json::str_(&self.arrival.kind)),
+                    ("rate", json::num(self.arrival.rate)),
+                    ("burst_mult", json::num(self.arrival.burst_mult)),
+                ]),
+            ),
+            (
+                "controller",
+                json::obj(vec![
+                    ("enabled", Json::Bool(self.controller.enabled)),
+                    ("power_budget_w", json::num(self.controller.power_budget_w)),
+                ]),
+            ),
+            ("slo_ms", json::num(self.slo_ms)),
+            ("horizon_ms", json::num(self.horizon_ms)),
+        ])
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(text)?)
+    }
+}
+
+/// Reject unknown object keys — in an experiment spec they are almost
+/// always typo'd parameters that would otherwise silently fall back to
+/// defaults.
+fn check_keys(obj: &Json, what: &str, known: &[&str]) -> anyhow::Result<()> {
+    for (k, _) in obj.as_obj()? {
+        anyhow::ensure!(
+            known.contains(&k.as_str()),
+            "unknown {what} key '{k}' (known: {})",
+            known.join(", ")
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shorthand_and_canonical_forms_agree() {
+        let short = ScenarioSpec::parse(
+            r#"{"model": "lenet5", "strategy": "pipeline", "nodes": 3}"#,
+        )
+        .unwrap();
+        let long = ScenarioSpec::parse(
+            r#"{
+              "tenants": [{"model": "lenet5", "strategy": "pipeline", "images": 64, "input_hw": 0}],
+              "boards": [{"family": "zynq7000", "n": 3}]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(short.tenants, long.tenants);
+        assert_eq!(short.boards, long.boards);
+        assert_eq!(short.engine, Engine::Analytic);
+        assert_eq!(short.seed, 7);
+    }
+
+    #[test]
+    fn canonical_json_roundtrips_losslessly() {
+        let mut spec = ScenarioSpec::single(
+            "resnet18",
+            Strategy::Eco,
+            BoardFamily::UltraScalePlus,
+            5,
+        );
+        spec.engine = Engine::Des;
+        spec.arrival = ArrivalSpec { kind: "burst".into(), rate: 120.5, burst_mult: 3.0 };
+        spec.controller = ControllerSpec { enabled: true, power_budget_w: 30.0 };
+        spec.slo_ms = 45.0;
+        let j = spec.to_json();
+        let back = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(back, spec);
+        // and through the pretty printer (the `run --emit-spec` path)
+        let again = ScenarioSpec::parse(&json::pretty(&j)).unwrap();
+        assert_eq!(again, spec);
+        assert_eq!(Json::parse(&json::pretty(&j)).unwrap(), j);
+    }
+
+    #[test]
+    fn explicit_plan_roundtrips_and_resolves() {
+        let text = r#"{
+          "model": "lenet5", "strategy": "pipeline", "nodes": 2,
+          "plan": [
+            {"segments": ["c1", "c2"], "replicas": [0], "split": "dp"},
+            {"segments": ["c3", "head"], "replicas": [1], "split": "dp"}
+          ]
+        }"#;
+        let spec = ScenarioSpec::parse(text).unwrap();
+        let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        let g = zoo::build("lenet5", 0).unwrap();
+        let plan = ScenarioSpec::explicit_plan(&spec.tenants[0], &g, 2)
+            .unwrap()
+            .expect("plan given");
+        plan.validate_for(&g).unwrap();
+        assert_eq!(plan.stages.len(), 2);
+    }
+
+    #[test]
+    fn typod_segment_label_reports_instead_of_panicking() {
+        let text = r#"{
+          "model": "lenet5", "nodes": 1,
+          "plan": [{"segments": ["c1", "c2", "c3", "heda"], "replicas": [0], "split": "dp"}]
+        }"#;
+        let spec = ScenarioSpec::parse(text).unwrap();
+        let g = zoo::build("lenet5", 0).unwrap();
+        let e = ScenarioSpec::explicit_plan(&spec.tenants[0], &g, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("heda") || e.contains("head"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        // unknown key (typo'd parameter)
+        assert!(ScenarioSpec::parse(r#"{"model": "mlp", "hozizon_ms": 5}"#).is_err());
+        // unknown model
+        assert!(ScenarioSpec::parse(r#"{"model": "vgg"}"#).is_err());
+        // both shorthand and array forms
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "tenants": [{"model": "mlp"}]}"#
+        )
+        .is_err());
+        // a top-level per-tenant key next to a tenants array would be
+        // silently ignored — reject it instead
+        let e = ScenarioSpec::parse(
+            r#"{"tenants": [{"model": "mlp"}, {"model": "lenet5"}], "images": 128}"#
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("images"), "{e}");
+        // a sweep doc must go through Sweep::from_doc, not be silently
+        // collapsed to one cell
+        let e = ScenarioSpec::parse(r#"{"model": "mlp", "sweep": {"nodes": [1, 2]}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("sweep"), "{e}");
+        // multi-tenant over heterogeneous boards
+        assert!(ScenarioSpec::parse(
+            r#"{"tenants": [{"model": "mlp"}, {"model": "lenet5"}],
+                "boards": [{"family": "zynq", "n": 2}, {"family": "zu+", "n": 2}]}"#
+        )
+        .is_err());
+        // power budget without the controller
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des",
+                "controller": {"enabled": false, "power_budget_w": 10}}"#
+        )
+        .is_err());
+        // burst without a multiplier > 1
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "arrival": {"kind": "burst", "burst_mult": 1.0}}"#
+        )
+        .is_err());
+        // degenerate horizon
+        assert!(ScenarioSpec::parse(r#"{"model": "mlp", "horizon_ms": 0}"#).is_err());
+        // multi-tenant analytic pins its percentile pass: a custom
+        // arrival would be silently ignored, so it is rejected …
+        assert!(ScenarioSpec::parse(
+            r#"{"tenants": [{"model": "mlp"}, {"model": "lenet5"}],
+                "arrival": {"kind": "diurnal"}}"#
+        )
+        .is_err());
+        // … while the same arrival is fine on the DES engine
+        assert!(ScenarioSpec::parse(
+            r#"{"tenants": [{"model": "mlp"}, {"model": "lenet5"}],
+                "engine": "des", "arrival": {"kind": "diurnal"}}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn defaults_are_documented_values() {
+        let s = ScenarioSpec::parse(r#"{"model": "mlp"}"#).unwrap();
+        assert_eq!(s.engine, Engine::Analytic);
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.tenants[0].strategy, Strategy::Fused);
+        assert_eq!(s.tenants[0].images, 64);
+        assert_eq!(s.boards, vec![BoardGroup { family: BoardFamily::Zynq7000, n: 4 }]);
+        assert_eq!(s.arrival.kind, "poisson");
+        assert_eq!(s.horizon_ms, 20_000.0);
+        assert!(s.controller.enabled && s.controller.power_budget_w == 0.0);
+    }
+}

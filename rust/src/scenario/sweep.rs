@@ -1,0 +1,310 @@
+//! [`Sweep`] — grid expansion over any [`ScenarioSpec`] axis
+//! (DESIGN.md §12, EXPERIMENTS.md §E12).
+//!
+//! A scenario file opts in with a top-level `"sweep"` object mapping
+//! **spec paths** to value lists:
+//!
+//! ```json
+//! { "model": "resnet18", "nodes": 4,
+//!   "sweep": { "nodes": [4, 8, 12], "strategy": ["pipeline", "eco"] } }
+//! ```
+//!
+//! Paths are dotted and may index arrays (`arrival.kind`,
+//! `tenants.0.strategy`, `boards.1.n`); they address the spec's JSON
+//! document *as written*, so shorthand specs sweep with shorthand paths.
+//! Expansion is the cartesian product in declaration order; every cell
+//! is re-parsed and re-validated as a full [`ScenarioSpec`], run through
+//! one [`Session`] sharing a [`CostCache`], and merged into a single
+//! tagged [`Report`] whose cross-row dominance tags make it a
+//! latency-vs-watts frontier for free.
+//!
+//! The same path/value machinery backs `vtacluster run --set key=value`
+//! overrides.
+
+use super::report::Report;
+use super::session::{CostCache, Session};
+use super::spec::ScenarioSpec;
+use crate::config::Calibration;
+use crate::util::json::Json;
+
+/// Hard cap on grid size — a typo'd axis must not fork a million runs.
+const MAX_CELLS: usize = 1024;
+
+/// An expanded-on-demand scenario grid.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    /// The spec document (shorthand allowed) without its `"sweep"` key.
+    base: Json,
+    /// (path, values) axes in declaration order.
+    axes: Vec<(String, Vec<Json>)>,
+}
+
+impl Sweep {
+    /// Extract the sweep from a scenario document, if it declares one.
+    pub fn from_doc(doc: &Json) -> anyhow::Result<Option<Sweep>> {
+        let Some(sweep) = doc.get("sweep") else { return Ok(None) };
+        let axes: Vec<(String, Vec<Json>)> = sweep
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_arr()?.to_vec())))
+            .collect::<anyhow::Result<_>>()?;
+        let base = Json::Obj(
+            doc.as_obj()?
+                .iter()
+                .filter(|(k, _)| k != "sweep")
+                .cloned()
+                .collect(),
+        );
+        Sweep::new(base, axes).map(Some)
+    }
+
+    /// Build a sweep programmatically (the CLI `power` frontier does).
+    pub fn new(base: Json, axes: Vec<(String, Vec<Json>)>) -> anyhow::Result<Sweep> {
+        anyhow::ensure!(!axes.is_empty(), "sweep declares no axes");
+        let mut cells = 1usize;
+        for (path, values) in &axes {
+            anyhow::ensure!(!values.is_empty(), "sweep axis '{path}' has no values");
+            cells = cells.saturating_mul(values.len());
+        }
+        anyhow::ensure!(
+            cells <= MAX_CELLS,
+            "sweep expands to {cells} cells (cap: {MAX_CELLS})"
+        );
+        Ok(Sweep { base, axes })
+    }
+
+    /// Expand the grid: every cell as `(tag, spec)`, tag =
+    /// `"axis=value,..."` in declaration order.
+    pub fn cells(&self) -> anyhow::Result<Vec<(String, ScenarioSpec)>> {
+        let mut docs = vec![(String::new(), self.base.clone())];
+        for (path, values) in &self.axes {
+            let short = path.rsplit('.').next().unwrap_or(path);
+            let mut next = Vec::with_capacity(docs.len() * values.len());
+            for (tag, doc) in &docs {
+                for v in values {
+                    let mut cell = doc.clone();
+                    set_path(&mut cell, path, v.clone())?;
+                    let t = if tag.is_empty() {
+                        format!("{short}={}", tag_value(v))
+                    } else {
+                        format!("{tag},{short}={}", tag_value(v))
+                    };
+                    next.push((t, cell));
+                }
+            }
+            docs = next;
+        }
+        docs.into_iter()
+            .map(|(tag, doc)| {
+                let spec = ScenarioSpec::from_json(&doc)
+                    .map_err(|e| anyhow::anyhow!("sweep cell [{tag}]: {e}"))?;
+                Ok((tag, spec))
+            })
+            .collect()
+    }
+
+    /// Run every cell and merge the tagged rows into one finalized
+    /// [`Report`] (cost models shared across cells per family).
+    pub fn run(&self, calib: &Calibration) -> anyhow::Result<Report> {
+        let cells = self.cells()?;
+        let first = &cells[0].1;
+        let mut report =
+            Report::new(&first.name, first.engine.as_str(), first.seed);
+        let mut cache = CostCache::new(calib.clone());
+        for (tag, spec) in cells {
+            let cell_report = Session::new(spec)?
+                .with_calibration(calib.clone())
+                .run_cached(&mut cache)
+                .map_err(|e| anyhow::anyhow!("sweep cell [{tag}]: {e}"))?;
+            report.absorb(&tag, cell_report);
+        }
+        report.finalize();
+        Ok(report)
+    }
+}
+
+/// Set `path` (dotted keys, numeric array indices) in a JSON document,
+/// creating intermediate objects for missing keys. Used by sweep axes
+/// and `--set` overrides.
+pub fn set_path(doc: &mut Json, path: &str, value: Json) -> anyhow::Result<()> {
+    anyhow::ensure!(!path.is_empty(), "empty override path");
+    let parts: Vec<&str> = path.split('.').collect();
+    let mut cur = doc;
+    let mut value = Some(value);
+    for (i, part) in parts.iter().enumerate() {
+        let last = i + 1 == parts.len();
+        if let Ok(idx) = part.parse::<usize>() {
+            let arr = match cur {
+                Json::Arr(a) => a,
+                other => anyhow::bail!(
+                    "path '{path}': '{part}' indexes a {}",
+                    other.type_name()
+                ),
+            };
+            anyhow::ensure!(
+                idx < arr.len(),
+                "path '{path}': index {idx} out of range (len {})",
+                arr.len()
+            );
+            if last {
+                arr[idx] = value.take().expect("value used once");
+                return Ok(());
+            }
+            cur = &mut arr[idx];
+        } else {
+            let obj = match cur {
+                Json::Obj(o) => o,
+                other => anyhow::bail!(
+                    "path '{path}': '{part}' keys into a {}",
+                    other.type_name()
+                ),
+            };
+            let pos = match obj.iter().position(|(k, _)| k == *part) {
+                Some(p) => p,
+                None => {
+                    let filler =
+                        if last { Json::Null } else { Json::Obj(Vec::new()) };
+                    obj.push((part.to_string(), filler));
+                    obj.len() - 1
+                }
+            };
+            if last {
+                obj[pos].1 = value.take().expect("value used once");
+                return Ok(());
+            }
+            cur = &mut obj[pos].1;
+        }
+    }
+    unreachable!("loop returns on the last path part")
+}
+
+/// Parse one `--set key=value` override. The value is JSON when it
+/// parses as JSON (`8`, `true`, `[1,2]`), a bare string otherwise
+/// (`eco`, `burst`).
+pub fn parse_override(s: &str) -> anyhow::Result<(String, Json)> {
+    let (k, v) = s
+        .split_once('=')
+        .ok_or_else(|| anyhow::anyhow!("--set wants key=value, got '{s}'"))?;
+    anyhow::ensure!(!k.trim().is_empty(), "--set '{s}': empty key");
+    let v = v.trim();
+    let value = Json::parse(v).unwrap_or_else(|_| Json::Str(v.to_string()));
+    Ok((k.trim().to_string(), value))
+}
+
+/// Apply a list of `key=value` overrides to a scenario document.
+pub fn apply_overrides(doc: &mut Json, sets: &[String]) -> anyhow::Result<()> {
+    for s in sets {
+        let (path, value) = parse_override(s)?;
+        set_path(doc, &path, value)?;
+    }
+    Ok(())
+}
+
+/// Human tag for one axis value (strings unquoted, the rest compact).
+fn tag_value(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string_compact(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn set_path_handles_keys_indices_and_creation() {
+        let mut doc = Json::parse(
+            r#"{"nodes": 4, "arrival": {"kind": "poisson"},
+                "tenants": [{"model": "mlp"}, {"model": "lenet5"}]}"#,
+        )
+        .unwrap();
+        set_path(&mut doc, "nodes", json::int(8)).unwrap();
+        set_path(&mut doc, "arrival.kind", json::str_("burst")).unwrap();
+        set_path(&mut doc, "tenants.1.strategy", json::str_("eco")).unwrap();
+        set_path(&mut doc, "controller.power_budget_w", json::num(12.5)).unwrap();
+        assert_eq!(doc.get("nodes").unwrap().as_i64().unwrap(), 8);
+        assert_eq!(doc.get("arrival").unwrap().get_str("kind").unwrap(), "burst");
+        let t1 = &doc.get("tenants").unwrap().as_arr().unwrap()[1];
+        assert_eq!(t1.get_str("strategy").unwrap(), "eco");
+        assert_eq!(
+            doc.get("controller").unwrap().get_f64("power_budget_w").unwrap(),
+            12.5
+        );
+        // errors name the path
+        let e = set_path(&mut doc, "tenants.7.model", json::str_("x"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("tenants.7.model"), "{e}");
+        assert!(set_path(&mut doc, "nodes.3", json::int(1)).is_err());
+    }
+
+    #[test]
+    fn overrides_parse_json_or_fall_back_to_strings() {
+        let (k, v) = parse_override("nodes=8").unwrap();
+        assert_eq!((k.as_str(), v), ("nodes", json::int(8)));
+        let (_, v) = parse_override("strategy=eco").unwrap();
+        assert_eq!(v, json::str_("eco"));
+        let (_, v) = parse_override("controller.enabled=true").unwrap();
+        assert_eq!(v, Json::Bool(true));
+        assert!(parse_override("no-equals-sign").is_err());
+        assert!(parse_override("=5").is_err());
+    }
+
+    #[test]
+    fn grid_expansion_is_cartesian_in_declaration_order() {
+        let doc = Json::parse(
+            r#"{"model": "mlp", "nodes": 2,
+                "sweep": {"nodes": [2, 3], "strategy": ["sg", "pipeline"]}}"#,
+        )
+        .unwrap();
+        let sweep = Sweep::from_doc(&doc).unwrap().expect("sweep declared");
+        let cells = sweep.cells().unwrap();
+        assert_eq!(cells.len(), 4);
+        let tags: Vec<&str> = cells.iter().map(|(t, _)| t.as_str()).collect();
+        assert_eq!(
+            tags,
+            ["nodes=2,strategy=sg", "nodes=2,strategy=pipeline",
+             "nodes=3,strategy=sg", "nodes=3,strategy=pipeline"]
+        );
+        assert_eq!(cells[3].1.boards[0].n, 3);
+        assert_eq!(cells[3].1.tenants[0].strategy.as_str(), "pipeline");
+        // no sweep key → None
+        let plain = Json::parse(r#"{"model": "mlp"}"#).unwrap();
+        assert!(Sweep::from_doc(&plain).unwrap().is_none());
+    }
+
+    #[test]
+    fn sweep_runs_cells_into_one_tagged_dominance_marked_report() {
+        let doc = Json::parse(
+            r#"{"name": "mini-frontier", "model": "mlp", "images": 8,
+                "sweep": {"nodes": [1, 2], "strategy": ["sg", "pipeline"]}}"#,
+        )
+        .unwrap();
+        let sweep = Sweep::from_doc(&doc).unwrap().unwrap();
+        let rep = sweep.run(&crate::config::Calibration::default()).unwrap();
+        assert_eq!(rep.scenario, "mini-frontier");
+        assert_eq!(rep.rows.len(), 4);
+        assert!(rep.rows[0].label.starts_with("nodes=1,strategy=sg"));
+        // a 4-cell grid over one model must have a monotone frontier
+        let front = rep.frontier();
+        assert!(!front.is_empty() && front.len() <= 4);
+        for w in front.windows(2) {
+            assert!(w[1].cluster_avg_w > w[0].cluster_avg_w);
+            assert!(w[1].ms_per_image < w[0].ms_per_image);
+        }
+        // more boards must appear somewhere on the watt axis above fewer
+        assert!(rep.rows.iter().any(|r| r.nodes == 2 && !r.dominated));
+    }
+
+    #[test]
+    fn oversized_grids_are_rejected() {
+        let axes = vec![(
+            "nodes".to_string(),
+            (0..2000i64).map(json::int).collect::<Vec<_>>(),
+        )];
+        assert!(Sweep::new(Json::Obj(vec![]), axes).is_err());
+        assert!(Sweep::new(Json::Obj(vec![]), vec![]).is_err());
+    }
+}

@@ -24,4 +24,6 @@ pub use online::{
     OnlineController, PlanOption,
 };
 pub use plan::{ExecutionPlan, SplitMode, StagePlan, Strategy};
-pub use strategies::{build_plan, core_assign, fused, pipeline, scatter_gather};
+pub use strategies::{
+    build_plan, build_plan_priced, core_assign, fused, pipeline, scatter_gather,
+};

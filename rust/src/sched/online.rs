@@ -34,7 +34,7 @@
 
 use crate::config::{ClusterConfig, ReconfigCost};
 use crate::graph::Graph;
-use crate::sched::{build_plan, ExecutionPlan, Strategy};
+use crate::sched::{build_plan_priced, ExecutionPlan, Strategy};
 use crate::sim::cluster::simulate;
 use crate::sim::{CostModel, SimConfig};
 
@@ -68,10 +68,9 @@ pub fn plan_options(
     anyhow::ensure!(!strategies.is_empty(), "no candidate strategies");
     let n = cluster.num_nodes();
     let seg_costs = cost.seg_cost_table(g)?;
-    let lookup = |l: &str| seg_costs.iter().find(|(x, _)| x == l).unwrap().1;
     let mut out = Vec::with_capacity(strategies.len());
     for &s in strategies {
-        let plan = build_plan(s, g, n, lookup)?;
+        let plan = build_plan_priced(s, g, n, &seg_costs)?;
         let sim = simulate(&plan, cluster, cost, g, &SimConfig { images: 16 })?;
         out.push(PlanOption {
             plan,

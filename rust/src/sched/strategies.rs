@@ -7,6 +7,7 @@
 use super::plan::{ExecutionPlan, SplitMode, StagePlan, Strategy};
 use crate::graph::partition::{atomic_segments, partition_balanced};
 use crate::graph::Graph;
+use std::collections::HashMap;
 
 /// §II-C.1 Scatter-Gather: pure data parallelism — whole images are
 /// distributed across all nodes and results gathered in order.
@@ -284,6 +285,35 @@ where
     }
 }
 
+/// [`build_plan`] over a precomputed `(label, cost)` table (the shape
+/// [`crate::sim::CostModel::seg_cost_table`] returns), with the coverage
+/// check the bare closure form cannot express: a segment of `g` missing
+/// from the table is a reported error, not an `unwrap` panic inside the
+/// oracle. Every CLI/scenario path prices plans through here.
+pub fn build_plan_priced(
+    strategy: Strategy,
+    g: &Graph,
+    n: usize,
+    table: &[(String, f64)],
+) -> anyhow::Result<ExecutionPlan> {
+    let map: HashMap<&str, f64> =
+        table.iter().map(|(l, c)| (l.as_str(), *c)).collect();
+    let missing: Vec<String> = g
+        .segment_order()
+        .into_iter()
+        .filter(|l| !map.contains_key(l.as_str()))
+        .collect();
+    anyhow::ensure!(
+        missing.is_empty(),
+        "cost table for model '{}' is missing segment(s) {missing:?} (has {:?})",
+        g.model,
+        table.iter().map(|(l, _)| l.as_str()).collect::<Vec<_>>()
+    );
+    // the planners only query labels from `g.segment_order()`, all of
+    // which the check above guarantees are present
+    build_plan(strategy, g, n, |l| map.get(l).copied().unwrap_or(f64::INFINITY))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,6 +437,27 @@ mod tests {
                 bottleneck(&p)
             );
         }
+    }
+
+    #[test]
+    fn priced_build_reports_missing_segments_instead_of_panicking() {
+        let g = g();
+        // full table → same plan as the closure form
+        let table: Vec<(String, f64)> = atomic_segments(&g)
+            .iter()
+            .map(|a| (a.labels[0].clone(), a.macs as f64))
+            .collect();
+        let p = build_plan_priced(Strategy::Pipeline, &g, 4, &table).unwrap();
+        let q = build_plan(Strategy::Pipeline, &g, 4, mac_cost(&g)).unwrap();
+        assert_eq!(p, q);
+        // a table with a typo'd label errors, naming the missing segment
+        let mut bad = table.clone();
+        bad[0].0 = "stemm".into();
+        let e = build_plan_priced(Strategy::Pipeline, &g, 4, &bad)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("stem"), "{e}");
+        assert!(e.contains("resnet18"), "{e}");
     }
 
     #[test]

@@ -12,6 +12,8 @@ struct Spec {
     help: String,
     default: Option<String>,
     is_flag: bool,
+    /// Repeatable `--key value` collected into a list (e.g. `--set`).
+    is_multi: bool,
 }
 
 /// Declarative CLI: declare options, then parse.
@@ -27,6 +29,7 @@ pub struct Cli {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    multis: BTreeMap<String, Vec<String>>,
     pub positional: Vec<String>,
 }
 
@@ -42,6 +45,7 @@ impl Cli {
             help: help.into(),
             default: Some(default.into()),
             is_flag: false,
+            is_multi: false,
         });
         self
     }
@@ -53,6 +57,7 @@ impl Cli {
             help: help.into(),
             default: None,
             is_flag: false,
+            is_multi: false,
         });
         self
     }
@@ -64,6 +69,20 @@ impl Cli {
             help: help.into(),
             default: None,
             is_flag: true,
+            is_multi: false,
+        });
+        self
+    }
+
+    /// Declare a repeatable `--name <value>` collected into a list
+    /// (zero occurrences → empty list; e.g. `run --set a=1 --set b=2`).
+    pub fn multi(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+            is_multi: true,
         });
         self
     }
@@ -89,6 +108,7 @@ impl Cli {
             let def = match &spec.default {
                 Some(d) => format!(" [default: {d}]"),
                 None if spec.is_flag => String::new(),
+                None if spec.is_multi => " [repeatable]".to_string(),
                 None => " [required]".to_string(),
             };
             s.push_str(&format!("  {lhs:24} {}{def}\n", spec.help));
@@ -104,6 +124,7 @@ impl Cli {
     pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> anyhow::Result<Args> {
         let mut values = BTreeMap::new();
         let mut flags = BTreeMap::new();
+        let mut multis: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut positional = Vec::new();
         let mut it = argv.into_iter().peekable();
         while let Some(arg) = it.next() {
@@ -132,7 +153,11 @@ impl Cli {
                             .next()
                             .ok_or_else(|| anyhow::anyhow!("option --{name} needs a value"))?,
                     };
-                    values.insert(name, v);
+                    if spec.is_multi {
+                        multis.entry(name).or_default().push(v);
+                    } else {
+                        values.insert(name, v);
+                    }
                 }
             } else {
                 if self.positional_name.is_none() {
@@ -145,6 +170,8 @@ impl Cli {
         for spec in &self.specs {
             if spec.is_flag {
                 flags.entry(spec.name.clone()).or_insert(false);
+            } else if spec.is_multi {
+                multis.entry(spec.name.clone()).or_default();
             } else if !values.contains_key(&spec.name) {
                 match &spec.default {
                     Some(d) => {
@@ -154,7 +181,7 @@ impl Cli {
                 }
             }
         }
-        Ok(Args { values, flags, positional })
+        Ok(Args { values, flags, multis, positional })
     }
 
     /// Parse the process arguments.
@@ -168,6 +195,13 @@ impl Args {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    /// Every occurrence of a repeatable option, in command-line order.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.multis
+            .get(name)
+            .unwrap_or_else(|| panic!("multi option --{name} was not declared"))
     }
 
     pub fn get_flag(&self, name: &str) -> bool {
@@ -205,6 +239,7 @@ mod tests {
             .opt("nodes", "4", "cluster size")
             .req("strategy", "scheduling strategy")
             .flag("verbose", "log more")
+            .multi("set", "spec override")
             .positional("files", "input files")
     }
 
@@ -228,6 +263,15 @@ mod tests {
         let a = cli().parse_from(argv(&["--strategy", "sg"])).unwrap();
         assert_eq!(a.get("nodes"), "4");
         assert!(!a.get_flag("verbose"));
+        assert!(a.get_all("set").is_empty());
+    }
+
+    #[test]
+    fn multi_option_collects_in_order() {
+        let a = cli()
+            .parse_from(argv(&["--strategy=sg", "--set", "n=4", "--set=engine=des"]))
+            .unwrap();
+        assert_eq!(a.get_all("set"), ["n=4", "engine=des"]);
     }
 
     #[test]

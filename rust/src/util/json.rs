@@ -157,6 +157,13 @@ impl Json {
         s
     }
 
+    /// Pretty rendering with a caller-chosen indent width.
+    pub fn to_string_indent(&self, width: usize) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(width), 0);
+        s
+    }
+
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -232,6 +239,16 @@ fn write_escaped(out: &mut String, s: &str) {
         }
     }
     out.push('"');
+}
+
+/// The canonical human-facing rendering (2-space indent, trailing
+/// newline) used by `vtacluster run --emit-spec` and every emitted
+/// [`crate::scenario::Report`]. Guaranteed lossless:
+/// `parse(pretty(x)) == x` (unit-tested below).
+pub fn pretty(j: &Json) -> String {
+    let mut s = j.to_string_indent(2);
+    s.push('\n');
+    s
 }
 
 /// Builder helpers so call sites read naturally.
@@ -528,6 +545,21 @@ mod tests {
         assert_eq!(Json::parse(&compact).unwrap(), j);
         let pretty = j.to_string_pretty();
         assert_eq!(Json::parse(&pretty).unwrap(), j);
+    }
+
+    #[test]
+    fn pretty_roundtrips_exactly() {
+        // the satellite contract: parse(pretty(x)) == x, for nesting,
+        // escapes, numbers with exponents, and empty containers
+        let src = r#"{"name":"vta \"run\"","axes":{"n":[4,8,12],"strategy":["pipeline","eco"]},"empty":[],"none":{},"rate":-3.5e2,"on":true,"off":null}"#;
+        let j = Json::parse(src).unwrap();
+        let p = pretty(&j);
+        assert_eq!(Json::parse(&p).unwrap(), j);
+        // 2-space indent, one key per line, trailing newline
+        assert!(p.contains("\n  \"name\""), "{p}");
+        assert!(p.ends_with("}\n"), "{p}");
+        // indent width is honoured at depth 2
+        assert!(p.contains("\n    \"n\""), "{p}");
     }
 
     #[test]

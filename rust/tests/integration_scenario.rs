@@ -1,0 +1,222 @@
+//! Integration tests for the scenario layer (DESIGN.md §12):
+//!
+//! * every `examples/scenarios/*.json` parses, validates and runs in
+//!   fast mode, and every emitted row carries the exact shared schema
+//!   (the same keys for the analytic and DES engines);
+//! * the schema snapshot (`examples/scenarios/report_schema.txt`) that
+//!   CI checks emitted reports against matches the code's contract;
+//! * legacy-adapter equivalence: the `simulate` path routed through
+//!   [`Session`] reproduces the pre-refactor numbers for a pinned seed
+//!   (p50 / p99 / J-per-image pinned to exact equality).
+
+use std::path::PathBuf;
+use vta_cluster::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig, VtaConfig};
+use vta_cluster::graph::zoo;
+use vta_cluster::scenario::{
+    EventRow, Report, ReportRow, ScenarioSpec, Session, Sweep,
+};
+use vta_cluster::sched::{build_plan_priced, PlanOption, Strategy};
+use vta_cluster::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
+use vta_cluster::util::json::{self, Json};
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("examples")
+        .join("scenarios")
+}
+
+fn assert_report_schema(j: &Json, what: &str) {
+    let top: Vec<&str> = j.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+    assert_eq!(top, Report::TOP_KEYS, "{what}: top-level keys drifted");
+    let rows = j.get("rows").unwrap().as_arr().unwrap();
+    assert!(!rows.is_empty(), "{what}: empty report");
+    for r in rows {
+        let keys: Vec<&str> = r.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ReportRow::ROW_KEYS, "{what}: row keys drifted");
+    }
+    for e in j.get("events").unwrap().as_arr().unwrap() {
+        let keys: Vec<&str> = e.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, EventRow::EVENT_KEYS, "{what}: event keys drifted");
+    }
+}
+
+/// Every shipped scenario parses, validates, runs (fast mode) and emits
+/// the shared Report schema — both engines, sweeps included.
+#[test]
+fn every_example_scenario_runs_fast_with_the_shared_schema() {
+    let dir = scenarios_dir();
+    let calib = Calibration::default();
+    let mut ran = 0;
+    let mut engines = std::collections::BTreeSet::new();
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let doc = json::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let report = match Sweep::from_doc(&doc).unwrap_or_else(|e| panic!("{name}: {e}")) {
+            Some(sweep) => {
+                // fast mode per cell, deterministically (no env races):
+                // run the expanded cells through explicit fast sessions
+                let mut merged: Option<Report> = None;
+                let mut cache =
+                    vta_cluster::scenario::CostCache::new(calib.clone());
+                for (tag, spec) in sweep.cells().unwrap_or_else(|e| panic!("{name}: {e}")) {
+                    let cell = Session::new(spec)
+                        .unwrap_or_else(|e| panic!("{name} [{tag}]: {e}"))
+                        .with_calibration(calib.clone())
+                        .fast(true)
+                        .run_cached(&mut cache)
+                        .unwrap_or_else(|e| panic!("{name} [{tag}]: {e}"));
+                    match &mut merged {
+                        None => {
+                            let mut r =
+                                Report::new(&cell.scenario, &cell.engine, cell.seed);
+                            r.absorb(&tag, cell);
+                            merged = Some(r);
+                        }
+                        Some(r) => r.absorb(&tag, cell),
+                    }
+                }
+                let mut r = merged.expect("sweeps have at least one cell");
+                r.finalize();
+                r
+            }
+            None => {
+                let spec =
+                    ScenarioSpec::from_json(&doc).unwrap_or_else(|e| panic!("{name}: {e}"));
+                Session::new(spec)
+                    .unwrap_or_else(|e| panic!("{name}: {e}"))
+                    .with_calibration(calib.clone())
+                    .fast(true)
+                    .run()
+                    .unwrap_or_else(|e| panic!("{name}: {e}"))
+            }
+        };
+        for row in &report.rows {
+            engines.insert(row.engine.clone());
+            assert!(
+                row.ms_per_image > 0.0 && row.cluster_avg_w > 0.0,
+                "{name}/{}: degenerate row",
+                row.label
+            );
+        }
+        assert_report_schema(&report.to_json(), &name);
+        ran += 1;
+    }
+    assert!(ran >= 7, "expected the shipped scenario set, found {ran}");
+    // the acceptance bar: one schema across both engines
+    assert!(
+        engines.contains("analytic") && engines.contains("des"),
+        "example set must exercise both engines, saw {engines:?}"
+    );
+}
+
+/// The checked-in snapshot CI diffs emitted reports against must match
+/// the code's schema constants — edit both together, deliberately.
+#[test]
+fn schema_snapshot_file_matches_the_code_contract() {
+    let text = std::fs::read_to_string(scenarios_dir().join("report_schema.txt")).unwrap();
+    let mut lines = std::collections::BTreeMap::new();
+    for line in text.lines() {
+        if let Some((kind, keys)) = line.split_once(": ") {
+            lines.insert(kind.to_string(), keys.split(' ').collect::<Vec<_>>());
+        }
+    }
+    assert_eq!(lines["top"], Report::TOP_KEYS);
+    assert_eq!(lines["row"], ReportRow::ROW_KEYS);
+    assert_eq!(lines["event"], EventRow::EVENT_KEYS);
+}
+
+/// Satellite: `simulate`-via-Session equals the pre-refactor code path
+/// number for number at a pinned seed — analytic figures from
+/// `sim::cluster`, loaded percentiles from the seeded 70 %-capacity
+/// Poisson DES.
+#[test]
+fn simulate_via_session_matches_pre_refactor_numbers_exactly() {
+    let (model, n, images, seed) = ("lenet5", 3, 24usize, 1234u64);
+    let family = BoardFamily::Zynq7000;
+    let calib = Calibration::default();
+
+    // ---- the pre-refactor `simulate` pipeline, inlined -----------------
+    let g = zoo::build(model, 0).unwrap();
+    let vta = VtaConfig::table1_zynq7000();
+    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(family), calib.clone());
+    let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta);
+    let table = cost.seg_cost_table(&g).unwrap();
+    let plan = build_plan_priced(Strategy::ScatterGather, &g, n, &table).unwrap();
+    let r = simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images }).unwrap();
+    let capacity = 1e3 / r.ms_per_image;
+    let options = [PlanOption {
+        plan,
+        capacity_img_per_sec: capacity,
+        latency_ms: r.latency_ms.mean(),
+        avg_power_w: r.power.cluster_avg_w,
+        j_per_image: r.power.j_per_image,
+    }];
+    let rate = 0.7 * capacity;
+    let cfg = DesConfig::new(
+        ArrivalProcess::Poisson { rate_per_sec: rate },
+        (images.max(64) as f64 / rate) * 1e3,
+        seed,
+    );
+    let des = run_des(&options, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+
+    // ---- the same cell through the scenario layer ----------------------
+    let mut spec = ScenarioSpec::single(model, Strategy::ScatterGather, family, n);
+    spec.seed = seed;
+    spec.tenants[0].images = images;
+    let rep = Session::new(spec)
+        .unwrap()
+        .with_calibration(calib)
+        .fast(false)
+        .run()
+        .unwrap();
+    assert_eq!(rep.rows.len(), 1);
+    let row = &rep.rows[0];
+
+    // pinned to exact equality, per the acceptance bar
+    assert_eq!(row.p50_ms, des.latency_ms.p50(), "p50 drifted");
+    assert_eq!(row.p99_ms, des.latency_ms.p99(), "p99 drifted");
+    assert_eq!(row.j_per_image, r.power.j_per_image, "J/image drifted");
+    // and the rest of the row for good measure
+    assert_eq!(row.ms_per_image, r.ms_per_image);
+    assert_eq!(row.latency_mean_ms, r.latency_ms.mean());
+    assert_eq!(row.cluster_avg_w, r.power.cluster_avg_w);
+    assert_eq!(row.network_bytes, r.network_bytes);
+    assert_eq!(row.offered, des.offered);
+    assert_eq!(row.completed, des.completed);
+}
+
+/// `--set`-style overrides reach the run: flipping the engine axis of
+/// one spec document changes which simulator prices it, same schema.
+#[test]
+fn overrides_flip_the_engine_without_schema_drift() {
+    let mut doc = Json::parse(
+        r#"{"model": "mlp", "strategy": "sg", "nodes": 2, "images": 16,
+            "horizon_ms": 2000, "seed": 3}"#,
+    )
+    .unwrap();
+    let calib = Calibration::default();
+    let run = |doc: &Json| {
+        Session::new(ScenarioSpec::from_json(doc).unwrap())
+            .unwrap()
+            .with_calibration(calib.clone())
+            .fast(true)
+            .run()
+            .unwrap()
+    };
+    let analytic = run(&doc);
+    vta_cluster::scenario::apply_overrides(&mut doc, &["engine=des".to_string()])
+        .unwrap();
+    let des = run(&doc);
+    assert_eq!(analytic.rows[0].engine, "analytic");
+    assert_eq!(des.rows[0].engine, "des");
+    assert_report_schema(&analytic.to_json(), "analytic");
+    assert_report_schema(&des.to_json(), "des");
+}
