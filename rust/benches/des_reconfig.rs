@@ -3,9 +3,10 @@
 //! Drives ResNet-18 on a 4-node Zynq stack through three load
 //! scenarios (steady poisson, burst with the controller off, burst with
 //! the controller on), prints the latency tails, and writes
-//! `BENCH_des.json` (p50/p95/p99 + img/s per scenario) so CI can track
-//! the perf trajectory. `VTA_BENCH_FAST=1` shrinks the horizon for
-//! smoke runs.
+//! `BENCH_des.json` (p50/p95/p99 + img/s per scenario, plus the
+//! engine's own events-processed / events-per-second gauges) so CI can
+//! track the perf trajectory. `VTA_BENCH_FAST=1` shrinks the horizon
+//! for smoke runs.
 //!
 //! Run: `cargo bench --bench des_reconfig`
 
@@ -31,6 +32,18 @@ fn scenario_json(r: &DesResult) -> Json {
         ("max_backlog", json::num(r.max_backlog as f64)),
         ("reconfigs", json::num(r.reconfigs.len() as f64)),
         ("downtime_ms", json::num(r.downtime_ms)),
+        ("events_processed", json::num(r.events_processed as f64)),
+        // events per *simulated* second (deterministic) and per host
+        // wall second (the engine-speed gauge CI plots)
+        ("events_per_sec", json::num(r.events_per_sec)),
+        (
+            "events_per_sec_wall",
+            json::num(if r.wall_ms > 0.0 {
+                r.events_processed as f64 / (r.wall_ms / 1e3)
+            } else {
+                0.0
+            }),
+        ),
     ])
 }
 
@@ -97,6 +110,13 @@ fn main() {
             r.latency_ms.percentile(99.0).unwrap_or(0.0),
             r.reconfigs.len(),
             r.downtime_ms,
+        ));
+        b.row(&format!(
+            "{name:22} engine: {} events, {:.0} ev/sim-s, {:.0} ev/wall-s ({:.1} ms wall)",
+            r.events_processed,
+            r.events_per_sec,
+            if r.wall_ms > 0.0 { r.events_processed as f64 / (r.wall_ms / 1e3) } else { 0.0 },
+            r.wall_ms,
         ));
     }
 

@@ -1,29 +1,56 @@
 //! Serving metrics: latency distribution and throughput.
+//!
+//! Throughput needs a time base, and the codebase has two: host
+//! wall-clock for the real PJRT serving path, and simulated integer
+//! nanoseconds for the DES. The old implementation hard-coded
+//! `Instant::now()`, so a simulator feeding it would have divided
+//! simulated completions by *host* elapsed time — measuring how fast
+//! the simulator runs, not how fast the cluster serves. The span is
+//! now kept by a [`crate::telemetry::Clock`] (DESIGN.md §13): wall
+//! metrics behave exactly as before, and [`Metrics::sim`] +
+//! [`Metrics::record_at_ms`] give the DES the same accounting in
+//! sim-time.
 
+use crate::telemetry::Clock;
 use crate::util::stats::Summary;
-use std::time::{Duration, Instant};
+use crate::util::units::Nanos;
+use std::time::Duration;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
     latencies_ms: Summary,
     completed: u64,
-    started: Option<Instant>,
-    finished: Option<Instant>,
+    clock: Clock,
 }
 
 impl Metrics {
+    /// Wall-clock metrics (the real serving coordinator).
     pub fn new() -> Self {
         Self::default()
     }
 
-    pub fn start(&mut self) {
-        self.started = Some(Instant::now());
+    /// Sim-time metrics: the span only advances through
+    /// [`Metrics::record_at_ms`], never from the host clock.
+    pub fn sim() -> Self {
+        Metrics { latencies_ms: Summary::new(), completed: 0, clock: Clock::sim() }
     }
 
+    pub fn start(&mut self) {
+        self.clock.start();
+    }
+
+    /// Record a completion on a wall clock ("it finished just now").
     pub fn record(&mut self, latency: Duration) {
         self.latencies_ms.push(latency.as_secs_f64() * 1e3);
         self.completed += 1;
-        self.finished = Some(Instant::now());
+        self.clock.mark();
+    }
+
+    /// Record a completion at an explicit sim time.
+    pub fn record_at_ms(&mut self, latency_ms: f64, now_ns: Nanos) {
+        self.latencies_ms.push(latency_ms);
+        self.completed += 1;
+        self.clock.mark_at(now_ns);
     }
 
     pub fn completed(&self) -> u64 {
@@ -34,17 +61,20 @@ impl Metrics {
         &self.latencies_ms
     }
 
-    /// Wall-clock span from start() to the last completion.
+    /// Hand the latency distribution to a caller that outlives the run.
+    pub fn into_latency(self) -> Summary {
+        self.latencies_ms
+    }
+
+    /// Span from start() to the last completion, in the metrics' own
+    /// time domain (wall or sim).
     pub fn elapsed(&self) -> Duration {
-        match (self.started, self.finished) {
-            (Some(s), Some(f)) => f.duration_since(s),
-            _ => Duration::ZERO,
-        }
+        self.clock.elapsed()
     }
 
     /// Images per second over the measured span.
     pub fn throughput(&self) -> f64 {
-        let secs = self.elapsed().as_secs_f64();
+        let secs = self.clock.elapsed_sec();
         if secs > 0.0 {
             self.completed as f64 / secs
         } else {
@@ -87,5 +117,31 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.report(), "no completions");
+    }
+
+    #[test]
+    fn sim_metrics_use_sim_time_not_host_time() {
+        let mut m = Metrics::sim();
+        m.start();
+        // 100 completions "spread over" 2 simulated seconds — the host
+        // executes this loop in microseconds
+        for i in 1..=100u64 {
+            m.record_at_ms(5.0, i * 20_000_000);
+        }
+        assert_eq!(m.completed(), 100);
+        assert_eq!(m.elapsed(), Duration::from_secs(2));
+        assert!((m.throughput() - 50.0).abs() < 1e-9, "{}", m.throughput());
+        assert_eq!(m.into_latency().mean(), 5.0);
+    }
+
+    #[test]
+    fn wall_record_on_sim_clock_does_not_advance_it() {
+        let mut m = Metrics::sim();
+        m.start();
+        m.record(Duration::from_millis(3));
+        // the sample is kept but sim time never moved
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.elapsed(), Duration::ZERO);
+        assert_eq!(m.throughput(), 0.0);
     }
 }

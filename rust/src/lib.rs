@@ -23,7 +23,10 @@
 //!   [`scenario::ScenarioSpec`]s resolved by [`scenario::Session`] into
 //!   unified [`scenario::Report`]s, with [`scenario::Sweep`] grids over
 //!   any spec axis — that the CLI's experiment subcommands are thin
-//!   adapters over.
+//!   adapters over, all observable through a zero-cost-when-off
+//!   telemetry layer ([`telemetry`]) of per-request span traces, HDR
+//!   histograms, a controller decision audit log, and a Perfetto
+//!   (Chrome trace-event) exporter behind `vtacluster run --trace`.
 //! * **Layer 2 (python/compile, build-time)** — int8 ResNet-18 in JAX,
 //!   AOT-lowered to HLO text artifacts per graph segment.
 //! * **Layer 1 (python/compile/kernels, build-time)** — the VTA GEMM and
@@ -48,5 +51,6 @@ pub mod runtime;
 pub mod scenario;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod vta;

@@ -10,8 +10,11 @@
 //! * `run`        — execute a declarative scenario file
 //!                  (`examples/scenarios/*.json`, DESIGN.md §12):
 //!                  `run <scenario.json> [--set key=value ...]
-//!                  [--report out.json] [--emit-spec]`. Files with a
-//!                  `"sweep"` object expand into a tagged grid report.
+//!                  [--report out.json] [--trace out-trace.json]
+//!                  [--emit-spec]`. Files with a `"sweep"` object expand
+//!                  into a tagged grid report. `--trace` turns on the
+//!                  telemetry layer (DESIGN.md §13) and writes a Chrome
+//!                  trace-event file loadable in Perfetto.
 //! * `simulate`   — one cluster-size cell for any zoo model
 //!                  (`--model`, `--strategy all` compares all four §II-C
 //!                  strategies) — a thin adapter over `run`'s engine
@@ -49,6 +52,7 @@ use vta_cluster::scenario::{
     apply_overrides, pareto_ceiling, Engine, Report, ScenarioSpec, Session, Sweep,
 };
 use vta_cluster::sched::{build_plan, Strategy};
+use vta_cluster::telemetry::{chrome_trace, TelemetryConfig};
 use vta_cluster::util::cli::Cli;
 use vta_cluster::util::json;
 use vta_cluster::util::rng::Rng;
@@ -79,6 +83,7 @@ fn run() -> anyhow::Result<()> {
         .opt("power-budget", "0", "`load`: cluster watts cap for the controller (0 = uncapped)")
         .opt("slo", "0", "`power`/`simulate --strategy eco`: latency SLO in ms (0 = none)")
         .opt("report", "", "`run`: write the Report JSON to this path")
+        .opt("trace", "", "`run`: enable telemetry and write a Chrome trace-event JSON (open in Perfetto) to this path")
         .multi("set", "`run`: spec override `key=value` (dotted paths, repeatable)")
         .flag("emit-spec", "`run`: print the resolved spec JSON and exit without running")
         .flag("quick", "reduced calibration grids")
@@ -103,6 +108,7 @@ fn run() -> anyhow::Result<()> {
                 path,
                 args.get_all("set"),
                 args.get("report"),
+                args.get("trace"),
                 args.get_flag("emit-spec"),
             )
         }
@@ -276,6 +282,7 @@ fn run_scenario_cmd(
     path: &str,
     sets: &[String],
     report_path: &str,
+    trace_path: &str,
     emit_spec: bool,
 ) -> anyhow::Result<()> {
     let file = std::path::Path::new(path);
@@ -289,6 +296,12 @@ fn run_scenario_cmd(
     }
     let calib = Calibration::load_or_default(&artifacts_dir());
     let report = if let Some(sweep) = Sweep::from_doc(&doc)? {
+        anyhow::ensure!(
+            trace_path.is_empty(),
+            "--trace works on single scenarios, not sweeps (a grid would \
+             interleave dozens of runs in one trace) — narrow the sweep \
+             with --set instead"
+        );
         if emit_spec {
             print!("{}", json::pretty(&doc));
             return Ok(());
@@ -300,9 +313,25 @@ fn run_scenario_cmd(
             print!("{}", json::pretty(&spec.to_json()));
             return Ok(());
         }
-        Session::new(spec)?.with_calibration(calib).run()?
+        let mut session = Session::new(spec)?.with_calibration(calib);
+        if !trace_path.is_empty() {
+            session = session.with_telemetry(TelemetryConfig::on(1.0));
+        }
+        session.run()?
     };
     print_report(&report);
+    if !trace_path.is_empty() {
+        if report.telemetry.is_empty() {
+            eprintln!("warning: no telemetry collected (this shape runs no DES) — {trace_path} not written");
+        } else {
+            std::fs::write(trace_path, chrome_trace(&report.telemetry).to_string_pretty())
+                .map_err(|e| anyhow::anyhow!("writing {trace_path}: {e}"))?;
+            println!(
+                "wrote {trace_path} ({} traced run(s)) — open at https://ui.perfetto.dev",
+                report.telemetry.len()
+            );
+        }
+    }
     if !report_path.is_empty() {
         std::fs::write(report_path, json::pretty(&report.to_json()))
             .map_err(|e| anyhow::anyhow!("writing {report_path}: {e}"))?;

@@ -16,6 +16,7 @@
 //! [`crate::power::pareto`]), which is what makes a sweep report double
 //! as a Pareto frontier.
 
+use crate::telemetry::RunTelemetry;
 use crate::util::json::{self, Json};
 use crate::util::stats::Summary;
 
@@ -63,6 +64,11 @@ pub struct ReportRow {
     /// Plan switches executed (always 0 for analytic rows).
     pub reconfigs: usize,
     pub downtime_ms: f64,
+    /// Simulator events processed by the (loaded) DES run behind this
+    /// row, and the same divided by the simulated horizon — the engine's
+    /// own speed gauge, not a cluster metric.
+    pub events_processed: u64,
+    pub events_per_sec: f64,
     /// Busy fraction per node, in node order.
     pub node_util: Vec<f64>,
     /// Average draw per node, W.
@@ -78,7 +84,7 @@ pub struct ReportRow {
 impl ReportRow {
     /// The row schema, in emit order — the contract the scenario CI
     /// suite snapshot-checks.
-    pub const ROW_KEYS: [&'static str; 24] = [
+    pub const ROW_KEYS: [&'static str; 26] = [
         "label",
         "engine",
         "model",
@@ -99,6 +105,8 @@ impl ReportRow {
         "network_bytes",
         "reconfigs",
         "downtime_ms",
+        "events_processed",
+        "events_per_sec",
         "node_util",
         "node_watts",
         "dominated",
@@ -127,6 +135,8 @@ impl ReportRow {
             ("network_bytes", json::int(self.network_bytes as i64)),
             ("reconfigs", json::int(self.reconfigs as i64)),
             ("downtime_ms", fnum(self.downtime_ms)),
+            ("events_processed", json::int(self.events_processed as i64)),
+            ("events_per_sec", fnum(self.events_per_sec)),
             (
                 "node_util",
                 Json::Arr(self.node_util.iter().map(|&u| fnum(u)).collect()),
@@ -189,10 +199,17 @@ pub struct Report {
     /// (t_ms, images in flight) — populated only by single-row DES runs
     /// (always present in the JSON, possibly empty).
     pub timeline: Vec<(f64, usize)>,
+    /// Per-run telemetry bundles (DESIGN.md §13), one per traced run.
+    /// Empty unless the session ran with tracing enabled, and emitted as
+    /// an *extra* trailing `telemetry` key only when non-empty — so an
+    /// untraced report's JSON (and [`Report::TOP_KEYS`]) is byte-for-byte
+    /// what it was before telemetry existed.
+    pub telemetry: Vec<RunTelemetry>,
 }
 
 impl Report {
-    /// The top-level schema, in emit order.
+    /// The top-level schema, in emit order. Traced reports append one
+    /// extra `telemetry` key after these.
     pub const TOP_KEYS: [&'static str; 6] =
         ["scenario", "engine", "seed", "rows", "events", "timeline"];
 
@@ -204,6 +221,7 @@ impl Report {
             rows: Vec::new(),
             events: Vec::new(),
             timeline: Vec::new(),
+            telemetry: Vec::new(),
         }
     }
 
@@ -231,8 +249,18 @@ impl Report {
                 };
             }
         }
+        for t in &mut other.telemetry {
+            if !tag.is_empty() {
+                t.label = if t.label.is_empty() {
+                    tag.to_string()
+                } else {
+                    format!("{tag}/{}", t.label)
+                };
+            }
+        }
         self.rows.append(&mut other.rows);
         self.events.append(&mut other.events);
+        self.telemetry.append(&mut other.telemetry);
         // a merged report is multi-run: the per-run timeline is dropped
         self.timeline.clear();
     }
@@ -268,7 +296,7 @@ impl Report {
     }
 
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
             ("scenario", json::str_(&self.scenario)),
             ("engine", json::str_(&self.engine)),
             ("seed", json::int(self.seed as i64)),
@@ -283,7 +311,14 @@ impl Report {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if !self.telemetry.is_empty() {
+            fields.push((
+                "telemetry",
+                Json::Arr(self.telemetry.iter().map(|t| t.to_json()).collect()),
+            ));
+        }
+        json::obj(fields)
     }
 }
 
@@ -323,6 +358,8 @@ mod tests {
             network_bytes: 4096,
             reconfigs: 0,
             downtime_ms: 0.0,
+            events_processed: 400,
+            events_per_sec: 50.0,
             node_util: vec![0.8, 0.7],
             node_watts: vec![3.1, 3.0],
             dominated: false,
@@ -394,6 +431,42 @@ mod tests {
         assert_eq!(f.len(), 2);
         assert!(f[0].cluster_avg_w < f[1].cluster_avg_w);
         assert!(f[0].ms_per_image > f[1].ms_per_image);
+    }
+
+    #[test]
+    fn telemetry_key_appears_only_when_bundles_exist() {
+        let mut rep = Report::new("t", "des", 1);
+        rep.rows.push(row("a", 10.0, 5.0));
+        let top: Vec<String> = rep
+            .to_json()
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect();
+        assert_eq!(top, Report::TOP_KEYS, "untraced report grew a key");
+
+        rep.telemetry.push(RunTelemetry {
+            label: "a".into(),
+            engine: "des".into(),
+            ..Default::default()
+        });
+        let top: Vec<String> = rep
+            .to_json()
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut want: Vec<String> =
+            Report::TOP_KEYS.iter().map(|s| s.to_string()).collect();
+        want.push("telemetry".to_string());
+        assert_eq!(top, want);
+
+        // absorb prefixes bundle labels like row labels
+        let mut base = Report::new("sweep", "des", 1);
+        base.absorb("n=4", rep);
+        assert_eq!(base.telemetry[0].label, "n=4/a");
     }
 
     #[test]

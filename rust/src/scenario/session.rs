@@ -31,6 +31,7 @@ use crate::sched::{
     PlanOption, Strategy,
 };
 use crate::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
+use crate::telemetry::{RunTelemetry, TelemetryConfig};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 
@@ -71,6 +72,10 @@ pub struct Session {
     /// supplied, as every sweep cell does).
     calib: Option<Calibration>,
     fast: bool,
+    /// Tracing config threaded into every DES this session runs
+    /// (DESIGN.md §13). Off by default, so reports are byte-identical to
+    /// the pre-telemetry output unless [`Session::with_telemetry`] asks.
+    telemetry: TelemetryConfig,
 }
 
 impl Session {
@@ -80,11 +85,20 @@ impl Session {
     pub fn new(spec: ScenarioSpec) -> anyhow::Result<Self> {
         spec.validate()?;
         let fast = std::env::var("VTA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
-        Ok(Session { spec, calib: None, fast })
+        Ok(Session { spec, calib: None, fast, telemetry: TelemetryConfig::off() })
     }
 
     pub fn with_calibration(mut self, calib: Calibration) -> Self {
         self.calib = Some(calib);
+        self
+    }
+
+    /// Enable span tracing + telemetry collection for every run of this
+    /// session (the `--trace` flag). Not supported by the multi-tenant
+    /// *analytic* shape, whose loaded DES lives inside
+    /// [`simulate_tenants`]; those rows simply carry no bundle.
+    pub fn with_telemetry(mut self, telemetry: TelemetryConfig) -> Self {
+        self.telemetry = telemetry;
         self
     }
 
@@ -169,13 +183,19 @@ impl Session {
     ) -> anyhow::Result<()> {
         match spec.engine {
             Engine::Analytic => {
-                let row =
+                let (row, telemetry) =
                     self.analytic_cell(spec, group, tenant, seed, rate_override, label, cache)?;
+                if let Some(t) = telemetry {
+                    report.telemetry.push(stamp(t, &row.label, spec.engine));
+                }
                 report.rows.push(row);
             }
             Engine::Des => {
-                let (row, events, timeline) =
+                let (row, events, timeline, telemetry) =
                     self.des_cell(spec, group, tenant, seed, rate_override, label, cache)?;
+                if let Some(t) = telemetry {
+                    report.telemetry.push(stamp(t, &row.label, spec.engine));
+                }
                 report.rows.push(row);
                 report.events.extend(events);
                 if keep_timeline {
@@ -282,6 +302,8 @@ impl Session {
                 network_bytes: t.sim.network_bytes,
                 reconfigs: 0,
                 downtime_ms: 0.0,
+                events_processed: t.loaded.events_processed,
+                events_per_sec: t.loaded.events_per_sec,
                 node_util: t.sim.node_utilization.clone(),
                 node_watts: t.sim.power.node_watts.clone(),
                 dominated: false,
@@ -386,7 +408,7 @@ impl Session {
         rate_override: Option<f64>,
         label: &str,
         cache: &mut CostCache,
-    ) -> anyhow::Result<ReportRow> {
+    ) -> anyhow::Result<(ReportRow, Option<RunTelemetry>)> {
         let g = zoo::build(&tenant.model, tenant.input_hw)?;
         let cluster = cluster_for(group)?;
         let cost = cache.get(group.family);
@@ -405,8 +427,9 @@ impl Session {
         let rate = rate_override
             .unwrap_or_else(|| effective_rate(&spec.arrival, capacity));
         let arrival = ArrivalProcess::parse(&spec.arrival.kind, rate, spec.arrival.burst_mult)?;
-        let cfg = DesConfig::new(arrival, (tenant.images.max(64) as f64 / rate) * 1e3, seed);
-        let des = run_des(&[option], 0, &cluster, cost, &g, &cfg, None)?;
+        let mut cfg = DesConfig::new(arrival, (tenant.images.max(64) as f64 / rate) * 1e3, seed);
+        cfg.telemetry = self.telemetry;
+        let mut des = run_des(&[option], 0, &cluster, cost, &g, &cfg, None)?;
 
         let meets_slo = match &eco {
             Some((_, meets)) => *meets,
@@ -433,13 +456,15 @@ impl Session {
             network_bytes: sim.network_bytes,
             reconfigs: 0,
             downtime_ms: 0.0,
+            events_processed: des.events_processed,
+            events_per_sec: des.events_per_sec,
             node_util: sim.node_utilization.clone(),
             node_watts: sim.power.node_watts.clone(),
             dominated: false,
             meets_slo,
         };
         row.set_percentiles(&des.latency_ms);
-        Ok(row)
+        Ok((row, des.telemetry.take()))
     }
 
     /// DES engine, one cell: the four §II-C candidates (plus the eco
@@ -456,7 +481,8 @@ impl Session {
         rate_override: Option<f64>,
         label: &str,
         cache: &mut CostCache,
-    ) -> anyhow::Result<(ReportRow, Vec<EventRow>, Vec<(f64, usize)>)> {
+    ) -> anyhow::Result<(ReportRow, Vec<EventRow>, Vec<(f64, usize)>, Option<RunTelemetry>)>
+    {
         let g = zoo::build(&tenant.model, tenant.input_hw)?;
         let cluster = cluster_for(group)?;
         let cost = cache.get(group.family);
@@ -488,7 +514,8 @@ impl Session {
 
         let rate = rate_override.unwrap_or_else(|| effective_rate(&spec.arrival, cap0));
         let arrival = ArrivalProcess::parse(&spec.arrival.kind, rate, spec.arrival.burst_mult)?;
-        let cfg = DesConfig::new(arrival, spec.horizon_ms, seed);
+        let mut cfg = DesConfig::new(arrival, spec.horizon_ms, seed);
+        cfg.telemetry = self.telemetry;
         let mut controller = if spec.controller.enabled {
             let budget = spec.controller.power_budget_w;
             Some(OnlineController::new(
@@ -501,7 +528,7 @@ impl Session {
         } else {
             None
         };
-        let r = run_des(&options, initial, &cluster, cost, &g, &cfg, controller.as_mut())?;
+        let mut r = run_des(&options, initial, &cluster, cost, &g, &cfg, controller.as_mut())?;
 
         let p99 = r.latency_ms.p99();
         let mut row = ReportRow {
@@ -525,6 +552,8 @@ impl Session {
             network_bytes: r.network_bytes,
             reconfigs: r.reconfigs.len(),
             downtime_ms: r.downtime_ms,
+            events_processed: r.events_processed,
+            events_per_sec: r.events_per_sec,
             node_util: r.node_utilization.clone(),
             node_watts: r.power.node_avg_w.clone(),
             dominated: false,
@@ -543,8 +572,16 @@ impl Session {
                 reason: e.reason.clone(),
             })
             .collect();
-        Ok((row, events, r.queue_timeline))
+        let telemetry = r.telemetry.take();
+        Ok((row, events, r.queue_timeline, telemetry))
     }
+}
+
+/// Stamp a run's telemetry bundle with its report-row identity.
+fn stamp(mut t: RunTelemetry, label: &str, engine: Engine) -> RunTelemetry {
+    t.label = label.to_string();
+    t.engine = engine.as_str().to_string();
+    t
 }
 
 /// Build and sanity-check one group's homogeneous sub-cluster.

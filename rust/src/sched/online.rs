@@ -37,6 +37,7 @@ use crate::graph::Graph;
 use crate::sched::{build_plan_priced, ExecutionPlan, Strategy};
 use crate::sim::cluster::simulate;
 use crate::sim::{CostModel, SimConfig};
+use crate::telemetry::{AuditLog, AuditRecord, AuditVerdict};
 
 /// One pre-planned candidate the controller can activate: the plan plus
 /// its analytically priced steady-state capacity and unloaded latency
@@ -222,6 +223,10 @@ pub struct Decision {
 pub struct OnlineController {
     pub cfg: ControllerConfig,
     pub reconfig: ReconfigCost,
+    /// Decision audit (DESIGN.md §13): every consultation — switch or
+    /// hold — with the break-even numbers, when `audit.enabled`. The
+    /// DES flips it on with telemetry and drains it at end of run.
+    pub audit: AuditLog,
     lambda_ema: Option<f64>,
     power_ema: Option<f64>,
     last_switch_ms: f64,
@@ -234,10 +239,30 @@ impl OnlineController {
         Ok(OnlineController {
             cfg,
             reconfig,
+            audit: AuditLog::default(),
             lambda_ema: None,
             power_ema: None,
             last_switch_ms: f64::NEG_INFINITY,
         })
+    }
+
+    /// The audit skeleton for one consultation; each return site fills
+    /// in the verdict and any branch-specific numbers before pushing.
+    fn audit_base(&self, obs: &Observation, lam: f64, p_ema: f64, mu_cur: f64) -> AuditRecord {
+        AuditRecord {
+            at_ms: obs.now_ms,
+            active: obs.active,
+            lambda_hat: lam,
+            power_hat: p_ema,
+            backlog: obs.backlog,
+            verdict: AuditVerdict::HoldSteady,
+            to: None,
+            mu_cur,
+            mu_best: f64::NAN,
+            t_stay_s: f64::NAN,
+            t_switch_s: f64::NAN,
+            reason: String::new(),
+        }
     }
 
     /// Smoothed arrival-rate estimate (img/s), if any window was seen.
@@ -270,6 +295,17 @@ impl OnlineController {
         self.power_ema = Some(p_ema);
 
         if obs.now_ms - self.last_switch_ms < self.cfg.dwell_ms {
+            if self.audit.enabled {
+                let mut rec = self.audit_base(
+                    obs,
+                    lam,
+                    p_ema,
+                    options[obs.active].capacity_img_per_sec,
+                );
+                rec.verdict = AuditVerdict::HoldDwell;
+                rec.reason = "inside minimum dwell after last switch".into();
+                self.audit.push(rec);
+            }
             return None;
         }
         let cur = &options[obs.active];
@@ -294,15 +330,34 @@ impl OnlineController {
                 })?;
                 if best != obs.active && opt.avg_power_w < cur.avg_power_w {
                     self.last_switch_ms = obs.now_ms;
+                    let reason = format!(
+                        "power cap: drawing {p_ema:.1} W vs budget {budget:.1} W → {} \
+                         ({:.1} W saturated)",
+                        opt.plan.strategy, opt.avg_power_w
+                    );
+                    if self.audit.enabled {
+                        let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+                        rec.verdict = AuditVerdict::SwitchPowerCap;
+                        rec.to = Some(best);
+                        rec.reason = reason.clone();
+                        self.audit.push(rec);
+                    }
+                    crate::log_kv_debug!(
+                        Some(obs.now_ms), "controller_switch",
+                        "verdict" => "power-cap", "to" => best, "p_ema_w" => p_ema
+                    );
                     return Some(Decision {
                         to: best,
                         downtime_ms: self.reconfig.downtime_ms(),
-                        reason: format!(
-                            "power cap: drawing {p_ema:.1} W vs budget {budget:.1} W → {} \
-                             ({:.1} W saturated)",
-                            opt.plan.strategy, opt.avg_power_w
-                        ),
+                        reason,
                     });
+                }
+                if self.audit.enabled {
+                    let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+                    rec.verdict = AuditVerdict::HoldPowerFloor;
+                    rec.reason =
+                        format!("over budget {budget:.1} W but already on the cheapest draw");
+                    self.audit.push(rec);
                 }
                 return None;
             }
@@ -325,6 +380,13 @@ impl OnlineController {
                 })?;
             let mu_best = opt.capacity_img_per_sec;
             if best == obs.active || mu_best < self.cfg.min_capacity_gain * mu_cur {
+                if self.audit.enabled {
+                    let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+                    rec.verdict = AuditVerdict::HoldNoGain;
+                    rec.mu_best = mu_best;
+                    rec.reason = "overloaded but best candidate offers no real gain".into();
+                    self.audit.push(rec);
+                }
                 return None;
             }
             // drain-time break-even (see module docs)
@@ -341,16 +403,41 @@ impl OnlineController {
             let worth = t_switch < t_stay
                 || (t_stay.is_infinite() && t_switch.is_infinite() && mu_best > mu_cur);
             if !worth {
+                if self.audit.enabled {
+                    let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+                    rec.verdict = AuditVerdict::HoldNotWorth;
+                    rec.mu_best = mu_best;
+                    rec.t_stay_s = t_stay;
+                    rec.t_switch_s = t_switch;
+                    rec.reason = "staying drains the backlog faster than switching".into();
+                    self.audit.push(rec);
+                }
                 return None;
             }
             self.last_switch_ms = obs.now_ms;
+            let reason = format!(
+                "overload: λ̂ {lam:.1} img/s vs μ {mu_cur:.1}, backlog {} → {} (μ {mu_best:.1})",
+                obs.backlog, opt.plan.strategy
+            );
+            if self.audit.enabled {
+                let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+                rec.verdict = AuditVerdict::SwitchOverload;
+                rec.to = Some(best);
+                rec.mu_best = mu_best;
+                rec.t_stay_s = t_stay;
+                rec.t_switch_s = t_switch;
+                rec.reason = reason.clone();
+                self.audit.push(rec);
+            }
+            crate::log_kv_debug!(
+                Some(obs.now_ms), "controller_switch",
+                "verdict" => "overload", "to" => best, "lambda_hat" => lam,
+                "t_stay_s" => t_stay, "t_switch_s" => t_switch
+            );
             return Some(Decision {
                 to: best,
                 downtime_ms: self.reconfig.downtime_ms(),
-                reason: format!(
-                    "overload: λ̂ {lam:.1} img/s vs μ {mu_cur:.1}, backlog {} → {} (μ {mu_best:.1})",
-                    obs.backlog, opt.plan.strategy
-                ),
+                reason,
             });
         }
 
@@ -367,15 +454,33 @@ impl OnlineController {
                 && best.1.latency_ms <= self.cfg.max_latency_ratio * cur.latency_ms
             {
                 self.last_switch_ms = obs.now_ms;
+                let reason = format!(
+                    "underload: λ̂ {lam:.1} img/s vs μ {mu_cur:.1} → {} (latency {:.2} ms vs {:.2})",
+                    best.1.plan.strategy, best.1.latency_ms, cur.latency_ms
+                );
+                if self.audit.enabled {
+                    let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+                    rec.verdict = AuditVerdict::SwitchUnderload;
+                    rec.to = Some(best.0);
+                    rec.mu_best = best.1.capacity_img_per_sec;
+                    rec.reason = reason.clone();
+                    self.audit.push(rec);
+                }
+                crate::log_kv_debug!(
+                    Some(obs.now_ms), "controller_switch",
+                    "verdict" => "underload", "to" => best.0, "lambda_hat" => lam
+                );
                 return Some(Decision {
                     to: best.0,
                     downtime_ms: self.reconfig.downtime_ms(),
-                    reason: format!(
-                        "underload: λ̂ {lam:.1} img/s vs μ {mu_cur:.1} → {} (latency {:.2} ms vs {:.2})",
-                        best.1.plan.strategy, best.1.latency_ms, cur.latency_ms
-                    ),
+                    reason,
                 });
             }
+        }
+        if self.audit.enabled {
+            let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+            rec.reason = "load inside the hysteresis band".into();
+            self.audit.push(rec);
         }
         None
     }
@@ -555,6 +660,31 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = ControllerConfig { power_ema_alpha: 0.0, ..Default::default() };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn audit_log_records_every_consultation_when_enabled() {
+        let (_, opts) = options(&[(50.0, 5.0), (200.0, 8.0)]);
+        let mut c = controller();
+        c.audit.enabled = true;
+        let d = c.decide(&opts, &obs(100.0, 10, 40, 0)).expect("overload switch");
+        assert!(c.decide(&opts, &obs(200.0, 10, 60, d.to)).is_none(), "dwell");
+        assert!(c.decide(&opts, &obs(2000.0, 8, 1, d.to)).is_none(), "steady");
+        let recs = c.audit.take();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].verdict, AuditVerdict::SwitchOverload);
+        assert_eq!(recs[0].to, Some(1));
+        assert!(
+            recs[0].t_switch_s < recs[0].t_stay_s,
+            "switch verdict must carry its break-even: {:?}",
+            (recs[0].t_stay_s, recs[0].t_switch_s)
+        );
+        assert_eq!(recs[1].verdict, AuditVerdict::HoldDwell);
+        assert_eq!(recs[2].verdict, AuditVerdict::HoldSteady);
+        // disabled (the default): consultations leave no records
+        let mut quiet = controller();
+        quiet.decide(&opts, &obs(100.0, 10, 40, 0)).unwrap();
+        assert!(quiet.audit.records.is_empty());
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! results, which the benches print alongside the seed.
 
 use crate::config::ClusterConfig;
+use crate::coordinator::Metrics;
 use crate::graph::Graph;
 use crate::net::link::LinkModel;
 use crate::net::mpi::MpiModel;
@@ -38,6 +39,7 @@ use crate::sched::online::{validate_options, Observation, OnlineController, Plan
 use crate::sched::{SplitMode, Strategy};
 use crate::sim::cluster::{stage_io_bytes, stage_service_times};
 use crate::sim::cost::CostModel;
+use crate::telemetry::{Clock, ComputeSpan, RunTelemetry, StageSpan, TelemetryConfig, Tracer};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::units::{ms_to_ns, ns_to_ms, Nanos};
@@ -214,11 +216,21 @@ pub struct DesConfig {
     /// Control/sampling epoch: queue timeline samples and controller
     /// consultations happen this often, ms.
     pub sample_every_ms: f64,
+    /// Telemetry switch (DESIGN.md §13). Off by default: no tracer is
+    /// built, every hook is a null check, and the run's numbers are
+    /// bit-identical to a build without telemetry.
+    pub telemetry: TelemetryConfig,
 }
 
 impl DesConfig {
     pub fn new(arrival: ArrivalProcess, horizon_ms: f64, seed: u64) -> Self {
-        DesConfig { seed, horizon_ms, arrival, sample_every_ms: 100.0 }
+        DesConfig {
+            seed,
+            horizon_ms,
+            arrival,
+            sample_every_ms: 100.0,
+            telemetry: TelemetryConfig::off(),
+        }
     }
 }
 
@@ -266,6 +278,17 @@ pub struct DesResult {
     /// delivered-byte DRAM/Ethernet energy, switch ports, and the
     /// reconfiguration overdraw of every executed switch (DESIGN.md §11).
     pub power: EnergyReport,
+    /// Events the DES loop popped within the horizon — the raw speed
+    /// number the ROADMAP asks for. Deterministic.
+    pub events_processed: u64,
+    /// `events_processed` per *simulated* second.
+    pub events_per_sec: f64,
+    /// Host wall-clock ms the run took. The only wall figure in the
+    /// result; excluded from the determinism contract.
+    pub wall_ms: f64,
+    /// Collected telemetry when `cfg.telemetry` is on; `None` (and
+    /// zero-cost) otherwise.
+    pub telemetry: Option<RunTelemetry>,
 }
 
 /// A plan pre-priced for event-driven execution.
@@ -393,8 +416,10 @@ impl Resources<'_> {
         arrival
     }
 
-    /// Book a stage compute on a node's FIFO timeline.
-    fn compute(&mut self, node: usize, ready: Nanos, dur: Nanos, now: Nanos) -> Nanos {
+    /// Book a stage compute on a node's FIFO timeline; returns the
+    /// `(start, done)` interval (start − ready is the queue wait the
+    /// tracer attributes to the node).
+    fn compute(&mut self, node: usize, ready: Nanos, dur: Nanos, now: Nanos) -> (Nanos, Nanos) {
         let start = ready.max(self.node_free[node]);
         let done = start + dur;
         self.node_free[node] = done;
@@ -405,7 +430,7 @@ impl Resources<'_> {
         if depth > self.node_max_queue[node] {
             self.node_max_queue[node] = depth;
         }
-        done
+        (start, done)
     }
 }
 
@@ -433,6 +458,15 @@ pub fn run_des(
     anyhow::ensure!(cfg.horizon_ms > 0.0, "horizon must be > 0");
     anyhow::ensure!(cfg.sample_every_ms > 0.0, "sample interval must be > 0");
     cfg.arrival.validate()?;
+
+    let mut wall = Clock::wall();
+    wall.start();
+    // None when telemetry is off: every hook below is one null check
+    let mut tracer = Tracer::new(&cfg.telemetry);
+    if let Some(ctrl) = controller.as_deref_mut() {
+        ctrl.audit.enabled = tracer.is_some();
+        ctrl.audit.records.clear();
+    }
 
     let compiled: Vec<Compiled> = options
         .iter()
@@ -491,7 +525,11 @@ pub fn run_des(
     let mut in_flight = 0usize;
     let mut max_backlog = 0usize;
     let mut win_arrivals = 0u64;
-    let mut latency = Summary::new();
+    let mut win_completed = 0u64;
+    let mut events_processed = 0u64;
+    let mut win_events_base = 0u64;
+    let mut metrics = Metrics::sim();
+    metrics.start();
     let mut timeline: Vec<(f64, usize)> = Vec::new();
     let mut reconfigs: Vec<ReconfigEvent> = Vec::new();
     let mut downtime_ms = 0.0f64;
@@ -500,6 +538,7 @@ pub fn run_des(
         if now > horizon {
             break;
         }
+        events_processed += 1;
         match ev {
             Ev::Arrive => {
                 offered += 1;
@@ -512,6 +551,11 @@ pub fn run_des(
                 });
                 in_flight += 1;
                 max_backlog = max_backlog.max(in_flight);
+                if let Some(t) = tracer.as_mut() {
+                    if t.wants(id) {
+                        t.admit(id, now, active);
+                    }
+                }
                 push(&mut heap, &mut seq, now, Ev::Stage { img: id, si: 0 });
                 let next = gen.next_after(now);
                 if next <= horizon {
@@ -530,6 +574,24 @@ pub fn run_des(
                     for &src in &holders {
                         done = done.max(res.transfer(src, Endpoint::Master, share, now));
                     }
+                    if let Some(t) = tracer.as_mut() {
+                        if t.wants(img) {
+                            // network-only hop back to the master
+                            t.stage(
+                                img,
+                                StageSpan {
+                                    si: usize::MAX,
+                                    start_ns: now,
+                                    end_ns: done,
+                                    net_ns: done - now,
+                                    queue_ns: 0,
+                                    compute_ns: 0,
+                                    node: 0,
+                                    computes: Vec::new(),
+                                },
+                            );
+                        }
+                    }
                     push(&mut heap, &mut seq, done, Ev::Done { img });
                     continue;
                 }
@@ -542,6 +604,11 @@ pub fn run_des(
                 let in_bytes = c.in_bytes[si];
                 let mut next_holders = Vec::with_capacity(kc);
                 let mut stage_done = now;
+                let traced = tracer.as_ref().is_some_and(|t| t.wants(img));
+                let mut computes: Vec<ComputeSpan> = Vec::new();
+                // critical path = the consumer finishing last:
+                // (node, arrival, start, done)
+                let mut crit: Option<(usize, Nanos, Nanos, Nanos)> = None;
                 for (ci, &cnode) in consumers.iter().enumerate() {
                     // each consumer pulls from its window of producers
                     // (same routing as the latency booker in
@@ -555,17 +622,50 @@ pub fn run_des(
                         arrival =
                             arrival.max(res.transfer(src, Endpoint::Node(cnode), share, now));
                     }
-                    let done = res.compute(cnode, arrival, c.stage_time[si], now);
+                    let (cstart, done) = res.compute(cnode, arrival, c.stage_time[si], now);
                     stage_done = stage_done.max(done);
                     next_holders.push(Endpoint::Node(cnode));
+                    if traced {
+                        computes.push(ComputeSpan { node: cnode, start_ns: cstart, end_ns: done });
+                        if crit.is_none_or(|(_, _, _, d)| done > d) {
+                            crit = Some((cnode, arrival, cstart, done));
+                        }
+                    }
+                }
+                if let (Some(t), Some((node, arrival, cstart, cdone))) =
+                    (tracer.as_mut(), crit)
+                {
+                    // exact by construction: net + queue + compute of the
+                    // critical consumer spans [now, stage_done]
+                    debug_assert_eq!(cdone, stage_done);
+                    t.stage(
+                        img,
+                        StageSpan {
+                            si,
+                            start_ns: now,
+                            end_ns: stage_done,
+                            net_ns: arrival - now,
+                            queue_ns: cstart - arrival,
+                            compute_ns: cdone - cstart,
+                            node,
+                            computes,
+                        },
+                    );
                 }
                 imgs[img].holders = next_holders;
                 push(&mut heap, &mut seq, stage_done, Ev::Stage { img, si: si + 1 });
             }
             Ev::Done { img } => {
                 completed += 1;
+                win_completed += 1;
                 in_flight -= 1;
-                latency.push(ns_to_ms(now - imgs[img].admitted));
+                let admitted = imgs[img].admitted;
+                metrics.record_at_ms(ns_to_ms(now - admitted), now);
+                if let Some(t) = tracer.as_mut() {
+                    if t.wants(img) {
+                        t.done(img, admitted, now);
+                    }
+                }
             }
             Ev::Control => {
                 timeline.push((ns_to_ms(now), in_flight));
@@ -580,6 +680,16 @@ pub fn run_des(
                     *pb = res.busy_ns[i];
                 }
                 window_w.push(w);
+                if let Some(t) = tracer.as_mut() {
+                    t.window(
+                        ns_to_ms(now),
+                        events_processed - win_events_base,
+                        win_arrivals,
+                        win_completed,
+                    );
+                }
+                win_events_base = events_processed;
+                win_completed = 0;
                 if let Some(ctrl) = controller.as_deref_mut() {
                     let obs = Observation {
                         now_ms: ns_to_ms(now),
@@ -597,6 +707,14 @@ pub fn run_des(
                         for nf in res.node_free.iter_mut() {
                             *nf = (*nf).max(now) + dt;
                         }
+                        if let Some(t) = tracer.as_mut() {
+                            t.reconfig(now, now + dt, active, d.to, &d.reason);
+                        }
+                        crate::log_kv_debug!(
+                            Some(ns_to_ms(now)), "reconfig_executed",
+                            "from" => active, "to" => d.to,
+                            "downtime_ms" => d.downtime_ms
+                        );
                         reconfigs.push(ReconfigEvent {
                             at_ms: ns_to_ms(now),
                             from: active,
@@ -632,16 +750,22 @@ pub fn run_des(
             reconfig_downtime_ms: downtime_ms,
             reconfig_overdraw_w: pm.reconfig_w,
             window_w: &window_w,
-            mean_latency_ms: latency.mean(),
+            mean_latency_ms: metrics.latency_ms().mean(),
         },
     );
+    let audit = controller
+        .as_deref_mut()
+        .map(|c| c.audit.take())
+        .unwrap_or_default();
+    let telemetry = tracer.map(|t| t.finish(audit));
+    wall.mark();
     Ok(DesResult {
         seed: cfg.seed,
         offered,
         completed,
         backlog_at_end: in_flight,
         throughput_img_per_sec: completed as f64 / horizon_sec,
-        latency_ms: latency,
+        latency_ms: metrics.into_latency(),
         node_utilization: res
             .busy_ns
             .iter()
@@ -655,6 +779,10 @@ pub fn run_des(
         final_plan: active,
         network_bytes: res.network_bytes,
         power,
+        events_processed,
+        events_per_sec: events_processed as f64 / horizon_sec,
+        wall_ms: wall.elapsed_sec() * 1e3,
+        telemetry,
     })
 }
 
@@ -797,6 +925,8 @@ mod tests {
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.network_bytes, b.network_bytes);
         assert_eq!(a.latency_ms.p99(), b.latency_ms.p99());
+        assert_eq!(a.events_processed, b.events_processed);
+        assert!(a.events_processed > 0 && a.events_per_sec > 0.0);
         // a different seed must change the arrival sequence
         let cfg2 = DesConfig { seed: 8, ..cfg };
         let c = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg2, None).unwrap();
@@ -859,6 +989,74 @@ mod tests {
         // energy is part of the deterministic contract
         let heavy2 = run(&mut cost, 3.0 * cap);
         assert_eq!(heavy.power.total_j, heavy2.power.total_j);
+    }
+
+    #[test]
+    fn telemetry_spans_conserve_time_and_leave_numbers_unchanged() {
+        let (g, cluster, mut cost) = setup("lenet5", 2);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::Pipeline])
+                .unwrap();
+        let cap = opts[0].capacity_img_per_sec;
+        let mut cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 0.6 * cap },
+            3000.0,
+            5,
+        );
+        let base = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        assert!(base.telemetry.is_none(), "telemetry off must collect nothing");
+        cfg.telemetry = TelemetryConfig::on(1.0);
+        let traced = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        // tracing must not perturb the simulation
+        assert_eq!(base.offered, traced.offered);
+        assert_eq!(base.completed, traced.completed);
+        assert_eq!(base.network_bytes, traced.network_bytes);
+        assert_eq!(base.latency_ms.p99(), traced.latency_ms.p99());
+        assert_eq!(base.events_processed, traced.events_processed);
+        assert_eq!(base.power.total_j, traced.power.total_j);
+        let tel = traced.telemetry.expect("telemetry on must collect");
+        assert!(!tel.traces.is_empty());
+        let mut finished = 0;
+        for tr in &tel.traces {
+            let Some(done) = tr.done_ns else { continue };
+            finished += 1;
+            // the tentpole invariant: span trees conserve time exactly
+            let total: Nanos =
+                tr.stages.iter().map(|s| s.net_ns + s.queue_ns + s.compute_ns).sum();
+            assert_eq!(total, done - tr.admitted_ns, "img {} leaks time", tr.img);
+            assert_eq!(tr.stages.first().unwrap().start_ns, tr.admitted_ns);
+            for w in tr.stages.windows(2) {
+                assert_eq!(w[0].end_ns, w[1].start_ns, "img {} has a gap", tr.img);
+            }
+            assert_eq!(tr.stages.last().unwrap().end_ns, done);
+        }
+        assert!(finished > 0, "no sampled request completed");
+        assert_eq!(tel.latency_hist.count(), finished);
+        assert!(!tel.windows.is_empty());
+    }
+
+    #[test]
+    fn sampling_stride_thins_traces_without_changing_the_run() {
+        let (g, cluster, mut cost) = setup("mlp", 2);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::Fused]).unwrap();
+        let cap = opts[0].capacity_img_per_sec;
+        let mut cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 0.5 * cap },
+            2000.0,
+            17,
+        );
+        cfg.telemetry = TelemetryConfig::on(1.0);
+        let full = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        cfg.telemetry = TelemetryConfig::on(0.25);
+        let thinned = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        assert_eq!(full.offered, thinned.offered);
+        assert_eq!(full.latency_ms.p50(), thinned.latency_ms.p50());
+        let (tf, tt) = (full.telemetry.unwrap(), thinned.telemetry.unwrap());
+        assert_eq!(tt.sample_stride, 4);
+        assert!(tt.traces.len() < tf.traces.len());
+        // the sample is the deterministic id stride, not an RNG draw
+        assert!(tt.traces.iter().all(|t| t.img % 4 == 0));
     }
 
     #[test]

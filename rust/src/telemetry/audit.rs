@@ -1,0 +1,192 @@
+//! Controller decision audit log (DESIGN.md §13).
+//!
+//! Every [`crate::sched::OnlineController::decide`] consultation —
+//! switch *or* hold — is recorded with the numbers that justified it:
+//! the smoothed arrival rate and power draw, the backlog, and for the
+//! overload branch the drain-time break-even figures (T_stay /
+//! T_switch) the module docs of [`crate::sched::online`] derive. The
+//! log answers the question a latency regression always raises first:
+//! *why did (or didn't) the controller act at t?*
+//!
+//! The log is off by default (zero cost beyond one branch per
+//! consultation); the DES enables it when telemetry is on and drains it
+//! into the run's [`crate::telemetry::RunTelemetry`].
+
+use crate::util::json::{self, Json};
+
+/// What the controller concluded from one observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AuditVerdict {
+    /// Inside the minimum dwell after a switch — no evaluation ran.
+    HoldDwell,
+    /// Over the power budget → downshift to the cheapest candidate.
+    SwitchPowerCap,
+    /// Over the power budget but already on the cheapest plan.
+    HoldPowerFloor,
+    /// Overloaded, but the best candidate is active or below the
+    /// capacity-gain threshold.
+    HoldNoGain,
+    /// Overloaded, but the drain-time break-even says staying is faster.
+    HoldNotWorth,
+    /// Overload upgrade: T_switch < T_stay.
+    SwitchOverload,
+    /// Underload downshift to a lower-latency candidate.
+    SwitchUnderload,
+    /// No branch fired — load sits in the hysteresis band.
+    HoldSteady,
+}
+
+impl AuditVerdict {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AuditVerdict::HoldDwell => "hold-dwell",
+            AuditVerdict::SwitchPowerCap => "switch-power-cap",
+            AuditVerdict::HoldPowerFloor => "hold-power-floor",
+            AuditVerdict::HoldNoGain => "hold-no-gain",
+            AuditVerdict::HoldNotWorth => "hold-not-worth",
+            AuditVerdict::SwitchOverload => "switch-overload",
+            AuditVerdict::SwitchUnderload => "switch-underload",
+            AuditVerdict::HoldSteady => "hold-steady",
+        }
+    }
+
+    pub fn is_switch(self) -> bool {
+        matches!(
+            self,
+            AuditVerdict::SwitchPowerCap
+                | AuditVerdict::SwitchOverload
+                | AuditVerdict::SwitchUnderload
+        )
+    }
+}
+
+/// One consultation, with the break-even arithmetic that decided it.
+/// Fields a branch did not compute are NaN (emitted as JSON null).
+#[derive(Debug, Clone)]
+pub struct AuditRecord {
+    pub at_ms: f64,
+    /// Active option index when the observation arrived.
+    pub active: usize,
+    /// Smoothed arrival rate λ̂, img/s.
+    pub lambda_hat: f64,
+    /// Smoothed measured draw, W.
+    pub power_hat: f64,
+    pub backlog: usize,
+    pub verdict: AuditVerdict,
+    /// Target option of a switch verdict.
+    pub to: Option<usize>,
+    /// Capacity of the active plan μ_cur, img/s.
+    pub mu_cur: f64,
+    /// Capacity of the best candidate μ_best (overload branch only).
+    pub mu_best: f64,
+    /// Projected drain time if the cluster stays, s (overload branch).
+    pub t_stay_s: f64,
+    /// Projected drain time through a switch, s (overload branch).
+    pub t_switch_s: f64,
+    /// The human-readable rationale (same text as the executed
+    /// [`crate::sim::ReconfigEvent`] for switch verdicts).
+    pub reason: String,
+}
+
+impl AuditRecord {
+    pub fn to_json(&self) -> Json {
+        let fnum = |v: f64| if v.is_finite() { json::num(v) } else { Json::Null };
+        json::obj(vec![
+            ("at_ms", fnum(self.at_ms)),
+            ("active", json::int(self.active as i64)),
+            ("verdict", json::str_(self.verdict.as_str())),
+            (
+                "to",
+                self.to.map(|t| json::int(t as i64)).unwrap_or(Json::Null),
+            ),
+            ("lambda_hat", fnum(self.lambda_hat)),
+            ("power_hat", fnum(self.power_hat)),
+            ("backlog", json::int(self.backlog as i64)),
+            ("mu_cur", fnum(self.mu_cur)),
+            ("mu_best", fnum(self.mu_best)),
+            ("t_stay_s", fnum(self.t_stay_s)),
+            ("t_switch_s", fnum(self.t_switch_s)),
+            ("reason", json::str_(&self.reason)),
+        ])
+    }
+}
+
+/// The controller-side collector. Disabled it records nothing, so the
+/// controller can carry it unconditionally.
+#[derive(Debug, Clone, Default)]
+pub struct AuditLog {
+    pub enabled: bool,
+    pub records: Vec<AuditRecord>,
+}
+
+impl AuditLog {
+    pub fn push(&mut self, rec: AuditRecord) {
+        if self.enabled {
+            self.records.push(rec);
+        }
+    }
+
+    /// Drain the collected records (what the DES does at end of run).
+    pub fn take(&mut self) -> Vec<AuditRecord> {
+        std::mem::take(&mut self.records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(verdict: AuditVerdict) -> AuditRecord {
+        AuditRecord {
+            at_ms: 100.0,
+            active: 0,
+            lambda_hat: 50.0,
+            power_hat: 12.0,
+            backlog: 3,
+            verdict,
+            to: verdict.is_switch().then_some(1),
+            mu_cur: 80.0,
+            mu_best: f64::NAN,
+            t_stay_s: f64::NAN,
+            t_switch_s: f64::NAN,
+            reason: "test".into(),
+        }
+    }
+
+    #[test]
+    fn disabled_log_records_nothing() {
+        let mut log = AuditLog::default();
+        log.push(rec(AuditVerdict::HoldSteady));
+        assert!(log.records.is_empty());
+        log.enabled = true;
+        log.push(rec(AuditVerdict::SwitchOverload));
+        assert_eq!(log.records.len(), 1);
+        let drained = log.take();
+        assert_eq!(drained.len(), 1);
+        assert!(log.records.is_empty());
+    }
+
+    #[test]
+    fn json_emits_nan_as_null() {
+        let j = rec(AuditVerdict::HoldSteady).to_json();
+        assert_eq!(j.get("mu_best"), Some(&Json::Null));
+        assert_eq!(j.get("to"), Some(&Json::Null));
+        assert_eq!(j.get("verdict").unwrap().as_str().unwrap(), "hold-steady");
+        // round-trips as valid JSON
+        let text = json::pretty(&j);
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn verdict_names_are_stable() {
+        for (v, s) in [
+            (AuditVerdict::HoldDwell, "hold-dwell"),
+            (AuditVerdict::SwitchPowerCap, "switch-power-cap"),
+            (AuditVerdict::SwitchUnderload, "switch-underload"),
+        ] {
+            assert_eq!(v.as_str(), s);
+        }
+        assert!(AuditVerdict::SwitchOverload.is_switch());
+        assert!(!AuditVerdict::HoldNotWorth.is_switch());
+    }
+}

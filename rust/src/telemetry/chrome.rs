@@ -1,0 +1,365 @@
+//! Chrome trace-event exporter (DESIGN.md §13).
+//!
+//! Renders one or more [`RunTelemetry`] bundles as the Chrome
+//! trace-event JSON format that `chrome://tracing` and Perfetto load
+//! directly (`vtacluster run <spec> --trace out.json`). The mapping:
+//!
+//! * each run is a *process* (`pid` = run index + 1, named after the
+//!   row label and engine);
+//! * each cluster node is a *thread*; compute intervals are complete
+//!   (`"X"`) events on the owning node's track — the per-node FIFO
+//!   guarantees they never overlap;
+//! * queue-wait and network hops are async (`"b"`/`"e"`) pairs keyed
+//!   by request id, so Perfetto draws each request's critical path as
+//!   a nestable track;
+//! * executed reconfigurations are `"X"` spans and controller audit
+//!   verdicts are instant (`"i"`) markers on a dedicated `controller`
+//!   track.
+//!
+//! Timestamps convert sim-time nanoseconds to the format's
+//! microseconds (`ns / 1000`), so a 8 s simulated run renders as 8 s
+//! of trace time regardless of how long the simulator took.
+
+use super::RunTelemetry;
+use crate::util::json::{self, Json};
+
+const MASTER_TID: usize = 1000;
+const CONTROLLER_TID: usize = 2000;
+
+fn us(ns: u64) -> Json {
+    json::num(ns as f64 / 1e3)
+}
+
+fn meta(pid: usize, tid: Option<usize>, kind: &str, name: &str) -> Json {
+    let mut fields = vec![
+        ("name", json::str_(kind)),
+        ("ph", json::str_("M")),
+        ("pid", json::int(pid as i64)),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid", json::int(tid as i64)));
+    }
+    fields.push(("args", json::obj(vec![("name", json::str_(name))])));
+    json::obj(fields)
+}
+
+fn complete(
+    pid: usize,
+    tid: usize,
+    name: &str,
+    cat: &str,
+    start_ns: u64,
+    end_ns: u64,
+    args: Json,
+) -> Json {
+    json::obj(vec![
+        ("name", json::str_(name)),
+        ("cat", json::str_(cat)),
+        ("ph", json::str_("X")),
+        ("pid", json::int(pid as i64)),
+        ("tid", json::int(tid as i64)),
+        ("ts", us(start_ns)),
+        ("dur", json::num(end_ns.saturating_sub(start_ns) as f64 / 1e3)),
+        ("args", args),
+    ])
+}
+
+/// An async begin/end pair (`ph` "b" then "e") keyed by request id.
+fn async_pair(
+    out: &mut Vec<Json>,
+    pid: usize,
+    tid: usize,
+    name: &str,
+    cat: &str,
+    id: usize,
+    start_ns: u64,
+    end_ns: u64,
+) {
+    for (ph, ts) in [("b", start_ns), ("e", end_ns)] {
+        out.push(json::obj(vec![
+            ("name", json::str_(name)),
+            ("cat", json::str_(cat)),
+            ("ph", json::str_(ph)),
+            ("id", json::int(id as i64)),
+            ("pid", json::int(pid as i64)),
+            ("tid", json::int(tid as i64)),
+            ("ts", us(ts)),
+        ]));
+    }
+}
+
+/// Render telemetry bundles as a Chrome trace-event document.
+pub fn chrome_trace(runs: &[RunTelemetry]) -> Json {
+    let mut events = Vec::new();
+    for (i, run) in runs.iter().enumerate() {
+        let pid = i + 1;
+        let pname = if run.engine.is_empty() {
+            run.label.clone()
+        } else {
+            format!("{} ({})", run.label, run.engine)
+        };
+        events.push(meta(pid, None, "process_name", &pname));
+
+        // name every node track that appears in the spans
+        let mut nodes = std::collections::BTreeSet::new();
+        for t in &run.traces {
+            for s in &t.stages {
+                if !s.is_gather() {
+                    nodes.insert(s.node);
+                }
+                for c in &s.computes {
+                    nodes.insert(c.node);
+                }
+            }
+        }
+        for &n in &nodes {
+            events.push(meta(pid, Some(n + 1), "thread_name", &format!("node {n}")));
+        }
+        events.push(meta(pid, Some(MASTER_TID), "thread_name", "master"));
+        if !run.reconfigs.is_empty() || !run.audit.is_empty() {
+            events.push(meta(pid, Some(CONTROLLER_TID), "thread_name", "controller"));
+        }
+
+        for t in &run.traces {
+            for s in &t.stages {
+                if s.is_gather() {
+                    // network-only hop back to the master
+                    async_pair(
+                        &mut events,
+                        pid,
+                        MASTER_TID,
+                        "net gather",
+                        "net",
+                        t.img,
+                        s.start_ns,
+                        s.end_ns,
+                    );
+                    continue;
+                }
+                let tid = s.node + 1;
+                let net_end = s.start_ns + s.net_ns;
+                let queue_end = net_end + s.queue_ns;
+                // zero-duration hops still emit, so every traced run
+                // carries all three categories for the CI validator
+                async_pair(
+                    &mut events,
+                    pid,
+                    tid,
+                    &format!("net s{}", s.si),
+                    "net",
+                    t.img,
+                    s.start_ns,
+                    net_end,
+                );
+                async_pair(
+                    &mut events,
+                    pid,
+                    tid,
+                    &format!("queue s{}", s.si),
+                    "queue",
+                    t.img,
+                    net_end,
+                    queue_end,
+                );
+                for c in &s.computes {
+                    events.push(complete(
+                        pid,
+                        c.node + 1,
+                        &format!("compute s{}", s.si),
+                        "compute",
+                        c.start_ns,
+                        c.end_ns,
+                        json::obj(vec![
+                            ("img", json::int(t.img as i64)),
+                            ("plan", json::int(t.plan as i64)),
+                        ]),
+                    ));
+                }
+            }
+        }
+
+        for r in &run.reconfigs {
+            events.push(complete(
+                pid,
+                CONTROLLER_TID,
+                &format!("reconfig {}→{}", r.from, r.to),
+                "reconfig",
+                r.start_ns,
+                r.end_ns,
+                json::obj(vec![
+                    ("from", json::int(r.from as i64)),
+                    ("to", json::int(r.to as i64)),
+                    ("reason", json::str_(&r.reason)),
+                ]),
+            ));
+        }
+
+        for a in &run.audit {
+            let fnum = |v: f64| if v.is_finite() { json::num(v) } else { Json::Null };
+            events.push(json::obj(vec![
+                ("name", json::str_(a.verdict.as_str())),
+                ("cat", json::str_("audit")),
+                ("ph", json::str_("i")),
+                ("s", json::str_("p")),
+                ("pid", json::int(pid as i64)),
+                ("tid", json::int(CONTROLLER_TID as i64)),
+                ("ts", json::num(a.at_ms * 1e3)),
+                ("args", json::obj(vec![
+                    ("lambda_hat", fnum(a.lambda_hat)),
+                    ("power_hat", fnum(a.power_hat)),
+                    ("backlog", json::int(a.backlog as i64)),
+                    ("mu_cur", fnum(a.mu_cur)),
+                    ("mu_best", fnum(a.mu_best)),
+                    ("t_stay_s", fnum(a.t_stay_s)),
+                    ("t_switch_s", fnum(a.t_switch_s)),
+                    ("reason", json::str_(&a.reason)),
+                ])),
+            ]));
+        }
+    }
+    json::obj(vec![
+        ("displayTimeUnit", json::str_("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::audit::{AuditRecord, AuditVerdict};
+    use super::super::span::{ComputeSpan, ReconfigSpan, RequestTrace, StageSpan};
+    use super::*;
+    use crate::telemetry::HdrHist;
+
+    fn bundle() -> RunTelemetry {
+        RunTelemetry {
+            label: "burst".into(),
+            engine: "des".into(),
+            sample_stride: 1,
+            traces: vec![RequestTrace {
+                img: 0,
+                plan: 0,
+                admitted_ns: 1_000,
+                done_ns: Some(9_000),
+                stages: vec![
+                    StageSpan {
+                        si: 0,
+                        start_ns: 1_000,
+                        end_ns: 6_000,
+                        net_ns: 1_000,
+                        queue_ns: 1_500,
+                        compute_ns: 2_500,
+                        node: 1,
+                        computes: vec![
+                            ComputeSpan { node: 1, start_ns: 3_500, end_ns: 6_000 },
+                            ComputeSpan { node: 2, start_ns: 3_000, end_ns: 5_000 },
+                        ],
+                    },
+                    StageSpan {
+                        si: usize::MAX, // gather
+                        start_ns: 6_000,
+                        end_ns: 9_000,
+                        net_ns: 3_000,
+                        queue_ns: 0,
+                        compute_ns: 0,
+                        node: 0,
+                        computes: vec![],
+                    },
+                ],
+            }],
+            windows: vec![],
+            reconfigs: vec![ReconfigSpan {
+                start_ns: 10_000,
+                end_ns: 12_000,
+                from: 0,
+                to: 1,
+                reason: "overload".into(),
+            }],
+            audit: vec![AuditRecord {
+                at_ms: 0.01,
+                active: 0,
+                lambda_hat: 5.0,
+                power_hat: 4.0,
+                backlog: 2,
+                verdict: AuditVerdict::SwitchOverload,
+                to: Some(1),
+                mu_cur: 3.0,
+                mu_best: 9.0,
+                t_stay_s: 1.0,
+                t_switch_s: 0.5,
+                reason: "overload".into(),
+            }],
+            queue_hist: HdrHist::new(),
+            service_hist: HdrHist::new(),
+            latency_hist: HdrHist::new(),
+        }
+    }
+
+    fn strs<'a>(evs: &'a [Json], key: &str) -> Vec<&'a str> {
+        evs.iter().filter_map(|e| e.get(key).and_then(|v| v.as_str().ok())).collect()
+    }
+
+    #[test]
+    fn emits_all_phases_and_categories() {
+        let doc = chrome_trace(&[bundle()]);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let phases = strs(evs, "ph");
+        for ph in ["M", "X", "b", "e", "i"] {
+            assert!(phases.contains(&ph), "missing phase {ph}: {phases:?}");
+        }
+        let cats = strs(evs, "cat");
+        for cat in ["compute", "queue", "net", "reconfig", "audit"] {
+            assert!(cats.contains(&cat), "missing cat {cat}: {cats:?}");
+        }
+        // async begin/end balance
+        let b = phases.iter().filter(|p| **p == "b").count();
+        let e = phases.iter().filter(|p| **p == "e").count();
+        assert_eq!(b, e);
+        // every non-metadata event has a timestamp
+        for ev in evs {
+            if ev.get("ph").unwrap().as_str().unwrap() != "M" {
+                assert!(ev.get("ts").is_some(), "{}", ev.to_string_compact());
+            }
+        }
+    }
+
+    #[test]
+    fn timestamps_are_microseconds() {
+        let doc = chrome_trace(&[bundle()]);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let compute: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("cat").map(|c| c.as_str().unwrap()) == Some("compute"))
+            .collect();
+        assert_eq!(compute.len(), 2);
+        // node 1's compute: 3500 ns → 3.5 µs, dur 2500 ns → 2.5 µs
+        let c1 = compute
+            .iter()
+            .find(|e| e.get("tid").unwrap().as_i64().unwrap() == 2)
+            .unwrap();
+        assert_eq!(c1.get("ts").unwrap().as_f64().unwrap(), 3.5);
+        assert_eq!(c1.get("dur").unwrap().as_f64().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn process_and_thread_names_cover_the_tracks() {
+        let doc = chrome_trace(&[bundle()]);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let meta_names: Vec<String> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "M")
+            .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert!(meta_names.contains(&"burst (des)".to_string()));
+        assert!(meta_names.contains(&"node 1".to_string()));
+        assert!(meta_names.contains(&"node 2".to_string()));
+        assert!(meta_names.contains(&"master".to_string()));
+        assert!(meta_names.contains(&"controller".to_string()));
+    }
+
+    #[test]
+    fn empty_runs_produce_an_empty_but_valid_document() {
+        let doc = chrome_trace(&[]);
+        assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+        assert!(Json::parse(&json::pretty(&doc)).is_ok());
+    }
+}

@@ -1,0 +1,144 @@
+//! The telemetry clock abstraction (DESIGN.md §13).
+//!
+//! The codebase measures time in two incommensurable domains: host
+//! wall-clock (`std::time::Instant`, what the real PJRT serving
+//! coordinator experiences) and simulated integer nanoseconds
+//! ([`crate::util::units::Nanos`], what both simulators advance).
+//! Mixing them is a bug — a DES run that reports "throughput" from host
+//! elapsed time measures the *simulator's* speed, not the cluster's.
+//! [`Clock`] makes the domain explicit: a metrics consumer holds one
+//! clock and every reading says which kind of time it is.
+
+use crate::util::units::Nanos;
+use std::time::{Duration, Instant};
+
+/// A span measurer in one time domain: host wall-clock or sim-time.
+#[derive(Debug, Clone, Copy)]
+pub enum Clock {
+    /// Host time. `start` samples `Instant::now()`; [`Clock::mark`]
+    /// moves the end of the span to now.
+    Wall { started: Option<Instant>, latest: Option<Instant> },
+    /// Simulated time. The owner advances the span explicitly with
+    /// [`Clock::mark_at`]; host time never leaks in.
+    Sim { started: Option<Nanos>, latest: Option<Nanos> },
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::wall()
+    }
+}
+
+impl Clock {
+    pub fn wall() -> Self {
+        Clock::Wall { started: None, latest: None }
+    }
+
+    pub fn sim() -> Self {
+        Clock::Sim { started: None, latest: None }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self, Clock::Sim { .. })
+    }
+
+    /// Open the span: wall clocks at `Instant::now()`, sim clocks at 0 ns.
+    pub fn start(&mut self) {
+        match self {
+            Clock::Wall { started, .. } => *started = Some(Instant::now()),
+            Clock::Sim { started, .. } => *started = Some(0),
+        }
+    }
+
+    /// Open a sim span at an explicit origin (no-op start on wall clocks,
+    /// which always originate at `Instant::now()`).
+    pub fn start_at(&mut self, ns: Nanos) {
+        match self {
+            Clock::Wall { started, .. } => *started = Some(Instant::now()),
+            Clock::Sim { started, .. } => *started = Some(ns),
+        }
+    }
+
+    /// Extend the span to "now". On a sim clock this is a no-op — sim
+    /// time only advances through [`Clock::mark_at`].
+    pub fn mark(&mut self) {
+        if let Clock::Wall { latest, .. } = self {
+            *latest = Some(Instant::now());
+        }
+    }
+
+    /// Extend the span to the given sim time. On a wall clock the
+    /// nanosecond value is ignored and "now" is sampled instead, so
+    /// callers generic over the domain can always pass the sim time they
+    /// have.
+    pub fn mark_at(&mut self, ns: Nanos) {
+        match self {
+            Clock::Wall { latest, .. } => *latest = Some(Instant::now()),
+            Clock::Sim { latest, .. } => *latest = Some(ns),
+        }
+    }
+
+    /// Span from start to the last mark; zero until both ends exist.
+    pub fn elapsed(&self) -> Duration {
+        match self {
+            Clock::Wall { started: Some(s), latest: Some(l) } => l.duration_since(*s),
+            Clock::Sim { started: Some(s), latest: Some(l) } => {
+                Duration::from_nanos(l.saturating_sub(*s))
+            }
+            _ => Duration::ZERO,
+        }
+    }
+
+    pub fn elapsed_sec(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_is_exact_and_host_free() {
+        let mut c = Clock::sim();
+        assert_eq!(c.elapsed(), Duration::ZERO);
+        c.start();
+        c.mark_at(2_500_000_000);
+        assert_eq!(c.elapsed(), Duration::from_millis(2500));
+        // wall-style mark must not disturb a sim span
+        c.mark();
+        assert_eq!(c.elapsed(), Duration::from_millis(2500));
+        assert!(c.is_sim());
+    }
+
+    #[test]
+    fn sim_clock_with_origin() {
+        let mut c = Clock::sim();
+        c.start_at(1_000_000);
+        c.mark_at(4_000_000);
+        assert_eq!(c.elapsed(), Duration::from_millis(3));
+        // marks never go negative even if the owner rewinds
+        c.mark_at(0);
+        assert_eq!(c.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn wall_clock_advances() {
+        let mut c = Clock::wall();
+        assert!(!c.is_sim());
+        c.start();
+        std::thread::sleep(Duration::from_millis(2));
+        c.mark();
+        assert!(c.elapsed() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn unstarted_clocks_read_zero() {
+        let mut c = Clock::wall();
+        c.mark();
+        assert_eq!(c.elapsed(), Duration::ZERO);
+        let mut s = Clock::sim();
+        s.mark_at(99);
+        assert_eq!(s.elapsed(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,274 @@
+//! Log-linear HDR-style histogram (DESIGN.md §13).
+//!
+//! [`crate::util::stats::Summary`] keeps every sample, which is exact
+//! but unbounded — a 10⁸-event DES run must not retain 10⁸ floats just
+//! to answer "p99". [`HdrHist`] buckets non-negative integer values
+//! (the telemetry layer feeds it sim-time nanoseconds) on a log-linear
+//! grid: values below 2⁷ land in exact unit buckets, and every octave
+//! above is split into 2⁷ equal sub-buckets, so the bucket width is
+//! always ≤ value/2⁷ and the midpoint a percentile reports is within
+//! **1/256 ≈ 0.4 % relative error** of the true sample — the ≤ 1 %
+//! bound the property test in `tests/proptests.rs` pins against
+//! `Summary` on random workloads.
+//!
+//! Buckets are stored sparsely (ordered map keyed by bucket index), so
+//! memory is bounded by the number of *distinct* buckets ever touched
+//! (≤ 7 424 for the full u64 range, typically a few dozen), not by the
+//! sample count. Histograms merge losslessly — window histograms fold
+//! into run histograms bucket by bucket.
+
+use std::collections::BTreeMap;
+
+/// Sub-bucket resolution: 2^SUB_BITS linear sub-buckets per octave.
+const SUB_BITS: u32 = 7;
+const SUB_COUNT: u64 = 1 << SUB_BITS; // 128
+
+/// A mergeable log-linear histogram over `u64` values with ≤ 1/256
+/// relative error on reported percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct HdrHist {
+    /// bucket index → sample count (sparse, ordered for percentile walks).
+    counts: BTreeMap<u32, u64>,
+    count: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+/// Bucket index of a value: exact below `SUB_COUNT`, log-linear above.
+fn index_of(v: u64) -> u32 {
+    if v < SUB_COUNT {
+        return v as u32;
+    }
+    let exp = 63 - v.leading_zeros(); // ≥ SUB_BITS
+    let sub = (v >> (exp - SUB_BITS)) - SUB_COUNT; // in [0, SUB_COUNT)
+    SUB_COUNT as u32 + (exp - SUB_BITS) * SUB_COUNT as u32 + sub as u32
+}
+
+/// Midpoint of a bucket — the value a percentile in that bucket reports.
+fn midpoint_of(index: u32) -> u64 {
+    if index < SUB_COUNT as u32 {
+        return index as u64;
+    }
+    let octave = (index - SUB_COUNT as u32) / SUB_COUNT as u32;
+    let sub = ((index - SUB_COUNT as u32) % SUB_COUNT as u32) as u64;
+    let lo = (SUB_COUNT + sub) << octave;
+    let width = 1u64 << octave;
+    lo + width / 2
+}
+
+impl HdrHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` occurrences of `v` (what [`HdrHist::merge`] uses).
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        *self.counts.entry(index_of(v)).or_insert(0) += n;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += n;
+        self.sum += v as u128 * n as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest recorded value (exact, not bucketed). 0 when empty.
+    pub fn min(&self) -> u64 {
+        if self.is_empty() {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value (exact, not bucketed). 0 when empty.
+    pub fn max(&self) -> u64 {
+        if self.is_empty() {
+            0
+        } else {
+            self.max
+        }
+    }
+
+    /// Exact mean of the recorded values (the sum is kept exactly).
+    pub fn mean(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The value at quantile `q` ∈ [0, 100]: the midpoint of the bucket
+    /// holding the ⌈q/100 · n⌉-th smallest sample, clamped into the
+    /// recorded [min, max] so the bound also holds at the extremes.
+    /// `None` when no samples were recorded.
+    pub fn percentile(&self, q: f64) -> Option<u64> {
+        assert!((0.0..=100.0).contains(&q));
+        if self.is_empty() {
+            return None;
+        }
+        let target = ((q / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (&idx, &c) in &self.counts {
+            seen += c;
+            if seen >= target {
+                return Some(midpoint_of(idx).clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+
+    pub fn p50(&self) -> Option<u64> {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> Option<u64> {
+        self.percentile(99.0)
+    }
+
+    /// Fold another histogram in, bucket by bucket (lossless: both sides
+    /// share the fixed bucket grid).
+    pub fn merge(&mut self, other: &HdrHist) {
+        if other.is_empty() {
+            return;
+        }
+        for (&idx, &c) in &other.counts {
+            *self.counts.entry(idx).or_insert(0) += c;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Drop every sample but keep the allocation — what the per-window
+    /// stage histograms do at each control epoch.
+    pub fn reset(&mut self) {
+        self.counts.clear();
+        self.count = 0;
+        self.min = 0;
+        self.max = 0;
+        self.sum = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = HdrHist::new();
+        for v in 0..SUB_COUNT {
+            h.record(v);
+        }
+        for q in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            let p = h.percentile(q).unwrap();
+            assert!(p < SUB_COUNT, "p{q} = {p}");
+        }
+        assert_eq!(h.percentile(50.0), Some(63)); // 64th smallest of 0..=127
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), SUB_COUNT - 1);
+    }
+
+    #[test]
+    fn bucket_relative_error_bound() {
+        // every value maps to a bucket whose midpoint is within 1/256
+        let mut v = 1u64;
+        while v < u64::MAX / 3 {
+            for &x in &[v, v + v / 3, v.saturating_mul(2) - 1] {
+                let mid = midpoint_of(index_of(x));
+                let err = (mid as f64 - x as f64).abs() / x as f64;
+                assert!(err <= 1.0 / 256.0 + 1e-12, "v={x} mid={mid} err={err}");
+            }
+            v *= 2;
+        }
+    }
+
+    #[test]
+    fn percentiles_track_known_distribution() {
+        let mut h = HdrHist::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 1000);
+        }
+        let p50 = h.percentile(50.0).unwrap() as f64;
+        assert!((p50 - 5_000_000.0).abs() / 5_000_000.0 < 0.01, "{p50}");
+        let p99 = h.percentile(99.0).unwrap() as f64;
+        assert!((p99 - 9_900_000.0).abs() / 9_900_000.0 < 0.01, "{p99}");
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.min(), 1000);
+        assert_eq!(h.max(), 10_000_000);
+    }
+
+    #[test]
+    fn merge_equals_single_histogram() {
+        let mut a = HdrHist::new();
+        let mut b = HdrHist::new();
+        let mut whole = HdrHist::new();
+        for v in 0..5000u64 {
+            let x = v * v + 17;
+            if v % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            whole.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        for q in [1.0, 50.0, 95.0, 99.9] {
+            assert_eq!(a.percentile(q), whole.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_and_reset() {
+        let mut h = HdrHist::new();
+        assert_eq!(h.percentile(50.0), None);
+        assert_eq!(h.mean(), 0.0);
+        h.record(42);
+        assert_eq!(h.percentile(50.0), Some(42));
+        h.reset();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(99.0), None);
+        // reuse after reset behaves like new
+        h.record(7);
+        assert_eq!(h.percentile(100.0), Some(7));
+    }
+
+    #[test]
+    fn extreme_percentiles_clamp_to_min_max() {
+        let mut h = HdrHist::new();
+        h.record(1_000_003);
+        h.record(2_000_007);
+        assert_eq!(h.percentile(0.0), Some(1_000_003));
+        assert_eq!(h.percentile(100.0), Some(2_000_007));
+    }
+}

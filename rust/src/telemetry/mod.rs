@@ -1,0 +1,205 @@
+//! Telemetry: the observability layer for the simulators and the
+//! controller (DESIGN.md §13).
+//!
+//! Four pieces, all zero-cost when off:
+//!
+//! * [`span`] — per-request span tracing: every sampled request records
+//!   network / queue-wait / compute spans per pipeline stage, in
+//!   sim-time nanoseconds, decomposed exactly along the critical path;
+//! * [`hist`] — log-linear HDR-style histograms with bounded memory and
+//!   ≤ 1/256 relative error, replacing store-every-sample percentiles
+//!   on the hot path;
+//! * [`audit`] — the controller decision audit log: every
+//!   [`crate::sched::OnlineController::decide`] consultation with the
+//!   break-even numbers that justified the verdict;
+//! * [`chrome`] — the Chrome trace-event / Perfetto exporter behind
+//!   `vtacluster run <spec> --trace out.json`.
+//!
+//! [`clock`] supplies the wall-vs-sim time abstraction the coordinator
+//! metrics use so host elapsed time can never masquerade as simulated
+//! throughput again.
+//!
+//! A DES run with telemetry enabled threads a [`Tracer`] through its
+//! event loop and tears it down into one [`RunTelemetry`] bundle per
+//! report row; the scenario [`crate::scenario::Report`] carries the
+//! bundles only when they are non-empty, so untraced reports are
+//! byte-identical to the pre-telemetry output.
+
+pub mod audit;
+pub mod chrome;
+pub mod clock;
+pub mod hist;
+pub mod span;
+
+pub use audit::{AuditLog, AuditRecord, AuditVerdict};
+pub use chrome::chrome_trace;
+pub use clock::Clock;
+pub use hist::HdrHist;
+pub use span::{
+    ComputeSpan, ReconfigSpan, RequestTrace, StageSpan, StageWindow, TelemetryConfig,
+    Tracer, WindowRow, MAX_TRACES,
+};
+
+use crate::util::json::{self, Json};
+use crate::util::units::ns_to_ms;
+
+/// Everything one simulator run collected: sampled request traces,
+/// per-window stage metrics, reconfiguration spans, the controller
+/// audit log, and the run-level histograms. Produced by
+/// [`Tracer::finish`]; the scenario layer stamps `label`/`engine`.
+#[derive(Debug, Clone, Default)]
+pub struct RunTelemetry {
+    pub label: String,
+    pub engine: String,
+    pub sample_stride: u64,
+    pub traces: Vec<RequestTrace>,
+    pub windows: Vec<WindowRow>,
+    pub reconfigs: Vec<ReconfigSpan>,
+    pub audit: Vec<AuditRecord>,
+    /// Run-level queue-wait per stage execution, ns.
+    pub queue_hist: HdrHist,
+    /// Run-level compute (service) time per stage execution, ns.
+    pub service_hist: HdrHist,
+    /// Run-level end-to-end latency of sampled requests, ns.
+    pub latency_hist: HdrHist,
+}
+
+fn hist_json(h: &HdrHist) -> Json {
+    let p = |q: f64| h.percentile(q).map(|v| json::num(ns_to_ms(v))).unwrap_or(Json::Null);
+    json::obj(vec![
+        ("count", json::int(h.count() as i64)),
+        ("mean_ms", json::num(ns_to_ms(h.mean() as u64))),
+        ("p50_ms", p(50.0)),
+        ("p99_ms", p(99.0)),
+        ("max_ms", json::num(ns_to_ms(h.max()))),
+    ])
+}
+
+fn stage_index_json(si: usize) -> Json {
+    // the gather hop is keyed by the usize::MAX sentinel; emit -1
+    if si == usize::MAX {
+        json::int(-1)
+    } else {
+        json::int(si as i64)
+    }
+}
+
+impl RunTelemetry {
+    /// The report-embedded rendering: window time series, reconfig
+    /// spans, audit log, and histogram summaries — but *not* the raw
+    /// request spans, which only go to the Chrome trace file.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("label", json::str_(&self.label)),
+            ("engine", json::str_(&self.engine)),
+            ("sample_stride", json::int(self.sample_stride as i64)),
+            ("traced_requests", json::int(self.traces.len() as i64)),
+            ("latency", hist_json(&self.latency_hist)),
+            ("queue", hist_json(&self.queue_hist)),
+            ("service", hist_json(&self.service_hist)),
+            (
+                "windows",
+                Json::Arr(
+                    self.windows
+                        .iter()
+                        .map(|w| {
+                            json::obj(vec![
+                                ("t_ms", json::num(w.t_ms)),
+                                ("events", json::int(w.events as i64)),
+                                ("arrivals", json::int(w.arrivals as i64)),
+                                ("completions", json::int(w.completions as i64)),
+                                (
+                                    "stages",
+                                    Json::Arr(
+                                        w.stages
+                                            .iter()
+                                            .map(|s| {
+                                                json::obj(vec![
+                                                    ("si", stage_index_json(s.si)),
+                                                    ("count", json::int(s.count as i64)),
+                                                    ("queue_p50_ms", json::num(s.queue_p50_ms)),
+                                                    ("queue_p99_ms", json::num(s.queue_p99_ms)),
+                                                    (
+                                                        "service_p50_ms",
+                                                        json::num(s.service_p50_ms),
+                                                    ),
+                                                    (
+                                                        "service_p99_ms",
+                                                        json::num(s.service_p99_ms),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "reconfig_spans",
+                Json::Arr(
+                    self.reconfigs
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("start_ms", json::num(ns_to_ms(r.start_ns))),
+                                ("end_ms", json::num(ns_to_ms(r.end_ns))),
+                                ("from", json::int(r.from as i64)),
+                                ("to", json::int(r.to as i64)),
+                                ("reason", json::str_(&r.reason)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("audit", Json::Arr(self.audit.iter().map(|a| a.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_summarises_without_raw_spans() {
+        let mut t = Tracer::new(&TelemetryConfig::on(1.0)).unwrap();
+        t.admit(0, 0, 0);
+        t.stage(
+            0,
+            StageSpan {
+                si: 0,
+                start_ns: 0,
+                end_ns: 3_000_000,
+                net_ns: 0,
+                queue_ns: 1_000_000,
+                compute_ns: 2_000_000,
+                node: 0,
+                computes: vec![ComputeSpan { node: 0, start_ns: 1_000_000, end_ns: 3_000_000 }],
+            },
+        );
+        t.done(0, 0, 3_000_000);
+        t.window(100.0, 10, 1, 1);
+        let mut bundle = t.finish(Vec::new());
+        bundle.label = "cell".into();
+        bundle.engine = "des".into();
+        let j = bundle.to_json();
+        assert_eq!(j.get_str("label").unwrap(), "cell");
+        assert_eq!(j.get_i64("traced_requests").unwrap(), 1);
+        assert_eq!(j.get("latency").unwrap().get_i64("count").unwrap(), 1);
+        assert!((j.get("latency").unwrap().get_f64("p50_ms").unwrap() - 3.0).abs() < 0.05);
+        assert_eq!(j.get("windows").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.get("spans").is_none(), "raw spans must not bloat reports");
+        // round-trips as valid JSON
+        let text = json::pretty(&j);
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn gather_sentinel_emits_minus_one() {
+        assert_eq!(stage_index_json(usize::MAX), json::int(-1));
+        assert_eq!(stage_index_json(3), json::int(3));
+    }
+}

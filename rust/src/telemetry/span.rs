@@ -1,0 +1,374 @@
+//! Span-based request tracing for the simulators (DESIGN.md §13).
+//!
+//! Every sampled request carries a [`RequestTrace`]: one [`StageSpan`]
+//! per pipeline stage, decomposed along the *critical path* into
+//! network / queue-wait / compute — all in sim-time nanoseconds, never
+//! wall-clock. The decomposition is exact by construction: for the
+//! consumer that finishes last, `net + queue + compute` equals the
+//! stage's span, and stages chain gaplessly (stage *k* starts where
+//! stage *k−1* ended), so the spans of a trace sum to the request's
+//! end-to-end latency to the nanosecond. The property test in
+//! `tests/proptests.rs` pins this.
+//!
+//! Sampling is a deterministic stride on the request id (`id % stride
+//! == 0`), chosen over RNG thinning so (a) the main DES RNG is never
+//! consumed — traced and untraced runs replay the *identical* event
+//! sequence — and (b) a given request is traced at every sample rate
+//! that includes it. With tracing off (or sample rate 0) no [`Tracer`]
+//! exists at all and the simulator pays one `Option` null-check per
+//! hook.
+
+use super::audit::AuditRecord;
+use super::hist::HdrHist;
+use crate::util::units::{ns_to_ms, Nanos};
+use std::collections::BTreeMap;
+
+/// Stop storing new [`RequestTrace`]s past this many (histograms and
+/// window rows keep accumulating): bounds trace memory on 10⁸-event
+/// runs without touching the aggregate numbers.
+pub const MAX_TRACES: usize = 50_000;
+
+/// Telemetry switch carried by the simulator configs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryConfig {
+    pub enabled: bool,
+    /// Fraction of requests to trace, in (0, 1]. 0 disables tracing
+    /// entirely (nothing is collected, not even histograms).
+    pub sample_rate: f64,
+}
+
+impl TelemetryConfig {
+    /// The default: completely off, zero cost.
+    pub fn off() -> Self {
+        TelemetryConfig { enabled: false, sample_rate: 0.0 }
+    }
+
+    /// Tracing on at the given sample rate.
+    pub fn on(sample_rate: f64) -> Self {
+        TelemetryConfig { enabled: true, sample_rate }
+    }
+
+    /// The deterministic sampling stride: trace request `id` iff
+    /// `id % stride == 0`. `None` means "collect nothing".
+    pub fn stride(&self) -> Option<u64> {
+        if !self.enabled || self.sample_rate <= 0.0 || !self.sample_rate.is_finite() {
+            return None;
+        }
+        Some(((1.0 / self.sample_rate.min(1.0)).round() as u64).max(1))
+    }
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig::off()
+    }
+}
+
+/// One consumer's compute interval within a stage (for the Perfetto
+/// per-node compute tracks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ComputeSpan {
+    pub node: usize,
+    pub start_ns: Nanos,
+    pub end_ns: Nanos,
+}
+
+/// One pipeline stage of a traced request, decomposed along the
+/// critical path (the consumer that finished last).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSpan {
+    /// Stage index; `usize::MAX` flags the trailing gather hop back to
+    /// the master (network-only, no compute).
+    pub si: usize,
+    /// When the stage became runnable (= previous stage's `end_ns`).
+    pub start_ns: Nanos,
+    /// When the slowest consumer finished (= next stage's `start_ns`).
+    pub end_ns: Nanos,
+    /// Critical-path network transfer time.
+    pub net_ns: Nanos,
+    /// Critical-path wait for the consumer node to free up.
+    pub queue_ns: Nanos,
+    /// Critical-path compute time.
+    pub compute_ns: Nanos,
+    /// Node the critical-path consumer ran on.
+    pub node: usize,
+    /// Every consumer's compute interval (parallel split ⇒ several).
+    pub computes: Vec<ComputeSpan>,
+}
+
+impl StageSpan {
+    pub fn is_gather(&self) -> bool {
+        self.si == usize::MAX
+    }
+}
+
+/// The full span tree of one sampled request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestTrace {
+    pub img: usize,
+    /// Active plan-option index when the request was admitted.
+    pub plan: usize,
+    pub admitted_ns: Nanos,
+    /// `None` if the horizon ended before the request completed.
+    pub done_ns: Option<Nanos>,
+    pub stages: Vec<StageSpan>,
+}
+
+/// Per-stage queue/service percentiles over one control window, ms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageWindow {
+    pub si: usize,
+    /// Sampled stage executions contributing to this window.
+    pub count: u64,
+    pub queue_p50_ms: f64,
+    pub queue_p99_ms: f64,
+    pub service_p50_ms: f64,
+    pub service_p99_ms: f64,
+}
+
+/// One control-epoch snapshot of the event-loop and stage metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowRow {
+    pub t_ms: f64,
+    /// DES events processed during the window.
+    pub events: u64,
+    pub arrivals: u64,
+    pub completions: u64,
+    pub stages: Vec<StageWindow>,
+}
+
+/// An executed reconfiguration, as a span (the cluster is draining /
+/// reprogramming for its duration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconfigSpan {
+    pub start_ns: Nanos,
+    pub end_ns: Nanos,
+    pub from: usize,
+    pub to: usize,
+    pub reason: String,
+}
+
+/// The live collector one DES run threads its hooks through. Built via
+/// [`Tracer::new`], which returns `None` when telemetry is off so every
+/// hook site is a null check.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    stride: u64,
+    traces: BTreeMap<usize, RequestTrace>,
+    /// stage index → (queue hist, service hist) for the current window.
+    window_stages: BTreeMap<usize, (HdrHist, HdrHist)>,
+    windows: Vec<WindowRow>,
+    reconfigs: Vec<ReconfigSpan>,
+    /// Run-level histograms (never reset), in nanoseconds.
+    queue_hist: HdrHist,
+    service_hist: HdrHist,
+    latency_hist: HdrHist,
+}
+
+impl Tracer {
+    pub fn new(cfg: &TelemetryConfig) -> Option<Tracer> {
+        cfg.stride().map(|stride| Tracer {
+            stride,
+            traces: BTreeMap::new(),
+            window_stages: BTreeMap::new(),
+            windows: Vec::new(),
+            reconfigs: Vec::new(),
+            queue_hist: HdrHist::new(),
+            service_hist: HdrHist::new(),
+            latency_hist: HdrHist::new(),
+        })
+    }
+
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    /// Is request `img` in the sample?
+    pub fn wants(&self, img: usize) -> bool {
+        img as u64 % self.stride == 0
+    }
+
+    /// A sampled request entered the system.
+    pub fn admit(&mut self, img: usize, now: Nanos, plan: usize) {
+        if self.traces.len() >= MAX_TRACES {
+            return; // histograms keep running; spans stop accumulating
+        }
+        self.traces.insert(
+            img,
+            RequestTrace { img, plan, admitted_ns: now, done_ns: None, stages: Vec::new() },
+        );
+    }
+
+    /// A sampled request finished a stage.
+    pub fn stage(&mut self, img: usize, span: StageSpan) {
+        self.queue_hist.record(span.queue_ns);
+        self.service_hist.record(span.compute_ns);
+        // the gather hop keys its own row under the usize::MAX sentinel
+        let (q, s) = self.window_stages.entry(span.si).or_default();
+        q.record(span.queue_ns);
+        s.record(span.compute_ns);
+        if let Some(t) = self.traces.get_mut(&img) {
+            t.stages.push(span);
+        }
+    }
+
+    /// A sampled request completed end-to-end.
+    pub fn done(&mut self, img: usize, admitted_ns: Nanos, done_ns: Nanos) {
+        self.latency_hist.record(done_ns.saturating_sub(admitted_ns));
+        if let Some(t) = self.traces.get_mut(&img) {
+            t.done_ns = Some(done_ns);
+        }
+    }
+
+    /// Close a control window: snapshot the per-stage histograms into a
+    /// [`WindowRow`] and reset them for the next epoch.
+    pub fn window(&mut self, t_ms: f64, events: u64, arrivals: u64, completions: u64) {
+        let p = |h: &HdrHist, q: f64| h.percentile(q).map(ns_to_ms).unwrap_or(0.0);
+        let stages = self
+            .window_stages
+            .iter()
+            .filter(|(_, (q, _))| !q.is_empty())
+            .map(|(&si, (q, s))| StageWindow {
+                si,
+                count: q.count(),
+                queue_p50_ms: p(q, 50.0),
+                queue_p99_ms: p(q, 99.0),
+                service_p50_ms: p(s, 50.0),
+                service_p99_ms: p(s, 99.0),
+            })
+            .collect();
+        for (q, s) in self.window_stages.values_mut() {
+            q.reset();
+            s.reset();
+        }
+        self.windows.push(WindowRow { t_ms, events, arrivals, completions, stages });
+    }
+
+    /// A reconfiguration executed (plan switch with downtime).
+    pub fn reconfig(&mut self, start_ns: Nanos, end_ns: Nanos, from: usize, to: usize, reason: &str) {
+        self.reconfigs.push(ReconfigSpan {
+            start_ns,
+            end_ns,
+            from,
+            to,
+            reason: reason.to_string(),
+        });
+    }
+
+    /// Tear down into the run's immutable telemetry bundle.
+    pub fn finish(self, audit: Vec<AuditRecord>) -> super::RunTelemetry {
+        super::RunTelemetry {
+            label: String::new(),
+            engine: String::new(),
+            sample_stride: self.stride,
+            traces: self.traces.into_values().collect(),
+            windows: self.windows,
+            reconfigs: self.reconfigs,
+            audit,
+            queue_hist: self.queue_hist,
+            service_hist: self.service_hist,
+            latency_hist: self.latency_hist,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stride_math() {
+        assert_eq!(TelemetryConfig::off().stride(), None);
+        assert_eq!(TelemetryConfig::on(0.0).stride(), None);
+        assert_eq!(TelemetryConfig::on(1.0).stride(), Some(1));
+        assert_eq!(TelemetryConfig::on(0.5).stride(), Some(2));
+        assert_eq!(TelemetryConfig::on(0.01).stride(), Some(100));
+        assert_eq!(TelemetryConfig::on(7.0).stride(), Some(1)); // clamped
+        assert_eq!(TelemetryConfig { enabled: false, sample_rate: 1.0 }.stride(), None);
+    }
+
+    #[test]
+    fn tracer_none_when_off() {
+        assert!(Tracer::new(&TelemetryConfig::off()).is_none());
+        assert!(Tracer::new(&TelemetryConfig::on(0.0)).is_none());
+        assert!(Tracer::new(&TelemetryConfig::on(0.25)).is_some());
+    }
+
+    fn span(si: usize, start: Nanos, net: Nanos, queue: Nanos, comp: Nanos) -> StageSpan {
+        StageSpan {
+            si,
+            start_ns: start,
+            end_ns: start + net + queue + comp,
+            net_ns: net,
+            queue_ns: queue,
+            compute_ns: comp,
+            node: 0,
+            computes: vec![ComputeSpan {
+                node: 0,
+                start_ns: start + net + queue,
+                end_ns: start + net + queue + comp,
+            }],
+        }
+    }
+
+    #[test]
+    fn trace_assembly_conserves_time() {
+        let mut t = Tracer::new(&TelemetryConfig::on(0.5)).unwrap();
+        assert!(t.wants(0) && !t.wants(1) && t.wants(2));
+        t.admit(0, 100, 0);
+        t.stage(0, span(0, 100, 5, 10, 85)); // ends at 200
+        t.stage(0, span(1, 200, 0, 40, 60)); // ends at 300
+        t.done(0, 100, 300);
+        let bundle = t.finish(Vec::new());
+        assert_eq!(bundle.traces.len(), 1);
+        let tr = &bundle.traces[0];
+        assert_eq!(tr.done_ns, Some(300));
+        let total: Nanos =
+            tr.stages.iter().map(|s| s.net_ns + s.queue_ns + s.compute_ns).sum();
+        assert_eq!(total, 300 - 100);
+        // chaining
+        assert_eq!(tr.stages[0].start_ns, tr.admitted_ns);
+        assert_eq!(tr.stages[1].start_ns, tr.stages[0].end_ns);
+        assert_eq!(tr.stages.last().unwrap().end_ns, 300);
+        // run histograms saw both stages
+        assert_eq!(bundle.queue_hist.count(), 2);
+        assert_eq!(bundle.latency_hist.count(), 1);
+        assert_eq!(bundle.latency_hist.p50(), Some(200));
+    }
+
+    #[test]
+    fn window_snapshot_resets_stage_hists() {
+        let mut t = Tracer::new(&TelemetryConfig::on(1.0)).unwrap();
+        t.admit(0, 0, 0);
+        t.stage(0, span(0, 0, 0, 1_000_000, 2_000_000));
+        t.window(100.0, 42, 3, 1);
+        assert_eq!(t.windows.len(), 1);
+        let w = &t.windows[0];
+        assert_eq!((w.events, w.arrivals, w.completions), (42, 3, 1));
+        assert_eq!(w.stages.len(), 1);
+        assert_eq!(w.stages[0].count, 1);
+        assert!((w.stages[0].queue_p50_ms - 1.0).abs() / 1.0 < 0.01);
+        assert!((w.stages[0].service_p50_ms - 2.0).abs() / 2.0 < 0.01);
+        // next window is empty: stage hists were reset
+        t.window(200.0, 0, 0, 0);
+        assert!(t.windows[1].stages.is_empty());
+        // run-level hist unaffected by the reset
+        assert_eq!(t.queue_hist.count(), 1);
+    }
+
+    #[test]
+    fn trace_cap_keeps_histograms_running() {
+        let mut t = Tracer::new(&TelemetryConfig::on(1.0)).unwrap();
+        // simulate a tiny cap by filling the map directly
+        for i in 0..10 {
+            t.admit(i, i as Nanos, 0);
+        }
+        assert_eq!(t.traces.len(), 10);
+        // spans for untracked imgs still feed the histograms
+        t.stage(999, span(0, 0, 1, 2, 3));
+        assert_eq!(t.queue_hist.count(), 1);
+        let bundle = t.finish(Vec::new());
+        assert_eq!(bundle.traces.len(), 10);
+        assert!(bundle.traces.iter().all(|tr| tr.stages.is_empty()));
+    }
+}

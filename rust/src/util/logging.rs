@@ -1,5 +1,12 @@
 //! Leveled stderr logging, configured by the `VTA_LOG` environment
 //! variable (`error|warn|info|debug|trace`, default `info`).
+//!
+//! Besides the free-form `log_*!` macros there is a structured
+//! key=value form (DESIGN.md §13): [`log_kv`] / [`crate::log_kv_debug!`]
+//! emit one event name plus sorted `key=value` pairs, with an optional
+//! sim-time timestamp, so controller and DES debug output is grep- and
+//! machine-parseable. With `VTA_LOG_JSON=1` each line is a single JSON
+//! object instead.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -79,6 +86,71 @@ pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     }
 }
 
+static JSON_MODE: OnceLock<bool> = OnceLock::new();
+
+/// `VTA_LOG_JSON=1` switches [`log_kv`] to one-JSON-object-per-line.
+pub fn json_mode() -> bool {
+    *JSON_MODE.get_or_init(|| {
+        std::env::var("VTA_LOG_JSON").map(|v| v == "1" || v == "true").unwrap_or(false)
+    })
+}
+
+/// Render one structured event. Pure (no env, no I/O) so the format is
+/// unit-testable; [`log_kv`] feeds it the ambient JSON-mode flag.
+///
+/// Text mode: `[DEBUG] module @123.4ms event k=v k2="v 2"` — values
+/// containing spaces, quotes or `=` are JSON-string-quoted so the line
+/// splits unambiguously on spaces. JSON mode: a single-line object with
+/// every value as a string.
+pub fn format_kv(
+    json: bool,
+    lvl: Level,
+    module: &str,
+    t_ms: Option<f64>,
+    event: &str,
+    kvs: &[(&str, String)],
+) -> String {
+    if json {
+        let mut fields = vec![
+            ("level", crate::util::json::str_(lvl.as_str())),
+            ("module", crate::util::json::str_(module)),
+        ];
+        if let Some(t) = t_ms {
+            fields.push(("t_ms", crate::util::json::num(t)));
+        }
+        fields.push(("event", crate::util::json::str_(event)));
+        for (k, v) in kvs {
+            fields.push((*k, crate::util::json::str_(v)));
+        }
+        return crate::util::json::obj(fields).to_string_compact();
+    }
+    let mut line = format!("[{:5}] {module}", lvl.as_str());
+    if let Some(t) = t_ms {
+        line.push_str(&format!(" @{t:.3}ms"));
+    }
+    line.push(' ');
+    line.push_str(event);
+    for (k, v) in kvs {
+        let needs_quoting =
+            v.is_empty() || v.contains([' ', '"', '=', '\n', '\t']);
+        if needs_quoting {
+            line.push_str(&format!(" {k}={}", crate::util::json::str_(v).to_string_compact()));
+        } else {
+            line.push_str(&format!(" {k}={v}"));
+        }
+    }
+    line
+}
+
+/// Emit one structured event to stderr (level-gated). `t_ms` is the
+/// *simulated* timestamp when the caller has one — sim modules must
+/// never stamp host time here.
+pub fn log_kv(lvl: Level, module: &str, t_ms: Option<f64>, event: &str, kvs: &[(&str, String)]) {
+    if enabled(lvl) {
+        eprintln!("{}", format_kv(json_mode(), lvl, module, t_ms, event, kvs));
+    }
+}
+
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -107,6 +179,24 @@ macro_rules! log_error {
     };
 }
 
+/// Structured debug event: `log_kv_debug!(Some(t_ms), "event", "k" => v, ...)`.
+/// The level gate wraps the whole call so values are not even formatted
+/// when debug logging is off (hot-path safe).
+#[macro_export]
+macro_rules! log_kv_debug {
+    ($t_ms:expr, $event:expr $(, $k:expr => $v:expr)* $(,)?) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Debug) {
+            $crate::util::logging::log_kv(
+                $crate::util::logging::Level::Debug,
+                module_path!(),
+                $t_ms,
+                $event,
+                &[$(($k, format!("{}", $v))),*],
+            );
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +221,43 @@ mod tests {
         assert_eq!(Level::from_env("DEBUG"), Some(Level::Debug));
         assert_eq!(Level::from_env("warning"), Some(Level::Warn));
         assert_eq!(Level::from_env("nope"), None);
+    }
+
+    #[test]
+    fn kv_text_format_is_splittable() {
+        let line = format_kv(
+            false,
+            Level::Debug,
+            "vta_cluster::sched::online",
+            Some(123.4),
+            "controller_switch",
+            &[("to", "1".to_string()), ("reason", "power cap hit".to_string())],
+        );
+        assert_eq!(
+            line,
+            "[DEBUG] vta_cluster::sched::online @123.400ms controller_switch \
+             to=1 reason=\"power cap hit\""
+        );
+        // no timestamp → no @ field
+        let line = format_kv(false, Level::Info, "m", None, "boot", &[]);
+        assert_eq!(line, "[INFO ] m boot");
+    }
+
+    #[test]
+    fn kv_json_format_is_one_valid_object_per_line() {
+        let line = format_kv(
+            true,
+            Level::Debug,
+            "mod",
+            Some(5.0),
+            "ev",
+            &[("k", "v w".to_string())],
+        );
+        assert!(!line.contains('\n'));
+        let j = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(j.get_str("level").unwrap(), "DEBUG");
+        assert_eq!(j.get_f64("t_ms").unwrap(), 5.0);
+        assert_eq!(j.get_str("event").unwrap(), "ev");
+        assert_eq!(j.get_str("k").unwrap(), "v w");
     }
 }

@@ -17,6 +17,7 @@ use vta_cluster::scenario::{
 };
 use vta_cluster::sched::{build_plan_priced, PlanOption, Strategy};
 use vta_cluster::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
+use vta_cluster::telemetry::{chrome_trace, TelemetryConfig};
 use vta_cluster::util::json::{self, Json};
 
 fn scenarios_dir() -> PathBuf {
@@ -191,6 +192,84 @@ fn simulate_via_session_matches_pre_refactor_numbers_exactly() {
     assert_eq!(row.network_bytes, r.network_bytes);
     assert_eq!(row.offered, des.offered);
     assert_eq!(row.completed, des.completed);
+}
+
+/// Telemetry acceptance (DESIGN.md §13): tracing off and sample-rate 0
+/// leave the emitted report *byte-identical* to the pre-telemetry
+/// output, and full-rate tracing changes nothing except appending the
+/// `telemetry` key.
+#[test]
+fn tracing_changes_nothing_but_the_telemetry_key() {
+    let text = r#"{
+      "model": "lenet5", "strategy": "ai", "nodes": 2, "engine": "des",
+      "arrival": {"kind": "burst", "burst_mult": 4}, "horizon_ms": 3000, "seed": 7
+    }"#;
+    let calib = Calibration::default();
+    let run = |telemetry: TelemetryConfig| {
+        Session::new(ScenarioSpec::parse(text).unwrap())
+            .unwrap()
+            .with_calibration(calib.clone())
+            .fast(false)
+            .with_telemetry(telemetry)
+            .run()
+            .unwrap()
+    };
+    let off = json::pretty(&run(TelemetryConfig::off()).to_json());
+    // rate 0 arms the flag but samples nothing — still byte-identical
+    let zero = json::pretty(&run(TelemetryConfig::on(0.0)).to_json());
+    assert_eq!(off, zero, "sample-rate 0 perturbed the report bytes");
+
+    let traced = run(TelemetryConfig::on(1.0));
+    assert!(!traced.telemetry.is_empty(), "full-rate tracing collected nothing");
+    let mut tj = traced.to_json();
+    if let Json::Obj(fields) = &mut tj {
+        assert_eq!(fields.last().unwrap().0, "telemetry");
+        fields.retain(|(k, _)| k != "telemetry");
+    }
+    assert_eq!(
+        off,
+        json::pretty(&tj),
+        "tracing changed the report beyond the telemetry key"
+    );
+}
+
+/// Both engines drive a DES behind their rows, so `--trace` must yield
+/// queue + compute + net spans from either; reconfig spans appear when
+/// the run actually switched plans.
+#[test]
+fn both_engines_emit_queue_compute_net_spans_when_traced() {
+    let specs = [
+        r#"{"model": "mlp", "strategy": "sg", "nodes": 2, "images": 16, "seed": 3}"#,
+        r#"{"model": "mlp", "strategy": "sg", "nodes": 2, "engine": "des",
+            "horizon_ms": 2000, "seed": 3}"#,
+    ];
+    let calib = Calibration::default();
+    for text in specs {
+        let rep = Session::new(ScenarioSpec::parse(text).unwrap())
+            .unwrap()
+            .with_calibration(calib.clone())
+            .fast(true)
+            .with_telemetry(TelemetryConfig::on(1.0))
+            .run()
+            .unwrap();
+        let engine = rep.rows[0].engine.clone();
+        assert_eq!(rep.telemetry.len(), 1, "{engine}: expected one bundle");
+        assert_eq!(rep.telemetry[0].engine, engine, "bundle engine stamp");
+        assert!(!rep.telemetry[0].traces.is_empty(), "{engine}: no traces");
+        let trace = chrome_trace(&rep.telemetry);
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        let cats: std::collections::BTreeSet<&str> =
+            events.iter().filter_map(|e| e.get_str("cat").ok()).collect();
+        for want in ["compute", "queue", "net"] {
+            assert!(cats.contains(want), "{engine}: no '{want}' spans in {cats:?}");
+        }
+        if rep.rows[0].reconfigs > 0 {
+            assert!(cats.contains("reconfig"), "{engine}: switches left no spans");
+        }
+        // the file CI writes parses back losslessly
+        let textual = trace.to_string_pretty();
+        assert_eq!(Json::parse(&textual).unwrap(), trace);
+    }
 }
 
 /// `--set`-style overrides reach the run: flipping the engine axis of

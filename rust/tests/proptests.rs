@@ -273,6 +273,155 @@ fn prop_json_roundtrip_arbitrary_values() {
 }
 
 #[test]
+fn prop_hdr_percentiles_match_summary_within_one_percent() {
+    // the telemetry histogram's log-linear buckets guarantee ≤ 1/256
+    // midpoint error (DESIGN.md §13); cross-check against the exact
+    // store-every-sample Summary on random workloads
+    use vta_cluster::telemetry::HdrHist;
+    use vta_cluster::util::stats::Summary;
+    forall("hdr pins summary", 20, |rng| {
+        let n = rng.range(2000, 5000);
+        let lo = rng.range(1_000, 50_000) as u64;
+        let hi = lo + rng.range(100_000, 20_000_000) as u64;
+        let mut h = HdrHist::new();
+        let mut s = Summary::new();
+        for _ in 0..n {
+            let v = lo + (rng.f64() * (hi - lo) as f64) as u64;
+            h.record(v);
+            s.push(v as f64);
+        }
+        for q in [50.0, 95.0, 99.0] {
+            let exact = s.percentile(q).ok_or("summary empty")?;
+            let approx = h.percentile(q).ok_or("hist empty")? as f64;
+            let rel = (approx - exact).abs() / exact;
+            prop_assert!(
+                rel <= 0.01,
+                "p{q}: hdr {approx} vs exact {exact} (rel {rel:.4}, range {lo}..{hi})"
+            );
+        }
+        prop_assert!(h.count() == n as u64, "lost samples");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_traced_des_spans_conserve_time_exactly() {
+    // every sampled request's span tree must account for its end-to-end
+    // latency to the nanosecond: stages chain gaplessly and each stage's
+    // net + queue + compute spans cover it exactly (DESIGN.md §13)
+    use vta_cluster::telemetry::TelemetryConfig;
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::default(),
+    );
+    let graphs: Vec<_> =
+        zoo::names().iter().map(|m| zoo::build(m, 0).unwrap()).collect();
+    forall("span trees conserve time", 5, |rng| {
+        let g = rng.choice(&graphs);
+        let strategy = *rng.choice(&Strategy::all());
+        let n = rng.range(1, 5);
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+        let opts = plan_options(g, &cluster, &mut cost, &[strategy])
+            .map_err(|e| e.to_string())?;
+        let cap = opts[0].capacity_img_per_sec;
+        let horizon_ms = (150.0 / cap * 1e3).max(20.0 * opts[0].latency_ms);
+        let mut cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 0.7 * cap },
+            horizon_ms,
+            rng.next_u64(),
+        );
+        cfg.telemetry = TelemetryConfig::on(1.0);
+        let r = run_des(&opts, 0, &cluster, &mut cost, g, &cfg, None)
+            .map_err(|e| e.to_string())?;
+        let tel = r.telemetry.ok_or("tracing on but no telemetry")?;
+        let mut finished = 0u64;
+        for t in &tel.traces {
+            let Some(done) = t.done_ns else { continue };
+            finished += 1;
+            let mut cursor = t.admitted_ns;
+            let mut total = 0u64;
+            for s in &t.stages {
+                prop_assert!(
+                    s.start_ns == cursor,
+                    "img {}: stage gap at {} (expected {cursor})",
+                    t.img,
+                    s.start_ns
+                );
+                prop_assert!(
+                    s.net_ns + s.queue_ns + s.compute_ns == s.end_ns - s.start_ns,
+                    "img {}: stage spans don't cover the stage",
+                    t.img
+                );
+                total += s.net_ns + s.queue_ns + s.compute_ns;
+                cursor = s.end_ns;
+            }
+            prop_assert!(
+                cursor == done && total == done - t.admitted_ns,
+                "img {}: spans sum to {total}, latency {}",
+                t.img,
+                done - t.admitted_ns
+            );
+        }
+        prop_assert!(finished > 0, "{} {strategy} n={n}: no finished traces", g.model);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tracing_never_changes_the_simulation() {
+    // zero-cost-when-on too: the tracer observes, never perturbs — the
+    // traced run's numbers are bit-identical to the untraced run's
+    use vta_cluster::telemetry::TelemetryConfig;
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::default(),
+    );
+    let graphs: Vec<_> =
+        zoo::names().iter().map(|m| zoo::build(m, 0).unwrap()).collect();
+    forall("tracing is pure observation", 5, |rng| {
+        let g = rng.choice(&graphs);
+        let strategy = *rng.choice(&Strategy::all());
+        let n = rng.range(1, 5);
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+        let opts = plan_options(g, &cluster, &mut cost, &[strategy])
+            .map_err(|e| e.to_string())?;
+        let cap = opts[0].capacity_img_per_sec;
+        let horizon_ms = (150.0 / cap * 1e3).max(20.0 * opts[0].latency_ms);
+        let seed = rng.next_u64();
+        let rate = rng.choice(&[0.25, 1.0]);
+        let mut run = |telemetry: TelemetryConfig| {
+            let mut cfg = DesConfig::new(
+                ArrivalProcess::Poisson { rate_per_sec: 0.7 * cap },
+                horizon_ms,
+                seed,
+            );
+            cfg.telemetry = telemetry;
+            run_des(&opts, 0, &cluster, &mut cost, g, &cfg, None)
+                .map_err(|e| e.to_string())
+        };
+        let base = run(TelemetryConfig::off())?;
+        let traced = run(TelemetryConfig::on(*rate))?;
+        prop_assert!(base.telemetry.is_none(), "telemetry off still collected");
+        prop_assert!(traced.telemetry.is_some(), "telemetry on collected nothing");
+        prop_assert!(base.offered == traced.offered, "offered diverged");
+        prop_assert!(base.completed == traced.completed, "completed diverged");
+        prop_assert!(base.network_bytes == traced.network_bytes, "bytes diverged");
+        prop_assert!(
+            base.events_processed == traced.events_processed,
+            "event count diverged"
+        );
+        prop_assert!(
+            base.latency_ms.p99() == traced.latency_ms.p99()
+                && base.power.j_per_image == traced.power.j_per_image,
+            "measured numbers diverged under tracing"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_partition_contiguity_and_coverage() {
     use vta_cluster::graph::partition::partition_balanced;
     let g = build_resnet18(224).unwrap();
