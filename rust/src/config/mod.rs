@@ -16,5 +16,5 @@ pub mod vta;
 pub use board::{BoardFamily, BoardProfile};
 pub use calibration::Calibration;
 pub use cluster::ClusterConfig;
-pub use reconfig::ReconfigCost;
+pub use reconfig::{ReconfigCost, ReconfigTier};
 pub use vta::VtaConfig;

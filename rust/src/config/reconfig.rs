@@ -13,11 +13,52 @@
 //! Constants are modeled, not fitted: a Zynq-7020 full bitstream is
 //! ~4 MiB and PCAP sustains ~128 MB/s (≈32 ms), plus driver re-init and
 //! first-launch instruction-stream setup. ZU+ bitstreams are an order of
-//! magnitude larger but the configuration port is faster. Partial
-//! reconfiguration would shrink the load phase; we charge the full-image
-//! cost as the conservative bound.
+//! magnitude larger but the configuration port is faster.
+//!
+//! Two tiers are modeled (DESIGN.md §14). [`ReconfigTier::Full`] charges
+//! the whole-image cost — the conservative bound, and the only option
+//! when a node rejoins after a crash (its PL state is gone). A floorplan
+//! that confines the plan-dependent logic to a reconfigurable partition
+//! unlocks [`ReconfigTier::Partial`]: the partial bitstream is ~5% of
+//! the image and the static region (DMA, NoC, driver state) survives, so
+//! a plan switch costs a couple of milliseconds instead of tens — which
+//! shifts every drain-time break-even the online controller computes.
 
 use super::board::BoardFamily;
+
+/// Which reconfiguration path a plan switch takes (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReconfigTier {
+    /// Whole-image reload over PCAP/CSU-DMA + full driver re-init.
+    #[default]
+    Full,
+    /// Partial bitstream into a reconfigurable partition; static region
+    /// keeps running, only the swapped partition re-warms.
+    Partial,
+}
+
+impl ReconfigTier {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReconfigTier::Full => "full",
+            ReconfigTier::Partial => "partial",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" => Ok(ReconfigTier::Full),
+            "partial" | "pr" | "dfx" => Ok(ReconfigTier::Partial),
+            other => anyhow::bail!("unknown reconfig tier '{other}' (want full|partial)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ReconfigTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// Downtime charged when a node switches execution plans.
 #[derive(Debug, Clone, PartialEq)]
@@ -46,10 +87,33 @@ impl ReconfigCost {
         ReconfigCost { bitstream_load_ms: 90.0, warmup_ms: 15.0 }
     }
 
+    /// Zynq-7020 partial tier: ~200 KiB partial bitstream over PCAP plus
+    /// partition-only warm-up (static region and driver survive).
+    pub fn zynq7020_partial() -> Self {
+        ReconfigCost { bitstream_load_ms: 1.6, warmup_ms: 0.6 }
+    }
+
+    /// ZU+ MPSoC partial tier: larger partition image, faster CSU DMA.
+    pub fn zu_mpsoc_partial() -> Self {
+        ReconfigCost { bitstream_load_ms: 2.8, warmup_ms: 0.9 }
+    }
+
     pub fn for_family(family: BoardFamily) -> Self {
         match family {
             BoardFamily::Zynq7000 => Self::zynq7020(),
             BoardFamily::UltraScalePlus => Self::zu_mpsoc(),
+        }
+    }
+
+    /// Tier-aware dispatch: the cost the online controller charges per
+    /// plan switch. Crash-rejoin re-flash always pays the full tier
+    /// (see [`crate::sim::faults`]) regardless of this selection.
+    pub fn for_family_tier(family: BoardFamily, tier: ReconfigTier) -> Self {
+        match (family, tier) {
+            (BoardFamily::Zynq7000, ReconfigTier::Full) => Self::zynq7020(),
+            (BoardFamily::UltraScalePlus, ReconfigTier::Full) => Self::zu_mpsoc(),
+            (BoardFamily::Zynq7000, ReconfigTier::Partial) => Self::zynq7020_partial(),
+            (BoardFamily::UltraScalePlus, ReconfigTier::Partial) => Self::zu_mpsoc_partial(),
         }
     }
 
@@ -92,6 +156,33 @@ mod tests {
             ReconfigCost::for_family(BoardFamily::UltraScalePlus),
             ReconfigCost::zu_mpsoc()
         );
+    }
+
+    #[test]
+    fn tier_dispatch_and_partial_strictly_cheaper() {
+        for fam in [BoardFamily::Zynq7000, BoardFamily::UltraScalePlus] {
+            let full = ReconfigCost::for_family_tier(fam, ReconfigTier::Full);
+            let partial = ReconfigCost::for_family_tier(fam, ReconfigTier::Partial);
+            assert_eq!(full, ReconfigCost::for_family(fam));
+            partial.validate().unwrap();
+            // "orders of magnitude": partial is at least 10x cheaper
+            assert!(
+                partial.downtime_ms() * 10.0 <= full.downtime_ms(),
+                "{fam:?}: partial {} vs full {}",
+                partial.downtime_ms(),
+                full.downtime_ms()
+            );
+        }
+    }
+
+    #[test]
+    fn tier_parse_roundtrip() {
+        for t in [ReconfigTier::Full, ReconfigTier::Partial] {
+            assert_eq!(ReconfigTier::parse(t.as_str()).unwrap(), t);
+        }
+        assert_eq!(ReconfigTier::parse("dfx").unwrap(), ReconfigTier::Partial);
+        assert_eq!(ReconfigTier::default(), ReconfigTier::Full);
+        assert!(ReconfigTier::parse("half").is_err());
     }
 
     #[test]

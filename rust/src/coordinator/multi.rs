@@ -269,6 +269,7 @@ pub fn simulate_tenants(
             latency_ms: sim.latency_ms.mean(),
             avg_power_w: sim.power.cluster_avg_w,
             j_per_image: sim.power.j_per_image,
+            node_map: None,
         };
         let rate = 0.7 * capacity;
         let target_images = req.images.max(32) as f64;

@@ -691,6 +691,7 @@ fn load_cmd(a: LoadArgs) -> anyhow::Result<()> {
     spec.controller = vta_cluster::scenario::ControllerSpec {
         enabled: a.controller,
         power_budget_w: a.power_budget_w,
+        ..Default::default()
     };
     println!(
         "load: {} on {}× {} nodes — {} arrivals{}, horizon {:.1} s, seed {}",

@@ -29,7 +29,8 @@ pub mod sweep;
 pub use report::{EventRow, Report, ReportRow};
 pub use session::{CostCache, Session};
 pub use spec::{
-    ArrivalSpec, BoardGroup, ControllerSpec, Engine, ScenarioSpec, StageSpec, TenantEntry,
+    ArrivalSpec, BoardGroup, ControllerSpec, CrashSpec, Engine, FaultsSpec, ScenarioSpec,
+    StageSpec, TenantEntry,
 };
 pub use sweep::{apply_overrides, parse_override, set_path, Sweep};
 

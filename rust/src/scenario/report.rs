@@ -79,12 +79,26 @@ pub struct ReportRow {
     /// With `slo_ms > 0`: unloaded latency (analytic) / p99 (DES) under
     /// the SLO. Always true when no SLO is set.
     pub meets_slo: bool,
+    /// Fraction of node-time the cluster was up over the horizon
+    /// (DESIGN.md §14). `1.0` for analytic rows and fault-free DES runs.
+    pub availability: f64,
+    /// Fraction of completed requests whose end-to-end latency met the
+    /// SLO. NaN (JSON `null`) when no SLO is set or nothing completed;
+    /// `1.0` trivially when `slo_ms == 0` is treated as "no SLO".
+    pub slo_attainment: f64,
+    /// Recovery-time percentiles across node rejoins (outage + re-flash),
+    /// ms. NaN (JSON `null`) when no rejoin happened in the horizon.
+    pub recovery_p50_ms: f64,
+    pub recovery_p99_ms: f64,
+    /// Control windows that completed zero requests while work was in
+    /// flight — the explicit outage signal (never silently zero stats).
+    pub stalled_windows: u64,
 }
 
 impl ReportRow {
     /// The row schema, in emit order — the contract the scenario CI
     /// suite snapshot-checks.
-    pub const ROW_KEYS: [&'static str; 26] = [
+    pub const ROW_KEYS: [&'static str; 31] = [
         "label",
         "engine",
         "model",
@@ -111,6 +125,11 @@ impl ReportRow {
         "node_watts",
         "dominated",
         "meets_slo",
+        "availability",
+        "slo_attainment",
+        "recovery_p50_ms",
+        "recovery_p99_ms",
+        "stalled_windows",
     ];
 
     pub fn to_json(&self) -> Json {
@@ -147,6 +166,11 @@ impl ReportRow {
             ),
             ("dominated", Json::Bool(self.dominated)),
             ("meets_slo", Json::Bool(self.meets_slo)),
+            ("availability", fnum(self.availability)),
+            ("slo_attainment", fnum(self.slo_attainment)),
+            ("recovery_p50_ms", fnum(self.recovery_p50_ms)),
+            ("recovery_p99_ms", fnum(self.recovery_p99_ms)),
+            ("stalled_windows", json::int(self.stalled_windows as i64)),
         ])
     }
 
@@ -364,6 +388,11 @@ mod tests {
             node_watts: vec![3.1, 3.0],
             dominated: false,
             meets_slo: true,
+            availability: 1.0,
+            slo_attainment: f64::NAN,
+            recovery_p50_ms: f64::NAN,
+            recovery_p99_ms: f64::NAN,
+            stalled_windows: 0,
         }
     }
 
@@ -415,6 +444,12 @@ mod tests {
         let row0 = &back.get("rows").unwrap().as_arr().unwrap()[0];
         assert_eq!(row0.get("p50_ms"), Some(&Json::Null));
         assert_eq!(row0.get("p99_ms"), Some(&Json::Null));
+        // unmeasured chaos columns are explicit nulls, not fake zeros
+        assert_eq!(row0.get("slo_attainment"), Some(&Json::Null));
+        assert_eq!(row0.get("recovery_p50_ms"), Some(&Json::Null));
+        assert_eq!(row0.get("recovery_p99_ms"), Some(&Json::Null));
+        assert_eq!(row0.get_f64("availability").unwrap(), 1.0);
+        assert_eq!(row0.get_i64("stalled_windows").unwrap(), 0);
     }
 
     #[test]

@@ -27,12 +27,14 @@ use crate::graph::{zoo, Graph};
 use crate::power::eco_plan;
 use crate::runtime::artifacts_dir;
 use crate::sched::{
-    build_plan_priced, plan_options, ControllerConfig, ExecutionPlan, OnlineController,
-    PlanOption, Strategy,
+    build_plan_priced, plan_options, survivor_options, ControllerConfig, ExecutionPlan,
+    OnlineController, PlanOption, Strategy,
 };
 use crate::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
 use crate::telemetry::{RunTelemetry, TelemetryConfig};
 use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::units::ns_to_ms;
 use std::collections::HashMap;
 
 /// Memoized per-family cost models, shared across the cells of a sweep
@@ -309,6 +311,11 @@ impl Session {
                 dominated: false,
                 meets_slo: spec.slo_ms == 0.0
                     || t.sim.latency_ms.mean() <= spec.slo_ms,
+                availability: 1.0,
+                slo_attainment: slo_attainment(&t.loaded.latency_ms, spec.slo_ms),
+                recovery_p50_ms: f64::NAN,
+                recovery_p99_ms: f64::NAN,
+                stalled_windows: 0,
             };
             row.set_percentiles(&t.loaded.latency_ms);
             report.rows.push(row);
@@ -419,6 +426,7 @@ impl Session {
         let capacity = 1e3 / sim.ms_per_image;
         let option = PlanOption {
             plan,
+            node_map: None,
             capacity_img_per_sec: capacity,
             latency_ms: sim.latency_ms.mean(),
             avg_power_w: sim.power.cluster_avg_w,
@@ -462,6 +470,11 @@ impl Session {
             node_watts: sim.power.node_watts.clone(),
             dominated: false,
             meets_slo,
+            availability: 1.0,
+            slo_attainment: slo_attainment(&des.latency_ms, spec.slo_ms),
+            recovery_p50_ms: f64::NAN,
+            recovery_p99_ms: f64::NAN,
+            stalled_windows: 0,
         };
         row.set_percentiles(&des.latency_ms);
         Ok((row, des.telemetry.take()))
@@ -501,6 +514,7 @@ impl Session {
                 avg_power_w: sim.power.cluster_avg_w,
                 j_per_image: sim.power.j_per_image,
                 plan,
+                node_map: None,
             });
             options.len() - 1
         } else {
@@ -512,10 +526,29 @@ impl Session {
         let strategy = options[initial].plan.strategy.to_string();
         let cap0 = options[initial].capacity_img_per_sec;
 
+        // with faults + controller, give the controller somewhere to run
+        // to: the best surviving-node candidate per possible casualty
+        // (DESIGN.md §14) — appended after `initial` so indices hold
+        if !spec.faults.is_off() && spec.controller.enabled && group.n >= 2 {
+            for dead in 0..group.n {
+                let sopts = survivor_options(&g, &cluster, cost, &Strategy::all(), dead)?;
+                if let Some(best) = sopts.into_iter().max_by(|a, b| {
+                    a.capacity_img_per_sec.total_cmp(&b.capacity_img_per_sec)
+                }) {
+                    options.push(best);
+                }
+            }
+        }
+
         let rate = rate_override.unwrap_or_else(|| effective_rate(&spec.arrival, cap0));
         let arrival = ArrivalProcess::parse(&spec.arrival.kind, rate, spec.arrival.burst_mult)?;
         let mut cfg = DesConfig::new(arrival, spec.horizon_ms, seed);
         cfg.telemetry = self.telemetry;
+        if !spec.faults.is_off() {
+            // the rejoin re-flash is always a full-tier cost: a crash
+            // loses the PL image regardless of the controller's tier
+            cfg.faults = spec.faults.to_config(ReconfigCost::for_family(group.family));
+        }
         let mut controller = if spec.controller.enabled {
             let budget = spec.controller.power_budget_w;
             Some(OnlineController::new(
@@ -523,7 +556,7 @@ impl Session {
                     power_budget_w: (budget > 0.0).then_some(budget),
                     ..Default::default()
                 },
-                ReconfigCost::for_family(group.family),
+                ReconfigCost::for_family_tier(group.family, spec.controller.reconfig_tier),
             )?)
         } else {
             None
@@ -558,9 +591,14 @@ impl Session {
             node_watts: r.power.node_avg_w.clone(),
             dominated: false,
             meets_slo: spec.slo_ms == 0.0 || (p99.is_finite() && p99 <= spec.slo_ms),
+            availability: r.availability,
+            slo_attainment: slo_attainment(&r.latency_ms, spec.slo_ms),
+            recovery_p50_ms: r.recovery_ms.p50(),
+            recovery_p99_ms: r.recovery_ms.p99(),
+            stalled_windows: r.stalled_windows,
         };
         row.set_percentiles(&r.latency_ms);
-        let events: Vec<EventRow> = r
+        let mut events: Vec<EventRow> = r
             .reconfigs
             .iter()
             .map(|e| EventRow {
@@ -572,6 +610,20 @@ impl Session {
                 reason: e.reason.clone(),
             })
             .collect();
+        // crash/rejoin outages ride the same event stream, tagged by
+        // their reason so downstream diffing can filter them out
+        events.extend(r.faults.iter().map(|o| {
+            let outage_ms = ns_to_ms(o.end_ns - o.start_ns);
+            EventRow {
+                label: row.label.clone(),
+                at_ms: ns_to_ms(o.start_ns),
+                from_strategy: row.strategy.clone(),
+                to_strategy: row.strategy.clone(),
+                downtime_ms: outage_ms,
+                reason: format!("node {} crash ({outage_ms:.1} ms outage + re-flash)", o.node),
+            }
+        }));
+        events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
         let telemetry = r.telemetry.take();
         Ok((row, events, r.queue_timeline, telemetry))
     }
@@ -590,6 +642,17 @@ fn cluster_for(group: BoardGroup) -> anyhow::Result<ClusterConfig> {
     let cluster = ClusterConfig::homogeneous(group.family, group.n).with_vta(vta);
     cluster.validate()?;
     Ok(cluster)
+}
+
+/// SLO attainment of a completed-latency summary: the fraction of
+/// completions at or under the SLO, NaN (emitted as JSON `null`) when no
+/// SLO is set or nothing completed — an outage must read as "unmeasured",
+/// never as a silent perfect score (DESIGN.md §14).
+fn slo_attainment(latency: &Summary, slo_ms: f64) -> f64 {
+    if slo_ms <= 0.0 {
+        return f64::NAN;
+    }
+    latency.fraction_at_or_below(slo_ms).unwrap_or(f64::NAN)
 }
 
 /// Auto arrival rate from plan capacity: 70 % load, or 55 % for burst so
@@ -792,10 +855,61 @@ mod tests {
     }
 
     #[test]
+    fn chaos_spec_fills_the_new_columns_and_logs_the_crash() {
+        let text = r#"{
+          "model": "lenet5", "strategy": "pipeline", "nodes": 2, "engine": "des",
+          "horizon_ms": 4000, "seed": 13, "slo_ms": 50,
+          "controller": {"enabled": false},
+          "faults": {"crashes": [{"node": 1, "at_ms": 1000, "down_ms": 500}]}
+        }"#;
+        let rep = session(text).run().unwrap();
+        let row = &rep.rows[0];
+        assert!(row.availability < 1.0 && row.availability > 0.5, "{}", row.availability);
+        assert!(row.recovery_p50_ms.is_finite() && row.recovery_p50_ms > 500.0);
+        assert!(
+            row.slo_attainment.is_finite()
+                && row.slo_attainment >= 0.0
+                && row.slo_attainment <= 1.0
+        );
+        let crash_events: Vec<_> =
+            rep.events.iter().filter(|e| e.reason.contains("crash")).collect();
+        assert_eq!(crash_events.len(), 1);
+        assert!((crash_events[0].at_ms - 1000.0).abs() < 1e-6);
+        // same seed ⇒ byte-identical report
+        let again = session(text).run().unwrap();
+        assert_eq!(
+            crate::util::json::pretty(&rep.to_json()),
+            crate::util::json::pretty(&again.to_json())
+        );
+    }
+
+    #[test]
+    fn fault_free_faults_block_is_byte_identical_to_no_block() {
+        let with = r#"{
+          "model": "lenet5", "strategy": "ai", "nodes": 2, "engine": "des",
+          "horizon_ms": 3000, "seed": 7, "faults": {}
+        }"#;
+        let without = r#"{
+          "model": "lenet5", "strategy": "ai", "nodes": 2, "engine": "des",
+          "horizon_ms": 3000, "seed": 7
+        }"#;
+        let a = session(with).run().unwrap();
+        let b = session(without).run().unwrap();
+        assert_eq!(
+            crate::util::json::pretty(&a.to_json()),
+            crate::util::json::pretty(&b.to_json())
+        );
+    }
+
+    #[test]
     fn power_budget_flows_into_the_controller() {
         // structural check: a capped DES spec runs and keeps schema
         let spec = ScenarioSpec {
-            controller: ControllerSpec { enabled: true, power_budget_w: 9.0 },
+            controller: ControllerSpec {
+                enabled: true,
+                power_budget_w: 9.0,
+                ..Default::default()
+            },
             ..ScenarioSpec::parse(
                 r#"{"model": "mlp", "engine": "des", "nodes": 2,
                     "arrival": {"kind": "burst", "burst_mult": 4},

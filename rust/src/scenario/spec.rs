@@ -16,9 +16,11 @@
 //! copy-pasteable; [`ScenarioSpec::to_json`] always emits the canonical
 //! long form, and `parse(pretty(to_json())) == to_json()` exactly.
 
-use crate::config::BoardFamily;
+use crate::config::reconfig::ReconfigCost;
+use crate::config::{BoardFamily, ReconfigTier};
 use crate::graph::{zoo, Graph};
 use crate::sched::{ExecutionPlan, SplitMode, StagePlan, Strategy};
+use crate::sim::faults::{FaultsConfig, ScriptedCrash};
 use crate::util::json::{self, Json};
 
 /// Which simulator prices the scenario.
@@ -109,11 +111,95 @@ pub struct ControllerSpec {
     pub enabled: bool,
     /// Cluster watts cap; `0` = uncapped.
     pub power_budget_w: f64,
+    /// Reconfiguration tier the controller's switches are charged at
+    /// (DESIGN.md §14): `full` reloads the whole bitstream, `partial`
+    /// swaps only the VTA region — orders-of-magnitude cheaper downtime,
+    /// which shifts the drain-time break-even toward switching.
+    pub reconfig_tier: ReconfigTier,
 }
 
 impl Default for ControllerSpec {
     fn default() -> Self {
-        ControllerSpec { enabled: true, power_budget_w: 0.0 }
+        ControllerSpec {
+            enabled: true,
+            power_budget_w: 0.0,
+            reconfig_tier: ReconfigTier::Full,
+        }
+    }
+}
+
+/// One scripted crash in a [`FaultsSpec`]: "node `node` dies at `at_ms`
+/// for `down_ms`" (re-flash added on top by the simulator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrashSpec {
+    pub node: usize,
+    pub at_ms: f64,
+    pub down_ms: f64,
+}
+
+/// Declarative fault-injection block (DESIGN.md §14). The default is
+/// fully off, and an all-default block is semantically identical to no
+/// block at all — the property test pins byte-identical reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsSpec {
+    /// Mean up-time between random crashes per node, ms; `0` = off.
+    pub crash_mean_up_ms: f64,
+    /// Mean outage length per random crash, ms.
+    pub crash_mean_down_ms: f64,
+    /// Scripted crashes, merged with the random process.
+    pub crashes: Vec<CrashSpec>,
+    /// Straggler node count (persistent compute slowdown).
+    pub stragglers: usize,
+    /// Straggler compute multiplier (≥ 1).
+    pub straggler_factor: f64,
+    /// Degraded switch-port count (persistent wire-time slowdown).
+    pub degraded_ports: usize,
+    /// Degraded-port wire-time multiplier (≥ 1).
+    pub port_factor: f64,
+}
+
+impl Default for FaultsSpec {
+    fn default() -> Self {
+        FaultsSpec {
+            crash_mean_up_ms: 0.0,
+            crash_mean_down_ms: 0.0,
+            crashes: Vec::new(),
+            stragglers: 0,
+            straggler_factor: 1.0,
+            degraded_ports: 0,
+            port_factor: 1.0,
+        }
+    }
+}
+
+impl FaultsSpec {
+    /// No fault process active — the zero-cost default.
+    pub fn is_off(&self) -> bool {
+        self.crash_mean_up_ms == 0.0
+            && self.crashes.is_empty()
+            && self.stragglers == 0
+            && self.degraded_ports == 0
+    }
+
+    /// Resolve into the simulator's [`FaultsConfig`]. `reflash` is the
+    /// rejoin re-flash cost — always a *full*-tier cost for the board
+    /// family (a crash loses the PL image, whatever tier the controller
+    /// switches at).
+    pub fn to_config(&self, reflash: ReconfigCost) -> FaultsConfig {
+        FaultsConfig {
+            crash_mean_up_ms: self.crash_mean_up_ms,
+            crash_mean_down_ms: self.crash_mean_down_ms,
+            scripted: self
+                .crashes
+                .iter()
+                .map(|c| ScriptedCrash { node: c.node, at_ms: c.at_ms, down_ms: c.down_ms })
+                .collect(),
+            stragglers: self.stragglers,
+            straggler_factor: self.straggler_factor,
+            degraded_ports: self.degraded_ports,
+            port_factor: self.port_factor,
+            reflash,
+        }
     }
 }
 
@@ -129,6 +215,8 @@ pub struct ScenarioSpec {
     pub boards: Vec<BoardGroup>,
     pub arrival: ArrivalSpec,
     pub controller: ControllerSpec,
+    /// Fault injection (DESIGN.md §14); defaults to fully off.
+    pub faults: FaultsSpec,
     /// Latency SLO, ms; `0` = none. Checked against unloaded latency
     /// (analytic) or p99 (DES); also the eco strategy's constraint.
     pub slo_ms: f64,
@@ -154,6 +242,7 @@ impl ScenarioSpec {
             boards: vec![BoardGroup { family, n }],
             arrival: ArrivalSpec::default(),
             controller: ControllerSpec::default(),
+            faults: FaultsSpec::default(),
             slo_ms: 0.0,
             horizon_ms: 20_000.0,
         }
@@ -225,6 +314,49 @@ impl ScenarioSpec {
                  (a static plan cannot shed watts)"
             );
         }
+        let f = &self.faults;
+        if !f.is_off() {
+            anyhow::ensure!(
+                self.engine == Engine::Des,
+                "fault injection needs the des engine \
+                 (the analytic model has no timeline to crash on)"
+            );
+        }
+        anyhow::ensure!(
+            f.crash_mean_up_ms >= 0.0 && f.crash_mean_up_ms.is_finite(),
+            "faults.crash_mean_up_ms must be ≥ 0 (0 = no random crashes)"
+        );
+        if f.crash_mean_up_ms > 0.0 {
+            anyhow::ensure!(
+                f.crash_mean_down_ms > 0.0 && f.crash_mean_down_ms.is_finite(),
+                "faults.crash_mean_down_ms must be > 0 when random crashes are on"
+            );
+        }
+        for (i, c) in f.crashes.iter().enumerate() {
+            anyhow::ensure!(
+                c.at_ms >= 0.0 && c.at_ms.is_finite() && c.down_ms > 0.0 && c.down_ms.is_finite(),
+                "faults.crashes[{i}]: at_ms must be ≥ 0 and down_ms > 0"
+            );
+            let total: usize = self.boards.iter().map(|b| b.n).sum();
+            anyhow::ensure!(
+                c.node < total,
+                "faults.crashes[{i}]: node {} out of range (cluster has {} nodes)",
+                c.node,
+                total
+            );
+        }
+        if f.stragglers > 0 {
+            anyhow::ensure!(
+                f.straggler_factor >= 1.0 && f.straggler_factor.is_finite(),
+                "faults.straggler_factor must be ≥ 1"
+            );
+        }
+        if f.degraded_ports > 0 {
+            anyhow::ensure!(
+                f.port_factor >= 1.0 && f.port_factor.is_finite(),
+                "faults.port_factor must be ≥ 1"
+            );
+        }
         Ok(())
     }
 
@@ -267,8 +399,8 @@ impl ScenarioSpec {
             "scenario",
             &[
                 "name", "engine", "seed", "tenants", "boards", "arrival", "controller",
-                "slo_ms", "horizon_ms", "sweep", "model", "strategy", "images",
-                "input_hw", "plan", "family", "nodes",
+                "faults", "slo_ms", "horizon_ms", "sweep", "model", "strategy",
+                "images", "input_hw", "plan", "family", "nodes",
             ],
         )?;
         // a sweep is a *grid over* specs, not a spec field: parsing one
@@ -370,7 +502,7 @@ impl ScenarioSpec {
         };
         let controller = match doc.get("controller") {
             Some(c) => {
-                check_keys(c, "controller", &["enabled", "power_budget_w"])?;
+                check_keys(c, "controller", &["enabled", "power_budget_w", "reconfig_tier"])?;
                 ControllerSpec {
                     enabled: match c.get("enabled") {
                         Some(v) => v.as_bool()?,
@@ -380,9 +512,68 @@ impl ScenarioSpec {
                         Some(v) => v.as_f64()?,
                         None => 0.0,
                     },
+                    reconfig_tier: match c.get("reconfig_tier") {
+                        Some(v) => ReconfigTier::parse(v.as_str()?)?,
+                        None => ReconfigTier::Full,
+                    },
                 }
             }
             None => ControllerSpec::default(),
+        };
+        let faults = match doc.get("faults") {
+            Some(f) => {
+                check_keys(
+                    f,
+                    "faults",
+                    &[
+                        "crash_mean_up_ms", "crash_mean_down_ms", "crashes", "stragglers",
+                        "straggler_factor", "degraded_ports", "port_factor",
+                    ],
+                )?;
+                let crashes = match f.get("crashes") {
+                    Some(list) => list
+                        .as_arr()?
+                        .iter()
+                        .map(|c| {
+                            check_keys(c, "crash", &["node", "at_ms", "down_ms"])?;
+                            Ok(CrashSpec {
+                                node: c.req("node")?.as_usize()?,
+                                at_ms: c.req("at_ms")?.as_f64()?,
+                                down_ms: c.req("down_ms")?.as_f64()?,
+                            })
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()?,
+                    None => Vec::new(),
+                };
+                FaultsSpec {
+                    crash_mean_up_ms: match f.get("crash_mean_up_ms") {
+                        Some(v) => v.as_f64()?,
+                        None => 0.0,
+                    },
+                    crash_mean_down_ms: match f.get("crash_mean_down_ms") {
+                        Some(v) => v.as_f64()?,
+                        None => 0.0,
+                    },
+                    crashes,
+                    stragglers: match f.get("stragglers") {
+                        Some(v) => v.as_usize()?,
+                        None => 0,
+                    },
+                    straggler_factor: match f.get("straggler_factor") {
+                        Some(v) => v.as_f64()?,
+                        None => 1.0,
+                    },
+                    degraded_ports: match f.get("degraded_ports") {
+                        Some(v) => v.as_usize()?,
+                        None => 0,
+                    },
+                    port_factor: match f.get("port_factor") {
+                        Some(v) => v.as_f64()?,
+                        None => 1.0,
+                    },
+                }
+            }
+            None => FaultsSpec::default(),
         };
         let slo_ms = match doc.get("slo_ms") {
             Some(v) => v.as_f64()?,
@@ -401,6 +592,7 @@ impl ScenarioSpec {
             boards,
             arrival,
             controller,
+            faults,
             slo_ms,
             horizon_ms,
         };
@@ -545,6 +737,34 @@ impl ScenarioSpec {
                 json::obj(vec![
                     ("enabled", Json::Bool(self.controller.enabled)),
                     ("power_budget_w", json::num(self.controller.power_budget_w)),
+                    ("reconfig_tier", json::str_(self.controller.reconfig_tier.as_str())),
+                ]),
+            ),
+            (
+                "faults",
+                json::obj(vec![
+                    ("crash_mean_up_ms", json::num(self.faults.crash_mean_up_ms)),
+                    ("crash_mean_down_ms", json::num(self.faults.crash_mean_down_ms)),
+                    (
+                        "crashes",
+                        Json::Arr(
+                            self.faults
+                                .crashes
+                                .iter()
+                                .map(|c| {
+                                    json::obj(vec![
+                                        ("node", json::int(c.node as i64)),
+                                        ("at_ms", json::num(c.at_ms)),
+                                        ("down_ms", json::num(c.down_ms)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("stragglers", json::int(self.faults.stragglers as i64)),
+                    ("straggler_factor", json::num(self.faults.straggler_factor)),
+                    ("degraded_ports", json::int(self.faults.degraded_ports as i64)),
+                    ("port_factor", json::num(self.faults.port_factor)),
                 ]),
             ),
             ("slo_ms", json::num(self.slo_ms)),
@@ -605,7 +825,20 @@ mod tests {
         );
         spec.engine = Engine::Des;
         spec.arrival = ArrivalSpec { kind: "burst".into(), rate: 120.5, burst_mult: 3.0 };
-        spec.controller = ControllerSpec { enabled: true, power_budget_w: 30.0 };
+        spec.controller = ControllerSpec {
+            enabled: true,
+            power_budget_w: 30.0,
+            reconfig_tier: ReconfigTier::Partial,
+        };
+        spec.faults = FaultsSpec {
+            crash_mean_up_ms: 4_000.0,
+            crash_mean_down_ms: 400.0,
+            crashes: vec![CrashSpec { node: 1, at_ms: 500.0, down_ms: 250.0 }],
+            stragglers: 1,
+            straggler_factor: 3.0,
+            degraded_ports: 1,
+            port_factor: 8.0,
+        };
         spec.slo_ms = 45.0;
         let j = spec.to_json();
         let back = ScenarioSpec::from_json(&j).unwrap();
@@ -687,6 +920,34 @@ mod tests {
                 "controller": {"enabled": false, "power_budget_w": 10}}"#
         )
         .is_err());
+        // faults on the analytic engine (no timeline to crash on)
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "faults": {"stragglers": 1, "straggler_factor": 2.0}}"#
+        )
+        .is_err());
+        // scripted crash out of node range
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des", "nodes": 2,
+                "faults": {"crashes": [{"node": 5, "at_ms": 100, "down_ms": 50}]}}"#
+        )
+        .is_err());
+        // random crashes need a positive mean outage
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des",
+                "faults": {"crash_mean_up_ms": 1000, "crash_mean_down_ms": 0}}"#
+        )
+        .is_err());
+        // straggler multiplier below 1 would be a speedup, not a fault
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des",
+                "faults": {"stragglers": 1, "straggler_factor": 0.5}}"#
+        )
+        .is_err());
+        // unknown reconfig tier
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "controller": {"reconfig_tier": "quantum"}}"#
+        )
+        .is_err());
         // burst without a multiplier > 1
         assert!(ScenarioSpec::parse(
             r#"{"model": "mlp", "arrival": {"kind": "burst", "burst_mult": 1.0}}"#
@@ -720,5 +981,44 @@ mod tests {
         assert_eq!(s.arrival.kind, "poisson");
         assert_eq!(s.horizon_ms, 20_000.0);
         assert!(s.controller.enabled && s.controller.power_budget_w == 0.0);
+        assert_eq!(s.controller.reconfig_tier, ReconfigTier::Full);
+        assert!(s.faults.is_off(), "faults must default to fully off");
+        assert_eq!(s.faults, FaultsSpec::default());
+    }
+
+    #[test]
+    fn faults_block_parses_and_resolves_to_config() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+              "model": "lenet5", "engine": "des", "nodes": 3,
+              "controller": {"enabled": true, "reconfig_tier": "partial"},
+              "faults": {
+                "crash_mean_up_ms": 5000, "crash_mean_down_ms": 500,
+                "crashes": [{"node": 2, "at_ms": 1000, "down_ms": 300}],
+                "stragglers": 1, "straggler_factor": 2.5,
+                "degraded_ports": 1, "port_factor": 4.0
+              }
+            }"#,
+        )
+        .unwrap();
+        assert!(!spec.faults.is_off());
+        assert_eq!(spec.controller.reconfig_tier, ReconfigTier::Partial);
+        let cfg = spec.faults.to_config(ReconfigCost::zynq7020());
+        cfg.validate(3).unwrap();
+        assert_eq!(cfg.scripted.len(), 1);
+        assert_eq!(cfg.scripted[0].node, 2);
+        assert_eq!(cfg.stragglers, 1);
+        assert_eq!(cfg.reflash, ReconfigCost::zynq7020());
+        // an empty faults object is the off default — same spec as no block
+        let with_empty = ScenarioSpec::parse(
+            r#"{"model": "lenet5", "engine": "des", "nodes": 3, "faults": {}}"#,
+        )
+        .unwrap();
+        let without = ScenarioSpec::parse(
+            r#"{"model": "lenet5", "engine": "des", "nodes": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(with_empty, without);
+        assert_eq!(json::pretty(&with_empty.to_json()), json::pretty(&without.to_json()));
     }
 }

@@ -20,8 +20,8 @@ pub mod plan;
 pub mod strategies;
 
 pub use online::{
-    plan_options, validate_options, ControllerConfig, Decision, Observation,
-    OnlineController, PlanOption,
+    plan_options, survivor_options, validate_options, ControllerConfig, Decision,
+    Observation, OnlineController, PlanOption,
 };
 pub use plan::{ExecutionPlan, SplitMode, StagePlan, Strategy};
 pub use strategies::{

@@ -46,6 +46,13 @@ use crate::telemetry::{AuditLog, AuditRecord, AuditVerdict};
 #[derive(Debug, Clone)]
 pub struct PlanOption {
     pub plan: ExecutionPlan,
+    /// Logical-replica → physical-node map for failover candidates built
+    /// over a survivor subset (DESIGN.md §14). `None` = identity: the
+    /// plan spans the whole cluster. When `Some(m)`, the plan's replica
+    /// id `r` executes on physical node `m[r]`, so the plan invariant
+    /// "every node is used" holds on the logical view while the excluded
+    /// (dead) physical node idles.
+    pub node_map: Option<Vec<usize>>,
     /// Steady-state service capacity, images/s (= 1000 / ms_per_image).
     pub capacity_img_per_sec: f64,
     /// Unloaded single-image latency, ms.
@@ -56,6 +63,63 @@ pub struct PlanOption {
     pub avg_power_w: f64,
     /// Energy per inference at saturation, J.
     pub j_per_image: f64,
+}
+
+impl PlanOption {
+    /// Physical node executing logical replica `r`.
+    pub fn physical(&self, r: usize) -> usize {
+        match &self.node_map {
+            Some(m) => m[r],
+            None => r,
+        }
+    }
+
+    /// All physical nodes this option occupies (deduplicated).
+    pub fn physical_nodes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.replicas.iter().map(|&r| self.physical(r)))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Does the option occupy physical node `node`?
+    pub fn uses_node(&self, node: usize) -> bool {
+        self.plan
+            .stages
+            .iter()
+            .flat_map(|s| s.replicas.iter())
+            .any(|&r| self.physical(r) == node)
+    }
+
+    /// True when no physical node of this option is marked down. An
+    /// empty mask means "all healthy" (the fault-free DES passes that,
+    /// so fault-free decisions are bit-identical to the pre-chaos code).
+    pub fn healthy(&self, down: &[bool]) -> bool {
+        down.is_empty() || !self.physical_nodes().iter().any(|&p| down.get(p) == Some(&true))
+    }
+
+    /// Capacity derated by the worst straggler among the option's
+    /// physical nodes: a persistent k× slowdown on any replica bounds
+    /// the whole plan's service rate (the straggler sits on every
+    /// image's path for spatial/pipeline stages and on 1/R of them for
+    /// data-parallel — the max is the conservative bound the controller
+    /// plans with). Empty factors = nominal.
+    pub fn effective_capacity(&self, slow: &[f64]) -> f64 {
+        if slow.is_empty() {
+            return self.capacity_img_per_sec;
+        }
+        let worst = self
+            .physical_nodes()
+            .iter()
+            .map(|&p| slow.get(p).copied().unwrap_or(1.0))
+            .fold(1.0f64, f64::max);
+        self.capacity_img_per_sec / worst
+    }
 }
 
 /// Build and price one candidate per strategy for `g` over `cluster`.
@@ -75,11 +139,45 @@ pub fn plan_options(
         let sim = simulate(&plan, cluster, cost, g, &SimConfig { images: 16 })?;
         out.push(PlanOption {
             plan,
+            node_map: None,
             capacity_img_per_sec: 1e3 / sim.ms_per_image,
             latency_ms: sim.latency_ms.mean(),
             avg_power_w: sim.power.cluster_avg_w,
             j_per_image: sim.power.j_per_image,
         });
+    }
+    Ok(out)
+}
+
+/// Failover re-planning (DESIGN.md §14): build and price candidates over
+/// every node *except* `exclude`, pinned back to the surviving physical
+/// ids via [`PlanOption::node_map`]. Planning and pricing run on a
+/// same-shape sub-cluster of the survivors, so each candidate's capacity
+/// is what the degraded cluster can actually deliver. Strategies that
+/// cannot be built at the reduced node count are skipped; the result may
+/// be empty (e.g. a 1-node cluster has nothing to fail over to).
+pub fn survivor_options(
+    g: &Graph,
+    cluster: &ClusterConfig,
+    cost: &mut CostModel,
+    strategies: &[Strategy],
+    exclude: usize,
+) -> anyhow::Result<Vec<PlanOption>> {
+    let n = cluster.num_nodes();
+    anyhow::ensure!(exclude < n, "excluded node {exclude} ≥ cluster size {n}");
+    if n < 2 {
+        return Ok(Vec::new());
+    }
+    let survivors: Vec<usize> = (0..n).filter(|&i| i != exclude).collect();
+    let mut sub = cluster.clone();
+    sub.boards.truncate(survivors.len());
+    let mut out = Vec::new();
+    for &s in strategies {
+        let Ok(mut opts) = plan_options(g, &sub, cost, &[s]) else { continue };
+        for o in &mut opts {
+            o.node_map = Some(survivors.clone());
+        }
+        out.append(&mut opts);
     }
     Ok(out)
 }
@@ -96,11 +194,28 @@ pub fn validate_options(
         o.plan
             .validate_for(g)
             .map_err(|e| anyhow::anyhow!("option {i} ({}): {e}", o.plan.strategy))?;
-        anyhow::ensure!(
-            o.plan.n_nodes == n_nodes,
-            "option {i} plans {} nodes, cluster has {n_nodes}",
-            o.plan.n_nodes
-        );
+        match &o.node_map {
+            None => anyhow::ensure!(
+                o.plan.n_nodes == n_nodes,
+                "option {i} plans {} nodes, cluster has {n_nodes}",
+                o.plan.n_nodes
+            ),
+            Some(m) => {
+                anyhow::ensure!(
+                    m.len() == o.plan.n_nodes,
+                    "option {i} maps {} replicas, plan has {}",
+                    m.len(),
+                    o.plan.n_nodes
+                );
+                let mut uniq = m.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                anyhow::ensure!(
+                    uniq.len() == m.len() && m.iter().all(|&p| p < n_nodes),
+                    "option {i} node map {m:?} is not an injection into 0..{n_nodes}"
+                );
+            }
+        }
         anyhow::ensure!(
             o.capacity_img_per_sec.is_finite() && o.capacity_img_per_sec > 0.0,
             "option {i} has non-positive capacity"
@@ -204,6 +319,15 @@ pub struct Observation {
     /// Measured cluster draw over the window (static floor + dynamic
     /// compute share; the DES computes it from its busy timeline), W.
     pub avg_power_w_in_window: f64,
+    /// Per-physical-node health at this epoch: `true` = out of service.
+    /// Empty means "all healthy" — the fault-free DES passes an empty
+    /// vec, keeping decisions bit-identical to the pre-chaos code. (In
+    /// a real deployment this comes from heartbeats + window stats; the
+    /// simulator reports its injected ground truth.)
+    pub node_down: Vec<bool>,
+    /// Per-physical-node persistent compute slowdown factor (1.0 =
+    /// nominal). Empty means all nominal.
+    pub node_slow: Vec<f64>,
 }
 
 /// A reconfiguration the controller asks the simulator to execute.
@@ -230,6 +354,9 @@ pub struct OnlineController {
     lambda_ema: Option<f64>,
     power_ema: Option<f64>,
     last_switch_ms: f64,
+    /// Set by a failover switch; cleared when the controller restores a
+    /// full-width plan (or finds itself already on the best candidate).
+    degraded: bool,
 }
 
 impl OnlineController {
@@ -243,7 +370,13 @@ impl OnlineController {
             lambda_ema: None,
             power_ema: None,
             last_switch_ms: f64::NEG_INFINITY,
+            degraded: false,
         })
+    }
+
+    /// Is the controller currently on a failover (survivor) plan?
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
     }
 
     /// The audit skeleton for one consultation; each return site fills
@@ -294,13 +427,85 @@ impl OnlineController {
         };
         self.power_ema = Some(p_ema);
 
+        // a budgeted controller never activates a plan whose saturated
+        // draw exceeds the budget, whatever the load says
+        let budget = self.cfg.power_budget_w;
+        let in_budget =
+            move |o: &PlanOption| budget.map(|b| o.avg_power_w <= b).unwrap_or(true);
+        // capacity through the straggler lens (identical to the raw
+        // figure when the run is fault-free)
+        let eff = |o: &PlanOption| o.effective_capacity(&obs.node_slow);
+
+        // emergency failover (DESIGN.md §14): the active plan references
+        // a dead node, so its capacity is effectively zero — every epoch
+        // spent on it strands work. Overrides the dwell clock: re-plan
+        // over the survivors now, or hold only if no healthy candidate
+        // exists (e.g. a concurrent multi-node outage).
+        if !options[obs.active].healthy(&obs.node_down) {
+            let dead: Vec<usize> = obs
+                .node_down
+                .iter()
+                .enumerate()
+                .filter(|&(_, &d)| d)
+                .map(|(i, _)| i)
+                .collect();
+            let cand = options
+                .iter()
+                .enumerate()
+                .filter(|&(i, o)| {
+                    i != obs.active && o.healthy(&obs.node_down) && in_budget(o)
+                })
+                .max_by(|a, b| eff(a.1).partial_cmp(&eff(b.1)).unwrap());
+            let mu_cur = eff(&options[obs.active]);
+            match cand {
+                Some((best, opt)) => {
+                    self.last_switch_ms = obs.now_ms;
+                    self.degraded = true;
+                    let reason = format!(
+                        "failover: node(s) {dead:?} down → {} on survivors {:?} (μ {:.1})",
+                        opt.plan.strategy,
+                        opt.physical_nodes(),
+                        eff(opt)
+                    );
+                    if self.audit.enabled {
+                        let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+                        rec.verdict = AuditVerdict::SwitchFailover;
+                        rec.to = Some(best);
+                        rec.mu_best = eff(opt);
+                        rec.reason = reason.clone();
+                        self.audit.push(rec);
+                    }
+                    crate::log_kv_debug!(
+                        Some(obs.now_ms), "controller_switch",
+                        "verdict" => "failover", "to" => best
+                    );
+                    return Some(Decision {
+                        to: best,
+                        downtime_ms: self.reconfig.downtime_ms(),
+                        reason,
+                    });
+                }
+                None => {
+                    if self.audit.enabled {
+                        let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+                        rec.verdict = AuditVerdict::HoldNoFailover;
+                        rec.reason = format!(
+                            "node(s) {dead:?} down but no healthy candidate to fail over to"
+                        );
+                        self.audit.push(rec);
+                    }
+                    return None;
+                }
+            }
+        }
+
         if obs.now_ms - self.last_switch_ms < self.cfg.dwell_ms {
             if self.audit.enabled {
                 let mut rec = self.audit_base(
                     obs,
                     lam,
                     p_ema,
-                    options[obs.active].capacity_img_per_sec,
+                    eff(&options[obs.active]),
                 );
                 rec.verdict = AuditVerdict::HoldDwell;
                 rec.reason = "inside minimum dwell after last switch".into();
@@ -309,7 +514,7 @@ impl OnlineController {
             return None;
         }
         let cur = &options[obs.active];
-        let mu_cur = cur.capacity_img_per_sec;
+        let mu_cur = eff(cur);
         let backlog_ms = obs.backlog as f64 / mu_cur * 1e3;
 
         // hard power cap: smoothed draw above budget → shed watts first.
@@ -318,16 +523,20 @@ impl OnlineController {
         // throughput branches below must not upgrade past the budget.
         if let Some(budget) = self.cfg.power_budget_w {
             if p_ema > budget {
-                let (best, opt) = options.iter().enumerate().min_by(|a, b| {
-                    a.1.avg_power_w
-                        .partial_cmp(&b.1.avg_power_w)
-                        .unwrap()
-                        .then(
-                            b.1.capacity_img_per_sec
-                                .partial_cmp(&a.1.capacity_img_per_sec)
-                                .unwrap(),
-                        )
-                })?;
+                let (best, opt) = options
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, o)| o.healthy(&obs.node_down))
+                    .min_by(|a, b| {
+                        a.1.avg_power_w
+                            .partial_cmp(&b.1.avg_power_w)
+                            .unwrap()
+                            .then(
+                                b.1.capacity_img_per_sec
+                                    .partial_cmp(&a.1.capacity_img_per_sec)
+                                    .unwrap(),
+                            )
+                    })?;
                 if best != obs.active && opt.avg_power_w < cur.avg_power_w {
                     self.last_switch_ms = obs.now_ms;
                     let reason = format!(
@@ -362,11 +571,50 @@ impl OnlineController {
                 return None;
             }
         }
-        // a budgeted controller never activates a plan whose saturated
-        // draw exceeds the budget, whatever the load says
-        let in_budget = |o: &PlanOption| {
-            self.cfg.power_budget_w.map(|b| o.avg_power_w <= b).unwrap_or(true)
-        };
+        // restore after rejoin (DESIGN.md §14): on a failover plan and a
+        // strictly better healthy candidate exists — the full-width plan
+        // becomes eligible again once its node is back. Respects dwell
+        // (gated above), so a flapping node cannot make the controller
+        // flap with it.
+        if self.degraded {
+            let cand = options
+                .iter()
+                .enumerate()
+                .filter(|&(_, o)| o.healthy(&obs.node_down) && in_budget(o))
+                .max_by(|a, b| eff(a.1).partial_cmp(&eff(b.1)).unwrap());
+            if let Some((best, opt)) = cand {
+                if best == obs.active {
+                    // already on the best candidate — nothing to restore
+                    self.degraded = false;
+                } else if eff(opt) >= self.cfg.min_capacity_gain * mu_cur {
+                    self.last_switch_ms = obs.now_ms;
+                    self.degraded = false;
+                    let reason = format!(
+                        "restore: nodes back in service → {} (μ {:.1} vs degraded {:.1})",
+                        opt.plan.strategy,
+                        eff(opt),
+                        mu_cur
+                    );
+                    if self.audit.enabled {
+                        let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
+                        rec.verdict = AuditVerdict::SwitchRestore;
+                        rec.to = Some(best);
+                        rec.mu_best = eff(opt);
+                        rec.reason = reason.clone();
+                        self.audit.push(rec);
+                    }
+                    crate::log_kv_debug!(
+                        Some(obs.now_ms), "controller_switch",
+                        "verdict" => "restore", "to" => best
+                    );
+                    return Some(Decision {
+                        to: best,
+                        downtime_ms: self.reconfig.downtime_ms(),
+                        reason,
+                    });
+                }
+            }
+        }
 
         let overloaded =
             lam > self.cfg.overload_util * mu_cur || backlog_ms > self.cfg.backlog_high_ms;
@@ -374,11 +622,9 @@ impl OnlineController {
             let (best, opt) = options
                 .iter()
                 .enumerate()
-                .filter(|(_, o)| in_budget(o))
-                .max_by(|a, b| {
-                    a.1.capacity_img_per_sec.partial_cmp(&b.1.capacity_img_per_sec).unwrap()
-                })?;
-            let mu_best = opt.capacity_img_per_sec;
+                .filter(|&(_, o)| in_budget(o) && o.healthy(&obs.node_down))
+                .max_by(|a, b| eff(a.1).partial_cmp(&eff(b.1)).unwrap())?;
+            let mu_best = eff(opt);
             if best == obs.active || mu_best < self.cfg.min_capacity_gain * mu_cur {
                 if self.audit.enabled {
                     let mut rec = self.audit_base(obs, lam, p_ema, mu_cur);
@@ -448,7 +694,9 @@ impl OnlineController {
             let best = options
                 .iter()
                 .enumerate()
-                .filter(|(_, o)| o.capacity_img_per_sec >= headroom && in_budget(o))
+                .filter(|&(_, o)| {
+                    eff(o) >= headroom && in_budget(o) && o.healthy(&obs.node_down)
+                })
                 .min_by(|a, b| a.1.latency_ms.partial_cmp(&b.1.latency_ms).unwrap())?;
             if best.0 != obs.active
                 && best.1.latency_ms <= self.cfg.max_latency_ratio * cur.latency_ms
@@ -499,6 +747,7 @@ mod tests {
             .iter()
             .map(|&(cap, lat, watts)| PlanOption {
                 plan: scatter_gather(&g, 1).unwrap(),
+                node_map: None,
                 capacity_img_per_sec: cap,
                 latency_ms: lat,
                 avg_power_w: watts,
@@ -533,6 +782,8 @@ mod tests {
             backlog,
             active,
             avg_power_w_in_window: watts,
+            node_down: Vec::new(),
+            node_slow: Vec::new(),
         }
     }
 
@@ -694,6 +945,122 @@ mod tests {
         let other = crate::graph::zoo::build("mlp", 0).unwrap();
         assert!(validate_options(&opts, &other, 1).is_err());
         assert!(validate_options(&opts, &g, 2).is_err());
+    }
+
+    fn obs_fault(now_ms: f64, active: usize, down: Vec<bool>) -> Observation {
+        Observation { node_down: down, ..obs(now_ms, 5, 0, active) }
+    }
+
+    #[test]
+    fn failover_bypasses_dwell_then_restores_after_rejoin() {
+        // option 0: full-width plan on physical node 0 (200 img/s);
+        // option 1: survivor plan pinned to physical node 1 (90 img/s)
+        let (_, mut opts) = options(&[(200.0, 5.0), (90.0, 7.0)]);
+        opts[1].node_map = Some(vec![1]);
+        let mut c = controller();
+        c.audit.enabled = true;
+
+        // node 0 dies → immediate failover to the survivor plan
+        let d = c
+            .decide(&opts, &obs_fault(100.0, 0, vec![true, false]))
+            .expect("must fail over");
+        assert_eq!(d.to, 1);
+        assert!(d.downtime_ms > 0.0);
+        assert!(d.reason.contains("failover"), "{}", d.reason);
+        assert!(c.is_degraded());
+
+        // still down, now on the survivor plan, inside dwell: hold
+        assert!(c.decide(&opts, &obs_fault(150.0, 1, vec![true, false])).is_none());
+        assert!(c.is_degraded());
+
+        // node rejoins, dwell elapsed → restore the full-width plan
+        let d = c
+            .decide(&opts, &obs_fault(2000.0, 1, vec![false, false]))
+            .expect("must restore");
+        assert_eq!(d.to, 0);
+        assert!(d.reason.contains("restore"), "{}", d.reason);
+        assert!(!c.is_degraded());
+
+        let recs = c.audit.take();
+        assert_eq!(recs[0].verdict, AuditVerdict::SwitchFailover);
+        assert_eq!(recs[1].verdict, AuditVerdict::HoldDwell);
+        assert_eq!(recs[2].verdict, AuditVerdict::SwitchRestore);
+    }
+
+    #[test]
+    fn failover_holds_when_no_healthy_candidate() {
+        // both options live on physical node 0 — nowhere to go
+        let (_, opts) = options(&[(200.0, 5.0), (90.0, 7.0)]);
+        let mut c = controller();
+        assert!(c.decide(&opts, &obs_fault(100.0, 0, vec![true])).is_none());
+        assert!(!c.is_degraded(), "a held failover must not mark degraded");
+    }
+
+    #[test]
+    fn restore_waits_out_a_flapping_node() {
+        let (_, mut opts) = options(&[(200.0, 5.0), (90.0, 7.0)]);
+        opts[1].node_map = Some(vec![1]);
+        let mut c = controller();
+        c.decide(&opts, &obs_fault(100.0, 0, vec![true, false])).unwrap();
+        // node back 50 ms later: inside dwell, restore must wait
+        assert!(c.decide(&opts, &obs_fault(150.0, 1, vec![false, false])).is_none());
+        assert!(c.is_degraded());
+    }
+
+    #[test]
+    fn straggler_derates_effective_capacity() {
+        let (_, opts) = options(&[(100.0, 5.0)]);
+        let o = &opts[0]; // physical nodes = [0]
+        assert_eq!(o.effective_capacity(&[]), 100.0);
+        assert!((o.effective_capacity(&[2.0]) - 50.0).abs() < 1e-12);
+        // a straggler elsewhere does not touch this option
+        assert_eq!(o.effective_capacity(&[1.0, 3.0]), 100.0);
+        assert!(o.healthy(&[]) && o.healthy(&[false, true]));
+        assert!(!o.healthy(&[true]));
+    }
+
+    #[test]
+    fn straggler_on_active_plan_drives_the_upgrade_branch() {
+        // nominal capacities are equal; a 4× straggler on node 0 makes
+        // the survivor-pinned option 1 the effectively faster plan
+        let (_, mut opts) = options(&[(100.0, 5.0), (100.0, 6.0)]);
+        opts[1].node_map = Some(vec![1]);
+        let mut c = controller();
+        let o = Observation {
+            node_slow: vec![4.0, 1.0],
+            ..obs(100.0, 9, 40, 0) // 90 img/s offered vs eff μ 25
+        };
+        let d = c.decide(&opts, &o).expect("must escape the straggler");
+        assert_eq!(d.to, 1);
+    }
+
+    #[test]
+    fn survivor_options_pin_plans_onto_survivors() {
+        use crate::config::{BoardProfile, Calibration, VtaConfig};
+        let g = crate::graph::zoo::build("lenet5", 0).unwrap();
+        let cluster = crate::config::ClusterConfig::zynq_stack(3);
+        let mut cost = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration::default(),
+        );
+        let opts =
+            survivor_options(&g, &cluster, &mut cost, &Strategy::all(), 1).unwrap();
+        assert!(!opts.is_empty());
+        // valid against the FULL 3-node cluster thanks to the node map
+        validate_options(&opts, &g, 3).unwrap();
+        for o in &opts {
+            assert_eq!(o.node_map.as_deref(), Some(&[0usize, 2][..]));
+            assert!(!o.uses_node(1), "survivor plan touches the dead node");
+            assert!(o.healthy(&[false, true, false]));
+            assert!(o.capacity_img_per_sec > 0.0);
+        }
+        // degenerate cases
+        assert!(survivor_options(&g, &cluster, &mut cost, &Strategy::all(), 9).is_err());
+        let one = crate::config::ClusterConfig::zynq_stack(1);
+        assert!(survivor_options(&g, &one, &mut cost, &Strategy::all(), 0)
+            .unwrap()
+            .is_empty());
     }
 
     #[test]

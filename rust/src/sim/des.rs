@@ -39,6 +39,7 @@ use crate::sched::online::{validate_options, Observation, OnlineController, Plan
 use crate::sched::{SplitMode, Strategy};
 use crate::sim::cluster::{stage_io_bytes, stage_service_times};
 use crate::sim::cost::CostModel;
+use crate::sim::faults::{FaultSchedule, FaultsConfig, Outage};
 use crate::telemetry::{Clock, ComputeSpan, RunTelemetry, StageSpan, TelemetryConfig, Tracer};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -220,6 +221,10 @@ pub struct DesConfig {
     /// built, every hook is a null check, and the run's numbers are
     /// bit-identical to a build without telemetry.
     pub telemetry: TelemetryConfig,
+    /// Fault injection (DESIGN.md §14). Off by default: no schedule is
+    /// built, no RNG stream is consumed, no events are injected, and
+    /// the run is bit-identical to a fault-free build.
+    pub faults: FaultsConfig,
 }
 
 impl DesConfig {
@@ -230,6 +235,7 @@ impl DesConfig {
             arrival,
             sample_every_ms: 100.0,
             telemetry: TelemetryConfig::off(),
+            faults: FaultsConfig::off(),
         }
     }
 }
@@ -289,6 +295,18 @@ pub struct DesResult {
     /// Collected telemetry when `cfg.telemetry` is on; `None` (and
     /// zero-cost) otherwise.
     pub telemetry: Option<RunTelemetry>,
+    /// Fraction of node-time in service over the horizon (DESIGN.md
+    /// §14). Exactly `1.0` for a fault-free run.
+    pub availability: f64,
+    /// Per-rejoin recovery time (crash → back in service, re-flash
+    /// included), ms. Empty when nothing crashed (or no crash rejoined
+    /// within the horizon) — percentiles then report NaN, never 0.
+    pub recovery_ms: Summary,
+    /// Control windows that completed zero images while work was in
+    /// flight — explicit outage accounting, not silent zero rows.
+    pub stalled_windows: u64,
+    /// The materialized outage timeline the run executed.
+    pub faults: Vec<Outage>,
 }
 
 /// A plan pre-priced for event-driven execution.
@@ -314,6 +332,10 @@ enum Ev {
     Stage { img: usize, si: usize },
     Done { img: usize },
     Control,
+    /// A node crashes; out of service until `until` (down + re-flash).
+    NodeDown { node: usize, until: Nanos },
+    /// A crashed node rejoins; `since` is its crash instant.
+    NodeUp { node: usize, since: Nanos },
 }
 
 struct QEntry {
@@ -357,9 +379,19 @@ struct Resources<'a> {
     /// the energy meter charges these; bookings that only land after the
     /// horizon have not moved yet and carry no joules.
     delivered_bytes: u64,
+    /// Per-node switch-port wire-time multiplier (DESIGN.md §14).
+    /// Empty = no degradation (the fault-free fast path).
+    port_slow: Vec<f64>,
 }
 
 impl Resources<'_> {
+    fn port_factor(&self, ep: Endpoint) -> f64 {
+        match ep {
+            Endpoint::Node(n) => self.port_slow.get(n).copied().unwrap_or(1.0),
+            Endpoint::Master => 1.0,
+        }
+    }
+
     fn add_busy(&mut self, node: usize, start: Nanos, end: Nanos) {
         let s = start.min(self.horizon);
         let e = end.min(self.horizon);
@@ -397,7 +429,16 @@ impl Resources<'_> {
         };
         let full = self.mpi.transfer_ns(bytes, src_board, dst_board);
         let overhead = full - self.mpi.link.serialize_ns(bytes);
-        let arrival = timing.arrival_ns + overhead;
+        // degraded-port chaos: the worse endpoint's multiplier stretches
+        // the wire time (delivery only — occupancy accounting is
+        // unchanged, so the zero-cost-off invariant holds exactly)
+        let factor = self.port_factor(src).max(self.port_factor(dst));
+        let extra = if factor > 1.0 {
+            (full as f64 * (factor - 1.0)).round() as Nanos
+        } else {
+            0
+        };
+        let arrival = timing.arrival_ns + overhead + extra;
         // blocking PS share: fixed `serial_frac × transfer` per endpoint
         // node — the exact demand the steady-state model charges, so the
         // two throughput figures pin each other.
@@ -458,6 +499,7 @@ pub fn run_des(
     anyhow::ensure!(cfg.horizon_ms > 0.0, "horizon must be > 0");
     anyhow::ensure!(cfg.sample_every_ms > 0.0, "sample interval must be > 0");
     cfg.arrival.validate()?;
+    cfg.faults.validate(cluster.num_nodes())?;
 
     let mut wall = Clock::wall();
     wall.start();
@@ -479,6 +521,14 @@ pub fn run_des(
 
     let n = cluster.num_nodes();
     let horizon = ms_to_ns(cfg.horizon_ms);
+    // chaos (DESIGN.md §14): the whole fault timeline is materialized up
+    // front from RNG streams disjoint from the arrival process. `None`
+    // when faults are off — no draw, no event, bit-identical runs.
+    let fsched: Option<FaultSchedule> = if cfg.faults.is_off() {
+        None
+    } else {
+        Some(FaultSchedule::generate(&cfg.faults, n, horizon, cfg.seed))
+    };
     let mut res = Resources {
         node_free: vec![0; n],
         busy_ns: vec![0; n],
@@ -494,6 +544,7 @@ pub fn run_des(
         horizon,
         network_bytes: 0,
         delivered_bytes: 0,
+        port_slow: fsched.as_ref().map(|f| f.port_slow.clone()).unwrap_or_default(),
     };
 
     // power metering: idle floor + switch ports draw for the whole run;
@@ -517,6 +568,19 @@ pub fn run_des(
     }
     let sample_ns = ms_to_ns(cfg.sample_every_ms).max(1);
     push(&mut heap, &mut seq, sample_ns, Ev::Control);
+    if let Some(f) = &fsched {
+        for o in f.outages() {
+            push(
+                &mut heap,
+                &mut seq,
+                o.start_ns,
+                Ev::NodeDown { node: o.node, until: o.end_ns },
+            );
+            if o.end_ns <= horizon {
+                push(&mut heap, &mut seq, o.end_ns, Ev::NodeUp { node: o.node, since: o.start_ns });
+            }
+        }
+    }
 
     let mut imgs: Vec<Img> = Vec::new();
     let mut active = initial;
@@ -533,6 +597,9 @@ pub fn run_des(
     let mut timeline: Vec<(f64, usize)> = Vec::new();
     let mut reconfigs: Vec<ReconfigEvent> = Vec::new();
     let mut downtime_ms = 0.0f64;
+    let mut node_down_now = vec![false; n];
+    let mut recovery = Summary::new();
+    let mut stalled_windows = 0u64;
 
     while let Some(QEntry { at: now, ev, .. }) = heap.pop() {
         if now > horizon {
@@ -563,7 +630,8 @@ pub fn run_des(
                 }
             }
             Ev::Stage { img, si } => {
-                let plan = &options[imgs[img].plan].plan;
+                let opt = &options[imgs[img].plan];
+                let plan = &opt.plan;
                 let c = &compiled[imgs[img].plan];
                 let holders = std::mem::take(&mut imgs[img].holders);
                 let kp = holders.len();
@@ -609,7 +677,10 @@ pub fn run_des(
                 // critical path = the consumer finishing last:
                 // (node, arrival, start, done)
                 let mut crit: Option<(usize, Nanos, Nanos, Nanos)> = None;
-                for (ci, &cnode) in consumers.iter().enumerate() {
+                for (ci, &lnode) in consumers.iter().enumerate() {
+                    // failover plans run logical replicas on surviving
+                    // physical nodes (DESIGN.md §14); identity otherwise
+                    let cnode = opt.physical(lnode);
                     // each consumer pulls from its window of producers
                     // (same routing as the latency booker in
                     // `sim::cluster`)
@@ -622,7 +693,13 @@ pub fn run_des(
                         arrival =
                             arrival.max(res.transfer(src, Endpoint::Node(cnode), share, now));
                     }
-                    let (cstart, done) = res.compute(cnode, arrival, c.stage_time[si], now);
+                    // persistent straggler chaos stretches compute; the
+                    // fault-free path takes the untouched stage time
+                    let dur = match &fsched {
+                        Some(f) => (c.stage_time[si] as f64 * f.slow[cnode]).round() as Nanos,
+                        None => c.stage_time[si],
+                    };
+                    let (cstart, done) = res.compute(cnode, arrival, dur, now);
                     stage_done = stage_done.max(done);
                     next_holders.push(Endpoint::Node(cnode));
                     if traced {
@@ -680,12 +757,20 @@ pub fn run_des(
                     *pb = res.busy_ns[i];
                 }
                 window_w.push(w);
+                // outage accounting (DESIGN.md §14): a zero-completion
+                // window with work in flight is a stall and says so —
+                // it must never read as an idle row of silent zeros
+                let stalled = win_completed == 0 && in_flight > 0;
+                if stalled {
+                    stalled_windows += 1;
+                }
                 if let Some(t) = tracer.as_mut() {
                     t.window(
                         ns_to_ms(now),
                         events_processed - win_events_base,
                         win_arrivals,
                         win_completed,
+                        stalled,
                     );
                 }
                 win_events_base = events_processed;
@@ -698,11 +783,29 @@ pub fn run_des(
                         backlog: in_flight,
                         active,
                         avg_power_w_in_window: w,
+                        // empty vectors when faults are off, so the
+                        // controller's decisions are bit-identical to
+                        // the pre-chaos code
+                        node_down: if fsched.is_some() {
+                            node_down_now.clone()
+                        } else {
+                            Vec::new()
+                        },
+                        node_slow: fsched
+                            .as_ref()
+                            .map(|f| f.slow.clone())
+                            .unwrap_or_default(),
                     };
                     if let Some(d) = ctrl.decide(options, &obs) {
-                        // the invariant the integration tests pin: no
-                        // plan becomes active without re-validation
+                        // the invariants the integration tests pin: no
+                        // plan becomes active without re-validation and
+                        // none may reference a node that is down now
                         options[d.to].plan.validate_for(g)?;
+                        anyhow::ensure!(
+                            options[d.to].healthy(&node_down_now),
+                            "controller activated plan {} referencing a down node",
+                            d.to
+                        );
                         let dt = ms_to_ns(d.downtime_ms);
                         for nf in res.node_free.iter_mut() {
                             *nf = (*nf).max(now) + dt;
@@ -733,6 +836,31 @@ pub fn run_des(
                 if next <= horizon {
                     push(&mut heap, &mut seq, next, Ev::Control);
                 }
+            }
+            Ev::NodeDown { node, until } => {
+                node_down_now[node] = true;
+                // the node serves nothing until it rejoins: queued work
+                // waits behind the outage (work already booked finishes
+                // — the crash catches the *queue*, not the ALU mid-op)
+                res.node_free[node] = res.node_free[node].max(until);
+                if let Some(t) = tracer.as_mut() {
+                    t.fault(now, node, "down");
+                }
+                crate::log_kv_debug!(
+                    Some(ns_to_ms(now)), "node_down",
+                    "node" => node, "until_ms" => ns_to_ms(until)
+                );
+            }
+            Ev::NodeUp { node, since } => {
+                node_down_now[node] = false;
+                recovery.push(ns_to_ms(now - since));
+                if let Some(t) = tracer.as_mut() {
+                    t.fault(now, node, "up");
+                }
+                crate::log_kv_debug!(
+                    Some(ns_to_ms(now)), "node_up",
+                    "node" => node, "down_for_ms" => ns_to_ms(now - since)
+                );
             }
         }
     }
@@ -783,6 +911,10 @@ pub fn run_des(
         events_per_sec: events_processed as f64 / horizon_sec,
         wall_ms: wall.elapsed_sec() * 1e3,
         telemetry,
+        availability: fsched.as_ref().map(|f| f.availability(horizon)).unwrap_or(1.0),
+        recovery_ms: recovery,
+        stalled_windows,
+        faults: fsched.as_ref().map(|f| f.outages()).unwrap_or_default(),
     })
 }
 
@@ -1057,6 +1189,94 @@ mod tests {
         assert!(tt.traces.len() < tf.traces.len());
         // the sample is the deterministic id stride, not an RNG draw
         assert!(tt.traces.iter().all(|t| t.img % 4 == 0));
+    }
+
+    #[test]
+    fn fault_free_run_reports_clean_chaos_columns() {
+        let (g, cluster, mut cost) = setup("mlp", 2);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::Fused]).unwrap();
+        let cfg =
+            DesConfig::new(ArrivalProcess::Poisson { rate_per_sec: 20.0 }, 1500.0, 3);
+        let r = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        assert_eq!(r.availability, 1.0);
+        assert!(r.recovery_ms.is_empty(), "no crash ⇒ no recovery sample");
+        assert!(r.recovery_ms.p99().is_nan(), "unmeasured, not zero");
+        assert!(r.faults.is_empty());
+    }
+
+    #[test]
+    fn scripted_crash_degrades_and_recovers_deterministically() {
+        use crate::config::ReconfigCost;
+        use crate::sim::faults::{FaultsConfig, ScriptedCrash};
+        let (g, cluster, mut cost) = setup("lenet5", 2);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::Pipeline])
+                .unwrap();
+        let cap = opts[0].capacity_img_per_sec;
+        let arrival = ArrivalProcess::Poisson { rate_per_sec: 0.5 * cap };
+        let base_cfg = DesConfig::new(arrival.clone(), 4000.0, 9);
+        let base = run_des(&opts, 0, &cluster, &mut cost, &g, &base_cfg, None).unwrap();
+        let mut cfg = DesConfig::new(arrival, 4000.0, 9);
+        cfg.faults = FaultsConfig {
+            scripted: vec![ScriptedCrash { node: 1, at_ms: 1000.0, down_ms: 600.0 }],
+            reflash: ReconfigCost::zynq7020(),
+            ..FaultsConfig::off()
+        };
+        let r = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        // chaos RNG streams are disjoint from the arrival process
+        assert_eq!(r.offered, base.offered, "chaos must not perturb arrivals");
+        assert_eq!(r.faults.len(), 1);
+        assert!(r.availability < 1.0 && r.availability > 0.8, "{}", r.availability);
+        // one rejoin: outage + full-tier re-flash, to the microsecond
+        assert_eq!(r.recovery_ms.len(), 1);
+        let want = 600.0 + ReconfigCost::zynq7020().downtime_ms();
+        assert!((r.recovery_ms.mean() - want).abs() < 1e-3, "{}", r.recovery_ms.mean());
+        // the outage shows up in the tail and in stalled windows
+        assert!(r.latency_ms.p99() > base.latency_ms.p99());
+        assert!(r.stalled_windows >= 1, "a 600 ms outage must stall windows");
+        // bit-identical replay under the same seed
+        let r2 = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        assert_eq!(r.completed, r2.completed);
+        assert_eq!(r.latency_ms.p99(), r2.latency_ms.p99());
+        assert_eq!(r.stalled_windows, r2.stalled_windows);
+        assert_eq!(r.power.total_j, r2.power.total_j);
+        assert_eq!(r.availability, r2.availability);
+    }
+
+    #[test]
+    fn stragglers_and_degraded_ports_slow_the_run() {
+        use crate::sim::faults::FaultsConfig;
+        let (g, cluster, mut cost) = setup("lenet5", 2);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::ScatterGather])
+                .unwrap();
+        let cap = opts[0].capacity_img_per_sec;
+        let arrival = ArrivalProcess::Poisson { rate_per_sec: 0.5 * cap };
+        let mut cfg = DesConfig::new(arrival, 3000.0, 11);
+        let base = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        cfg.faults = FaultsConfig {
+            stragglers: 2,
+            straggler_factor: 3.0,
+            ..FaultsConfig::off()
+        };
+        let slow = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        // 3× compute at 50 % load saturates the cluster
+        assert!(slow.latency_ms.p50() > base.latency_ms.p50());
+        assert!(slow.completed < base.completed);
+        assert_eq!(slow.availability, 1.0, "stragglers are not outages");
+        cfg.faults = FaultsConfig {
+            degraded_ports: 2,
+            port_factor: 8.0,
+            ..FaultsConfig::off()
+        };
+        let degraded = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        assert!(
+            degraded.latency_ms.p50() > base.latency_ms.p50(),
+            "slow wire must show in latency: {} vs {}",
+            degraded.latency_ms.p50(),
+            base.latency_ms.p50()
+        );
     }
 
     #[test]

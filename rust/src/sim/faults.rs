@@ -1,0 +1,410 @@
+//! Seeded, deterministic fault processes for chaos scenarios
+//! (DESIGN.md §14).
+//!
+//! A real edge cluster loses boards, suffers degraded switch ports and
+//! hosts the occasional straggler — the conditions that justify the
+//! online controller's existence. This module turns those into
+//! first-class, reproducible DES inputs:
+//!
+//! * **Node crash + rejoin** — per-node up/down alternation. A crashed
+//!   node serves nothing while down and pays a *full-tier* re-flash
+//!   warm-up on rejoin (its PL state is gone, so the partial tier of
+//!   [`crate::config::ReconfigTier`] does not apply).
+//! * **Switch-port degradation/loss** — a persistent per-port wire-time
+//!   multiplier; a large factor models an effectively lost port.
+//! * **Stragglers** — a persistent per-node compute slowdown factor.
+//!
+//! Determinism contract: the whole schedule is derived up front from the
+//! run seed through RNG streams *separate* from the arrival process, so
+//! (a) identical seeds give bit-identical chaos runs, and (b) a
+//! fault-free configuration draws nothing and perturbs nothing — the
+//! zero-cost-off invariant property-tested in `tests/proptests.rs`.
+//!
+//! Crash epochs use per-slot thinning rather than exponential inter-gap
+//! sampling: time is cut into fixed 100 ms slots and every slot draws
+//! (occurrence, position, duration) regardless of acceptance, accepting
+//! with `p = 1 − exp(−slot/mean_up)`. Under a fixed seed a higher crash
+//! rate therefore accepts a *superset* of crash intervals, which makes
+//! availability monotone non-increasing in the crash rate by
+//! construction — an exact property, not a statistical one.
+
+use crate::config::reconfig::ReconfigCost;
+use crate::util::rng::Rng;
+
+/// Slot width of the crash-epoch thinning grid (at most one crash per
+/// node per slot).
+const CRASH_SLOT_MS: f64 = 100.0;
+
+/// An explicitly scripted crash (merged with the random process) — the
+/// way tests and curated chaos scenarios pin "node 1 dies at t=1.5 s".
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScriptedCrash {
+    pub node: usize,
+    pub at_ms: f64,
+    /// Outage length before the rejoin re-flash starts, ms.
+    pub down_ms: f64,
+}
+
+/// Declarative fault configuration carried by
+/// [`crate::sim::DesConfig`]. The default is fully off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    /// Mean up-time between crashes per node, ms. `0` disables the
+    /// random crash process.
+    pub crash_mean_up_ms: f64,
+    /// Mean outage length per crash, ms.
+    pub crash_mean_down_ms: f64,
+    /// Explicit crash list, merged with the random process.
+    pub scripted: Vec<ScriptedCrash>,
+    /// Number of straggler nodes (clamped to the cluster size).
+    pub stragglers: usize,
+    /// Compute slowdown multiplier on straggler nodes (≥ 1).
+    pub straggler_factor: f64,
+    /// Number of degraded switch ports (clamped to the cluster size).
+    pub degraded_ports: usize,
+    /// Wire-time multiplier on degraded ports (≥ 1; large ≈ port loss).
+    pub port_factor: f64,
+    /// Re-flash cost a crashed node pays on rejoin (always the full
+    /// tier — the PL image does not survive a crash).
+    pub reflash: ReconfigCost,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl FaultsConfig {
+    /// No faults at all — the zero-cost default.
+    pub fn off() -> Self {
+        FaultsConfig {
+            crash_mean_up_ms: 0.0,
+            crash_mean_down_ms: 0.0,
+            scripted: Vec::new(),
+            stragglers: 0,
+            straggler_factor: 1.0,
+            degraded_ports: 0,
+            port_factor: 1.0,
+            reflash: ReconfigCost::default(),
+        }
+    }
+
+    /// True when no fault process is active; the DES then builds no
+    /// schedule, draws no randomness and injects no events.
+    pub fn is_off(&self) -> bool {
+        self.crash_mean_up_ms == 0.0
+            && self.scripted.is_empty()
+            && self.stragglers == 0
+            && self.degraded_ports == 0
+    }
+
+    pub fn validate(&self, n_nodes: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.crash_mean_up_ms >= 0.0 && self.crash_mean_up_ms.is_finite(),
+            "crash_mean_up_ms out of range"
+        );
+        if self.crash_mean_up_ms > 0.0 {
+            anyhow::ensure!(
+                self.crash_mean_down_ms > 0.0 && self.crash_mean_down_ms.is_finite(),
+                "crash_mean_down_ms must be > 0 when the crash process is on"
+            );
+        }
+        for c in &self.scripted {
+            anyhow::ensure!(c.node < n_nodes, "scripted crash on node {} ≥ {n_nodes}", c.node);
+            anyhow::ensure!(c.at_ms >= 0.0 && c.at_ms.is_finite(), "scripted at_ms out of range");
+            anyhow::ensure!(
+                c.down_ms > 0.0 && c.down_ms.is_finite(),
+                "scripted down_ms must be > 0"
+            );
+        }
+        if self.stragglers > 0 {
+            anyhow::ensure!(
+                self.straggler_factor >= 1.0 && self.straggler_factor.is_finite(),
+                "straggler_factor must be ≥ 1"
+            );
+        }
+        if self.degraded_ports > 0 {
+            anyhow::ensure!(
+                self.port_factor >= 1.0 && self.port_factor.is_finite(),
+                "port_factor must be ≥ 1"
+            );
+        }
+        self.reflash.validate()
+    }
+}
+
+/// One materialized outage interval (down time *plus* rejoin re-flash).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Outage {
+    pub node: usize,
+    /// Crash instant, ns.
+    pub start_ns: u64,
+    /// Back in service at this instant, ns (includes the re-flash).
+    pub end_ns: u64,
+}
+
+/// The fully materialized fault timeline for one DES run: per-node
+/// disjoint outage intervals plus persistent slowdown factors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    /// Per node: sorted, disjoint `[start, end)` outage intervals, ns.
+    down: Vec<Vec<(u64, u64)>>,
+    /// Per-node compute multiplier (1.0 = nominal).
+    pub slow: Vec<f64>,
+    /// Per-node switch-port wire-time multiplier (1.0 = nominal).
+    pub port_slow: Vec<f64>,
+}
+
+fn stream(seed: u64, salt: u64) -> Rng {
+    Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(salt))
+}
+
+fn merge_intervals(mut v: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    v.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(v.len());
+    for (s, e) in v {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+impl FaultSchedule {
+    /// Materialize the timeline for `n_nodes` over `[0, horizon_ns)`.
+    /// `cfg` must already be validated. All draws come from streams
+    /// keyed off `seed` but disjoint from the arrival process, so chaos
+    /// never perturbs the offered load.
+    pub fn generate(cfg: &FaultsConfig, n_nodes: usize, horizon_ns: u64, seed: u64) -> Self {
+        let reflash_ns = (cfg.reflash.downtime_ms() * 1e6) as u64;
+        let mut down: Vec<Vec<(u64, u64)>> = vec![Vec::new(); n_nodes];
+
+        if cfg.crash_mean_up_ms > 0.0 {
+            let horizon_ms = horizon_ns as f64 / 1e6;
+            let n_slots = (horizon_ms / CRASH_SLOT_MS).ceil() as u64;
+            let p_crash = 1.0 - (-CRASH_SLOT_MS / cfg.crash_mean_up_ms).exp();
+            for (node, iv) in down.iter_mut().enumerate() {
+                let mut rng = stream(seed, 0xFA01 + node as u64);
+                for slot in 0..n_slots {
+                    // draw all three regardless of acceptance: under a
+                    // fixed seed a higher rate accepts a superset of
+                    // crashes, making availability monotone in the rate
+                    let u = rng.f64();
+                    let pos = rng.f64();
+                    let dur_ms = rng.exp(cfg.crash_mean_down_ms);
+                    if u < p_crash {
+                        let at = ((slot as f64 + pos) * CRASH_SLOT_MS * 1e6) as u64;
+                        if at < horizon_ns {
+                            iv.push((at, at + (dur_ms * 1e6) as u64 + reflash_ns));
+                        }
+                    }
+                }
+            }
+        }
+        for c in &cfg.scripted {
+            let at = (c.at_ms * 1e6) as u64;
+            if at < horizon_ns {
+                down[c.node].push((at, at + (c.down_ms * 1e6) as u64 + reflash_ns));
+            }
+        }
+        let down = down.into_iter().map(merge_intervals).collect();
+
+        let mut slow = vec![1.0; n_nodes];
+        if cfg.stragglers > 0 {
+            let mut rng = stream(seed, 0xFA02);
+            let mut ids: Vec<usize> = (0..n_nodes).collect();
+            rng.shuffle(&mut ids);
+            for &i in ids.iter().take(cfg.stragglers.min(n_nodes)) {
+                slow[i] = cfg.straggler_factor;
+            }
+        }
+        let mut port_slow = vec![1.0; n_nodes];
+        if cfg.degraded_ports > 0 {
+            let mut rng = stream(seed, 0xFA03);
+            let mut ids: Vec<usize> = (0..n_nodes).collect();
+            rng.shuffle(&mut ids);
+            for &i in ids.iter().take(cfg.degraded_ports.min(n_nodes)) {
+                port_slow[i] = cfg.port_factor;
+            }
+        }
+        FaultSchedule { down, slow, port_slow }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.down.len()
+    }
+
+    /// All outages across the cluster, ordered by crash instant.
+    pub fn outages(&self) -> Vec<Outage> {
+        let mut v: Vec<Outage> = self
+            .down
+            .iter()
+            .enumerate()
+            .flat_map(|(node, iv)| {
+                iv.iter().map(move |&(start_ns, end_ns)| Outage { node, start_ns, end_ns })
+            })
+            .collect();
+        v.sort_by_key(|o| (o.start_ns, o.node));
+        v
+    }
+
+    /// Is `node` out of service at instant `t` (ns)? Returns the end of
+    /// the enclosing outage when so.
+    pub fn down_until(&self, node: usize, t: u64) -> Option<u64> {
+        self.down[node].iter().find(|&&(s, e)| t >= s && t < e).map(|&(_, e)| e)
+    }
+
+    pub fn is_down(&self, node: usize, t: u64) -> bool {
+        self.down_until(node, t).is_some()
+    }
+
+    /// Total node-downtime clipped to the horizon, ns.
+    pub fn total_down_ns(&self, horizon_ns: u64) -> u64 {
+        self.down
+            .iter()
+            .flatten()
+            .map(|&(s, e)| e.min(horizon_ns).saturating_sub(s.min(horizon_ns)))
+            .sum()
+    }
+
+    /// Fraction of node-time in service over the horizon: `1` when
+    /// nothing crashed, approaching `0` as outages cover the run.
+    /// Monotone non-increasing in the crash rate under a fixed seed
+    /// (see the module docs).
+    pub fn availability(&self, horizon_ns: u64) -> f64 {
+        if self.down.is_empty() || horizon_ns == 0 {
+            return 1.0;
+        }
+        let budget = (self.down.len() as u64 * horizon_ns) as f64;
+        1.0 - self.total_down_ns(horizon_ns) as f64 / budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn crashy(mean_up_ms: f64) -> FaultsConfig {
+        FaultsConfig {
+            crash_mean_up_ms: mean_up_ms,
+            crash_mean_down_ms: 200.0,
+            ..FaultsConfig::off()
+        }
+    }
+
+    #[test]
+    fn off_is_off() {
+        assert!(FaultsConfig::off().is_off());
+        assert!(FaultsConfig::default().is_off());
+        assert!(!crashy(1000.0).is_off());
+        let scripted = FaultsConfig {
+            scripted: vec![ScriptedCrash { node: 0, at_ms: 10.0, down_ms: 5.0 }],
+            ..FaultsConfig::off()
+        };
+        assert!(!scripted.is_off());
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        FaultsConfig::off().validate(4).unwrap();
+        crashy(1000.0).validate(4).unwrap();
+        assert!(crashy(-1.0).validate(4).is_err());
+        let mut c = crashy(1000.0);
+        c.crash_mean_down_ms = 0.0;
+        assert!(c.validate(4).is_err());
+        let c = FaultsConfig {
+            scripted: vec![ScriptedCrash { node: 9, at_ms: 0.0, down_ms: 1.0 }],
+            ..FaultsConfig::off()
+        };
+        assert!(c.validate(4).is_err());
+        let c = FaultsConfig { stragglers: 1, straggler_factor: 0.5, ..FaultsConfig::off() };
+        assert!(c.validate(4).is_err());
+        let c = FaultsConfig { degraded_ports: 1, port_factor: 0.0, ..FaultsConfig::off() };
+        assert!(c.validate(4).is_err());
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let cfg = FaultsConfig { stragglers: 1, degraded_ports: 1, ..crashy(500.0) };
+        let a = FaultSchedule::generate(&cfg, 4, 10_000_000_000, 7);
+        let b = FaultSchedule::generate(&cfg, 4, 10_000_000_000, 7);
+        assert_eq!(a, b);
+        let c = FaultSchedule::generate(&cfg, 4, 10_000_000_000, 8);
+        assert_ne!(a, c, "different seeds should give a different timeline");
+    }
+
+    #[test]
+    fn scripted_crash_lands_where_told_and_pays_reflash() {
+        let cfg = FaultsConfig {
+            scripted: vec![ScriptedCrash { node: 2, at_ms: 1500.0, down_ms: 800.0 }],
+            reflash: ReconfigCost { bitstream_load_ms: 40.0, warmup_ms: 10.0 },
+            ..FaultsConfig::off()
+        };
+        let s = FaultSchedule::generate(&cfg, 4, 10_000_000_000, 1);
+        let o = s.outages();
+        assert_eq!(o.len(), 1);
+        assert_eq!(o[0].node, 2);
+        assert_eq!(o[0].start_ns, 1_500_000_000);
+        // 800 ms down + 50 ms re-flash
+        assert_eq!(o[0].end_ns, 1_500_000_000 + 850_000_000);
+        assert!(s.is_down(2, 1_600_000_000));
+        assert!(!s.is_down(2, 1_400_000_000));
+        assert!(!s.is_down(0, 1_600_000_000));
+        assert_eq!(s.down_until(2, 1_600_000_000), Some(2_350_000_000));
+    }
+
+    #[test]
+    fn availability_monotone_in_crash_rate_same_seed() {
+        // exact by construction: higher rate ⇒ superset of accepted
+        // crash intervals ⇒ union can only grow
+        for seed in [1u64, 7, 42, 1234] {
+            let mut prev = 1.0f64;
+            for mean_up in [8000.0, 2000.0, 500.0, 125.0] {
+                let s = FaultSchedule::generate(&crashy(mean_up), 4, 8_000_000_000, seed);
+                let a = s.availability(8_000_000_000);
+                assert!((0.0..=1.0).contains(&a));
+                assert!(
+                    a <= prev + 1e-12,
+                    "seed {seed}: availability rose from {prev} to {a} at mean_up {mean_up}"
+                );
+                prev = a;
+            }
+            assert!(prev < 1.0, "seed {seed}: aggressive crash rate produced no outage");
+        }
+    }
+
+    #[test]
+    fn straggler_and_port_counts_clamped() {
+        let cfg = FaultsConfig {
+            stragglers: 99,
+            straggler_factor: 3.0,
+            degraded_ports: 2,
+            port_factor: 4.0,
+            ..FaultsConfig::off()
+        };
+        let s = FaultSchedule::generate(&cfg, 3, 1_000_000_000, 5);
+        assert_eq!(s.slow.iter().filter(|&&f| f == 3.0).count(), 3);
+        assert_eq!(s.port_slow.iter().filter(|&&f| f == 4.0).count(), 2);
+        assert!(s.outages().is_empty());
+        assert_eq!(s.availability(1_000_000_000), 1.0);
+    }
+
+    #[test]
+    fn overlapping_intervals_merge() {
+        let cfg = FaultsConfig {
+            scripted: vec![
+                ScriptedCrash { node: 0, at_ms: 100.0, down_ms: 300.0 },
+                ScriptedCrash { node: 0, at_ms: 200.0, down_ms: 500.0 },
+            ],
+            reflash: ReconfigCost { bitstream_load_ms: 0.0, warmup_ms: 0.0 },
+            ..FaultsConfig::off()
+        };
+        let s = FaultSchedule::generate(&cfg, 1, 2_000_000_000, 1);
+        let o = s.outages();
+        assert_eq!(o.len(), 1, "overlapping outages must merge: {o:?}");
+        assert_eq!((o[0].start_ns, o[0].end_ns), (100_000_000, 700_000_000));
+        assert_eq!(s.total_down_ns(2_000_000_000), 600_000_000);
+    }
+}

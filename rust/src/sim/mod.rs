@@ -10,6 +10,9 @@
 //!                 arrival processes, per-node FIFO queues, tail-latency
 //!                 and queue-depth reporting, and mid-run plan switches
 //!                 with charged reconfiguration downtime
+//! * [`faults`]  — seeded chaos: node crash + rejoin re-flash, degraded
+//!                 switch ports, stragglers — injected as first-class
+//!                 DES events (DESIGN.md §14)
 //!
 //! Both simulators are energy-metered by [`crate::power`]: the analytic
 //! path reports steady-state J/image and per-node watts, the DES
@@ -19,7 +22,9 @@
 pub mod cluster;
 pub mod cost;
 pub mod des;
+pub mod faults;
 
 pub use cluster::{simulate, stage_io_bytes, stage_service_times, SimConfig, SimResult};
 pub use cost::CostModel;
 pub use des::{run_des, ArrivalProcess, DesConfig, DesResult, ReconfigEvent};
+pub use faults::{FaultSchedule, FaultsConfig, ScriptedCrash};

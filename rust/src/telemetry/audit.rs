@@ -32,6 +32,15 @@ pub enum AuditVerdict {
     SwitchOverload,
     /// Underload downshift to a lower-latency candidate.
     SwitchUnderload,
+    /// Emergency failover: the active plan references a dead node
+    /// (DESIGN.md §14). Bypasses the dwell clock.
+    SwitchFailover,
+    /// All nodes back in service → leave the survivor plan for the best
+    /// full-width candidate.
+    SwitchRestore,
+    /// Active plan references a dead node but no healthy candidate
+    /// exists (e.g. a concurrent multi-node outage).
+    HoldNoFailover,
     /// No branch fired — load sits in the hysteresis band.
     HoldSteady,
 }
@@ -46,6 +55,9 @@ impl AuditVerdict {
             AuditVerdict::HoldNotWorth => "hold-not-worth",
             AuditVerdict::SwitchOverload => "switch-overload",
             AuditVerdict::SwitchUnderload => "switch-underload",
+            AuditVerdict::SwitchFailover => "switch-failover",
+            AuditVerdict::SwitchRestore => "switch-restore",
+            AuditVerdict::HoldNoFailover => "hold-no-failover",
             AuditVerdict::HoldSteady => "hold-steady",
         }
     }
@@ -56,6 +68,8 @@ impl AuditVerdict {
             AuditVerdict::SwitchPowerCap
                 | AuditVerdict::SwitchOverload
                 | AuditVerdict::SwitchUnderload
+                | AuditVerdict::SwitchFailover
+                | AuditVerdict::SwitchRestore
         )
     }
 }
@@ -183,10 +197,16 @@ mod tests {
             (AuditVerdict::HoldDwell, "hold-dwell"),
             (AuditVerdict::SwitchPowerCap, "switch-power-cap"),
             (AuditVerdict::SwitchUnderload, "switch-underload"),
+            (AuditVerdict::SwitchFailover, "switch-failover"),
+            (AuditVerdict::SwitchRestore, "switch-restore"),
+            (AuditVerdict::HoldNoFailover, "hold-no-failover"),
         ] {
             assert_eq!(v.as_str(), s);
         }
         assert!(AuditVerdict::SwitchOverload.is_switch());
+        assert!(AuditVerdict::SwitchFailover.is_switch());
+        assert!(AuditVerdict::SwitchRestore.is_switch());
         assert!(!AuditVerdict::HoldNotWorth.is_switch());
+        assert!(!AuditVerdict::HoldNoFailover.is_switch());
     }
 }

@@ -25,6 +25,7 @@ use crate::util::json::{self, Json};
 
 const MASTER_TID: usize = 1000;
 const CONTROLLER_TID: usize = 2000;
+const FAULT_TID: usize = 3000;
 
 fn us(ns: u64) -> Json {
     json::num(ns as f64 / 1e3)
@@ -119,6 +120,9 @@ pub fn chrome_trace(runs: &[RunTelemetry]) -> Json {
         if !run.reconfigs.is_empty() || !run.audit.is_empty() {
             events.push(meta(pid, Some(CONTROLLER_TID), "thread_name", "controller"));
         }
+        if !run.faults.is_empty() {
+            events.push(meta(pid, Some(FAULT_TID), "thread_name", "faults"));
+        }
 
         for t in &run.traces {
             for s in &t.stages {
@@ -194,6 +198,22 @@ pub fn chrome_trace(runs: &[RunTelemetry]) -> Json {
             ));
         }
 
+        for f in &run.faults {
+            events.push(json::obj(vec![
+                ("name", json::str_(&format!("node {} {}", f.node, f.kind))),
+                ("cat", json::str_("fault")),
+                ("ph", json::str_("i")),
+                ("s", json::str_("p")),
+                ("pid", json::int(pid as i64)),
+                ("tid", json::int(FAULT_TID as i64)),
+                ("ts", us(f.at_ns)),
+                ("args", json::obj(vec![
+                    ("node", json::int(f.node as i64)),
+                    ("kind", json::str_(&f.kind)),
+                ])),
+            ]));
+        }
+
         for a in &run.audit {
             let fnum = |v: f64| if v.is_finite() { json::num(v) } else { Json::Null };
             events.push(json::obj(vec![
@@ -226,7 +246,7 @@ pub fn chrome_trace(runs: &[RunTelemetry]) -> Json {
 #[cfg(test)]
 mod tests {
     use super::super::audit::{AuditRecord, AuditVerdict};
-    use super::super::span::{ComputeSpan, ReconfigSpan, RequestTrace, StageSpan};
+    use super::super::span::{ComputeSpan, FaultMark, ReconfigSpan, RequestTrace, StageSpan};
     use super::*;
     use crate::telemetry::HdrHist;
 
@@ -267,6 +287,7 @@ mod tests {
                 ],
             }],
             windows: vec![],
+            faults: vec![FaultMark { at_ns: 4_000, node: 1, kind: "down".into() }],
             reconfigs: vec![ReconfigSpan {
                 start_ns: 10_000,
                 end_ns: 12_000,
@@ -307,7 +328,7 @@ mod tests {
             assert!(phases.contains(&ph), "missing phase {ph}: {phases:?}");
         }
         let cats = strs(evs, "cat");
-        for cat in ["compute", "queue", "net", "reconfig", "audit"] {
+        for cat in ["compute", "queue", "net", "reconfig", "audit", "fault"] {
             assert!(cats.contains(&cat), "missing cat {cat}: {cats:?}");
         }
         // async begin/end balance
@@ -354,6 +375,7 @@ mod tests {
         assert!(meta_names.contains(&"node 2".to_string()));
         assert!(meta_names.contains(&"master".to_string()));
         assert!(meta_names.contains(&"controller".to_string()));
+        assert!(meta_names.contains(&"faults".to_string()));
     }
 
     #[test]

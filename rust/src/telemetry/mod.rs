@@ -36,8 +36,8 @@ pub use chrome::chrome_trace;
 pub use clock::Clock;
 pub use hist::HdrHist;
 pub use span::{
-    ComputeSpan, ReconfigSpan, RequestTrace, StageSpan, StageWindow, TelemetryConfig,
-    Tracer, WindowRow, MAX_TRACES,
+    ComputeSpan, FaultMark, ReconfigSpan, RequestTrace, StageSpan, StageWindow,
+    TelemetryConfig, Tracer, WindowRow, MAX_TRACES,
 };
 
 use crate::util::json::{self, Json};
@@ -55,6 +55,8 @@ pub struct RunTelemetry {
     pub traces: Vec<RequestTrace>,
     pub windows: Vec<WindowRow>,
     pub reconfigs: Vec<ReconfigSpan>,
+    /// Fault-process transitions (node crash / rejoin, DESIGN.md §14).
+    pub faults: Vec<FaultMark>,
     pub audit: Vec<AuditRecord>,
     /// Run-level queue-wait per stage execution, ns.
     pub queue_hist: HdrHist,
@@ -108,6 +110,7 @@ impl RunTelemetry {
                                 ("events", json::int(w.events as i64)),
                                 ("arrivals", json::int(w.arrivals as i64)),
                                 ("completions", json::int(w.completions as i64)),
+                                ("stalled", Json::Bool(w.stalled)),
                                 (
                                     "stages",
                                     Json::Arr(
@@ -154,6 +157,21 @@ impl RunTelemetry {
                         .collect(),
                 ),
             ),
+            (
+                "faults",
+                Json::Arr(
+                    self.faults
+                        .iter()
+                        .map(|f| {
+                            json::obj(vec![
+                                ("at_ms", json::num(ns_to_ms(f.at_ns))),
+                                ("node", json::int(f.node as i64)),
+                                ("kind", json::str_(&f.kind)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("audit", Json::Arr(self.audit.iter().map(|a| a.to_json()).collect())),
         ])
     }
@@ -181,7 +199,8 @@ mod tests {
             },
         );
         t.done(0, 0, 3_000_000);
-        t.window(100.0, 10, 1, 1);
+        t.window(100.0, 10, 1, 1, false);
+        t.fault(2_000_000, 1, "down");
         let mut bundle = t.finish(Vec::new());
         bundle.label = "cell".into();
         bundle.engine = "des".into();
@@ -191,6 +210,12 @@ mod tests {
         assert_eq!(j.get("latency").unwrap().get_i64("count").unwrap(), 1);
         assert!((j.get("latency").unwrap().get_f64("p50_ms").unwrap() - 3.0).abs() < 0.05);
         assert_eq!(j.get("windows").unwrap().as_arr().unwrap().len(), 1);
+        let w0 = &j.get("windows").unwrap().as_arr().unwrap()[0];
+        assert_eq!(w0.get("stalled"), Some(&Json::Bool(false)));
+        let faults = j.get("faults").unwrap().as_arr().unwrap();
+        assert_eq!(faults.len(), 1);
+        assert_eq!(faults[0].get_str("kind").unwrap(), "down");
+        assert_eq!(faults[0].get_i64("node").unwrap(), 1);
         assert!(j.get("spans").is_none(), "raw spans must not bloat reports");
         // round-trips as valid JSON
         let text = json::pretty(&j);

@@ -134,6 +134,11 @@ pub struct WindowRow {
     pub events: u64,
     pub arrivals: u64,
     pub completions: u64,
+    /// Zero completions while work was in flight (DESIGN.md §14): the
+    /// window sat inside an outage / reconfiguration stall. Flagged
+    /// explicitly so an outage reads as "stalled", never as a silent
+    /// row of zeros that looks like an idle cluster.
+    pub stalled: bool,
     pub stages: Vec<StageWindow>,
 }
 
@@ -148,6 +153,16 @@ pub struct ReconfigSpan {
     pub reason: String,
 }
 
+/// A fault-process transition (DESIGN.md §14) — node crash or rejoin —
+/// as an instant mark on the trace timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultMark {
+    pub at_ns: Nanos,
+    pub node: usize,
+    /// `"down"` (crash) or `"up"` (rejoin after re-flash).
+    pub kind: String,
+}
+
 /// The live collector one DES run threads its hooks through. Built via
 /// [`Tracer::new`], which returns `None` when telemetry is off so every
 /// hook site is a null check.
@@ -159,6 +174,7 @@ pub struct Tracer {
     window_stages: BTreeMap<usize, (HdrHist, HdrHist)>,
     windows: Vec<WindowRow>,
     reconfigs: Vec<ReconfigSpan>,
+    faults: Vec<FaultMark>,
     /// Run-level histograms (never reset), in nanoseconds.
     queue_hist: HdrHist,
     service_hist: HdrHist,
@@ -173,6 +189,7 @@ impl Tracer {
             window_stages: BTreeMap::new(),
             windows: Vec::new(),
             reconfigs: Vec::new(),
+            faults: Vec::new(),
             queue_hist: HdrHist::new(),
             service_hist: HdrHist::new(),
             latency_hist: HdrHist::new(),
@@ -221,8 +238,16 @@ impl Tracer {
     }
 
     /// Close a control window: snapshot the per-stage histograms into a
-    /// [`WindowRow`] and reset them for the next epoch.
-    pub fn window(&mut self, t_ms: f64, events: u64, arrivals: u64, completions: u64) {
+    /// [`WindowRow`] and reset them for the next epoch. `stalled` flags
+    /// a zero-completion window with work still in flight (an outage).
+    pub fn window(
+        &mut self,
+        t_ms: f64,
+        events: u64,
+        arrivals: u64,
+        completions: u64,
+        stalled: bool,
+    ) {
         let p = |h: &HdrHist, q: f64| h.percentile(q).map(ns_to_ms).unwrap_or(0.0);
         let stages = self
             .window_stages
@@ -241,7 +266,12 @@ impl Tracer {
             q.reset();
             s.reset();
         }
-        self.windows.push(WindowRow { t_ms, events, arrivals, completions, stages });
+        self.windows.push(WindowRow { t_ms, events, arrivals, completions, stalled, stages });
+    }
+
+    /// A fault-process transition fired (node crash or rejoin).
+    pub fn fault(&mut self, at_ns: Nanos, node: usize, kind: &str) {
+        self.faults.push(FaultMark { at_ns, node, kind: kind.to_string() });
     }
 
     /// A reconfiguration executed (plan switch with downtime).
@@ -264,6 +294,7 @@ impl Tracer {
             traces: self.traces.into_values().collect(),
             windows: self.windows,
             reconfigs: self.reconfigs,
+            faults: self.faults,
             audit,
             queue_hist: self.queue_hist,
             service_hist: self.service_hist,
@@ -341,19 +372,32 @@ mod tests {
         let mut t = Tracer::new(&TelemetryConfig::on(1.0)).unwrap();
         t.admit(0, 0, 0);
         t.stage(0, span(0, 0, 0, 1_000_000, 2_000_000));
-        t.window(100.0, 42, 3, 1);
+        t.window(100.0, 42, 3, 1, false);
         assert_eq!(t.windows.len(), 1);
         let w = &t.windows[0];
         assert_eq!((w.events, w.arrivals, w.completions), (42, 3, 1));
+        assert!(!w.stalled);
         assert_eq!(w.stages.len(), 1);
         assert_eq!(w.stages[0].count, 1);
         assert!((w.stages[0].queue_p50_ms - 1.0).abs() / 1.0 < 0.01);
         assert!((w.stages[0].service_p50_ms - 2.0).abs() / 2.0 < 0.01);
         // next window is empty: stage hists were reset
-        t.window(200.0, 0, 0, 0);
+        t.window(200.0, 0, 0, 0, true);
         assert!(t.windows[1].stages.is_empty());
+        assert!(t.windows[1].stalled, "outage window must carry its flag");
         // run-level hist unaffected by the reset
         assert_eq!(t.queue_hist.count(), 1);
+    }
+
+    #[test]
+    fn fault_marks_flow_into_the_bundle() {
+        let mut t = Tracer::new(&TelemetryConfig::on(1.0)).unwrap();
+        t.fault(5_000_000, 2, "down");
+        t.fault(9_000_000, 2, "up");
+        let bundle = t.finish(Vec::new());
+        assert_eq!(bundle.faults.len(), 2);
+        assert_eq!(bundle.faults[0], FaultMark { at_ns: 5_000_000, node: 2, kind: "down".into() });
+        assert_eq!(bundle.faults[1].kind, "up");
     }
 
     #[test]

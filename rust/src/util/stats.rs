@@ -92,6 +92,18 @@ impl Summary {
         self.percentile(99.0).unwrap_or(f64::NAN)
     }
 
+    /// Fraction of samples ≤ `x` — the SLO-attainment primitive. `None`
+    /// when no samples were recorded: a zero-completion window (e.g. a
+    /// full-cluster outage) must surface as "unmeasured", never as a
+    /// silent `0.0` that reads like a real attainment figure.
+    pub fn fraction_at_or_below(&self, x: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let n = self.samples.iter().filter(|&&v| v <= x).count();
+        Some(n as f64 / self.samples.len() as f64)
+    }
+
     /// `mean ± std (n=..)` single-line rendering with a unit suffix.
     pub fn display(&self, unit: &str) -> String {
         if self.is_empty() {
@@ -152,6 +164,16 @@ mod tests {
         assert_eq!(s.mean(), 0.0);
         // display must not panic and must flag the empty sample set
         assert!(s.display("ms").contains("n=0"));
+    }
+
+    #[test]
+    fn fraction_at_or_below_explicit_on_empty() {
+        // the outage-window fix: an empty summary is "unmeasured", not 0
+        assert_eq!(Summary::new().fraction_at_or_below(10.0), None);
+        let s = Summary::from_samples([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.fraction_at_or_below(2.0), Some(0.5));
+        assert_eq!(s.fraction_at_or_below(0.5), Some(0.0));
+        assert_eq!(s.fraction_at_or_below(4.0), Some(1.0));
     }
 
     #[test]

@@ -110,7 +110,7 @@ fn every_example_scenario_runs_fast_with_the_shared_schema() {
         assert_report_schema(&report.to_json(), &name);
         ran += 1;
     }
-    assert!(ran >= 7, "expected the shipped scenario set, found {ran}");
+    assert!(ran >= 10, "expected the shipped scenario set, found {ran}");
     // the acceptance bar: one schema across both engines
     assert!(
         engines.contains("analytic") && engines.contains("des"),
@@ -159,6 +159,7 @@ fn simulate_via_session_matches_pre_refactor_numbers_exactly() {
         latency_ms: r.latency_ms.mean(),
         avg_power_w: r.power.cluster_avg_w,
         j_per_image: r.power.j_per_image,
+        node_map: None,
     }];
     let rate = 0.7 * capacity;
     let cfg = DesConfig::new(

@@ -422,6 +422,181 @@ fn prop_tracing_never_changes_the_simulation() {
 }
 
 #[test]
+fn prop_fault_free_faults_block_is_byte_identical_to_no_block() {
+    // the zero-cost-off invariant at the outermost layer (DESIGN.md §14):
+    // for any random scenario, adding an empty `faults` block changes
+    // nothing — the Report JSON is byte-for-byte the report without it
+    use vta_cluster::scenario::{ScenarioSpec, Session};
+    use vta_cluster::util::json;
+    forall("empty faults block is invisible", 4, |rng| {
+        let model = *rng.choice(&["lenet5", "mlp"]);
+        let strategy = *rng.choice(&["sg", "pipeline", "ai"]);
+        let n = rng.range(1, 4);
+        let seed = rng.next_u64() % 100_000;
+        let controller = rng.below(2) == 1;
+        let spec = |faults: &str| {
+            format!(
+                r#"{{
+                  "name": "prop-off", "engine": "des",
+                  "model": "{model}", "strategy": "{strategy}",
+                  "family": "zynq", "nodes": {n},
+                  "arrival": {{"kind": "poisson"}},
+                  "controller": {{"enabled": {controller}}},
+                  "slo_ms": 100{faults},
+                  "horizon_ms": 1200, "seed": {seed}
+                }}"#
+            )
+        };
+        let run = |text: &str| -> Result<String, String> {
+            let rep = Session::new(ScenarioSpec::parse(text).map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?
+                .with_calibration(Calibration::default())
+                .fast(true)
+                .run()
+                .map_err(|e| e.to_string())?;
+            Ok(json::pretty(&rep.to_json()))
+        };
+        let without = run(&spec(""))?;
+        let with = run(&spec(r#", "faults": {}"#))?;
+        prop_assert!(
+            with == without,
+            "{model} {strategy} n={n} seed={seed}: empty faults block changed the report"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chaos_span_trees_conserve_time_exactly() {
+    // the §13 span-conservation invariant must survive chaos (DESIGN.md
+    // §14): with a mid-run crash + rejoin, a straggler and a degraded
+    // port all active, every finished trace still chains gaplessly and
+    // its net + queue + compute spans cover the latency to the nanosecond
+    use vta_cluster::sim::{FaultsConfig, ScriptedCrash};
+    use vta_cluster::telemetry::TelemetryConfig;
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::default(),
+    );
+    let graphs: Vec<_> =
+        zoo::names().iter().map(|m| zoo::build(m, 0).unwrap()).collect();
+    forall("chaos span trees conserve time", 5, |rng| {
+        let g = rng.choice(&graphs);
+        let strategy = *rng.choice(&Strategy::all());
+        let n = rng.range(2, 5);
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+        let opts = plan_options(g, &cluster, &mut cost, &[strategy])
+            .map_err(|e| e.to_string())?;
+        let cap = opts[0].capacity_img_per_sec;
+        let horizon_ms = (150.0 / cap * 1e3).max(20.0 * opts[0].latency_ms);
+        let mut cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 0.5 * cap },
+            horizon_ms,
+            rng.next_u64(),
+        );
+        cfg.telemetry = TelemetryConfig::on(1.0);
+        cfg.faults = FaultsConfig {
+            scripted: vec![ScriptedCrash {
+                node: rng.range(0, n),
+                at_ms: (0.2 + 0.2 * rng.f64()) * horizon_ms,
+                down_ms: 0.1 * horizon_ms,
+            }],
+            stragglers: 1,
+            straggler_factor: 1.5 + 2.5 * rng.f64(),
+            degraded_ports: 1,
+            port_factor: 1.5 + 2.5 * rng.f64(),
+            ..FaultsConfig::off()
+        };
+        let r = run_des(&opts, 0, &cluster, &mut cost, g, &cfg, None)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(r.availability < 1.0, "the scripted crash must register");
+        prop_assert!(!r.faults.is_empty(), "no outage materialized");
+        let tel = r.telemetry.ok_or("tracing on but no telemetry")?;
+        let mut finished = 0u64;
+        for t in &tel.traces {
+            let Some(done) = t.done_ns else { continue };
+            finished += 1;
+            let mut cursor = t.admitted_ns;
+            let mut total = 0u64;
+            for s in &t.stages {
+                prop_assert!(
+                    s.start_ns == cursor,
+                    "img {}: stage gap at {} (expected {cursor})",
+                    t.img,
+                    s.start_ns
+                );
+                prop_assert!(
+                    s.net_ns + s.queue_ns + s.compute_ns == s.end_ns - s.start_ns,
+                    "img {}: stage spans don't cover the stage",
+                    t.img
+                );
+                total += s.net_ns + s.queue_ns + s.compute_ns;
+                cursor = s.end_ns;
+            }
+            prop_assert!(
+                cursor == done && total == done - t.admitted_ns,
+                "img {}: spans sum to {total}, latency {}",
+                t.img,
+                done - t.admitted_ns
+            );
+        }
+        prop_assert!(
+            finished > 0,
+            "{} {strategy} n={n}: no trace finished under chaos",
+            g.model
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partial_tier_cheaper_and_availability_monotone_in_crash_rate() {
+    // the two §14 ordering invariants. Partial ≤ full downtime per board
+    // family is structural; availability monotone non-increasing in the
+    // crash rate is exact under a fixed seed because the per-slot
+    // thinning construction accepts a superset of crash intervals as the
+    // rate rises (see `sim::faults`).
+    use vta_cluster::config::{ReconfigCost, ReconfigTier};
+    use vta_cluster::sim::{FaultSchedule, FaultsConfig};
+    for fam in [BoardFamily::Zynq7000, BoardFamily::UltraScalePlus] {
+        let full = ReconfigCost::for_family_tier(fam, ReconfigTier::Full);
+        let partial = ReconfigCost::for_family_tier(fam, ReconfigTier::Partial);
+        assert!(
+            partial.downtime_ms() <= full.downtime_ms(),
+            "{fam:?}: partial tier ({} ms) dearer than full ({} ms)",
+            partial.downtime_ms(),
+            full.downtime_ms()
+        );
+    }
+    forall("availability monotone in crash rate", 25, |rng| {
+        let seed = rng.next_u64();
+        let n = rng.range(1, 7);
+        let horizon_ns = rng.range(2_000, 12_000) as u64 * 1_000_000;
+        let down_ms = 50.0 + rng.f64() * 400.0;
+        let mut prev = 1.0f64;
+        let mut mean_up = 4000.0 + rng.f64() * 8000.0;
+        for _ in 0..4 {
+            let cfg = FaultsConfig {
+                crash_mean_up_ms: mean_up,
+                crash_mean_down_ms: down_ms,
+                ..FaultsConfig::off()
+            };
+            let s = FaultSchedule::generate(&cfg, n, horizon_ns, seed);
+            let a = s.availability(horizon_ns);
+            prop_assert!((0.0..=1.0).contains(&a), "availability {a} out of range");
+            prop_assert!(
+                a <= prev + 1e-12,
+                "seed {seed} n={n}: availability rose {prev} → {a} as mean_up fell to {mean_up}"
+            );
+            prev = a;
+            mean_up /= 4.0;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_partition_contiguity_and_coverage() {
     use vta_cluster::graph::partition::partition_balanced;
     let g = build_resnet18(224).unwrap();
