@@ -6,10 +6,13 @@
 #                      ($VTA_ARTIFACTS overrides).
 #   make test        — tier-1 verify (rust) + python unit tests if pytest
 #                      is available.
+#   make bench       — run the tracked bench suites and gate them against
+#                      the checked-in baselines (rust/benches/baselines/,
+#                      DESIGN.md §15).
 
 ARTIFACTS ?= ../rust/artifacts
 
-.PHONY: artifacts test rust-test python-test
+.PHONY: artifacts test rust-test python-test bench
 
 artifacts:
 	cd python && python3 -m compile.aot --out $(ARTIFACTS)
@@ -21,3 +24,6 @@ rust-test:
 
 python-test:
 	-python3 -m pytest -q python/tests
+
+bench:
+	cd rust && cargo build --release && ./target/release/vtacluster bench --check

@@ -2,132 +2,22 @@
 //! `BENCH_faults.json` (recovery p50/p99, availability, SLO attainment,
 //! stalled windows; controller-on vs controller-off on the same seed).
 //!
-//! The headline trajectory is the failover controller's value under a
-//! mid-run node crash: attainment/availability with the controller
-//! re-planning onto survivors versus the same faulted run pinned to its
-//! static plan (DESIGN.md §14, EXPERIMENTS.md §E14).
+//! Thin wrapper over [`vta_cluster::exp::bench_suites::faults_suite`]
+//! (DESIGN.md §14, EXPERIMENTS.md §E14). `vtacluster bench --check`
+//! gates the deterministic columns against
+//! `rust/benches/baselines/BENCH_faults.json`.
 //!
 //! `VTA_BENCH_FAST=1` clamps horizons via the session's fast mode.
 //! Run: `cargo bench --bench chaos_faults`
 
+use std::path::Path;
 use vta_cluster::config::Calibration;
+use vta_cluster::exp::bench_suites::faults_suite;
 use vta_cluster::runtime::artifacts_dir;
-use vta_cluster::scenario::{Report, ScenarioSpec, Session};
-use vta_cluster::util::bench::Bench;
-use vta_cluster::util::json::{self, Json};
-
-fn run(text: &str, calib: &Calibration) -> Report {
-    Session::new(ScenarioSpec::parse(text).expect("bench spec parses"))
-        .expect("bench spec validates")
-        .with_calibration(calib.clone())
-        .run()
-        .expect("bench scenario runs")
-}
-
-fn chaos_spec(controller: bool) -> String {
-    format!(
-        r#"{{
-          "name": "bench-chaos-crash", "engine": "des",
-          "model": "lenet5", "strategy": "pipeline", "family": "zynq", "nodes": 3,
-          "arrival": {{"kind": "poisson"}}, "slo_ms": 60,
-          "controller": {{"enabled": {controller}}},
-          "faults": {{"crashes": [{{"node": 1, "at_ms": 600, "down_ms": 700}}]}},
-          "horizon_ms": 2400, "seed": 21
-        }}"#
-    )
-}
-
-fn row_json(tag: &str, rep: &Report) -> Json {
-    let r = &rep.rows[0];
-    json::obj(vec![
-        ("run", json::str_(tag)),
-        ("availability", json::num(r.availability)),
-        (
-            "slo_attainment",
-            if r.slo_attainment.is_finite() {
-                json::num(r.slo_attainment)
-            } else {
-                Json::Null
-            },
-        ),
-        (
-            "recovery_p50_ms",
-            if r.recovery_p50_ms.is_finite() {
-                json::num(r.recovery_p50_ms)
-            } else {
-                Json::Null
-            },
-        ),
-        (
-            "recovery_p99_ms",
-            if r.recovery_p99_ms.is_finite() {
-                json::num(r.recovery_p99_ms)
-            } else {
-                Json::Null
-            },
-        ),
-        ("stalled_windows", json::int(r.stalled_windows as i64)),
-        ("completed", json::int(r.completed as i64)),
-        ("reconfigs", json::int(r.reconfigs as i64)),
-        ("p99_ms", if r.p99_ms.is_finite() { json::num(r.p99_ms) } else { Json::Null }),
-    ])
-}
 
 fn main() {
-    let mut b = Bench::new("chaos_faults");
     let calib = Calibration::load_or_default(&artifacts_dir());
-
-    let mut out = Vec::new();
-    for (tag, text) in [
-        ("crash-controller-on", chaos_spec(true)),
-        ("crash-controller-off", chaos_spec(false)),
-        (
-            "random-crashes",
-            r#"{
-              "name": "bench-chaos-random", "engine": "des",
-              "model": "lenet5", "strategy": "sg", "family": "zynq", "nodes": 4,
-              "arrival": {"kind": "poisson"}, "slo_ms": 80,
-              "controller": {"enabled": true},
-              "faults": {"crash_mean_up_ms": 1500, "crash_mean_down_ms": 250},
-              "horizon_ms": 2400, "seed": 33
-            }"#
-            .to_string(),
-        ),
-        (
-            "stragglers",
-            r#"{
-              "name": "bench-chaos-straggler", "engine": "des",
-              "model": "lenet5", "strategy": "sg", "family": "zynq", "nodes": 4,
-              "arrival": {"kind": "poisson"}, "slo_ms": 80,
-              "controller": {"enabled": true},
-              "faults": {"stragglers": 1, "straggler_factor": 3.0},
-              "horizon_ms": 2400, "seed": 33
-            }"#
-            .to_string(),
-        ),
-    ] {
-        let rep = run(&text, &calib);
-        let r = &rep.rows[0];
-        b.row(&format!(
-            "{tag:22} avail {:>6.4}  slo {:>6}  recovery p50 {:>8}  stalled {:>2}  completed {:>5}",
-            r.availability,
-            if r.slo_attainment.is_finite() {
-                format!("{:.3}", r.slo_attainment)
-            } else {
-                "n/a".to_string()
-            },
-            if r.recovery_p50_ms.is_finite() {
-                format!("{:.1}ms", r.recovery_p50_ms)
-            } else {
-                "n/a".to_string()
-            },
-            r.stalled_windows,
-            r.completed,
-        ));
-        out.push(row_json(tag, &rep));
-    }
-
-    std::fs::write("BENCH_faults.json", json::pretty(&Json::Arr(out))).unwrap();
-    b.row("wrote BENCH_faults.json");
-    b.finish();
+    let report = faults_suite(&calib).expect("faults suite runs");
+    report.write(Path::new("BENCH_faults.json")).expect("write BENCH_faults.json");
+    println!("wrote BENCH_faults.json");
 }

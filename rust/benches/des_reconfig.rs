@@ -1,129 +1,23 @@
 //! E10 — dynamic-load DES + reconfiguration-controller bench.
 //!
-//! Drives ResNet-18 on a 4-node Zynq stack through three load
-//! scenarios (steady poisson, burst with the controller off, burst with
-//! the controller on), prints the latency tails, and writes
-//! `BENCH_des.json` (p50/p95/p99 + img/s per scenario, plus the
-//! engine's own events-processed / events-per-second gauges) so CI can
-//! track the perf trajectory. `VTA_BENCH_FAST=1` shrinks the horizon
-//! for smoke runs.
+//! Thin wrapper over [`vta_cluster::exp::bench_suites::des_suite`]: runs
+//! ResNet-18 on a 4-node Zynq stack through three load scenarios and
+//! writes `BENCH_des.json` in the stable [`BenchReport`] schema that
+//! `vtacluster bench --check` gates against
+//! `rust/benches/baselines/BENCH_des.json`. `VTA_BENCH_FAST=1` shrinks
+//! the horizon for smoke runs.
 //!
 //! Run: `cargo bench --bench des_reconfig`
 
-use vta_cluster::config::{
-    BoardFamily, BoardProfile, Calibration, ClusterConfig, ReconfigCost, VtaConfig,
-};
-use vta_cluster::graph::zoo;
+use std::path::Path;
+use vta_cluster::config::Calibration;
+use vta_cluster::exp::bench_suites::des_suite;
 use vta_cluster::runtime::artifacts_dir;
-use vta_cluster::sched::{plan_options, ControllerConfig, OnlineController, Strategy};
-use vta_cluster::sim::{run_des, ArrivalProcess, CostModel, DesConfig, DesResult};
-use vta_cluster::util::bench::Bench;
-use vta_cluster::util::json::{self, Json};
-
-fn scenario_json(r: &DesResult) -> Json {
-    json::obj(vec![
-        ("seed", json::num(r.seed as f64)),
-        ("offered", json::num(r.offered as f64)),
-        ("completed", json::num(r.completed as f64)),
-        ("img_per_sec", json::num(r.throughput_img_per_sec)),
-        ("p50_ms", json::num(r.latency_ms.percentile(50.0).unwrap_or(0.0))),
-        ("p95_ms", json::num(r.latency_ms.percentile(95.0).unwrap_or(0.0))),
-        ("p99_ms", json::num(r.latency_ms.percentile(99.0).unwrap_or(0.0))),
-        ("max_backlog", json::num(r.max_backlog as f64)),
-        ("reconfigs", json::num(r.reconfigs.len() as f64)),
-        ("downtime_ms", json::num(r.downtime_ms)),
-        ("events_processed", json::num(r.events_processed as f64)),
-        // events per *simulated* second (deterministic) and per host
-        // wall second (the engine-speed gauge CI plots)
-        ("events_per_sec", json::num(r.events_per_sec)),
-        (
-            "events_per_sec_wall",
-            json::num(if r.wall_ms > 0.0 {
-                r.events_processed as f64 / (r.wall_ms / 1e3)
-            } else {
-                0.0
-            }),
-        ),
-    ])
-}
+use vta_cluster::util::bench::BenchReport;
 
 fn main() {
-    let mut b = Bench::new("des_reconfig");
-    let fast = std::env::var("VTA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
-    let horizon_ms = if fast { 6000.0 } else { 20000.0 };
-    let seed = 7u64;
-
-    let family = BoardFamily::Zynq7000;
     let calib = Calibration::load_or_default(&artifacts_dir());
-    let g = zoo::build("resnet18", 0).unwrap();
-    let vta = VtaConfig::table1_zynq7000();
-    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(family), calib);
-    let cluster = ClusterConfig::homogeneous(family, 4).with_vta(vta);
-    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all()).unwrap();
-    for o in &options {
-        b.row(&format!(
-            "candidate {:22} capacity {:8.1} img/s  latency {:7.3} ms",
-            o.plan.strategy.to_string(),
-            o.capacity_img_per_sec,
-            o.latency_ms
-        ));
-    }
-    let initial = options
-        .iter()
-        .position(|o| o.plan.strategy == Strategy::CoreAssign)
-        .unwrap();
-    let cap0 = options[initial].capacity_img_per_sec;
-
-    let mut results: Vec<(&str, DesResult)> = Vec::new();
-
-    // steady poisson at 70% of the initial plan's capacity
-    let cfg = DesConfig::new(
-        ArrivalProcess::Poisson { rate_per_sec: 0.7 * cap0 },
-        horizon_ms,
-        seed,
-    );
-    let r = run_des(&options, initial, &cluster, &mut cost, &g, &cfg, None).unwrap();
-    results.push(("poisson_steady", r));
-
-    // bursty MMPP that overloads the initial plan during bursts — the
-    // same stream `vtacluster load --arrival burst --rate 0` generates
-    let burst = ArrivalProcess::parse("burst", 0.55 * cap0, 4.0).unwrap();
-    let cfg = DesConfig::new(burst, horizon_ms, seed);
-    let r = run_des(&options, initial, &cluster, &mut cost, &g, &cfg, None).unwrap();
-    results.push(("burst_controller_off", r));
-
-    let mut ctrl =
-        OnlineController::new(ControllerConfig::default(), ReconfigCost::for_family(family))
-            .unwrap();
-    let r =
-        run_des(&options, initial, &cluster, &mut cost, &g, &cfg, Some(&mut ctrl)).unwrap();
-    results.push(("burst_controller_on", r));
-
-    for (name, r) in &results {
-        b.row(&format!(
-            "{name:22} seed {seed}: {:5}/{:5} images, {:7.1} img/s, p50 {:8.2} ms, \
-             p99 {:9.2} ms, reconfigs {} ({:.0} ms downtime)",
-            r.completed,
-            r.offered,
-            r.throughput_img_per_sec,
-            r.latency_ms.percentile(50.0).unwrap_or(0.0),
-            r.latency_ms.percentile(99.0).unwrap_or(0.0),
-            r.reconfigs.len(),
-            r.downtime_ms,
-        ));
-        b.row(&format!(
-            "{name:22} engine: {} events, {:.0} ev/sim-s, {:.0} ev/wall-s ({:.1} ms wall)",
-            r.events_processed,
-            r.events_per_sec,
-            if r.wall_ms > 0.0 { r.events_processed as f64 / (r.wall_ms / 1e3) } else { 0.0 },
-            r.wall_ms,
-        ));
-    }
-
-    let out = json::obj(
-        results.iter().map(|(name, r)| (*name, scenario_json(r))).collect(),
-    );
-    std::fs::write("BENCH_des.json", out.to_string_pretty()).unwrap();
-    b.row("wrote BENCH_des.json");
-    b.finish();
+    let report: BenchReport = des_suite(&calib).expect("des suite runs");
+    report.write(Path::new("BENCH_des.json")).expect("write BENCH_des.json");
+    println!("wrote BENCH_des.json");
 }

@@ -2,19 +2,21 @@
 //! through the scenario layer and track wall time, row counts and the
 //! headline metrics as `BENCH_scenarios.json`.
 //!
-//! This is the perf trajectory of the API seam itself: if spec
-//! resolution, sweep expansion or report assembly regresses, the wall
-//! numbers move even when the simulators do not.
+//! Thin wrapper over
+//! [`vta_cluster::exp::bench_suites::scenarios_suite`] — the perf
+//! trajectory of the API seam itself: if spec resolution, sweep
+//! expansion or report assembly regresses, the numbers move even when
+//! the simulators do not. `vtacluster bench --check` gates the
+//! deterministic columns against
+//! `rust/benches/baselines/BENCH_scenarios.json`.
 //!
 //! `VTA_BENCH_FAST=1` clamps DES horizons/streams (the session's fast
 //! mode). Run: `cargo bench --bench scenario_suite`
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use vta_cluster::config::Calibration;
+use vta_cluster::exp::bench_suites::scenarios_suite;
 use vta_cluster::runtime::artifacts_dir;
-use vta_cluster::scenario::{Report, ScenarioSpec, Session, Sweep};
-use vta_cluster::util::bench::Bench;
-use vta_cluster::util::json::{self, Json};
 
 fn scenarios_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR"))
@@ -24,48 +26,9 @@ fn scenarios_dir() -> PathBuf {
         .join("scenarios")
 }
 
-fn run_doc(doc: &Json, calib: &Calibration) -> anyhow::Result<Report> {
-    match Sweep::from_doc(doc)? {
-        Some(sweep) => sweep.run(calib),
-        None => Session::new(ScenarioSpec::from_json(doc)?)?
-            .with_calibration(calib.clone())
-            .run(),
-    }
-}
-
 fn main() {
-    let mut b = Bench::new("scenario_suite");
     let calib = Calibration::load_or_default(&artifacts_dir());
-    let mut entries: Vec<PathBuf> = std::fs::read_dir(scenarios_dir())
-        .expect("examples/scenarios")
-        .map(|e| e.unwrap().path())
-        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
-        .collect();
-    entries.sort();
-
-    let mut out = Vec::new();
-    for path in &entries {
-        let name = path.file_stem().unwrap().to_string_lossy().to_string();
-        let doc = json::from_file(path).unwrap();
-        let t0 = std::time::Instant::now();
-        let report = run_doc(&doc, &calib).unwrap_or_else(|e| panic!("{name}: {e}"));
-        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let completed: i64 = report.rows.iter().map(|r| r.completed as i64).sum();
-        b.row(&format!(
-            "{name:24} {:>3} row(s)  {:>3} event(s)  {completed:>6} images  {wall_ms:>8.1} ms wall",
-            report.rows.len(),
-            report.events.len(),
-        ));
-        out.push(json::obj(vec![
-            ("scenario", json::str_(&name)),
-            ("engine", json::str_(&report.engine)),
-            ("rows", json::int(report.rows.len() as i64)),
-            ("events", json::int(report.events.len() as i64)),
-            ("completed", json::int(completed)),
-            ("wall_ms", json::num(wall_ms)),
-        ]));
-    }
-    std::fs::write("BENCH_scenarios.json", json::pretty(&Json::Arr(out))).unwrap();
-    b.row("wrote BENCH_scenarios.json");
-    b.finish();
+    let report = scenarios_suite(&scenarios_dir(), &calib).expect("scenario suite runs");
+    report.write(Path::new("BENCH_scenarios.json")).expect("write BENCH_scenarios.json");
+    println!("wrote BENCH_scenarios.json");
 }

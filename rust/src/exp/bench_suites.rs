@@ -1,0 +1,310 @@
+//! The three tracked bench suites behind `vtacluster bench` and the
+//! `cargo bench` wrappers (DESIGN.md §15).
+//!
+//! Each suite runs a fixed set of seeded scenarios and returns a
+//! [`BenchReport`] in the stable `BENCH_*.json` schema:
+//!
+//! * [`des_suite`]       — E10 dynamic-load DES + controller trajectory
+//!   (`BENCH_des.json`)
+//! * [`scenarios_suite`] — E12 scenario-layer wall/row trajectory over
+//!   `examples/scenarios/` (`BENCH_scenarios.json`)
+//! * [`faults_suite`]    — E14 chaos figures: availability, attainment,
+//!   recovery tails (`BENCH_faults.json`)
+//!
+//! The deterministic `metrics` of each entry are what
+//! `vtacluster bench --check` gates against the checked-in baselines in
+//! `rust/benches/baselines/` with a relative tolerance; `wall` figures
+//! ride along ungated. `VTA_BENCH_FAST=1` shrinks horizons (recorded in
+//! the report's `fast` flag so mismatched modes are never compared).
+
+use crate::config::{
+    BoardFamily, BoardProfile, Calibration, ClusterConfig, ReconfigCost, VtaConfig,
+};
+use crate::graph::zoo;
+use crate::scenario::{Report, ScenarioSpec, Session, Sweep};
+use crate::sched::{plan_options, ControllerConfig, OnlineController, Strategy};
+use crate::sim::{run_des, ArrivalProcess, CostModel, DesConfig, DesResult};
+use crate::util::bench::{Bench, BenchEntry, BenchReport};
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+/// All suites, in canonical order: `(file stem, builder)`.
+pub const SUITE_NAMES: [&str; 3] = ["des", "scenarios", "faults"];
+
+fn des_entry(name: &str, r: &DesResult) -> BenchEntry {
+    BenchEntry::new(name)
+        .metric("offered", r.offered as f64)
+        .metric("completed", r.completed as f64)
+        .metric("img_per_sec", r.throughput_img_per_sec)
+        .metric("p50_ms", r.latency_ms.percentile(50.0).unwrap_or(f64::NAN))
+        .metric("p95_ms", r.latency_ms.percentile(95.0).unwrap_or(f64::NAN))
+        .metric("p99_ms", r.latency_ms.percentile(99.0).unwrap_or(f64::NAN))
+        .metric("max_backlog", r.max_backlog as f64)
+        .metric("reconfigs", r.reconfigs.len() as f64)
+        .metric("downtime_ms", r.downtime_ms)
+        .metric("events_processed", r.events_processed as f64)
+        .metric("events_per_sec", r.events_per_sec)
+        .wall(
+            "events_per_sec_wall",
+            if r.wall_ms > 0.0 { r.events_processed as f64 / (r.wall_ms / 1e3) } else { 0.0 },
+        )
+        .wall("wall_ms", r.wall_ms)
+}
+
+/// E10: ResNet-18 on a 4-node Zynq stack through three load scenarios —
+/// steady poisson, burst with the controller off, burst with it on.
+pub fn des_suite(calib: &Calibration) -> anyhow::Result<BenchReport> {
+    let mut b = Bench::new("des_reconfig");
+    let mut report = BenchReport::new("des");
+    let horizon_ms = if report.fast { 6000.0 } else { 20000.0 };
+    let seed = 7u64;
+
+    let family = BoardFamily::Zynq7000;
+    let g = zoo::build("resnet18", 0)?;
+    let vta = VtaConfig::table1_zynq7000();
+    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(family), calib.clone());
+    let cluster = ClusterConfig::homogeneous(family, 4).with_vta(vta);
+    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all())?;
+    for o in &options {
+        b.row(&format!(
+            "candidate {:22} capacity {:8.1} img/s  latency {:7.3} ms",
+            o.plan.strategy.to_string(),
+            o.capacity_img_per_sec,
+            o.latency_ms
+        ));
+    }
+    let initial = options
+        .iter()
+        .position(|o| o.plan.strategy == Strategy::CoreAssign)
+        .expect("core-assign is always a candidate");
+    let cap0 = options[initial].capacity_img_per_sec;
+
+    let mut results: Vec<(&str, DesResult)> = Vec::new();
+
+    // steady poisson at 70% of the initial plan's capacity
+    let cfg = DesConfig::new(
+        ArrivalProcess::Poisson { rate_per_sec: 0.7 * cap0 },
+        horizon_ms,
+        seed,
+    );
+    let r = run_des(&options, initial, &cluster, &mut cost, &g, &cfg, None)?;
+    results.push(("poisson_steady", r));
+
+    // bursty MMPP that overloads the initial plan during bursts — the
+    // same stream `vtacluster load --arrival burst --rate 0` generates
+    let burst = ArrivalProcess::parse("burst", 0.55 * cap0, 4.0)?;
+    let cfg = DesConfig::new(burst, horizon_ms, seed);
+    let r = run_des(&options, initial, &cluster, &mut cost, &g, &cfg, None)?;
+    results.push(("burst_controller_off", r));
+
+    let mut ctrl =
+        OnlineController::new(ControllerConfig::default(), ReconfigCost::for_family(family))?;
+    let r = run_des(&options, initial, &cluster, &mut cost, &g, &cfg, Some(&mut ctrl))?;
+    results.push(("burst_controller_on", r));
+
+    for (name, r) in &results {
+        b.row(&format!(
+            "{name:22} seed {seed}: {:5}/{:5} images, {:7.1} img/s, p50 {:8.2} ms, \
+             p99 {:9.2} ms, reconfigs {} ({:.0} ms downtime)",
+            r.completed,
+            r.offered,
+            r.throughput_img_per_sec,
+            r.latency_ms.percentile(50.0).unwrap_or(0.0),
+            r.latency_ms.percentile(99.0).unwrap_or(0.0),
+            r.reconfigs.len(),
+            r.downtime_ms,
+        ));
+        b.row(&format!(
+            "{name:22} engine: {} events, {:.0} ev/sim-s, {:.0} ev/wall-s ({:.1} ms wall)",
+            r.events_processed,
+            r.events_per_sec,
+            if r.wall_ms > 0.0 { r.events_processed as f64 / (r.wall_ms / 1e3) } else { 0.0 },
+            r.wall_ms,
+        ));
+        report.push(des_entry(name, r));
+    }
+    b.finish();
+    Ok(report)
+}
+
+/// E12: every `examples/scenarios/*.json` through the scenario layer —
+/// the perf trajectory of the API seam itself (spec resolution, sweep
+/// expansion, report assembly).
+pub fn scenarios_suite(dir: &Path, calib: &Calibration) -> anyhow::Result<BenchReport> {
+    let mut b = Bench::new("scenario_suite");
+    let mut report = BenchReport::new("scenarios");
+    let mut entries: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("scenario dir {}: {e}", dir.display()))?
+        .map(|e| Ok(e?.path()))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    entries.retain(|p| p.extension().and_then(|e| e.to_str()) == Some("json"));
+    entries.sort();
+    anyhow::ensure!(!entries.is_empty(), "no scenarios in {}", dir.display());
+
+    for path in &entries {
+        let name = path.file_stem().unwrap_or_default().to_string_lossy().to_string();
+        let doc = json::from_file(path)?;
+        let t0 = std::time::Instant::now();
+        let rep = run_doc(&doc, calib).map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let completed: u64 = rep.rows.iter().map(|r| r.completed).sum();
+        b.row(&format!(
+            "{name:24} {:>3} row(s)  {:>3} event(s)  {completed:>6} images  {wall_ms:>8.1} ms wall",
+            rep.rows.len(),
+            rep.events.len(),
+        ));
+        report.push(
+            BenchEntry::new(&name)
+                .metric("rows", rep.rows.len() as f64)
+                .metric("events", rep.events.len() as f64)
+                .metric("completed", completed as f64)
+                .wall("wall_ms", wall_ms),
+        );
+    }
+    b.finish();
+    Ok(report)
+}
+
+fn run_doc(doc: &Json, calib: &Calibration) -> anyhow::Result<Report> {
+    match Sweep::from_doc(doc)? {
+        Some(sweep) => sweep.run(calib),
+        None => Session::new(ScenarioSpec::from_json(doc)?)?
+            .with_calibration(calib.clone())
+            .run(),
+    }
+}
+
+fn chaos_spec(controller: bool) -> String {
+    format!(
+        r#"{{
+          "name": "bench-chaos-crash", "engine": "des",
+          "model": "lenet5", "strategy": "pipeline", "family": "zynq", "nodes": 3,
+          "arrival": {{"kind": "poisson"}}, "slo_ms": 60,
+          "controller": {{"enabled": {controller}}},
+          "faults": {{"crashes": [{{"node": 1, "at_ms": 600, "down_ms": 700}}]}},
+          "horizon_ms": 2400, "seed": 21
+        }}"#
+    )
+}
+
+/// E14: seeded chaos runs — the failover controller's value under a
+/// mid-run crash (controller-on vs -off on the same seed), a random
+/// crash process, and a persistent straggler.
+pub fn faults_suite(calib: &Calibration) -> anyhow::Result<BenchReport> {
+    let mut b = Bench::new("chaos_faults");
+    let mut report = BenchReport::new("faults");
+
+    for (tag, text) in [
+        ("crash-controller-on", chaos_spec(true)),
+        ("crash-controller-off", chaos_spec(false)),
+        (
+            "random-crashes",
+            r#"{
+              "name": "bench-chaos-random", "engine": "des",
+              "model": "lenet5", "strategy": "sg", "family": "zynq", "nodes": 4,
+              "arrival": {"kind": "poisson"}, "slo_ms": 80,
+              "controller": {"enabled": true},
+              "faults": {"crash_mean_up_ms": 1500, "crash_mean_down_ms": 250},
+              "horizon_ms": 2400, "seed": 33
+            }"#
+            .to_string(),
+        ),
+        (
+            "stragglers",
+            r#"{
+              "name": "bench-chaos-straggler", "engine": "des",
+              "model": "lenet5", "strategy": "sg", "family": "zynq", "nodes": 4,
+              "arrival": {"kind": "poisson"}, "slo_ms": 80,
+              "controller": {"enabled": true},
+              "faults": {"stragglers": 1, "straggler_factor": 3.0},
+              "horizon_ms": 2400, "seed": 33
+            }"#
+            .to_string(),
+        ),
+    ] {
+        let t0 = std::time::Instant::now();
+        let rep = Session::new(ScenarioSpec::parse(&text)?)?
+            .with_calibration(calib.clone())
+            .run()
+            .map_err(|e| anyhow::anyhow!("{tag}: {e}"))?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let r = &rep.rows[0];
+        b.row(&format!(
+            "{tag:22} avail {:>6.4}  slo {:>6}  recovery p50 {:>8}  stalled {:>2}  completed {:>5}",
+            r.availability,
+            if r.slo_attainment.is_finite() {
+                format!("{:.3}", r.slo_attainment)
+            } else {
+                "n/a".to_string()
+            },
+            if r.recovery_p50_ms.is_finite() {
+                format!("{:.1}ms", r.recovery_p50_ms)
+            } else {
+                "n/a".to_string()
+            },
+            r.stalled_windows,
+            r.completed,
+        ));
+        report.push(
+            BenchEntry::new(tag)
+                .metric("availability", r.availability)
+                .metric("slo_attainment", r.slo_attainment)
+                .metric("recovery_p50_ms", r.recovery_p50_ms)
+                .metric("recovery_p99_ms", r.recovery_p99_ms)
+                .metric("stalled_windows", r.stalled_windows as f64)
+                .metric("completed", r.completed as f64)
+                .metric("reconfigs", r.reconfigs as f64)
+                .metric("p99_ms", r.p99_ms)
+                .wall("wall_ms", wall_ms),
+        );
+    }
+    b.finish();
+    Ok(report)
+}
+
+/// Build one suite by name (the `vtacluster bench --suite` dispatch).
+pub fn run_suite(
+    name: &str,
+    scenarios_dir: &Path,
+    calib: &Calibration,
+) -> anyhow::Result<BenchReport> {
+    match name {
+        "des" => des_suite(calib),
+        "scenarios" => scenarios_suite(scenarios_dir, calib),
+        "faults" => faults_suite(calib),
+        other => anyhow::bail!("unknown bench suite '{other}' (des|scenarios|faults|all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faults_suite_is_deterministic_and_fills_the_schema() {
+        std::env::set_var("VTA_BENCH_FAST", "1");
+        let calib = Calibration::default();
+        let a = faults_suite(&calib).unwrap();
+        let b = faults_suite(&calib).unwrap();
+        assert_eq!(a.suite, "faults");
+        assert_eq!(a.entries.len(), 4);
+        assert_eq!(a.entries[0].name, "crash-controller-on");
+        // deterministic metrics → a self-check passes at zero tolerance
+        let (notes, failures) = a.check_against(&b, 0.0);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(notes.is_empty(), "{notes:?}");
+        // wall figures present but never part of the gate
+        assert!(a.entries.iter().all(|e| !e.wall.is_empty()));
+        // JSON roundtrip through the stable schema (string-compare: NaN
+        // metrics travel as null, and NaN != NaN under PartialEq)
+        let back = BenchReport::from_json(&a.to_json()).unwrap();
+        assert_eq!(json::pretty(&back.to_json()), json::pretty(&a.to_json()));
+    }
+
+    #[test]
+    fn suite_dispatch_rejects_unknown_names() {
+        let calib = Calibration::default();
+        let e = run_suite("quantum", Path::new("."), &calib).unwrap_err().to_string();
+        assert!(e.contains("quantum"), "{e}");
+    }
+}

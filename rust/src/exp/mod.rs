@@ -1,10 +1,13 @@
 //! Experiment runners: one per paper table/figure (see DESIGN.md §5).
 //!
-//! * [`paper`]     — the published numbers (Fig. 3/4 tables, §IV claims)
-//! * [`runner`]    — shared machinery: strategy sweep over cluster sizes
-//! * [`calibrate`] — fits the calibration constants to the anchors
-//! * [`table`]     — text-table rendering used by benches and examples
+//! * [`paper`]        — the published numbers (Fig. 3/4 tables, §IV claims)
+//! * [`runner`]       — shared machinery: strategy sweep over cluster sizes
+//! * [`calibrate`]    — fits the calibration constants to the anchors
+//! * [`table`]        — text-table rendering used by benches and examples
+//! * [`bench_suites`] — the tracked BENCH_*.json suites behind
+//!   `vtacluster bench --check` (DESIGN.md §15)
 
+pub mod bench_suites;
 pub mod calibrate;
 pub mod paper;
 pub mod runner;

@@ -11,10 +11,13 @@
 //!                  (`examples/scenarios/*.json`, DESIGN.md §12):
 //!                  `run <scenario.json> [--set key=value ...]
 //!                  [--report out.json] [--trace out-trace.json]
-//!                  [--emit-spec]`. Files with a `"sweep"` object expand
-//!                  into a tagged grid report. `--trace` turns on the
-//!                  telemetry layer (DESIGN.md §13) and writes a Chrome
-//!                  trace-event file loadable in Perfetto.
+//!                  [--metrics out.prom] [--emit-spec]`. Files with a
+//!                  `"sweep"` object expand into a tagged grid report.
+//!                  `--trace` turns on the telemetry layer (DESIGN.md
+//!                  §13) and writes a Chrome trace-event file loadable
+//!                  in Perfetto. `--metrics` turns on the metrics
+//!                  registry (DESIGN.md §15) and writes Prometheus
+//!                  text exposition.
 //! * `simulate`   — one cluster-size cell for any zoo model
 //!                  (`--model`, `--strategy all` compares all four §II-C
 //!                  strategies) — a thin adapter over `run`'s engine
@@ -36,15 +39,21 @@
 //!                  (min-J/image) plan per family (DESIGN.md §11)
 //! * `serve`      — run the real PJRT serving pipeline on a batch of
 //!                  synthetic images (end-to-end driver)
+//! * `bench`      — run the tracked bench suites (des|scenarios|faults|
+//!                  all), writing `BENCH_<suite>.json`; `--check` gates
+//!                  the deterministic metrics against the checked-in
+//!                  baselines in `benches/baselines/` with a relative
+//!                  tolerance (DESIGN.md §15)
 //!
 //! `simulate`, `multi`, `load` and `power` all build a
 //! [`ScenarioSpec`] and execute it through [`Session::run`] /
 //! [`Sweep::run`] — the scenario layer is the single experiment
 //! engine; the subcommands only choose defaults and print.
 
+use std::path::{Path, PathBuf};
 use vta_cluster::config::{BoardFamily, Calibration, VtaConfig};
 use vta_cluster::coordinator::{Coordinator, MultiCoordinator, TenantRequest, TenantSpec};
-use vta_cluster::exp::{calibrate, paper, runner::Bench, table};
+use vta_cluster::exp::{bench_suites, calibrate, paper, runner::Bench, table};
 use vta_cluster::graph::zoo;
 use vta_cluster::power::PowerModel;
 use vta_cluster::runtime::{artifacts_dir, TensorData};
@@ -52,9 +61,10 @@ use vta_cluster::scenario::{
     apply_overrides, pareto_ceiling, Engine, Report, ScenarioSpec, Session, Sweep,
 };
 use vta_cluster::sched::{build_plan, Strategy};
-use vta_cluster::telemetry::{chrome_trace, TelemetryConfig};
+use vta_cluster::telemetry::{chrome_trace, metrics::prometheus, TelemetryConfig};
+use vta_cluster::util::bench::BenchReport;
 use vta_cluster::util::cli::Cli;
-use vta_cluster::util::json;
+use vta_cluster::util::json::{self, Json};
 use vta_cluster::util::rng::Rng;
 
 fn main() {
@@ -84,13 +94,19 @@ fn run() -> anyhow::Result<()> {
         .opt("slo", "0", "`power`/`simulate --strategy eco`: latency SLO in ms (0 = none)")
         .opt("report", "", "`run`: write the Report JSON to this path")
         .opt("trace", "", "`run`: enable telemetry and write a Chrome trace-event JSON (open in Perfetto) to this path")
+        .opt("metrics", "", "`run`: enable the metrics registry (sets telemetry.metrics=true) and write Prometheus text to this path (sweeps write one file per cell, cell tag in the name)")
         .multi("set", "`run`: spec override `key=value` (dotted paths, repeatable)")
         .flag("emit-spec", "`run`: print the resolved spec JSON and exit without running")
+        .opt("suite", "all", "`bench`: which suite to run (des|scenarios|faults|all)")
+        .flag("check", "`bench`: gate results against the baseline BENCH_*.json files")
+        .opt("baseline-dir", "benches/baselines", "`bench --check`: directory holding the baseline BENCH_*.json files")
+        .opt("tol", "0.05", "`bench --check`: relative tolerance on gated metrics (0.05 = ±5%)")
+        .opt("out-dir", ".", "`bench`: directory the fresh BENCH_*.json files are written to")
         .flag("quick", "reduced calibration grids")
         .flag("serve", "`multi`: serve real artifacts instead of simulating")
         .positional(
             "command",
-            "info | calibrate | table | run | simulate | multi | load | power | serve",
+            "info | calibrate | table | run | simulate | multi | load | power | serve | bench",
         );
     let args = cli.parse()?;
     let command = args.positional.first().map(String::as_str).unwrap_or("info");
@@ -109,9 +125,17 @@ fn run() -> anyhow::Result<()> {
                 args.get_all("set"),
                 args.get("report"),
                 args.get("trace"),
+                args.get("metrics"),
                 args.get_flag("emit-spec"),
             )
         }
+        "bench" => bench_cmd(
+            args.get("suite"),
+            args.get_flag("check"),
+            args.get("baseline-dir"),
+            args.get_f64("tol")?,
+            args.get("out-dir"),
+        ),
         "simulate" => simulate_cmd(
             args.get("strategy"),
             args.get("model"),
@@ -283,6 +307,7 @@ fn run_scenario_cmd(
     sets: &[String],
     report_path: &str,
     trace_path: &str,
+    metrics_path: &str,
     emit_spec: bool,
 ) -> anyhow::Result<()> {
     let file = std::path::Path::new(path);
@@ -294,8 +319,15 @@ fn run_scenario_cmd(
             vta_cluster::scenario::set_path(&mut doc, "name", json::str_(stem))?;
         }
     }
+    // --metrics is sugar for `--set telemetry.metrics=true` plus the
+    // Prometheus export below; it composes with sweeps (per-cell files)
+    if !metrics_path.is_empty() {
+        vta_cluster::scenario::set_path(&mut doc, "telemetry.metrics", Json::Bool(true))?;
+    }
     let calib = Calibration::load_or_default(&artifacts_dir());
-    let report = if let Some(sweep) = Sweep::from_doc(&doc)? {
+    let sweep_opt = Sweep::from_doc(&doc)?;
+    let is_sweep = sweep_opt.is_some();
+    let report = if let Some(sweep) = sweep_opt {
         anyhow::ensure!(
             trace_path.is_empty(),
             "--trace works on single scenarios, not sweeps (a grid would \
@@ -332,11 +364,116 @@ fn run_scenario_cmd(
             );
         }
     }
+    if !metrics_path.is_empty() {
+        if report.metrics.is_empty() {
+            eprintln!("warning: no metric bundles collected — {metrics_path} not written");
+        } else if is_sweep {
+            // one file per cell so Prometheus labels don't collide
+            // across grid points scraped into the same series
+            for m in &report.metrics {
+                let cell_path = cell_metrics_path(metrics_path, &m.label);
+                std::fs::write(&cell_path, prometheus(std::slice::from_ref(m)))
+                    .map_err(|e| anyhow::anyhow!("writing {cell_path}: {e}"))?;
+                println!("wrote {cell_path}");
+            }
+        } else {
+            std::fs::write(metrics_path, prometheus(&report.metrics))
+                .map_err(|e| anyhow::anyhow!("writing {metrics_path}: {e}"))?;
+            println!(
+                "wrote {metrics_path} ({} bundle(s), Prometheus text format)",
+                report.metrics.len()
+            );
+        }
+    }
     if !report_path.is_empty() {
         std::fs::write(report_path, json::pretty(&report.to_json()))
             .map_err(|e| anyhow::anyhow!("writing {report_path}: {e}"))?;
         println!("wrote {report_path}");
     }
+    Ok(())
+}
+
+/// Derive the per-cell Prometheus path for a sweep: the cell label
+/// (sanitized to `[A-Za-z0-9_]`) is spliced in before the extension,
+/// e.g. `out.prom` + label `n=4/a` → `out.n_4_a.prom`.
+fn cell_metrics_path(base: &str, label: &str) -> String {
+    let tag: String = label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    let p = Path::new(base);
+    let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("metrics");
+    let ext = p.extension().and_then(|s| s.to_str()).unwrap_or("prom");
+    p.with_file_name(format!("{stem}.{tag}.{ext}")).to_string_lossy().into_owned()
+}
+
+/// `bench`: run the tracked suites from `exp::bench_suites`, write
+/// `BENCH_<suite>.json` into `--out-dir`, and with `--check` gate the
+/// deterministic metrics against the checked-in baselines (DESIGN.md
+/// §15). Any gated deviation beyond `--tol` exits nonzero.
+fn bench_cmd(
+    suite: &str,
+    check: bool,
+    baseline_dir: &str,
+    tol: f64,
+    out_dir: &str,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        tol.is_finite() && tol >= 0.0,
+        "--tol must be a finite fraction ≥ 0 (got {tol})"
+    );
+    let suites: Vec<&str> = if suite.eq_ignore_ascii_case("all") {
+        bench_suites::SUITE_NAMES.to_vec()
+    } else {
+        vec![suite]
+    };
+    // the scenarios suite needs the example specs: resolve them from the
+    // repo root or from `rust/` (the two places the binary is run from)
+    let scenarios_dir = ["examples/scenarios", "../examples/scenarios"]
+        .iter()
+        .map(Path::new)
+        .find(|p| p.is_dir())
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("examples/scenarios"));
+    let calib = Calibration::load_or_default(&artifacts_dir());
+    let mut failures: Vec<String> = Vec::new();
+    for name in suites {
+        let report = bench_suites::run_suite(name, &scenarios_dir, &calib)?;
+        let out = Path::new(out_dir).join(format!("BENCH_{name}.json"));
+        report.write(&out)?;
+        println!(
+            "bench {name}: {} entr{} → {}{}",
+            report.entries.len(),
+            if report.entries.len() == 1 { "y" } else { "ies" },
+            out.display(),
+            if report.fast { " (fast mode)" } else { "" },
+        );
+        if check {
+            let base_path = Path::new(baseline_dir).join(format!("BENCH_{name}.json"));
+            let baseline = BenchReport::load(&base_path)?;
+            let (notes, fails) = report.check_against(&baseline, tol);
+            for n in &notes {
+                println!("  note: {n}");
+            }
+            if fails.is_empty() {
+                println!(
+                    "  check OK vs {} (tol ±{:.0}%)",
+                    base_path.display(),
+                    tol * 100.0
+                );
+            }
+            for f in &fails {
+                eprintln!("  FAIL [{name}]: {f}");
+            }
+            failures.extend(fails.into_iter().map(|f| format!("[{name}] {f}")));
+        }
+    }
+    anyhow::ensure!(
+        failures.is_empty(),
+        "bench --check: {} metric(s) regressed beyond ±{:.0}%",
+        failures.len(),
+        tol * 100.0
+    );
     Ok(())
 }
 

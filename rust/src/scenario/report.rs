@@ -16,7 +16,7 @@
 //! [`crate::power::pareto`]), which is what makes a sweep report double
 //! as a Pareto frontier.
 
-use crate::telemetry::RunTelemetry;
+use crate::telemetry::{RunMetrics, RunTelemetry};
 use crate::util::json::{self, Json};
 use crate::util::stats::Summary;
 
@@ -229,6 +229,11 @@ pub struct Report {
     /// untraced report's JSON (and [`Report::TOP_KEYS`]) is byte-for-byte
     /// what it was before telemetry existed.
     pub telemetry: Vec<RunTelemetry>,
+    /// Per-run windowed metric bundles (DESIGN.md §15), one per run with
+    /// the `telemetry.metrics` knob on. Same zero-cost-off contract as
+    /// `telemetry`: emitted as an extra trailing `metrics` key only when
+    /// non-empty.
+    pub metrics: Vec<RunMetrics>,
 }
 
 impl Report {
@@ -246,6 +251,7 @@ impl Report {
             events: Vec::new(),
             timeline: Vec::new(),
             telemetry: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -282,9 +288,19 @@ impl Report {
                 };
             }
         }
+        for m in &mut other.metrics {
+            if !tag.is_empty() {
+                m.label = if m.label.is_empty() {
+                    tag.to_string()
+                } else {
+                    format!("{tag}/{}", m.label)
+                };
+            }
+        }
         self.rows.append(&mut other.rows);
         self.events.append(&mut other.events);
         self.telemetry.append(&mut other.telemetry);
+        self.metrics.append(&mut other.metrics);
         // a merged report is multi-run: the per-run timeline is dropped
         self.timeline.clear();
     }
@@ -340,6 +356,12 @@ impl Report {
             fields.push((
                 "telemetry",
                 Json::Arr(self.telemetry.iter().map(|t| t.to_json()).collect()),
+            ));
+        }
+        if !self.metrics.is_empty() {
+            fields.push((
+                "metrics",
+                Json::Arr(self.metrics.iter().map(|m| m.to_json()).collect()),
             ));
         }
         json::obj(fields)
@@ -502,6 +524,45 @@ mod tests {
         let mut base = Report::new("sweep", "des", 1);
         base.absorb("n=4", rep);
         assert_eq!(base.telemetry[0].label, "n=4/a");
+    }
+
+    #[test]
+    fn metrics_key_appears_only_when_bundles_exist() {
+        let mut rep = Report::new("t", "des", 1);
+        rep.rows.push(row("a", 10.0, 5.0));
+        let top: Vec<String> = rep
+            .to_json()
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect();
+        assert_eq!(top, Report::TOP_KEYS, "metrics-off report grew a key");
+
+        rep.metrics.push(RunMetrics {
+            label: "a".into(),
+            engine: "des".into(),
+            ..Default::default()
+        });
+        let top: Vec<String> = rep
+            .to_json()
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut want: Vec<String> =
+            Report::TOP_KEYS.iter().map(|s| s.to_string()).collect();
+        want.push("metrics".to_string());
+        assert_eq!(top, want);
+        // emitted text stays valid JSON
+        let text = crate::util::json::pretty(&rep.to_json());
+        assert_eq!(Json::parse(&text).unwrap(), rep.to_json());
+
+        // absorb prefixes metric-bundle labels like row labels
+        let mut base = Report::new("sweep", "des", 1);
+        base.absorb("n=4", rep);
+        assert_eq!(base.metrics[0].label, "n=4/a");
     }
 
     #[test]

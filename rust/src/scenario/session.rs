@@ -31,7 +31,7 @@ use crate::sched::{
     OnlineController, PlanOption, Strategy,
 };
 use crate::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
-use crate::telemetry::{RunTelemetry, TelemetryConfig};
+use crate::telemetry::{RunMetrics, RunTelemetry, TelemetryConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::units::ns_to_ms;
@@ -185,18 +185,24 @@ impl Session {
     ) -> anyhow::Result<()> {
         match spec.engine {
             Engine::Analytic => {
-                let (row, telemetry) =
+                let (row, telemetry, metrics) =
                     self.analytic_cell(spec, group, tenant, seed, rate_override, label, cache)?;
                 if let Some(t) = telemetry {
                     report.telemetry.push(stamp(t, &row.label, spec.engine));
                 }
+                if let Some(m) = metrics {
+                    report.metrics.push(m);
+                }
                 report.rows.push(row);
             }
             Engine::Des => {
-                let (row, events, timeline, telemetry) =
+                let (row, events, timeline, telemetry, metrics) =
                     self.des_cell(spec, group, tenant, seed, rate_override, label, cache)?;
                 if let Some(t) = telemetry {
                     report.telemetry.push(stamp(t, &row.label, spec.engine));
+                }
+                if let Some(m) = metrics {
+                    report.metrics.push(m);
                 }
                 report.rows.push(row);
                 report.events.extend(events);
@@ -415,7 +421,7 @@ impl Session {
         rate_override: Option<f64>,
         label: &str,
         cache: &mut CostCache,
-    ) -> anyhow::Result<(ReportRow, Option<RunTelemetry>)> {
+    ) -> anyhow::Result<(ReportRow, Option<RunTelemetry>, Option<RunMetrics>)> {
         let g = zoo::build(&tenant.model, tenant.input_hw)?;
         let cluster = cluster_for(group)?;
         let cost = cache.get(group.family);
@@ -437,6 +443,8 @@ impl Session {
         let arrival = ArrivalProcess::parse(&spec.arrival.kind, rate, spec.arrival.burst_mult)?;
         let mut cfg = DesConfig::new(arrival, (tenant.images.max(64) as f64 / rate) * 1e3, seed);
         cfg.telemetry = self.telemetry;
+        cfg.metrics =
+            spec.telemetry.to_metrics_config(spec.slo_ms, spec.controller.power_budget_w);
         let mut des = run_des(&[option], 0, &cluster, cost, &g, &cfg, None)?;
 
         let meets_slo = match &eco {
@@ -477,7 +485,16 @@ impl Session {
             stalled_windows: 0,
         };
         row.set_percentiles(&des.latency_ms);
-        Ok((row, des.telemetry.take()))
+        // the loaded-percentile DES carries the windowed series; the
+        // steady-state figures the engine is actually about ride along as
+        // synthetic gauges so the bundle is self-contained
+        let metrics = des.metrics.take().map(|mut m| {
+            m.push_gauge("vta_steady_ms_per_image", 0.0, sim.ms_per_image);
+            m.push_gauge("vta_steady_img_per_sec", 0.0, capacity);
+            m.push_gauge("vta_steady_cluster_w", 0.0, sim.power.cluster_avg_w);
+            stamp_metrics(m, &row.label, Engine::Analytic)
+        });
+        Ok((row, des.telemetry.take(), metrics))
     }
 
     /// DES engine, one cell: the four §II-C candidates (plus the eco
@@ -494,8 +511,13 @@ impl Session {
         rate_override: Option<f64>,
         label: &str,
         cache: &mut CostCache,
-    ) -> anyhow::Result<(ReportRow, Vec<EventRow>, Vec<(f64, usize)>, Option<RunTelemetry>)>
-    {
+    ) -> anyhow::Result<(
+        ReportRow,
+        Vec<EventRow>,
+        Vec<(f64, usize)>,
+        Option<RunTelemetry>,
+        Option<RunMetrics>,
+    )> {
         let g = zoo::build(&tenant.model, tenant.input_hw)?;
         let cluster = cluster_for(group)?;
         let cost = cache.get(group.family);
@@ -544,6 +566,8 @@ impl Session {
         let arrival = ArrivalProcess::parse(&spec.arrival.kind, rate, spec.arrival.burst_mult)?;
         let mut cfg = DesConfig::new(arrival, spec.horizon_ms, seed);
         cfg.telemetry = self.telemetry;
+        cfg.metrics =
+            spec.telemetry.to_metrics_config(spec.slo_ms, spec.controller.power_budget_w);
         if !spec.faults.is_off() {
             // the rejoin re-flash is always a full-tier cost: a crash
             // loses the PL image regardless of the controller's tier
@@ -623,9 +647,23 @@ impl Session {
                 reason: format!("node {} crash ({outage_ms:.1} ms outage + re-flash)", o.node),
             }
         }));
+        // alert firings share the event timeline, tagged `from: "alert"`
+        // so downstream diffing can filter them like crash outages; the
+        // same firing is also stamped into the controller audit log
+        // inside the bundle (DESIGN.md §15)
+        events.extend(r.alerts.iter().map(|a| EventRow {
+            label: row.label.clone(),
+            at_ms: a.at_ms,
+            from_strategy: "alert".to_string(),
+            to_strategy: a.rule.clone(),
+            downtime_ms: 0.0,
+            reason: a.message.clone(),
+        }));
         events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
         let telemetry = r.telemetry.take();
-        Ok((row, events, r.queue_timeline, telemetry))
+        let metrics =
+            r.metrics.take().map(|m| stamp_metrics(m, &row.label, Engine::Des));
+        Ok((row, events, r.queue_timeline, telemetry, metrics))
     }
 }
 
@@ -634,6 +672,13 @@ fn stamp(mut t: RunTelemetry, label: &str, engine: Engine) -> RunTelemetry {
     t.label = label.to_string();
     t.engine = engine.as_str().to_string();
     t
+}
+
+/// Stamp a run's metric bundle with its report-row identity.
+fn stamp_metrics(mut m: RunMetrics, label: &str, engine: Engine) -> RunMetrics {
+    m.label = label.to_string();
+    m.engine = engine.as_str().to_string();
+    m
 }
 
 /// Build and sanity-check one group's homogeneous sub-cluster.
@@ -925,5 +970,68 @@ mod tests {
             .unwrap();
         assert_eq!(rep.rows.len(), 1);
         assert!(rep.rows[0].completed > 0);
+    }
+
+    #[test]
+    fn metrics_knob_attaches_a_stamped_bundle_per_engine() {
+        let des = session(
+            r#"{
+              "model": "lenet5", "strategy": "pipeline", "nodes": 2, "engine": "des",
+              "horizon_ms": 3000, "seed": 7, "slo_ms": 40,
+              "telemetry": {"metrics": true}
+            }"#,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(des.metrics.len(), 1);
+        let m = &des.metrics[0];
+        assert_eq!(m.label, des.rows[0].label);
+        assert_eq!(m.engine, "des");
+        assert!(m.series("vta_arrivals_total").is_some());
+        assert!(m.series("vta_request_latency_ns").is_some());
+        // the JSON grows exactly the trailing `metrics` key
+        let top: Vec<String> = des
+            .to_json()
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut want: Vec<String> =
+            Report::TOP_KEYS.iter().map(|s| s.to_string()).collect();
+        want.push("metrics".to_string());
+        assert_eq!(top, want);
+
+        let analytic = session(
+            r#"{
+              "model": "lenet5", "strategy": "pipeline", "nodes": 2,
+              "images": 16, "seed": 7, "telemetry": {"metrics": true}
+            }"#,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(analytic.metrics.len(), 1);
+        let m = &analytic.metrics[0];
+        assert_eq!(m.engine, "analytic");
+        assert!(m.series("vta_steady_ms_per_image").is_some());
+        assert!(m.series("vta_steady_img_per_sec").is_some());
+    }
+
+    #[test]
+    fn metrics_off_report_is_byte_identical_to_pre_metrics_output() {
+        let with = r#"{
+          "model": "mlp", "engine": "des", "nodes": 2,
+          "horizon_ms": 2000, "seed": 11, "telemetry": {}
+        }"#;
+        let without = r#"{
+          "model": "mlp", "engine": "des", "nodes": 2,
+          "horizon_ms": 2000, "seed": 11
+        }"#;
+        let a = session(with).run().unwrap();
+        let b = session(without).run().unwrap();
+        assert_eq!(
+            crate::util::json::pretty(&a.to_json()),
+            crate::util::json::pretty(&b.to_json())
+        );
     }
 }

@@ -21,6 +21,7 @@ use crate::config::{BoardFamily, ReconfigTier};
 use crate::graph::{zoo, Graph};
 use crate::sched::{ExecutionPlan, SplitMode, StagePlan, Strategy};
 use crate::sim::faults::{FaultsConfig, ScriptedCrash};
+use crate::telemetry::{AlertRules, MetricsConfig};
 use crate::util::json::{self, Json};
 
 /// Which simulator prices the scenario.
@@ -203,6 +204,72 @@ impl FaultsSpec {
     }
 }
 
+/// Declarative metrics/alerting block (DESIGN.md §15). The default is
+/// fully off, and an all-default block is semantically identical to no
+/// block at all — the property test pins byte-identical reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySpec {
+    /// Master switch for the windowed metrics registry + alert engine.
+    pub metrics: bool,
+    /// SLO attainment target the burn-rate error budget derives from.
+    pub slo_target: f64,
+    /// Burn-rate multiple that fires the `slo-burn-rate` alert.
+    pub burn_threshold: f64,
+    /// Sliding burn-rate window length, in control windows.
+    pub burn_windows: usize,
+    /// Power budget for the `power-overdraw` alert, W; `0` = inherit
+    /// the controller's budget (which may itself be 0 = rule off).
+    pub power_budget_w: f64,
+    /// Minimum fraction of nodes in service before the
+    /// `availability-floor` alert fires.
+    pub availability_floor: f64,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        TelemetrySpec {
+            metrics: false,
+            slo_target: 0.99,
+            burn_threshold: 2.0,
+            burn_windows: 10,
+            power_budget_w: 0.0,
+            availability_floor: 0.999,
+        }
+    }
+}
+
+impl TelemetrySpec {
+    /// Metrics registry off — the zero-cost default.
+    pub fn is_off(&self) -> bool {
+        !self.metrics
+    }
+
+    /// Resolve into the simulator's [`MetricsConfig`]. `slo_ms` is the
+    /// spec-level latency SLO (drives the violation counter and the
+    /// burn-rate rule); `controller_budget_w` is the controller's power
+    /// cap, inherited by the overdraw rule unless the block overrides
+    /// it with its own `power_budget_w`.
+    pub fn to_metrics_config(&self, slo_ms: f64, controller_budget_w: f64) -> MetricsConfig {
+        if self.is_off() {
+            return MetricsConfig::off();
+        }
+        let budget =
+            if self.power_budget_w > 0.0 { self.power_budget_w } else { controller_budget_w };
+        MetricsConfig {
+            enabled: true,
+            slo_ms,
+            rules: AlertRules {
+                slo_ms,
+                slo_target: self.slo_target,
+                burn_threshold: self.burn_threshold,
+                burn_windows: self.burn_windows,
+                power_budget_w: budget,
+                availability_floor: self.availability_floor,
+            },
+        }
+    }
+}
+
 /// The full experiment description. See the module docs for the JSON
 /// grammar and DESIGN.md §12 for semantics per (tenants × boards ×
 /// engine) shape.
@@ -217,6 +284,8 @@ pub struct ScenarioSpec {
     pub controller: ControllerSpec,
     /// Fault injection (DESIGN.md §14); defaults to fully off.
     pub faults: FaultsSpec,
+    /// Windowed metrics + alert rules (DESIGN.md §15); defaults to off.
+    pub telemetry: TelemetrySpec,
     /// Latency SLO, ms; `0` = none. Checked against unloaded latency
     /// (analytic) or p99 (DES); also the eco strategy's constraint.
     pub slo_ms: f64,
@@ -243,6 +312,7 @@ impl ScenarioSpec {
             arrival: ArrivalSpec::default(),
             controller: ControllerSpec::default(),
             faults: FaultsSpec::default(),
+            telemetry: TelemetrySpec::default(),
             slo_ms: 0.0,
             horizon_ms: 20_000.0,
         }
@@ -357,6 +427,24 @@ impl ScenarioSpec {
                 "faults.port_factor must be ≥ 1"
             );
         }
+        let tl = &self.telemetry;
+        anyhow::ensure!(
+            tl.slo_target > 0.0 && tl.slo_target < 1.0,
+            "telemetry.slo_target must be in (0, 1)"
+        );
+        anyhow::ensure!(
+            tl.burn_threshold > 0.0 && tl.burn_threshold.is_finite(),
+            "telemetry.burn_threshold must be > 0"
+        );
+        anyhow::ensure!(tl.burn_windows >= 1, "telemetry.burn_windows must be ≥ 1");
+        anyhow::ensure!(
+            tl.power_budget_w >= 0.0 && tl.power_budget_w.is_finite(),
+            "telemetry.power_budget_w must be ≥ 0 (0 = inherit the controller budget)"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&tl.availability_floor),
+            "telemetry.availability_floor must be in [0, 1]"
+        );
         Ok(())
     }
 
@@ -399,8 +487,8 @@ impl ScenarioSpec {
             "scenario",
             &[
                 "name", "engine", "seed", "tenants", "boards", "arrival", "controller",
-                "faults", "slo_ms", "horizon_ms", "sweep", "model", "strategy",
-                "images", "input_hw", "plan", "family", "nodes",
+                "faults", "telemetry", "slo_ms", "horizon_ms", "sweep", "model",
+                "strategy", "images", "input_hw", "plan", "family", "nodes",
             ],
         )?;
         // a sweep is a *grid over* specs, not a spec field: parsing one
@@ -575,6 +663,45 @@ impl ScenarioSpec {
             }
             None => FaultsSpec::default(),
         };
+        let telemetry = match doc.get("telemetry") {
+            Some(t) => {
+                check_keys(
+                    t,
+                    "telemetry",
+                    &[
+                        "metrics", "slo_target", "burn_threshold", "burn_windows",
+                        "power_budget_w", "availability_floor",
+                    ],
+                )?;
+                TelemetrySpec {
+                    metrics: match t.get("metrics") {
+                        Some(v) => v.as_bool()?,
+                        None => false,
+                    },
+                    slo_target: match t.get("slo_target") {
+                        Some(v) => v.as_f64()?,
+                        None => 0.99,
+                    },
+                    burn_threshold: match t.get("burn_threshold") {
+                        Some(v) => v.as_f64()?,
+                        None => 2.0,
+                    },
+                    burn_windows: match t.get("burn_windows") {
+                        Some(v) => v.as_usize()?,
+                        None => 10,
+                    },
+                    power_budget_w: match t.get("power_budget_w") {
+                        Some(v) => v.as_f64()?,
+                        None => 0.0,
+                    },
+                    availability_floor: match t.get("availability_floor") {
+                        Some(v) => v.as_f64()?,
+                        None => 0.999,
+                    },
+                }
+            }
+            None => TelemetrySpec::default(),
+        };
         let slo_ms = match doc.get("slo_ms") {
             Some(v) => v.as_f64()?,
             None => 0.0,
@@ -593,6 +720,7 @@ impl ScenarioSpec {
             arrival,
             controller,
             faults,
+            telemetry,
             slo_ms,
             horizon_ms,
         };
@@ -767,6 +895,17 @@ impl ScenarioSpec {
                     ("port_factor", json::num(self.faults.port_factor)),
                 ]),
             ),
+            (
+                "telemetry",
+                json::obj(vec![
+                    ("metrics", Json::Bool(self.telemetry.metrics)),
+                    ("slo_target", json::num(self.telemetry.slo_target)),
+                    ("burn_threshold", json::num(self.telemetry.burn_threshold)),
+                    ("burn_windows", json::int(self.telemetry.burn_windows as i64)),
+                    ("power_budget_w", json::num(self.telemetry.power_budget_w)),
+                    ("availability_floor", json::num(self.telemetry.availability_floor)),
+                ]),
+            ),
             ("slo_ms", json::num(self.slo_ms)),
             ("horizon_ms", json::num(self.horizon_ms)),
         ])
@@ -838,6 +977,14 @@ mod tests {
             straggler_factor: 3.0,
             degraded_ports: 1,
             port_factor: 8.0,
+        };
+        spec.telemetry = TelemetrySpec {
+            metrics: true,
+            slo_target: 0.995,
+            burn_threshold: 3.0,
+            burn_windows: 12,
+            power_budget_w: 25.0,
+            availability_floor: 0.75,
         };
         spec.slo_ms = 45.0;
         let j = spec.to_json();
@@ -1020,5 +1167,66 @@ mod tests {
         .unwrap();
         assert_eq!(with_empty, without);
         assert_eq!(json::pretty(&with_empty.to_json()), json::pretty(&without.to_json()));
+    }
+
+    #[test]
+    fn telemetry_block_parses_and_resolves_to_config() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+              "model": "lenet5", "engine": "des", "nodes": 2, "slo_ms": 40,
+              "controller": {"enabled": true, "power_budget_w": 18},
+              "telemetry": {"metrics": true, "burn_windows": 6, "availability_floor": 0.5}
+            }"#,
+        )
+        .unwrap();
+        assert!(!spec.telemetry.is_off());
+        let cfg = spec.telemetry.to_metrics_config(spec.slo_ms, spec.controller.power_budget_w);
+        assert!(cfg.enabled);
+        assert_eq!(cfg.slo_ms, 40.0);
+        assert_eq!(cfg.rules.slo_ms, 40.0);
+        assert_eq!(cfg.rules.burn_windows, 6);
+        assert_eq!(cfg.rules.availability_floor, 0.5);
+        // overdraw budget inherited from the controller when unset …
+        assert_eq!(cfg.rules.power_budget_w, 18.0);
+        // … and overridden by an explicit telemetry budget
+        let mut own = spec.clone();
+        own.telemetry.power_budget_w = 9.0;
+        let cfg2 = own.telemetry.to_metrics_config(own.slo_ms, own.controller.power_budget_w);
+        assert_eq!(cfg2.rules.power_budget_w, 9.0);
+        // off block resolves to the zero-cost off config
+        assert_eq!(
+            TelemetrySpec::default().to_metrics_config(40.0, 18.0),
+            MetricsConfig::off()
+        );
+
+        // an empty telemetry object is the off default — same spec (and
+        // same canonical JSON) as no block at all
+        let with_empty = ScenarioSpec::parse(
+            r#"{"model": "lenet5", "engine": "des", "nodes": 2, "telemetry": {}}"#,
+        )
+        .unwrap();
+        let without =
+            ScenarioSpec::parse(r#"{"model": "lenet5", "engine": "des", "nodes": 2}"#).unwrap();
+        assert_eq!(with_empty, without);
+        assert_eq!(json::pretty(&with_empty.to_json()), json::pretty(&without.to_json()));
+
+        // bad thresholds are rejected, not silently clamped
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "telemetry": {"metrics": true, "slo_target": 1.5}}"#
+        )
+        .is_err());
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "telemetry": {"metrics": true, "burn_windows": 0}}"#
+        )
+        .is_err());
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "telemetry": {"metrics": true, "availability_floor": 2.0}}"#
+        )
+        .is_err());
+        // typo'd knob inside the block
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "telemetry": {"metricz": true}}"#
+        )
+        .is_err());
     }
 }

@@ -398,6 +398,26 @@ impl OnlineController {
         }
     }
 
+    /// Stamp an alert-rule firing (DESIGN.md §15) into the audit log so
+    /// pages and controller verdicts interleave on one timeline. Not a
+    /// decision: verdict `alert`, no break-even numbers.
+    pub fn audit_alert(&mut self, at_ms: f64, active: usize, backlog: usize, message: &str) {
+        self.audit.push(AuditRecord {
+            at_ms,
+            active,
+            lambda_hat: self.lambda_ema.unwrap_or(f64::NAN),
+            power_hat: self.power_ema.unwrap_or(f64::NAN),
+            backlog,
+            verdict: AuditVerdict::Alert,
+            to: None,
+            mu_cur: f64::NAN,
+            mu_best: f64::NAN,
+            t_stay_s: f64::NAN,
+            t_switch_s: f64::NAN,
+            reason: message.to_string(),
+        });
+    }
+
     /// Smoothed arrival-rate estimate (img/s), if any window was seen.
     pub fn lambda_hat(&self) -> Option<f64> {
         self.lambda_ema

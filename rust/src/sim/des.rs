@@ -40,7 +40,10 @@ use crate::sched::{SplitMode, Strategy};
 use crate::sim::cluster::{stage_io_bytes, stage_service_times};
 use crate::sim::cost::CostModel;
 use crate::sim::faults::{FaultSchedule, FaultsConfig, Outage};
-use crate::telemetry::{Clock, ComputeSpan, RunTelemetry, StageSpan, TelemetryConfig, Tracer};
+use crate::telemetry::{
+    AlertEngine, AlertEvent, Clock, ComputeSpan, MetricsConfig, MetricsRegistry, RunMetrics,
+    RunTelemetry, StageSpan, TelemetryConfig, Tracer, WindowObs,
+};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::units::{ms_to_ns, ns_to_ms, Nanos};
@@ -225,6 +228,10 @@ pub struct DesConfig {
     /// built, no RNG stream is consumed, no events are injected, and
     /// the run is bit-identical to a fault-free build.
     pub faults: FaultsConfig,
+    /// Metric registry + alert rules (DESIGN.md §15). Off by default
+    /// with the same zero-cost contract as `telemetry`: no registry is
+    /// built and every hook is a null check.
+    pub metrics: MetricsConfig,
 }
 
 impl DesConfig {
@@ -236,6 +243,7 @@ impl DesConfig {
             sample_every_ms: 100.0,
             telemetry: TelemetryConfig::off(),
             faults: FaultsConfig::off(),
+            metrics: MetricsConfig::off(),
         }
     }
 }
@@ -307,6 +315,11 @@ pub struct DesResult {
     pub stalled_windows: u64,
     /// The materialized outage timeline the run executed.
     pub faults: Vec<Outage>,
+    /// Windowed metric series when `cfg.metrics` is on; `None` (and
+    /// zero-cost) otherwise.
+    pub metrics: Option<RunMetrics>,
+    /// Alert-rule firings (DESIGN.md §15); empty when metrics are off.
+    pub alerts: Vec<AlertEvent>,
 }
 
 /// A plan pre-priced for event-driven execution.
@@ -505,8 +518,17 @@ pub fn run_des(
     wall.start();
     // None when telemetry is off: every hook below is one null check
     let mut tracer = Tracer::new(&cfg.telemetry);
+    // same contract for the metric registry (DESIGN.md §15)
+    let mut reg = MetricsRegistry::new(&cfg.metrics);
+    let mut alert_eng = reg.as_ref().map(|_| AlertEngine::new(cfg.metrics.rules.clone()));
+    let mut alerts: Vec<AlertEvent> = Vec::new();
+    let slo_ns: Nanos = if cfg.metrics.slo_ms > 0.0 {
+        ms_to_ns(cfg.metrics.slo_ms)
+    } else {
+        Nanos::MAX
+    };
     if let Some(ctrl) = controller.as_deref_mut() {
-        ctrl.audit.enabled = tracer.is_some();
+        ctrl.audit.enabled = tracer.is_some() || reg.is_some();
         ctrl.audit.records.clear();
     }
 
@@ -590,6 +612,7 @@ pub fn run_des(
     let mut max_backlog = 0usize;
     let mut win_arrivals = 0u64;
     let mut win_completed = 0u64;
+    let mut win_slo_viol = 0u64;
     let mut events_processed = 0u64;
     let mut win_events_base = 0u64;
     let mut metrics = Metrics::sim();
@@ -738,6 +761,16 @@ pub fn run_des(
                 in_flight -= 1;
                 let admitted = imgs[img].admitted;
                 metrics.record_at_ms(ns_to_ms(now - admitted), now);
+                if let Some(m) = reg.as_mut() {
+                    // every completion feeds the HDR latency metric (no
+                    // stride): its percentiles must match the Summary
+                    let lat = now - admitted;
+                    m.observe("vta_request_latency_ns", &[], lat);
+                    if lat > slo_ns {
+                        win_slo_viol += 1;
+                        m.inc("vta_slo_violations_total", &[], 1.0);
+                    }
+                }
                 if let Some(t) = tracer.as_mut() {
                     if t.wants(img) {
                         t.done(img, admitted, now);
@@ -751,9 +784,15 @@ pub fn run_des(
                 // FIFO books work ahead of `now`, so clamp each delta to
                 // the window — a node cannot be busier than 100 %)
                 let mut w = static_w;
+                let mut win_util: Vec<f64> =
+                    if reg.is_some() { vec![0.0; n] } else { Vec::new() };
                 for (i, pb) in prev_busy.iter_mut().enumerate() {
                     let delta = res.busy_ns[i].saturating_sub(*pb) as f64;
-                    w += dyn_w * (delta / sample_ns as f64).min(1.0);
+                    let share = (delta / sample_ns as f64).min(1.0);
+                    w += dyn_w * share;
+                    if !win_util.is_empty() {
+                        win_util[i] = share;
+                    }
                     *pb = res.busy_ns[i];
                 }
                 window_w.push(w);
@@ -771,8 +810,59 @@ pub fn run_des(
                         win_arrivals,
                         win_completed,
                         stalled,
+                        in_flight as u64,
+                        w,
                     );
                 }
+                if let Some(m) = reg.as_mut() {
+                    m.inc("vta_arrivals_total", &[], win_arrivals as f64);
+                    m.inc("vta_completions_total", &[], win_completed as f64);
+                    if stalled {
+                        m.inc("vta_stalled_windows_total", &[], 1.0);
+                    }
+                    m.gauge("vta_backlog", &[], in_flight as f64);
+                    let qd: usize = res
+                        .node_pending
+                        .iter()
+                        .map(|p| p.iter().filter(|&&e| e > now).count())
+                        .sum();
+                    m.gauge("vta_queue_depth", &[], qd as f64);
+                    m.gauge("vta_window_power_w", &[], w);
+                    for (i, &share) in win_util.iter().enumerate() {
+                        let node = i.to_string();
+                        m.gauge("vta_node_utilization", &[("node", &node)], share);
+                        if fsched.is_some() {
+                            let down = if node_down_now[i] { 1.0 } else { 0.0 };
+                            m.gauge("vta_node_down", &[("node", &node)], down);
+                        }
+                    }
+                }
+                if let Some(ae) = alert_eng.as_mut() {
+                    let nodes_up = node_down_now.iter().filter(|&&d| !d).count();
+                    let fired = ae.observe(&WindowObs {
+                        t_ms: ns_to_ms(now),
+                        completions: win_completed,
+                        slo_violations: win_slo_viol,
+                        power_w: w,
+                        nodes_up,
+                        nodes_total: n,
+                        stalled,
+                    });
+                    if !fired.is_empty() {
+                        if let Some(m) = reg.as_mut() {
+                            m.inc("vta_alerts_total", &[], fired.len() as f64);
+                        }
+                        // the alert lands in the audit log *before* the
+                        // consultation it may have provoked
+                        if let Some(ctrl) = controller.as_deref_mut() {
+                            for a in &fired {
+                                ctrl.audit_alert(ns_to_ms(now), active, in_flight, &a.message);
+                            }
+                        }
+                        alerts.extend(fired);
+                    }
+                }
+                win_slo_viol = 0;
                 win_events_base = events_processed;
                 win_completed = 0;
                 if let Some(ctrl) = controller.as_deref_mut() {
@@ -829,7 +919,23 @@ pub fn run_des(
                         });
                         downtime_ms += d.downtime_ms;
                         active = d.to;
+                        if let Some(m) = reg.as_mut() {
+                            m.inc("vta_reconfigs_total", &[], 1.0);
+                            m.inc("vta_reconfig_downtime_ms_total", &[], d.downtime_ms);
+                        }
                     }
+                }
+                if let Some(m) = reg.as_mut() {
+                    if let Some(ctrl) = controller.as_deref() {
+                        if let Some(l) = ctrl.lambda_hat() {
+                            m.gauge("vta_lambda_hat", &[], l);
+                        }
+                        if let Some(p) = ctrl.power_hat() {
+                            m.gauge("vta_power_hat_w", &[], p);
+                        }
+                    }
+                    // close the window: snapshot every series at t
+                    m.sample(ns_to_ms(now));
                 }
                 win_arrivals = 0;
                 let next = now + sample_ns;
@@ -843,6 +949,9 @@ pub fn run_des(
                 // waits behind the outage (work already booked finishes
                 // — the crash catches the *queue*, not the ALU mid-op)
                 res.node_free[node] = res.node_free[node].max(until);
+                if let Some(m) = reg.as_mut() {
+                    m.inc("vta_fault_outages_total", &[], 1.0);
+                }
                 if let Some(t) = tracer.as_mut() {
                     t.fault(now, node, "down");
                 }
@@ -854,6 +963,9 @@ pub fn run_des(
             Ev::NodeUp { node, since } => {
                 node_down_now[node] = false;
                 recovery.push(ns_to_ms(now - since));
+                if let Some(m) = reg.as_mut() {
+                    m.observe("vta_recovery_ns", &[], now - since);
+                }
                 if let Some(t) = tracer.as_mut() {
                     t.fault(now, node, "up");
                 }
@@ -885,6 +997,7 @@ pub fn run_des(
         .as_deref_mut()
         .map(|c| c.audit.take())
         .unwrap_or_default();
+    let run_metrics = reg.map(|r| r.finish(alerts.clone(), audit.clone()));
     let telemetry = tracer.map(|t| t.finish(audit));
     wall.mark();
     Ok(DesResult {
@@ -915,6 +1028,8 @@ pub fn run_des(
         recovery_ms: recovery,
         stalled_windows,
         faults: fsched.as_ref().map(|f| f.outages()).unwrap_or_default(),
+        metrics: run_metrics,
+        alerts,
     })
 }
 
@@ -1189,6 +1304,108 @@ mod tests {
         assert!(tt.traces.len() < tf.traces.len());
         // the sample is the deterministic id stride, not an RNG draw
         assert!(tt.traces.iter().all(|t| t.img % 4 == 0));
+    }
+
+    #[test]
+    fn metrics_off_is_zero_cost_and_on_conserves_requests() {
+        let (g, cluster, mut cost) = setup("lenet5", 2);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::Pipeline])
+                .unwrap();
+        let cap = opts[0].capacity_img_per_sec;
+        let mut cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 0.6 * cap },
+            3000.0,
+            5,
+        );
+        let base = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        assert!(base.metrics.is_none(), "metrics off must collect nothing");
+        assert!(base.alerts.is_empty());
+        cfg.metrics = MetricsConfig::on(0.0);
+        let metered = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        // metering must not perturb the simulation
+        assert_eq!(base.offered, metered.offered);
+        assert_eq!(base.completed, metered.completed);
+        assert_eq!(base.network_bytes, metered.network_bytes);
+        assert_eq!(base.latency_ms.p99(), metered.latency_ms.p99());
+        assert_eq!(base.events_processed, metered.events_processed);
+        assert_eq!(base.power.total_j, metered.power.total_j);
+        let mb = metered.metrics.expect("metrics on must collect");
+        let pts = |name: &str| mb.series(name).unwrap().points.clone();
+        let (arr, comp, back) =
+            (pts("vta_arrivals_total"), pts("vta_completions_total"), pts("vta_backlog"));
+        assert!(!arr.is_empty());
+        assert_eq!(arr.len(), comp.len());
+        assert_eq!(arr.len(), back.len());
+        // per-window conservation: admitted = completed + in flight,
+        // exactly, at every sample point
+        for i in 0..arr.len() {
+            assert_eq!(arr[i].0, comp[i].0);
+            assert_eq!(
+                arr[i].1,
+                comp[i].1 + back[i].1,
+                "window at t={} ms leaks requests",
+                arr[i].0
+            );
+        }
+        // the HDR latency metric sees every completion and its
+        // percentiles agree with the Summary within the 1/256 bound
+        let h = &mb.series("vta_request_latency_ns").unwrap().hist;
+        assert_eq!(h.count(), metered.completed);
+        for q in [50.0, 99.0] {
+            let hdr_ms = ns_to_ms(h.percentile(q).unwrap());
+            let sum_ms = metered.latency_ms.percentile(q).unwrap();
+            let rel = (hdr_ms - sum_ms).abs() / sum_ms.max(1e-9);
+            assert!(rel < 0.01, "p{q}: hdr {hdr_ms} vs summary {sum_ms}");
+        }
+        // per-node gauges cover the cluster
+        for node in ["0", "1"] {
+            assert!(mb
+                .series
+                .iter()
+                .any(|s| s.name == "vta_node_utilization"
+                    && s.labels == vec![("node".to_string(), node.to_string())]));
+        }
+    }
+
+    #[test]
+    fn chaos_run_with_metrics_fires_alert_rules() {
+        use crate::config::ReconfigCost;
+        use crate::sim::faults::{FaultsConfig, ScriptedCrash};
+        let (g, cluster, mut cost) = setup("lenet5", 2);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::Pipeline])
+                .unwrap();
+        let cap = opts[0].capacity_img_per_sec;
+        let mut cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 0.5 * cap },
+            4000.0,
+            9,
+        );
+        cfg.faults = FaultsConfig {
+            scripted: vec![ScriptedCrash { node: 1, at_ms: 1000.0, down_ms: 600.0 }],
+            reflash: ReconfigCost::zynq7020(),
+            ..FaultsConfig::off()
+        };
+        cfg.metrics = MetricsConfig::on(0.0);
+        let r = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        let rules: Vec<&str> = r.alerts.iter().map(|a| a.rule.as_str()).collect();
+        assert!(rules.contains(&"availability-floor"), "{rules:?}");
+        assert!(rules.contains(&"stalled-window"), "{rules:?}");
+        let mb = r.metrics.unwrap();
+        assert_eq!(mb.alerts.len(), r.alerts.len());
+        assert_eq!(mb.series("vta_fault_outages_total").unwrap().value, 1.0);
+        assert!(mb.series("vta_alerts_total").unwrap().value >= 2.0);
+        assert_eq!(mb.series("vta_recovery_ns").unwrap().hist.count(), 1);
+        // the node-down gauge traces the outage: down during it, up after
+        let down = mb
+            .series
+            .iter()
+            .find(|s| s.name == "vta_node_down"
+                && s.labels == vec![("node".to_string(), "1".to_string())])
+            .unwrap();
+        assert!(down.points.iter().any(|&(_, v)| v == 1.0));
+        assert_eq!(down.value, 0.0, "node 1 rejoined before the horizon");
     }
 
     #[test]

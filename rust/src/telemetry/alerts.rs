@@ -1,0 +1,309 @@
+//! Declarative per-window alert rules over the metric stream
+//! (DESIGN.md §15).
+//!
+//! Four rules, all evaluated at every control-window close against the
+//! same observation the controller sees:
+//!
+//! * **slo-burn-rate** — violation fraction over a sliding window of
+//!   the last `burn_windows` control windows, normalized by the error
+//!   budget `1 - slo_target`. A burn rate of 1.0 spends the budget
+//!   exactly; firing at `burn_threshold` (default 2×) is the classic
+//!   fast-burn page.
+//! * **power-overdraw** — the window's average draw exceeds the power
+//!   budget. The controller *caps* plans by predicted draw; this rule
+//!   catches the windows where realized draw still overshoots (bursts,
+//!   reconfiguration overlap).
+//! * **availability-floor** — the fraction of nodes up drops below the
+//!   floor (crash outages, DESIGN.md §14).
+//! * **stalled-window** — a window completed nothing while work was in
+//!   flight (the DES's reconfiguration/outage stall signal).
+//!
+//! Rules are edge-triggered: a firing is emitted when the condition
+//! becomes true and re-arms only after a clean window, so a 600 ms
+//! outage is one alert, not six. Firings land in three places — the
+//! run's [`super::metrics::RunMetrics`] bundle, the Report event
+//! timeline, and the controller audit log (verdict `alert`) — so the
+//! "what fired" and the "what the controller did about it" line up on
+//! one timeline.
+
+use crate::util::json::{self, Json};
+use std::collections::VecDeque;
+
+/// Thresholds for the per-window rules. Resolved from the spec's
+/// `telemetry` block; a rule whose threshold is unset (0 / NaN) is off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertRules {
+    /// Latency SLO for the burn-rate rule, ms; 0 = rule off.
+    pub slo_ms: f64,
+    /// Attainment target the error budget is derived from.
+    pub slo_target: f64,
+    /// Burn-rate multiple that fires the page.
+    pub burn_threshold: f64,
+    /// Sliding-window length, in control windows.
+    pub burn_windows: usize,
+    /// Power budget for the overdraw rule, W; 0 = rule off.
+    pub power_budget_w: f64,
+    /// Minimum fraction of nodes up; 0 = rule off.
+    pub availability_floor: f64,
+}
+
+impl Default for AlertRules {
+    fn default() -> Self {
+        AlertRules {
+            slo_ms: 0.0,
+            slo_target: 0.99,
+            burn_threshold: 2.0,
+            burn_windows: 10,
+            power_budget_w: 0.0,
+            availability_floor: 0.999,
+        }
+    }
+}
+
+/// One rule firing, timestamped at the window close that tripped it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertEvent {
+    pub at_ms: f64,
+    /// Rule name: `slo-burn-rate`, `power-overdraw`,
+    /// `availability-floor`, or `stalled-window`.
+    pub rule: String,
+    /// Observed value that tripped the rule.
+    pub value: f64,
+    /// The threshold it crossed.
+    pub threshold: f64,
+    pub message: String,
+}
+
+impl AlertEvent {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("at_ms", json::num(self.at_ms)),
+            ("rule", json::str_(&self.rule)),
+            ("value", json::num(self.value)),
+            ("threshold", json::num(self.threshold)),
+            ("message", json::str_(&self.message)),
+        ])
+    }
+}
+
+/// What one control window looked like, from the alert engine's side.
+#[derive(Debug, Clone)]
+pub struct WindowObs {
+    pub t_ms: f64,
+    /// Requests completed in this window.
+    pub completions: u64,
+    /// Of those, how many finished over the SLO.
+    pub slo_violations: u64,
+    /// Average cluster draw over the window, W.
+    pub power_w: f64,
+    pub nodes_up: usize,
+    pub nodes_total: usize,
+    /// Zero completions with work in flight.
+    pub stalled: bool,
+}
+
+/// Evaluates [`AlertRules`] against the window stream, edge-triggered
+/// per rule.
+#[derive(Debug, Clone)]
+pub struct AlertEngine {
+    rules: AlertRules,
+    /// (violations, completions) per window, most recent last.
+    burn: VecDeque<(u64, u64)>,
+    burn_firing: bool,
+    power_firing: bool,
+    avail_firing: bool,
+    stall_firing: bool,
+}
+
+impl AlertEngine {
+    pub fn new(rules: AlertRules) -> Self {
+        AlertEngine {
+            rules,
+            burn: VecDeque::new(),
+            burn_firing: false,
+            power_firing: false,
+            avail_firing: false,
+            stall_firing: false,
+        }
+    }
+
+    /// Feed one closed window; returns the rules that fired on this
+    /// window's edge (deterministic rule order).
+    pub fn observe(&mut self, obs: &WindowObs) -> Vec<AlertEvent> {
+        let mut fired = Vec::new();
+        let r = &self.rules;
+
+        if r.slo_ms > 0.0 {
+            self.burn.push_back((obs.slo_violations, obs.completions));
+            while self.burn.len() > r.burn_windows.max(1) {
+                self.burn.pop_front();
+            }
+            let bad: u64 = self.burn.iter().map(|&(v, _)| v).sum();
+            let total: u64 = self.burn.iter().map(|&(_, c)| c).sum();
+            let budget = (1.0 - r.slo_target).max(1e-9);
+            let burn = if total > 0 {
+                (bad as f64 / total as f64) / budget
+            } else {
+                0.0
+            };
+            let hot = burn >= r.burn_threshold;
+            if hot && !self.burn_firing {
+                fired.push(AlertEvent {
+                    at_ms: obs.t_ms,
+                    rule: "slo-burn-rate".into(),
+                    value: burn,
+                    threshold: r.burn_threshold,
+                    message: format!(
+                        "slo burn rate {burn:.1}x budget ({bad}/{total} over {} ms slo in last {} windows)",
+                        r.slo_ms,
+                        self.burn.len()
+                    ),
+                });
+            }
+            self.burn_firing = hot;
+        }
+
+        if r.power_budget_w > 0.0 && obs.power_w.is_finite() {
+            let hot = obs.power_w > r.power_budget_w;
+            if hot && !self.power_firing {
+                fired.push(AlertEvent {
+                    at_ms: obs.t_ms,
+                    rule: "power-overdraw".into(),
+                    value: obs.power_w,
+                    threshold: r.power_budget_w,
+                    message: format!(
+                        "window draw {:.1} W over budget {:.1} W",
+                        obs.power_w, r.power_budget_w
+                    ),
+                });
+            }
+            self.power_firing = hot;
+        }
+
+        if r.availability_floor > 0.0 && obs.nodes_total > 0 {
+            let avail = obs.nodes_up as f64 / obs.nodes_total as f64;
+            let hot = avail < r.availability_floor;
+            if hot && !self.avail_firing {
+                fired.push(AlertEvent {
+                    at_ms: obs.t_ms,
+                    rule: "availability-floor".into(),
+                    value: avail,
+                    threshold: r.availability_floor,
+                    message: format!(
+                        "{}/{} nodes up, below floor {:.3}",
+                        obs.nodes_up, obs.nodes_total, r.availability_floor
+                    ),
+                });
+            }
+            self.avail_firing = hot;
+        }
+
+        {
+            let hot = obs.stalled;
+            if hot && !self.stall_firing {
+                fired.push(AlertEvent {
+                    at_ms: obs.t_ms,
+                    rule: "stalled-window".into(),
+                    value: 1.0,
+                    threshold: 1.0,
+                    message: "window completed nothing with work in flight".into(),
+                });
+            }
+            self.stall_firing = hot;
+        }
+
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(t_ms: f64) -> WindowObs {
+        WindowObs {
+            t_ms,
+            completions: 10,
+            slo_violations: 0,
+            power_w: 5.0,
+            nodes_up: 4,
+            nodes_total: 4,
+            stalled: false,
+        }
+    }
+
+    #[test]
+    fn burn_rate_fires_on_edge_and_rearms_after_recovery() {
+        let rules = AlertRules { slo_ms: 50.0, burn_windows: 4, ..Default::default() };
+        let mut e = AlertEngine::new(rules);
+        assert!(e.observe(&obs(100.0)).is_empty());
+        // 5/10 violations vs a 1% budget: burn 50x >= 2x -> fire once
+        let fired = e.observe(&WindowObs { slo_violations: 5, ..obs(200.0) });
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, "slo-burn-rate");
+        assert!(fired[0].value > 2.0);
+        // still hot next window: edge-triggered, no re-fire
+        let again = e.observe(&WindowObs { slo_violations: 5, ..obs(300.0) });
+        assert!(again.is_empty());
+        // clean windows push the bad ones out of the sliding budget...
+        for t in [400.0, 500.0, 600.0, 700.0] {
+            e.observe(&obs(t));
+        }
+        // ...and the rule re-arms
+        let refire = e.observe(&WindowObs { slo_violations: 5, ..obs(800.0) });
+        assert_eq!(refire.len(), 1);
+    }
+
+    #[test]
+    fn power_and_availability_rules_need_configured_thresholds() {
+        // defaults: power budget 0 = off; availability floor on
+        let mut e = AlertEngine::new(AlertRules::default());
+        let fired = e.observe(&WindowObs {
+            power_w: 1e6,
+            nodes_up: 1,
+            nodes_total: 4,
+            ..obs(100.0)
+        });
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, "availability-floor");
+
+        let mut e = AlertEngine::new(AlertRules {
+            power_budget_w: 10.0,
+            availability_floor: 0.0,
+            ..Default::default()
+        });
+        let fired = e.observe(&WindowObs { power_w: 12.5, ..obs(100.0) });
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, "power-overdraw");
+        assert_eq!(fired[0].threshold, 10.0);
+    }
+
+    #[test]
+    fn stalled_window_fires_once_per_stall_run() {
+        let mut e = AlertEngine::new(AlertRules::default());
+        let mk = |t, stalled| WindowObs { stalled, completions: 0, ..obs(t) };
+        assert_eq!(e.observe(&mk(100.0, true)).len(), 1);
+        assert!(e.observe(&mk(200.0, true)).is_empty());
+        assert!(e.observe(&mk(300.0, false)).is_empty());
+        assert_eq!(e.observe(&mk(400.0, true)).len(), 1);
+    }
+
+    #[test]
+    fn alert_json_has_stable_keys() {
+        let a = AlertEvent {
+            at_ms: 100.0,
+            rule: "stalled-window".into(),
+            value: 1.0,
+            threshold: 1.0,
+            message: "m".into(),
+        };
+        let keys: Vec<&str> = a
+            .to_json()
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.as_str())
+            .collect();
+        assert_eq!(keys, ["at_ms", "rule", "value", "threshold", "message"]);
+    }
+}

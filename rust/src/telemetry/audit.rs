@@ -43,6 +43,10 @@ pub enum AuditVerdict {
     HoldNoFailover,
     /// No branch fired — load sits in the hysteresis band.
     HoldSteady,
+    /// Not a decision: an alert rule fired on this window
+    /// (DESIGN.md §15) and was stamped into the log so pages and
+    /// controller actions share one timeline.
+    Alert,
 }
 
 impl AuditVerdict {
@@ -59,6 +63,7 @@ impl AuditVerdict {
             AuditVerdict::SwitchRestore => "switch-restore",
             AuditVerdict::HoldNoFailover => "hold-no-failover",
             AuditVerdict::HoldSteady => "hold-steady",
+            AuditVerdict::Alert => "alert",
         }
     }
 
@@ -200,6 +205,7 @@ mod tests {
             (AuditVerdict::SwitchFailover, "switch-failover"),
             (AuditVerdict::SwitchRestore, "switch-restore"),
             (AuditVerdict::HoldNoFailover, "hold-no-failover"),
+            (AuditVerdict::Alert, "alert"),
         ] {
             assert_eq!(v.as_str(), s);
         }
@@ -208,5 +214,6 @@ mod tests {
         assert!(AuditVerdict::SwitchRestore.is_switch());
         assert!(!AuditVerdict::HoldNotWorth.is_switch());
         assert!(!AuditVerdict::HoldNoFailover.is_switch());
+        assert!(!AuditVerdict::Alert.is_switch());
     }
 }

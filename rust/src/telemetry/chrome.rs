@@ -14,7 +14,11 @@
 //!   a nestable track;
 //! * executed reconfigurations are `"X"` spans and controller audit
 //!   verdicts are instant (`"i"`) markers on a dedicated `controller`
-//!   track.
+//!   track;
+//! * the window stream renders as counter (`"C"`) tracks — backlog,
+//!   window power draw, and the controller's EMA'd arrival rate — so
+//!   the metric time-series (DESIGN.md §15) plot alongside the spans
+//!   in ui.perfetto.dev.
 //!
 //! Timestamps convert sim-time nanoseconds to the format's
 //! microseconds (`ns / 1000`), so a 8 s simulated run renders as 8 s
@@ -62,6 +66,19 @@ fn complete(
         ("ts", us(start_ns)),
         ("dur", json::num(end_ns.saturating_sub(start_ns) as f64 / 1e3)),
         ("args", args),
+    ])
+}
+
+/// A counter (`ph` "C") sample: Perfetto plots one track per
+/// (process, name), with the series value in `args`.
+fn counter(pid: usize, name: &str, ts_us: Json, value: f64) -> Json {
+    json::obj(vec![
+        ("name", json::str_(name)),
+        ("cat", json::str_("metric")),
+        ("ph", json::str_("C")),
+        ("pid", json::int(pid as i64)),
+        ("ts", ts_us),
+        ("args", json::obj(vec![(name, json::num(value))])),
     ])
 }
 
@@ -182,6 +199,24 @@ pub fn chrome_trace(runs: &[RunTelemetry]) -> Json {
             }
         }
 
+        for w in &run.windows {
+            let ts = json::num(w.t_ms * 1e3);
+            events.push(counter(pid, "backlog", ts.clone(), w.backlog as f64));
+            if w.power_w.is_finite() {
+                events.push(counter(pid, "power (W)", ts, w.power_w));
+            }
+        }
+        for a in &run.audit {
+            if a.lambda_hat.is_finite() {
+                events.push(counter(
+                    pid,
+                    "lambda_hat (img/s)",
+                    json::num(a.at_ms * 1e3),
+                    a.lambda_hat,
+                ));
+            }
+        }
+
         for r in &run.reconfigs {
             events.push(complete(
                 pid,
@@ -246,7 +281,9 @@ pub fn chrome_trace(runs: &[RunTelemetry]) -> Json {
 #[cfg(test)]
 mod tests {
     use super::super::audit::{AuditRecord, AuditVerdict};
-    use super::super::span::{ComputeSpan, FaultMark, ReconfigSpan, RequestTrace, StageSpan};
+    use super::super::span::{
+        ComputeSpan, FaultMark, ReconfigSpan, RequestTrace, StageSpan, WindowRow,
+    };
     use super::*;
     use crate::telemetry::HdrHist;
 
@@ -286,7 +323,16 @@ mod tests {
                     },
                 ],
             }],
-            windows: vec![],
+            windows: vec![WindowRow {
+                t_ms: 0.005,
+                events: 12,
+                arrivals: 1,
+                completions: 1,
+                stalled: false,
+                backlog: 3,
+                power_w: 7.25,
+                stages: vec![],
+            }],
             faults: vec![FaultMark { at_ns: 4_000, node: 1, kind: "down".into() }],
             reconfigs: vec![ReconfigSpan {
                 start_ns: 10_000,
@@ -324,7 +370,7 @@ mod tests {
         let doc = chrome_trace(&[bundle()]);
         let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
         let phases = strs(evs, "ph");
-        for ph in ["M", "X", "b", "e", "i"] {
+        for ph in ["M", "X", "b", "e", "i", "C"] {
             assert!(phases.contains(&ph), "missing phase {ph}: {phases:?}");
         }
         let cats = strs(evs, "cat");
@@ -341,6 +387,33 @@ mod tests {
                 assert!(ev.get("ts").is_some(), "{}", ev.to_string_compact());
             }
         }
+    }
+
+    #[test]
+    fn counter_tracks_carry_the_window_metrics() {
+        let doc = chrome_trace(&[bundle()]);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let counters: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "C")
+            .collect();
+        let names = counters
+            .iter()
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect::<Vec<_>>();
+        for name in ["backlog", "power (W)", "lambda_hat (img/s)"] {
+            assert!(names.contains(&name), "missing counter {name}: {names:?}");
+        }
+        let backlog = counters
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str().unwrap() == "backlog")
+            .unwrap();
+        // 0.005 ms window close → 5 µs
+        assert_eq!(backlog.get("ts").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(
+            backlog.get("args").unwrap().get_f64("backlog").unwrap(),
+            3.0
+        );
     }
 
     #[test]

@@ -1,0 +1,525 @@
+//! Labeled metric registry: windowed time-series for the simulators
+//! (DESIGN.md §15).
+//!
+//! Span traces ([`super::span`]) answer "what happened to request N";
+//! the registry answers "what was the cluster doing at t" — the
+//! continuous signals (queue depth, per-node utilization, window power
+//! draw, arrival/completion rates, SLO violations, fault gauges) the
+//! controller already computes internally, exposed as named series a
+//! dashboard or alert rule can consume.
+//!
+//! Three metric kinds, all labeled (`node`, `tenant`, …):
+//!
+//! * **counter** — monotone cumulative total (`vta_arrivals_total`);
+//! * **gauge**   — last-write-wins instantaneous value (`vta_backlog`);
+//! * **histogram** — HDR-backed distribution ([`super::hist::HdrHist`],
+//!   ≤ 1/256 relative error), run-level, e.g. `vta_request_latency_ns`.
+//!
+//! Counters and gauges are snapshotted once per control window by
+//! [`MetricsRegistry::sample`], so every series is a `(t_ms, value)`
+//! time-series aligned with the controller's observation epochs.
+//!
+//! The registry follows the same zero-cost-off contract as tracing:
+//! [`MetricsRegistry::new`] returns `None` when the config is off, every
+//! hook site in the DES is one `Option` null check, and a report without
+//! metrics is byte-identical to the pre-metrics output (property-tested).
+//!
+//! Two exporters: [`RunMetrics::to_json`] (the `metrics` section of a
+//! [`crate::scenario::Report`]) and [`prometheus`] (text exposition for
+//! `vtacluster run <spec> --metrics out.prom`).
+
+use super::alerts::AlertEvent;
+use super::audit::AuditRecord;
+use super::hist::HdrHist;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// Metric-registry switch carried by the simulator configs, resolved
+/// from the spec's `telemetry.metrics` knob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsConfig {
+    pub enabled: bool,
+    /// Latency SLO the violation counter and the burn-rate alert use,
+    /// ms; `0` = no SLO accounting.
+    pub slo_ms: f64,
+    /// Declarative alert rules evaluated per window (DESIGN.md §15).
+    pub rules: super::alerts::AlertRules,
+}
+
+impl MetricsConfig {
+    /// The default: completely off, zero cost.
+    pub fn off() -> Self {
+        MetricsConfig {
+            enabled: false,
+            slo_ms: 0.0,
+            rules: super::alerts::AlertRules::default(),
+        }
+    }
+
+    /// Registry on, with the given SLO wired into the rules.
+    pub fn on(slo_ms: f64) -> Self {
+        MetricsConfig {
+            enabled: true,
+            slo_ms,
+            rules: super::alerts::AlertRules { slo_ms, ..Default::default() },
+        }
+    }
+}
+
+impl Default for MetricsConfig {
+    fn default() -> Self {
+        MetricsConfig::off()
+    }
+}
+
+/// What a series measures — fixed at first touch; mixing kinds under
+/// one name is a programming error and panics in debug builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+
+    /// Prometheus exposition type name.
+    fn prom_type(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "summary",
+        }
+    }
+}
+
+/// One exported series: a (name × label-set) with its final value, its
+/// per-window points (counter/gauge) or its HDR histogram.
+#[derive(Debug, Clone)]
+pub struct SeriesData {
+    pub name: String,
+    /// Sorted `(key, value)` label pairs.
+    pub labels: Vec<(String, String)>,
+    pub kind: MetricKind,
+    /// Final value (cumulative for counters, last write for gauges;
+    /// unused for histograms).
+    pub value: f64,
+    /// `(t_ms, value)` snapshots, one per control window.
+    pub points: Vec<(f64, f64)>,
+    /// The distribution, for `kind == Histogram`.
+    pub hist: HdrHist,
+}
+
+impl SeriesData {
+    pub fn to_json(&self) -> Json {
+        let labels = json::obj(
+            self.labels
+                .iter()
+                .map(|(k, v)| (k.as_str(), json::str_(v)))
+                .collect(),
+        );
+        let mut fields = vec![
+            ("name", json::str_(&self.name)),
+            ("kind", json::str_(self.kind.as_str())),
+            ("labels", labels),
+        ];
+        match self.kind {
+            MetricKind::Histogram => {
+                let p = |q: f64| {
+                    self.hist
+                        .percentile(q)
+                        .map(|v| json::int(v as i64))
+                        .unwrap_or(Json::Null)
+                };
+                fields.push(("count", json::int(self.hist.count() as i64)));
+                fields.push(("mean", json::num(self.hist.mean())));
+                fields.push(("p50", p(50.0)));
+                fields.push(("p99", p(99.0)));
+                fields.push(("max", json::int(self.hist.max() as i64)));
+            }
+            _ => {
+                fields.push(("value", fnum(self.value)));
+                fields.push((
+                    "points",
+                    Json::Arr(
+                        self.points
+                            .iter()
+                            .map(|&(t, v)| Json::Arr(vec![json::num(t), fnum(v)]))
+                            .collect(),
+                    ),
+                ));
+            }
+        }
+        json::obj(fields)
+    }
+}
+
+/// The bundle one metered run exports: every series, the alert firings,
+/// and the controller audit log (so the "why" is inspectable from the
+/// metrics section alone, tracing on or off). The scenario layer stamps
+/// `label`/`engine` like it does for [`super::RunTelemetry`].
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub label: String,
+    pub engine: String,
+    pub series: Vec<SeriesData>,
+    pub alerts: Vec<AlertEvent>,
+    pub audit: Vec<AuditRecord>,
+}
+
+impl RunMetrics {
+    /// Look a series up by name (first label-set match).
+    pub fn series(&self, name: &str) -> Option<&SeriesData> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Append a single-point gauge (the analytic engine's steady-state
+    /// equivalents enter the bundle through this).
+    pub fn push_gauge(&mut self, name: &str, t_ms: f64, value: f64) {
+        self.series.push(SeriesData {
+            name: name.to_string(),
+            labels: Vec::new(),
+            kind: MetricKind::Gauge,
+            value,
+            points: vec![(t_ms, value)],
+            hist: HdrHist::new(),
+        });
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("label", json::str_(&self.label)),
+            ("engine", json::str_(&self.engine)),
+            (
+                "series",
+                Json::Arr(self.series.iter().map(|s| s.to_json()).collect()),
+            ),
+            (
+                "alerts",
+                Json::Arr(self.alerts.iter().map(|a| a.to_json()).collect()),
+            ),
+            ("audit", Json::Arr(self.audit.iter().map(|a| a.to_json()).collect())),
+        ])
+    }
+}
+
+/// The live collector one run threads its hooks through. `None` when
+/// metrics are off — the simulator pays one null check per hook.
+#[derive(Debug, Clone)]
+pub struct MetricsRegistry {
+    series: BTreeMap<(String, Vec<(String, String)>), (MetricKind, f64, Vec<(f64, f64)>, HdrHist)>,
+}
+
+impl MetricsRegistry {
+    pub fn new(cfg: &MetricsConfig) -> Option<MetricsRegistry> {
+        cfg.enabled.then(|| MetricsRegistry { series: BTreeMap::new() })
+    }
+
+    fn entry(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        kind: MetricKind,
+    ) -> &mut (MetricKind, f64, Vec<(f64, f64)>, HdrHist) {
+        let mut key_labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|&(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        key_labels.sort();
+        let e = self
+            .series
+            .entry((name.to_string(), key_labels))
+            .or_insert_with(|| (kind, 0.0, Vec::new(), HdrHist::new()));
+        debug_assert_eq!(e.0, kind, "metric '{name}' re-registered with a different kind");
+        e
+    }
+
+    /// Add `delta` to a counter.
+    pub fn inc(&mut self, name: &str, labels: &[(&str, &str)], delta: f64) {
+        self.entry(name, labels, MetricKind::Counter).1 += delta;
+    }
+
+    /// Set a gauge to `v` (last write before the snapshot wins).
+    pub fn gauge(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.entry(name, labels, MetricKind::Gauge).1 = v;
+    }
+
+    /// Record one observation into a histogram.
+    pub fn observe(&mut self, name: &str, labels: &[(&str, &str)], v: u64) {
+        self.entry(name, labels, MetricKind::Histogram).3.record(v);
+    }
+
+    /// Close a control window: snapshot every counter and gauge into its
+    /// point series at `t_ms`.
+    pub fn sample(&mut self, t_ms: f64) {
+        for (kind, value, points, _) in self.series.values_mut() {
+            if *kind != MetricKind::Histogram {
+                points.push((t_ms, *value));
+            }
+        }
+    }
+
+    /// Tear down into the run's immutable bundle (deterministic series
+    /// order: the registry key is already `(name, labels)`-sorted).
+    pub fn finish(self, alerts: Vec<AlertEvent>, audit: Vec<AuditRecord>) -> RunMetrics {
+        RunMetrics {
+            label: String::new(),
+            engine: String::new(),
+            series: self
+                .series
+                .into_iter()
+                .map(|((name, labels), (kind, value, points, hist))| SeriesData {
+                    name,
+                    labels,
+                    kind,
+                    value,
+                    points,
+                    hist,
+                })
+                .collect(),
+            alerts,
+            audit,
+        }
+    }
+}
+
+/// One-line help per well-known metric (the `# HELP` exposition line).
+fn help(name: &str) -> &'static str {
+    match name {
+        "vta_arrivals_total" => "requests admitted, cumulative per window",
+        "vta_completions_total" => "requests completed end-to-end, cumulative",
+        "vta_slo_violations_total" => "completed requests over the latency SLO",
+        "vta_alerts_total" => "alert-rule firings (DESIGN.md §15)",
+        "vta_reconfigs_total" => "executed plan switches",
+        "vta_reconfig_downtime_ms_total" => "cumulative reconfiguration downtime, ms",
+        "vta_fault_outages_total" => "node crash events (DESIGN.md §14)",
+        "vta_stalled_windows_total" => "zero-completion windows with work in flight",
+        "vta_backlog" => "requests in flight at the window close",
+        "vta_queue_depth" => "booked stage computes still pending across nodes",
+        "vta_window_power_w" => "cluster draw over the closing window, W",
+        "vta_node_utilization" => "per-node busy fraction over the window",
+        "vta_node_down" => "1 while the node is crashed, else 0",
+        "vta_lambda_hat" => "controller's EMA arrival-rate estimate, img/s",
+        "vta_power_hat_w" => "controller's EMA cluster-draw estimate, W",
+        "vta_request_latency_ns" => "end-to-end request latency, ns (HDR)",
+        "vta_recovery_ns" => "crash-to-rejoin recovery time, ns (HDR)",
+        "vta_steady_ms_per_image" => "analytic steady-state time per image, ms",
+        "vta_steady_img_per_sec" => "analytic steady-state plan capacity, img/s",
+        "vta_steady_cluster_w" => "analytic steady-state cluster draw, W",
+        _ => "vta cluster metric",
+    }
+}
+
+fn prom_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn prom_labels(run: &str, extra: &[(String, String)], quantile: Option<f64>) -> String {
+    let mut parts = Vec::with_capacity(extra.len() + 2);
+    if !run.is_empty() {
+        parts.push(format!("run=\"{}\"", prom_escape(run)));
+    }
+    for (k, v) in extra {
+        parts.push(format!("{k}=\"{}\"", prom_escape(v)));
+    }
+    if let Some(q) = quantile {
+        parts.push(format!("quantile=\"{q}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render bundles as Prometheus text exposition (final values; the
+/// windowed points live in the JSON section). One `# HELP`/`# TYPE`
+/// header per metric name, one sample per (bundle × label-set);
+/// histograms export as summaries with p50/p99 quantiles.
+pub fn prometheus(bundles: &[RunMetrics]) -> String {
+    // group samples under their metric name so headers emit exactly once
+    let mut names: Vec<&str> = Vec::new();
+    let mut kinds: BTreeMap<&str, MetricKind> = BTreeMap::new();
+    let mut lines: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+    for b in bundles {
+        for s in &b.series {
+            if !kinds.contains_key(s.name.as_str()) {
+                names.push(&s.name);
+                kinds.insert(&s.name, s.kind);
+            }
+            let out = lines.entry(&s.name).or_default();
+            match s.kind {
+                MetricKind::Histogram => {
+                    for q in [0.5, 0.99] {
+                        let v = s
+                            .hist
+                            .percentile(q * 100.0)
+                            .map(|v| v.to_string())
+                            .unwrap_or_else(|| "NaN".to_string());
+                        out.push(format!(
+                            "{}{} {v}",
+                            s.name,
+                            prom_labels(&b.label, &s.labels, Some(q))
+                        ));
+                    }
+                    let sum = s.hist.mean() * s.hist.count() as f64;
+                    out.push(format!(
+                        "{}_sum{} {sum}",
+                        s.name,
+                        prom_labels(&b.label, &s.labels, None)
+                    ));
+                    out.push(format!(
+                        "{}_count{} {}",
+                        s.name,
+                        prom_labels(&b.label, &s.labels, None),
+                        s.hist.count()
+                    ));
+                }
+                _ => {
+                    if s.value.is_finite() {
+                        out.push(format!(
+                            "{}{} {}",
+                            s.name,
+                            prom_labels(&b.label, &s.labels, None),
+                            s.value
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    names.sort();
+    let mut text = String::new();
+    for name in names {
+        text.push_str(&format!("# HELP {name} {}\n", help(name)));
+        text.push_str(&format!("# TYPE {name} {}\n", kinds[name].prom_type()));
+        for line in &lines[name] {
+            text.push_str(line);
+            text.push('\n');
+        }
+    }
+    text
+}
+
+fn fnum(v: f64) -> Json {
+    if v.is_finite() {
+        json::num(v)
+    } else {
+        Json::Null
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_none_when_off() {
+        assert!(MetricsRegistry::new(&MetricsConfig::off()).is_none());
+        assert!(MetricsRegistry::new(&MetricsConfig::default()).is_none());
+        assert!(MetricsRegistry::new(&MetricsConfig::on(50.0)).is_some());
+    }
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut m = MetricsRegistry::new(&MetricsConfig::on(0.0)).unwrap();
+        m.inc("vta_arrivals_total", &[], 3.0);
+        m.gauge("vta_backlog", &[], 2.0);
+        m.sample(100.0);
+        m.inc("vta_arrivals_total", &[], 4.0);
+        m.gauge("vta_backlog", &[], 1.0);
+        m.gauge("vta_backlog", &[], 5.0); // last write wins
+        m.sample(200.0);
+        let b = m.finish(Vec::new(), Vec::new());
+        let arrivals = b.series("vta_arrivals_total").unwrap();
+        assert_eq!(arrivals.kind, MetricKind::Counter);
+        assert_eq!(arrivals.points, vec![(100.0, 3.0), (200.0, 7.0)]);
+        assert_eq!(arrivals.value, 7.0);
+        let backlog = b.series("vta_backlog").unwrap();
+        assert_eq!(backlog.points, vec![(100.0, 2.0), (200.0, 5.0)]);
+    }
+
+    #[test]
+    fn labels_key_distinct_series_in_sorted_order() {
+        let mut m = MetricsRegistry::new(&MetricsConfig::on(0.0)).unwrap();
+        m.gauge("vta_node_utilization", &[("node", "1")], 0.5);
+        m.gauge("vta_node_utilization", &[("node", "0")], 0.9);
+        m.sample(100.0);
+        let b = m.finish(Vec::new(), Vec::new());
+        let utils: Vec<&SeriesData> = b
+            .series
+            .iter()
+            .filter(|s| s.name == "vta_node_utilization")
+            .collect();
+        assert_eq!(utils.len(), 2);
+        // deterministic (name, labels) order: node=0 before node=1
+        assert_eq!(utils[0].labels, vec![("node".to_string(), "0".to_string())]);
+        assert_eq!(utils[0].value, 0.9);
+        assert_eq!(utils[1].value, 0.5);
+    }
+
+    #[test]
+    fn histograms_skip_the_window_snapshot() {
+        let mut m = MetricsRegistry::new(&MetricsConfig::on(0.0)).unwrap();
+        m.observe("vta_request_latency_ns", &[], 1_000_000);
+        m.observe("vta_request_latency_ns", &[], 3_000_000);
+        m.sample(100.0);
+        let b = m.finish(Vec::new(), Vec::new());
+        let h = b.series("vta_request_latency_ns").unwrap();
+        assert_eq!(h.kind, MetricKind::Histogram);
+        assert!(h.points.is_empty(), "histograms are run-level, not windowed");
+        assert_eq!(h.hist.count(), 2);
+        let j = h.to_json();
+        assert_eq!(j.get_i64("count").unwrap(), 2);
+        assert!(j.get("points").is_none());
+    }
+
+    #[test]
+    fn json_round_trips_and_orders_keys() {
+        let mut m = MetricsRegistry::new(&MetricsConfig::on(0.0)).unwrap();
+        m.inc("vta_arrivals_total", &[], 2.0);
+        m.gauge("vta_window_power_w", &[], 9.5);
+        m.observe("vta_request_latency_ns", &[], 2_000_000);
+        m.sample(100.0);
+        let mut b = m.finish(Vec::new(), Vec::new());
+        b.label = "cell".into();
+        b.engine = "des".into();
+        let j = b.to_json();
+        let top: Vec<&str> =
+            j.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(top, ["label", "engine", "series", "alerts", "audit"]);
+        let text = json::pretty(&j);
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_headers_and_samples() {
+        let mut m = MetricsRegistry::new(&MetricsConfig::on(0.0)).unwrap();
+        m.inc("vta_arrivals_total", &[], 12.0);
+        m.gauge("vta_node_utilization", &[("node", "0")], 0.75);
+        m.observe("vta_request_latency_ns", &[], 5_000_000);
+        m.sample(100.0);
+        let mut b = m.finish(Vec::new(), Vec::new());
+        b.label = "n=2/t0".into();
+        let text = prometheus(&[b]);
+        assert!(text.contains("# TYPE vta_arrivals_total counter"), "{text}");
+        assert!(text.contains("# TYPE vta_node_utilization gauge"), "{text}");
+        assert!(text.contains("# TYPE vta_request_latency_ns summary"), "{text}");
+        assert!(text.contains("vta_arrivals_total{run=\"n=2/t0\"} 12"), "{text}");
+        assert!(
+            text.contains("vta_node_utilization{run=\"n=2/t0\",node=\"0\"} 0.75"),
+            "{text}"
+        );
+        assert!(text.contains("quantile=\"0.99\""), "{text}");
+        assert!(text.contains("vta_request_latency_ns_count{run=\"n=2/t0\"} 1"), "{text}");
+        // exactly one header per metric name
+        assert_eq!(text.matches("# TYPE vta_arrivals_total").count(), 1);
+    }
+}

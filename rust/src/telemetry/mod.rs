@@ -1,7 +1,7 @@
 //! Telemetry: the observability layer for the simulators and the
-//! controller (DESIGN.md §13).
+//! controller (DESIGN.md §13, §15).
 //!
-//! Four pieces, all zero-cost when off:
+//! Six pieces, all zero-cost when off:
 //!
 //! * [`span`] — per-request span tracing: every sampled request records
 //!   network / queue-wait / compute spans per pipeline stage, in
@@ -13,7 +13,13 @@
 //!   [`crate::sched::OnlineController::decide`] consultation with the
 //!   break-even numbers that justified the verdict;
 //! * [`chrome`] — the Chrome trace-event / Perfetto exporter behind
-//!   `vtacluster run <spec> --trace out.json`.
+//!   `vtacluster run <spec> --trace out.json`;
+//! * [`metrics`] — the labeled metric registry (counters, gauges, HDR
+//!   histograms) sampled per control window, exported as Prometheus
+//!   text or a Report time-series section (DESIGN.md §15);
+//! * [`alerts`] — declarative per-window rules (SLO burn-rate,
+//!   power overdraw, availability floor, stalled windows) whose
+//!   firings land in the Report timeline and the audit log.
 //!
 //! [`clock`] supplies the wall-vs-sim time abstraction the coordinator
 //! metrics use so host elapsed time can never masquerade as simulated
@@ -25,16 +31,20 @@
 //! bundles only when they are non-empty, so untraced reports are
 //! byte-identical to the pre-telemetry output.
 
+pub mod alerts;
 pub mod audit;
 pub mod chrome;
 pub mod clock;
 pub mod hist;
+pub mod metrics;
 pub mod span;
 
+pub use alerts::{AlertEngine, AlertEvent, AlertRules, WindowObs};
 pub use audit::{AuditLog, AuditRecord, AuditVerdict};
 pub use chrome::chrome_trace;
 pub use clock::Clock;
 pub use hist::HdrHist;
+pub use metrics::{MetricKind, MetricsConfig, MetricsRegistry, RunMetrics, SeriesData};
 pub use span::{
     ComputeSpan, FaultMark, ReconfigSpan, RequestTrace, StageSpan, StageWindow,
     TelemetryConfig, Tracer, WindowRow, MAX_TRACES,
@@ -111,6 +121,15 @@ impl RunTelemetry {
                                 ("arrivals", json::int(w.arrivals as i64)),
                                 ("completions", json::int(w.completions as i64)),
                                 ("stalled", Json::Bool(w.stalled)),
+                                ("backlog", json::int(w.backlog as i64)),
+                                (
+                                    "power_w",
+                                    if w.power_w.is_finite() {
+                                        json::num(w.power_w)
+                                    } else {
+                                        Json::Null
+                                    },
+                                ),
                                 (
                                     "stages",
                                     Json::Arr(
@@ -199,7 +218,7 @@ mod tests {
             },
         );
         t.done(0, 0, 3_000_000);
-        t.window(100.0, 10, 1, 1, false);
+        t.window(100.0, 10, 1, 1, false, 2, 4.5);
         t.fault(2_000_000, 1, "down");
         let mut bundle = t.finish(Vec::new());
         bundle.label = "cell".into();
@@ -212,6 +231,8 @@ mod tests {
         assert_eq!(j.get("windows").unwrap().as_arr().unwrap().len(), 1);
         let w0 = &j.get("windows").unwrap().as_arr().unwrap()[0];
         assert_eq!(w0.get("stalled"), Some(&Json::Bool(false)));
+        assert_eq!(w0.get_i64("backlog").unwrap(), 2);
+        assert!((w0.get_f64("power_w").unwrap() - 4.5).abs() < 1e-9);
         let faults = j.get("faults").unwrap().as_arr().unwrap();
         assert_eq!(faults.len(), 1);
         assert_eq!(faults[0].get_str("kind").unwrap(), "down");

@@ -139,6 +139,11 @@ pub struct WindowRow {
     /// explicitly so an outage reads as "stalled", never as a silent
     /// row of zeros that looks like an idle cluster.
     pub stalled: bool,
+    /// Requests in flight when the window closed (the Perfetto counter
+    /// track and the `vta_backlog` gauge read this).
+    pub backlog: u64,
+    /// Average cluster draw over the window, W (DESIGN.md §9 meter).
+    pub power_w: f64,
     pub stages: Vec<StageWindow>,
 }
 
@@ -240,6 +245,7 @@ impl Tracer {
     /// Close a control window: snapshot the per-stage histograms into a
     /// [`WindowRow`] and reset them for the next epoch. `stalled` flags
     /// a zero-completion window with work still in flight (an outage).
+    #[allow(clippy::too_many_arguments)]
     pub fn window(
         &mut self,
         t_ms: f64,
@@ -247,6 +253,8 @@ impl Tracer {
         arrivals: u64,
         completions: u64,
         stalled: bool,
+        backlog: u64,
+        power_w: f64,
     ) {
         let p = |h: &HdrHist, q: f64| h.percentile(q).map(ns_to_ms).unwrap_or(0.0);
         let stages = self
@@ -266,7 +274,16 @@ impl Tracer {
             q.reset();
             s.reset();
         }
-        self.windows.push(WindowRow { t_ms, events, arrivals, completions, stalled, stages });
+        self.windows.push(WindowRow {
+            t_ms,
+            events,
+            arrivals,
+            completions,
+            stalled,
+            backlog,
+            power_w,
+            stages,
+        });
     }
 
     /// A fault-process transition fired (node crash or rejoin).
@@ -372,7 +389,7 @@ mod tests {
         let mut t = Tracer::new(&TelemetryConfig::on(1.0)).unwrap();
         t.admit(0, 0, 0);
         t.stage(0, span(0, 0, 0, 1_000_000, 2_000_000));
-        t.window(100.0, 42, 3, 1, false);
+        t.window(100.0, 42, 3, 1, false, 2, 6.5);
         assert_eq!(t.windows.len(), 1);
         let w = &t.windows[0];
         assert_eq!((w.events, w.arrivals, w.completions), (42, 3, 1));
@@ -381,8 +398,10 @@ mod tests {
         assert_eq!(w.stages[0].count, 1);
         assert!((w.stages[0].queue_p50_ms - 1.0).abs() / 1.0 < 0.01);
         assert!((w.stages[0].service_p50_ms - 2.0).abs() / 2.0 < 0.01);
+        assert_eq!(w.backlog, 2);
+        assert!((w.power_w - 6.5).abs() < 1e-9);
         // next window is empty: stage hists were reset
-        t.window(200.0, 0, 0, 0, true);
+        t.window(200.0, 0, 0, 0, true, 1, 0.0);
         assert!(t.windows[1].stages.is_empty());
         assert!(t.windows[1].stalled, "outage window must carry its flag");
         // run-level hist unaffected by the reset

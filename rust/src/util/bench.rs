@@ -1,5 +1,6 @@
 //! Measurement harness for the `cargo bench` targets (criterion is not in
-//! the offline vendor set).
+//! the offline vendor set), plus the [`BenchReport`] schema behind
+//! `vtacluster bench --check` (DESIGN.md §15).
 //!
 //! Usage inside a `harness = false` bench:
 //! ```no_run
@@ -11,8 +12,16 @@
 //! Auto-calibrates iteration counts to a target measurement time, reports
 //! mean ± std and percentiles, honours `VTA_BENCH_FAST=1` for CI smoke
 //! runs.
+//!
+//! [`BenchReport`] is the stable `BENCH_*.json` shape every suite in
+//! [`crate::exp::bench_suites`] writes: per-entry deterministic `metrics`
+//! (what the regression gate compares against a checked-in baseline with
+//! a relative tolerance) and host-dependent `wall` figures (recorded for
+//! trend plots, never gated).
 
+use super::json::{self, Json};
 use super::stats::Summary;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 pub struct Bench {
@@ -87,6 +96,216 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---- BENCH_*.json schema + regression gate -----------------------------
+
+/// One named measurement of a suite. `metrics` are deterministic
+/// simulation outputs (seeded DES figures — gated by `bench --check`);
+/// `wall` figures depend on the host and are recorded but never gated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    pub name: String,
+    pub metrics: Vec<(String, f64)>,
+    pub wall: Vec<(String, f64)>,
+}
+
+impl BenchEntry {
+    pub fn new(name: &str) -> Self {
+        BenchEntry { name: name.to_string(), metrics: Vec::new(), wall: Vec::new() }
+    }
+
+    /// Builder-style: record a gated metric.
+    pub fn metric(mut self, name: &str, value: f64) -> Self {
+        self.metrics.push((name.to_string(), value));
+        self
+    }
+
+    /// Builder-style: record an ungated wall-clock figure.
+    pub fn wall(mut self, name: &str, value: f64) -> Self {
+        self.wall.push((name.to_string(), value));
+        self
+    }
+
+    fn get_metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
+    }
+
+    fn to_json(&self) -> Json {
+        let kv = |pairs: &[(String, f64)]| {
+            Json::Obj(
+                pairs
+                    .iter()
+                    .map(|(k, v)| {
+                        (k.clone(), if v.is_finite() { json::num(*v) } else { Json::Null })
+                    })
+                    .collect(),
+            )
+        };
+        json::obj(vec![
+            ("name", json::str_(&self.name)),
+            ("metrics", kv(&self.metrics)),
+            ("wall", kv(&self.wall)),
+        ])
+    }
+
+    fn from_json(doc: &Json) -> anyhow::Result<Self> {
+        let kv = |field: &str| -> anyhow::Result<Vec<(String, f64)>> {
+            match doc.get(field) {
+                Some(obj) => obj
+                    .as_obj()?
+                    .iter()
+                    .map(|(k, v)| {
+                        let value = match v {
+                            Json::Null => f64::NAN,
+                            other => other.as_f64()?,
+                        };
+                        Ok((k.clone(), value))
+                    })
+                    .collect(),
+                None => Ok(Vec::new()),
+            }
+        };
+        Ok(BenchEntry {
+            name: doc.get_str("name")?.to_string(),
+            metrics: kv("metrics")?,
+            wall: kv("wall")?,
+        })
+    }
+}
+
+/// A whole suite's results — the `BENCH_<suite>.json` document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub suite: String,
+    /// Measured under `VTA_BENCH_FAST=1` clamps. Fast and full runs are
+    /// not comparable, so `check_against` only gates matching modes.
+    pub fast: bool,
+    /// `false` marks a bootstrap baseline: adopted (with a note), never
+    /// gated — how a baseline first enters the tree without a local run.
+    pub pinned: bool,
+    pub entries: Vec<BenchEntry>,
+}
+
+impl BenchReport {
+    pub fn new(suite: &str) -> Self {
+        let fast = std::env::var("VTA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        BenchReport { suite: suite.to_string(), fast, pinned: true, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, entry: BenchEntry) {
+        self.entries.push(entry);
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("suite", json::str_(&self.suite)),
+            ("fast", Json::Bool(self.fast)),
+            ("pinned", Json::Bool(self.pinned)),
+            ("entries", Json::Arr(self.entries.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> anyhow::Result<Self> {
+        Ok(BenchReport {
+            suite: doc.get_str("suite")?.to_string(),
+            fast: doc.req("fast")?.as_bool()?,
+            pinned: doc.req("pinned")?.as_bool()?,
+            entries: doc
+                .req("entries")?
+                .as_arr()?
+                .iter()
+                .map(BenchEntry::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let doc = json::from_file(path)?;
+        Self::from_json(&doc)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, json::pretty(&self.to_json()))
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Compare this (fresh) report against a checked-in `baseline`.
+    /// Returns `(notes, failures)`: a non-empty failure list is a CI
+    /// gate trip. Gated: every finite baseline metric, with relative
+    /// deviation > `tol` in *either* direction failing (a surprise
+    /// speedup warrants a baseline update, not a silent drift); exact-zero
+    /// baselines compare absolutely. Not gated: `wall` figures, entries
+    /// new in the current run (noted), unpinned baselines (adopted), and
+    /// fast/full mode mismatches (skipped with a note).
+    pub fn check_against(&self, baseline: &BenchReport, tol: f64) -> (Vec<String>, Vec<String>) {
+        let mut notes = Vec::new();
+        let mut failures = Vec::new();
+        if !baseline.pinned {
+            notes.push(format!(
+                "{}: baseline is unpinned (bootstrap) — adopting current results",
+                self.suite
+            ));
+            return (notes, failures);
+        }
+        if self.fast != baseline.fast {
+            notes.push(format!(
+                "{}: fast-mode mismatch (current fast={}, baseline fast={}) — skipping gate",
+                self.suite, self.fast, baseline.fast
+            ));
+            return (notes, failures);
+        }
+        for base in &baseline.entries {
+            let Some(cur) = self.entries.iter().find(|e| e.name == base.name) else {
+                failures.push(format!("{}/{}: entry missing from current run", self.suite, base.name));
+                continue;
+            };
+            for (key, want) in &base.metrics {
+                if !want.is_finite() {
+                    continue; // an unmeasured baseline figure gates nothing
+                }
+                let Some(got) = cur.get_metric(key) else {
+                    failures.push(format!(
+                        "{}/{}/{key}: metric missing from current run",
+                        self.suite, base.name
+                    ));
+                    continue;
+                };
+                if !got.is_finite() {
+                    failures.push(format!(
+                        "{}/{}/{key}: current value unmeasured (baseline {want:.4})",
+                        self.suite, base.name
+                    ));
+                    continue;
+                }
+                let dev = if *want == 0.0 {
+                    got.abs()
+                } else {
+                    (got - want).abs() / want.abs()
+                };
+                if dev > tol {
+                    failures.push(format!(
+                        "{}/{}/{key}: {got:.4} vs baseline {want:.4} ({:+.1}% > ±{:.0}%)",
+                        self.suite,
+                        base.name,
+                        if *want == 0.0 { dev * 100.0 } else { (got - want) / want.abs() * 100.0 },
+                        tol * 100.0,
+                    ));
+                }
+            }
+        }
+        for cur in &self.entries {
+            if !baseline.entries.iter().any(|b| b.name == cur.name) {
+                notes.push(format!(
+                    "{}/{}: new entry, not in baseline (update the baseline to gate it)",
+                    self.suite, cur.name
+                ));
+            }
+        }
+        (notes, failures)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +320,93 @@ mod tests {
         assert!(s.mean() > 0.0);
         assert!(s.len() >= 5);
         b.finish();
+    }
+
+    fn report() -> BenchReport {
+        let mut r = BenchReport::new("des");
+        r.fast = true;
+        r.push(
+            BenchEntry::new("poisson_steady")
+                .metric("img_per_sec", 100.0)
+                .metric("p99_ms", 12.0)
+                .metric("reconfigs", 0.0)
+                .wall("wall_ms", 350.0),
+        );
+        r.push(BenchEntry::new("burst").metric("img_per_sec", 80.0));
+        r
+    }
+
+    #[test]
+    fn bench_report_json_roundtrips_with_nan_as_null() {
+        let mut r = report();
+        r.entries[0].metrics.push(("recovery_p50_ms".into(), f64::NAN));
+        let j = r.to_json();
+        let text = json::pretty(&j);
+        let back = BenchReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.suite, "des");
+        assert!(back.fast && back.pinned);
+        assert_eq!(back.entries.len(), 2);
+        assert_eq!(back.entries[0].get_metric("img_per_sec"), Some(100.0));
+        assert!(back.entries[0].get_metric("recovery_p50_ms").unwrap().is_nan());
+        assert_eq!(back.entries[0].wall, r.entries[0].wall);
+    }
+
+    #[test]
+    fn check_gates_deviations_in_both_directions_but_never_wall() {
+        let base = report();
+        // identical → clean
+        let (notes, failures) = report().check_against(&base, 0.05);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(notes.is_empty(), "{notes:?}");
+        // wall drift alone never gates
+        let mut cur = report();
+        cur.entries[0].wall[0].1 *= 10.0;
+        assert!(cur.check_against(&base, 0.05).1.is_empty());
+        // 2× slowdown on a gated metric fails …
+        let mut cur = report();
+        cur.entries[0].metrics[0].1 = 50.0;
+        let (_, failures) = cur.check_against(&base, 0.05);
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("img_per_sec"), "{failures:?}");
+        // … and so does a surprise 2× speedup (baselines must be updated,
+        // not silently outgrown)
+        let mut cur = report();
+        cur.entries[0].metrics[1].1 = 24.0;
+        assert_eq!(cur.check_against(&base, 0.05).1.len(), 1);
+        // zero baselines compare absolutely
+        let mut cur = report();
+        cur.entries[0].metrics[2].1 = 3.0;
+        assert_eq!(cur.check_against(&base, 0.05).1.len(), 1);
+    }
+
+    #[test]
+    fn check_skips_unpinned_fast_mismatch_and_notes_new_entries() {
+        // unpinned baseline: adopt, never fail
+        let mut base = report();
+        base.pinned = false;
+        let mut cur = report();
+        cur.entries[0].metrics[0].1 = 1.0;
+        let (notes, failures) = cur.check_against(&base, 0.05);
+        assert!(failures.is_empty());
+        assert!(notes[0].contains("unpinned"), "{notes:?}");
+        // fast/full mismatch: skip with a note
+        let mut base = report();
+        base.fast = false;
+        let (notes, failures) = report().check_against(&base, 0.05);
+        assert!(failures.is_empty());
+        assert!(notes[0].contains("fast-mode mismatch"), "{notes:?}");
+        // missing entry/metric in the current run is a failure
+        let base = report();
+        let mut cur = report();
+        cur.entries.remove(1);
+        cur.entries[0].metrics.remove(1);
+        let (_, failures) = cur.check_against(&base, 0.05);
+        assert_eq!(failures.len(), 2, "{failures:?}");
+        // a new current-only entry is a note, not a failure
+        let mut cur = report();
+        cur.push(BenchEntry::new("brand-new").metric("x", 1.0));
+        let (notes, failures) = cur.check_against(&base, 0.05);
+        assert!(failures.is_empty());
+        assert!(notes.iter().any(|n| n.contains("brand-new")), "{notes:?}");
     }
 }

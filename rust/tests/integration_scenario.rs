@@ -17,7 +17,7 @@ use vta_cluster::scenario::{
 };
 use vta_cluster::sched::{build_plan_priced, PlanOption, Strategy};
 use vta_cluster::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
-use vta_cluster::telemetry::{chrome_trace, TelemetryConfig};
+use vta_cluster::telemetry::{chrome_trace, metrics::prometheus, AuditVerdict, TelemetryConfig};
 use vta_cluster::util::json::{self, Json};
 
 fn scenarios_dir() -> PathBuf {
@@ -30,7 +30,19 @@ fn scenarios_dir() -> PathBuf {
 
 fn assert_report_schema(j: &Json, what: &str) {
     let top: Vec<&str> = j.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
-    assert_eq!(top, Report::TOP_KEYS, "{what}: top-level keys drifted");
+    // the stable prefix is exact; `telemetry` and `metrics` are the only
+    // optional trailing keys (present iff their runs collected bundles),
+    // and they keep this relative order
+    assert_eq!(&top[..Report::TOP_KEYS.len().min(top.len())], Report::TOP_KEYS,
+        "{what}: top-level keys drifted");
+    let extras = &top[Report::TOP_KEYS.len()..];
+    let mut allowed = ["telemetry", "metrics"].iter();
+    for key in extras {
+        assert!(
+            allowed.any(|a| a == key),
+            "{what}: unexpected/misordered trailing key '{key}' in {top:?}"
+        );
+    }
     let rows = j.get("rows").unwrap().as_arr().unwrap();
     assert!(!rows.is_empty(), "{what}: empty report");
     for r in rows {
@@ -299,4 +311,117 @@ fn overrides_flip_the_engine_without_schema_drift() {
     assert_eq!(des.rows[0].engine, "des");
     assert_report_schema(&analytic.to_json(), "analytic");
     assert_report_schema(&des.to_json(), "des");
+}
+
+/// Metrics acceptance (DESIGN.md §15): in the shipped chaos-with-metrics
+/// scenario every fired alert lands in BOTH places — the report's event
+/// timeline (as an `alert` pseudo-event carrying the rule name) and the
+/// controller's audit log inside the metric bundle (verdict `alert`,
+/// same message). One incident, one story, two views.
+#[test]
+fn alerts_land_in_both_the_event_timeline_and_the_audit_log() {
+    let doc = json::from_file(&scenarios_dir().join("chaos_metrics.json")).unwrap();
+    let rep = Session::new(ScenarioSpec::from_json(&doc).unwrap())
+        .unwrap()
+        .with_calibration(Calibration::default())
+        .fast(true)
+        .run()
+        .unwrap();
+    assert_report_schema(&rep.to_json(), "chaos_metrics");
+
+    let alert_rows: Vec<&EventRow> =
+        rep.events.iter().filter(|e| e.from_strategy == "alert").collect();
+    assert!(!alert_rows.is_empty(), "chaos run fired no alert events");
+    assert_eq!(rep.metrics.len(), 1, "metrics knob must attach one bundle");
+    let mb = &rep.metrics[0];
+    assert_eq!(mb.alerts.len(), alert_rows.len(), "timeline and bundle disagree");
+    for e in &alert_rows {
+        assert!(
+            mb.alerts.iter().any(|a| a.rule == e.to_strategy && a.message == e.reason),
+            "timeline alert '{}' missing from the bundle",
+            e.to_strategy
+        );
+    }
+    // a crash that drops 1 of 3 nodes must at least trip the
+    // availability floor
+    assert!(
+        alert_rows.iter().any(|e| e.to_strategy == "availability-floor"),
+        "expected availability-floor among {:?}",
+        alert_rows.iter().map(|e| e.to_strategy.as_str()).collect::<Vec<_>>()
+    );
+    // the controller is enabled, so the same firings were audited
+    let audited: Vec<&str> = mb
+        .audit
+        .iter()
+        .filter(|r| r.verdict == AuditVerdict::Alert)
+        .map(|r| r.reason.as_str())
+        .collect();
+    assert!(!audited.is_empty(), "audit log saw no alert records");
+    for e in &alert_rows {
+        assert!(
+            audited.contains(&e.reason.as_str()),
+            "alert '{}' never reached the audit log",
+            e.reason
+        );
+    }
+}
+
+/// Sweeps compose with the metrics knob: every cell contributes its own
+/// bundle, labels prefixed with the cell tag so grid points stay
+/// distinguishable in the exported series.
+#[test]
+fn sweep_cells_carry_cell_tagged_metric_bundles() {
+    let doc = Json::parse(
+        r#"{
+          "name": "metrics-sweep", "engine": "des",
+          "model": "mlp", "strategy": "sg", "family": "zynq", "nodes": 2,
+          "arrival": {"kind": "poisson"},
+          "telemetry": {"metrics": true},
+          "horizon_ms": 1500, "seed": 11,
+          "sweep": {"nodes": [2, 3]}
+        }"#,
+    )
+    .unwrap();
+    let sweep = Sweep::from_doc(&doc).unwrap().expect("doc has a sweep block");
+    let rep = sweep.run(&Calibration::default()).unwrap();
+    assert_eq!(rep.rows.len(), 2);
+    assert_eq!(rep.metrics.len(), 2, "one bundle per cell");
+    for (row, mb) in rep.rows.iter().zip(&rep.metrics) {
+        assert_eq!(mb.label, row.label, "bundle/row label mismatch");
+        assert!(mb.label.contains('/'), "no cell tag in '{}'", mb.label);
+        assert!(mb.series("vta_arrivals_total").is_some());
+    }
+    assert_report_schema(&rep.to_json(), "metrics-sweep");
+}
+
+/// The Prometheus exporter emits well-formed text exposition: one
+/// HELP/TYPE header per metric, `vta_` samples labeled with the run,
+/// and latency distributions as summaries with quantile/sum/count.
+#[test]
+fn prometheus_export_is_well_formed_text_exposition() {
+    let text = r#"{
+      "name": "prom", "engine": "des", "model": "mlp", "strategy": "sg",
+      "nodes": 2, "arrival": {"kind": "poisson"},
+      "telemetry": {"metrics": true}, "horizon_ms": 1500, "seed": 5
+    }"#;
+    let rep = Session::new(ScenarioSpec::parse(text).unwrap())
+        .unwrap()
+        .with_calibration(Calibration::default())
+        .fast(true)
+        .run()
+        .unwrap();
+    assert_eq!(rep.metrics.len(), 1);
+    let out = prometheus(&rep.metrics);
+    assert!(out.contains("# TYPE vta_arrivals_total counter"), "{out}");
+    assert!(out.contains("# TYPE vta_backlog gauge"), "{out}");
+    assert!(out.contains("# TYPE vta_request_latency_ns summary"), "{out}");
+    assert!(out.contains(r#"quantile="0.99""#), "{out}");
+    assert!(out.contains("vta_request_latency_ns_count"), "{out}");
+    assert!(out.contains("vta_request_latency_ns_sum"), "{out}");
+    // every sample line is `name{labels} value` with a parseable value
+    for line in out.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (_, value) = line.rsplit_once(' ').expect("sample line");
+        assert!(value.parse::<f64>().is_ok(), "unparseable sample value in '{line}'");
+        assert!(line.contains(r#"run=""#), "sample missing the run label: '{line}'");
+    }
 }

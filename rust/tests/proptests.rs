@@ -467,6 +467,127 @@ fn prop_fault_free_faults_block_is_byte_identical_to_no_block() {
 }
 
 #[test]
+fn prop_empty_telemetry_block_is_byte_identical_to_no_block() {
+    // the §15 zero-cost-off invariant at the outermost layer: an empty
+    // `telemetry` block (metrics defaulting to off) resolves to the
+    // same spec and the same Report bytes as no block at all
+    use vta_cluster::scenario::{ScenarioSpec, Session};
+    use vta_cluster::util::json;
+    forall("empty telemetry block is invisible", 4, |rng| {
+        let model = *rng.choice(&["lenet5", "mlp"]);
+        let strategy = *rng.choice(&["sg", "pipeline", "ai"]);
+        let n = rng.range(1, 4);
+        let seed = rng.next_u64() % 100_000;
+        let controller = rng.below(2) == 1;
+        let spec = |telemetry: &str| {
+            format!(
+                r#"{{
+                  "name": "prop-off", "engine": "des",
+                  "model": "{model}", "strategy": "{strategy}",
+                  "family": "zynq", "nodes": {n},
+                  "arrival": {{"kind": "poisson"}},
+                  "controller": {{"enabled": {controller}}},
+                  "slo_ms": 100{telemetry},
+                  "horizon_ms": 1200, "seed": {seed}
+                }}"#
+            )
+        };
+        let parsed_with = ScenarioSpec::parse(&spec(r#", "telemetry": {}"#))
+            .map_err(|e| e.to_string())?;
+        let parsed_without = ScenarioSpec::parse(&spec("")).map_err(|e| e.to_string())?;
+        prop_assert!(parsed_with == parsed_without, "empty block changed the spec");
+        let run = |s: ScenarioSpec| -> Result<String, String> {
+            let rep = Session::new(s)
+                .map_err(|e| e.to_string())?
+                .with_calibration(Calibration::default())
+                .fast(true)
+                .run()
+                .map_err(|e| e.to_string())?;
+            Ok(json::pretty(&rep.to_json()))
+        };
+        prop_assert!(
+            run(parsed_with)? == run(parsed_without)?,
+            "{model} {strategy} n={n} seed={seed}: empty telemetry block changed the report"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metering_never_changes_the_simulation() {
+    // the metrics registry mirrors the tracer's purity contract
+    // (DESIGN.md §15): sampling counters/gauges/histograms per control
+    // window must leave every measured number bit-identical
+    use vta_cluster::telemetry::MetricsConfig;
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::default(),
+    );
+    let graphs: Vec<_> =
+        zoo::names().iter().map(|m| zoo::build(m, 0).unwrap()).collect();
+    forall("metering is pure observation", 5, |rng| {
+        let g = rng.choice(&graphs);
+        let strategy = *rng.choice(&Strategy::all());
+        let n = rng.range(1, 5);
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+        let opts = plan_options(g, &cluster, &mut cost, &[strategy])
+            .map_err(|e| e.to_string())?;
+        let cap = opts[0].capacity_img_per_sec;
+        let horizon_ms = (150.0 / cap * 1e3).max(20.0 * opts[0].latency_ms);
+        let seed = rng.next_u64();
+        let slo_ms = *rng.choice(&[0.0, 50.0]);
+        let mut run = |metrics: MetricsConfig| {
+            let mut cfg = DesConfig::new(
+                ArrivalProcess::Poisson { rate_per_sec: 0.7 * cap },
+                horizon_ms,
+                seed,
+            );
+            cfg.metrics = metrics;
+            run_des(&opts, 0, &cluster, &mut cost, g, &cfg, None)
+                .map_err(|e| e.to_string())
+        };
+        let base = run(MetricsConfig::off())?;
+        let metered = run(MetricsConfig::on(slo_ms))?;
+        prop_assert!(base.metrics.is_none(), "metrics off still collected");
+        let mb = metered.metrics.ok_or("metrics on collected nothing")?;
+        prop_assert!(base.offered == metered.offered, "offered diverged");
+        prop_assert!(base.completed == metered.completed, "completed diverged");
+        prop_assert!(base.network_bytes == metered.network_bytes, "bytes diverged");
+        prop_assert!(
+            base.events_processed == metered.events_processed,
+            "event count diverged"
+        );
+        prop_assert!(
+            base.latency_ms.p99() == metered.latency_ms.p99()
+                && base.power.j_per_image == metered.power.j_per_image,
+            "measured numbers diverged under metering"
+        );
+        // and what it collected is conserved: admitted = completed + in
+        // flight at every window close
+        let pts = |name: &str| {
+            mb.series(name)
+                .map(|s| s.points.clone())
+                .ok_or_else(|| format!("no {name} series"))
+        };
+        let (arr, comp, back) = (
+            pts("vta_arrivals_total")?,
+            pts("vta_completions_total")?,
+            pts("vta_backlog")?,
+        );
+        prop_assert!(!arr.is_empty(), "no sampled windows");
+        for i in 0..arr.len() {
+            prop_assert!(
+                arr[i].1 == comp[i].1 + back[i].1,
+                "window at t={} ms leaks requests",
+                arr[i].0
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_chaos_span_trees_conserve_time_exactly() {
     // the §13 span-conservation invariant must survive chaos (DESIGN.md
     // §14): with a mid-run crash + rejoin, a straggler and a degraded
