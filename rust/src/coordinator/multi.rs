@@ -23,6 +23,7 @@ use crate::graph::zoo;
 use crate::runtime::TensorData;
 use crate::sched::online::PlanOption;
 use crate::sched::{build_plan_priced, ExecutionPlan, Strategy};
+use crate::serve::BatchConfig;
 use crate::sim::{
     run_des, simulate, ArrivalProcess, CostModel, DesConfig, DesResult, SimConfig, SimResult,
 };
@@ -105,9 +106,22 @@ impl MultiCoordinator {
     /// tenant, pipelines already run their own workers). Returns, per
     /// tenant in start order, the ordered outputs and a
     /// [`ServingReport`] whose `model` field is the tenant name.
+    /// Dispatches each tenant's whole batch as one wave; see
+    /// [`MultiCoordinator::run_batches_chunked`] to cap in-flight work.
     pub fn run_batches(
         &mut self,
         batches: Vec<(String, Vec<TensorData>)>,
+    ) -> anyhow::Result<Vec<(String, Vec<TensorData>, ServingReport)>> {
+        self.run_batches_chunked(batches, BatchConfig::unbounded())
+    }
+
+    /// [`MultiCoordinator::run_batches`] through the serve-layer chunker
+    /// (DESIGN.md §16): every tenant's driver keeps at most
+    /// `cfg.max_size` of its images in flight at once.
+    pub fn run_batches_chunked(
+        &mut self,
+        batches: Vec<(String, Vec<TensorData>)>,
+        cfg: BatchConfig,
     ) -> anyhow::Result<Vec<(String, Vec<TensorData>, ServingReport)>> {
         let mut pending: HashMap<String, Vec<TensorData>> = HashMap::new();
         for (name, batch) in batches {
@@ -127,7 +141,7 @@ impl MultiCoordinator {
                 let Some(batch) = pending.remove(name.as_str()) else { continue };
                 let tenant = name.clone();
                 handles.push(scope.spawn(move || {
-                    let (outs, mut report) = coord.run_batch(batch)?;
+                    let (outs, mut report) = coord.run_batch_chunked(batch, cfg)?;
                     report.model = tenant.clone();
                     Ok::<_, anyhow::Error>((tenant, outs, report))
                 }));

@@ -16,6 +16,7 @@
 use super::metrics::Metrics;
 use crate::runtime::{Engine, Manifest, TensorData};
 use crate::sched::{ExecutionPlan, SplitMode};
+use crate::serve::{chunk, BatchConfig};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -208,28 +209,46 @@ impl Coordinator {
     }
 
     /// Serve a whole batch and wait for every completion. Results come
-    /// back in submission order regardless of completion order.
+    /// back in submission order regardless of completion order. The
+    /// whole set is dispatched as one wave; see
+    /// [`Coordinator::run_batch_chunked`] to cap in-flight work.
     pub fn run_batch(&self, images: Vec<TensorData>) -> anyhow::Result<(Vec<TensorData>, ServingReport)> {
+        self.run_batch_chunked(images, BatchConfig::unbounded())
+    }
+
+    /// [`Coordinator::run_batch`] through the serve-layer chunker
+    /// (DESIGN.md §16): at most `cfg.max_size` images are in flight at
+    /// once, and wave k+1 is not submitted until wave k has drained.
+    pub fn run_batch_chunked(
+        &self,
+        images: Vec<TensorData>,
+        cfg: BatchConfig,
+    ) -> anyhow::Result<(Vec<TensorData>, ServingReport)> {
         let n = images.len();
         let mut metrics = Metrics::new();
         metrics.start();
         let t0 = Instant::now();
-        let mut slot_of = std::collections::HashMap::with_capacity(n);
-        for (slot, img) in images.into_iter().enumerate() {
-            let id = self.submit(img)?;
-            slot_of.insert(id, slot);
-        }
         let mut out: Vec<Option<TensorData>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let c = self
-                .results
-                .recv()
-                .map_err(|_| anyhow::anyhow!("pipeline closed mid-batch"))?;
-            metrics.record(c.submitted.elapsed());
-            let slot = *slot_of
-                .get(&c.id)
-                .ok_or_else(|| anyhow::anyhow!("completion for unknown request {}", c.id))?;
-            out[slot] = Some(c.logits);
+        let mut base = 0usize;
+        for wave in chunk(images, cfg.max_size) {
+            let k = wave.len();
+            let mut slot_of = std::collections::HashMap::with_capacity(k);
+            for (off, img) in wave.into_iter().enumerate() {
+                let id = self.submit(img)?;
+                slot_of.insert(id, base + off);
+            }
+            for _ in 0..k {
+                let c = self
+                    .results
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("pipeline closed mid-batch"))?;
+                metrics.record(c.submitted.elapsed());
+                let slot = *slot_of
+                    .get(&c.id)
+                    .ok_or_else(|| anyhow::anyhow!("completion for unknown request {}", c.id))?;
+                out[slot] = Some(c.logits);
+            }
+            base += k;
         }
         let wall = t0.elapsed();
         let report = ServingReport {

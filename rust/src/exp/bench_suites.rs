@@ -1,4 +1,4 @@
-//! The three tracked bench suites behind `vtacluster bench` and the
+//! The four tracked bench suites behind `vtacluster bench` and the
 //! `cargo bench` wrappers (DESIGN.md §15).
 //!
 //! Each suite runs a fixed set of seeded scenarios and returns a
@@ -10,6 +10,8 @@
 //!   `examples/scenarios/` (`BENCH_scenarios.json`)
 //! * [`faults_suite`]    — E14 chaos figures: availability, attainment,
 //!   recovery tails (`BENCH_faults.json`)
+//! * [`serve_suite`]     — E16 serving front end: batched goodput at
+//!   saturation, tail-drop shedding, trace replay (`BENCH_serve.json`)
 //!
 //! The deterministic `metrics` of each entry are what
 //! `vtacluster bench --check` gates against the checked-in baselines in
@@ -23,13 +25,14 @@ use crate::config::{
 use crate::graph::zoo;
 use crate::scenario::{Report, ScenarioSpec, Session, Sweep};
 use crate::sched::{plan_options, ControllerConfig, OnlineController, Strategy};
+use crate::serve::{AdmissionConfig, BatchConfig, ShedPolicy};
 use crate::sim::{run_des, ArrivalProcess, CostModel, DesConfig, DesResult};
 use crate::util::bench::{Bench, BenchEntry, BenchReport};
 use crate::util::json::{self, Json};
 use std::path::Path;
 
 /// All suites, in canonical order: `(file stem, builder)`.
-pub const SUITE_NAMES: [&str; 3] = ["des", "scenarios", "faults"];
+pub const SUITE_NAMES: [&str; 4] = ["des", "scenarios", "faults", "serve"];
 
 fn des_entry(name: &str, r: &DesResult) -> BenchEntry {
     BenchEntry::new(name)
@@ -262,6 +265,152 @@ pub fn faults_suite(calib: &Calibration) -> anyhow::Result<BenchReport> {
     Ok(report)
 }
 
+/// E16: the serving front end — batched dispatch at saturation (the
+/// latency-vs-throughput trade the batch former buys), tail-drop
+/// admission under overload, and a two-tenant trace replay through the
+/// per-tenant rate gate.
+pub fn serve_suite(calib: &Calibration) -> anyhow::Result<BenchReport> {
+    let mut b = Bench::new("serve_front_end");
+    let mut report = BenchReport::new("serve");
+    let horizon_ms = if report.fast { 2500.0 } else { 8000.0 };
+    let seed = 17u64;
+
+    let family = BoardFamily::Zynq7000;
+    let g = zoo::build("lenet5", 0)?;
+    let vta = VtaConfig::table1_zynq7000();
+    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(family), calib.clone());
+    let cluster = ClusterConfig::homogeneous(family, 2).with_vta(vta);
+    let options = plan_options(&g, &cluster, &mut cost, &Strategy::all())?;
+    let initial = options
+        .iter()
+        .position(|o| o.plan.strategy == Strategy::Pipeline)
+        .expect("pipeline is always a candidate");
+    let cap0 = options[initial].capacity_img_per_sec;
+
+    // 1.6x overload: at saturation, batching must buy goodput (amortized
+    // weight fetches), not merely shift latency around.
+    let mut goodput = [0.0f64; 2];
+    for (i, (tag, max_size)) in [("batch1_saturated", 1usize), ("batch8_saturated", 8)]
+        .into_iter()
+        .enumerate()
+    {
+        let mut cfg = DesConfig::new(
+            ArrivalProcess::Poisson { rate_per_sec: 1.6 * cap0 },
+            horizon_ms,
+            seed,
+        );
+        if max_size > 1 {
+            cfg.serve.batch = Some(BatchConfig { max_size, max_wait_ms: 2.0 });
+        }
+        let r = run_des(&options, initial, &cluster, &mut cost, &g, &cfg, None)?;
+        let batch_mean = if r.batches_dispatched > 0 {
+            r.batch_members as f64 / r.batches_dispatched as f64
+        } else {
+            f64::NAN
+        };
+        goodput[i] = r.throughput_img_per_sec;
+        b.row(&format!(
+            "{tag:22} seed {seed}: {:5}/{:5} images, {:7.1} img/s goodput, \
+             batch mean {batch_mean:5.2}, p99 {:9.2} ms",
+            r.completed,
+            r.offered,
+            r.throughput_img_per_sec,
+            r.latency_ms.percentile(99.0).unwrap_or(0.0),
+        ));
+        report.push(
+            BenchEntry::new(tag)
+                .metric("offered", r.offered as f64)
+                .metric("completed", r.completed as f64)
+                .metric("goodput_img_per_sec", r.throughput_img_per_sec)
+                .metric("batch_mean", batch_mean)
+                .metric("p99_ms", r.latency_ms.percentile(99.0).unwrap_or(f64::NAN))
+                .wall("wall_ms", r.wall_ms),
+        );
+    }
+    anyhow::ensure!(
+        goodput[1] > goodput[0],
+        "batched dispatch must raise saturated goodput (batch8 {:.1} <= batch1 {:.1} img/s)",
+        goodput[1],
+        goodput[0]
+    );
+
+    // tail-drop at 2x overload: the queue stays bounded and the sheds
+    // account for everything the bound refused
+    let mut cfg = DesConfig::new(
+        ArrivalProcess::Poisson { rate_per_sec: 2.0 * cap0 },
+        horizon_ms,
+        seed,
+    );
+    cfg.serve.admission = Some(AdmissionConfig {
+        policy: ShedPolicy::TailDrop,
+        queue_cap: 12,
+        deadline_ns: 0,
+        tenant_rate: 0.0,
+        tenant_burst: 16.0,
+    });
+    let r = run_des(&options, initial, &cluster, &mut cost, &g, &cfg, None)?;
+    b.row(&format!(
+        "{:22} seed {seed}: shed {:5}/{:5}, backlog max {:3}, p99 {:9.2} ms",
+        "tail_drop_overload",
+        r.shed,
+        r.offered,
+        r.max_backlog,
+        r.latency_ms.percentile(99.0).unwrap_or(0.0),
+    ));
+    report.push(
+        BenchEntry::new("tail_drop_overload")
+            .metric("offered", r.offered as f64)
+            .metric("completed", r.completed as f64)
+            .metric("shed", r.shed as f64)
+            .metric(
+                "shed_rate",
+                if r.offered > 0 { r.shed as f64 / r.offered as f64 } else { 0.0 },
+            )
+            .metric("max_backlog", r.max_backlog as f64)
+            .metric("p99_ms", r.latency_ms.percentile(99.0).unwrap_or(f64::NAN))
+            .wall("wall_ms", r.wall_ms),
+    );
+
+    // the shipped two-tenant trace through the scenario layer, with the
+    // token-bucket gate throttling the bursty tenant
+    let text = r#"{
+      "name": "bench-trace-replay", "engine": "des",
+      "model": "lenet5", "strategy": "pipeline", "family": "zynq", "nodes": 2,
+      "arrival": {"kind": "trace", "path": "examples/traces/burst_2tenant.jsonl"},
+      "admission": {"policy": "none", "tenant_rate_img_per_sec": 25, "tenant_burst": 6},
+      "horizon_ms": 4000, "seed": 5
+    }"#;
+    let t0 = std::time::Instant::now();
+    let rep = Session::new(ScenarioSpec::parse(text)?)?
+        .with_calibration(calib.clone())
+        .run()
+        .map_err(|e| anyhow::anyhow!("trace-replay: {e}"))?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let row = &rep.rows[0];
+    let shed_rate_limit: u64 = rep.serve.iter().map(|t| t.shed_rate_limit).sum();
+    b.row(&format!(
+        "{:22} {:3} tenant row(s): {:5}/{:5} images, rate-limit shed {:4}",
+        "trace_replay",
+        rep.serve.len(),
+        row.completed,
+        row.offered,
+        shed_rate_limit,
+    ));
+    report.push(
+        BenchEntry::new("trace_replay")
+            .metric("offered", row.offered as f64)
+            .metric("completed", row.completed as f64)
+            .metric("shed_rate", row.shed_rate)
+            .metric("shed_rate_limit", shed_rate_limit as f64)
+            .metric("goodput_img_per_sec", row.goodput_img_per_sec)
+            .metric("tenant_rows", rep.serve.len() as f64)
+            .wall("wall_ms", wall_ms),
+    );
+
+    b.finish();
+    Ok(report)
+}
+
 /// Build one suite by name (the `vtacluster bench --suite` dispatch).
 pub fn run_suite(
     name: &str,
@@ -272,7 +421,8 @@ pub fn run_suite(
         "des" => des_suite(calib),
         "scenarios" => scenarios_suite(scenarios_dir, calib),
         "faults" => faults_suite(calib),
-        other => anyhow::bail!("unknown bench suite '{other}' (des|scenarios|faults|all)"),
+        "serve" => serve_suite(calib),
+        other => anyhow::bail!("unknown bench suite '{other}' (des|scenarios|faults|serve|all)"),
     }
 }
 
@@ -297,6 +447,41 @@ mod tests {
         assert!(a.entries.iter().all(|e| !e.wall.is_empty()));
         // JSON roundtrip through the stable schema (string-compare: NaN
         // metrics travel as null, and NaN != NaN under PartialEq)
+        let back = BenchReport::from_json(&a.to_json()).unwrap();
+        assert_eq!(json::pretty(&back.to_json()), json::pretty(&a.to_json()));
+    }
+
+    #[test]
+    fn serve_suite_is_deterministic_and_batching_buys_goodput() {
+        std::env::set_var("VTA_BENCH_FAST", "1");
+        let calib = Calibration::default();
+        let a = serve_suite(&calib).unwrap();
+        let b = serve_suite(&calib).unwrap();
+        assert_eq!(a.suite, "serve");
+        assert_eq!(a.entries.len(), 4);
+        assert_eq!(a.entries[0].name, "batch1_saturated");
+        assert_eq!(a.entries[3].name, "trace_replay");
+        let (notes, failures) = a.check_against(&b, 0.0);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(notes.is_empty(), "{notes:?}");
+        // the E16 acceptance property, also enforced inside the suite:
+        // at saturation, batched goodput strictly beats max_size=1
+        let goodput = |i: usize| -> f64 {
+            a.entries[i]
+                .metrics
+                .iter()
+                .find(|(k, _)| k == "goodput_img_per_sec")
+                .expect("goodput metric")
+                .1
+        };
+        assert!(goodput(1) > goodput(0), "{} <= {}", goodput(1), goodput(0));
+        // the replayed trace offers exactly its line count, and the rate
+        // gate sheds some of the bursty tenant's wave
+        let trace = &a.entries[3];
+        let m = |k: &str| trace.metrics.iter().find(|(n, _)| n == k).unwrap().1;
+        assert_eq!(m("offered"), 88.0);
+        assert_eq!(m("tenant_rows"), 2.0);
+        assert!(m("shed_rate_limit") > 0.0);
         let back = BenchReport::from_json(&a.to_json()).unwrap();
         assert_eq!(json::pretty(&back.to_json()), json::pretty(&a.to_json()));
     }

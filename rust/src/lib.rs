@@ -26,7 +26,10 @@
 //!   adapters over, all observable through a zero-cost-when-off
 //!   telemetry layer ([`telemetry`]) of per-request span traces, HDR
 //!   histograms, a controller decision audit log, and a Perfetto
-//!   (Chrome trace-event) exporter behind `vtacluster run --trace`.
+//!   (Chrome trace-event) exporter behind `vtacluster run --trace`,
+//!   fronted by a production serving layer ([`serve`]) — per-tenant
+//!   admission control with load shedding, a batch former with
+//!   batch-dependent service times, and JSONL request-trace replay.
 //! * **Layer 2 (python/compile, build-time)** — int8 ResNet-18 in JAX,
 //!   AOT-lowered to HLO text artifacts per graph segment.
 //! * **Layer 1 (python/compile/kernels, build-time)** — the VTA GEMM and
@@ -50,6 +53,7 @@ pub mod power;
 pub mod runtime;
 pub mod scenario;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod telemetry;
 pub mod util;

@@ -40,10 +40,10 @@
 //! * `serve`      — run the real PJRT serving pipeline on a batch of
 //!                  synthetic images (end-to-end driver)
 //! * `bench`      — run the tracked bench suites (des|scenarios|faults|
-//!                  all), writing `BENCH_<suite>.json`; `--check` gates
-//!                  the deterministic metrics against the checked-in
-//!                  baselines in `benches/baselines/` with a relative
-//!                  tolerance (DESIGN.md §15)
+//!                  serve|all), writing `BENCH_<suite>.json`; `--check`
+//!                  gates the deterministic metrics against the
+//!                  checked-in baselines in `benches/baselines/` with a
+//!                  relative tolerance (DESIGN.md §15)
 //!
 //! `simulate`, `multi`, `load` and `power` all build a
 //! [`ScenarioSpec`] and execute it through [`Session::run`] /
@@ -97,7 +97,7 @@ fn run() -> anyhow::Result<()> {
         .opt("metrics", "", "`run`: enable the metrics registry (sets telemetry.metrics=true) and write Prometheus text to this path (sweeps write one file per cell, cell tag in the name)")
         .multi("set", "`run`: spec override `key=value` (dotted paths, repeatable)")
         .flag("emit-spec", "`run`: print the resolved spec JSON and exit without running")
-        .opt("suite", "all", "`bench`: which suite to run (des|scenarios|faults|all)")
+        .opt("suite", "all", "`bench`: which suite to run (des|scenarios|faults|serve|all)")
         .flag("check", "`bench`: gate results against the baseline BENCH_*.json files")
         .opt("baseline-dir", "benches/baselines", "`bench --check`: directory holding the baseline BENCH_*.json files")
         .opt("tol", "0.05", "`bench --check`: relative tolerance on gated metrics (0.05 = ±5%)")
@@ -519,6 +519,28 @@ fn print_report(r: &Report) {
             );
         }
     }
+    if !r.serve.is_empty() {
+        println!("per-tenant admission ({} row(s)):", r.serve.len());
+        println!(
+            "  {:34} {:12} {:>8} {:>9} {:>8} {:>9} {:>10} {:>8} {:>8}",
+            "label", "tenant", "offered", "admitted", "shed(q)", "shed(dl)", "shed(rate)", "p50 ms",
+            "p99 ms"
+        );
+        for s in &r.serve {
+            println!(
+                "  {:34} {:12} {:>8} {:>9} {:>8} {:>9} {:>10} {:>8.3} {:>8.3}",
+                s.label,
+                s.tenant,
+                s.offered,
+                s.admitted,
+                s.shed_queue,
+                s.shed_deadline,
+                s.shed_rate_limit,
+                s.p50_ms,
+                s.p99_ms,
+            );
+        }
+    }
     print_timeline(&r.timeline);
 }
 
@@ -824,6 +846,7 @@ fn load_cmd(a: LoadArgs) -> anyhow::Result<()> {
         kind: a.arrival_kind.clone(),
         rate: a.rate,
         burst_mult: a.burst_mult,
+        ..Default::default()
     };
     spec.controller = vta_cluster::scenario::ControllerSpec {
         enabled: a.controller,

@@ -26,11 +26,11 @@ pub mod session;
 pub mod spec;
 pub mod sweep;
 
-pub use report::{EventRow, Report, ReportRow};
+pub use report::{EventRow, Report, ReportRow, ServeRow};
 pub use session::{CostCache, Session};
 pub use spec::{
-    ArrivalSpec, BoardGroup, ControllerSpec, CrashSpec, Engine, FaultsSpec, ScenarioSpec,
-    StageSpec, TenantEntry,
+    AdmissionSpec, ArrivalSpec, BatchSpec, BoardGroup, ControllerSpec, CrashSpec, Engine,
+    FaultsSpec, ScenarioSpec, StageSpec, TenantEntry,
 };
 pub use sweep::{apply_overrides, parse_override, set_path, Sweep};
 

@@ -93,12 +93,26 @@ pub struct ReportRow {
     /// Control windows that completed zero requests while work was in
     /// flight — the explicit outage signal (never silently zero stats).
     pub stalled_windows: u64,
+    /// Fraction of offered requests the admission gate turned away
+    /// (DESIGN.md §16). `0.0` when no gate is configured.
+    pub shed_rate: f64,
+    /// Fraction of completed requests that missed the admission
+    /// deadline. NaN (JSON `null`) unless a gate with a deadline ran
+    /// and something completed.
+    pub deadline_miss_rate: f64,
+    /// Mean realized batch size (requests per dispatch). `1.0` exactly
+    /// when batching is off; NaN when nothing dispatched.
+    pub batch_mean: f64,
+    /// SLO-qualified throughput, img/s: `img_per_sec × slo_attainment`
+    /// when an SLO is set, plain `img_per_sec` otherwise — the number
+    /// admission control exists to protect.
+    pub goodput_img_per_sec: f64,
 }
 
 impl ReportRow {
     /// The row schema, in emit order — the contract the scenario CI
     /// suite snapshot-checks.
-    pub const ROW_KEYS: [&'static str; 31] = [
+    pub const ROW_KEYS: [&'static str; 35] = [
         "label",
         "engine",
         "model",
@@ -130,6 +144,10 @@ impl ReportRow {
         "recovery_p50_ms",
         "recovery_p99_ms",
         "stalled_windows",
+        "shed_rate",
+        "deadline_miss_rate",
+        "batch_mean",
+        "goodput_img_per_sec",
     ];
 
     pub fn to_json(&self) -> Json {
@@ -171,6 +189,10 @@ impl ReportRow {
             ("recovery_p50_ms", fnum(self.recovery_p50_ms)),
             ("recovery_p99_ms", fnum(self.recovery_p99_ms)),
             ("stalled_windows", json::int(self.stalled_windows as i64)),
+            ("shed_rate", fnum(self.shed_rate)),
+            ("deadline_miss_rate", fnum(self.deadline_miss_rate)),
+            ("batch_mean", fnum(self.batch_mean)),
+            ("goodput_img_per_sec", fnum(self.goodput_img_per_sec)),
         ])
     }
 
@@ -179,6 +201,53 @@ impl ReportRow {
         self.p50_ms = s.p50();
         self.p95_ms = s.p95();
         self.p99_ms = s.p99();
+    }
+}
+
+/// Per-tenant admission/latency accounting from a run with the serving
+/// front end on (DESIGN.md §16) — one row per (run × tenant), tagged
+/// with the report row it belongs to.
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    /// Label of the report row whose run produced this tenant line.
+    pub label: String,
+    pub tenant: String,
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed_queue: u64,
+    pub shed_deadline: u64,
+    pub shed_rate_limit: u64,
+    /// Completed-request latency percentiles for this tenant, ms. NaN
+    /// (JSON `null`) when none of its requests completed.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl ServeRow {
+    pub const SERVE_KEYS: [&'static str; 9] = [
+        "label",
+        "tenant",
+        "offered",
+        "admitted",
+        "shed_queue",
+        "shed_deadline",
+        "shed_rate_limit",
+        "p50_ms",
+        "p99_ms",
+    ];
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("label", json::str_(&self.label)),
+            ("tenant", json::str_(&self.tenant)),
+            ("offered", json::int(self.offered as i64)),
+            ("admitted", json::int(self.admitted as i64)),
+            ("shed_queue", json::int(self.shed_queue as i64)),
+            ("shed_deadline", json::int(self.shed_deadline as i64)),
+            ("shed_rate_limit", json::int(self.shed_rate_limit as i64)),
+            ("p50_ms", fnum(self.p50_ms)),
+            ("p99_ms", fnum(self.p99_ms)),
+        ])
     }
 }
 
@@ -234,6 +303,11 @@ pub struct Report {
     /// `telemetry`: emitted as an extra trailing `metrics` key only when
     /// non-empty.
     pub metrics: Vec<RunMetrics>,
+    /// Per-tenant admission rows (DESIGN.md §16), one per (run ×
+    /// tenant) of runs with the serving front end on. Same
+    /// zero-cost-off contract: emitted as an extra trailing `serve` key
+    /// only when non-empty.
+    pub serve: Vec<ServeRow>,
 }
 
 impl Report {
@@ -252,6 +326,7 @@ impl Report {
             timeline: Vec::new(),
             telemetry: Vec::new(),
             metrics: Vec::new(),
+            serve: Vec::new(),
         }
     }
 
@@ -297,10 +372,20 @@ impl Report {
                 };
             }
         }
+        for s in &mut other.serve {
+            if !tag.is_empty() {
+                s.label = if s.label.is_empty() {
+                    tag.to_string()
+                } else {
+                    format!("{tag}/{}", s.label)
+                };
+            }
+        }
         self.rows.append(&mut other.rows);
         self.events.append(&mut other.events);
         self.telemetry.append(&mut other.telemetry);
         self.metrics.append(&mut other.metrics);
+        self.serve.append(&mut other.serve);
         // a merged report is multi-run: the per-run timeline is dropped
         self.timeline.clear();
     }
@@ -364,6 +449,12 @@ impl Report {
                 Json::Arr(self.metrics.iter().map(|m| m.to_json()).collect()),
             ));
         }
+        if !self.serve.is_empty() {
+            fields.push((
+                "serve",
+                Json::Arr(self.serve.iter().map(|s| s.to_json()).collect()),
+            ));
+        }
         json::obj(fields)
     }
 }
@@ -415,6 +506,10 @@ mod tests {
             recovery_p50_ms: f64::NAN,
             recovery_p99_ms: f64::NAN,
             stalled_windows: 0,
+            shed_rate: 0.0,
+            deadline_miss_rate: f64::NAN,
+            batch_mean: 1.0,
+            goodput_img_per_sec: 1e3 / ms,
         }
     }
 
@@ -563,6 +658,52 @@ mod tests {
         let mut base = Report::new("sweep", "des", 1);
         base.absorb("n=4", rep);
         assert_eq!(base.metrics[0].label, "n=4/a");
+    }
+
+    #[test]
+    fn serve_key_appears_only_when_tenant_rows_exist() {
+        let mut rep = Report::new("t", "des", 1);
+        rep.rows.push(row("a", 10.0, 5.0));
+        let top: Vec<String> = rep
+            .to_json()
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect();
+        assert_eq!(top, Report::TOP_KEYS, "serve-off report grew a key");
+
+        rep.serve.push(ServeRow {
+            label: "a".into(),
+            tenant: "alpha".into(),
+            offered: 100,
+            admitted: 90,
+            shed_queue: 10,
+            shed_deadline: 0,
+            shed_rate_limit: 0,
+            p50_ms: 4.0,
+            p99_ms: f64::NAN,
+        });
+        let j = rep.to_json();
+        let top: Vec<String> =
+            j.as_obj().unwrap().iter().map(|(k, _)| k.clone()).collect();
+        let mut want: Vec<String> =
+            Report::TOP_KEYS.iter().map(|s| s.to_string()).collect();
+        want.push("serve".to_string());
+        assert_eq!(top, want);
+        let srow = &j.get("serve").unwrap().as_arr().unwrap()[0];
+        let keys: Vec<&str> =
+            srow.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ServeRow::SERVE_KEYS);
+        // NaN percentiles stay valid JSON
+        assert_eq!(srow.get("p99_ms"), Some(&Json::Null));
+        let text = crate::util::json::pretty(&j);
+        assert_eq!(Json::parse(&text).unwrap(), j);
+
+        // absorb prefixes serve labels like row labels
+        let mut base = Report::new("sweep", "des", 1);
+        base.absorb("n=4", rep);
+        assert_eq!(base.serve[0].label, "n=4/a");
     }
 
     #[test]

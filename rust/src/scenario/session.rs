@@ -17,7 +17,7 @@
 //! `VTA_BENCH_FAST=1` (or [`Session::fast`]) clamps horizons to 2.5 s
 //! and streams to 16 images so CI can smoke-run every example scenario.
 
-use super::report::{EventRow, Report, ReportRow};
+use super::report::{EventRow, Report, ReportRow, ServeRow};
 use super::spec::{ArrivalSpec, BoardGroup, Engine, ScenarioSpec, TenantEntry};
 use crate::config::{
     BoardFamily, BoardProfile, Calibration, ClusterConfig, ReconfigCost,
@@ -30,6 +30,7 @@ use crate::sched::{
     build_plan_priced, plan_options, survivor_options, ControllerConfig, ExecutionPlan,
     OnlineController, PlanOption, Strategy,
 };
+use crate::serve::RequestTrace;
 use crate::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
 use crate::telemetry::{RunMetrics, RunTelemetry, TelemetryConfig};
 use crate::util::rng::Rng;
@@ -196,7 +197,7 @@ impl Session {
                 report.rows.push(row);
             }
             Engine::Des => {
-                let (row, events, timeline, telemetry, metrics) =
+                let (row, events, timeline, telemetry, metrics, serve) =
                     self.des_cell(spec, group, tenant, seed, rate_override, label, cache)?;
                 if let Some(t) = telemetry {
                     report.telemetry.push(stamp(t, &row.label, spec.engine));
@@ -204,6 +205,7 @@ impl Session {
                 if let Some(m) = metrics {
                     report.metrics.push(m);
                 }
+                report.serve.extend(serve);
                 report.rows.push(row);
                 report.events.extend(events);
                 if keep_timeline {
@@ -289,6 +291,7 @@ impl Session {
             spec.seed,
         )?;
         for (i, t) in out.iter().enumerate() {
+            let attainment = slo_attainment(&t.loaded.latency_ms, spec.slo_ms);
             let mut row = ReportRow {
                 label: tenant_label(&spec.tenants, i),
                 engine: Engine::Analytic.as_str().to_string(),
@@ -318,10 +321,14 @@ impl Session {
                 meets_slo: spec.slo_ms == 0.0
                     || t.sim.latency_ms.mean() <= spec.slo_ms,
                 availability: 1.0,
-                slo_attainment: slo_attainment(&t.loaded.latency_ms, spec.slo_ms),
+                slo_attainment: attainment,
                 recovery_p50_ms: f64::NAN,
                 recovery_p99_ms: f64::NAN,
                 stalled_windows: 0,
+                shed_rate: 0.0,
+                deadline_miss_rate: f64::NAN,
+                batch_mean: 1.0,
+                goodput_img_per_sec: goodput(t.report.throughput_img_per_sec, attainment),
             };
             row.set_percentiles(&t.loaded.latency_ms);
             report.rows.push(row);
@@ -451,6 +458,7 @@ impl Session {
             Some((_, meets)) => *meets,
             None => spec.slo_ms == 0.0 || sim.latency_ms.mean() <= spec.slo_ms,
         };
+        let attainment = slo_attainment(&des.latency_ms, spec.slo_ms);
         let mut row = ReportRow {
             label: eco_label(label, &eco),
             engine: Engine::Analytic.as_str().to_string(),
@@ -479,10 +487,14 @@ impl Session {
             dominated: false,
             meets_slo,
             availability: 1.0,
-            slo_attainment: slo_attainment(&des.latency_ms, spec.slo_ms),
+            slo_attainment: attainment,
             recovery_p50_ms: f64::NAN,
             recovery_p99_ms: f64::NAN,
             stalled_windows: 0,
+            shed_rate: 0.0,
+            deadline_miss_rate: f64::NAN,
+            batch_mean: 1.0,
+            goodput_img_per_sec: goodput(capacity, attainment),
         };
         row.set_percentiles(&des.latency_ms);
         // the loaded-percentile DES carries the windowed series; the
@@ -517,6 +529,7 @@ impl Session {
         Vec<(f64, usize)>,
         Option<RunTelemetry>,
         Option<RunMetrics>,
+        Vec<ServeRow>,
     )> {
         let g = zoo::build(&tenant.model, tenant.input_hw)?;
         let cluster = cluster_for(group)?;
@@ -562,12 +575,26 @@ impl Session {
             }
         }
 
-        let rate = rate_override.unwrap_or_else(|| effective_rate(&spec.arrival, cap0));
-        let arrival = ArrivalProcess::parse(&spec.arrival.kind, rate, spec.arrival.burst_mult)?;
+        // trace replays carry their own timestamps and tenant routing;
+        // every other arrival kind goes through the rate vocabulary
+        let mut serve_tenants: Vec<String> = Vec::new();
+        let arrival = if spec.arrival.kind.eq_ignore_ascii_case("trace") {
+            let trace = RequestTrace::load(&spec.arrival.path, spec.arrival.time_scale)?;
+            serve_tenants = trace.tenant_names.clone();
+            trace.to_process()
+        } else {
+            let rate = rate_override.unwrap_or_else(|| effective_rate(&spec.arrival, cap0));
+            ArrivalProcess::parse(&spec.arrival.kind, rate, spec.arrival.burst_mult)?
+        };
         let mut cfg = DesConfig::new(arrival, spec.horizon_ms, seed);
         cfg.telemetry = self.telemetry;
         cfg.metrics =
             spec.telemetry.to_metrics_config(spec.slo_ms, spec.controller.power_budget_w);
+        cfg.serve.admission = spec.admission.to_config(spec.slo_ms)?;
+        cfg.serve.batch = spec.batch.to_config();
+        cfg.serve.tenants = serve_tenants;
+        let deadline_active =
+            cfg.serve.admission.as_ref().is_some_and(|a| a.deadline_ns > 0);
         if !spec.faults.is_off() {
             // the rejoin re-flash is always a full-tier cost: a crash
             // loses the PL image regardless of the controller's tier
@@ -588,6 +615,7 @@ impl Session {
         let mut r = run_des(&options, initial, &cluster, cost, &g, &cfg, controller.as_mut())?;
 
         let p99 = r.latency_ms.p99();
+        let attainment = slo_attainment(&r.latency_ms, spec.slo_ms);
         let mut row = ReportRow {
             label: eco_label(label, &eco),
             engine: Engine::Des.as_str().to_string(),
@@ -616,10 +644,22 @@ impl Session {
             dominated: false,
             meets_slo: spec.slo_ms == 0.0 || (p99.is_finite() && p99 <= spec.slo_ms),
             availability: r.availability,
-            slo_attainment: slo_attainment(&r.latency_ms, spec.slo_ms),
+            slo_attainment: attainment,
             recovery_p50_ms: r.recovery_ms.p50(),
             recovery_p99_ms: r.recovery_ms.p99(),
             stalled_windows: r.stalled_windows,
+            shed_rate: if r.offered > 0 { r.shed as f64 / r.offered as f64 } else { 0.0 },
+            deadline_miss_rate: if deadline_active && r.completed > 0 {
+                r.deadline_missed as f64 / r.completed as f64
+            } else {
+                f64::NAN
+            },
+            batch_mean: if r.batches_dispatched > 0 {
+                r.batch_members as f64 / r.batches_dispatched as f64
+            } else {
+                f64::NAN
+            },
+            goodput_img_per_sec: goodput(r.throughput_img_per_sec, attainment),
         };
         row.set_percentiles(&r.latency_ms);
         let mut events: Vec<EventRow> = r
@@ -663,7 +703,27 @@ impl Session {
         let telemetry = r.telemetry.take();
         let metrics =
             r.metrics.take().map(|m| stamp_metrics(m, &row.label, Engine::Des));
-        Ok((row, events, r.queue_timeline, telemetry, metrics))
+        let serve = r
+            .serve
+            .take()
+            .map(|s| {
+                s.tenants
+                    .iter()
+                    .map(|t| ServeRow {
+                        label: row.label.clone(),
+                        tenant: t.name.clone(),
+                        offered: t.offered,
+                        admitted: t.admitted,
+                        shed_queue: t.shed_queue,
+                        shed_deadline: t.shed_deadline,
+                        shed_rate_limit: t.shed_rate_limit,
+                        p50_ms: t.latency_ms.p50(),
+                        p99_ms: t.latency_ms.p99(),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok((row, events, r.queue_timeline, telemetry, metrics, serve))
     }
 }
 
@@ -698,6 +758,17 @@ fn slo_attainment(latency: &Summary, slo_ms: f64) -> f64 {
         return f64::NAN;
     }
     latency.fraction_at_or_below(slo_ms).unwrap_or(f64::NAN)
+}
+
+/// SLO-qualified throughput (DESIGN.md §16): throughput discounted by
+/// the fraction of completions that met the SLO — plain throughput when
+/// no SLO is set (attainment NaN).
+fn goodput(img_per_sec: f64, slo_attainment: f64) -> f64 {
+    if slo_attainment.is_finite() {
+        img_per_sec * slo_attainment
+    } else {
+        img_per_sec
+    }
 }
 
 /// Auto arrival rate from plan capacity: 70 % load, or 55 % for burst so
@@ -1015,6 +1086,102 @@ mod tests {
         assert_eq!(m.engine, "analytic");
         assert!(m.series("vta_steady_ms_per_image").is_some());
         assert!(m.series("vta_steady_img_per_sec").is_some());
+    }
+
+    #[test]
+    fn serve_off_blocks_are_byte_identical_to_no_blocks() {
+        // absent blocks ≡ empty blocks ≡ batching at max_size 1: the
+        // §16 zero-cost contract at report level
+        let without = r#"{
+          "model": "lenet5", "strategy": "ai", "nodes": 2, "engine": "des",
+          "horizon_ms": 3000, "seed": 7
+        }"#;
+        let empty = r#"{
+          "model": "lenet5", "strategy": "ai", "nodes": 2, "engine": "des",
+          "horizon_ms": 3000, "seed": 7, "admission": {}, "batch": {}
+        }"#;
+        let batch_one = r#"{
+          "model": "lenet5", "strategy": "ai", "nodes": 2, "engine": "des",
+          "horizon_ms": 3000, "seed": 7, "batch": {"max_size": 1, "max_wait_ms": 9.0}
+        }"#;
+        let a = crate::util::json::pretty(&session(without).run().unwrap().to_json());
+        let b = crate::util::json::pretty(&session(empty).run().unwrap().to_json());
+        let c = crate::util::json::pretty(&session(batch_one).run().unwrap().to_json());
+        assert_eq!(a, b, "empty serve blocks perturbed the report");
+        assert_eq!(a, c, "max_size=1 batching perturbed the report");
+        // the off row carries the documented serve defaults
+        let rep = session(without).run().unwrap();
+        assert_eq!(rep.rows[0].shed_rate, 0.0);
+        assert!(rep.rows[0].deadline_miss_rate.is_nan());
+        assert_eq!(rep.rows[0].batch_mean, 1.0);
+        assert_eq!(
+            rep.rows[0].goodput_img_per_sec, rep.rows[0].img_per_sec,
+            "no SLO ⇒ goodput is plain throughput"
+        );
+        assert!(rep.serve.is_empty());
+    }
+
+    #[test]
+    fn trace_arrival_replays_the_log_and_fills_serve_rows() {
+        let dir = std::env::temp_dir().join(format!("vta-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("session_replay.jsonl");
+        let mut lines = String::new();
+        for i in 0..30u64 {
+            let tenant = if i % 3 == 0 { "beta" } else { "alpha" };
+            lines.push_str(&format!(
+                "{{\"t_ms\": {}, \"tenant\": \"{tenant}\"}}\n",
+                i * 40
+            ));
+        }
+        std::fs::write(&path, lines).unwrap();
+        let text = format!(
+            r#"{{
+              "model": "lenet5", "strategy": "pipeline", "nodes": 2, "engine": "des",
+              "horizon_ms": 4000, "seed": 3, "controller": {{"enabled": false}},
+              "arrival": {{"kind": "trace", "path": {:?}, "time_scale": 1.0}}
+            }}"#,
+            path.to_str().unwrap()
+        );
+        let rep = session(&text).run().unwrap();
+        std::fs::remove_file(&path).ok();
+        let row = &rep.rows[0];
+        assert_eq!(row.offered, 30, "every trace request fits the horizon");
+        assert_eq!(row.shed_rate, 0.0, "no gate, nothing shed");
+        // two tenants in the log ⇒ per-tenant serve rows, name-sorted
+        assert_eq!(rep.serve.len(), 2);
+        assert_eq!(rep.serve[0].tenant, "alpha");
+        assert_eq!(rep.serve[1].tenant, "beta");
+        assert_eq!(rep.serve[0].offered, 20);
+        assert_eq!(rep.serve[1].offered, 10);
+        assert_eq!(rep.serve[0].admitted, 20);
+        // the trailing `serve` key appears exactly once
+        let top: Vec<String> = rep
+            .to_json()
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut want: Vec<String> =
+            Report::TOP_KEYS.iter().map(|s| s.to_string()).collect();
+        want.push("serve".to_string());
+        assert_eq!(top, want);
+        // replays are seed-independent: a different seed, same report rows
+        let text2 = text.replace("\"seed\": 3", "\"seed\": 44");
+        std::fs::write(&path, {
+            let mut l = String::new();
+            for i in 0..30u64 {
+                let tenant = if i % 3 == 0 { "beta" } else { "alpha" };
+                l.push_str(&format!("{{\"t_ms\": {}, \"tenant\": \"{tenant}\"}}\n", i * 40));
+            }
+            l
+        })
+        .unwrap();
+        let rep2 = session(&text2).run().unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(rep2.rows[0].completed, row.completed);
+        assert_eq!(rep2.rows[0].p99_ms, row.p99_ms);
     }
 
     #[test]

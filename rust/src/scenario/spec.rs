@@ -20,9 +20,11 @@ use crate::config::reconfig::ReconfigCost;
 use crate::config::{BoardFamily, ReconfigTier};
 use crate::graph::{zoo, Graph};
 use crate::sched::{ExecutionPlan, SplitMode, StagePlan, Strategy};
+use crate::serve::{AdmissionConfig, BatchConfig, ShedPolicy};
 use crate::sim::faults::{FaultsConfig, ScriptedCrash};
 use crate::telemetry::{AlertRules, MetricsConfig};
 use crate::util::json::{self, Json};
+use crate::util::units::ms_to_ns;
 
 /// Which simulator prices the scenario.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,18 +93,123 @@ pub struct BoardGroup {
 /// for its loaded-percentile pass).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArrivalSpec {
-    /// `poisson` | `burst` | `diurnal`.
+    /// `poisson` | `burst` | `diurnal` | `trace`.
     pub kind: String,
     /// Base rate, img/s; `0` = auto from plan capacity (70 %, or 55 %
-    /// for `burst` so the MMPP high phase overloads it).
+    /// for `burst` so the MMPP high phase overloads it). Ignored by
+    /// `trace` replays (the log carries its own timestamps).
     pub rate: f64,
     /// Burst-phase multiplier (only read when `kind == "burst"`).
     pub burst_mult: f64,
+    /// JSONL request log to replay (only read when `kind == "trace"`;
+    /// DESIGN.md §16). Relative paths resolve against the CWD and its
+    /// parent, so `examples/traces/…` works from the repo root and
+    /// `rust/`.
+    pub path: String,
+    /// Trace time compression: recorded timestamps are divided by this,
+    /// so `2.0` replays the log at twice the recorded request rate.
+    pub time_scale: f64,
 }
 
 impl Default for ArrivalSpec {
     fn default() -> Self {
-        ArrivalSpec { kind: "poisson".into(), rate: 0.0, burst_mult: 4.0 }
+        ArrivalSpec {
+            kind: "poisson".into(),
+            rate: 0.0,
+            burst_mult: 4.0,
+            path: String::new(),
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// Declarative admission-control block (DESIGN.md §16): a bounded
+/// request queue with a load-shedding policy and per-tenant token-bucket
+/// rate isolation. The default is fully off, and an all-default block is
+/// semantically identical to no block at all — the property test pins
+/// byte-identical reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionSpec {
+    /// `none` | `tail-drop` | `deadline-drop`.
+    pub policy: String,
+    /// Backlog bound for `tail-drop`; `0` = unbounded.
+    pub queue_cap: usize,
+    /// Deadline for `deadline-drop` (and the miss counter), ms;
+    /// `0` = inherit the scenario `slo_ms`.
+    pub deadline_ms: f64,
+    /// Per-tenant token-bucket refill rate, img/s; `0` = no rate gate.
+    pub tenant_rate_img_per_sec: f64,
+    /// Token-bucket depth (burst allowance), img.
+    pub tenant_burst: f64,
+}
+
+impl Default for AdmissionSpec {
+    fn default() -> Self {
+        AdmissionSpec {
+            policy: "none".into(),
+            queue_cap: 0,
+            deadline_ms: 0.0,
+            tenant_rate_img_per_sec: 0.0,
+            tenant_burst: 16.0,
+        }
+    }
+}
+
+impl AdmissionSpec {
+    /// No gate active — the zero-cost default.
+    pub fn is_off(&self) -> bool {
+        self.policy.eq_ignore_ascii_case("none") && self.tenant_rate_img_per_sec == 0.0
+    }
+
+    /// Resolve into the simulator's [`AdmissionConfig`]. `slo_ms` is the
+    /// scenario SLO, inherited as the deadline when the block does not
+    /// set its own `deadline_ms`.
+    pub fn to_config(&self, slo_ms: f64) -> anyhow::Result<Option<AdmissionConfig>> {
+        if self.is_off() {
+            return Ok(None);
+        }
+        let deadline_ms = if self.deadline_ms > 0.0 { self.deadline_ms } else { slo_ms };
+        Ok(Some(AdmissionConfig {
+            policy: ShedPolicy::parse(&self.policy)?,
+            queue_cap: self.queue_cap,
+            deadline_ns: if deadline_ms > 0.0 { ms_to_ns(deadline_ms) } else { 0 },
+            tenant_rate: self.tenant_rate_img_per_sec,
+            tenant_burst: self.tenant_burst,
+        }))
+    }
+}
+
+/// Declarative batched-dispatch block (DESIGN.md §16): requests are
+/// grouped into batches of up to `max_size`, a partial batch launching
+/// after `max_wait_ms`. The default (`max_size = 1`) is fully off, and
+/// an all-default block is semantically identical to no block at all —
+/// the property test pins byte-identical reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchSpec {
+    /// Largest batch a single dispatch carries; `1` = no batching.
+    pub max_size: usize,
+    /// Longest a partial batch waits for co-riders before launching, ms.
+    pub max_wait_ms: f64,
+}
+
+impl Default for BatchSpec {
+    fn default() -> Self {
+        BatchSpec { max_size: 1, max_wait_ms: 1.0 }
+    }
+}
+
+impl BatchSpec {
+    /// No batch former active — the zero-cost default.
+    pub fn is_off(&self) -> bool {
+        self.max_size <= 1
+    }
+
+    /// Resolve into the simulator's [`BatchConfig`].
+    pub fn to_config(&self) -> Option<BatchConfig> {
+        if self.is_off() {
+            return None;
+        }
+        Some(BatchConfig { max_size: self.max_size, max_wait_ms: self.max_wait_ms })
     }
 }
 
@@ -286,6 +393,11 @@ pub struct ScenarioSpec {
     pub faults: FaultsSpec,
     /// Windowed metrics + alert rules (DESIGN.md §15); defaults to off.
     pub telemetry: TelemetrySpec,
+    /// Admission control + load shedding (DESIGN.md §16); defaults to
+    /// off.
+    pub admission: AdmissionSpec,
+    /// Batched dispatch (DESIGN.md §16); defaults to off (`max_size` 1).
+    pub batch: BatchSpec,
     /// Latency SLO, ms; `0` = none. Checked against unloaded latency
     /// (analytic) or p99 (DES); also the eco strategy's constraint.
     pub slo_ms: f64,
@@ -313,6 +425,8 @@ impl ScenarioSpec {
             controller: ControllerSpec::default(),
             faults: FaultsSpec::default(),
             telemetry: TelemetrySpec::default(),
+            admission: AdmissionSpec::default(),
+            batch: BatchSpec::default(),
             slo_ms: 0.0,
             horizon_ms: 20_000.0,
         }
@@ -359,8 +473,36 @@ impl ScenarioSpec {
                 self.arrival.burst_mult > 1.0,
                 "arrival.burst_mult must be > 1 for burst arrivals"
             ),
-            other => anyhow::bail!("unknown arrival.kind '{other}' (poisson|burst|diurnal)"),
+            "trace" => {
+                anyhow::ensure!(
+                    !self.arrival.path.is_empty(),
+                    "arrival.kind \"trace\" needs an arrival.path (JSONL request log)"
+                );
+                anyhow::ensure!(
+                    self.engine == Engine::Des,
+                    "trace replay needs the des engine \
+                     (the analytic model has no timeline to replay onto)"
+                );
+                anyhow::ensure!(
+                    self.tenants.len() == 1 && self.boards.len() == 1,
+                    "trace replay drives a single workload on one board family \
+                     (the log's tenants share the model; give each model its own scenario)"
+                );
+            }
+            other => {
+                anyhow::bail!("unknown arrival.kind '{other}' (poisson|burst|diurnal|trace)")
+            }
         }
+        if !self.arrival.kind.eq_ignore_ascii_case("trace") {
+            anyhow::ensure!(
+                self.arrival.path.is_empty(),
+                "arrival.path is only read when arrival.kind is \"trace\""
+            );
+        }
+        anyhow::ensure!(
+            self.arrival.time_scale > 0.0 && self.arrival.time_scale.is_finite(),
+            "arrival.time_scale must be finite and > 0"
+        );
         anyhow::ensure!(
             self.arrival.rate >= 0.0 && self.arrival.rate.is_finite(),
             "arrival.rate must be ≥ 0 (0 = auto from plan capacity)"
@@ -445,6 +587,56 @@ impl ScenarioSpec {
             (0.0..=1.0).contains(&tl.availability_floor),
             "telemetry.availability_floor must be in [0, 1]"
         );
+        let adm = &self.admission;
+        let policy = ShedPolicy::parse(&adm.policy)?;
+        anyhow::ensure!(
+            adm.deadline_ms >= 0.0 && adm.deadline_ms.is_finite(),
+            "admission.deadline_ms must be ≥ 0 (0 = inherit slo_ms)"
+        );
+        anyhow::ensure!(
+            adm.tenant_rate_img_per_sec >= 0.0 && adm.tenant_rate_img_per_sec.is_finite(),
+            "admission.tenant_rate_img_per_sec must be ≥ 0 (0 = no rate gate)"
+        );
+        if adm.tenant_rate_img_per_sec > 0.0 {
+            anyhow::ensure!(
+                adm.tenant_burst >= 1.0 && adm.tenant_burst.is_finite(),
+                "admission.tenant_burst must be ≥ 1 when the rate gate is on"
+            );
+        }
+        if policy == ShedPolicy::TailDrop {
+            anyhow::ensure!(
+                adm.queue_cap >= 1,
+                "admission.policy \"tail-drop\" needs a queue_cap ≥ 1"
+            );
+        }
+        if policy == ShedPolicy::DeadlineDrop {
+            anyhow::ensure!(
+                adm.deadline_ms > 0.0 || self.slo_ms > 0.0,
+                "admission.policy \"deadline-drop\" needs a deadline_ms or a scenario slo_ms"
+            );
+        }
+        anyhow::ensure!(
+            (1..=64).contains(&self.batch.max_size),
+            "batch.max_size must be in 1..=64 (the DES prices batches up to 64)"
+        );
+        if !self.batch.is_off() {
+            anyhow::ensure!(
+                self.batch.max_wait_ms > 0.0 && self.batch.max_wait_ms.is_finite(),
+                "batch.max_wait_ms must be finite and > 0 when batching is on"
+            );
+        }
+        if !adm.is_off() || !self.batch.is_off() {
+            anyhow::ensure!(
+                self.engine == Engine::Des,
+                "the serving front end (admission/batch) needs the des engine \
+                 (the analytic model has no request timeline to gate)"
+            );
+            anyhow::ensure!(
+                self.tenants.len() == 1 && self.boards.len() == 1,
+                "the serving front end drives a single workload on one board family \
+                 (serve tenants come from the request trace, not the tenants array)"
+            );
+        }
         Ok(())
     }
 
@@ -487,8 +679,9 @@ impl ScenarioSpec {
             "scenario",
             &[
                 "name", "engine", "seed", "tenants", "boards", "arrival", "controller",
-                "faults", "telemetry", "slo_ms", "horizon_ms", "sweep", "model",
-                "strategy", "images", "input_hw", "plan", "family", "nodes",
+                "faults", "telemetry", "admission", "batch", "slo_ms", "horizon_ms",
+                "sweep", "model", "strategy", "images", "input_hw", "plan", "family",
+                "nodes",
             ],
         )?;
         // a sweep is a *grid over* specs, not a spec field: parsing one
@@ -570,7 +763,7 @@ impl ScenarioSpec {
 
         let arrival = match doc.get("arrival") {
             Some(a) => {
-                check_keys(a, "arrival", &["kind", "rate", "burst_mult"])?;
+                check_keys(a, "arrival", &["kind", "rate", "burst_mult", "path", "time_scale"])?;
                 ArrivalSpec {
                     kind: match a.get("kind") {
                         Some(v) => v.as_str()?.to_string(),
@@ -583,6 +776,14 @@ impl ScenarioSpec {
                     burst_mult: match a.get("burst_mult") {
                         Some(v) => v.as_f64()?,
                         None => 4.0,
+                    },
+                    path: match a.get("path") {
+                        Some(v) => v.as_str()?.to_string(),
+                        None => String::new(),
+                    },
+                    time_scale: match a.get("time_scale") {
+                        Some(v) => v.as_f64()?,
+                        None => 1.0,
                     },
                 }
             }
@@ -702,6 +903,57 @@ impl ScenarioSpec {
             }
             None => TelemetrySpec::default(),
         };
+        let admission = match doc.get("admission") {
+            Some(a) => {
+                check_keys(
+                    a,
+                    "admission",
+                    &[
+                        "policy", "queue_cap", "deadline_ms", "tenant_rate_img_per_sec",
+                        "tenant_burst",
+                    ],
+                )?;
+                AdmissionSpec {
+                    policy: match a.get("policy") {
+                        Some(v) => v.as_str()?.to_string(),
+                        None => "none".to_string(),
+                    },
+                    queue_cap: match a.get("queue_cap") {
+                        Some(v) => v.as_usize()?,
+                        None => 0,
+                    },
+                    deadline_ms: match a.get("deadline_ms") {
+                        Some(v) => v.as_f64()?,
+                        None => 0.0,
+                    },
+                    tenant_rate_img_per_sec: match a.get("tenant_rate_img_per_sec") {
+                        Some(v) => v.as_f64()?,
+                        None => 0.0,
+                    },
+                    tenant_burst: match a.get("tenant_burst") {
+                        Some(v) => v.as_f64()?,
+                        None => 16.0,
+                    },
+                }
+            }
+            None => AdmissionSpec::default(),
+        };
+        let batch = match doc.get("batch") {
+            Some(b) => {
+                check_keys(b, "batch", &["max_size", "max_wait_ms"])?;
+                BatchSpec {
+                    max_size: match b.get("max_size") {
+                        Some(v) => v.as_usize()?,
+                        None => 1,
+                    },
+                    max_wait_ms: match b.get("max_wait_ms") {
+                        Some(v) => v.as_f64()?,
+                        None => 1.0,
+                    },
+                }
+            }
+            None => BatchSpec::default(),
+        };
         let slo_ms = match doc.get("slo_ms") {
             Some(v) => v.as_f64()?,
             None => 0.0,
@@ -721,6 +973,8 @@ impl ScenarioSpec {
             controller,
             faults,
             telemetry,
+            admission,
+            batch,
             slo_ms,
             horizon_ms,
         };
@@ -858,6 +1112,8 @@ impl ScenarioSpec {
                     ("kind", json::str_(&self.arrival.kind)),
                     ("rate", json::num(self.arrival.rate)),
                     ("burst_mult", json::num(self.arrival.burst_mult)),
+                    ("path", json::str_(&self.arrival.path)),
+                    ("time_scale", json::num(self.arrival.time_scale)),
                 ]),
             ),
             (
@@ -904,6 +1160,26 @@ impl ScenarioSpec {
                     ("burn_windows", json::int(self.telemetry.burn_windows as i64)),
                     ("power_budget_w", json::num(self.telemetry.power_budget_w)),
                     ("availability_floor", json::num(self.telemetry.availability_floor)),
+                ]),
+            ),
+            (
+                "admission",
+                json::obj(vec![
+                    ("policy", json::str_(&self.admission.policy)),
+                    ("queue_cap", json::int(self.admission.queue_cap as i64)),
+                    ("deadline_ms", json::num(self.admission.deadline_ms)),
+                    (
+                        "tenant_rate_img_per_sec",
+                        json::num(self.admission.tenant_rate_img_per_sec),
+                    ),
+                    ("tenant_burst", json::num(self.admission.tenant_burst)),
+                ]),
+            ),
+            (
+                "batch",
+                json::obj(vec![
+                    ("max_size", json::int(self.batch.max_size as i64)),
+                    ("max_wait_ms", json::num(self.batch.max_wait_ms)),
                 ]),
             ),
             ("slo_ms", json::num(self.slo_ms)),
@@ -963,7 +1239,20 @@ mod tests {
             5,
         );
         spec.engine = Engine::Des;
-        spec.arrival = ArrivalSpec { kind: "burst".into(), rate: 120.5, burst_mult: 3.0 };
+        spec.arrival = ArrivalSpec {
+            kind: "burst".into(),
+            rate: 120.5,
+            burst_mult: 3.0,
+            ..ArrivalSpec::default()
+        };
+        spec.admission = AdmissionSpec {
+            policy: "tail-drop".into(),
+            queue_cap: 24,
+            deadline_ms: 80.0,
+            tenant_rate_img_per_sec: 55.0,
+            tenant_burst: 8.0,
+        };
+        spec.batch = BatchSpec { max_size: 8, max_wait_ms: 2.5 };
         spec.controller = ControllerSpec {
             enabled: true,
             power_budget_w: 30.0,
@@ -1228,5 +1517,101 @@ mod tests {
             r#"{"model": "mlp", "telemetry": {"metricz": true}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn serve_blocks_parse_and_resolve_to_configs() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+              "model": "lenet5", "engine": "des", "nodes": 2, "slo_ms": 40,
+              "admission": {"policy": "deadline-drop", "tenant_rate_img_per_sec": 30},
+              "batch": {"max_size": 8, "max_wait_ms": 2.0}
+            }"#,
+        )
+        .unwrap();
+        assert!(!spec.admission.is_off());
+        assert!(!spec.batch.is_off());
+        // deadline-drop with no explicit deadline inherits the SLO
+        let adm = spec.admission.to_config(spec.slo_ms).unwrap().expect("gate on");
+        assert_eq!(adm.policy, ShedPolicy::DeadlineDrop);
+        assert_eq!(adm.deadline_ns, ms_to_ns(40.0));
+        assert_eq!(adm.tenant_rate, 30.0);
+        assert_eq!(adm.tenant_burst, 16.0);
+        let b = spec.batch.to_config().expect("former on");
+        assert_eq!(b.max_size, 8);
+        assert_eq!(b.max_wait_ms, 2.0);
+        // off blocks resolve to the zero-cost None
+        assert!(AdmissionSpec::default().to_config(40.0).unwrap().is_none());
+        assert!(BatchSpec::default().to_config().is_none());
+
+        // empty admission/batch objects are the off defaults — same spec
+        // (and same canonical JSON) as no block at all
+        let with_empty = ScenarioSpec::parse(
+            r#"{"model": "lenet5", "engine": "des", "nodes": 2,
+                "admission": {}, "batch": {}}"#,
+        )
+        .unwrap();
+        let without =
+            ScenarioSpec::parse(r#"{"model": "lenet5", "engine": "des", "nodes": 2}"#).unwrap();
+        assert_eq!(with_empty, without);
+        assert_eq!(json::pretty(&with_empty.to_json()), json::pretty(&without.to_json()));
+    }
+
+    #[test]
+    fn rejects_bad_serve_specs() {
+        // unknown shed policy
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des", "admission": {"policy": "coin-flip"}}"#
+        )
+        .is_err());
+        // tail-drop without a cap is a no-op gate — reject, don't ignore
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des", "admission": {"policy": "tail-drop"}}"#
+        )
+        .is_err());
+        // deadline-drop with neither a deadline nor an SLO
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des", "admission": {"policy": "deadline-drop"}}"#
+        )
+        .is_err());
+        // the serving front end needs the des engine
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "batch": {"max_size": 4}}"#
+        )
+        .is_err());
+        // batches above the priced range
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des", "batch": {"max_size": 128}}"#
+        )
+        .is_err());
+        // trace replay needs a path …
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des", "arrival": {"kind": "trace"}}"#
+        )
+        .is_err());
+        // … and the des engine
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "arrival": {"kind": "trace", "path": "t.jsonl"}}"#
+        )
+        .is_err());
+        // a path on a non-trace arrival would be silently ignored
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des",
+                "arrival": {"kind": "poisson", "path": "t.jsonl"}}"#
+        )
+        .is_err());
+        // degenerate time compression
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des",
+                "arrival": {"kind": "trace", "path": "t.jsonl", "time_scale": 0}}"#
+        )
+        .is_err());
+        // a trace arrival itself parses fine (path existence is checked
+        // at session resolve time, not spec parse time)
+        assert!(ScenarioSpec::parse(
+            r#"{"model": "mlp", "engine": "des",
+                "arrival": {"kind": "trace", "path": "t.jsonl", "time_scale": 2.0}}"#
+        )
+        .is_ok());
     }
 }

@@ -1,0 +1,241 @@
+//! Batch former (DESIGN.md §16): collect admitted requests into
+//! dispatch batches bounded by a max size and a max wait.
+//!
+//! The same former drives both serving paths — the DES (via
+//! `FlushBatch` timer events keyed by a generation counter) and the
+//! real PJRT coordinator (via [`chunk`], which splits a ready batch
+//! into dispatch chunks). A batch computes as ONE stage launch per
+//! pipeline stage: VTA amortizes instruction fetch and driver launch
+//! over the batch (sub-linear compute), while activation bytes on the
+//! wire stay linear in batch size.
+
+use crate::util::units::{ms_to_ns, Nanos};
+
+/// Batching knobs. `max_size <= 1` means batching is off — the DES
+/// takes the exact per-image code path (byte-identity pinned by
+/// proptest).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Dispatch as soon as this many requests are pending.
+    pub max_size: usize,
+    /// Dispatch a partial batch this long after its first member
+    /// arrived, so a lull cannot strand requests.
+    pub max_wait_ms: f64,
+}
+
+impl BatchConfig {
+    /// One chunk, no waiting — the coordinator's default, which keeps
+    /// `run_batch` behaviour identical to the pre-serve code.
+    pub fn unbounded() -> BatchConfig {
+        BatchConfig {
+            max_size: usize::MAX,
+            max_wait_ms: 0.0,
+        }
+    }
+
+    /// True when the former actually groups requests.
+    pub fn is_active(&self) -> bool {
+        self.max_size > 1
+    }
+}
+
+/// One admitted request waiting in (or dispatched with) a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchMember {
+    /// Admission timestamp — latency is measured from here, so time
+    /// spent waiting for the batch to fill counts against the SLO.
+    pub admitted_ns: Nanos,
+    /// Tenant index (into the run's tenant table).
+    pub tenant: usize,
+}
+
+/// What one `push` did to the former.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// The batch filled to `max_size` — dispatch these now.
+    Full(Vec<BatchMember>),
+    /// The member opened a fresh batch: arm a flush timer at
+    /// `flush_at` carrying `generation`.
+    Opened { flush_at: Nanos, generation: u64 },
+    /// Joined an already-open batch; its existing timer still covers it.
+    Joined,
+}
+
+/// The former: at most one open batch at a time, flushed either by
+/// filling up or by its timer. Generations make stale timers inert:
+/// every newly opened batch bumps the counter, and [`flush`] only
+/// fires when the timer's generation matches the open batch.
+///
+/// [`flush`]: BatchFormer::flush
+#[derive(Debug)]
+pub struct BatchFormer {
+    max_size: usize,
+    max_wait_ns: Nanos,
+    pending: Vec<BatchMember>,
+    generation: u64,
+}
+
+impl BatchFormer {
+    pub fn new(cfg: &BatchConfig) -> BatchFormer {
+        BatchFormer {
+            max_size: cfg.max_size.max(1),
+            max_wait_ns: ms_to_ns(cfg.max_wait_ms.max(0.0)),
+            pending: Vec::new(),
+            generation: 0,
+        }
+    }
+
+    /// Add one member at time `now`.
+    pub fn push(&mut self, member: BatchMember, now: Nanos) -> PushOutcome {
+        let opened = self.pending.is_empty();
+        if opened {
+            self.generation += 1;
+        }
+        self.pending.push(member);
+        if self.pending.len() >= self.max_size {
+            return PushOutcome::Full(std::mem::take(&mut self.pending));
+        }
+        if opened {
+            PushOutcome::Opened {
+                flush_at: now + self.max_wait_ns,
+                generation: self.generation,
+            }
+        } else {
+            PushOutcome::Joined
+        }
+    }
+
+    /// Timer callback: dispatch the open partial batch, but only if
+    /// the timer belongs to it (same generation) and it still exists.
+    pub fn flush(&mut self, generation: u64) -> Option<Vec<BatchMember>> {
+        if generation == self.generation && !self.pending.is_empty() {
+            Some(std::mem::take(&mut self.pending))
+        } else {
+            None
+        }
+    }
+
+    /// Members waiting in the open batch.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+/// Split `items` into in-order dispatch chunks of at most `max_size`
+/// (0 or `usize::MAX` ⇒ one chunk). The real serving path
+/// (`coordinator::service::run_batch`) and the simulated one share
+/// this grouping.
+pub fn chunk<T>(items: Vec<T>, max_size: usize) -> Vec<Vec<T>> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let cap = if max_size == 0 { usize::MAX } else { max_size };
+    if items.len() <= cap {
+        return vec![items];
+    }
+    let mut out = Vec::with_capacity(items.len().div_ceil(cap));
+    let mut cur: Vec<T> = Vec::with_capacity(cap);
+    for it in items {
+        cur.push(it);
+        if cur.len() == cap {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(t: Nanos) -> BatchMember {
+        BatchMember {
+            admitted_ns: t,
+            tenant: 0,
+        }
+    }
+
+    #[test]
+    fn fills_at_max_size() {
+        let mut f = BatchFormer::new(&BatchConfig {
+            max_size: 3,
+            max_wait_ms: 1.0,
+        });
+        assert!(matches!(f.push(m(0), 0), PushOutcome::Opened { .. }));
+        assert_eq!(f.push(m(1), 1), PushOutcome::Joined);
+        match f.push(m(2), 2) {
+            PushOutcome::Full(batch) => {
+                assert_eq!(batch.len(), 3);
+                assert_eq!(batch[0].admitted_ns, 0);
+                assert_eq!(batch[2].admitted_ns, 2);
+            }
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(f.pending(), 0);
+    }
+
+    #[test]
+    fn timer_flushes_partial_batch_and_stale_timers_are_inert() {
+        let mut f = BatchFormer::new(&BatchConfig {
+            max_size: 4,
+            max_wait_ms: 2.0,
+        });
+        let g1 = match f.push(m(0), 0) {
+            PushOutcome::Opened {
+                flush_at,
+                generation,
+            } => {
+                assert_eq!(flush_at, ms_to_ns(2.0));
+                generation
+            }
+            other => panic!("expected Opened, got {other:?}"),
+        };
+        let batch = f.flush(g1).expect("live timer flushes");
+        assert_eq!(batch.len(), 1);
+        // Re-flushing the same generation on an empty former: nothing.
+        assert!(f.flush(g1).is_none());
+        // New batch gets a new generation; the old timer is stale.
+        let g2 = match f.push(m(5), 5) {
+            PushOutcome::Opened { generation, .. } => generation,
+            other => panic!("expected Opened, got {other:?}"),
+        };
+        assert_ne!(g1, g2);
+        assert!(f.flush(g1).is_none());
+        assert_eq!(f.flush(g2).expect("current timer flushes").len(), 1);
+    }
+
+    #[test]
+    fn max_size_one_fills_immediately() {
+        let mut f = BatchFormer::new(&BatchConfig {
+            max_size: 1,
+            max_wait_ms: 5.0,
+        });
+        assert!(matches!(f.push(m(0), 0), PushOutcome::Full(b) if b.len() == 1));
+    }
+
+    #[test]
+    fn chunk_preserves_order_and_edges() {
+        assert!(chunk::<u32>(vec![], 4).is_empty());
+        assert_eq!(chunk(vec![1, 2, 3], 0), vec![vec![1, 2, 3]]);
+        assert_eq!(chunk(vec![1, 2, 3], usize::MAX), vec![vec![1, 2, 3]]);
+        assert_eq!(
+            chunk(vec![1, 2, 3, 4, 5], 2),
+            vec![vec![1, 2], vec![3, 4], vec![5]]
+        );
+        assert_eq!(chunk(vec![1, 2], 2), vec![vec![1, 2]]);
+    }
+
+    #[test]
+    fn unbounded_config_is_a_single_chunk() {
+        let cfg = BatchConfig::unbounded();
+        assert_eq!(chunk(vec![1, 2, 3, 4], cfg.max_size), vec![vec![1, 2, 3, 4]]);
+        assert!(!BatchConfig {
+            max_size: 1,
+            max_wait_ms: 0.0
+        }
+        .is_active());
+    }
+}

@@ -1,0 +1,90 @@
+//! Production serving front end (DESIGN.md §16).
+//!
+//! Three pieces sit between raw request traffic and the engines:
+//!
+//! * [`admission`] — a bounded admission gate with load-shedding
+//!   policies (`none`, `tail-drop`, `deadline-drop`) and per-tenant
+//!   token-bucket rate isolation, so one tenant's burst cannot
+//!   inflate another tenant's tail latency.
+//! * [`batch`] — a batch former (max size + max wait) whose batches
+//!   flow through batch-dependent service times
+//!   ([`crate::sim::stage_service_times_batched`]): VTA's GEMM core
+//!   amortizes fetch/launch over a batch, so compute grows
+//!   sub-linearly while transfer bytes stay linear.
+//! * [`trace`] — an `arrival: trace` source replaying timestamped
+//!   JSONL request logs (with a time-scale factor and multi-tenant
+//!   routing) through [`crate::sim::run_des`].
+//!
+//! Like telemetry (§13), faults (§14) and metrics (§15), the whole
+//! subsystem carries a zero-cost-off contract: with no `admission`/
+//! `batch` block the DES takes exactly the pre-serve code path and
+//! reports are byte-identical, and `batch.max_size = 1` is treated as
+//! batching-off internally so it is byte-identical too (both pinned
+//! by proptests).
+
+pub mod admission;
+pub mod batch;
+pub mod trace;
+
+pub use admission::{
+    Admission, AdmissionConfig, ShedPolicy, ShedReason, TenantServeStats, Verdict,
+};
+pub use batch::{chunk, BatchConfig, BatchFormer, BatchMember, PushOutcome};
+pub use trace::RequestTrace;
+
+/// Serving front-end wiring for one DES run (DESIGN.md §16).
+///
+/// `ServeConfig::off()` (the [`Default`]) disables everything: no
+/// admission gate, no batch former, a single anonymous tenant — the
+/// zero-cost-off configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ServeConfig {
+    /// Admission gate; `None` admits everything (today's behaviour).
+    pub admission: Option<AdmissionConfig>,
+    /// Batch former; `None` (or `max_size <= 1`) dispatches per image.
+    pub batch: Option<BatchConfig>,
+    /// Tenant names for request routing / per-tenant stats; empty
+    /// means one anonymous tenant.
+    pub tenants: Vec<String>,
+}
+
+impl ServeConfig {
+    /// The do-nothing configuration (zero-cost-off).
+    pub fn off() -> ServeConfig {
+        ServeConfig::default()
+    }
+
+    /// True when the run needs no serve bookkeeping at all.
+    pub fn is_off(&self) -> bool {
+        self.admission.is_none() && self.batch.is_none() && self.tenants.len() <= 1
+    }
+}
+
+/// Per-tenant serving outcome of one DES run, reported under the
+/// Report's `serve` key and printed as the `vtacluster run`
+/// per-tenant table.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    /// One entry per tenant, in tenant-index order.
+    pub tenants: Vec<TenantServeStats>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_config_is_off() {
+        assert!(ServeConfig::off().is_off());
+        let one = ServeConfig {
+            tenants: vec!["a".into()],
+            ..ServeConfig::off()
+        };
+        assert!(one.is_off());
+        let two = ServeConfig {
+            tenants: vec!["a".into(), "b".into()],
+            ..ServeConfig::off()
+        };
+        assert!(!two.is_off());
+    }
+}

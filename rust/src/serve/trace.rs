@@ -1,0 +1,188 @@
+//! Trace replay (DESIGN.md §16): the `arrival: trace` source.
+//!
+//! A trace is a JSONL file, one request per line:
+//!
+//! ```text
+//! {"t_ms": 12.5, "tenant": "a"}
+//! {"t_ms": 13.0}                  // tenant defaults to "default"
+//! ```
+//!
+//! Timestamps must be non-decreasing. A `time_scale` factor compresses
+//! (>1) or stretches (<1) replay: wall time `t_ms / time_scale`.
+//! Tenant names map to dense indices (sorted order) so the DES can
+//! route each arrival through per-tenant admission buckets and report
+//! per-tenant stats.
+
+use crate::sim::ArrivalProcess;
+use crate::util::json::Json;
+use crate::util::units::{ms_to_ns, ns_to_ms, Nanos};
+
+/// A parsed, scaled request log ready to replay through the DES.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    /// Arrival times after scaling, non-decreasing.
+    pub arrivals_ns: Vec<Nanos>,
+    /// Tenant index per arrival, parallel to `arrivals_ns`.
+    pub tenant_idx: Vec<usize>,
+    /// Sorted unique tenant names; `tenant_idx` points here.
+    pub tenant_names: Vec<String>,
+}
+
+impl RequestTrace {
+    /// Parse JSONL text. `time_scale` > 0 divides every timestamp.
+    pub fn parse(text: &str, time_scale: f64) -> anyhow::Result<RequestTrace> {
+        anyhow::ensure!(
+            time_scale.is_finite() && time_scale > 0.0,
+            "arrival.time_scale must be finite and > 0 (got {time_scale})"
+        );
+        let mut raw: Vec<(f64, String)> = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let n = i + 1;
+            let j = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("trace line {n}: {e}"))?;
+            for (k, _) in j
+                .as_obj()
+                .map_err(|e| anyhow::anyhow!("trace line {n}: {e}"))?
+            {
+                anyhow::ensure!(
+                    k == "t_ms" || k == "tenant",
+                    "trace line {n}: unknown key '{k}' (t_ms|tenant)"
+                );
+            }
+            let t = j
+                .get_f64("t_ms")
+                .map_err(|e| anyhow::anyhow!("trace line {n}: {e}"))?;
+            anyhow::ensure!(
+                t.is_finite() && t >= 0.0,
+                "trace line {n}: t_ms must be finite and >= 0 (got {t})"
+            );
+            let tenant = match j.get("tenant") {
+                Some(v) => v
+                    .as_str()
+                    .map_err(|e| anyhow::anyhow!("trace line {n}: tenant: {e}"))?
+                    .to_string(),
+                None => "default".to_string(),
+            };
+            anyhow::ensure!(!tenant.is_empty(), "trace line {n}: tenant must be non-empty");
+            if let Some((prev, _)) = raw.last() {
+                anyhow::ensure!(
+                    t >= *prev,
+                    "trace line {n}: t_ms {t} goes backwards (previous {prev})"
+                );
+            }
+            raw.push((t, tenant));
+        }
+        anyhow::ensure!(!raw.is_empty(), "trace has no requests");
+        let mut tenant_names: Vec<String> = raw.iter().map(|(_, t)| t.clone()).collect();
+        tenant_names.sort();
+        tenant_names.dedup();
+        let arrivals_ns = raw.iter().map(|(t, _)| ms_to_ns(t / time_scale)).collect();
+        let tenant_idx = raw
+            .iter()
+            .map(|(_, t)| tenant_names.binary_search(t).expect("name from raw"))
+            .collect();
+        Ok(RequestTrace {
+            arrivals_ns,
+            tenant_idx,
+            tenant_names,
+        })
+    }
+
+    /// Load a trace file. Relative paths are tried as given and then
+    /// with a `../` prefix, so specs written repo-root-relative work
+    /// from `rust/` too (same convention as the scenario loader).
+    pub fn load(path: &str, time_scale: f64) -> anyhow::Result<RequestTrace> {
+        let candidates = [
+            std::path::PathBuf::from(path),
+            std::path::Path::new("..").join(path),
+        ];
+        let found = candidates.iter().find(|p| p.is_file()).ok_or_else(|| {
+            anyhow::anyhow!("trace file '{path}' not found (also tried ../{path})")
+        })?;
+        let text = std::fs::read_to_string(found)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", found.display()))?;
+        Self::parse(&text, time_scale).map_err(|e| anyhow::anyhow!("{}: {e}", found.display()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals_ns.is_empty()
+    }
+
+    /// Time of the last request, ms (after scaling).
+    pub fn span_ms(&self) -> f64 {
+        ns_to_ms(self.arrivals_ns.last().copied().unwrap_or(0))
+    }
+
+    /// The DES arrival process replaying this trace.
+    pub fn to_process(&self) -> ArrivalProcess {
+        ArrivalProcess::Trace {
+            arrivals_ns: self.arrivals_ns.clone(),
+            tenants: self.tenant_idx.clone(),
+            n_tenants: self.tenant_names.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEXT: &str = "\
+{\"t_ms\": 0.0, \"tenant\": \"b\"}\n\
+{\"t_ms\": 2.0, \"tenant\": \"a\"}\n\
+\n\
+{\"t_ms\": 2.0}\n\
+{\"t_ms\": 10.0, \"tenant\": \"a\"}\n";
+
+    #[test]
+    fn parses_scales_and_routes_tenants() {
+        let tr = RequestTrace::parse(TEXT, 2.0).unwrap();
+        assert_eq!(tr.len(), 4);
+        // Names sorted: a, b, default.
+        assert_eq!(tr.tenant_names, vec!["a", "b", "default"]);
+        assert_eq!(tr.tenant_idx, vec![1, 0, 2, 0]);
+        // time_scale 2 halves every timestamp.
+        assert_eq!(tr.arrivals_ns, vec![0, ms_to_ns(1.0), ms_to_ns(1.0), ms_to_ns(5.0)]);
+        assert_eq!(tr.span_ms(), 5.0);
+        match tr.to_process() {
+            ArrivalProcess::Trace {
+                arrivals_ns,
+                tenants,
+                n_tenants,
+            } => {
+                assert_eq!(arrivals_ns.len(), 4);
+                assert_eq!(tenants, tr.tenant_idx);
+                assert_eq!(n_tenants, 3);
+            }
+            other => panic!("expected trace process, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_traces() {
+        assert!(RequestTrace::parse("", 1.0).is_err());
+        assert!(RequestTrace::parse("{\"t_ms\": 1.0}", 0.0).is_err());
+        assert!(RequestTrace::parse("{\"tenant\": \"a\"}", 1.0).is_err());
+        assert!(RequestTrace::parse("{\"t_ms\": -1.0}", 1.0).is_err());
+        assert!(RequestTrace::parse("{\"t_ms\": 1.0, \"who\": \"a\"}", 1.0).is_err());
+        let back = "{\"t_ms\": 5.0}\n{\"t_ms\": 4.0}\n";
+        let err = RequestTrace::parse(back, 1.0).unwrap_err().to_string();
+        assert!(err.contains("goes backwards"), "{err}");
+    }
+
+    #[test]
+    fn load_reports_missing_files_with_both_candidates() {
+        let err = RequestTrace::load("no/such/trace.jsonl", 1.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("also tried"), "{err}");
+    }
+}

@@ -230,6 +230,37 @@ pub fn stage_service_times(
     Ok(out)
 }
 
+/// [`stage_service_times`] for a dispatch batch of `batch` images
+/// computed as ONE launch per stage (DESIGN.md §16): segments price at
+/// the batched GEMM/ALU cost (sub-linear — weights and fixed costs
+/// amortize) and the driver overhead is paid once per stage instead of
+/// once per image. `batch == 1` is bit-identical to the unbatched
+/// table, which the serve-off byte-identity contract relies on.
+pub fn stage_service_times_batched(
+    plan: &ExecutionPlan,
+    cost: &mut CostModel,
+    g: &Graph,
+    batch: u64,
+) -> anyhow::Result<Vec<Nanos>> {
+    if batch <= 1 {
+        return stage_service_times(plan, cost, g);
+    }
+    let driver = cost.driver_overhead_ns();
+    let mut out = Vec::with_capacity(plan.stages.len());
+    for st in &plan.stages {
+        let split = match st.split {
+            SplitMode::Spatial => st.replicas.len() as u64,
+            SplitMode::DataParallel => 1,
+        };
+        let mut t = 0;
+        for seg in &st.segments {
+            t += cost.segment_time_batched_ns(g, seg, split, batch)?;
+        }
+        out.push(t + driver);
+    }
+    Ok(out)
+}
+
 /// Activation bytes entering each stage of `plan`, plus the bytes
 /// leaving the last stage (the logits gathered back to the master).
 pub fn stage_io_bytes(plan: &ExecutionPlan, g: &Graph) -> anyhow::Result<(Vec<u64>, u64)> {

@@ -28,6 +28,10 @@ pub struct CostModel {
     /// `head` repeat across zoo models, so one CostModel can be shared by
     /// every workload of a multi-tenant run without collisions.
     seg_cache: HashMap<(String, String, u64), Nanos>,
+    /// Batched variant of `seg_cache`, keyed additionally by batch size
+    /// (DESIGN.md §16); batch 1 never lands here — it delegates to the
+    /// unbatched path so the two stay bit-identical.
+    seg_batch_cache: HashMap<(String, String, u64, u64), Nanos>,
 }
 
 impl CostModel {
@@ -37,6 +41,7 @@ impl CostModel {
             gemm_cache: HashMap::new(),
             alu_cache: HashMap::new(),
             seg_cache: HashMap::new(),
+            seg_batch_cache: HashMap::new(),
         }
     }
 
@@ -136,6 +141,85 @@ impl CostModel {
         let t = (cycles_to_ns(cycles, self.model.cfg.clock_hz) as f64 * self.kappa())
             .round() as Nanos;
         self.seg_cache.insert(key, t);
+        Ok(t)
+    }
+
+    /// Cycles for one graph op computing a batch of `batch` images in a
+    /// single launch (DESIGN.md §16). GEMM ops fold the batch into the
+    /// output-row dimension — one autotuned program, weights fetched
+    /// once — so cycles grow sub-linearly in `batch`; element-wise ALU
+    /// work is linear. `batch == 1` is exactly [`CostModel::op_cycles`].
+    pub fn op_cycles_batched(
+        &mut self,
+        op: &Op,
+        inputs: &[TensorDesc],
+        split: u64,
+        batch: u64,
+    ) -> anyhow::Result<u64> {
+        debug_assert!(batch >= 1);
+        if batch <= 1 {
+            return self.op_cycles(op, inputs, split);
+        }
+        match op {
+            Op::Conv2d { .. } | Op::Dense { .. } => {
+                let (m, k, n) = op
+                    .gemm_shape(inputs)
+                    .expect("conv/dense always has a GEMM shape");
+                let shape = GemmShape { m: (m * batch).div_ceil(split), k, n };
+                self.gemm_cycles(shape)
+            }
+            Op::Relu | Op::Requantize { .. } => {
+                let n_ops = if matches!(op, Op::Relu) { 1 } else { 4 };
+                self.alu_pass_cycles(
+                    (inputs[0].shape.elems() * batch).div_ceil(split),
+                    n_ops,
+                )
+            }
+            Op::Add => {
+                self.alu_pass_cycles((inputs[0].shape.elems() * batch).div_ceil(split), 1)
+            }
+            Op::MaxPool { k, .. } => {
+                let out = op.infer(inputs)?;
+                self.alu_pass_cycles(
+                    (out.shape.elems() * k * k * batch).div_ceil(split),
+                    1,
+                )
+            }
+            Op::GlobalAvgPool => {
+                self.alu_pass_cycles((inputs[0].shape.elems() * batch).div_ceil(split), 1)
+            }
+            Op::Input { .. } => Ok(0),
+        }
+    }
+
+    /// Wall-clock compute time of one segment processing `batch` images
+    /// in a single launch, spatial split `split` ways (DESIGN.md §16).
+    /// `batch == 1` delegates to [`CostModel::segment_time_ns`] — same
+    /// cache, bit-identical result — which is what makes
+    /// `batch.max_size = 1` byte-identical to batching-off end to end.
+    pub fn segment_time_batched_ns(
+        &mut self,
+        g: &Graph,
+        label: &str,
+        split: u64,
+        batch: u64,
+    ) -> anyhow::Result<Nanos> {
+        if batch <= 1 {
+            return self.segment_time_ns(g, label, split);
+        }
+        let key = (g.name.clone(), label.to_string(), split, batch);
+        if let Some(&t) = self.seg_batch_cache.get(&key) {
+            return Ok(t);
+        }
+        let mut cycles = 0u64;
+        let node_ids: Vec<usize> = g.segment_nodes(label).iter().map(|n| n.id).collect();
+        for id in node_ids {
+            let descs = g.input_descs(id);
+            cycles += self.op_cycles_batched(&g.node(id).op.clone(), &descs, split, batch)?;
+        }
+        let t = (cycles_to_ns(cycles, self.model.cfg.clock_hz) as f64 * self.kappa())
+            .round() as Nanos;
+        self.seg_batch_cache.insert(key, t);
         Ok(t)
     }
 
@@ -240,6 +324,34 @@ mod tests {
         c.graph_time_ns(&g).unwrap();
         let warm = t1.elapsed();
         assert!(warm < cold / 10, "cache ineffective: {warm:?} vs {cold:?}");
+    }
+
+    #[test]
+    fn batched_segment_time_amortizes_sublinearly() {
+        let g = build_resnet18(32).unwrap();
+        let mut c = cm(VtaConfig::table1_zynq7000(), BoardProfile::zynq7020());
+        for label in ["head", "s1b1"] {
+            let t1 = c.segment_time_batched_ns(&g, label, 1, 1).unwrap();
+            let t8 = c.segment_time_batched_ns(&g, label, 1, 8).unwrap();
+            // More total work than one image, but less than 8 separate
+            // launches: weights and fixed costs are fetched once.
+            assert!(t8 > t1, "{label}: batch 8 not slower: {t8} vs {t1}");
+            assert!(t8 < 8 * t1, "{label}: batch 8 superlinear: {t8} vs 8×{t1}");
+        }
+    }
+
+    #[test]
+    fn batch_one_is_bit_identical_to_unbatched() {
+        let g = build_resnet18(32).unwrap();
+        let mut c = cm(VtaConfig::table1_zynq7000(), BoardProfile::zynq7020());
+        for label in g.segment_order() {
+            for split in [1u64, 2] {
+                assert_eq!(
+                    c.segment_time_batched_ns(&g, &label, split, 1).unwrap(),
+                    c.segment_time_ns(&g, &label, split).unwrap()
+                );
+            }
+        }
     }
 
     #[test]

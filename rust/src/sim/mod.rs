@@ -24,7 +24,10 @@ pub mod cost;
 pub mod des;
 pub mod faults;
 
-pub use cluster::{simulate, stage_io_bytes, stage_service_times, SimConfig, SimResult};
+pub use cluster::{
+    simulate, stage_io_bytes, stage_service_times, stage_service_times_batched, SimConfig,
+    SimResult,
+};
 pub use cost::CostModel;
 pub use des::{run_des, ArrivalProcess, DesConfig, DesResult, ReconfigEvent};
 pub use faults::{FaultSchedule, FaultsConfig, ScriptedCrash};

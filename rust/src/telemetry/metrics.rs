@@ -313,6 +313,10 @@ fn help(name: &str) -> &'static str {
         "vta_steady_ms_per_image" => "analytic steady-state time per image, ms",
         "vta_steady_img_per_sec" => "analytic steady-state plan capacity, img/s",
         "vta_steady_cluster_w" => "analytic steady-state cluster draw, W",
+        "vta_admission_offered_total" => "requests offered to the admission gate (DESIGN.md §16)",
+        "vta_admission_admitted_total" => "requests the admission gate let through",
+        "vta_admission_shed_total" => "requests shed, by reason and tenant",
+        "vta_batch_size" => "realized batch size per dispatch (HDR)",
         _ => "vta cluster metric",
     }
 }

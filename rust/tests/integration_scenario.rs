@@ -13,7 +13,7 @@ use std::path::PathBuf;
 use vta_cluster::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig, VtaConfig};
 use vta_cluster::graph::zoo;
 use vta_cluster::scenario::{
-    EventRow, Report, ReportRow, ScenarioSpec, Session, Sweep,
+    Engine, EventRow, Report, ReportRow, ScenarioSpec, Session, Sweep,
 };
 use vta_cluster::sched::{build_plan_priced, PlanOption, Strategy};
 use vta_cluster::sim::{run_des, simulate, ArrivalProcess, CostModel, DesConfig, SimConfig};
@@ -36,7 +36,7 @@ fn assert_report_schema(j: &Json, what: &str) {
     assert_eq!(&top[..Report::TOP_KEYS.len().min(top.len())], Report::TOP_KEYS,
         "{what}: top-level keys drifted");
     let extras = &top[Report::TOP_KEYS.len()..];
-    let mut allowed = ["telemetry", "metrics"].iter();
+    let mut allowed = ["telemetry", "metrics", "serve"].iter();
     for key in extras {
         assert!(
             allowed.any(|a| a == key),
@@ -144,6 +144,7 @@ fn schema_snapshot_file_matches_the_code_contract() {
     assert_eq!(lines["top"], Report::TOP_KEYS);
     assert_eq!(lines["row"], ReportRow::ROW_KEYS);
     assert_eq!(lines["event"], EventRow::EVENT_KEYS);
+    assert_eq!(lines["serve"], vta_cluster::scenario::ServeRow::SERVE_KEYS);
 }
 
 /// Satellite: `simulate`-via-Session equals the pre-refactor code path
@@ -392,6 +393,87 @@ fn sweep_cells_carry_cell_tagged_metric_bundles() {
         assert!(mb.series("vta_arrivals_total").is_some());
     }
     assert_report_schema(&rep.to_json(), "metrics-sweep");
+}
+
+/// Admission isolation (DESIGN.md §16): with the per-tenant token-bucket
+/// rate gate on, a co-tenant's burst cannot inflate the victim tenant's
+/// tail latency — the acceptance bar for the serving front end.
+#[test]
+fn rate_gate_isolates_the_victim_tenant_from_a_co_tenant_burst() {
+    let family = BoardFamily::Zynq7000;
+    let calib = Calibration::default();
+    let g = zoo::build("lenet5", 0).unwrap();
+    let vta = VtaConfig::table1_zynq7000();
+    let mut cost = CostModel::new(vta.clone(), BoardProfile::for_family(family), calib.clone());
+    let cluster = ClusterConfig::homogeneous(family, 2).with_vta(vta);
+    let table = cost.seg_cost_table(&g).unwrap();
+    let plan = build_plan_priced(Strategy::Pipeline, &g, 2, &table).unwrap();
+    let r = simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images: 8 }).unwrap();
+    let cap = 1e3 / r.ms_per_image;
+
+    // victim at 25% of capacity throughout; aggressor bursts at 5x
+    // capacity for the middle fifth of the trace
+    let period_v = 1000.0 / (0.25 * cap);
+    let span = 60.0 * period_v;
+    let period_a = 1000.0 / (5.0 * cap);
+    let mut events: Vec<(f64, &str)> = (0..60).map(|i| (i as f64 * period_v, "vic")).collect();
+    let mut t = 0.2 * span;
+    while t < 0.4 * span {
+        events.push((t, "agg"));
+        t += period_a;
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let text: String = events
+        .iter()
+        .map(|(t, n)| format!("{{\"t_ms\": {t:.4}, \"tenant\": \"{n}\"}}\n"))
+        .collect();
+    let dir = std::env::temp_dir().join(format!("vta-isolation-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("burst.jsonl");
+    std::fs::write(&trace_path, &text).unwrap();
+
+    let run = |gated: bool| {
+        let mut spec = ScenarioSpec::single("lenet5", Strategy::Pipeline, family, 2);
+        spec.name = "isolation".into();
+        spec.engine = Engine::Des;
+        spec.seed = 11;
+        spec.horizon_ms = 3.0 * span;
+        spec.arrival.kind = "trace".into();
+        spec.arrival.path = trace_path.to_string_lossy().into_owned();
+        if gated {
+            spec.admission.tenant_rate_img_per_sec = 0.3 * cap;
+            spec.admission.tenant_burst = 4.0;
+        }
+        Session::new(spec)
+            .unwrap()
+            .with_calibration(calib.clone())
+            .fast(false)
+            .run()
+            .unwrap()
+    };
+    let base = run(false);
+    let gated = run(true);
+    std::fs::remove_dir_all(&dir).ok();
+
+    let agg = gated.serve.iter().find(|s| s.tenant == "agg").unwrap();
+    assert!(agg.shed_rate_limit > 0, "gate shed nothing from the burst");
+    let b = base.serve.iter().find(|s| s.tenant == "vic").unwrap();
+    let v = gated.serve.iter().find(|s| s.tenant == "vic").unwrap();
+    assert_eq!(b.offered, 60);
+    assert_eq!(v.offered, 60);
+    assert_eq!(v.shed_rate_limit, 0, "victim under its rate must not be shed");
+    assert!(
+        b.p99_ms.is_finite() && v.p99_ms.is_finite(),
+        "victim percentiles missing ({} / {})",
+        b.p99_ms,
+        v.p99_ms
+    );
+    assert!(
+        v.p99_ms < 0.8 * b.p99_ms,
+        "rate gate failed to isolate: gated victim p99 {} ms vs baseline {} ms",
+        v.p99_ms,
+        b.p99_ms
+    );
 }
 
 /// The Prometheus exporter emits well-formed text exposition: one

@@ -718,6 +718,165 @@ fn prop_partial_tier_cheaper_and_availability_monotone_in_crash_rate() {
 }
 
 #[test]
+fn prop_serve_off_blocks_are_byte_identical_to_no_blocks() {
+    // the §16 zero-cost-off invariant at the outermost layer: for any
+    // random scenario, an absent serve config, empty `admission`/`batch`
+    // blocks, and an explicit `batch.max_size = 1` all emit the same
+    // Report bytes — the serving front end costs nothing when off
+    use vta_cluster::scenario::{ScenarioSpec, Session};
+    use vta_cluster::util::json;
+    forall("serve off is invisible", 4, |rng| {
+        let model = *rng.choice(&["lenet5", "mlp"]);
+        let strategy = *rng.choice(&["sg", "pipeline", "ai"]);
+        let n = rng.range(1, 4);
+        let seed = rng.next_u64() % 100_000;
+        let spec = |serve: &str| {
+            format!(
+                r#"{{
+                  "name": "prop-serve-off", "engine": "des",
+                  "model": "{model}", "strategy": "{strategy}",
+                  "family": "zynq", "nodes": {n},
+                  "arrival": {{"kind": "poisson"}},
+                  "slo_ms": 100{serve},
+                  "horizon_ms": 1200, "seed": {seed}
+                }}"#
+            )
+        };
+        let run = |text: &str| -> Result<String, String> {
+            let rep = Session::new(ScenarioSpec::parse(text).map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?
+                .with_calibration(Calibration::default())
+                .fast(true)
+                .run()
+                .map_err(|e| e.to_string())?;
+            Ok(json::pretty(&rep.to_json()))
+        };
+        let without = run(&spec(""))?;
+        let empty = run(&spec(r#", "admission": {}, "batch": {}"#))?;
+        let one = run(&spec(r#", "batch": {"max_size": 1, "max_wait_ms": 7.5}"#))?;
+        prop_assert!(
+            empty == without,
+            "{model} {strategy} n={n} seed={seed}: empty serve blocks changed the report"
+        );
+        prop_assert!(
+            one == without,
+            "{model} {strategy} n={n} seed={seed}: batch.max_size=1 changed the report"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shed_rate_monotone_in_offered_load() {
+    // tail-drop admission (DESIGN.md §16): under a fixed seed and a
+    // fixed queue bound, pushing the offered Poisson rate up can only
+    // raise the shed fraction — well-separated rates so the stochastic
+    // wobble cannot mask the ordering
+    use vta_cluster::serve::{AdmissionConfig, ShedPolicy};
+    let mut cost = CostModel::new(
+        VtaConfig::table1_zynq7000(),
+        BoardProfile::zynq7020(),
+        Calibration::default(),
+    );
+    let graphs: Vec<_> =
+        ["lenet5", "mlp"].iter().map(|m| zoo::build(m, 0).unwrap()).collect();
+    forall("shed rate monotone in load", 5, |rng| {
+        let g = rng.choice(&graphs);
+        let strategy = *rng.choice(&[Strategy::ScatterGather, Strategy::Pipeline]);
+        let n = rng.range(1, 4);
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+        let opts = plan_options(g, &cluster, &mut cost, &[strategy])
+            .map_err(|e| e.to_string())?;
+        let cap = opts[0].capacity_img_per_sec;
+        let horizon_ms = (250.0 / cap * 1e3).max(30.0 * opts[0].latency_ms);
+        let seed = rng.next_u64();
+        let queue_cap = rng.range(4, 13);
+        let mut prev = -1.0f64;
+        for mult in [0.8, 2.4, 7.2] {
+            let mut cfg = DesConfig::new(
+                ArrivalProcess::Poisson { rate_per_sec: mult * cap },
+                horizon_ms,
+                seed,
+            );
+            cfg.serve.admission = Some(AdmissionConfig {
+                policy: ShedPolicy::TailDrop,
+                queue_cap,
+                deadline_ns: 0,
+                tenant_rate: 0.0,
+                tenant_burst: 16.0,
+            });
+            let r = run_des(&opts, 0, &cluster, &mut cost, g, &cfg, None)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                r.offered == r.shed + r.completed + r.backlog_at_end as u64,
+                "seed {seed}: request conservation broke"
+            );
+            prop_assert!(r.max_backlog <= queue_cap, "queue bound violated");
+            let rate = if r.offered > 0 { r.shed as f64 / r.offered as f64 } else { 0.0 };
+            prop_assert!(
+                rate >= prev - 1e-9,
+                "seed {seed} cap {queue_cap}: shed rate fell {prev} → {rate} at {mult}x load"
+            );
+            prev = rate;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_replay_reports_are_seed_independent() {
+    // `arrival: trace` replays a fixed log: the DES seed feeds only the
+    // stochastic arrival generators, so two runs of the same trace under
+    // different seeds emit byte-identical reports (modulo the seed field)
+    use vta_cluster::scenario::{ScenarioSpec, Session};
+    use vta_cluster::util::json;
+    let dir = std::env::temp_dir().join(format!("vta-prop-trace-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    forall("trace replay is seed independent", 4, |rng| {
+        let n_req = rng.range(10, 40);
+        let mut t = 0.0f64;
+        let mut lines = String::new();
+        for _ in 0..n_req {
+            t += rng.f64() * 20.0;
+            let tenant = *rng.choice(&["a", "b"]);
+            lines.push_str(&format!("{{\"t_ms\": {t:.4}, \"tenant\": \"{tenant}\"}}\n"));
+        }
+        std::fs::write(&path, &lines).map_err(|e| e.to_string())?;
+        let time_scale = *rng.choice(&[0.5, 1.0, 2.0]);
+        let horizon_ms = t / time_scale + 1000.0;
+        let run = |seed: u64| -> Result<String, String> {
+            let text = format!(
+                r#"{{
+                  "name": "prop-trace", "engine": "des",
+                  "model": "lenet5", "strategy": "pipeline",
+                  "family": "zynq", "nodes": 2,
+                  "arrival": {{"kind": "trace", "path": {path:?}, "time_scale": {time_scale}}},
+                  "horizon_ms": {horizon_ms}, "seed": {seed}
+                }}"#,
+                path = path.to_string_lossy(),
+            );
+            let rep = Session::new(ScenarioSpec::parse(&text).map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?
+                .with_calibration(Calibration::default())
+                .fast(false)
+                .run()
+                .map_err(|e| e.to_string())?;
+            let mut j = rep.to_json();
+            if let Json::Obj(fields) = &mut j {
+                fields.retain(|(k, _)| k != "seed");
+            }
+            Ok(json::pretty(&j))
+        };
+        let a = run(rng.next_u64() % 1000)?;
+        let b = run(1000 + rng.next_u64() % 1000)?;
+        prop_assert!(a == b, "{n_req} requests: replay depends on the DES seed");
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn prop_partition_contiguity_and_coverage() {
     use vta_cluster::graph::partition::partition_balanced;
     let g = build_resnet18(224).unwrap();
