@@ -5,9 +5,15 @@
 //! the same move: enumerate every feasible tiling of a GEMM, lower each
 //! to a real instruction stream, price it with the cycle model, and keep
 //! the fastest. Results are memoized per (config, shape) by `sim::cost`.
+//!
+//! The tuner is a thin adapter over the plan-search engine's generic
+//! bound-and-price loop ([`crate::search::prune_min`], DESIGN.md §17):
+//! the admissible bound is the max of the compute floor and the DRAM
+//! traffic floor, the pricer lowers the tiling and runs the cycle model.
 
 use super::lower::{lower_gemm, GemmShape};
 use super::tiling::{candidate_tilings, GemmTiling};
+use crate::search::prune_min;
 use crate::vta::timing::{CycleReport, TimingModel};
 
 /// Outcome of tuning one GEMM shape.
@@ -37,32 +43,24 @@ pub fn autotune_gemm(model: &TimingModel, shape: GemmShape) -> anyhow::Result<Tu
     let compute_floor =
         (mr * kb * nb) as f64 / model.calib.gemm_efficiency; // MAC uop cycles
 
-    let mut best: Option<(GemmTiling, CycleReport)> = None;
-    let mut explored = 0usize;
-    for tiling in cands {
-        if let Some((_, b)) = &best {
+    let (best, stats) = prune_min(
+        cands,
+        |tiling| {
             let m_p = mr.div_ceil(tiling.tm) * tiling.tm;
             let kb_p = kb.div_ceil(tiling.tk) * tiling.tk;
             let nb_p = nb.div_ceil(tiling.tn) * tiling.tn;
             let traffic = tiling.traffic_bytes(&model.cfg, m_p, kb_p, nb_p);
-            let bound = compute_floor.max(traffic as f64 / dram_bytes_per_cycle);
-            if bound >= b.total_cycles as f64 {
-                continue;
-            }
-        }
-        let prog = lower_gemm("tune", shape, tiling, &model.cfg)?;
-        let report = model.price(&prog)?;
-        explored += 1;
-        let better = match &best {
-            None => true,
-            Some((_, b)) => report.total_cycles < b.total_cycles,
-        };
-        if better {
-            best = Some((tiling, report));
-        }
-    }
-    let (tiling, report) = best.unwrap();
-    Ok(TunedGemm { shape, tiling, report, explored })
+            compute_floor.max(traffic as f64 / dram_bytes_per_cycle)
+        },
+        |tiling| {
+            let prog = lower_gemm("tune", shape, *tiling, &model.cfg)?;
+            let report = model.price(&prog)?;
+            let cycles = report.total_cycles as f64;
+            Ok(Some((report, cycles)))
+        },
+    )?;
+    let (tiling, report, _) = best.expect("a feasible tiling always prices");
+    Ok(TunedGemm { shape, tiling, report, explored: stats.explored })
 }
 
 #[cfg(test)]

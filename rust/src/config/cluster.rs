@@ -47,14 +47,21 @@ pub struct ClusterConfig {
 
 impl ClusterConfig {
     /// Homogeneous cluster of `n` boards of one family with its Table-I VTA.
+    ///
+    /// The switch is sized to fit the inventory (`max(16, n + 1)` ports)
+    /// so fleet-scale clusters of hundreds of boards (DESIGN.md §17)
+    /// validate; at paper scale (≤ 15 boards) this is the default
+    /// 16-port switch, unchanged.
     pub fn homogeneous(family: BoardFamily, n: usize) -> Self {
         let board = BoardProfile::for_family(family);
         let vta = board.default_vta();
+        let mut switch = SwitchConfig::default();
+        switch.ports = switch.ports.max(n as u32 + 1);
         ClusterConfig {
             name: format!("{}-x{}", board.name, n),
             boards: vec![board; n],
             vta,
-            switch: SwitchConfig::default(),
+            switch,
             master_bits_per_sec: 1_000_000_000,
         }
     }
@@ -128,6 +135,15 @@ mod tests {
     fn big_config_on_zynq_is_invalid() {
         let c = ClusterConfig::zynq_stack(4).with_vta(VtaConfig::big_config_200mhz());
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_scale_homogeneous_sizes_its_switch() {
+        let c = ClusterConfig::homogeneous(BoardFamily::Zynq7000, 200);
+        assert_eq!(c.switch.ports, 201);
+        c.validate().unwrap();
+        // paper scale keeps the default 16-port switch
+        assert_eq!(ClusterConfig::zynq_stack(12).switch.ports, 16);
     }
 
     #[test]

@@ -268,6 +268,16 @@ pub fn simulate_tenants(
         let plan = if req.strategy == Strategy::Eco {
             // power-aware tenant: minimize J/image on its sub-cluster
             crate::power::eco_plan(g, &cluster, &mut cost, None)?.plan
+        } else if req.strategy == Strategy::Search {
+            // searched tenant: DP/beam over its sub-cluster's partition
+            // space (DESIGN.md §17), latency objective, unconstrained
+            crate::search::search_plan(
+                g,
+                &cluster,
+                &mut cost,
+                &crate::search::SearchConfig::default(),
+            )?
+            .plan
         } else {
             let seg_costs = cost.seg_cost_table(g)?;
             build_plan_priced(req.strategy, g, n, &seg_costs)?
@@ -453,6 +463,36 @@ mod tests {
         assert_eq!(out[0].plan.strategy, Strategy::Eco);
         out[0].plan.validate().unwrap();
         assert!(out[0].sim.power.j_per_image > 0.0);
+    }
+
+    #[test]
+    fn search_tenant_supported() {
+        let reqs = [
+            TenantRequest {
+                model: "lenet5".into(),
+                input_hw: 0,
+                strategy: Strategy::Search,
+                images: 8,
+            },
+            TenantRequest {
+                model: "mlp".into(),
+                input_hw: 0,
+                strategy: Strategy::Pipeline,
+                images: 8,
+            },
+        ];
+        let out = simulate_tenants(
+            BoardFamily::Zynq7000,
+            VtaConfig::table1_zynq7000(),
+            Calibration::default(),
+            4,
+            &reqs,
+            3,
+        )
+        .unwrap();
+        assert_eq!(out[0].plan.strategy, Strategy::Search);
+        out[0].plan.validate().unwrap();
+        assert!(out[0].sim.ms_per_image > 0.0);
     }
 
     #[test]

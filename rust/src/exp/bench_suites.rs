@@ -1,4 +1,4 @@
-//! The four tracked bench suites behind `vtacluster bench` and the
+//! The five tracked bench suites behind `vtacluster bench` and the
 //! `cargo bench` wrappers (DESIGN.md §15).
 //!
 //! Each suite runs a fixed set of seeded scenarios and returns a
@@ -12,6 +12,9 @@
 //!   recovery tails (`BENCH_faults.json`)
 //! * [`serve_suite`]     — E16 serving front end: batched goodput at
 //!   saturation, tail-drop shedding, trace replay (`BENCH_serve.json`)
+//! * [`search_suite`]    — E17 plan-search engine: E1-grid dominance
+//!   over the heuristics, J/image vs eco, re-planning throughput at
+//!   fleet scale (`BENCH_search.json`)
 //!
 //! The deterministic `metrics` of each entry are what
 //! `vtacluster bench --check` gates against the checked-in baselines in
@@ -32,7 +35,7 @@ use crate::util::json::{self, Json};
 use std::path::Path;
 
 /// All suites, in canonical order: `(file stem, builder)`.
-pub const SUITE_NAMES: [&str; 4] = ["des", "scenarios", "faults", "serve"];
+pub const SUITE_NAMES: [&str; 5] = ["des", "scenarios", "faults", "serve", "search"];
 
 fn des_entry(name: &str, r: &DesResult) -> BenchEntry {
     BenchEntry::new(name)
@@ -411,6 +414,148 @@ pub fn serve_suite(calib: &Calibration) -> anyhow::Result<BenchReport> {
     Ok(report)
 }
 
+/// E17: the plan-search engine (DESIGN.md §17). Three families of
+/// entries, each property-checked *inside* the suite so a regression
+/// fails the bench run itself, not only `--check`:
+///
+/// * `e1_n{2,4,8,12}`  — `Strategy::Search` latency vs the best §II-C
+///   heuristic on every E1 grid cell (search must never lose);
+/// * `eco_j_n{...}`    — J/image of the right-sizing J-objective search
+///   vs the eco selector on the same cells (search must strictly win on
+///   at least one cell — surplus boards get powered off);
+/// * `fleet_n{16,64,256}` — re-planning latency with a warm cost model
+///   at fleet scale; the n = 256 plan must land in under a second.
+pub fn search_suite(calib: &Calibration) -> anyhow::Result<BenchReport> {
+    use crate::power::eco_plan;
+    use crate::search::{search_plan, Objective, SearchConfig};
+    use crate::sim::{simulate, SimConfig};
+
+    let mut b = Bench::new("plan_search");
+    let mut report = BenchReport::new("search");
+    let reps = if report.fast { 2usize } else { 5 };
+
+    let family = BoardFamily::Zynq7000;
+    let g = zoo::build("resnet18", 0)?;
+    let vta = VtaConfig::table1_zynq7000();
+    let mut cost =
+        CostModel::new(vta.clone(), BoardProfile::for_family(family), calib.clone());
+
+    // E1 dominance: search ≤ best heuristic on every grid cell
+    for n in [2usize, 4, 8, 12] {
+        let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta.clone());
+        let seg_costs = cost.seg_cost_table(&g)?;
+        let mut best_heur = f64::INFINITY;
+        let mut best_name = "";
+        for s in Strategy::all() {
+            let plan = crate::sched::build_plan_priced(s, &g, n, &seg_costs)?;
+            let sim = simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images: 16 })?;
+            if sim.latency_ms.mean() < best_heur {
+                best_heur = sim.latency_ms.mean();
+                best_name = s.as_str();
+            }
+        }
+        let out = search_plan(&g, &cluster, &mut cost, &SearchConfig::default())?;
+        anyhow::ensure!(
+            out.latency_ms <= best_heur * 1.0001,
+            "E1 n={n}: best heuristic {best_name} ({best_heur:.3} ms) beats \
+             search ({:.3} ms via {})",
+            out.latency_ms,
+            out.via
+        );
+        let gap_pct = (best_heur - out.latency_ms) / best_heur * 100.0;
+        b.row(&format!(
+            "e1_n{n:<3} search {:8.3} ms via {:8} vs best heuristic {best_name:8} \
+             {best_heur:8.3} ms  (gap {gap_pct:5.2}%)",
+            out.latency_ms, out.via,
+        ));
+        report.push(
+            BenchEntry::new(&format!("e1_n{n}"))
+                .metric("search_latency_ms", out.latency_ms)
+                .metric("best_heuristic_ms", best_heur)
+                .metric("gap_pct", gap_pct),
+        );
+    }
+
+    // J/image: the right-sizing search vs eco on the same cells; the
+    // acceptance property is ≥ 1 strict win
+    let mut j_wins = 0usize;
+    for n in [2usize, 4, 8, 12] {
+        let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta.clone());
+        let eco = eco_plan(&g, &cluster, &mut cost, None)?;
+        let cfg = SearchConfig {
+            objective: Objective::JPerImage,
+            rightsize: true,
+            ..Default::default()
+        };
+        let out = search_plan(&g, &cluster, &mut cost, &cfg)?;
+        anyhow::ensure!(
+            out.j_per_image <= eco.j_per_image * 1.0001,
+            "n={n}: eco ({:.4} J) beats the J-objective search ({:.4} J)",
+            eco.j_per_image,
+            out.j_per_image
+        );
+        let strict = out.j_per_image < eco.j_per_image * 0.9999;
+        j_wins += strict as usize;
+        b.row(&format!(
+            "eco_j_n{n:<2} search {:7.4} J/img via {:6} on {:>2} node(s) vs eco {:7.4} J/img{}",
+            out.j_per_image,
+            out.via,
+            out.nodes_used,
+            eco.j_per_image,
+            if strict { "  STRICT WIN" } else { "" },
+        ));
+        report.push(
+            BenchEntry::new(&format!("eco_j_n{n}"))
+                .metric("search_j_per_image", out.j_per_image)
+                .metric("eco_j_per_image", eco.j_per_image)
+                .metric("search_wins", strict as u64 as f64)
+                .metric("nodes_used", out.nodes_used as f64),
+        );
+    }
+    anyhow::ensure!(
+        j_wins >= 1,
+        "the J-objective search must strictly beat eco on ≥ 1 E1 cell (0 wins)"
+    );
+
+    // re-planning throughput at fleet scale: warm the cost model with
+    // one unmeasured search, then time `reps` re-plans
+    for n in [16usize, 64, 256] {
+        let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta.clone());
+        let cfg = SearchConfig::default();
+        let warm = search_plan(&g, &cluster, &mut cost, &cfg)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            search_plan(&g, &cluster, &mut cost, &cfg)?;
+        }
+        let plan_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        if n == 256 {
+            anyhow::ensure!(
+                plan_ms < 1000.0,
+                "fleet re-planning at n=256 took {plan_ms:.0} ms (must be < 1 s)"
+            );
+        }
+        b.row(&format!(
+            "fleet_n{n:<4} {plan_ms:8.1} ms/plan ({:6.1} plans/s)  via {:6}  \
+             latency {:8.3} ms  explored {:6} pruned {:6}",
+            1e3 / plan_ms,
+            warm.via,
+            warm.latency_ms,
+            warm.stats.explored,
+            warm.stats.pruned,
+        ));
+        report.push(
+            BenchEntry::new(&format!("fleet_n{n}"))
+                .metric("latency_ms", warm.latency_ms)
+                .metric("explored", warm.stats.explored as f64)
+                .wall("plan_ms", plan_ms)
+                .wall("plans_per_sec", 1e3 / plan_ms),
+        );
+    }
+
+    b.finish();
+    Ok(report)
+}
+
 /// Build one suite by name (the `vtacluster bench --suite` dispatch).
 pub fn run_suite(
     name: &str,
@@ -422,7 +567,10 @@ pub fn run_suite(
         "scenarios" => scenarios_suite(scenarios_dir, calib),
         "faults" => faults_suite(calib),
         "serve" => serve_suite(calib),
-        other => anyhow::bail!("unknown bench suite '{other}' (des|scenarios|faults|serve|all)"),
+        "search" => search_suite(calib),
+        other => anyhow::bail!(
+            "unknown bench suite '{other}' (des|scenarios|faults|serve|search|all)"
+        ),
     }
 }
 
@@ -482,6 +630,34 @@ mod tests {
         assert_eq!(m("offered"), 88.0);
         assert_eq!(m("tenant_rows"), 2.0);
         assert!(m("shed_rate_limit") > 0.0);
+        let back = BenchReport::from_json(&a.to_json()).unwrap();
+        assert_eq!(json::pretty(&back.to_json()), json::pretty(&a.to_json()));
+    }
+
+    #[test]
+    fn search_suite_dominates_and_is_deterministic() {
+        std::env::set_var("VTA_BENCH_FAST", "1");
+        let calib = Calibration::default();
+        // the suite's own ensure!s are the E17 acceptance gate: search
+        // never loses an E1 cell and strictly beats eco's J somewhere
+        let a = search_suite(&calib).unwrap();
+        assert_eq!(a.suite, "search");
+        assert_eq!(a.entries.len(), 4 + 4 + 3);
+        assert_eq!(a.entries[0].name, "e1_n2");
+        assert_eq!(a.entries[10].name, "fleet_n256");
+        let wins: f64 = a
+            .entries
+            .iter()
+            .flat_map(|e| e.metrics.iter())
+            .filter(|(k, _)| k == "search_wins")
+            .map(|(_, v)| v)
+            .sum();
+        assert!(wins >= 1.0, "no strict J/image win recorded");
+        // deterministic metrics → a re-run self-checks at zero tolerance
+        let b = search_suite(&calib).unwrap();
+        let (notes, failures) = a.check_against(&b, 0.0);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(notes.is_empty(), "{notes:?}");
         let back = BenchReport::from_json(&a.to_json()).unwrap();
         assert_eq!(json::pretty(&back.to_json()), json::pretty(&a.to_json()));
     }

@@ -18,7 +18,12 @@
 //!   running several model pipelines concurrently over a shared node
 //!   budget, a power/energy subsystem ([`power`]) that meters both
 //!   simulators in joules, adds an energy-minimizing scheduling
-//!   strategy, and enumerates the latency-vs-watts Pareto frontier, and
+//!   strategy, and enumerates the latency-vs-watts Pareto frontier, a
+//!   plan-search engine ([`search`]) — exact DP and parallel beam
+//!   search over the whole contiguous-partition space, surfaced as
+//!   `Strategy::Search` with latency/throughput/J-per-image objectives,
+//!   SLO and power-budget constraints, and fleet-scale right-sizing —
+//!   and
 //!   a declarative scenario layer ([`scenario`]) — JSON
 //!   [`scenario::ScenarioSpec`]s resolved by [`scenario::Session`] into
 //!   unified [`scenario::Report`]s, with [`scenario::Sweep`] grids over
@@ -53,6 +58,7 @@ pub mod power;
 pub mod runtime;
 pub mod scenario;
 pub mod sched;
+pub mod search;
 pub mod serve;
 pub mod sim;
 pub mod telemetry;

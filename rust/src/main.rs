@@ -11,13 +11,16 @@
 //!                  (`examples/scenarios/*.json`, DESIGN.md §12):
 //!                  `run <scenario.json> [--set key=value ...]
 //!                  [--report out.json] [--trace out-trace.json]
-//!                  [--metrics out.prom] [--emit-spec]`. Files with a
+//!                  [--metrics out.prom] [--capture-trace out.jsonl]
+//!                  [--emit-spec]`. Files with a
 //!                  `"sweep"` object expand into a tagged grid report.
 //!                  `--trace` turns on the telemetry layer (DESIGN.md
 //!                  §13) and writes a Chrome trace-event file loadable
 //!                  in Perfetto. `--metrics` turns on the metrics
 //!                  registry (DESIGN.md §15) and writes Prometheus
-//!                  text exposition.
+//!                  text exposition. `--capture-trace` records a DES
+//!                  run's admitted arrivals as replayable
+//!                  `arrival: trace` JSONL (DESIGN.md §16).
 //! * `simulate`   — one cluster-size cell for any zoo model
 //!                  (`--model`, `--strategy all` compares all four §II-C
 //!                  strategies) — a thin adapter over `run`'s engine
@@ -36,11 +39,12 @@
 //! * `power`      — latency-vs-watts Pareto frontier over (board family
 //!                  × node count × strategy), dominated configurations
 //!                  tagged; `--slo` additionally prints the eco
-//!                  (min-J/image) plan per family (DESIGN.md §11)
+//!                  (min-J/image) plan and the plan-search engine's
+//!                  right-sized pick per family (DESIGN.md §11/§17)
 //! * `serve`      — run the real PJRT serving pipeline on a batch of
 //!                  synthetic images (end-to-end driver)
 //! * `bench`      — run the tracked bench suites (des|scenarios|faults|
-//!                  serve|all), writing `BENCH_<suite>.json`; `--check`
+//!                  serve|search|all), writing `BENCH_<suite>.json`; `--check`
 //!                  gates the deterministic metrics against the
 //!                  checked-in baselines in `benches/baselines/` with a
 //!                  relative tolerance (DESIGN.md §15)
@@ -79,7 +83,7 @@ fn run() -> anyhow::Result<()> {
         .opt("fig", "3", "paper figure for `table` (3 = Zynq-7000, 4 = UltraScale+)")
         .opt("model", "resnet18", "zoo model for `simulate`/`serve` (see `info`)")
         .opt("models", "resnet18,lenet5,mlp", "tenants for `multi`: comma list of model[:strategy]")
-        .opt("strategy", "all", "strategy for `simulate` (sg|ai|pipeline|fused|eco|all), `serve` (sg|pipeline)")
+        .opt("strategy", "all", "strategy for `simulate` (sg|ai|pipeline|fused|eco|search|all), `serve` (sg|pipeline)")
         .opt("nodes", "4", "cluster size for `simulate`/`serve`, shared budget for `multi`")
         .opt("images", "64", "images per run (per tenant for `multi`)")
         .opt("input-hw", "32", "input size for `serve`/`multi --serve` (32 tiny / 224 paper)")
@@ -95,9 +99,10 @@ fn run() -> anyhow::Result<()> {
         .opt("report", "", "`run`: write the Report JSON to this path")
         .opt("trace", "", "`run`: enable telemetry and write a Chrome trace-event JSON (open in Perfetto) to this path")
         .opt("metrics", "", "`run`: enable the metrics registry (sets telemetry.metrics=true) and write Prometheus text to this path (sweeps write one file per cell, cell tag in the name)")
+        .opt("capture-trace", "", "`run`: record the DES run's admitted arrivals as replayable `arrival: trace` JSONL at this path (single DES scenarios only)")
         .multi("set", "`run`: spec override `key=value` (dotted paths, repeatable)")
         .flag("emit-spec", "`run`: print the resolved spec JSON and exit without running")
-        .opt("suite", "all", "`bench`: which suite to run (des|scenarios|faults|serve|all)")
+        .opt("suite", "all", "`bench`: which suite to run (des|scenarios|faults|serve|search|all)")
         .flag("check", "`bench`: gate results against the baseline BENCH_*.json files")
         .opt("baseline-dir", "benches/baselines", "`bench --check`: directory holding the baseline BENCH_*.json files")
         .opt("tol", "0.05", "`bench --check`: relative tolerance on gated metrics (0.05 = ±5%)")
@@ -126,6 +131,7 @@ fn run() -> anyhow::Result<()> {
                 args.get("report"),
                 args.get("trace"),
                 args.get("metrics"),
+                args.get("capture-trace"),
                 args.get_flag("emit-spec"),
             )
         }
@@ -302,12 +308,14 @@ fn table_cmd(fig: usize, images: usize) -> anyhow::Result<()> {
 // ---- the scenario-layer adapters ---------------------------------------
 
 /// `run <scenario.json>`: the direct door into the scenario layer.
+#[allow(clippy::too_many_arguments)]
 fn run_scenario_cmd(
     path: &str,
     sets: &[String],
     report_path: &str,
     trace_path: &str,
     metrics_path: &str,
+    capture_path: &str,
     emit_spec: bool,
 ) -> anyhow::Result<()> {
     let file = std::path::Path::new(path);
@@ -327,11 +335,18 @@ fn run_scenario_cmd(
     let calib = Calibration::load_or_default(&artifacts_dir());
     let sweep_opt = Sweep::from_doc(&doc)?;
     let is_sweep = sweep_opt.is_some();
+    let mut captured: Vec<(f64, String)> = Vec::new();
     let report = if let Some(sweep) = sweep_opt {
         anyhow::ensure!(
             trace_path.is_empty(),
             "--trace works on single scenarios, not sweeps (a grid would \
              interleave dozens of runs in one trace) — narrow the sweep \
+             with --set instead"
+        );
+        anyhow::ensure!(
+            capture_path.is_empty(),
+            "--capture-trace works on single scenarios, not sweeps (a grid \
+             would concatenate unrelated arrival logs) — narrow the sweep \
              with --set instead"
         );
         if emit_spec {
@@ -349,9 +364,31 @@ fn run_scenario_cmd(
         if !trace_path.is_empty() {
             session = session.with_telemetry(TelemetryConfig::on(1.0));
         }
-        session.run()?
+        if !capture_path.is_empty() {
+            session = session.with_capture(true);
+        }
+        let rep = session.run()?;
+        captured = session.take_captured();
+        rep
     };
     print_report(&report);
+    if !capture_path.is_empty() {
+        if captured.is_empty() {
+            eprintln!(
+                "warning: nothing captured (only DES-engine runs with admitted \
+                 arrivals record a trace) — {capture_path} not written"
+            );
+        } else {
+            let jsonl = vta_cluster::serve::captured_to_jsonl(&captured)?;
+            std::fs::write(capture_path, jsonl)
+                .map_err(|e| anyhow::anyhow!("writing {capture_path}: {e}"))?;
+            println!(
+                "wrote {capture_path} ({} admitted request(s); replay with \
+                 arrival: {{\"kind\": \"trace\", \"path\": ...}})",
+                captured.len()
+            );
+        }
+    }
     if !trace_path.is_empty() {
         if report.telemetry.is_empty() {
             eprintln!("warning: no telemetry collected (this shape runs no DES) — {trace_path} not written");
@@ -606,6 +643,15 @@ fn simulate_cmd(
             r.label,
             r.j_per_image,
             r.cluster_avg_w,
+            if r.meets_slo { "" } else { "; SLO NOT met" },
+        );
+    }
+    if r.strategy == "search" {
+        println!(
+            "search picked {} (latency {:.3} ms, {:.4} J/image{})",
+            r.label,
+            r.latency_mean_ms,
+            r.j_per_image,
             if r.meets_slo { "" } else { "; SLO NOT met" },
         );
     }
@@ -1032,6 +1078,24 @@ fn power_cmd(
                 r.j_per_image,
                 r.latency_mean_ms,
                 if r.meets_slo { "" } else { "  ⚠ no candidate meets the SLO" },
+            );
+            // the plan-search engine's counterpart (DESIGN.md §17):
+            // min-J with right-sizing, so it may use fewer boards
+            let out = vta_cluster::power::search_for_family(
+                model,
+                family,
+                nodes,
+                Some(slo_ms),
+                &calib,
+            )?;
+            println!(
+                "search @ {nodes}× {family} (SLO {slo_ms:.1} ms): via {} on {} \
+                 node(s) — {:.4} J/image, latency {:.3} ms{}",
+                out.via,
+                out.nodes_used,
+                out.j_per_image,
+                out.latency_ms,
+                if out.meets_slo { "" } else { "  ⚠ no candidate meets the SLO" },
             );
         }
     }

@@ -44,11 +44,27 @@ pub fn eco_plan(
     cost: &mut CostModel,
     slo_ms: Option<f64>,
 ) -> anyhow::Result<EcoChoice> {
+    eco_plan_batched(g, cluster, cost, slo_ms, 1)
+}
+
+/// [`eco_plan`] with batch-aware candidate construction (DESIGN.md §17):
+/// the §II-C candidates are built from the per-image cost table at
+/// `batch` images per launch, so a batching scenario's eco pick reflects
+/// the amortized knee instead of batch=1 segment times. `batch <= 1` is
+/// bit-identical to [`eco_plan`].
+pub fn eco_plan_batched(
+    g: &Graph,
+    cluster: &ClusterConfig,
+    cost: &mut CostModel,
+    slo_ms: Option<f64>,
+    batch: u64,
+) -> anyhow::Result<EcoChoice> {
     if let Some(slo) = slo_ms {
         anyhow::ensure!(slo.is_finite() && slo > 0.0, "latency SLO must be > 0");
     }
+    anyhow::ensure!(batch >= 1, "batch must be ≥ 1");
     let n = cluster.num_nodes();
-    let seg_costs = cost.seg_cost_table(g)?;
+    let seg_costs = cost.seg_cost_table_batched(g, batch)?;
     let mut candidates = Vec::with_capacity(4);
     for s in Strategy::all() {
         let plan = build_plan_priced(s, g, n, &seg_costs)?;
@@ -141,5 +157,19 @@ mod tests {
         let (g, cluster, mut cost) = setup(2);
         assert!(eco_plan(&g, &cluster, &mut cost, Some(0.0)).is_err());
         assert!(eco_plan(&g, &cluster, &mut cost, Some(f64::NAN)).is_err());
+        assert!(eco_plan_batched(&g, &cluster, &mut cost, None, 0).is_err());
+    }
+
+    #[test]
+    fn batched_eco_matches_unbatched_at_batch_one() {
+        let (g, cluster, mut cost) = setup(4);
+        let plain = eco_plan(&g, &cluster, &mut cost, None).unwrap();
+        let b1 = eco_plan_batched(&g, &cluster, &mut cost, None, 1).unwrap();
+        assert_eq!(plain.base, b1.base);
+        assert_eq!(plain.plan, b1.plan);
+        assert_eq!(plain.j_per_image, b1.j_per_image);
+        // a real batch still yields a valid eco pick
+        let b8 = eco_plan_batched(&g, &cluster, &mut cost, None, 8).unwrap();
+        b8.plan.validate_for(&g).unwrap();
     }
 }

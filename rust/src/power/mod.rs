@@ -22,7 +22,9 @@ pub mod meter;
 pub mod model;
 pub mod pareto;
 
-pub use eco::{eco_plan, EcoChoice};
+pub use eco::{eco_plan, eco_plan_batched, EcoChoice};
 pub use meter::{analytic_power, integrate_energy, EnergyReport, PowerReport};
 pub use model::{PlUsage, PowerModel};
-pub use pareto::{frontier, most_efficient, pareto_sweep, ParetoPoint};
+pub use pareto::{
+    frontier, most_efficient, pareto_sweep, search_for_family, ParetoPoint,
+};

@@ -145,6 +145,31 @@ pub fn eco_for_family(
     eco_plan(&g, &cluster, &mut cost, slo_ms)
 }
 
+/// Searched plan for one family at a fixed cluster size (DESIGN.md §17)
+/// — the `power --slo` path's sixth-strategy counterpart. Minimizes
+/// J/image with right-sizing on, so a fleet larger than the workload
+/// needs comes back with a sub-cluster plan and a node map.
+pub fn search_for_family(
+    model: &str,
+    family: BoardFamily,
+    nodes: usize,
+    slo_ms: Option<f64>,
+    calib: &Calibration,
+) -> anyhow::Result<crate::search::SearchOutcome> {
+    let g = zoo::build(model, 0)?;
+    let board = BoardProfile::for_family(family);
+    let vta = board.default_vta();
+    let mut cost = CostModel::new(vta.clone(), board, calib.clone());
+    let cluster = ClusterConfig::homogeneous(family, nodes).with_vta(vta);
+    let cfg = crate::search::SearchConfig {
+        objective: crate::search::Objective::JPerImage,
+        slo_ms,
+        rightsize: true,
+        ..Default::default()
+    };
+    crate::search::search_plan(&g, &cluster, &mut cost, &cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,5 +269,23 @@ mod tests {
         assert!(pareto_sweep("nope", &[BoardFamily::Zynq7000], 2, &Calibration::default())
             .is_err());
         assert!(pareto_sweep("lenet5", &[], 2, &Calibration::default()).is_err());
+    }
+
+    #[test]
+    fn search_for_family_never_loses_to_eco() {
+        let calib = Calibration::default();
+        let eco = eco_for_family("lenet5", BoardFamily::Zynq7000, 3, None, &calib).unwrap();
+        let found =
+            search_for_family("lenet5", BoardFamily::Zynq7000, 3, None, &calib).unwrap();
+        assert!(
+            found.j_per_image <= eco.j_per_image * 1.0001,
+            "eco {} J beats search's {} J",
+            eco.j_per_image,
+            found.j_per_image
+        );
+        assert!(found.nodes_used >= 1 && found.nodes_used <= 3);
+        if let Some(map) = &found.node_map {
+            assert_eq!(map.len(), found.nodes_used);
+        }
     }
 }

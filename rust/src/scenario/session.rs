@@ -24,7 +24,7 @@ use crate::config::{
 };
 use crate::coordinator::{allocate_nodes, simulate_tenants, TenantRequest};
 use crate::graph::{zoo, Graph};
-use crate::power::eco_plan;
+use crate::power::eco_plan_batched;
 use crate::runtime::artifacts_dir;
 use crate::sched::{
     build_plan_priced, plan_options, survivor_options, ControllerConfig, ExecutionPlan,
@@ -79,6 +79,13 @@ pub struct Session {
     /// (DESIGN.md §13). Off by default, so reports are byte-identical to
     /// the pre-telemetry output unless [`Session::with_telemetry`] asks.
     telemetry: TelemetryConfig,
+    /// When set, every DES cell records its admitted arrivals
+    /// (`run --capture-trace`); harvest with [`Session::take_captured`].
+    capture: bool,
+    /// Admitted `(t_ms, tenant)` pairs accumulated across the DES cells
+    /// of one run — interior-mutable because [`Session::run`] borrows
+    /// the session immutably.
+    captured: std::cell::RefCell<Vec<(f64, String)>>,
 }
 
 impl Session {
@@ -88,7 +95,14 @@ impl Session {
     pub fn new(spec: ScenarioSpec) -> anyhow::Result<Self> {
         spec.validate()?;
         let fast = std::env::var("VTA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
-        Ok(Session { spec, calib: None, fast, telemetry: TelemetryConfig::off() })
+        Ok(Session {
+            spec,
+            calib: None,
+            fast,
+            telemetry: TelemetryConfig::off(),
+            capture: false,
+            captured: std::cell::RefCell::new(Vec::new()),
+        })
     }
 
     pub fn with_calibration(mut self, calib: Calibration) -> Self {
@@ -109,6 +123,23 @@ impl Session {
     pub fn fast(mut self, fast: bool) -> Self {
         self.fast = fast;
         self
+    }
+
+    /// Record every DES cell's admitted arrivals as `(t_ms, tenant)`
+    /// pairs — the `run --capture-trace` path. Analytic cells are not
+    /// captured (their DES is a synthetic loaded-percentile probe, not
+    /// the measured run). Harvest with [`Session::take_captured`].
+    pub fn with_capture(mut self, capture: bool) -> Self {
+        self.capture = capture;
+        self
+    }
+
+    /// Drain the admitted arrivals captured by the last [`Session::run`]
+    /// (empty unless [`Session::with_capture`] was enabled). The pairs
+    /// are replayable trace input for
+    /// [`crate::serve::captured_to_jsonl`].
+    pub fn take_captured(&self) -> Vec<(f64, String)> {
+        self.captured.take()
     }
 
     pub fn spec(&self) -> &ScenarioSpec {
@@ -460,7 +491,7 @@ impl Session {
         };
         let attainment = slo_attainment(&des.latency_ms, spec.slo_ms);
         let mut row = ReportRow {
-            label: eco_label(label, &eco),
+            label: pick_label(label, &eco),
             engine: Engine::Analytic.as_str().to_string(),
             model: tenant.model.clone(),
             family: group.family.to_string(),
@@ -537,9 +568,12 @@ impl Session {
         let mut options = plan_options(&g, &cluster, cost, &Strategy::all())?;
 
         let mut eco = None;
-        let initial = if tenant.plan.is_some() || tenant.strategy == Strategy::Eco {
-            // the fifth candidate: the explicit plan or the eco pick,
-            // priced like every other option
+        let initial = if tenant.plan.is_some()
+            || tenant.strategy == Strategy::Eco
+            || tenant.strategy == Strategy::Search
+        {
+            // the fifth candidate: the explicit plan, the eco pick or
+            // the searched plan, priced like every other option
             let (plan, eco_info) = resolve_plan(spec, tenant, &g, &cluster, cost)?;
             eco = eco_info;
             let sim = simulate(&plan, &cluster, cost, &g, &SimConfig { images: 16 })?;
@@ -593,6 +627,7 @@ impl Session {
         cfg.serve.admission = spec.admission.to_config(spec.slo_ms)?;
         cfg.serve.batch = spec.batch.to_config();
         cfg.serve.tenants = serve_tenants;
+        cfg.capture = self.capture;
         let deadline_active =
             cfg.serve.admission.as_ref().is_some_and(|a| a.deadline_ns > 0);
         if !spec.faults.is_off() {
@@ -613,11 +648,14 @@ impl Session {
             None
         };
         let mut r = run_des(&options, initial, &cluster, cost, &g, &cfg, controller.as_mut())?;
+        if self.capture {
+            self.captured.borrow_mut().append(&mut r.captured);
+        }
 
         let p99 = r.latency_ms.p99();
         let attainment = slo_attainment(&r.latency_ms, spec.slo_ms);
         let mut row = ReportRow {
-            label: eco_label(label, &eco),
+            label: pick_label(label, &eco),
             engine: Engine::Des.as_str().to_string(),
             model: tenant.model.clone(),
             family: group.family.to_string(),
@@ -786,32 +824,54 @@ fn effective_rate(arrival: &ArrivalSpec, capacity: f64) -> f64 {
 }
 
 /// Resolve a tenant's plan: explicit stages win, then the eco selector
-/// (returning its base strategy + SLO verdict), then the §II-C
-/// constructor priced by the shared segment-cost table.
+/// or the plan-search engine (each returning a provenance string +
+/// SLO verdict), then the §II-C constructor priced by the shared
+/// segment-cost table. Both selectors price at the spec's batch size so
+/// a batching scenario's plan choice reflects the batching knee
+/// (DESIGN.md §16/§17).
 fn resolve_plan(
     spec: &ScenarioSpec,
     tenant: &TenantEntry,
     g: &Graph,
     cluster: &ClusterConfig,
     cost: &mut CostModel,
-) -> anyhow::Result<(ExecutionPlan, Option<(Strategy, bool)>)> {
+) -> anyhow::Result<(ExecutionPlan, Option<(String, bool)>)> {
     if let Some(plan) = ScenarioSpec::explicit_plan(tenant, g, cluster.num_nodes())? {
         return Ok((plan, None));
     }
+    let batch = spec.batch.max_size.max(1) as u64;
     if tenant.strategy == Strategy::Eco {
         let slo = (spec.slo_ms > 0.0).then_some(spec.slo_ms);
-        let choice = eco_plan(g, cluster, cost, slo)?;
-        return Ok((choice.plan, Some((choice.base, choice.meets_slo))));
+        let choice = eco_plan_batched(g, cluster, cost, slo, batch)?;
+        let via = format!("eco→{}", choice.base);
+        return Ok((choice.plan, Some((via, choice.meets_slo))));
+    }
+    if tenant.strategy == Strategy::Search {
+        let budget = spec.controller.power_budget_w;
+        let cfg = crate::search::SearchConfig {
+            objective: crate::search::Objective::Latency,
+            slo_ms: (spec.slo_ms > 0.0).then_some(spec.slo_ms),
+            power_budget_w: (spec.controller.enabled && budget > 0.0).then_some(budget),
+            batch,
+            // scenario plans must cover the whole inventory: `simulate`
+            // and the DES both want plan.n_nodes == cluster nodes
+            rightsize: false,
+            ..Default::default()
+        };
+        let out = crate::search::search_plan(g, cluster, cost, &cfg)?;
+        let via = format!("search→{}", out.via);
+        return Ok((out.plan, Some((via, out.meets_slo))));
     }
     let table = cost.seg_cost_table(g)?;
     let plan = build_plan_priced(tenant.strategy, g, cluster.num_nodes(), &table)?;
     Ok((plan, None))
 }
 
-/// Tag eco rows with the base strategy the selector picked.
-fn eco_label(label: &str, eco: &Option<(Strategy, bool)>) -> String {
-    match eco {
-        Some((base, _)) => format!("{label} (eco→{base})"),
+/// Tag eco/search rows with the provenance of the selected plan
+/// (`eco→pipeline`, `search→dp`, …).
+fn pick_label(label: &str, pick: &Option<(String, bool)>) -> String {
+    match pick {
+        Some((via, _)) => format!("{label} ({via})"),
         None => label.to_string(),
     }
 }
@@ -1182,6 +1242,84 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert_eq!(rep2.rows[0].completed, row.completed);
         assert_eq!(rep2.rows[0].p99_ms, row.p99_ms);
+    }
+
+    #[test]
+    fn search_rows_name_their_provenance_and_never_lose_to_their_base() {
+        let s = session(
+            r#"{"model": "lenet5", "strategy": "search", "nodes": 4, "images": 16, "seed": 3}"#,
+        );
+        let rep = s.run().unwrap();
+        let row = &rep.rows[0];
+        assert_eq!(row.strategy, "search");
+        assert!(row.label.contains("search→"), "{}", row.label);
+        assert!(row.meets_slo, "no SLO set: the searched plan trivially meets it");
+        // dominance at the report level: the same cell under every
+        // heuristic strategy is no faster
+        for base in ["sg", "pipeline", "ai", "fused"] {
+            let text = format!(
+                r#"{{"model": "lenet5", "strategy": "{base}", "nodes": 4, "images": 16, "seed": 3}}"#
+            );
+            let b = session(&text).run().unwrap();
+            assert!(
+                row.latency_mean_ms <= b.rows[0].latency_mean_ms * 1.0001,
+                "{base} beat search: {} vs {} ms",
+                b.rows[0].latency_mean_ms,
+                row.latency_mean_ms
+            );
+        }
+    }
+
+    #[test]
+    fn search_strategy_drives_the_des_engine() {
+        let text = r#"{
+          "model": "lenet5", "strategy": "search", "nodes": 3, "engine": "des",
+          "horizon_ms": 3000, "seed": 7, "controller": {"enabled": false}
+        }"#;
+        let a = session(text).run().unwrap();
+        assert_eq!(a.rows[0].strategy, "search");
+        assert!(a.rows[0].completed > 0);
+        let b = session(text).run().unwrap();
+        assert_eq!(a.rows[0].p99_ms, b.rows[0].p99_ms, "searched DES runs stay seeded");
+    }
+
+    #[test]
+    fn captured_trace_replays_to_the_same_admitted_counts() {
+        let text = r#"{
+          "model": "lenet5", "strategy": "pipeline", "nodes": 2, "engine": "des",
+          "horizon_ms": 3000, "seed": 21, "controller": {"enabled": false}
+        }"#;
+        let s = session(text).with_capture(true);
+        let rep = s.run().unwrap();
+        let captured = s.take_captured();
+        assert_eq!(
+            captured.len() as u64,
+            rep.rows[0].offered,
+            "no admission gate: every offered request was admitted and captured"
+        );
+        assert!(s.take_captured().is_empty(), "take_captured drains");
+        // round trip: replay the capture as an `arrival: trace` source
+        let jsonl = crate::serve::captured_to_jsonl(&captured).unwrap();
+        let dir = std::env::temp_dir().join(format!("vta-capture-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("capture_replay.jsonl");
+        std::fs::write(&path, jsonl).unwrap();
+        let replay_text = format!(
+            r#"{{
+              "model": "lenet5", "strategy": "pipeline", "nodes": 2, "engine": "des",
+              "horizon_ms": 3000, "seed": 99, "controller": {{"enabled": false}},
+              "arrival": {{"kind": "trace", "path": {:?}, "time_scale": 1.0}}
+            }}"#,
+            path.to_str().unwrap()
+        );
+        let replay = session(&replay_text).run().unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(
+            replay.rows[0].offered,
+            rep.rows[0].offered,
+            "replaying the capture must reproduce the offered count"
+        );
+        assert_eq!(replay.rows[0].shed_rate, 0.0);
     }
 
     #[test]

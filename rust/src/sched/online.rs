@@ -135,6 +135,25 @@ pub fn plan_options(
     let seg_costs = cost.seg_cost_table(g)?;
     let mut out = Vec::with_capacity(strategies.len());
     for &s in strategies {
+        // the searched strategy prices itself with the same metered
+        // simulator (DESIGN.md §17), so its option slots straight into
+        // the candidate set the controller compares
+        if s == Strategy::Search {
+            let scfg = crate::search::SearchConfig {
+                objective: crate::search::Objective::Throughput,
+                ..Default::default()
+            };
+            let found = crate::search::search_plan(g, cluster, cost, &scfg)?;
+            out.push(PlanOption {
+                plan: found.plan,
+                node_map: None,
+                capacity_img_per_sec: 1e3 / found.ms_per_image,
+                latency_ms: found.latency_ms,
+                avg_power_w: found.cluster_w,
+                j_per_image: found.j_per_image,
+            });
+            continue;
+        }
         let plan = build_plan_priced(s, g, n, &seg_costs)?;
         let sim = simulate(&plan, cluster, cost, g, &SimConfig { images: 16 })?;
         out.push(PlanOption {
@@ -1096,6 +1115,22 @@ mod tests {
         let opts = plan_options(&g, &cluster, &mut cost, &Strategy::all()).unwrap();
         assert_eq!(opts.len(), 4);
         validate_options(&opts, &g, 3).unwrap();
+        // the searched strategy slots into the same candidate set and,
+        // by the §17 dominance guarantee, never offers less capacity
+        // than the best heuristic option
+        let with_search =
+            plan_options(&g, &cluster, &mut cost, &[Strategy::Search]).unwrap();
+        assert_eq!(with_search.len(), 1);
+        assert_eq!(with_search[0].plan.strategy, Strategy::Search);
+        validate_options(&with_search, &g, 3).unwrap();
+        let best_heuristic =
+            opts.iter().map(|o| o.capacity_img_per_sec).fold(0.0f64, f64::max);
+        assert!(
+            with_search[0].capacity_img_per_sec >= best_heuristic * 0.9999,
+            "search option {} img/s loses to best heuristic {} img/s",
+            with_search[0].capacity_img_per_sec,
+            best_heuristic
+        );
         for o in &opts {
             assert!(o.capacity_img_per_sec > 0.0 && o.latency_ms > 0.0);
             // priced power: at least the 3-node idle floor, and finite

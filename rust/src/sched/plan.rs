@@ -25,6 +25,15 @@ pub enum Strategy {
     /// metered simulator, not just a time oracle), so it is not part of
     /// [`Strategy::all`] — that array stays the paper's §II-C four.
     Eco,
+    /// The sixth strategy (DESIGN.md §17): DP/beam search over the whole
+    /// contiguous-partition space (stage boundaries × per-stage node
+    /// counts × split modes) instead of a hand-picked heuristic slice.
+    /// Built by [`crate::search::search_plan`] (it needs the memoized
+    /// cost table, the metered simulator and the objective/constraint
+    /// plumbing), so — like [`Strategy::Eco`] — it is not part of
+    /// [`Strategy::all`]: the searched plan is *priced against* those
+    /// four, which is what makes its dominance guarantee checkable.
+    Search,
 }
 
 impl Strategy {
@@ -35,6 +44,7 @@ impl Strategy {
             Strategy::Pipeline => "pipeline",
             Strategy::Fused => "fused",
             Strategy::Eco => "eco",
+            Strategy::Search => "search",
         }
     }
 
@@ -53,6 +63,7 @@ impl Strategy {
             "pipeline" | "pipe" => Ok(Strategy::Pipeline),
             "fused" => Ok(Strategy::Fused),
             "eco" | "eco-slo" | "power" => Ok(Strategy::Eco),
+            "search" | "dp-search" | "plan-search" => Ok(Strategy::Search),
             other => anyhow::bail!("unknown strategy '{other}'"),
         }
     }
@@ -306,6 +317,10 @@ mod tests {
         assert_eq!(Strategy::parse("eco").unwrap(), Strategy::Eco);
         assert_eq!(Strategy::parse(Strategy::Eco.as_str()).unwrap(), Strategy::Eco);
         assert!(!Strategy::all().contains(&Strategy::Eco));
+        // … and so does the sixth, searched strategy (DESIGN.md §17)
+        assert_eq!(Strategy::parse("search").unwrap(), Strategy::Search);
+        assert_eq!(Strategy::parse(Strategy::Search.as_str()).unwrap(), Strategy::Search);
+        assert!(!Strategy::all().contains(&Strategy::Search));
         assert!(Strategy::parse("bogus").is_err());
     }
 }

@@ -282,6 +282,13 @@ where
             "the eco strategy is built by power::eco_plan (it needs a \
              cluster, a cost model and an optional latency SLO)"
         ),
+        // the searched strategy prices its candidates with the metered
+        // simulator — route through search::search_plan
+        Strategy::Search => anyhow::bail!(
+            "the search strategy is built by search::search_plan (it \
+             needs a cluster, a cost model and an objective/constraint \
+             config, not just a time oracle)"
+        ),
     }
 }
 
@@ -465,6 +472,13 @@ mod tests {
         let g = g();
         let e = build_plan(Strategy::Eco, &g, 2, |_| 1.0).unwrap_err().to_string();
         assert!(e.contains("eco_plan"), "{e}");
+    }
+
+    #[test]
+    fn search_needs_the_engine_path() {
+        let g = g();
+        let e = build_plan(Strategy::Search, &g, 2, |_| 1.0).unwrap_err().to_string();
+        assert!(e.contains("search_plan"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Width-bounded beam search over the partition space (DESIGN.md §17),
+//! for when the joint space explodes: fleets of hundreds of boards, or
+//! the outer product with candidate VTA bitstream configurations.
+//!
+//! States are partial schedules (atoms covered, nodes committed); each
+//! round appends one stage to every frontier state, keeps completed
+//! schedules aside, and cuts the frontier back to the `width` states
+//! with the best `score ⊕ remaining_bound` — the admissible compute-only
+//! bound from [`SearchSpace::remaining_bound`], so the cut prefers
+//! states that can still win, not states that merely look cheap so far.
+//!
+//! [`beam_over_configs`] runs one beam per candidate VTA configuration
+//! on its own OS thread (`std::thread::scope` — the crate deliberately
+//! has no dependency on a thread-pool crate), each with its own cost
+//! model, and returns the best (configuration, schedule) pair.
+
+use super::space::{Choice, Proxy, SearchSpace};
+use crate::config::{BoardProfile, Calibration, VtaConfig};
+use crate::graph::Graph;
+use crate::sched::ExecutionPlan;
+use crate::sim::CostModel;
+
+/// Default frontier width when the caller passes `width == 0`.
+pub const DEFAULT_WIDTH: usize = 8;
+
+/// A beam-searched schedule plus the search's own accounting.
+#[derive(Debug, Clone)]
+pub struct BeamOutcome {
+    /// The winning stage sequence.
+    pub choices: Vec<Choice>,
+    /// The materialized plan ([`crate::sched::Strategy::Search`]).
+    pub plan: ExecutionPlan,
+    /// Its proxy score, ns (per image).
+    pub score_ns: f64,
+    /// States expanded across all rounds.
+    pub explored: usize,
+    /// Successor states cut by the beam width.
+    pub pruned: usize,
+}
+
+#[derive(Clone)]
+struct State {
+    /// Atoms covered so far.
+    a: usize,
+    /// Nodes committed so far.
+    m: usize,
+    /// Accumulated proxy score of the committed stages.
+    score: f64,
+    choices: Vec<Choice>,
+}
+
+/// Beam-search a schedule of the space's graph over `n` nodes. With
+/// `width == 0` the [`DEFAULT_WIDTH`] is used. Always returns a
+/// complete schedule: the closing move (one data-parallel stage over
+/// all remaining atoms and nodes) is generated from every state, and
+/// completed schedules are collected *before* the width cut.
+pub fn beam_plan(
+    space: &SearchSpace,
+    n: usize,
+    proxy: Proxy,
+    width: usize,
+) -> anyhow::Result<BeamOutcome> {
+    anyhow::ensure!(n >= 1, "beam_plan needs at least one node");
+    anyhow::ensure!(
+        n <= space.n_nodes,
+        "beam over {n} nodes but the space was priced for {}",
+        space.n_nodes
+    );
+    let width = if width == 0 { DEFAULT_WIDTH } else { width };
+    let a_total = space.n_atoms();
+    let mut frontier =
+        vec![State { a: 0, m: 0, score: proxy.identity(), choices: Vec::new() }];
+    let mut done: Option<State> = None;
+    let mut explored = 0usize;
+    let mut pruned = 0usize;
+
+    while !frontier.is_empty() {
+        let mut successors: Vec<State> = Vec::new();
+        for st in &frontier {
+            explored += 1;
+            for b in st.a + 1..=a_total {
+                // a non-final stage must leave ≥ 1 node for the rest;
+                // the final stage must consume the budget exactly
+                let r_max = if b == a_total { n - st.m } else { n.saturating_sub(st.m + 1) };
+                for r in 1..=r_max {
+                    if b == a_total && r != n - st.m {
+                        continue;
+                    }
+                    for spatial in [false, true] {
+                        let Some(s) = space.stage_score(st.a, b, r, spatial, proxy) else {
+                            continue;
+                        };
+                        let mut choices = st.choices.clone();
+                        choices.push(Choice { a: st.a, b, r, spatial });
+                        let next = State {
+                            a: b,
+                            m: st.m + r,
+                            score: proxy.combine(st.score, s),
+                            choices,
+                        };
+                        if b == a_total {
+                            let better =
+                                done.as_ref().map(|d| next.score < d.score).unwrap_or(true);
+                            if better {
+                                done = Some(next);
+                            }
+                        } else {
+                            successors.push(next);
+                        }
+                    }
+                }
+            }
+        }
+        successors.sort_by(|x, y| {
+            let bx = proxy.combine(x.score, space.remaining_bound(x.a, n - x.m, proxy));
+            let by = proxy.combine(y.score, space.remaining_bound(y.a, n - y.m, proxy));
+            bx.partial_cmp(&by).expect("finite beam scores")
+        });
+        if successors.len() > width {
+            pruned += successors.len() - width;
+            successors.truncate(width);
+        }
+        frontier = successors;
+    }
+
+    let best = done.expect("the all-remaining-atoms closing stage always completes");
+    let plan = space.assemble_plan(&best.choices, n);
+    plan.validate()?;
+    Ok(BeamOutcome { choices: best.choices, plan, score_ns: best.score, explored, pruned })
+}
+
+/// Beam-search the outer product of the partition space with candidate
+/// VTA configurations — one OS thread per configuration, each with its
+/// own cost model and priced space. Configurations that do not fit the
+/// board's fabric are skipped; returns the index of the winning
+/// configuration and its schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn beam_over_configs(
+    g: &Graph,
+    board: &BoardProfile,
+    configs: &[VtaConfig],
+    calib: &Calibration,
+    n: usize,
+    proxy: Proxy,
+    width: usize,
+    batch: u64,
+) -> anyhow::Result<(usize, BeamOutcome)> {
+    anyhow::ensure!(!configs.is_empty(), "no candidate VTA configurations");
+    let results: Vec<Option<anyhow::Result<BeamOutcome>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = configs
+            .iter()
+            .map(|cfg| {
+                scope.spawn(move || {
+                    if board.vta_fits(cfg).is_err() {
+                        return None;
+                    }
+                    let mut cost =
+                        CostModel::new(cfg.clone(), board.clone(), calib.clone());
+                    Some(
+                        SearchSpace::build(g, &mut cost, n, batch)
+                            .and_then(|sp| beam_plan(&sp, n, proxy, width)),
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("beam thread panicked")).collect()
+    });
+    let mut best: Option<(usize, BeamOutcome)> = None;
+    for (i, res) in results.into_iter().enumerate() {
+        let Some(res) = res else { continue };
+        let out = res?;
+        let better = best.as_ref().map(|(_, b)| out.score_ns < b.score_ns).unwrap_or(true);
+        if better {
+            best = Some((i, out));
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow::anyhow!("no candidate VTA configuration fits board '{}'", board.name)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BoardProfile, Calibration, VtaConfig};
+    use crate::graph::zoo;
+    use crate::search::dp::dp_plan;
+
+    fn space(model: &str, n: usize) -> (Graph, SearchSpace) {
+        let g = zoo::build(model, 0).unwrap();
+        let mut cost = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration::default(),
+        );
+        let sp = SearchSpace::build(&g, &mut cost, n, 1).unwrap();
+        (g, sp)
+    }
+
+    #[test]
+    fn beam_plans_validate_and_track_the_dp_optimum() {
+        for n in [2usize, 8] {
+            let (g, sp) = space("resnet18", n);
+            for proxy in [Proxy::Throughput, Proxy::Latency] {
+                let beam = beam_plan(&sp, n, proxy, 0).unwrap();
+                beam.plan.validate_for(&g).unwrap();
+                let dp = dp_plan(&sp, n, proxy).unwrap();
+                assert!(
+                    beam.score_ns >= dp.score_ns - 1e-9,
+                    "beam {} beat the exact DP {} — the DP is not optimal?",
+                    beam.score_ns,
+                    dp.score_ns
+                );
+                assert!(
+                    beam.score_ns <= dp.score_ns * 1.5,
+                    "beam {} far off the DP optimum {}",
+                    beam.score_ns,
+                    dp.score_ns
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wider_beams_never_score_worse() {
+        let (_, sp) = space("resnet18", 8);
+        let narrow = beam_plan(&sp, 8, Proxy::Throughput, 1).unwrap();
+        let wide = beam_plan(&sp, 8, Proxy::Throughput, 64).unwrap();
+        assert!(wide.score_ns <= narrow.score_ns + 1e-9);
+        assert!(wide.explored >= narrow.explored);
+        assert!(narrow.pruned > 0, "width 1 should be cutting successors");
+    }
+
+    #[test]
+    fn beam_over_configs_picks_the_faster_clock() {
+        let g = zoo::build("resnet18", 0).unwrap();
+        let board = BoardProfile::zynq7020();
+        let configs =
+            [VtaConfig::table1_at_clock(50_000_000), VtaConfig::table1_zynq7000()];
+        let (idx, out) = beam_over_configs(
+            &g,
+            &board,
+            &configs,
+            &Calibration::default(),
+            4,
+            Proxy::Latency,
+            0,
+            1,
+        )
+        .unwrap();
+        assert_eq!(idx, 1, "100 MHz Table-I config should beat 50 MHz");
+        out.plan.validate_for(&g).unwrap();
+    }
+
+    #[test]
+    fn unfittable_configs_are_skipped() {
+        let g = zoo::build("lenet5", 0).unwrap();
+        let board = BoardProfile::zynq7020();
+        // big_config needs US+ fabric — alone it is an error, alongside a
+        // fitting config it is skipped
+        let only_big = [VtaConfig::big_config_200mhz()];
+        assert!(beam_over_configs(
+            &g,
+            &board,
+            &only_big,
+            &Calibration::default(),
+            2,
+            Proxy::Latency,
+            0,
+            1
+        )
+        .is_err());
+        let mixed = [VtaConfig::big_config_200mhz(), VtaConfig::table1_zynq7000()];
+        let (idx, _) = beam_over_configs(
+            &g,
+            &board,
+            &mixed,
+            &Calibration::default(),
+            2,
+            Proxy::Latency,
+            0,
+            1
+        )
+        .unwrap();
+        assert_eq!(idx, 1);
+    }
+}

@@ -1,0 +1,490 @@
+//! The plan-search engine (DESIGN.md §17): objective and constraint
+//! plumbing around the DP/beam searchers, plus the generic
+//! bound-and-price loop ([`prune_min`]) the GEMM autotuner is an adapter
+//! over.
+//!
+//! [`search_plan`] assembles a candidate set — the four §II-C heuristics
+//! (pricing them is what makes the dominance guarantee checkable), the
+//! exact partition DP under both analytic proxies, a beam pass at fleet
+//! scale, and (optionally) right-sized DP plans over power-of-two
+//! sub-clusters — then prices candidates with the metered analytic
+//! simulator, skipping any candidate whose admissible compute-only
+//! bound already cannot beat the incumbent. Constraints follow
+//! [`crate::power::eco_plan`]'s contract: infeasible candidates are
+//! filtered, and if *nothing* meets the SLO/power budget the
+//! lowest-latency candidate is returned flagged
+//! [`SearchOutcome::meets_slo`] ` = false`.
+
+use super::beam::beam_plan;
+use super::dp::dp_plan;
+use super::space::{Choice, Proxy, SearchSpace};
+use crate::config::ClusterConfig;
+use crate::graph::Graph;
+use crate::sched::{build_plan_priced, ExecutionPlan, Strategy};
+use crate::sim::{simulate, CostModel, SimConfig};
+
+/// What the searched plan should minimize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Unloaded single-image latency (the E1 dominance metric).
+    Latency,
+    /// Steady-state ms/image at saturation (serving capacity).
+    Throughput,
+    /// Energy per inference (Eco's metric).
+    JPerImage,
+}
+
+impl Objective {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Throughput => "throughput",
+            Objective::JPerImage => "j-per-image",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "latency" | "lat" => Ok(Objective::Latency),
+            "throughput" | "capacity" | "ms" => Ok(Objective::Throughput),
+            "j-per-image" | "j" | "energy" | "joules" => Ok(Objective::JPerImage),
+            other => anyhow::bail!(
+                "unknown search objective '{other}' (latency|throughput|j-per-image)"
+            ),
+        }
+    }
+
+    /// The analytic proxy that generates candidates for this objective.
+    /// J/image has no compute-only proxy (it needs the power model), so
+    /// it searches under the throughput proxy — at near-constant watts,
+    /// energy per image tracks ms/image.
+    pub fn proxy(&self) -> Proxy {
+        match self {
+            Objective::Latency => Proxy::Latency,
+            Objective::Throughput | Objective::JPerImage => Proxy::Throughput,
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Knobs of one [`search_plan`] call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchConfig {
+    pub objective: Objective,
+    /// Unloaded-latency SLO, ms (`None` = unconstrained).
+    pub slo_ms: Option<f64>,
+    /// Cluster power budget, W (`None` = uncapped).
+    pub power_budget_w: Option<f64>,
+    /// Batch size plans are priced at (`1` = unbatched; the scenario
+    /// layer threads `batch.max_size` through here).
+    pub batch: u64,
+    /// Beam frontier width; `0` = the beam's default. The beam pass only
+    /// runs at fleet scale (`n ≥ 16`) or when a width is forced here.
+    pub beam_width: usize,
+    /// Also search power-of-two sub-clusters (`m < n`) and return a
+    /// [`SearchOutcome::node_map`] onto the first `m` physical nodes.
+    /// Off for scenario flows (plans there must use the whole
+    /// inventory); the J/image CLI and bench paths turn it on.
+    pub rightsize: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            objective: Objective::Latency,
+            slo_ms: None,
+            power_budget_w: None,
+            batch: 1,
+            beam_width: 0,
+            rightsize: false,
+        }
+    }
+}
+
+/// Accounting of one bound-and-price pass (also the beam's internal
+/// counters, merged in by [`search_plan`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Candidates considered.
+    pub candidates: usize,
+    /// Candidates (or search states) actually priced/expanded.
+    pub explored: usize,
+    /// Candidates (or search states) skipped by an admissible bound or
+    /// a beam cut.
+    pub pruned: usize,
+}
+
+/// What [`search_plan`] picked and why.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// The winning plan, `strategy` re-tagged [`Strategy::Search`].
+    pub plan: ExecutionPlan,
+    /// Which candidate family won: a §II-C heuristic name, `"dp"`,
+    /// `"beam"`, or `"dp@m"` for a right-sized plan over `m` nodes.
+    pub via: String,
+    /// Nodes the plan actually occupies (`< n` only when right-sized).
+    pub nodes_used: usize,
+    /// Physical node ids for a right-sized plan's logical nodes;
+    /// `None` when the plan spans the whole cluster.
+    pub node_map: Option<Vec<usize>>,
+    /// Steady-state ms/image at saturation.
+    pub ms_per_image: f64,
+    /// Unloaded single-image latency, ms.
+    pub latency_ms: f64,
+    /// Steady-state cluster draw, W (the right-sized sub-cluster's draw
+    /// when `node_map` is set — the surplus boards are powered off).
+    pub cluster_w: f64,
+    pub j_per_image: f64,
+    /// False when no candidate met the SLO/power constraints and the
+    /// lowest-latency candidate was returned as the least-bad fallback.
+    pub meets_slo: bool,
+    pub stats: PruneStats,
+}
+
+/// Generic bound-and-price argmin (DESIGN.md §17).
+///
+/// Walks `cands` in order; `bound` returns an **admissible lower bound**
+/// on a candidate's score (cheap, no side effects), `price` the exact
+/// score plus its payload (expensive), or `None` for an infeasible
+/// candidate. A candidate whose bound cannot beat the current best is
+/// skipped without pricing; improvement is strict (`<`), so ties keep
+/// the earliest candidate. Returns the winner (if any candidate was
+/// feasible) and the pass accounting.
+pub fn prune_min<T, V>(
+    cands: impl IntoIterator<Item = T>,
+    mut bound: impl FnMut(&T) -> f64,
+    mut price: impl FnMut(&T) -> anyhow::Result<Option<(V, f64)>>,
+) -> anyhow::Result<(Option<(T, V, f64)>, PruneStats)> {
+    let mut best: Option<(T, V, f64)> = None;
+    let mut stats = PruneStats::default();
+    for c in cands {
+        stats.candidates += 1;
+        if let Some((_, _, incumbent)) = &best {
+            if bound(&c) >= *incumbent {
+                stats.pruned += 1;
+                continue;
+            }
+        }
+        stats.explored += 1;
+        if let Some((v, score)) = price(&c)? {
+            let better = best.as_ref().map(|(_, _, s)| score < *s).unwrap_or(true);
+            if better {
+                best = Some((c, v, score));
+            }
+        }
+    }
+    Ok((best, stats))
+}
+
+/// One plan candidate awaiting pricing.
+struct Cand {
+    plan: ExecutionPlan,
+    via: String,
+    /// Admissible lower bound on the objective, ms (0 = never prune —
+    /// used for the heuristics, which must be priced for the dominance
+    /// guarantee, and for J/image, which has no compute-only bound).
+    bound_ms: f64,
+    /// Right-sized candidates carry their truncated cluster and the
+    /// physical ids their logical nodes map onto.
+    sub: Option<(ClusterConfig, Vec<usize>)>,
+}
+
+/// Simulator metrics of one priced candidate.
+#[derive(Debug, Clone, Copy)]
+struct Priced {
+    ms_per_image: f64,
+    latency_ms: f64,
+    cluster_w: f64,
+    j_per_image: f64,
+}
+
+fn objective_bound_ms(space: &SearchSpace, choices: &[Choice], objective: Objective) -> f64 {
+    match objective {
+        Objective::Latency => {
+            space.score(choices, Proxy::Latency).map(|ns| ns / 1e6).unwrap_or(0.0)
+        }
+        Objective::Throughput => {
+            space.score(choices, Proxy::Throughput).map(|ns| ns / 1e6).unwrap_or(0.0)
+        }
+        // J/image needs the power model; no admissible compute-only bound
+        Objective::JPerImage => 0.0,
+    }
+}
+
+/// Search the partition space of `g` over `cluster` and return the best
+/// plan under `cfg`'s objective and constraints. The four §II-C
+/// heuristics are always in the candidate set and priced by the same
+/// metered simulator, so the outcome never loses to the best heuristic
+/// on the chosen objective — the E1 dominance guarantee.
+pub fn search_plan(
+    g: &Graph,
+    cluster: &ClusterConfig,
+    cost: &mut CostModel,
+    cfg: &SearchConfig,
+) -> anyhow::Result<SearchOutcome> {
+    if let Some(slo) = cfg.slo_ms {
+        anyhow::ensure!(slo.is_finite() && slo > 0.0, "latency SLO must be > 0");
+    }
+    if let Some(b) = cfg.power_budget_w {
+        anyhow::ensure!(b.is_finite() && b > 0.0, "power budget must be > 0");
+    }
+    anyhow::ensure!(cfg.batch >= 1, "batch must be ≥ 1");
+    let n = cluster.num_nodes();
+    let space = SearchSpace::build(g, cost, n, cfg.batch)?;
+    let seg_costs = cost.seg_cost_table_batched(g, cfg.batch)?;
+    let proxy = cfg.objective.proxy();
+
+    let mut search_stats = PruneStats::default();
+    let mut cands: Vec<Cand> = Vec::new();
+    // 1) the §II-C heuristics — never pruned, always priced
+    for s in Strategy::all() {
+        cands.push(Cand {
+            plan: build_plan_priced(s, g, n, &seg_costs)?,
+            via: s.as_str().to_string(),
+            bound_ms: 0.0,
+            sub: None,
+        });
+    }
+    // 2) the exact DP at the full budget, under both proxies (a latency
+    // optimum and a throughput optimum are different plans)
+    for p in [Proxy::Latency, Proxy::Throughput] {
+        let dpo = dp_plan(&space, n, p)?;
+        search_stats.explored += dpo.explored;
+        cands.push(Cand {
+            bound_ms: objective_bound_ms(&space, &dpo.choices, cfg.objective),
+            plan: dpo.plan,
+            via: "dp".to_string(),
+            sub: None,
+        });
+    }
+    // 3) a beam pass at fleet scale (or when a width is forced)
+    if n >= 16 || cfg.beam_width > 0 {
+        let b = beam_plan(&space, n, proxy, cfg.beam_width)?;
+        search_stats.explored += b.explored;
+        search_stats.pruned += b.pruned;
+        cands.push(Cand {
+            bound_ms: objective_bound_ms(&space, &b.choices, cfg.objective),
+            plan: b.plan,
+            via: "beam".to_string(),
+            sub: None,
+        });
+    }
+    // 4) right-sized DP plans over power-of-two sub-clusters
+    if cfg.rightsize {
+        let mut m = 1usize;
+        while m < n {
+            let dpo = dp_plan(&space, m, proxy)?;
+            search_stats.explored += dpo.explored;
+            let mut sub = cluster.clone();
+            sub.boards.truncate(m);
+            sub.name = format!("{}-rightsized-x{m}", cluster.name);
+            cands.push(Cand {
+                bound_ms: objective_bound_ms(&space, &dpo.choices, cfg.objective),
+                plan: dpo.plan,
+                via: format!("dp@{m}"),
+                sub: Some((sub, (0..m).collect())),
+            });
+            m *= 2;
+        }
+    }
+
+    let price = |c: &Cand,
+                 cost: &mut CostModel,
+                 constrained: bool|
+     -> anyhow::Result<Option<(Priced, f64)>> {
+        let clu = c.sub.as_ref().map(|(s, _)| s).unwrap_or(cluster);
+        let sim = simulate(&c.plan, clu, cost, g, &SimConfig { images: 16 })?;
+        let p = Priced {
+            ms_per_image: sim.ms_per_image,
+            latency_ms: sim.latency_ms.mean(),
+            cluster_w: sim.power.cluster_avg_w,
+            j_per_image: sim.power.j_per_image,
+        };
+        let feasible = !constrained
+            || (cfg.slo_ms.map(|s| p.latency_ms <= s).unwrap_or(true)
+                && cfg.power_budget_w.map(|b| p.cluster_w <= b).unwrap_or(true));
+        let score = if constrained {
+            match cfg.objective {
+                Objective::Latency => p.latency_ms,
+                Objective::Throughput => p.ms_per_image,
+                Objective::JPerImage => p.j_per_image,
+            }
+        } else {
+            // the fallback pass optimizes latency, mirroring eco_plan
+            p.latency_ms
+        };
+        Ok(feasible.then_some((p, score)))
+    };
+
+    let (winner, pass) = prune_min(
+        0..cands.len(),
+        |&i| cands[i].bound_ms,
+        |&i| price(&cands[i], cost, true),
+    )?;
+    search_stats.candidates = pass.candidates;
+    search_stats.explored += pass.explored;
+    search_stats.pruned += pass.pruned;
+    let (i, priced, meets) = match winner {
+        Some((i, p, _)) => (i, p, true),
+        None => {
+            // nothing feasible: lowest-latency fallback, flagged (the
+            // bounds are latency-admissible only for the latency
+            // objective, so the fallback pass prices everything)
+            let (fb, fb_pass) = prune_min(
+                0..cands.len(),
+                |_| 0.0,
+                |&i| price(&cands[i], cost, false),
+            )?;
+            search_stats.explored += fb_pass.explored;
+            let (i, p, _) = fb.expect("the unconstrained pass always has candidates");
+            (i, p, false)
+        }
+    };
+
+    let c = &cands[i];
+    let mut plan = c.plan.clone();
+    plan.strategy = Strategy::Search;
+    plan.validate_for(g)?;
+    Ok(SearchOutcome {
+        nodes_used: plan.n_nodes,
+        plan,
+        via: c.via.clone(),
+        node_map: c.sub.as_ref().map(|(_, m)| m.clone()),
+        ms_per_image: priced.ms_per_image,
+        latency_ms: priced.latency_ms,
+        cluster_w: priced.cluster_w,
+        j_per_image: priced.j_per_image,
+        meets_slo: meets,
+        stats: search_stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BoardFamily, BoardProfile, Calibration, VtaConfig};
+    use crate::graph::zoo;
+    use crate::power::eco_plan;
+
+    fn setup(n: usize) -> (Graph, ClusterConfig, CostModel) {
+        let g = zoo::build("resnet18", 0).unwrap();
+        let cluster = ClusterConfig::homogeneous(BoardFamily::Zynq7000, n);
+        let cost = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration::default(),
+        );
+        (g, cluster, cost)
+    }
+
+    #[test]
+    fn search_never_loses_to_the_best_heuristic() {
+        let (g, cluster, mut cost) = setup(4);
+        let out = search_plan(&g, &cluster, &mut cost, &SearchConfig::default()).unwrap();
+        assert_eq!(out.plan.strategy, Strategy::Search);
+        assert!(out.meets_slo);
+        assert!(out.node_map.is_none());
+        let seg_costs = cost.seg_cost_table(&g).unwrap();
+        for s in Strategy::all() {
+            let plan = build_plan_priced(s, &g, 4, &seg_costs).unwrap();
+            let sim =
+                simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images: 16 }).unwrap();
+            assert!(
+                out.latency_ms <= sim.latency_ms.mean() * 1.0001,
+                "{s}: {} ms beats search's {} ms",
+                sim.latency_ms.mean(),
+                out.latency_ms
+            );
+        }
+    }
+
+    #[test]
+    fn search_never_loses_to_eco_on_j_per_image() {
+        for n in [2usize, 4] {
+            let (g, cluster, mut cost) = setup(n);
+            let cfg = SearchConfig {
+                objective: Objective::JPerImage,
+                rightsize: true,
+                ..Default::default()
+            };
+            let out = search_plan(&g, &cluster, &mut cost, &cfg).unwrap();
+            let eco = eco_plan(&g, &cluster, &mut cost, None).unwrap();
+            assert!(
+                out.j_per_image <= eco.j_per_image * 1.0001,
+                "n={n}: eco {} J beats search's {} J",
+                eco.j_per_image,
+                out.j_per_image
+            );
+        }
+    }
+
+    #[test]
+    fn impossible_slo_flags_the_fallback() {
+        let (g, cluster, mut cost) = setup(4);
+        let free = search_plan(&g, &cluster, &mut cost, &SearchConfig::default()).unwrap();
+        let cfg = SearchConfig { slo_ms: Some(1e-3), ..Default::default() };
+        let strict = search_plan(&g, &cluster, &mut cost, &cfg).unwrap();
+        assert!(!strict.meets_slo);
+        // the fallback optimizes latency, so it matches the free optimum
+        assert!(strict.latency_ms <= free.latency_ms * 1.0001);
+    }
+
+    #[test]
+    fn tiny_power_budget_flags_the_fallback() {
+        let (g, cluster, mut cost) = setup(4);
+        let cfg = SearchConfig { power_budget_w: Some(0.001), ..Default::default() };
+        let out = search_plan(&g, &cluster, &mut cost, &cfg).unwrap();
+        assert!(!out.meets_slo);
+    }
+
+    #[test]
+    fn rejects_bad_knobs() {
+        let (g, cluster, mut cost) = setup(2);
+        for cfg in [
+            SearchConfig { slo_ms: Some(0.0), ..Default::default() },
+            SearchConfig { slo_ms: Some(f64::NAN), ..Default::default() },
+            SearchConfig { power_budget_w: Some(-1.0), ..Default::default() },
+            SearchConfig { batch: 0, ..Default::default() },
+        ] {
+            assert!(search_plan(&g, &cluster, &mut cost, &cfg).is_err(), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn prune_min_skips_dominated_candidates_and_keeps_the_min() {
+        // scores are the values themselves; bounds are half the value —
+        // admissible, and tight enough to prune the tail
+        let vals = [7.0, 3.0, 9.0, 2.0, 8.0];
+        let (best, stats) = prune_min(
+            vals.iter().copied(),
+            |v| v / 2.0,
+            |v| Ok(Some(((), *v))),
+        )
+        .unwrap();
+        let (v, _, score) = best.unwrap();
+        assert_eq!(v, 2.0);
+        assert_eq!(score, 2.0);
+        assert_eq!(stats.candidates, 5);
+        // 7 explored; 3 explored; 9 pruned (4.5 ≥ 3); 2 explored; 8 pruned
+        assert_eq!(stats.explored, 3);
+        assert_eq!(stats.pruned, 2);
+        // infeasible candidates never become the incumbent
+        let (none, _) =
+            prune_min(vals.iter().copied(), |_| 0.0, |_| Ok(None::<((), f64)>)).unwrap();
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn objective_parse_roundtrip() {
+        for o in [Objective::Latency, Objective::Throughput, Objective::JPerImage] {
+            assert_eq!(Objective::parse(o.as_str()).unwrap(), o);
+        }
+        assert_eq!(Objective::parse("energy").unwrap(), Objective::JPerImage);
+        assert!(Objective::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Plan search (DESIGN.md §17): DP/beam search over the whole
+//! contiguous-partition space, surfaced as the sixth scheduling
+//! strategy, [`crate::sched::Strategy::Search`].
+//!
+//! The paper's pitch — "arrange the computation graph in a pipeline
+//! structure and manually allocate greater resources to the most
+//! computationally intensive layers" — is a manual search. This module
+//! automates it: [`space`] turns the memoized cost model into O(1)
+//! prefix-sum oracles over stage spans × replica counts × split modes,
+//! [`dp`] solves the partition exactly, [`beam`] handles the joint
+//! space with VTA configurations at fleet scale, and [`engine`] prices
+//! the candidates (always including the four §II-C heuristics — the
+//! dominance guarantee) with the metered simulator under latency,
+//! throughput, or J/image objectives with SLO and power-budget
+//! constraints.
+
+pub mod beam;
+pub mod dp;
+pub mod engine;
+pub mod space;
+
+pub use beam::{beam_over_configs, beam_plan, BeamOutcome, DEFAULT_WIDTH};
+pub use dp::{dp_plan, DpOutcome};
+pub use engine::{
+    prune_min, search_plan, Objective, PruneStats, SearchConfig, SearchOutcome,
+};
+pub use space::{Choice, Proxy, SearchSpace};

@@ -1,0 +1,328 @@
+//! The searchable partition space (DESIGN.md §17).
+//!
+//! A candidate schedule is a sequence of stages, each a contiguous run
+//! of atomic segments on `r` dedicated replica nodes in one of the two
+//! split modes — exactly the shape [`crate::sched::ExecutionPlan`]
+//! validates. [`SearchSpace`] turns the memoized cost model into an
+//! O(1)-per-query oracle over that space: per-split prefix sums of the
+//! (optionally batch-amortized) per-image segment times, so the DP and
+//! beam engines score a stage span without touching the cost model
+//! again.
+//!
+//! Spatial splits are priced on a **ladder** — every split up to 8 plus
+//! the powers of two up to 64 — so building the table for a 256-board
+//! fleet costs the same handful of segment evaluations as a 12-board
+//! stack. Data-parallel replication is pure arithmetic (`t₁ / r`) and is
+//! therefore unrestricted. At paper scale (`n ≤ 8`) the ladder is the
+//! complete split set, which is what makes the DP-vs-exhaustive pin in
+//! [`crate::search::dp`] meaningful.
+
+use crate::graph::partition::atomic_segments;
+use crate::graph::Graph;
+use crate::sched::{ExecutionPlan, SplitMode, StagePlan, Strategy};
+use crate::sim::CostModel;
+
+/// Analytic objective proxy the DP/beam engines optimize. Both are
+/// admissible lower bounds of the metered simulator's metric (compute
+/// only — the simulator adds wire time and port contention on top),
+/// which is what makes them safe pruning bounds in the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proxy {
+    /// Steady-state bottleneck demand (ns/image); stages combine by max.
+    Throughput,
+    /// Unloaded single-image wall time (ns); stages combine by sum.
+    Latency,
+}
+
+impl Proxy {
+    /// Fold one stage score into an accumulated plan score.
+    pub fn combine(&self, acc: f64, stage: f64) -> f64 {
+        match self {
+            Proxy::Throughput => acc.max(stage),
+            Proxy::Latency => acc + stage,
+        }
+    }
+
+    /// Score of the empty plan (the fold's identity).
+    pub fn identity(&self) -> f64 {
+        0.0
+    }
+}
+
+/// One searched stage: atoms `[a, b)` on `r` fresh replica nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Choice {
+    pub a: usize,
+    pub b: usize,
+    pub r: usize,
+    pub spatial: bool,
+}
+
+/// Prefix-sum oracle over the contiguous-partition space of one graph.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Atomic segment labels in graph order.
+    pub labels: Vec<String>,
+    /// `Graph::model` captured for plan assembly.
+    pub model: String,
+    /// Full segment order captured for plan assembly/validation.
+    pub segment_order: Vec<String>,
+    /// Priced spatial-split ladder, ascending, always starting at 1.
+    ladder: Vec<usize>,
+    /// `prefix[i][k]` = Σ per-image time (ns) of atoms `[0, k)` at
+    /// spatial split `ladder[i]`.
+    prefix: Vec<Vec<f64>>,
+    /// Per-launch PS driver overhead, charged once per stage (ns).
+    pub overhead_ns: f64,
+    /// Node budget the space was built for.
+    pub n_nodes: usize,
+    /// Batch size the per-image times are amortized over (1 = unbatched).
+    pub batch: u64,
+}
+
+/// Splits worth pricing for an `n`-node budget: the complete 1..=8 set
+/// plus powers of two up to `min(n, 64)`.
+fn ladder_for(n: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = (1..=n.min(8)).collect();
+    for p in [16usize, 32, 64] {
+        if p <= n {
+            out.push(p);
+        }
+    }
+    out
+}
+
+impl SearchSpace {
+    /// Price the space for `g` over an `n_nodes` budget, amortizing
+    /// segment times over `batch` images per launch (`1` = the classic
+    /// unbatched table).
+    pub fn build(
+        g: &Graph,
+        cost: &mut CostModel,
+        n_nodes: usize,
+        batch: u64,
+    ) -> anyhow::Result<SearchSpace> {
+        anyhow::ensure!(n_nodes >= 1, "search space needs at least one node");
+        anyhow::ensure!(batch >= 1, "batch must be ≥ 1");
+        let atoms = atomic_segments(g);
+        anyhow::ensure!(!atoms.is_empty(), "graph has no segments");
+        let labels: Vec<String> =
+            atoms.iter().map(|s| s.labels.first().expect("atom has a label").clone()).collect();
+        let ladder = ladder_for(n_nodes);
+        let mut prefix = Vec::with_capacity(ladder.len());
+        for &r in &ladder {
+            let mut p = vec![0.0; labels.len() + 1];
+            for (k, label) in labels.iter().enumerate() {
+                let t = cost.segment_time_batched_ns(g, label, r as u64, batch)?;
+                p[k + 1] = p[k] + t as f64 / batch as f64;
+            }
+            prefix.push(p);
+        }
+        Ok(SearchSpace {
+            labels,
+            model: g.model.clone(),
+            segment_order: g.segment_order(),
+            ladder,
+            prefix,
+            overhead_ns: cost.driver_overhead_ns() as f64,
+            n_nodes,
+            batch,
+        })
+    }
+
+    pub fn n_atoms(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// The priced spatial-split ladder (ascending).
+    pub fn ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+
+    fn ladder_idx(&self, r: usize) -> Option<usize> {
+        self.ladder.binary_search(&r).ok()
+    }
+
+    /// Analytic score (ns) of running atoms `[a, b)` as one stage on `r`
+    /// replicas. `None` when the cell is outside the priced space
+    /// (spatial split off the ladder or `r < 2`).
+    ///
+    /// Mirrors the simulator's stage model: a spatial stage takes the
+    /// split-`r` wall time on every replica (so it helps latency *and*
+    /// throughput); a data-parallel stage takes the full single-split
+    /// time per image but spreads images over `r` replicas (so it helps
+    /// throughput only). The per-launch driver overhead is charged once
+    /// per stage.
+    pub fn stage_score(
+        &self,
+        a: usize,
+        b: usize,
+        r: usize,
+        spatial: bool,
+        proxy: Proxy,
+    ) -> Option<f64> {
+        debug_assert!(a < b && b <= self.n_atoms() && r >= 1);
+        if spatial {
+            if r < 2 {
+                return None;
+            }
+            let i = self.ladder_idx(r)?;
+            Some(self.prefix[i][b] - self.prefix[i][a] + self.overhead_ns)
+        } else {
+            let t = self.prefix[0][b] - self.prefix[0][a] + self.overhead_ns;
+            Some(match proxy {
+                Proxy::Throughput => t / r as f64,
+                Proxy::Latency => t,
+            })
+        }
+    }
+
+    /// Score a complete stage sequence under `proxy`. `None` if any
+    /// choice is outside the priced space.
+    pub fn score(&self, choices: &[Choice], proxy: Proxy) -> Option<f64> {
+        let mut acc = proxy.identity();
+        for c in choices {
+            acc = proxy.combine(acc, self.stage_score(c.a, c.b, c.r, c.spatial, proxy)?);
+        }
+        Some(acc)
+    }
+
+    /// Optimistic lower bound (ns) on covering atoms `[a, n_atoms)` with
+    /// `nodes_left` fresh nodes — the beam's admissible pruning bound.
+    /// Throughput: perfect work-spreading of the remaining single-split
+    /// time. Latency: every remaining atom at the deepest priced split,
+    /// one stage launch.
+    pub fn remaining_bound(&self, a: usize, nodes_left: usize, proxy: Proxy) -> f64 {
+        let n = self.n_atoms();
+        if a >= n || nodes_left == 0 {
+            return 0.0;
+        }
+        match proxy {
+            Proxy::Throughput => {
+                let t1 = self.prefix[0][n] - self.prefix[0][a];
+                (t1 + self.overhead_ns) / nodes_left as f64
+            }
+            Proxy::Latency => {
+                let best = self
+                    .prefix
+                    .iter()
+                    .map(|p| p[n] - p[a])
+                    .fold(f64::INFINITY, f64::min);
+                best + self.overhead_ns
+            }
+        }
+    }
+
+    /// Materialize a stage sequence into a validated-shape
+    /// [`ExecutionPlan`] over `n_nodes` (tagged [`Strategy::Search`]).
+    /// Replica node ids are dealt sequentially, so stages are disjoint
+    /// by construction and a sequence whose replica counts sum to
+    /// `n_nodes` uses every node.
+    pub fn assemble_plan(&self, choices: &[Choice], n_nodes: usize) -> ExecutionPlan {
+        let mut next = 0usize;
+        let stages: Vec<StagePlan> = choices
+            .iter()
+            .map(|c| {
+                let replicas: Vec<usize> = (next..next + c.r).collect();
+                next += c.r;
+                StagePlan {
+                    segments: self.labels[c.a..c.b].to_vec(),
+                    replicas,
+                    split: if c.spatial { SplitMode::Spatial } else { SplitMode::DataParallel },
+                }
+            })
+            .collect();
+        ExecutionPlan {
+            strategy: Strategy::Search,
+            n_nodes,
+            model: self.model.clone(),
+            segment_order: self.segment_order.clone(),
+            stages,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BoardProfile, Calibration, VtaConfig};
+    use crate::graph::zoo;
+
+    fn space(model: &str, n: usize, batch: u64) -> SearchSpace {
+        let g = zoo::build(model, 0).unwrap();
+        let mut cost = CostModel::new(
+            VtaConfig::table1_zynq7000(),
+            BoardProfile::zynq7020(),
+            Calibration::default(),
+        );
+        SearchSpace::build(&g, &mut cost, n, batch).unwrap()
+    }
+
+    #[test]
+    fn ladder_is_complete_at_paper_scale_and_sparse_at_fleet_scale() {
+        assert_eq!(space("lenet5", 4, 1).ladder(), &[1, 2, 3, 4]);
+        assert_eq!(space("lenet5", 8, 1).ladder(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let fleet = space("lenet5", 256, 1);
+        assert_eq!(fleet.ladder(), &[1, 2, 3, 4, 5, 6, 7, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn stage_scores_match_the_simulator_shape() {
+        let sp = space("resnet18", 4, 1);
+        let a = sp.n_atoms();
+        // DP throughput spreads work; DP latency does not
+        let t1 = sp.stage_score(0, a, 1, false, Proxy::Latency).unwrap();
+        let t4 = sp.stage_score(0, a, 4, false, Proxy::Throughput).unwrap();
+        assert!((t4 - t1 / 4.0).abs() < 1e-6);
+        assert_eq!(sp.stage_score(0, a, 4, false, Proxy::Latency), Some(t1));
+        // spatial helps both, but sublinearly
+        let s4 = sp.stage_score(0, a, 4, true, Proxy::Latency).unwrap();
+        assert!(s4 < t1 && s4 > t1 / 4.0, "{s4} vs {t1}");
+        assert_eq!(sp.stage_score(0, a, 4, true, Proxy::Throughput), Some(s4));
+        // off-ladder spatial cells are unpriced
+        assert!(sp.stage_score(0, a, 1, true, Proxy::Latency).is_none());
+        let fleet = space("lenet5", 256, 1);
+        assert!(fleet.stage_score(0, 1, 13, true, Proxy::Latency).is_none());
+        assert!(fleet.stage_score(0, 1, 13, false, Proxy::Throughput).is_some());
+    }
+
+    #[test]
+    fn assembled_plans_validate() {
+        let sp = space("resnet18", 4, 1);
+        let a = sp.n_atoms();
+        let plan = sp.assemble_plan(
+            &[
+                Choice { a: 0, b: 2, r: 1, spatial: false },
+                Choice { a: 2, b: a, r: 3, spatial: true },
+            ],
+            4,
+        );
+        assert_eq!(plan.strategy, Strategy::Search);
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn batched_space_is_cheaper_per_image() {
+        let s1 = space("resnet18", 2, 1);
+        let s8 = space("resnet18", 2, 8);
+        let a = s1.n_atoms();
+        let t1 = s1.stage_score(0, a, 1, false, Proxy::Latency).unwrap();
+        let t8 = s8.stage_score(0, a, 1, false, Proxy::Latency).unwrap();
+        assert!(t8 < t1, "batch-8 per-image not cheaper: {t8} vs {t1}");
+    }
+
+    #[test]
+    fn remaining_bounds_are_admissible() {
+        let sp = space("resnet18", 4, 1);
+        let a = sp.n_atoms();
+        for proxy in [Proxy::Throughput, Proxy::Latency] {
+            let bound = sp.remaining_bound(0, 4, proxy);
+            // any real single-stage assignment scores at least the bound
+            for (r, spatial) in [(1, false), (4, false), (2, true), (4, true)] {
+                if let Some(s) = sp.stage_score(0, a, r, spatial, proxy) {
+                    assert!(s >= bound - 1e-9, "{proxy:?} r={r} spatial={spatial}: {s} < {bound}");
+                }
+            }
+        }
+    }
+}

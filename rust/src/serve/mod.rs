@@ -30,7 +30,7 @@ pub use admission::{
     Admission, AdmissionConfig, ShedPolicy, ShedReason, TenantServeStats, Verdict,
 };
 pub use batch::{chunk, BatchConfig, BatchFormer, BatchMember, PushOutcome};
-pub use trace::RequestTrace;
+pub use trace::{captured_to_jsonl, RequestTrace};
 
 /// Serving front-end wiring for one DES run (DESIGN.md §16).
 ///

@@ -14,8 +14,31 @@
 //! per-tenant stats.
 
 use crate::sim::ArrivalProcess;
-use crate::util::json::Json;
+use crate::util::json::{num, obj, str_, Json};
 use crate::util::units::{ms_to_ns, ns_to_ms, Nanos};
+
+/// Render captured `(t_ms, tenant)` admissions — the DES's
+/// `capture: true` output — as replayable trace JSONL, one request per
+/// line in this module's schema. Round-trips through
+/// [`RequestTrace::parse`]: replaying a capture reproduces the offered
+/// request count (unit-tested below; `run --capture-trace` writes this).
+pub fn captured_to_jsonl(captured: &[(f64, String)]) -> anyhow::Result<String> {
+    anyhow::ensure!(!captured.is_empty(), "nothing captured: no admitted requests");
+    let mut out = String::new();
+    let mut prev = 0.0f64;
+    for (t, tenant) in captured {
+        anyhow::ensure!(
+            t.is_finite() && *t >= prev,
+            "captured timestamps must be finite and non-decreasing (got {t} after {prev})"
+        );
+        anyhow::ensure!(!tenant.is_empty(), "captured tenant name must be non-empty");
+        prev = *t;
+        let line = obj(vec![("t_ms", num(*t)), ("tenant", str_(tenant))]);
+        out.push_str(&line.to_string_compact());
+        out.push('\n');
+    }
+    Ok(out)
+}
 
 /// A parsed, scaled request log ready to replay through the DES.
 #[derive(Debug, Clone)]
@@ -176,6 +199,35 @@ mod tests {
         let back = "{\"t_ms\": 5.0}\n{\"t_ms\": 4.0}\n";
         let err = RequestTrace::parse(back, 1.0).unwrap_err().to_string();
         assert!(err.contains("goes backwards"), "{err}");
+    }
+
+    #[test]
+    fn capture_round_trips_through_parse() {
+        let captured = vec![
+            (0.0, "default".to_string()),
+            (1.5, "a".to_string()),
+            (1.5, "default".to_string()),
+            (9.25, "a".to_string()),
+        ];
+        let jsonl = captured_to_jsonl(&captured).unwrap();
+        assert_eq!(jsonl.lines().count(), 4);
+        let tr = RequestTrace::parse(&jsonl, 1.0).unwrap();
+        assert_eq!(tr.len(), captured.len());
+        assert_eq!(tr.tenant_names, vec!["a", "default"]);
+        for (i, (t, tenant)) in captured.iter().enumerate() {
+            assert_eq!(tr.arrivals_ns[i], ms_to_ns(*t));
+            assert_eq!(&tr.tenant_names[tr.tenant_idx[i]], tenant);
+        }
+    }
+
+    #[test]
+    fn capture_writer_rejects_bad_input() {
+        assert!(captured_to_jsonl(&[]).is_err());
+        assert!(captured_to_jsonl(&[(f64::NAN, "a".to_string())]).is_err());
+        assert!(
+            captured_to_jsonl(&[(2.0, "a".to_string()), (1.0, "a".to_string())]).is_err()
+        );
+        assert!(captured_to_jsonl(&[(1.0, String::new())]).is_err());
     }
 
     #[test]

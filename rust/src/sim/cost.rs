@@ -238,6 +238,30 @@ impl CostModel {
             .collect()
     }
 
+    /// Batch-aware planning cost table (DESIGN.md §17): per-**image**
+    /// single-split wall time when segments run `batch` images per
+    /// launch, i.e. `segment_time_batched_ns(…, 1, batch) / batch`.
+    /// `batch <= 1` delegates to [`CostModel::seg_cost_table`]
+    /// bit-identically, so planners that thread the scenario's
+    /// `batch.max_size` through price the batching knee instead of
+    /// batch=1 without perturbing unbatched runs.
+    pub fn seg_cost_table_batched(
+        &mut self,
+        g: &Graph,
+        batch: u64,
+    ) -> anyhow::Result<Vec<(String, f64)>> {
+        if batch <= 1 {
+            return self.seg_cost_table(g);
+        }
+        g.segment_order()
+            .into_iter()
+            .map(|l| {
+                let t = self.segment_time_batched_ns(g, &l, 1, batch)?;
+                Ok((l, t as f64 / batch as f64))
+            })
+            .collect()
+    }
+
     /// Whole-graph single-node compute time (no driver overhead).
     pub fn graph_time_ns(&mut self, g: &Graph) -> anyhow::Result<Nanos> {
         let mut total = 0;
@@ -352,6 +376,22 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn batched_cost_table_prices_the_knee() {
+        let g = build_resnet18(32).unwrap();
+        let mut c = cm(VtaConfig::table1_zynq7000(), BoardProfile::zynq7020());
+        // batch ≤ 1 is bit-identical to the unbatched table …
+        assert_eq!(c.seg_cost_table_batched(&g, 1).unwrap(), c.seg_cost_table(&g).unwrap());
+        // … and a real batch amortizes: cheaper per image, but not free
+        let t1 = c.seg_cost_table(&g).unwrap();
+        let t8 = c.seg_cost_table_batched(&g, 8).unwrap();
+        assert_eq!(t1.len(), t8.len());
+        let s1: f64 = t1.iter().map(|(_, t)| t).sum();
+        let s8: f64 = t8.iter().map(|(_, t)| t).sum();
+        assert!(s8 < s1, "batch 8 per-image not cheaper: {s8} vs {s1}");
+        assert!(s8 > s1 / 8.0, "batch 8 per-image implausibly cheap: {s8} vs {s1}");
     }
 
     #[test]

@@ -307,6 +307,12 @@ pub struct DesConfig {
     /// no gate, no former, no per-tenant bookkeeping, and the run is
     /// bit-identical to a pre-serve build.
     pub serve: ServeConfig,
+    /// Record every admitted arrival as a `(t_ms, tenant)` pair in
+    /// [`DesResult::captured`] — a replayable `serve::trace` log
+    /// (DESIGN.md §17, `run --capture-trace`). Off by default; when off
+    /// nothing is recorded and the run is bit-identical to a
+    /// pre-capture build.
+    pub capture: bool,
 }
 
 impl DesConfig {
@@ -320,6 +326,7 @@ impl DesConfig {
             faults: FaultsConfig::off(),
             metrics: MetricsConfig::off(),
             serve: ServeConfig::off(),
+            capture: false,
         }
     }
 }
@@ -412,6 +419,10 @@ pub struct DesResult {
     /// (admission configured or a multi-tenant trace); `None` — and
     /// zero-cost — otherwise.
     pub serve: Option<ServeSummary>,
+    /// Admitted arrivals as replayable `(t_ms, tenant)` pairs, in
+    /// arrival order (DESIGN.md §17); empty unless
+    /// [`DesConfig::capture`] is set.
+    pub captured: Vec<(f64, String)>,
 }
 
 /// A plan pre-priced for event-driven execution. `stage_time[b - 1]`
@@ -645,6 +656,9 @@ pub fn run_des(
             tenant_names.len()
         );
     }
+    // replayable admitted-arrival log (DESIGN.md §17); stays empty —
+    // zero-cost — unless capture is on
+    let mut captured: Vec<(f64, String)> = Vec::new();
     let mut admission: Option<Admission> = cfg
         .serve
         .admission
@@ -815,6 +829,11 @@ pub fn run_des(
                         }
                     }
                     Verdict::Admit => {
+                        // trace capture (DESIGN.md §17): record the
+                        // admitted arrival for `run --capture-trace`
+                        if cfg.capture {
+                            captured.push((ns_to_ms(now), tenant_names[tenant].clone()));
+                        }
                         win_arrivals += 1;
                         if let Some(ts) = tenant_stats.as_mut() {
                             ts[tenant].admitted += 1;
@@ -1322,6 +1341,7 @@ pub fn run_des(
         batches_dispatched,
         batch_members,
         serve: tenant_stats.map(|tenants| ServeSummary { tenants }),
+        captured,
     })
 }
 
@@ -1413,6 +1433,33 @@ mod tests {
         let p50 = r.latency_ms.percentile(50.0).unwrap();
         assert!(p50 >= 0.9 * opts[0].latency_ms, "p50 {p50} below unloaded");
         assert!(p50 <= 3.0 * opts[0].latency_ms, "p50 {p50} vs unloaded {}", opts[0].latency_ms);
+    }
+
+    #[test]
+    fn capture_records_every_admitted_arrival_in_order() {
+        let (g, cluster, mut cost) = setup("lenet5", 2);
+        let opts =
+            plan_options(&g, &cluster, &mut cost, &[crate::sched::Strategy::Pipeline])
+                .unwrap();
+        let mut cfg =
+            DesConfig::new(ArrivalProcess::Poisson { rate_per_sec: 40.0 }, 2_000.0, 5);
+        // off by default: nothing recorded
+        let off = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        assert!(off.captured.is_empty());
+        cfg.capture = true;
+        let on = run_des(&opts, 0, &cluster, &mut cost, &g, &cfg, None).unwrap();
+        // no admission gate → every offered arrival was admitted
+        assert_eq!(on.captured.len() as u64, on.offered - on.shed);
+        assert!(!on.captured.is_empty());
+        let mut last = 0.0f64;
+        for (t, tenant) in &on.captured {
+            assert!(t.is_finite() && *t >= last, "timestamps out of order");
+            assert_eq!(tenant, "default");
+            last = *t;
+        }
+        // capture is observational: the measured run is unchanged
+        assert_eq!(off.offered, on.offered);
+        assert_eq!(off.completed, on.completed);
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Integration tests for the plan-search engine (DESIGN.md §17,
+//! EXPERIMENTS.md §E17): the E1-grid dominance guarantee, the J/image
+//! strict win over eco, and a proptest that searched plans always
+//! validate and respect their node budget across zoo × family × n.
+
+use vta_cluster::config::{BoardFamily, BoardProfile, Calibration, ClusterConfig};
+use vta_cluster::graph::zoo;
+use vta_cluster::power::eco_plan;
+use vta_cluster::prop_assert;
+use vta_cluster::search::{search_plan, Objective, SearchConfig};
+use vta_cluster::sched::{build_plan_priced, Strategy};
+use vta_cluster::sim::{simulate, CostModel, SimConfig};
+use vta_cluster::util::proptest::forall;
+
+fn setup(family: BoardFamily, n: usize) -> (ClusterConfig, CostModel) {
+    let board = BoardProfile::for_family(family);
+    let vta = board.default_vta();
+    let cost = CostModel::new(vta.clone(), board, Calibration::default());
+    let cluster = ClusterConfig::homogeneous(family, n).with_vta(vta);
+    (cluster, cost)
+}
+
+/// The E17 acceptance bar: on every E1 grid cell (resnet18, zynq,
+/// n ∈ {2, 4, 8, 12}) the searched plan's unloaded latency never loses
+/// to the best §II-C heuristic priced by the same simulator.
+#[test]
+fn search_dominates_every_e1_grid_cell() {
+    let g = zoo::build("resnet18", 0).unwrap();
+    for n in [2usize, 4, 8, 12] {
+        let (cluster, mut cost) = setup(BoardFamily::Zynq7000, n);
+        let seg_costs = cost.seg_cost_table(&g).unwrap();
+        let mut best = f64::INFINITY;
+        let mut best_name = "";
+        for s in Strategy::all() {
+            let plan = build_plan_priced(s, &g, n, &seg_costs).unwrap();
+            let sim =
+                simulate(&plan, &cluster, &mut cost, &g, &SimConfig { images: 16 }).unwrap();
+            if sim.latency_ms.mean() < best {
+                best = sim.latency_ms.mean();
+                best_name = s.as_str();
+            }
+        }
+        let out = search_plan(&g, &cluster, &mut cost, &SearchConfig::default()).unwrap();
+        assert_eq!(out.plan.strategy, Strategy::Search);
+        out.plan.validate_for(&g).unwrap();
+        assert!(
+            out.latency_ms <= best * 1.0001,
+            "E1 n={n}: heuristic {best_name} ({best:.3} ms) beats search \
+             ({:.3} ms via {})",
+            out.latency_ms,
+            out.via
+        );
+    }
+}
+
+/// The J-objective search with right-sizing never loses to the eco
+/// selector, and strictly beats it on at least one E1 cell (eco is
+/// forced to light every board; the search powers the surplus off).
+#[test]
+fn search_beats_eco_j_per_image_on_at_least_one_cell() {
+    let g = zoo::build("resnet18", 0).unwrap();
+    let mut strict_wins = 0usize;
+    for n in [2usize, 4, 8, 12] {
+        let (cluster, mut cost) = setup(BoardFamily::Zynq7000, n);
+        let eco = eco_plan(&g, &cluster, &mut cost, None).unwrap();
+        let cfg = SearchConfig {
+            objective: Objective::JPerImage,
+            rightsize: true,
+            ..Default::default()
+        };
+        let out = search_plan(&g, &cluster, &mut cost, &cfg).unwrap();
+        assert!(
+            out.j_per_image <= eco.j_per_image * 1.0001,
+            "n={n}: eco {} J beats search's {} J (via {})",
+            eco.j_per_image,
+            out.j_per_image,
+            out.via
+        );
+        if out.j_per_image < eco.j_per_image * 0.9999 {
+            strict_wins += 1;
+        }
+    }
+    assert!(strict_wins >= 1, "search never strictly beat eco's J/image");
+}
+
+/// Any zoo model × board family × cluster size × objective × batch:
+/// the searched plan validates against its graph, and the node budget
+/// is respected — right-sized plans carry a node map inside the
+/// physical cluster, full plans span exactly `n` nodes.
+#[test]
+fn prop_searched_plans_validate_and_respect_the_node_budget() {
+    let models = ["resnet18", "lenet5", "mlp", "mobilenet-lite"];
+    let families = [BoardFamily::Zynq7000, BoardFamily::UltraScalePlus];
+    let objectives = [Objective::Latency, Objective::Throughput, Objective::JPerImage];
+    // cost models are hoisted so autotuned GEMM schedules memoize
+    // across cases (same trick the scenario layer's CostCache plays)
+    let mut costs: Vec<CostModel> = families
+        .iter()
+        .map(|&f| {
+            let board = BoardProfile::for_family(f);
+            CostModel::new(board.default_vta(), board, Calibration::default())
+        })
+        .collect();
+    forall("searched plans validate", 24, |rng| {
+        let model = *rng.choice(&models);
+        let fi = rng.range(0, families.len());
+        let family = families[fi];
+        let n = rng.range(1, 13);
+        let g = zoo::build(model, 0).map_err(|e| e.to_string())?;
+        let board = BoardProfile::for_family(family);
+        let cluster = ClusterConfig::homogeneous(family, n).with_vta(board.default_vta());
+        let cfg = SearchConfig {
+            objective: *rng.choice(&objectives),
+            rightsize: rng.range(0, 2) == 1,
+            batch: rng.range(1, 9) as u64,
+            ..Default::default()
+        };
+        let out = search_plan(&g, &cluster, &mut costs[fi], &cfg)
+            .map_err(|e| format!("{model} on {n}×{family} ({cfg:?}): {e}"))?;
+        out.plan.validate_for(&g).map_err(|e| e.to_string())?;
+        prop_assert!(
+            out.nodes_used <= n,
+            "{model} n={n}: plan uses {} nodes",
+            out.nodes_used
+        );
+        prop_assert!(out.plan.strategy == Strategy::Search, "strategy not retagged");
+        match &out.node_map {
+            Some(map) => {
+                prop_assert!(
+                    map.len() == out.nodes_used && map.iter().all(|&i| i < n),
+                    "{model} n={n}: bad node map {map:?} for {} used",
+                    out.nodes_used
+                );
+            }
+            None => prop_assert!(
+                out.nodes_used == n,
+                "{model} n={n}: un-mapped plan spans {} nodes",
+                out.nodes_used
+            ),
+        }
+        Ok(())
+    });
+}
